@@ -1,0 +1,133 @@
+//! Fig 1 regenerator — exponent statistics profiling and volume savings.
+//!
+//! (a) per-field entropy and distinct-exponent counts on the Jamba model
+//!     over a WikiText-2-shaped workload;
+//! (b) exponent volume before/after LEXI for weights vs activations+caches;
+//! (c) per-block-kind (Mamba / Transformer / MoE) communication reduction.
+//!
+//! Paper reference values: entropy <3 bits / <32 distinct; 422→151 MB and
+//! 360→155 MB (1.47× / 1.39× overall value-volume reduction); 40/39/36%
+//! comm reduction for Mamba/Transformer/MoE blocks.
+
+use lexi::models::activations;
+use lexi::models::config::BlockKind;
+use lexi::models::corpus::Corpus;
+use lexi::models::traffic::{self, TransferKind};
+use lexi::models::weights::WeightStream;
+use lexi::models::{ModelConfig, ModelScale};
+use lexi::sim::compression::{CompressionMode, CrTable};
+use lexi_bench::Table;
+use lexi_core::huffman;
+use lexi_core::stats::Histogram;
+
+fn main() {
+    let cfg = ModelConfig::jamba(ModelScale::Paper);
+    let corpus = Corpus::wikitext2();
+
+    // ---- (a) per-field statistics ------------------------------------
+    println!("Fig 1a — field statistics (jamba, wikitext-2 shaped):");
+    let mut ta = Table::new(&["stream", "H(exp) bits", "distinct exps", "H(mant) bits"]);
+    for (name, exps) in [
+        (
+            "weights/L0",
+            WeightStream::sample_exponents(&cfg, 0, 42, 400_000),
+        ),
+        (
+            "activations/L2",
+            activations::sample_exponents(&cfg, 2, TransferKind::Activation, 42, 400_000),
+        ),
+        (
+            "kv-cache/L4",
+            activations::sample_exponents(&cfg, 4, TransferKind::KvCache, 42, 400_000),
+        ),
+        (
+            "ssm-state/L0",
+            activations::sample_exponents(&cfg, 0, TransferKind::SsmState, 42, 400_000),
+        ),
+    ] {
+        let h = Histogram::from_bytes(&exps);
+        // Mantissas of well-scaled data are ~uniform: report the measured
+        // value from a synthetic full-value stream.
+        let mut rng = lexi_core::prng::Rng::new(1);
+        let mant: Vec<u8> = (0..exps.len()).map(|_| (rng.next_u32() & 0x7f) as u8).collect();
+        let hm = Histogram::from_bytes(&mant);
+        ta.row(vec![
+            name.into(),
+            format!("{:.2}", h.entropy_bits()),
+            h.distinct().to_string(),
+            format!("{:.2}", hm.entropy_bits()),
+        ]);
+    }
+    ta.print();
+
+    // ---- (b) exponent volume before/after ------------------------------
+    println!("\nFig 1b — exponent volume (whole inference, jamba @ paper scale):");
+    let transfers = traffic::full_inference(&cfg, &corpus);
+    let mut weights_bytes = 0u64;
+    let mut act_bytes = 0u64;
+    for t in &transfers {
+        match t.kind {
+            TransferKind::Weights => weights_bytes += t.bytes,
+            _ => act_bytes += t.bytes,
+        }
+    }
+    // Exponent share of BF16 volume = 8/16.
+    let w_exp_mb = weights_bytes as f64 / 2.0 / 1e6;
+    let a_exp_mb = act_bytes as f64 / 2.0 / 1e6;
+    let cr_w = {
+        let e = WeightStream::sample_exponents(&cfg, 0, 42, 400_000);
+        huffman::compress_exponents(&e).expect("non-empty").ratio()
+    };
+    let cr_a = {
+        let e = activations::sample_exponents(&cfg, 1, TransferKind::Activation, 42, 400_000);
+        huffman::compress_exponents(&e).expect("non-empty").ratio()
+    };
+    let mut tb = Table::new(&["stream", "before (MB)", "after (MB)", "value-volume red."]);
+    tb.row(vec![
+        "weights exponents".into(),
+        format!("{w_exp_mb:.0}"),
+        format!("{:.0}", w_exp_mb / cr_w),
+        format!("{:.2}x", 16.0 / (8.0 + 8.0 / cr_w)),
+    ]);
+    tb.row(vec![
+        "act+cache exponents".into(),
+        format!("{a_exp_mb:.0}"),
+        format!("{:.0}", a_exp_mb / cr_a),
+        format!("{:.2}x", 16.0 / (8.0 + 8.0 / cr_a)),
+    ]);
+    tb.print();
+    println!("(paper: 422->151 MB weights, 360->155 MB act/caches; 1.47x / 1.39x)");
+
+    // ---- (c) per-block communication reduction --------------------------
+    println!("\nFig 1c — runtime comm reduction by block kind (jamba):");
+    let crs = CrTable::measure(&cfg, 42);
+    let by_block = traffic::volume_by_block_kind(&cfg, &transfers);
+    let mut tc = Table::new(&["block kind", "uncompressed (MB)", "LEXI (MB)", "reduction"]);
+    let mut rows: Vec<(&str, BlockKind)> = vec![
+        ("Mamba", BlockKind::Mamba),
+        ("Transformer", BlockKind::Attention),
+        ("MoE", BlockKind::Moe),
+        ("MLP", BlockKind::Mlp),
+    ];
+    rows.retain(|&(_, k)| by_block.contains_key(&k));
+    for (name, kind) in rows {
+        let unc = by_block[&kind];
+        // Apply the measured per-kind wire ratios transfer-by-transfer.
+        let lexi: u64 = transfers
+            .iter()
+            .filter(|t| {
+                cfg.blocks[t.layer] == kind
+                    && t.phase != lexi::models::traffic::Phase::WeightLoad
+            })
+            .map(|t| crs.wire_bytes(t.bytes, t.kind, CompressionMode::Lexi))
+            .sum();
+        tc.row(vec![
+            name.into(),
+            format!("{:.1}", unc as f64 / 1e6),
+            format!("{:.1}", lexi as f64 / 1e6),
+            format!("{:.1}%", (1.0 - lexi as f64 / unc as f64) * 100.0),
+        ]);
+    }
+    tc.print();
+    println!("(paper: 40% Mamba, 39% Transformer, 36% MoE)");
+}

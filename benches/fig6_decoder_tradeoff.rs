@@ -1,0 +1,115 @@
+//! Fig 6 regenerator — average latency to decode 10 exponents vs decoder
+//! area, across multi-stage LUT configurations.
+//!
+//! Paper reference: the 4-stage 8/16/24/32 decoder reaches 11.6 ns / 10
+//! exponents at 98.5 µm²; a monolithic 32-bit LUT is slightly faster
+//! (10 ns) but 157.6 µm². Ten decode lanes saturate the 100 Gbps link.
+
+use lexi::hw::area_power::decoder_area_um2;
+use lexi::hw::decoder::{parallel_makespan, DecoderConfig, DecoderUnit};
+use lexi::models::activations;
+use lexi::models::traffic::TransferKind;
+use lexi::models::{ModelConfig, ModelScale};
+use lexi_bench::Table;
+use lexi_core::bitstream::{BitReader, BitWriter};
+use lexi_core::huffman::CodeBook;
+use lexi_core::stats::Histogram;
+
+fn main() {
+    let cfg = ModelConfig::jamba(ModelScale::Paper);
+    // Mix several layers so deeper length classes actually occur.
+    let mut exps = Vec::new();
+    for layer in 0..cfg.blocks.len() {
+        exps.extend(activations::sample_exponents(
+            &cfg,
+            layer,
+            TransferKind::Activation,
+            42,
+            40_000,
+        ));
+    }
+    let hist = Histogram::from_bytes(&exps);
+    let book = CodeBook::lexi_default(&hist).expect("non-empty");
+    let mut w = BitWriter::new();
+    for &e in &exps {
+        book.encode_symbol(e, &mut w);
+    }
+    let bits = w.len_bits();
+    let bytes = w.into_bytes();
+
+    println!("Fig 6 — decode latency vs area (codebook with {} symbols):", book.num_symbols());
+    let mut t = Table::new(&["decoder", "area µm²", "ns / 10 exps", "stage-1 share"]);
+    let configs: Vec<(&str, DecoderConfig)> = vec![
+        ("1-stage 32b", DecoderConfig::monolithic()),
+        (
+            "2-stage 16/32",
+            DecoderConfig {
+                stage_bits: vec![16, 32],
+                entries_per_stage: 16,
+            },
+        ),
+        (
+            "3-stage 11/22/32",
+            DecoderConfig {
+                stage_bits: vec![11, 22, 32],
+                entries_per_stage: 11,
+            },
+        ),
+        ("4-stage 8/16/24/32 <- chosen", DecoderConfig::paper_default()),
+        (
+            "5-stage 7/14/21/28/32",
+            DecoderConfig {
+                stage_bits: vec![7, 14, 21, 28, 32],
+                entries_per_stage: 7,
+            },
+        ),
+        (
+            "6-stage 6/12/18/24/30/32",
+            DecoderConfig {
+                stage_bits: vec![6, 12, 18, 24, 30, 32],
+                entries_per_stage: 6,
+            },
+        ),
+    ];
+    let mut chosen = (0.0f64, 0.0f64);
+    let mut mono = (0.0f64, 0.0f64);
+    for (name, dc) in &configs {
+        let unit = DecoderUnit::new(dc.clone()).expect("valid config");
+        let mut r = BitReader::with_len(&bytes, bits);
+        let (out, rep) = unit.decode(&mut r, &book, exps.len()).expect("decodes");
+        assert_eq!(out, exps, "decoder must be bit-exact");
+        let ns10 = rep.avg_latency() * 10.0;
+        let area = decoder_area_um2(dc);
+        if name.contains("chosen") {
+            chosen = (area, ns10);
+        }
+        if name.contains("1-stage") {
+            mono = (area, ns10);
+        }
+        t.row(vec![
+            name.to_string(),
+            format!("{area:.1}"),
+            format!("{ns10:.2}"),
+            format!(
+                "{:.1}%",
+                rep.per_stage[0] as f64 / rep.symbols as f64 * 100.0
+            ),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nchosen 4-stage: {:.1} µm² / {:.2} ns vs monolithic {:.1} µm² / {:.2} ns \
+         (paper: 98.5/11.6 vs 157.6/10.0)",
+        chosen.0, chosen.1, mono.0, mono.1
+    );
+    assert!(chosen.0 < mono.0, "staging must save area");
+    assert!(chosen.1 >= mono.1, "monolithic is the latency floor");
+
+    // Line-rate check: 10 flit-parallel lanes on 10-value flits.
+    let per_flit: Vec<u64> = (0..1000u64).map(|_| 10).collect(); // ~1 cycle/val stage-1
+    let makespan = parallel_makespan(&per_flit, 10);
+    println!(
+        "10 decode lanes, 1000 flits x 10 values: makespan {makespan} cycles \
+         (line rate = 1000 flit-cycles)"
+    );
+}

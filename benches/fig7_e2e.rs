@@ -1,0 +1,58 @@
+//! Fig 7 regenerator — normalized end-to-end latency per model × dataset.
+//!
+//! Paper reference: LEXI lowers end-to-end latency by 31/32/30% (wt2) and
+//! 35/32/31% (c4) for Jamba/Zamba/Qwen; communication is 68–95% of the
+//! uncompressed end-to-end time.
+
+use lexi::models::corpus::Corpus;
+use lexi::models::ModelConfig;
+use lexi::sim::compression::{CompressionMode, CrTable};
+use lexi::sim::engine::Engine;
+use lexi_bench::Table;
+
+fn main() {
+    let engine = Engine::paper_default();
+    let models = ModelConfig::paper_models();
+    let tables: Vec<CrTable> = models.iter().map(|m| CrTable::measure(m, 42)).collect();
+
+    println!("Fig 7 — normalized end-to-end latency (uncompressed = 1.00):");
+    let mut t = Table::new(&[
+        "dataset",
+        "model",
+        "uncomp (ms)",
+        "comm share",
+        "weights-only",
+        "LEXI",
+        "e2e red.",
+    ]);
+    for corpus in Corpus::all() {
+        for (cfg, crs) in models.iter().zip(&tables) {
+            let unc = engine.run(cfg, &corpus, CompressionMode::Uncompressed, crs);
+            let wo = engine.run(cfg, &corpus, CompressionMode::WeightsOnly, crs);
+            let lexi = engine.run(cfg, &corpus, CompressionMode::Lexi, crs);
+            let red = (1.0 - lexi.e2e_ns() / unc.e2e_ns()) * 100.0;
+            assert!(
+                (20.0..45.0).contains(&red),
+                "{} {}: e2e reduction {red:.1}% out of band",
+                cfg.name,
+                corpus.name
+            );
+            assert!(
+                unc.comm_fraction() > 0.55,
+                "comm must dominate ({:.2})",
+                unc.comm_fraction()
+            );
+            t.row(vec![
+                corpus.name.into(),
+                cfg.name.into(),
+                format!("{:.1}", unc.e2e_ms()),
+                format!("{:.0}%", unc.comm_fraction() * 100.0),
+                format!("{:.3}", wo.e2e_ns() / unc.e2e_ns()),
+                format!("{:.3}", lexi.e2e_ns() / unc.e2e_ns()),
+                format!("{red:.1}%"),
+            ]);
+        }
+    }
+    t.print();
+    println!("(paper: 30-35% e2e reduction; comm 68-95% of uncompressed e2e)");
+}

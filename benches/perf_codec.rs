@@ -1,0 +1,121 @@
+//! §Perf — software codec hot-path throughput.
+//!
+//! Targets (DESIGN.md §Perf): ≥100 M exponents/s single-core encode on the
+//! table-driven path; decode within 2× of encode. Used for the
+//! before/after iteration log in EXPERIMENTS.md §Perf.
+
+use lexi::models::activations;
+use lexi::models::traffic::TransferKind;
+use lexi::models::{ModelConfig, ModelScale};
+use lexi_bench::{bench, Table};
+use lexi_core::bf16::FieldStreams;
+use lexi_core::bitstream::{BitReader, BitWriter};
+use lexi_core::flit::{self, FlitFormat};
+use lexi_core::huffman::{self, CodeBook};
+use lexi_core::stats::Histogram;
+use lexi_core::Bf16;
+
+const N: usize = 1_000_000;
+
+fn main() {
+    let cfg = ModelConfig::jamba(ModelScale::Paper);
+    let exps = activations::sample_exponents(&cfg, 0, TransferKind::Activation, 42, N);
+    let hist = Histogram::from_bytes(&exps);
+    let book = CodeBook::lexi_default(&hist).expect("non-empty");
+
+    let mut t = Table::new(&["path", "median", "throughput"]);
+
+    // Histogram construction.
+    let h = bench("histogram", 1, 7, || Histogram::from_bytes(&exps));
+    t.row(vec![
+        "histogram (1M exps)".into(),
+        format!("{:?}", h.median()),
+        format!("{:.0} M/s", h.throughput(N as u64) / 1e6),
+    ]);
+
+    // Codebook build.
+    let cb = bench("codebook", 1, 7, || CodeBook::lexi_default(&hist).unwrap());
+    t.row(vec![
+        "codebook build".into(),
+        format!("{:?}", cb.median()),
+        format!("{:.0} books/s", cb.throughput(1)),
+    ]);
+
+    // Encode.
+    let enc = bench("encode", 1, 7, || {
+        let mut w = BitWriter::new();
+        for &e in &exps {
+            book.encode_symbol(e, &mut w);
+        }
+        w
+    });
+    t.row(vec![
+        "encode (1M exps)".into(),
+        format!("{:?}", enc.median()),
+        format!("{:.0} M exps/s", enc.throughput(N as u64) / 1e6),
+    ]);
+
+    // Decode.
+    let mut w = BitWriter::new();
+    for &e in &exps {
+        book.encode_symbol(e, &mut w);
+    }
+    let bits = w.len_bits();
+    let bytes = w.into_bytes();
+    let dec_book = book.clone();
+    let dec = bench("decode", 1, 7, || {
+        let d = dec_book.decoder();
+        let mut r = BitReader::with_len(&bytes, bits);
+        let mut out = Vec::with_capacity(N);
+        for _ in 0..N {
+            out.push(d.decode(&mut r).unwrap());
+        }
+        out
+    });
+    t.row(vec![
+        "decode (1M exps)".into(),
+        format!("{:?}", dec.median()),
+        format!("{:.0} M exps/s", dec.throughput(N as u64) / 1e6),
+    ]);
+
+    // End-to-end block compress (hist + book + encode).
+    let blk = bench("compress_exponents", 1, 5, || {
+        huffman::compress_exponents(&exps).unwrap()
+    });
+    t.row(vec![
+        "compress_exponents".into(),
+        format!("{:?}", blk.median()),
+        format!("{:.0} M exps/s", blk.throughput(N as u64) / 1e6),
+    ]);
+
+    // Flit pack (values, not just exponents).
+    let mut rng = lexi_core::prng::Rng::new(3);
+    let values: Vec<Bf16> = exps
+        .iter()
+        .map(|&e| {
+            Bf16::from_fields(
+                (rng.next_u32() & 1) as u8,
+                e,
+                (rng.next_u32() & 0x7f) as u8,
+            )
+        })
+        .collect();
+    let streams = FieldStreams::split(&values);
+    let format = FlitFormat::new(128).expect("valid");
+    let pk = bench("flit pack", 1, 5, || {
+        flit::pack(&streams, &book, format).unwrap()
+    });
+    t.row(vec![
+        "flit pack (1M values)".into(),
+        format!("{:?}", pk.median()),
+        format!("{:.0} M vals/s", pk.throughput(N as u64) / 1e6),
+    ]);
+
+    t.print();
+
+    let enc_rate = enc.throughput(N as u64) / 1e6;
+    println!(
+        "\nencode throughput {enc_rate:.0} M exps/s (target ≥100 M/s) — {}",
+        if enc_rate >= 100.0 { "PASS" } else { "BELOW TARGET" }
+    );
+}

@@ -1,0 +1,98 @@
+//! §Perf — NoC simulator throughput and analytic-model validation.
+//!
+//! Targets (DESIGN.md §Perf): ≥10 M flit-hops/s on the per-cycle router
+//! loop; analytic engine within 20% of the cycle simulator on uncongested
+//! transfers.
+
+use lexi::models::corpus::Corpus;
+use lexi::models::{ModelConfig, ModelScale};
+use lexi::noc::traffic::{self, MAX_PACKET_BITS};
+use lexi::noc::{Mesh, Network, NetworkConfig};
+use lexi::sim::compression::{CompressionMode, CrTable};
+use lexi::sim::engine::Engine;
+use lexi_bench::{bench, Table};
+
+fn main() {
+    let cfg = NetworkConfig {
+        mesh: Mesh::new(6, 6),
+        flit_bits: 128,
+        link_gbps: 100.0,
+        buf_depth: 4,
+    };
+
+    // Saturated uniform-random load: measures the router loop.
+    let mut rng = lexi_core::prng::Rng::new(1);
+    let specs = traffic::uniform_random(cfg.mesh, 2000, 128 * 32, 2.0, &mut rng);
+
+    let mut t = Table::new(&["case", "median", "rate"]);
+    let mut hops_done = 0u64;
+    let run = bench("noc uniform", 1, 5, || {
+        let mut net = Network::new(cfg);
+        net.schedule_packets(&specs);
+        let stats = net.run_to_completion(10_000_000);
+        hops_done = stats.flit_hops;
+        stats.cycles
+    });
+    let rate = hops_done as f64 / run.median().as_secs_f64() / 1e6;
+    t.row(vec![
+        format!("uniform 2000 pkts ({hops_done} flit-hops)"),
+        format!("{:?}", run.median()),
+        format!("{rate:.1} M flit-hops/s"),
+    ]);
+
+    // Hotspot (worst-case arbitration pressure).
+    let hot = traffic::hotspot(cfg.mesh, lexi::noc::NodeId(14), 128 * 64);
+    let mut hops2 = 0u64;
+    let run2 = bench("noc hotspot", 1, 5, || {
+        let mut net = Network::new(cfg);
+        net.schedule_packets(&hot);
+        let stats = net.run_to_completion(10_000_000);
+        hops2 = stats.flit_hops;
+        stats.cycles
+    });
+    t.row(vec![
+        format!("hotspot ({hops2} flit-hops)"),
+        format!("{:?}", run2.median()),
+        format!(
+            "{:.1} M flit-hops/s",
+            hops2 as f64 / run2.median().as_secs_f64() / 1e6
+        ),
+    ]);
+
+    // Analytic engine speed at paper scale (full Table 3 cell).
+    let model = ModelConfig::qwen(ModelScale::Paper);
+    let corpus = Corpus::wikitext2();
+    let crs = CrTable::measure(&model, 42);
+    let engine = Engine::paper_default();
+    let an = bench("analytic e2e", 1, 5, || {
+        engine.run(&model, &corpus, CompressionMode::Lexi, &crs)
+    });
+    t.row(vec![
+        "analytic e2e (qwen, wt2)".into(),
+        format!("{:?}", an.median()),
+        format!("{:.1} runs/s", an.throughput(1)),
+    ]);
+    t.print();
+
+    // Validation: analytic vs cycle on a single transfer.
+    let tiny = ModelConfig::jamba(ModelScale::Tiny);
+    let transfers = lexi::models::traffic::decode_step(&tiny, &corpus, 0);
+    let tr = transfers.iter().find(|t| t.bytes > 4096).expect("sizable");
+    let analytic = engine.transfer_ns(tr, CompressionMode::Uncompressed, &crs);
+    let src = engine.system.resolve(tr.src, tr.layer);
+    let dst = engine.system.resolve(tr.dst, tr.layer);
+    let specs = traffic::segment_transfer(src, dst, tr.bytes * 8, 0, MAX_PACKET_BITS);
+    let mut net = Network::new(cfg);
+    net.schedule_packets(&specs);
+    let stats = net.run_to_completion(10_000_000);
+    let cycle = stats.cycles as f64 * cfg.cycle_ns();
+    let err = (analytic - cycle).abs() / cycle * 100.0;
+    println!(
+        "\nanalytic {analytic:.0} ns vs cycle-accurate {cycle:.0} ns — {err:.1}% error \
+         (target <20%)"
+    );
+    println!(
+        "router-loop rate {rate:.1} M flit-hops/s (target ≥10 M/s) — {}",
+        if rate >= 10.0 { "PASS" } else { "BELOW TARGET" }
+    );
+}

@@ -1,0 +1,63 @@
+//! Table 4 regenerator — area and power breakdown of the LEXI codec in
+//! GF 22 nm, with Stillmaker–Baas scaling to the 16 nm Simba node.
+//!
+//! Paper reference: 14 995.2 µm² and 45.43 mW total; 5 452.8 µm² @16 nm =
+//! 0.09% of a 6 mm² Simba chiplet.
+
+use lexi::hw::area_power::{AreaPower, LexiHwConfig};
+use lexi_bench::Table;
+
+fn main() {
+    let bp = AreaPower::of(&LexiHwConfig::paper_default());
+    println!("Table 4 — area/power breakdown (GF 22 nm):");
+    let mut t = Table::new(&[
+        "component",
+        "area µm²",
+        "power mW",
+        "count",
+        "total µm²",
+        "total mW",
+    ]);
+    for i in &bp.items {
+        t.row(vec![
+            i.name.into(),
+            format!("{:.2}", i.unit_area_um2),
+            format!("{:.2}", i.unit_power_mw),
+            format!("×{}", i.count),
+            format!("{:.1}", i.total_area_um2()),
+            format!("{:.2}", i.total_power_mw()),
+        ]);
+    }
+    t.print();
+
+    let area = bp.total_area_um2();
+    let power = bp.total_power_mw();
+    let scaled = bp.total_area_16nm_um2();
+    let pct = bp.chiplet_overhead_pct();
+    println!(
+        "\ntotal {area:.1} µm², {power:.2} mW; scaled to 16 nm {scaled:.1} µm²; \
+         {pct:.3}% of a 6 mm² Simba chiplet"
+    );
+    println!("(paper: 14995.2 µm², 45.43 mW, 5452.8 µm², 0.09%)");
+    assert!((area - 14995.2).abs() / 14995.2 < 0.01);
+    assert!((power - 45.43).abs() / 45.43 < 0.02);
+    assert!((pct - 0.0909).abs() < 0.005);
+
+    // Sensitivity: how the overhead scales with the main knobs.
+    println!("\nknob sensitivity (total area µm² @22nm):");
+    let mut ts = Table::new(&["lanes", "depth", "area µm²", "chiplet %"]);
+    for (lanes, depth) in [(4usize, 8usize), (10, 8), (10, 16), (20, 8), (32, 16)] {
+        let mut cfg = LexiHwConfig::paper_default();
+        cfg.lanes = lanes;
+        cfg.cache_depth = depth;
+        cfg.decode_lanes = lanes;
+        let b = AreaPower::of(&cfg);
+        ts.row(vec![
+            lanes.to_string(),
+            depth.to_string(),
+            format!("{:.1}", b.total_area_um2()),
+            format!("{:.3}%", b.chiplet_overhead_pct()),
+        ]);
+    }
+    ts.print();
+}

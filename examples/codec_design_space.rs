@@ -1,0 +1,128 @@
+//! Codec design-space exploration (paper §5.2, Figs 4–6).
+//!
+//! ```bash
+//! cargo run --release --example codec_design_space
+//! ```
+//!
+//! Sweeps the three hardware knobs — lane-cache depth, lane count, and
+//! decoder LUT staging — printing latency/area trade-offs and marking the
+//! paper's chosen operating points.
+
+use lexi::core::bitstream::{BitReader, BitWriter};
+use lexi::core::huffman::CodeBook;
+use lexi::core::stats::Histogram;
+use lexi::hw::area_power::{decoder_area_um2, AreaPower, LexiHwConfig};
+use lexi::hw::decoder::{DecoderConfig, DecoderUnit};
+use lexi::hw::histogram_unit::{HistConfig, HistogramUnit};
+use lexi::hw::lane_cache::LaneCache;
+use lexi::models::weights::WeightStream;
+use lexi::models::{ModelConfig, ModelScale};
+use lexi_bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let models = ModelConfig::paper_models();
+
+    // --- Fig 4: hit rate vs cache depth --------------------------------
+    println!("Fig 4 — lane-cache hit rate vs depth (steady-state streams):");
+    let mut t4 = Table::new(&["depth", "jamba", "zamba", "qwen"]);
+    for depth in [1usize, 2, 4, 8, 16, 32] {
+        let mut row = vec![depth.to_string()];
+        for cfg in &models {
+            let exps = WeightStream::sample_exponents(cfg, 0, 9, 200_000);
+            let mut cache = LaneCache::new(depth);
+            for &e in &exps {
+                cache.access(e);
+            }
+            row.push(format!("{:.1}%", cache.hit_rate() * 100.0));
+        }
+        t4.row(row);
+    }
+    t4.print();
+
+    // --- Fig 5: codebook-generation latency vs total cache size ---------
+    println!("\nFig 5 — codebook generation latency vs cache size (512 samples):");
+    let cfg0 = ModelConfig::jamba(ModelScale::Paper);
+    let window = WeightStream::sample_exponents(&cfg0, 0, 9, 512);
+    let mut t5 = Table::new(&["lanes", "depth", "cache KiB", "latency ns", "hit rate"]);
+    for (lanes, depth) in [
+        (1usize, 4usize),
+        (1, 8),
+        (2, 8),
+        (4, 8),
+        (8, 8),
+        (10, 8), // paper's pick
+        (16, 8),
+        (16, 16),
+        (32, 16),
+    ] {
+        let hc = HistConfig { lanes, depth };
+        let r = HistogramUnit::new(hc).run(&window);
+        let mark = if lanes == 10 && depth == 8 { " <- paper" } else { "" };
+        t5.row(vec![
+            format!("{lanes}{mark}"),
+            depth.to_string(),
+            format!("{:.3}", hc.cache_bytes() as f64 / 1024.0),
+            r.cycles.to_string(),
+            format!("{:.1}%", r.hit_rate * 100.0),
+        ]);
+    }
+    t5.print();
+
+    // --- Fig 6: decoder latency vs area ----------------------------------
+    println!("\nFig 6 — decode latency (per 10 exponents) vs decoder area:");
+    let exps = WeightStream::sample_exponents(&cfg0, 0, 9, 100_000);
+    let hist = Histogram::from_bytes(&exps);
+    let book = CodeBook::lexi_default(&hist)?;
+    let mut w = BitWriter::new();
+    for &e in &exps {
+        book.encode_symbol(e, &mut w);
+    }
+    let bits = w.len_bits();
+    let bytes = w.into_bytes();
+    let mut t6 = Table::new(&["decoder", "area µm²", "ns / 10 exps"]);
+    for (name, dc) in [
+        ("1-stage 32b LUT", DecoderConfig::monolithic()),
+        (
+            "2-stage 16/32",
+            DecoderConfig {
+                stage_bits: vec![16, 32],
+                entries_per_stage: 16,
+            },
+        ),
+        (
+            "3-stage 11/22/32",
+            DecoderConfig {
+                stage_bits: vec![11, 22, 32],
+                entries_per_stage: 11,
+            },
+        ),
+        ("4-stage 8/16/24/32 <- paper", DecoderConfig::paper_default()),
+        (
+            "5-stage 7/14/21/28/32",
+            DecoderConfig {
+                stage_bits: vec![7, 14, 21, 28, 32],
+                entries_per_stage: 7,
+            },
+        ),
+    ] {
+        let unit = DecoderUnit::new(dc.clone())?;
+        let mut r = BitReader::with_len(&bytes, bits);
+        let (_, rep) = unit.decode(&mut r, &book, exps.len())?;
+        t6.row(vec![
+            name.into(),
+            format!("{:.1}", decoder_area_um2(&dc)),
+            format!("{:.2}", rep.avg_latency() * 10.0),
+        ]);
+    }
+    t6.print();
+
+    // --- chosen configuration summary (Table 4) --------------------------
+    let bp = AreaPower::of(&LexiHwConfig::paper_default());
+    println!(
+        "\nchosen design: {:.1} µm² @22nm -> {:.1} µm² @16nm = {:.3}% of a Simba chiplet",
+        bp.total_area_um2(),
+        bp.total_area_16nm_um2(),
+        bp.chiplet_overhead_pct()
+    );
+    Ok(())
+}

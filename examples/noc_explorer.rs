@@ -1,0 +1,75 @@
+//! NoC explorer: how LEXI's benefit scales with mesh size and link rate.
+//!
+//! ```bash
+//! cargo run --release --example noc_explorer
+//! ```
+//!
+//! Replays one decode step of the tiny Jamba model through the
+//! cycle-accurate NoI under different array sizes and link bandwidths,
+//! with and without LEXI — the slower the links and the bigger the mesh,
+//! the more the compressed traffic matters.
+
+use lexi::models::corpus::Corpus;
+use lexi::models::{ModelConfig, ModelScale};
+use lexi::noc::traffic::{segment_transfer, MAX_PACKET_BITS};
+use lexi::noc::{Mesh, Network, NetworkConfig, PacketSpec};
+use lexi::sim::compression::{CompressionMode, CrTable};
+use lexi::sim::simba::SimbaSystem;
+use lexi_bench::Table;
+
+fn run_once(
+    system: &SimbaSystem,
+    ncfg: NetworkConfig,
+    crs: &CrTable,
+    mode: CompressionMode,
+) -> f64 {
+    let cfg = ModelConfig::jamba(ModelScale::Tiny);
+    let corpus = Corpus::wikitext2();
+    let transfers = lexi::models::traffic::decode_step(&cfg, &corpus, 0);
+    let mut specs: Vec<PacketSpec> = Vec::new();
+    for tr in &transfers {
+        let src = system.resolve(tr.src, tr.layer);
+        let dst = system.resolve(tr.dst, tr.layer);
+        let bytes = crs.wire_bytes(tr.bytes, tr.kind, mode);
+        specs.extend(segment_transfer(src, dst, bytes * 8, 0, MAX_PACKET_BITS));
+    }
+    let mut net = Network::new(ncfg);
+    net.schedule_packets(&specs);
+    let stats = net.run_to_completion(1_000_000_000);
+    stats.cycles as f64 * ncfg.cycle_ns()
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ModelConfig::jamba(ModelScale::Tiny);
+    let crs = CrTable::measure(&cfg, 42);
+
+    println!("one decode step of jamba-tiny over the NoI (cycle-accurate):\n");
+    let mut t = Table::new(&["mesh", "link Gbps", "uncompressed", "LEXI", "reduction"]);
+    for (cols, rows, mem) in [
+        (4u16, 4u16, vec![(0u16, 1u16), (3, 2)]),
+        (6, 6, vec![(0, 2), (0, 3), (5, 2), (5, 3)]),
+        (8, 8, vec![(0, 3), (0, 4), (7, 3), (7, 4)]),
+    ] {
+        for link_gbps in [50.0f64, 100.0, 200.0] {
+            let mesh = Mesh::new(cols, rows);
+            let system = SimbaSystem::new(mesh, &mem);
+            let ncfg = NetworkConfig {
+                mesh,
+                flit_bits: 128,
+                link_gbps,
+                buf_depth: 4,
+            };
+            let unc = run_once(&system, ncfg, &crs, CompressionMode::Uncompressed);
+            let lexi = run_once(&system, ncfg, &crs, CompressionMode::Lexi);
+            t.row(vec![
+                format!("{cols}x{rows}"),
+                format!("{link_gbps:.0}"),
+                format!("{:.1} ns", unc),
+                format!("{:.1} ns", lexi),
+                format!("{:.1}%", (1.0 - lexi / unc) * 100.0),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Quickstart: compress a BF16 tensor's exponent stream with LEXI.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Shows the core API end to end: split BF16 into field streams, build a
+//! per-layer codebook, compress/decompress losslessly, compare against the
+//! RLE/BDI baselines, pack into link flits, and cross-check the software
+//! codec against the cycle-accurate hardware model.
+
+use lexi::core::bf16::FieldStreams;
+use lexi::core::flit::{self, FlitFormat};
+use lexi::core::huffman::{self, CodeBook};
+use lexi::core::prng::Rng;
+use lexi::core::stats::{FieldProfile, Histogram};
+use lexi::core::{bdi, rle, Bf16};
+use lexi::hw::compressor::{Compressor, CompressorConfig};
+
+fn main() -> anyhow::Result<()> {
+    // A synthetic "layer output": 64K well-scaled BF16 values.
+    let mut rng = Rng::new(7);
+    let values: Vec<Bf16> = (0..65_536)
+        .map(|_| Bf16::from_f32(rng.normal_with(0.0, 0.8) as f32))
+        .collect();
+
+    // 1. Profile (paper Fig 1a): exponents are low-entropy, mantissas full.
+    let profile = FieldProfile::of(&values);
+    println!(
+        "exponent entropy {:.2} bits over {} distinct values; mantissa {:.2} bits",
+        profile.exp_entropy_bits, profile.exp_distinct, profile.mant_entropy_bits
+    );
+
+    // 2. Compress the exponent stream (paper Table 2).
+    let streams = FieldStreams::split(&values);
+    let block = huffman::compress_exponents(&streams.exponents)?;
+    println!(
+        "LEXI  exponent CR: {:.2}x  (RLE {:.2}x, BDI {:.2}x)",
+        block.ratio(),
+        rle::coding_ratio(&streams.exponents),
+        bdi::coding_ratio(&streams.exponents),
+    );
+
+    // 3. Lossless round-trip.
+    let back = huffman::decompress_exponents(&block)?;
+    assert_eq!(back, streams.exponents);
+    println!("round-trip: lossless OK");
+
+    // 4. Flit packetization for a 100 Gbps / 128-bit NoI link (paper §4.3).
+    let hist = Histogram::from_bytes(&streams.exponents);
+    let book = CodeBook::lexi_default(&hist)?;
+    let format = FlitFormat::new(128)?;
+    let transfer = flit::pack(&streams, &book, format)?;
+    println!(
+        "wire: {} flits vs {} uncompressed ({:.2}x fewer)",
+        transfer.flits.len(),
+        flit::uncompressed_flits(format, values.len()),
+        transfer.ratio_vs_uncompressed()
+    );
+    assert_eq!(flit::unpack(&transfer)?.join(), values);
+
+    // 5. The cycle-accurate hardware pipeline agrees on cost and framing.
+    let comp = Compressor::new(CompressorConfig::paper_default());
+    let (hw_book, _payload, report) = comp.compress(&streams.exponents)?;
+    println!(
+        "hw codec: startup {} cycles, {:.1} exponents/cycle steady-state, CR {:.2}x, esc {} of {}",
+        report.startup_cycles,
+        report.throughput(),
+        report.ratio(),
+        report.escapes,
+        report.count,
+    );
+    let esc = hw_book.escape();
+    assert_eq!(esc.bits, (1 << esc.len) - 1, "escape is the all-ones code");
+    Ok(())
+}

@@ -1,0 +1,138 @@
+"""AOT pipeline: lower the L2 model to HLO text for the Rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1
+(behind the rust `xla` 0.1.6 crate) rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per model we emit two executables — `{model}_prefill` and `{model}_decode`
+— with parameters baked in as constants (the Rust coordinator feeds only
+tokens/positions/caches), plus `manifest.json` describing every input and
+output shape so the runtime can build literals without guessing.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--models jamba,zamba,qwen]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the default print options elide weight
+    # constants as `{...}`, which parses back as garbage — the baked-in
+    # parameters must survive the text round-trip.
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "HLO text still elides constants"
+    return text
+
+
+def shape_of(x):
+    return {"shape": list(x.shape), "dtype": str(x.dtype)}
+
+
+def build_model(name: str, seed: int):
+    cfg = M.ALL_MODELS[name]()
+    params = M.init_params(cfg, seed=seed)
+
+    def prefill_fn(tokens):
+        return M.prefill(cfg, params, tokens)
+
+    def decode_fn(token, pos, kv, ssm, conv):
+        return M.decode_step(cfg, params, token, pos, kv, ssm, conv)
+
+    return cfg, params, prefill_fn, decode_fn
+
+
+def lower_model(name: str, out_dir: str, seed: int) -> dict:
+    cfg, params, prefill_fn, decode_fn = build_model(name, seed)
+
+    tokens_spec = jax.ShapeDtypeStruct((M.SEQ_IN,), jnp.int32)
+    lowered_pre = jax.jit(prefill_fn).lower(tokens_spec)
+    pre_path = os.path.join(out_dir, f"{name}_prefill.hlo.txt")
+    with open(pre_path, "w") as f:
+        f.write(to_hlo_text(lowered_pre))
+
+    # Concrete prefill outputs pin the cache shapes for decode lowering.
+    out = jax.jit(prefill_fn)(jnp.zeros((M.SEQ_IN,), jnp.int32))
+    logits, acts, kv, ssm, conv = out
+
+    tok_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    lowered_dec = jax.jit(decode_fn).lower(
+        tok_spec,
+        pos_spec,
+        jax.ShapeDtypeStruct(kv.shape, kv.dtype),
+        jax.ShapeDtypeStruct(ssm.shape, ssm.dtype),
+        jax.ShapeDtypeStruct(conv.shape, conv.dtype),
+    )
+    dec_path = os.path.join(out_dir, f"{name}_decode.hlo.txt")
+    with open(dec_path, "w") as f:
+        f.write(to_hlo_text(lowered_dec))
+
+    return {
+        "seq_in": M.SEQ_IN,
+        "out_max": M.OUT_MAX,
+        "max_seq": M.MAX_SEQ,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "blocks": cfg.blocks,
+        "prefill": {
+            "file": os.path.basename(pre_path),
+            "inputs": [shape_of(jnp.zeros((M.SEQ_IN,), jnp.int32))],
+            "outputs": [shape_of(x) for x in out],
+            "output_names": ["logits", "acts", "kv", "ssm", "conv"],
+        },
+        "decode": {
+            "file": os.path.basename(dec_path),
+            "inputs": [
+                shape_of(jnp.zeros((), jnp.int32)),
+                shape_of(jnp.zeros((), jnp.int32)),
+                shape_of(kv),
+                shape_of(ssm),
+                shape_of(conv),
+            ],
+            "input_names": ["token", "pos", "kv", "ssm", "conv"],
+            "outputs": [
+                shape_of(logits),
+                {"shape": [len(cfg.blocks), cfg.d_model], "dtype": "float32"},
+                shape_of(kv),
+                shape_of(ssm),
+                shape_of(conv),
+            ],
+            "output_names": ["logits", "acts", "kv", "ssm", "conv"],
+        },
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="jamba,zamba,qwen")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {}
+    for name in args.models.split(","):
+        name = name.strip()
+        print(f"lowering {name} ...", flush=True)
+        manifest[name] = lower_model(name, args.out_dir, args.seed)
+    man_path = os.path.join(args.out_dir, "manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {man_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Pallas tiled causal attention kernel (L1).
+
+HARDWARE ADAPTATION (DESIGN.md §Hardware-Adaptation): the usual GPU
+flash-attention tiles for shared memory per threadblock; on TPU the tiling
+targets VMEM and the MXU. The grid iterates (head, q-block); each program
+holds a [BQ, D] query tile resident in VMEM and streams K/V in [BK, D]
+tiles through an online-softmax accumulator, so VMEM footprint is
+O(BQ·D + BK·D) regardless of sequence length and every dot hits the MXU.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls (see /opt/xla-example/README.md); real-TPU numbers are
+estimated from the BlockSpec footprint in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM-friendly tile sizes (small enough for the tiny models' shapes to
+# divide evenly after padding; multiples of 8 for TPU lane alignment).
+DEFAULT_BQ = 32
+DEFAULT_BK = 32
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref, o_ref, *, bk: int, sk: int, causal: bool, q_start_mult: int, q_offset: int
+):
+    """One (head, q-block) program: online softmax over K/V tiles."""
+    bq, d = q_ref.shape
+    q = q_ref[...].astype(jnp.float32) * (1.0 / (d**0.5))
+    qi = pl.program_id(1)  # q-block index
+
+    m = jnp.full((bq,), -1e30, dtype=jnp.float32)
+    l = jnp.zeros((bq,), dtype=jnp.float32)
+    acc = jnp.zeros((bq, d), dtype=jnp.float32)
+
+    nkb = sk // bk
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (pl.dslice(kb * bk, bk), slice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (pl.dslice(kb * bk, bk), slice(None))).astype(jnp.float32)
+        s = q @ k.T  # [BQ, BK] -> MXU
+        if causal:
+            # Queries are the last Sq positions of the Sk-length context
+            # (matches ref.attention's tril(k=Sk-Sq)).
+            q_pos = qi * q_start_mult + jax.lax.iota(jnp.int32, bq) + q_offset
+            k_pos = kb * bk + jax.lax.iota(jnp.int32, bk)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask, s, -1e30)
+        m2 = jnp.maximum(m, s.max(axis=1))
+        p = jnp.exp(s - m2[:, None])
+        alpha = jnp.exp(m - m2)
+        l2 = alpha * l + p.sum(axis=1)
+        acc2 = acc * alpha[:, None] + p @ v
+        return m2, l2, acc2
+
+    m, l, acc = jax.lax.fori_loop(0, nkb, body, (m, l, acc))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def attention(q, k, v, *, causal=True, bq=DEFAULT_BQ, bk=DEFAULT_BK):
+    """Tiled causal attention. q: [Sq, H, D], k/v: [Sk, H, D] -> [Sq, H, D].
+
+    Sequence lengths must be multiples of the tile sizes (the L2 model pads
+    to tiles); head count is the outer grid dimension.
+    """
+    sq, h, d = q.shape
+    sk = k.shape[0]
+    assert sq % bq == 0, f"Sq={sq} not a multiple of BQ={bq}"
+    assert sk % bk == 0, f"Sk={sk} not a multiple of BK={bk}"
+
+    # [H, S, D] layout so each head is a contiguous block.
+    qh = jnp.swapaxes(q, 0, 1)
+    kh = jnp.swapaxes(k, 0, 1)
+    vh = jnp.swapaxes(v, 0, 1)
+
+    kernel = functools.partial(
+        _attn_kernel, bk=bk, sk=sk, causal=causal, q_start_mult=bq, q_offset=sk - sq
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(h, sq // bq),
+        in_specs=[
+            pl.BlockSpec((None, bq, d), lambda hh, qq: (hh, qq, 0)),
+            pl.BlockSpec((None, sk, d), lambda hh, qq: (hh, 0, 0)),
+            pl.BlockSpec((None, sk, d), lambda hh, qq: (hh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, d), lambda hh, qq: (hh, qq, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, sq, d), q.dtype),
+        interpret=True,
+    )(qh, kh, vh)
+    return jnp.swapaxes(out, 0, 1)
+
+
+def vmem_bytes(bq=DEFAULT_BQ, bk=DEFAULT_BK, d=64, dtype_bytes=2):
+    """Estimated VMEM residency per program (DESIGN.md §Perf input)."""
+    q_tile = bq * d * dtype_bytes
+    kv_tiles = 2 * bk * d * dtype_bytes
+    acc = bq * d * 4 + 2 * bq * 4  # f32 accumulator + m/l vectors
+    return q_tile + kv_tiles + acc

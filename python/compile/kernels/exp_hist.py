@@ -1,0 +1,52 @@
+"""Pallas BF16 exponent-histogram kernel (L1, profiling path).
+
+The L3 profiler needs exponent histograms of every tensor it logs (paper
+§3.1). This kernel computes the 256-bin histogram of the exponent field
+from raw BF16 bit patterns, tiled so each program reduces a chunk into a
+partial histogram and partials are summed — the same map-reduce shape the
+hardware's M-lane counting circuit uses (lexi-hw::histogram_unit).
+
+interpret=True: see attention.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_CHUNK = 2048
+
+
+def _hist_kernel(bits_ref, hist_ref):
+    """One chunk program: one-hot reduce into a 256-bin partial."""
+    bits = bits_ref[...]
+    exps = (bits >> 7) & 0xFF  # [CHUNK]
+    bins = jax.lax.iota(jnp.int32, 256)
+    onehot = (exps[:, None] == bins[None, :]).astype(jnp.int32)
+    hist_ref[...] = onehot.sum(axis=0)
+
+
+def exponent_histogram(bits_u16, *, chunk=DEFAULT_CHUNK):
+    """256-bin exponent histogram of BF16 bit patterns.
+
+    bits_u16: int32[N] of raw patterns; N padded to `chunk` internally
+    (padding uses pattern 0, whose count is corrected afterwards).
+    """
+    flat = bits_u16.reshape(-1).astype(jnp.int32)
+    n = flat.shape[0]
+    pad = (-n) % chunk
+    padded = jnp.pad(flat, (0, pad), constant_values=0)
+    nchunks = padded.shape[0] // chunk
+
+    partials = pl.pallas_call(
+        functools.partial(_hist_kernel),
+        grid=(nchunks,),
+        in_specs=[pl.BlockSpec((chunk,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((None, 256), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nchunks, 256), jnp.int32),
+        interpret=True,
+    )(padded)
+    hist = partials.sum(axis=0)
+    # Padding contributed `pad` counts of exponent 0.
+    return hist.at[0].add(-pad)

@@ -1,0 +1,83 @@
+"""Pallas selective-scan (Mamba) kernel (L1).
+
+HARDWARE ADAPTATION: CUDA selective-scan implementations assign channel
+chunks to threadblocks and keep the recurrent state in registers/shared
+memory. The TPU mapping tiles the channel dimension across the grid and
+keeps each tile's [BD, N] state resident in VMEM while the kernel walks
+the sequence with `fori_loop` — HBM traffic is exactly one read of
+(x, dt, B, C) and one write of y per step, the roofline for a recurrence.
+
+interpret=True: see attention.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BD = 128
+
+
+def _scan_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *, seq: int):
+    """One channel-tile program: sequential scan with VMEM-resident state."""
+    bd, n = a_ref.shape
+    a = a_ref[...].astype(jnp.float32)  # [BD, N]
+
+    def body(t, h):
+        x_t = pl.load(x_ref, (pl.dslice(t, 1), slice(None)))[0].astype(jnp.float32)
+        dt_t = pl.load(dt_ref, (pl.dslice(t, 1), slice(None)))[0].astype(jnp.float32)
+        b_t = pl.load(b_ref, (pl.dslice(t, 1), slice(None)))[0].astype(jnp.float32)
+        c_t = pl.load(c_ref, (pl.dslice(t, 1), slice(None)))[0].astype(jnp.float32)
+        da = jnp.exp(dt_t[:, None] * a)  # [BD, N]
+        h = da * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        y_t = (h * c_t[None, :]).sum(axis=1)  # [BD]
+        pl.store(y_ref, (pl.dslice(t, 1), slice(None)), y_t[None, :].astype(y_ref.dtype))
+        return h
+
+    h = jnp.zeros((bd, n), dtype=jnp.float32)
+    h = jax.lax.fori_loop(0, seq, body, h)
+    h_ref[...] = h
+
+
+def selective_scan(x, dt, a, b, c, *, bd=DEFAULT_BD):
+    """Tiled selective scan.
+
+    x/dt: [S, DI], a: [DI, N], b/c: [S, N] -> (y [S, DI], h [DI, N] f32).
+    DI must be a multiple of the channel tile `bd`.
+    """
+    s, di = x.shape
+    n = a.shape[1]
+    bd = min(bd, di)
+    assert di % bd == 0, f"DI={di} not a multiple of BD={bd}"
+
+    kernel = functools.partial(_scan_kernel, seq=s)
+    y, h = pl.pallas_call(
+        kernel,
+        grid=(di // bd,),
+        in_specs=[
+            pl.BlockSpec((s, bd), lambda i: (0, i)),   # x
+            pl.BlockSpec((s, bd), lambda i: (0, i)),   # dt
+            pl.BlockSpec((bd, n), lambda i: (i, 0)),   # a
+            pl.BlockSpec((s, n), lambda i: (0, 0)),    # b (shared)
+            pl.BlockSpec((s, n), lambda i: (0, 0)),    # c (shared)
+        ],
+        out_specs=[
+            pl.BlockSpec((s, bd), lambda i: (0, i)),   # y
+            pl.BlockSpec((bd, n), lambda i: (i, 0)),   # h
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, di), x.dtype),
+            jax.ShapeDtypeStruct((di, n), jnp.float32),
+        ],
+        interpret=True,
+    )(x, dt, a, b, c)
+    return y, h
+
+
+def vmem_bytes(bd=DEFAULT_BD, n=16, seq=128, dtype_bytes=2):
+    """Estimated VMEM residency per program (DESIGN.md §Perf input)."""
+    state = bd * n * 4
+    a_tile = bd * n * 4
+    io_tiles = seq * bd * dtype_bytes * 2 + 2 * seq * n * dtype_bytes
+    return state + a_tile + io_tiles

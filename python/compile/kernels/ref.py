@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest
+asserts allclose between kernel and oracle across shapes/dtypes (including
+hypothesis sweeps). These oracles are also what the L2 model uses on paths
+where a kernel would be overkill (e.g. single-token decode steps).
+"""
+
+import jax.numpy as jnp
+
+
+def attention(q, k, v, *, causal=True):
+    """Scaled dot-product attention.
+
+    q: [Sq, H, D], k/v: [Sk, H, D] -> [Sq, H, D].
+    """
+    sq, h, d = q.shape
+    sk = k.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    logits = (
+        jnp.einsum("qhd,khd->hqk", q.astype(jnp.float32), k.astype(jnp.float32))
+        * scale
+    )
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, sk), dtype=bool), k=sk - sq)
+        logits = jnp.where(mask[None, :, :], logits, -1e30)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("hqk,khd->qhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def selective_scan(x, dt, a, b, c):
+    """Mamba-style selective state-space scan (sequential reference).
+
+    x:  [S, DI]   input sequence (post in-proj/conv/silu)
+    dt: [S, DI]   positive step sizes
+    a:  [DI, N]   state decay (negative values; used inside exp)
+    b:  [S, N]    input projection per step
+    c:  [S, N]    output projection per step
+    returns (y [S, DI], h_final [DI, N] float32)
+    """
+    s, di = x.shape
+    n = a.shape[1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+
+    h = jnp.zeros((di, n), dtype=jnp.float32)
+    ys = []
+    for t in range(s):
+        da = jnp.exp(dtf[t][:, None] * af)  # [DI, N]
+        h = da * h + (dtf[t] * xf[t])[:, None] * bf[t][None, :]
+        ys.append(h @ cf[t])  # [DI]
+    y = jnp.stack(ys, axis=0)
+    return y.astype(x.dtype), h
+
+
+def selective_scan_step(h, x_t, dt_t, a, b_t, c_t):
+    """One decode-time scan step. h: [DI, N] -> (y [DI], h')."""
+    hf = h.astype(jnp.float32)
+    da = jnp.exp(dt_t.astype(jnp.float32)[:, None] * a.astype(jnp.float32))
+    h2 = da * hf + (dt_t.astype(jnp.float32) * x_t.astype(jnp.float32))[:, None] * b_t.astype(jnp.float32)[None, :]
+    y = h2 @ c_t.astype(jnp.float32)
+    return y.astype(x_t.dtype), h2
+
+
+def exponent_histogram(bits_u16):
+    """256-bin histogram of the BF16 exponent field.
+
+    bits_u16: int32 array of raw BF16 bit patterns (0..65535).
+    Returns int32[256] counts.
+    """
+    exps = (bits_u16 >> 7) & 0xFF
+    return jnp.bincount(exps.reshape(-1), length=256).astype(jnp.int32)

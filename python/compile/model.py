@@ -1,0 +1,365 @@
+"""L2: the hybrid transformer–Mamba(–MoE) model in JAX.
+
+Tiny, architecture-faithful variants of the paper's three models
+(Jamba / Zamba / Qwen), dimension-matched to `lexi-models`' `Tiny`
+configs. The forward pass calls the L1 Pallas kernels (attention,
+selective scan) on the prefill path, and exposes exactly the tensors LEXI
+compresses — per-block boundary activations (BF16-quantized), KV caches,
+and SSM/conv states — as outputs, so the Rust L3 coordinator owns the
+decode loop and the caches transit the (simulated) interconnect.
+
+BF16 semantics: compute runs in f32 for CPU-PJRT stability, but every
+logged tensor is passed through a bf16 round-trip (`quantize`), so its
+f32 bits are exactly bf16-representable and the Rust profiler recovers
+the true exponent streams losslessly.
+"""
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_k
+from .kernels import mamba_scan
+from .kernels import ref
+
+# Sequence geometry shared with the Rust runtime (manifest.json records it).
+SEQ_IN = 128
+OUT_MAX = 64
+MAX_SEQ = SEQ_IN + OUT_MAX
+
+
+@dataclass
+class TinyConfig:
+    """Dimensions mirror lexi-models' ModelScale::Tiny configs."""
+
+    name: str
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 512
+    d_ff_expert: int = 256
+    n_experts: int = 0
+    top_k: int = 2
+    d_state: int = 16
+    d_inner: int = 256
+    d_conv: int = 4
+    vocab: int = 1024
+    blocks: List[str] = field(default_factory=list)
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+    @property
+    def kv_dim(self):
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def attn_layers(self):
+        return [i for i, b in enumerate(self.blocks) if b == "attention"]
+
+    @property
+    def mamba_layers(self):
+        return [i for i, b in enumerate(self.blocks) if b == "mamba"]
+
+
+def jamba_tiny() -> TinyConfig:
+    return TinyConfig(
+        name="jamba-tiny",
+        n_kv_heads=2,
+        n_experts=4,
+        blocks=["mamba", "attention", "moe", "mamba"],
+    )
+
+
+def zamba_tiny() -> TinyConfig:
+    return TinyConfig(
+        name="zamba-tiny",
+        blocks=["mamba", "mamba", "mamba", "mamba", "attention"],
+    )
+
+
+def qwen_tiny() -> TinyConfig:
+    return TinyConfig(
+        name="qwen-tiny",
+        d_state=0,
+        d_inner=0,
+        d_conv=1,
+        blocks=["attention", "mlp", "attention", "mlp", "attention", "mlp"],
+    )
+
+
+ALL_MODELS = {"jamba": jamba_tiny, "zamba": zamba_tiny, "qwen": qwen_tiny}
+
+
+def quantize(x):
+    """BF16 round-trip: every logged tensor is bf16-representable."""
+    return x.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+# --- parameter init --------------------------------------------------------
+
+
+def init_params(cfg: TinyConfig, seed: int = 0) -> Dict:
+    """Seeded parameter pytree, bf16-quantized (weights ship compressed)."""
+    key = jax.random.PRNGKey(seed)
+
+    def nxt():
+        nonlocal key
+        key, sub = jax.random.split(key)
+        return sub
+
+    def dense(fan_in, shape):
+        return quantize(jax.random.normal(nxt(), shape) / jnp.sqrt(fan_in))
+
+    p: Dict = {"embed": dense(cfg.d_model, (cfg.vocab, cfg.d_model)), "blocks": []}
+    d = cfg.d_model
+    for kind in cfg.blocks:
+        if kind == "attention":
+            blk = {
+                "wq": dense(d, (d, d)),
+                "wk": dense(d, (d, cfg.kv_dim)),
+                "wv": dense(d, (d, cfg.kv_dim)),
+                "wo": dense(d, (d, d)),
+                "norm": jnp.ones((d,), jnp.float32),
+            }
+        elif kind == "mamba":
+            di, n = cfg.d_inner, cfg.d_state
+            blk = {
+                "in_x": dense(d, (d, di)),
+                "in_z": dense(d, (d, di)),
+                "conv": dense(cfg.d_conv, (cfg.d_conv, di)),
+                "w_dt": dense(d, (di,)) * 0.0 - 4.0,  # softplus bias ≈ small dt
+                "wx_dt": dense(d, (d, di)),
+                "wb": dense(d, (d, n)),
+                "wc": dense(d, (d, n)),
+                "a_log": jnp.log(
+                    jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+                ),
+                "out": dense(di, (di, d)),
+                "norm": jnp.ones((d,), jnp.float32),
+            }
+        elif kind == "moe":
+            e, dfe = cfg.n_experts, cfg.d_ff_expert
+            blk = {
+                "router": dense(d, (d, e)),
+                "w1": dense(d, (e, d, dfe)),
+                "w3": dense(d, (e, d, dfe)),
+                "w2": dense(dfe, (e, dfe, d)),
+                "norm": jnp.ones((d,), jnp.float32),
+            }
+        elif kind == "mlp":
+            blk = {
+                "w1": dense(d, (d, cfg.d_ff)),
+                "w3": dense(d, (d, cfg.d_ff)),
+                "w2": dense(cfg.d_ff, (cfg.d_ff, d)),
+                "norm": jnp.ones((d,), jnp.float32),
+            }
+        else:
+            raise ValueError(kind)
+        p["blocks"].append(blk)
+    p["final_norm"] = jnp.ones((d,), jnp.float32)
+    return p
+
+
+# --- building blocks -------------------------------------------------------
+
+
+def rmsnorm(x, w):
+    v = jnp.mean(x.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(v + 1e-6) * w).astype(x.dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def _repeat_kv(kv, n_rep):
+    """[S, KVH, D] -> [S, KVH*n_rep, D] (grouped-query attention)."""
+    if n_rep == 1:
+        return kv
+    s, h, dd = kv.shape
+    return jnp.repeat(kv, n_rep, axis=1)
+
+
+def attn_prefill(cfg, blk, x):
+    """Full-sequence attention via the Pallas kernel. x: [S, D]."""
+    s, d = x.shape
+    h = rmsnorm(x, blk["norm"])
+    q = (h @ blk["wq"]).reshape(s, cfg.n_heads, cfg.head_dim)
+    k = (h @ blk["wk"]).reshape(s, cfg.n_kv_heads, cfg.head_dim)
+    v = (h @ blk["wv"]).reshape(s, cfg.n_kv_heads, cfg.head_dim)
+    rep = cfg.n_heads // cfg.n_kv_heads
+    o = attn_k.attention(q, _repeat_kv(k, rep), _repeat_kv(v, rep))
+    y = o.reshape(s, d) @ blk["wo"]
+    kv = jnp.stack([k.reshape(s, cfg.kv_dim), v.reshape(s, cfg.kv_dim)], axis=0)
+    return x + y, quantize(kv)  # kv: [2, S, KVDIM]
+
+
+def attn_decode(cfg, blk, x, kv_cache, pos):
+    """Single-token attention over the cache. x: [D], kv_cache [2,MAX,KVDIM]."""
+    d = cfg.d_model
+    h = rmsnorm(x, blk["norm"])
+    q = (h @ blk["wq"]).reshape(cfg.n_heads, cfg.head_dim)
+    k_new = (h @ blk["wk"]).reshape(cfg.kv_dim)
+    v_new = (h @ blk["wv"]).reshape(cfg.kv_dim)
+    kv_cache = jax.lax.dynamic_update_slice(
+        kv_cache, quantize(jnp.stack([k_new, v_new]))[:, None, :], (0, pos, 0)
+    )
+    ks = kv_cache[0].reshape(MAX_SEQ, cfg.n_kv_heads, cfg.head_dim)
+    vs = kv_cache[1].reshape(MAX_SEQ, cfg.n_kv_heads, cfg.head_dim)
+    rep = cfg.n_heads // cfg.n_kv_heads
+    ks = _repeat_kv(ks, rep)
+    vs = _repeat_kv(vs, rep)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.head_dim, jnp.float32))
+    logits = jnp.einsum("hd,shd->hs", q, ks) * scale
+    mask = jnp.arange(MAX_SEQ) <= pos
+    logits = jnp.where(mask[None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("hs,shd->hd", p, vs).reshape(d)
+    return x + o @ blk["wo"], kv_cache
+
+
+def _mamba_proj(cfg, blk, h):
+    """Shared projections for scan inputs. h: [.., D]."""
+    xm = h @ blk["in_x"]
+    z = h @ blk["in_z"]
+    dt = jax.nn.softplus(h @ blk["wx_dt"] + blk["w_dt"])
+    b = h @ blk["wb"]
+    c = h @ blk["wc"]
+    return xm, z, dt, b, c
+
+
+def mamba_prefill(cfg, blk, x):
+    """Full-sequence Mamba via the Pallas scan. x: [S, D]."""
+    s, d = x.shape
+    h = rmsnorm(x, blk["norm"])
+    xm, z, dt, b, c = _mamba_proj(cfg, blk, h)
+    # Causal depthwise conv over the sequence.
+    conv_in = jnp.pad(xm, ((cfg.d_conv - 1, 0), (0, 0)))
+    xc = sum(
+        conv_in[i : i + s] * blk["conv"][i][None, :] for i in range(cfg.d_conv)
+    )
+    xc = silu(xc)
+    a = -jnp.exp(blk["a_log"])
+    y, h_final = mamba_scan.selective_scan(xc, dt, a, b, c)
+    y = y * silu(z)
+    out = x + y @ blk["out"]
+    conv_state = conv_in[s : s + cfg.d_conv - 1]  # last d_conv-1 inputs
+    # conv state must be the last (d_conv-1) xm rows:
+    conv_state = xm[s - (cfg.d_conv - 1) :]
+    return out, quantize(h_final), quantize(conv_state)
+
+
+def mamba_decode(cfg, blk, x, h_state, conv_state):
+    """Single-token Mamba step. x: [D], h_state [DI,N], conv [K-1,DI]."""
+    h = rmsnorm(x, blk["norm"])
+    xm, z, dt, b, c = _mamba_proj(cfg, blk, h)
+    window = jnp.concatenate([conv_state, xm[None, :]], axis=0)  # [K, DI]
+    xc = silu((window * blk["conv"]).sum(axis=0))
+    a = -jnp.exp(blk["a_log"])
+    y, h2 = ref.selective_scan_step(h_state, xc, dt, a, b, c)
+    y = y * silu(z)
+    out = x + y @ blk["out"]
+    return out, quantize(h2), quantize(window[1:])
+
+
+def moe_block(cfg, blk, x):
+    """Top-k MoE; dense evaluation of all experts (tiny sizes). x: [.., D]."""
+    h = rmsnorm(x, blk["norm"])
+    gate_logits = h @ blk["router"]  # [.., E]
+    gates = jax.nn.softmax(gate_logits, axis=-1)
+    # Top-k mask.
+    thresh = jnp.sort(gates, axis=-1)[..., -cfg.top_k][..., None]
+    mask = gates >= thresh
+    gates = jnp.where(mask, gates, 0.0)
+    gates = gates / gates.sum(axis=-1, keepdims=True)
+    # Dense expert evaluation: y_e = (silu(h w1_e) * (h w3_e)) w2_e.
+    hh = jnp.einsum("...d,edf->...ef", h, blk["w1"])
+    gg = jnp.einsum("...d,edf->...ef", h, blk["w3"])
+    yy = silu(hh) * gg
+    y = jnp.einsum("...ef,efd->...ed", yy, blk["w2"])
+    y = (y * gates[..., None]).sum(axis=-2)
+    return x + y
+
+
+def mlp_block(cfg, blk, x):
+    h = rmsnorm(x, blk["norm"])
+    y = (silu(h @ blk["w1"]) * (h @ blk["w3"])) @ blk["w2"]
+    return x + y
+
+
+# --- full model ------------------------------------------------------------
+
+
+def prefill(cfg: TinyConfig, params, tokens):
+    """Prefill over `tokens` [SEQ_IN] i32.
+
+    Returns (logits [vocab], acts [L, SEQ_IN, D], kv [A,2,MAX_SEQ,KVDIM],
+             ssm [M,DI,N], conv [M,K-1,DI]) — every tensor bf16-quantized.
+    """
+    x = params["embed"][tokens]  # [S, D]
+    acts = []
+    kvs = []
+    ssms = []
+    convs = []
+    for kind, blk in zip(cfg.blocks, params["blocks"]):
+        if kind == "attention":
+            x, kv = attn_prefill(cfg, blk, x)
+            pad = jnp.zeros((2, MAX_SEQ - SEQ_IN, cfg.kv_dim), jnp.float32)
+            kvs.append(jnp.concatenate([kv, pad], axis=1))
+        elif kind == "mamba":
+            x, h_final, conv_state = mamba_prefill(cfg, blk, x)
+            ssms.append(h_final)
+            convs.append(conv_state)
+        elif kind == "moe":
+            x = moe_block(cfg, blk, x)
+        else:
+            x = mlp_block(cfg, blk, x)
+        x = quantize(x)
+        acts.append(x)
+    x = rmsnorm(x, params["final_norm"])
+    logits = x[-1] @ params["embed"].T
+    return (
+        quantize(logits),
+        jnp.stack(acts, axis=0),
+        jnp.stack(kvs, axis=0) if kvs else jnp.zeros((0, 2, MAX_SEQ, cfg.kv_dim)),
+        jnp.stack(ssms, axis=0) if ssms else jnp.zeros((0, max(cfg.d_inner, 1), max(cfg.d_state, 1))),
+        jnp.stack(convs, axis=0) if convs else jnp.zeros((0, max(cfg.d_conv - 1, 1), max(cfg.d_inner, 1))),
+    )
+
+
+def decode_step(cfg: TinyConfig, params, token, pos, kv, ssm, conv):
+    """One decode step.
+
+    token: i32[], pos: i32[] (absolute position), caches as from prefill.
+    Returns (logits, acts [L, D], kv', ssm', conv').
+    """
+    x = params["embed"][token]  # [D]
+    acts = []
+    ai = 0
+    mi = 0
+    kv_out = kv
+    ssm_out = ssm
+    conv_out = conv
+    for kind, blk in zip(cfg.blocks, params["blocks"]):
+        if kind == "attention":
+            x, new_kv = attn_decode(cfg, blk, x, kv_out[ai], pos)
+            kv_out = kv_out.at[ai].set(new_kv)
+            ai += 1
+        elif kind == "mamba":
+            x, h2, c2 = mamba_decode(cfg, blk, x, ssm_out[mi], conv_out[mi])
+            ssm_out = ssm_out.at[mi].set(h2)
+            conv_out = conv_out.at[mi].set(c2)
+            mi += 1
+        elif kind == "moe":
+            x = moe_block(cfg, blk, x)
+        else:
+            x = mlp_block(cfg, blk, x)
+        x = quantize(x)
+        acts.append(x)
+    x = rmsnorm(x, params["final_norm"])
+    logits = x @ params["embed"].T
+    return quantize(logits), jnp.stack(acts, axis=0), kv_out, ssm_out, conv_out

@@ -1,0 +1,118 @@
+"""AOT round-trip: HLO text parses back and reproduces jax numerics.
+
+This is the build-time guarantee that the Rust runtime (which loads the
+same text through xla_extension's parser) sees correct weights — large
+constants must survive `as_hlo_text(print_large_constants=True)`.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import aot
+from compile import model as M
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+_CLIENT = None
+
+
+def _client():
+    global _CLIENT
+    if _CLIENT is None:
+        _CLIENT = xc.make_cpu_client()
+    return _CLIENT
+
+
+def _roundtrip_execute(hlo_text, args):
+    """Parse HLO text (the same parser the rust runtime's xla_extension
+    uses) → stablehlo → compile → execute on the PJRT CPU client."""
+    import jaxlib._jax as jx
+
+    client = _client()
+    mod = xc._xla.hlo_module_from_text(hlo_text)
+    shlo = xc._xla.mlir.hlo_to_stablehlo(mod.as_serialized_hlo_module_proto())
+    exe = client.compile_and_load(shlo, jx.DeviceList(tuple(client.devices()[:1])))
+    bufs = [client.buffer_from_pyval(np.asarray(a)) for a in args]
+    out = exe.execute(bufs)
+    flat = []
+    for o in out:
+        if isinstance(o, (list, tuple)):
+            flat.extend(np.asarray(x) for x in o)
+        else:
+            flat.append(np.asarray(o))
+    return flat
+
+
+def test_text_roundtrip_small_function():
+    def fn(x):
+        w = jnp.arange(16.0, dtype=jnp.float32).reshape(4, 4)
+        return (x @ w + 1.0,)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((4, 4), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    x = np.random.default_rng(0).normal(size=(4, 4)).astype(np.float32)
+    got = _roundtrip_execute(text, [x])
+    expect = np.asarray(fn(jnp.asarray(x))[0])
+    np.testing.assert_allclose(got[0], expect, atol=1e-6)
+
+
+@pytest.mark.parametrize("name", ["jamba", "zamba", "qwen"])
+def test_prefill_artifact_matches_jax(name):
+    path = os.path.join(ARTIFACTS, f"{name}_prefill.hlo.txt")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    cfg, params, prefill_fn, _ = aot.build_model(name, seed=0)
+    tokens = np.asarray((np.arange(M.SEQ_IN) * 3) % cfg.vocab, dtype=np.int32)
+    expect = [np.asarray(o) for o in prefill_fn(jnp.asarray(tokens))]
+    got = _roundtrip_execute(open(path).read(), [tokens])
+    assert len(got) == len(expect)
+    for g, e in zip(got, expect):
+        # The text path and the direct path fuse dots differently; one-ulp
+        # f32 differences flip bf16 buckets after quantize(), so compare at
+        # bf16 granularity (immaterial for exponent statistics).
+        np.testing.assert_allclose(g, e, atol=0.05, rtol=0.05)
+        if g.size > 0:
+            exact = np.mean(g == e)
+            assert exact > 0.2, f"only {exact:.2%} exactly equal"
+
+
+@pytest.mark.parametrize("name", ["jamba"])
+def test_decode_artifact_matches_jax(name):
+    path = os.path.join(ARTIFACTS, f"{name}_decode.hlo.txt")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    cfg, params, prefill_fn, decode_fn = aot.build_model(name, seed=0)
+    tokens = jnp.zeros((M.SEQ_IN,), jnp.int32)
+    logits, acts, kv, ssm, conv = prefill_fn(tokens)
+    tok = np.asarray(jnp.argmax(logits), dtype=np.int32)
+    pos = np.asarray(M.SEQ_IN, dtype=np.int32)
+    expect = [
+        np.asarray(o)
+        for o in decode_fn(jnp.asarray(tok), jnp.asarray(pos), kv, ssm, conv)
+    ]
+    got = _roundtrip_execute(
+        open(path).read(),
+        [tok, pos, np.asarray(kv), np.asarray(ssm), np.asarray(conv)],
+    )
+    for g, e in zip(got, expect):
+        np.testing.assert_allclose(g, e, atol=0.05, rtol=0.05)
+
+
+def test_manifest_consistent():
+    man = os.path.join(ARTIFACTS, "manifest.json")
+    if not os.path.exists(man):
+        pytest.skip("artifacts not built")
+    import json
+
+    m = json.load(open(man))
+    for name, entry in m.items():
+        assert entry["seq_in"] == M.SEQ_IN
+        assert os.path.exists(os.path.join(ARTIFACTS, entry["prefill"]["file"]))
+        assert os.path.exists(os.path.join(ARTIFACTS, entry["decode"]["file"]))
+        assert entry["prefill"]["output_names"][0] == "logits"

@@ -1,0 +1,186 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracles (pytest + hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as attn_k
+from compile.kernels import exp_hist, mamba_scan, ref
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def _rand_qkv(rng, sq, sk, h, d, dtype):
+    q = jnp.asarray(rng.normal(size=(sq, h, d)), dtype=dtype)
+    k = jnp.asarray(rng.normal(size=(sk, h, d)), dtype=dtype)
+    v = jnp.asarray(rng.normal(size=(sk, h, d)), dtype=dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("sq,sk", [(32, 32), (64, 64), (128, 128), (32, 96)])
+@pytest.mark.parametrize("h,d", [(1, 16), (4, 32), (2, 64)])
+def test_attention_matches_ref(sq, sk, h, d):
+    rng = np.random.default_rng(sq * 1000 + sk + h * 7 + d)
+    q, k, v = _rand_qkv(rng, sq, sk, h, d, jnp.float32)
+    out = attn_k.attention(q, k, v)
+    expect = ref.attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5, rtol=2e-5)
+
+
+def test_attention_causality():
+    # Output at position t must not depend on k/v beyond t.
+    rng = np.random.default_rng(0)
+    q, k, v = _rand_qkv(rng, 64, 64, 2, 32, jnp.float32)
+    base = attn_k.attention(q, k, v)
+    k2 = k.at[40:].set(999.0)
+    v2 = v.at[40:].set(-999.0)
+    pert = attn_k.attention(q, k2, v2)
+    np.testing.assert_allclose(
+        np.asarray(base[:40]), np.asarray(pert[:40]), atol=1e-5
+    )
+
+
+def test_attention_bf16_inputs():
+    rng = np.random.default_rng(3)
+    q, k, v = _rand_qkv(rng, 32, 32, 2, 32, jnp.bfloat16)
+    out = attn_k.attention(q, k, v)
+    expect = ref.attention(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(out, dtype=np.float32),
+        np.asarray(expect, dtype=np.float32),
+        atol=3e-2,
+        rtol=3e-2,
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    sq_blocks=st.integers(1, 3),
+    h=st.integers(1, 4),
+    d=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_hypothesis(sq_blocks, h, d, seed):
+    sq = 32 * sq_blocks
+    rng = np.random.default_rng(seed)
+    q, k, v = _rand_qkv(rng, sq, sq, h, d, jnp.float32)
+    out = attn_k.attention(q, k, v)
+    expect = ref.attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# selective scan
+# ---------------------------------------------------------------------------
+
+
+def _rand_scan(rng, s, di, n, dtype=jnp.float32):
+    x = jnp.asarray(rng.normal(size=(s, di)), dtype=dtype)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(s, di)), dtype=dtype)
+    a = jnp.asarray(-rng.uniform(0.3, 2.0, size=(di, n)), dtype=jnp.float32)
+    b = jnp.asarray(rng.normal(size=(s, n)), dtype=dtype)
+    c = jnp.asarray(rng.normal(size=(s, n)), dtype=dtype)
+    return x, dt, a, b, c
+
+
+@pytest.mark.parametrize("s,di,n", [(8, 128, 8), (16, 128, 16), (32, 256, 16)])
+def test_scan_matches_ref(s, di, n):
+    rng = np.random.default_rng(s + di + n)
+    x, dt, a, b, c = _rand_scan(rng, s, di, n)
+    y1, h1 = mamba_scan.selective_scan(x, dt, a, b, c)
+    y2, h2 = ref.selective_scan(x, dt, a, b, c)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-5, rtol=1e-5)
+
+
+def test_scan_step_consistency():
+    # Running the step oracle S times must equal the full scan.
+    rng = np.random.default_rng(9)
+    s, di, n = 12, 128, 8
+    x, dt, a, b, c = _rand_scan(rng, s, di, n)
+    y_full, h_full = mamba_scan.selective_scan(x, dt, a, b, c)
+    h = jnp.zeros((di, n), jnp.float32)
+    ys = []
+    for t in range(s):
+        y, h = ref.selective_scan_step(h, x[t], dt[t], a, b[t], c[t])
+        ys.append(y)
+    np.testing.assert_allclose(
+        np.asarray(jnp.stack(ys)), np.asarray(y_full), atol=1e-5, rtol=1e-5
+    )
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_full), atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    s=st.sampled_from([4, 8, 24]),
+    di_mult=st.integers(1, 2),
+    n=st.sampled_from([4, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_scan_hypothesis(s, di_mult, n, seed):
+    di = 128 * di_mult
+    rng = np.random.default_rng(seed)
+    x, dt, a, b, c = _rand_scan(rng, s, di, n)
+    y1, h1 = mamba_scan.selective_scan(x, dt, a, b, c)
+    y2, h2 = ref.selective_scan(x, dt, a, b, c)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-5, rtol=2e-5)
+
+
+def test_scan_state_decays():
+    # With negative a and positive dt, an impulse decays — no blow-ups.
+    rng = np.random.default_rng(4)
+    x, dt, a, b, c = _rand_scan(rng, 64, 128, 8)
+    y, h = mamba_scan.selective_scan(x, dt, a, b, c)
+    assert np.isfinite(np.asarray(y)).all()
+    assert np.isfinite(np.asarray(h)).all()
+
+
+# ---------------------------------------------------------------------------
+# exponent histogram
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 100, 2048, 5000])
+def test_hist_matches_ref(n):
+    rng = np.random.default_rng(n)
+    bits = jnp.asarray(rng.integers(0, 65536, size=n), dtype=jnp.int32)
+    h1 = exp_hist.exponent_histogram(bits)
+    h2 = ref.exponent_histogram(bits)
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+    assert int(h1.sum()) == n
+
+
+def test_hist_counts_real_bf16_exponents():
+    vals = jnp.asarray(np.random.default_rng(1).normal(0, 0.02, 4096), jnp.bfloat16)
+    bits = jnp.asarray(np.asarray(vals).view(np.uint16), jnp.int32)
+    h = exp_hist.exponent_histogram(bits)
+    # Gaussian σ=0.02: all exponents well below 127 (values < 1).
+    assert int(h[128:].sum()) == 0
+    assert int(h.sum()) == 4096
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 4096), seed=st.integers(0, 2**31 - 1))
+def test_hist_hypothesis(n, seed):
+    rng = np.random.default_rng(seed)
+    bits = jnp.asarray(rng.integers(0, 65536, size=n), dtype=jnp.int32)
+    h1 = exp_hist.exponent_histogram(bits)
+    h2 = ref.exponent_histogram(bits)
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+
+
+# ---------------------------------------------------------------------------
+# structural perf estimates (DESIGN.md §Perf)
+# ---------------------------------------------------------------------------
+
+
+def test_perf_estimates_within_vmem():
+    from compile import perf_estimate as pe
+
+    for r in [pe.attention_report(), pe.attention_report(bq=128, bk=128, d=128, seq=1024), pe.scan_report()]:
+        assert r["vmem_pct"] < 50.0, r
+        assert r["arith_intensity"] > 0

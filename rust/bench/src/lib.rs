@@ -1,0 +1,188 @@
+//! # lexi-bench — minimal benchmark harness and table rendering
+//!
+//! `criterion` is not in the offline crate set, so the paper-reproduction
+//! benches use this harness: warmup + repeated timed runs with
+//! min/median/mean/max statistics, plus markdown table rendering shared
+//! by the benches and the CLI (every table/figure regenerator prints the
+//! same row layout the paper uses).
+
+use std::time::{Duration, Instant};
+
+/// Result of timing one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub name: String,
+    pub runs: Vec<Duration>,
+}
+
+impl Timing {
+    /// Fastest run.
+    pub fn min(&self) -> Duration {
+        self.runs.iter().min().copied().unwrap_or_default()
+    }
+
+    /// Slowest run.
+    pub fn max(&self) -> Duration {
+        self.runs.iter().max().copied().unwrap_or_default()
+    }
+
+    /// Median run.
+    pub fn median(&self) -> Duration {
+        let mut v = self.runs.clone();
+        v.sort();
+        v.get(v.len() / 2).copied().unwrap_or_default()
+    }
+
+    /// Mean run.
+    pub fn mean(&self) -> Duration {
+        if self.runs.is_empty() {
+            return Duration::ZERO;
+        }
+        self.runs.iter().sum::<Duration>() / self.runs.len() as u32
+    }
+
+    /// Throughput for `items` processed per run.
+    pub fn throughput(&self, items: u64) -> f64 {
+        let s = self.median().as_secs_f64();
+        if s == 0.0 {
+            f64::INFINITY
+        } else {
+            items as f64 / s
+        }
+    }
+}
+
+/// Time `f` with `warmup` unmeasured and `runs` measured iterations.
+pub fn bench<T>(name: &str, warmup: usize, runs: usize, mut f: impl FnMut() -> T) -> Timing {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut timings = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        timings.push(t0.elapsed());
+    }
+    Timing {
+        name: name.to_string(),
+        runs: timings,
+    }
+}
+
+/// A markdown-ish table builder with right-aligned numeric columns.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Start a table with the given column headers.
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (stringified cells).
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let cols = self.headers.len();
+        let mut width = vec![0usize; cols];
+        for (i, h) in self.headers.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], width: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(width) {
+                line.push_str(&format!(" {:>w$} |", c, w = w));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &width));
+        out.push('|');
+        for w in &width {
+            out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &width));
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a nanosecond count human-readably.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.2} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.2} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.2} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+/// Format a ratio like the paper's tables (`3.14×`).
+pub fn fmt_ratio(r: f64) -> String {
+    format!("{r:.2}×")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_stats() {
+        let t = bench("x", 1, 10, || std::hint::black_box(1 + 1));
+        assert_eq!(t.runs.len(), 10);
+        assert!(t.min() <= t.median());
+        assert!(t.median() <= t.max());
+    }
+
+    #[test]
+    fn table_render_aligns() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(vec!["a".into(), "1.0".into()]);
+        t.row(vec!["long-name".into(), "123.45".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+    }
+
+    #[test]
+    fn format_helpers() {
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e9), "2.50 s");
+        assert_eq!(fmt_ratio(3.14159), "3.14×");
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

@@ -1,0 +1,213 @@
+//! Base–Delta–Immediate baseline (paper Table 2, ref. Pekhimenko et al.
+//! [30]), specialized to 8-bit exponent streams.
+//!
+//! Each fixed-size block is encoded as a tag, an 8-bit base (the block's
+//! first value), and per-element deltas of the narrowest width in
+//! {0, 1, 2, 3, 4} bits that covers all deltas; blocks that fit no width
+//! fall back to raw bytes. The paper quotes "3-bit delta encoding" and a
+//! ~2.4× exponent CR; the adaptive widths reproduce that operating point
+//! on realistic exponent streams (3-bit is the commonly selected width).
+
+use crate::bitstream::{BitReader, BitWriter};
+use crate::error::{Error, Result};
+
+/// Elements per BDI block (cache-line-like granule).
+pub const BLOCK: usize = 32;
+/// Candidate delta widths; tag encodes the choice (plus raw fallback).
+/// The base is the block midrange, so width w covers a span of 2^w.
+const WIDTHS: [u32; 6] = [0, 1, 2, 3, 4, 5];
+const TAG_BITS: u32 = 3;
+const TAG_RAW: u64 = WIDTHS.len() as u64;
+
+/// A compressed BDI block stream.
+#[derive(Clone, Debug)]
+pub struct BdiBlock {
+    pub bytes: Vec<u8>,
+    pub bits: usize,
+    pub count: usize,
+}
+
+impl BdiBlock {
+    /// Compression ratio vs raw 8-bit symbols.
+    pub fn ratio(&self) -> f64 {
+        (self.count as f64 * 8.0) / self.bits as f64
+    }
+}
+
+/// The base minimizing the needed delta width: the block midrange.
+fn pick_base(block: &[u8]) -> u8 {
+    let min = *block.iter().min().expect("non-empty block");
+    let max = *block.iter().max().expect("non-empty block");
+    min + (max - min) / 2
+}
+
+/// Narrowest width (index into WIDTHS) covering all signed deltas from
+/// `base`, or None if even the widest is insufficient.
+fn pick_width(block: &[u8], base: u8) -> Option<usize> {
+    let mut need: u32 = 0;
+    let widest = *WIDTHS.last().expect("non-empty widths");
+    for &v in block {
+        let d = v as i16 - base as i16; // in [-255, 255]
+        let w = signed_width(d);
+        need = need.max(w);
+        if need > widest {
+            return None;
+        }
+    }
+    WIDTHS.iter().position(|&w| w >= need)
+}
+
+/// Bits needed to store `d` in two's complement.
+fn signed_width(d: i16) -> u32 {
+    if d == 0 {
+        0
+    } else if d > 0 {
+        16 - (d as u16).leading_zeros() + 1
+    } else {
+        16 - ((-(d as i32) - 1) as u16).leading_zeros() + 1
+    }
+}
+
+/// Compress a byte stream with adaptive-width BDI.
+pub fn compress(data: &[u8]) -> BdiBlock {
+    let mut w = BitWriter::new();
+    w.put(data.len() as u64, 32);
+    for block in data.chunks(BLOCK) {
+        let base = pick_base(block);
+        match pick_width(block, base) {
+            Some(wi) => {
+                let width = WIDTHS[wi];
+                w.put(wi as u64, TAG_BITS);
+                w.put(base as u64, 8);
+                if width > 0 {
+                    for &v in block {
+                        let d = (v as i16 - base as i16) as u64 & ((1 << width) - 1);
+                        w.put(d, width);
+                    }
+                }
+            }
+            None => {
+                w.put(TAG_RAW, TAG_BITS);
+                for &v in block {
+                    w.put(v as u64, 8);
+                }
+            }
+        }
+    }
+    let bits = w.len_bits();
+    BdiBlock {
+        bytes: w.into_bytes(),
+        bits,
+        count: data.len(),
+    }
+}
+
+/// Decompress a BDI stream. Lossless inverse of [`compress`].
+pub fn decompress(block: &BdiBlock) -> Result<Vec<u8>> {
+    let mut r = BitReader::with_len(&block.bytes, block.bits);
+    let count = r.get(32)? as usize;
+    let mut out = Vec::with_capacity(count);
+    while out.len() < count {
+        let n = (count - out.len()).min(BLOCK);
+        let tag = r.get(TAG_BITS)?;
+        if tag == TAG_RAW {
+            for _ in 0..n {
+                out.push(r.get(8)? as u8);
+            }
+        } else {
+            let width = *WIDTHS
+                .get(tag as usize)
+                .ok_or(Error::InvalidCodeword { offset: r.pos() })?;
+            let base = r.get(8)? as i16;
+            if width == 0 {
+                for _ in 0..n {
+                    out.push(base as u8);
+                }
+            } else {
+                for _ in 0..n {
+                    let raw = r.get(width)?;
+                    // Sign-extend.
+                    let shift = 64 - width;
+                    let d = ((raw << shift) as i64) >> shift;
+                    out.push((base + d as i16) as u8);
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Pure coding ratio (header excluded), as Table 2 reports.
+pub fn coding_ratio(data: &[u8]) -> f64 {
+    if data.is_empty() {
+        return 1.0;
+    }
+    let block = compress(data);
+    (data.len() as f64 * 8.0) / (block.bits as f64 - 32.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::check;
+
+    #[test]
+    fn constant_block_uses_zero_width() {
+        let data = vec![100u8; BLOCK * 4];
+        // 4 blocks × (3 tag + 8 base) = 44 bits.
+        let b = compress(&data);
+        assert_eq!(b.bits, 32 + 4 * 11);
+        assert_eq!(decompress(&b).unwrap(), data);
+    }
+
+    #[test]
+    fn narrow_deltas_give_paper_band() {
+        // Exponents within ±3 of a base → 3-bit deltas → CR ≈ 8/3-ish.
+        let data: Vec<u8> = (0..32 * 100).map(|i| 120 + (i % 7) as u8).collect();
+        let r = coding_ratio(&data);
+        assert!((1.8..2.8).contains(&r), "ratio {r}");
+        let b = compress(&data);
+        assert_eq!(decompress(&b).unwrap(), data);
+    }
+
+    #[test]
+    fn wide_blocks_fall_back_to_raw() {
+        let data: Vec<u8> = (0..BLOCK as u32 * 4).map(|i| (i * 67) as u8).collect();
+        let b = compress(&data);
+        assert_eq!(decompress(&b).unwrap(), data);
+        let r = coding_ratio(&data);
+        assert!(r < 1.05, "ratio {r}");
+    }
+
+    #[test]
+    fn tail_block_shorter_than_32() {
+        let data: Vec<u8> = (0..45).map(|i| 100 + (i % 3) as u8).collect();
+        let b = compress(&data);
+        assert_eq!(decompress(&b).unwrap(), data);
+    }
+
+    #[test]
+    fn prop_roundtrip() {
+        check("bdi roundtrip", 200, |g| {
+            let n = g.usize(1..3000);
+            let data = if g.bool(0.6) {
+                { let a = g.usize(1..16); g.skewed_bytes(n, a) }
+            } else {
+                g.vec(n, |g| g.u8())
+            };
+            let b = compress(&data);
+            assert_eq!(decompress(&b).unwrap(), data);
+        });
+    }
+
+    #[test]
+    fn signed_width_cases() {
+        assert_eq!(signed_width(0), 0);
+        assert_eq!(signed_width(1), 2);
+        assert_eq!(signed_width(-1), 1);
+        assert_eq!(signed_width(3), 3);
+        assert_eq!(signed_width(-4), 3);
+        assert_eq!(signed_width(7), 4);
+        assert_eq!(signed_width(-8), 4);
+    }
+}

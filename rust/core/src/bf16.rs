@@ -1,0 +1,250 @@
+//! BF16 (bfloat16) representation and field extraction.
+//!
+//! BF16 is the upper 16 bits of an IEEE-754 binary32:
+//! `{sign:1, exponent:8, mantissa:7}`. LEXI never alters the numeric
+//! semantics — it only transports the three fields separately, with the
+//! exponent entropy-coded. This module is the single source of truth for
+//! that field split (paper §3.1).
+
+/// A bfloat16 value stored as its raw 16-bit pattern.
+///
+/// The wrapper is deliberately transparent: the codecs operate on the bit
+/// pattern, and numeric conversions exist only for test oracles and
+/// profiling.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    /// Number of exponent bits in BF16 (same as FP32 — full dynamic range).
+    pub const EXP_BITS: u32 = 8;
+    /// Number of mantissa bits.
+    pub const MANT_BITS: u32 = 7;
+
+    /// Truncating conversion from `f32` (round-toward-zero on the mantissa).
+    ///
+    /// Matches the "drop the low 16 bits" framing used when profiling; the
+    /// exponent field — all LEXI cares about — is identical under any
+    /// rounding mode except at exact power-of-two boundaries.
+    #[inline]
+    pub fn from_f32(x: f32) -> Self {
+        Bf16((x.to_bits() >> 16) as u16)
+    }
+
+    /// Round-to-nearest-even conversion from `f32` (what hardware matmul
+    /// units and `jnp.bfloat16` casts do).
+    #[inline]
+    pub fn from_f32_rne(x: f32) -> Self {
+        let bits = x.to_bits();
+        // NaN must stay NaN: force a quiet-NaN pattern rather than risking
+        // the rounding carry turning it into infinity.
+        if x.is_nan() {
+            return Bf16(((bits >> 16) as u16) | 0x0040);
+        }
+        let lsb = (bits >> 16) & 1;
+        let rounded = bits.wrapping_add(0x7fff + lsb);
+        Bf16((rounded >> 16) as u16)
+    }
+
+    /// Exact widening conversion to `f32`.
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+
+    /// Sign bit (0 or 1).
+    #[inline]
+    pub fn sign(self) -> u8 {
+        (self.0 >> 15) as u8
+    }
+
+    /// Biased 8-bit exponent field — the stream LEXI compresses.
+    #[inline]
+    pub fn exponent(self) -> u8 {
+        ((self.0 >> 7) & 0xff) as u8
+    }
+
+    /// 7-bit mantissa field (transmitted verbatim; ~full entropy per Fig 1a).
+    #[inline]
+    pub fn mantissa(self) -> u8 {
+        (self.0 & 0x7f) as u8
+    }
+
+    /// Reassemble a BF16 from its three fields. Inverse of the extractors.
+    #[inline]
+    pub fn from_fields(sign: u8, exponent: u8, mantissa: u8) -> Self {
+        debug_assert!(sign <= 1, "sign must be a single bit");
+        debug_assert!(mantissa <= 0x7f, "mantissa is 7 bits");
+        Bf16(((sign as u16) << 15) | ((exponent as u16) << 7) | (mantissa as u16 & 0x7f))
+    }
+}
+
+impl std::fmt::Debug for Bf16 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Bf16({:#06x} = {} | e={} m={:#04x})",
+            self.0,
+            self.to_f32(),
+            self.exponent(),
+            self.mantissa()
+        )
+    }
+}
+
+impl From<f32> for Bf16 {
+    fn from(x: f32) -> Self {
+        Bf16::from_f32_rne(x)
+    }
+}
+
+impl From<Bf16> for f32 {
+    fn from(x: Bf16) -> f32 {
+        x.to_f32()
+    }
+}
+
+/// The three field streams of a BF16 tensor, split for transport.
+///
+/// This is the logical payload of a LEXI transfer before entropy coding:
+/// signs and mantissas go verbatim, `exponents` is what the Huffman codec
+/// consumes.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FieldStreams {
+    pub signs: Vec<u8>,
+    pub exponents: Vec<u8>,
+    pub mantissas: Vec<u8>,
+}
+
+impl FieldStreams {
+    /// Split a BF16 slice into its per-field streams.
+    pub fn split(values: &[Bf16]) -> Self {
+        let mut s = FieldStreams {
+            signs: Vec::with_capacity(values.len()),
+            exponents: Vec::with_capacity(values.len()),
+            mantissas: Vec::with_capacity(values.len()),
+        };
+        for &v in values {
+            s.signs.push(v.sign());
+            s.exponents.push(v.exponent());
+            s.mantissas.push(v.mantissa());
+        }
+        s
+    }
+
+    /// Reassemble the original BF16 values. Lossless inverse of [`split`].
+    ///
+    /// [`split`]: FieldStreams::split
+    pub fn join(&self) -> Vec<Bf16> {
+        debug_assert_eq!(self.signs.len(), self.exponents.len());
+        debug_assert_eq!(self.signs.len(), self.mantissas.len());
+        self.signs
+            .iter()
+            .zip(&self.exponents)
+            .zip(&self.mantissas)
+            .map(|((&s, &e), &m)| Bf16::from_fields(s, e, m))
+            .collect()
+    }
+
+    /// Number of values.
+    pub fn len(&self) -> usize {
+        self.exponents.len()
+    }
+
+    /// True if the stream holds no values.
+    pub fn is_empty(&self) -> bool {
+        self.exponents.is_empty()
+    }
+}
+
+/// Extract only the exponent stream (the common profiling fast path).
+pub fn exponents_of(values: &[Bf16]) -> Vec<u8> {
+    values.iter().map(|v| v.exponent()).collect()
+}
+
+/// Interpret a little-endian byte buffer (e.g. a tensor fetched from PJRT)
+/// as BF16 values.
+pub fn bf16_from_le_bytes(bytes: &[u8]) -> Vec<Bf16> {
+    bytes
+        .chunks_exact(2)
+        .map(|c| Bf16(u16::from_le_bytes([c[0], c[1]])))
+        .collect()
+}
+
+/// Serialize BF16 values to little-endian bytes.
+pub fn bf16_to_le_bytes(values: &[Bf16]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(values.len() * 2);
+    for v in values {
+        out.extend_from_slice(&v.0.to_le_bytes());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn field_roundtrip_all_patterns() {
+        // Every 16-bit pattern must survive split→join exactly.
+        for bits in 0..=u16::MAX {
+            let v = Bf16(bits);
+            let r = Bf16::from_fields(v.sign(), v.exponent(), v.mantissa());
+            assert_eq!(v, r, "pattern {bits:#06x}");
+        }
+    }
+
+    #[test]
+    fn f32_widening_is_exact() {
+        for bits in [0u16, 0x3f80, 0xbf80, 0x7f80, 0xff80, 0x0001, 0x4049] {
+            let v = Bf16(bits);
+            assert_eq!(Bf16::from_f32(v.to_f32()), v);
+        }
+    }
+
+    #[test]
+    fn known_values() {
+        let one = Bf16::from_f32(1.0);
+        assert_eq!(one.sign(), 0);
+        assert_eq!(one.exponent(), 127);
+        assert_eq!(one.mantissa(), 0);
+
+        let neg_two = Bf16::from_f32(-2.0);
+        assert_eq!(neg_two.sign(), 1);
+        assert_eq!(neg_two.exponent(), 128);
+
+        let half = Bf16::from_f32(0.5);
+        assert_eq!(half.exponent(), 126);
+    }
+
+    #[test]
+    fn rne_rounds_to_nearest() {
+        // 1.0 + 2^-8 rounds down to 1.0 in bf16; 1.0 + 3*2^-9 rounds up.
+        let x = 1.0f32 + 2.0f32.powi(-9);
+        assert_eq!(Bf16::from_f32_rne(x).to_f32(), 1.0);
+        let y = 1.0f32 + 3.0 * 2.0f32.powi(-9);
+        assert!(Bf16::from_f32_rne(y).to_f32() > 1.0);
+    }
+
+    #[test]
+    fn rne_preserves_nan() {
+        let v = Bf16::from_f32_rne(f32::NAN);
+        assert!(v.to_f32().is_nan());
+    }
+
+    #[test]
+    fn streams_roundtrip() {
+        let vals: Vec<Bf16> = (0..1000u32)
+            .map(|i| Bf16::from_f32((i as f32 - 500.0) * 0.037))
+            .collect();
+        let s = FieldStreams::split(&vals);
+        assert_eq!(s.join(), vals);
+        assert_eq!(s.len(), vals.len());
+    }
+
+    #[test]
+    fn byte_roundtrip() {
+        let vals: Vec<Bf16> = (0..257u32).map(|i| Bf16(i as u16 * 251)).collect();
+        let bytes = bf16_to_le_bytes(&vals);
+        assert_eq!(bf16_from_le_bytes(&bytes), vals);
+    }
+}

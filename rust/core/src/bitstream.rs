@@ -1,0 +1,310 @@
+//! MSB-first bit-level writer/reader.
+//!
+//! All LEXI codecs serialize through this module. MSB-first ordering is
+//! chosen because canonical Huffman decode proceeds by numeric comparison
+//! of left-aligned code prefixes — the same convention the multi-stage LUT
+//! decoder hardware uses (paper §4.4).
+
+use crate::error::{Error, Result};
+
+/// Append-only bit writer.
+///
+/// Hot-path design (§Perf): bits accumulate MSB-first in a 64-bit
+/// register; whole bytes spill to the backing vec only when the register
+/// holds ≥ 8 bits. One `put` is a shift+or plus an amortized byte spill —
+/// no per-bit loop.
+#[derive(Clone, Debug, Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Pending bits, right-aligned.
+    acc: u64,
+    /// Number of valid bits in `acc` (always < 8 after `put`).
+    nbits: u32,
+}
+
+impl BitWriter {
+    /// New empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Total bits written so far.
+    #[inline]
+    pub fn len_bits(&self) -> usize {
+        self.buf.len() * 8 + self.nbits as usize
+    }
+
+    /// Write the low `n` bits of `value`, MSB first. `n` ≤ 56.
+    #[inline]
+    pub fn put(&mut self, value: u64, n: u32) {
+        debug_assert!(n <= 56, "put() supports up to 56 bits per call");
+        debug_assert!(n == 64 || value < (1u64 << n), "value {value} overflows {n} bits");
+        // nbits < 8 on entry, so nbits + n ≤ 63: no overflow.
+        self.acc = (self.acc << n) | value;
+        self.nbits += n;
+        while self.nbits >= 8 {
+            self.nbits -= 8;
+            self.buf.push((self.acc >> self.nbits) as u8);
+        }
+    }
+
+    /// Write a single bit.
+    #[inline]
+    pub fn put_bit(&mut self, bit: bool) {
+        self.put(bit as u64, 1);
+    }
+
+    /// Zero-pad to a byte boundary.
+    pub fn align_byte(&mut self) {
+        if self.nbits != 0 {
+            self.put(0, 8 - self.nbits);
+        }
+    }
+
+    /// Zero-pad so total length is a multiple of `n` bits (flit alignment).
+    pub fn pad_to_multiple(&mut self, n: usize) {
+        let len = self.len_bits();
+        let rem = len % n;
+        if rem != 0 {
+            let mut pad = n - rem;
+            while pad > 0 {
+                let chunk = pad.min(56) as u32;
+                self.put(0, chunk);
+                pad -= chunk as usize;
+            }
+        }
+    }
+
+    /// Consume the writer, returning the backing bytes (zero-padded tail).
+    pub fn into_bytes(mut self) -> Vec<u8> {
+        if self.nbits != 0 {
+            let pad = 8 - self.nbits;
+            self.buf.push((self.acc << pad) as u8);
+            self.nbits = 0;
+        }
+        self.buf
+    }
+
+    /// Borrow the whole bytes spilled so far (excludes a partial tail byte).
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+/// MSB-first bit reader over a byte slice.
+#[derive(Clone, Debug)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    /// Next bit offset.
+    pos: usize,
+    /// Total readable bits (callers may clamp below `buf.len()*8`).
+    len_bits: usize,
+}
+
+impl<'a> BitReader<'a> {
+    /// Reader over all bits of `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader {
+            buf,
+            pos: 0,
+            len_bits: buf.len() * 8,
+        }
+    }
+
+    /// Reader over the first `len_bits` bits of `buf`.
+    pub fn with_len(buf: &'a [u8], len_bits: usize) -> Self {
+        debug_assert!(len_bits <= buf.len() * 8);
+        BitReader {
+            buf,
+            pos: 0,
+            len_bits,
+        }
+    }
+
+    /// Current bit offset.
+    #[inline]
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Bits remaining.
+    #[inline]
+    pub fn remaining(&self) -> usize {
+        self.len_bits - self.pos
+    }
+
+    /// Read `n` bits MSB-first. Errors if the stream is exhausted.
+    #[inline]
+    pub fn get(&mut self, n: u32) -> Result<u64> {
+        if (n as usize) > self.remaining() {
+            return Err(Error::BitstreamExhausted {
+                offset: self.pos,
+                needed: n as usize - self.remaining(),
+            });
+        }
+        let v = self.peek_unchecked(n);
+        self.pos += n as usize;
+        Ok(v)
+    }
+
+    /// Read a single bit.
+    #[inline]
+    pub fn get_bit(&mut self) -> Result<bool> {
+        Ok(self.get(1)? == 1)
+    }
+
+    /// Peek up to `n` bits without consuming; if fewer remain, the result is
+    /// left-aligned as if the stream were zero-extended. Used by the LUT
+    /// decoder model, which always latches a full window.
+    #[inline]
+    pub fn peek_zeroext(&self, n: u32) -> u64 {
+        let avail = self.remaining().min(n as usize) as u32;
+        let v = self.peek_unchecked(avail);
+        v << (n - avail)
+    }
+
+    /// Advance without reading (after a peek-based decode).
+    #[inline]
+    pub fn skip(&mut self, n: u32) -> Result<()> {
+        if (n as usize) > self.remaining() {
+            return Err(Error::BitstreamExhausted {
+                offset: self.pos,
+                needed: n as usize - self.remaining(),
+            });
+        }
+        self.pos += n as usize;
+        Ok(())
+    }
+
+    #[inline]
+    fn peek_unchecked(&self, n: u32) -> u64 {
+        debug_assert!(n <= 57, "peek window limited by the u64 gather");
+        if n == 0 {
+            return 0;
+        }
+        let byte = self.pos / 8;
+        let bit = (self.pos % 8) as u32;
+        // Fast path (§Perf): one unaligned big-endian u64 load covers the
+        // window whenever ≥8 bytes remain; the tail falls back to a gather.
+        let window = if byte + 8 <= self.buf.len() {
+            let arr: [u8; 8] = self.buf[byte..byte + 8]
+                .try_into()
+                .expect("slice is 8 bytes");
+            u64::from_be_bytes(arr)
+        } else {
+            let mut w = 0u64;
+            for i in 0..8 {
+                let b = *self.buf.get(byte + i).unwrap_or(&0) as u64;
+                w = (w << 8) | b;
+            }
+            w
+        };
+        (window << bit) >> (64 - n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::check;
+
+    #[test]
+    fn roundtrip_simple() {
+        let mut w = BitWriter::new();
+        w.put(0b101, 3);
+        w.put(0xff, 8);
+        w.put(0, 1);
+        w.put(0b11, 2);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get(3).unwrap(), 0b101);
+        assert_eq!(r.get(8).unwrap(), 0xff);
+        assert_eq!(r.get(1).unwrap(), 0);
+        assert_eq!(r.get(2).unwrap(), 0b11);
+    }
+
+    #[test]
+    fn len_bits_counts() {
+        let mut w = BitWriter::new();
+        assert_eq!(w.len_bits(), 0);
+        w.put(1, 1);
+        assert_eq!(w.len_bits(), 1);
+        w.put(0, 7);
+        assert_eq!(w.len_bits(), 8);
+        w.put(0x1ff, 9);
+        assert_eq!(w.len_bits(), 17);
+    }
+
+    #[test]
+    fn pad_to_multiple_pads() {
+        let mut w = BitWriter::new();
+        w.put(1, 5);
+        w.pad_to_multiple(128);
+        assert_eq!(w.len_bits(), 128);
+        w.put(1, 1);
+        w.pad_to_multiple(128);
+        assert_eq!(w.len_bits(), 256);
+    }
+
+    #[test]
+    fn exhaustion_is_reported() {
+        let bytes = [0xabu8];
+        let mut r = BitReader::new(&bytes);
+        r.get(5).unwrap();
+        let err = r.get(5).unwrap_err();
+        assert!(matches!(err, Error::BitstreamExhausted { .. }));
+    }
+
+    #[test]
+    fn peek_zeroext_pads_with_zeros() {
+        let bytes = [0b1010_0000u8];
+        let mut r = BitReader::new(&bytes);
+        r.skip(4).unwrap();
+        // 4 bits remain (0000); peeking 8 zero-extends.
+        assert_eq!(r.peek_zeroext(8), 0);
+        let bytes2 = [0b1111_1111u8];
+        let mut r2 = BitReader::new(&bytes2);
+        r2.skip(4).unwrap();
+        assert_eq!(r2.peek_zeroext(8), 0b1111_0000);
+    }
+
+    #[test]
+    fn prop_roundtrip_random_fields() {
+        check("bitstream roundtrip", 200, |g| {
+            let n = g.usize(1..200);
+            let fields: Vec<(u64, u32)> = (0..n)
+                .map(|_| {
+                    let bits = g.usize(1..33) as u32;
+                    let val = g.u64(0..1u64 << bits);
+                    (val, bits)
+                })
+                .collect();
+            let mut w = BitWriter::new();
+            for &(v, b) in &fields {
+                w.put(v, b);
+            }
+            let total = w.len_bits();
+            let bytes = w.into_bytes();
+            let mut r = BitReader::with_len(&bytes, total);
+            for &(v, b) in &fields {
+                assert_eq!(r.get(b).unwrap(), v);
+            }
+            assert_eq!(r.remaining(), 0);
+        });
+    }
+
+    #[test]
+    fn prop_peek_matches_get() {
+        check("peek==get", 100, |g| {
+            let bytes = g.vec(32, |g| g.u8());
+            let mut r1 = BitReader::new(&bytes);
+            let mut r2 = BitReader::new(&bytes);
+            while r1.remaining() >= 16 {
+                let n = g.usize(1..17) as u32;
+                let peeked = r1.peek_zeroext(n);
+                assert_eq!(peeked, r2.get(n).unwrap());
+                r1.skip(n).unwrap();
+            }
+        });
+    }
+}

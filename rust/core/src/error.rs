@@ -1,0 +1,34 @@
+//! Error type shared by the lexi-core codecs.
+
+use thiserror::Error;
+
+/// Errors produced by the software codecs.
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum Error {
+    /// The bitstream ended in the middle of a codeword or field.
+    #[error("bitstream exhausted: needed {needed} more bits at offset {offset}")]
+    BitstreamExhausted { offset: usize, needed: usize },
+
+    /// A decoded codeword does not exist in the codebook.
+    #[error("invalid codeword at bit offset {offset}")]
+    InvalidCodeword { offset: usize },
+
+    /// Codebook construction was handed an empty histogram.
+    #[error("cannot build a codebook from an empty histogram")]
+    EmptyHistogram,
+
+    /// Codebook (de)serialization failed.
+    #[error("malformed codebook header: {0}")]
+    MalformedCodebook(String),
+
+    /// Flit parsing failed.
+    #[error("malformed flit: {0}")]
+    MalformedFlit(String),
+
+    /// A parameter is outside its supported range.
+    #[error("invalid parameter: {0}")]
+    InvalidParameter(String),
+}
+
+/// Result alias for lexi-core operations.
+pub type Result<T> = std::result::Result<T, Error>;

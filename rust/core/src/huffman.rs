@@ -1,0 +1,797 @@
+//! Canonical Huffman coding over the BF16 exponent alphabet — the LEXI
+//! algorithm (paper §4.2–§4.4), software reference implementation.
+//!
+//! Key properties mirrored from the paper's hardware design:
+//!
+//! * The primary alphabet is capped at **32 symbols** (profiling shows fewer
+//!   than 32 distinct exponents in practice); rarer exponents go through a
+//!   reserved **escape code** followed by the raw 8-bit exponent.
+//! * The escape codeword is the **all-ones** code — in a canonical complete
+//!   prefix code, the numerically-last codeword of the maximum length is a
+//!   run of ones, so placing ESC last in canonical order yields it
+//!   construction-free. The paper quotes a 24-bit worst-case escape; we
+//!   enforce this by building **length-limited** codes (package–merge) with
+//!   `max_len = 24`.
+//! * Codebooks are per-layer and piggybacked: a compact header (symbol,
+//!   length) list prefixes each compressed stream, enough for the receiver
+//!   to rebuild the identical canonical code.
+
+use crate::bitstream::{BitReader, BitWriter};
+use crate::error::{Error, Result};
+use crate::stats::Histogram;
+
+/// Default alphabet cap (paper §4.2.2: "the primary pipeline is designed
+/// for this 32-entry range").
+pub const MAX_SYMBOLS: usize = 32;
+/// Default maximum code length (paper §4.2.2: reserved 24-bit escape).
+pub const MAX_CODE_LEN: u32 = 24;
+
+/// Symbol id reserved for the escape code in canonical pair listings.
+pub const ESC_SYMBOL: u16 = 256;
+/// Internal alias.
+const ESC: u16 = ESC_SYMBOL;
+
+/// One assigned codeword.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Code {
+    /// Right-aligned code bits.
+    pub bits: u32,
+    /// Code length in bits (1..=MAX_CODE_LEN).
+    pub len: u32,
+}
+
+/// A canonical Huffman codebook over ≤32 exponent symbols plus ESC.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CodeBook {
+    /// Per-exponent codes; `None` means "encode via escape".
+    codes: [Option<Code>; 256],
+    /// The escape codeword (all ones at its length).
+    esc: Code,
+    /// (symbol, len) pairs in canonical order, for serialization.
+    canonical: Vec<(u16, u32)>,
+    /// §Perf: per-exponent packed `(wire bits, wire length)` with the
+    /// escape + raw byte pre-folded, so the encode hot loop is a single
+    /// indexed `put`.
+    packed: [(u64, u32); 256],
+}
+
+impl CodeBook {
+    /// Build a length-limited canonical codebook from an exponent histogram.
+    ///
+    /// The `max_symbols` most frequent exponents get dedicated codes; all
+    /// others use ESC + 8 raw bits. ESC participates in the tree with a
+    /// weight equal to the total escaped mass (or 1 if none), so its length
+    /// adapts to how often it is used.
+    pub fn from_histogram(hist: &Histogram, max_symbols: usize, max_len: u32) -> Result<Self> {
+        if hist.total == 0 {
+            return Err(Error::EmptyHistogram);
+        }
+        if max_symbols == 0 || max_symbols > 256 {
+            return Err(Error::InvalidParameter(format!(
+                "max_symbols {max_symbols} out of range 1..=256"
+            )));
+        }
+        // max_len must accommodate max_symbols+1 distinct codes.
+        if (max_len as usize) < usize::BITS as usize
+            && (1usize << max_len) < max_symbols + 1
+        {
+            return Err(Error::InvalidParameter(format!(
+                "max_len {max_len} too small for {max_symbols} symbols"
+            )));
+        }
+
+        let sorted = hist.sorted_symbols();
+        let (head, tail) = sorted.split_at(sorted.len().min(max_symbols));
+        let escaped_mass: u64 = tail.iter().map(|&(_, c)| c).sum();
+
+        // Weighted symbol set: top symbols + ESC.
+        let mut syms: Vec<(u16, u64)> = head.iter().map(|&(s, c)| (s as u16, c)).collect();
+        syms.push((ESC, escaped_mass.max(1)));
+
+        let mut lengths = package_merge(&syms, max_len)?;
+
+        // The reserved escape must be the all-ones codeword (paper §4.2.2),
+        // i.e. the canonically-last code, i.e. ESC must hold the maximum
+        // length. When escapes are frequent, Huffman may give ESC a shorter
+        // code; swapping lengths with a max-length symbol keeps the code
+        // complete (Kraft sum unchanged) at a negligible optimality cost —
+        // the hardware design assumes escapes are rare anyway.
+        let esc_idx = syms.len() - 1;
+        let lmax = *lengths.iter().max().expect("non-empty");
+        if lengths[esc_idx] < lmax {
+            let j = lengths
+                .iter()
+                .position(|&l| l == lmax)
+                .expect("max exists");
+            lengths.swap(esc_idx, j);
+        }
+
+        // Canonical order: (length asc, ESC last within its length, symbol asc).
+        let mut canonical: Vec<(u16, u32)> = syms
+            .iter()
+            .map(|&(s, _)| s)
+            .zip(lengths.iter().copied())
+            .collect();
+        canonical.sort_by_key(|&(s, len)| (len, s == ESC, s));
+        // ESC has (weakly) minimal weight → (weakly) maximal length → with
+        // the tie-break above it sorts last, so canonical assignment gives
+        // it the all-ones codeword.
+        debug_assert_eq!(canonical.last().map(|&(s, _)| s), Some(ESC));
+
+        let mut codes: [Option<Code>; 256] = [None; 256];
+        let mut esc = Code { bits: 0, len: 0 };
+        let mut next = 0u32;
+        let mut prev_len = canonical[0].1;
+        for &(sym, len) in &canonical {
+            next <<= len - prev_len;
+            prev_len = len;
+            let code = Code { bits: next, len };
+            if sym == ESC {
+                esc = code;
+            } else {
+                codes[sym as usize] = Some(code);
+            }
+            next += 1;
+        }
+        // Completeness check: last code of length L must be all ones.
+        debug_assert_eq!(esc.bits, (1u32 << esc.len) - 1, "ESC must be all-ones");
+
+        Ok(CodeBook {
+            packed: Self::pack_lut(&codes, esc),
+            codes,
+            esc,
+            canonical,
+        })
+    }
+
+    /// Build the packed encode LUT: dedicated codes as-is, escaped symbols
+    /// as `ESC-code ++ raw byte` (≤ 32 bits total).
+    fn pack_lut(codes: &[Option<Code>; 256], esc: Code) -> [(u64, u32); 256] {
+        std::array::from_fn(|sym| match codes[sym] {
+            Some(c) => (c.bits as u64, c.len),
+            None => (
+                ((esc.bits as u64) << 8) | sym as u64,
+                esc.len + 8,
+            ),
+        })
+    }
+
+    /// Convenience: paper defaults (32 symbols, 24-bit cap).
+    pub fn lexi_default(hist: &Histogram) -> Result<Self> {
+        Self::from_histogram(hist, MAX_SYMBOLS, MAX_CODE_LEN)
+    }
+
+    /// The code for `symbol`, if it has a dedicated entry.
+    #[inline]
+    pub fn code(&self, symbol: u8) -> Option<Code> {
+        self.codes[symbol as usize]
+    }
+
+    /// The escape codeword.
+    #[inline]
+    pub fn escape(&self) -> Code {
+        self.esc
+    }
+
+    /// Number of dedicated (non-ESC) symbols.
+    pub fn num_symbols(&self) -> usize {
+        self.canonical.len() - 1
+    }
+
+    /// Maximum code length used (including ESC).
+    pub fn max_len(&self) -> u32 {
+        self.canonical.iter().map(|&(_, l)| l).max().unwrap_or(0)
+    }
+
+    /// Canonical (symbol, length) pairs, ESC encoded as symbol id 256.
+    pub fn canonical_pairs(&self) -> &[(u16, u32)] {
+        &self.canonical
+    }
+
+    /// Encode one exponent (dedicated code or ESC + raw byte).
+    #[inline]
+    pub fn encode_symbol(&self, symbol: u8, w: &mut BitWriter) {
+        let (bits, len) = self.packed[symbol as usize];
+        w.put(bits, len);
+    }
+
+    /// Exact compressed size in bits of `symbol` under this codebook.
+    #[inline]
+    pub fn symbol_bits(&self, symbol: u8) -> u32 {
+        self.packed[symbol as usize].1
+    }
+
+    /// Exact compressed payload size (bits) for a whole histogram.
+    pub fn payload_bits(&self, hist: &Histogram) -> u64 {
+        let mut bits = 0u64;
+        for s in 0..256 {
+            let c = hist.counts[s];
+            if c > 0 {
+                bits += c * self.symbol_bits(s as u8) as u64;
+            }
+        }
+        bits
+    }
+
+    /// Serialize the codebook header: `count:6`, then per entry
+    /// `{is_esc:1, symbol:8, len:5}`. ~13 bits/entry, ≤ 55 bytes total.
+    pub fn write_header(&self, w: &mut BitWriter) {
+        w.put(self.canonical.len() as u64, 6);
+        for &(sym, len) in &self.canonical {
+            w.put((sym == ESC) as u64, 1);
+            w.put((sym & 0xff) as u64, 8);
+            w.put(len as u64, 5);
+        }
+    }
+
+    /// Header size in bits.
+    pub fn header_bits(&self) -> u64 {
+        6 + 14 * self.canonical.len() as u64
+    }
+
+    /// Deserialize a codebook header written by [`write_header`].
+    ///
+    /// [`write_header`]: CodeBook::write_header
+    pub fn read_header(r: &mut BitReader) -> Result<Self> {
+        let count = r.get(6)? as usize;
+        if count < 1 {
+            return Err(Error::MalformedCodebook("zero entries".into()));
+        }
+        let mut canonical = Vec::with_capacity(count);
+        for i in 0..count {
+            let is_esc = r.get(1)? == 1;
+            let symbol = r.get(8)? as u16;
+            let len = r.get(5)? as u32;
+            if len == 0 || len > 31 {
+                return Err(Error::MalformedCodebook(format!(
+                    "entry {i}: length {len} out of range"
+                )));
+            }
+            canonical.push((if is_esc { ESC } else { symbol }, len));
+        }
+        Self::from_canonical(canonical)
+    }
+
+    /// Build a codebook from validated canonical `(symbol, length)` pairs,
+    /// with the escape encoded as symbol id 256 and placed last. This is
+    /// the constructor the hardware tree-builder model (`lexi-hw`) uses:
+    /// hardware emits code *lengths*, canonical assignment makes the bits.
+    pub fn from_canonical(canonical: Vec<(u16, u32)>) -> Result<Self> {
+        if canonical.is_empty() {
+            return Err(Error::MalformedCodebook("zero entries".into()));
+        }
+        let mut prev_len = 0u32;
+        let mut esc_seen = false;
+        for (i, &(sym, len)) in canonical.iter().enumerate() {
+            if len == 0 || len > 31 {
+                return Err(Error::MalformedCodebook(format!(
+                    "entry {i}: length {len} out of range"
+                )));
+            }
+            if len < prev_len {
+                return Err(Error::MalformedCodebook(
+                    "entries not in canonical length order".into(),
+                ));
+            }
+            prev_len = len;
+            if sym == ESC {
+                if esc_seen {
+                    return Err(Error::MalformedCodebook("duplicate ESC".into()));
+                }
+                esc_seen = true;
+            } else if sym > 255 {
+                return Err(Error::MalformedCodebook(format!(
+                    "symbol id {sym} out of range"
+                )));
+            }
+        }
+        if !esc_seen {
+            return Err(Error::MalformedCodebook("missing ESC".into()));
+        }
+        if canonical.last().map(|&(s, _)| s) != Some(ESC) {
+            return Err(Error::MalformedCodebook("ESC not last".into()));
+        }
+        // Kraft check: canonical assignment requires a complete code.
+        let kraft: u64 = canonical.iter().map(|&(_, l)| 1u64 << (32 - l)).sum();
+        if kraft != 1u64 << 32 {
+            return Err(Error::MalformedCodebook(format!(
+                "Kraft sum {} ≠ 1 (incomplete or overfull code)",
+                kraft as f64 / (1u64 << 32) as f64
+            )));
+        }
+
+        let mut codes: [Option<Code>; 256] = [None; 256];
+        let mut esc = Code { bits: 0, len: 0 };
+        let mut next = 0u32;
+        let mut prev = canonical[0].1;
+        for &(sym, len) in &canonical {
+            next <<= len - prev;
+            prev = len;
+            let code = Code { bits: next, len };
+            if sym == ESC {
+                esc = code;
+            } else {
+                if codes[sym as usize].is_some() {
+                    return Err(Error::MalformedCodebook(format!(
+                        "duplicate symbol {sym}"
+                    )));
+                }
+                codes[sym as usize] = Some(code);
+            }
+            next += 1;
+        }
+        Ok(CodeBook {
+            packed: Self::pack_lut(&codes, esc),
+            codes,
+            esc,
+            canonical,
+        })
+    }
+
+    /// Build a codebook from per-symbol lengths (ESC = id 256), sorting
+    /// into canonical order internally.
+    pub fn from_lengths(pairs: &[(u16, u32)]) -> Result<Self> {
+        let mut canonical = pairs.to_vec();
+        canonical.sort_by_key(|&(s, len)| (len, s == ESC, s));
+        Self::from_canonical(canonical)
+    }
+
+    /// Build a canonical decoder (software mirror of the multi-stage LUT).
+    pub fn decoder(&self) -> CanonicalDecoder {
+        CanonicalDecoder::new(self)
+    }
+}
+
+/// Canonical Huffman decoder using per-length first-code tables, fronted
+/// by a direct lookup table for short codes (§Perf) — the standard
+/// software realization; `lexi-hw` models the LUT pipeline against this
+/// oracle.
+#[derive(Clone, Debug)]
+pub struct CanonicalDecoder {
+    /// For each length L: (first_code << (32-L)) left-aligned threshold.
+    first_code_aligned: Vec<u64>,
+    /// For each length L: index of first symbol of that length.
+    first_index: Vec<usize>,
+    /// Symbols in canonical order (ESC = 256).
+    symbols: Vec<u16>,
+    /// Lengths present, ascending.
+    lengths: Vec<u32>,
+    esc_len: u32,
+    /// Direct table indexed by the next `FAST_BITS` bits: packed
+    /// `(symbol << 8) | len`, or `FAST_MISS` for codes longer than
+    /// `FAST_BITS` (fall back to the length-class walk).
+    fast: Vec<u32>,
+}
+
+/// Width of the fast direct-decode table (2^11 × 4 B = 8 KiB).
+const FAST_BITS: u32 = 11;
+const FAST_MISS: u32 = u32::MAX;
+
+impl CanonicalDecoder {
+    fn new(book: &CodeBook) -> Self {
+        let mut first_code_aligned = Vec::new();
+        let mut first_index = Vec::new();
+        let mut lengths = Vec::new();
+        let mut symbols = Vec::with_capacity(book.canonical.len());
+        let mut next = 0u32;
+        let mut prev_len = book.canonical[0].1;
+        let mut fast = vec![FAST_MISS; 1 << FAST_BITS];
+        for (i, &(sym, len)) in book.canonical.iter().enumerate() {
+            next <<= len - prev_len;
+            prev_len = len;
+            if lengths.last() != Some(&len) {
+                lengths.push(len);
+                first_index.push(i);
+                first_code_aligned.push((next as u64) << (32 - len));
+            }
+            symbols.push(sym);
+            // Fill the fast table: every FAST_BITS pattern starting with
+            // this codeword decodes to it (ESC excluded: it needs the raw
+            // byte anyway, keep it on the slow path).
+            if len <= FAST_BITS && sym != ESC {
+                let lo = (next as usize) << (FAST_BITS - len);
+                let hi = ((next as usize) + 1) << (FAST_BITS - len);
+                let packed = ((sym as u32) << 8) | len;
+                for slot in &mut fast[lo..hi] {
+                    *slot = packed;
+                }
+            }
+            next += 1;
+        }
+        CanonicalDecoder {
+            first_code_aligned,
+            first_index,
+            symbols,
+            lengths,
+            esc_len: book.esc.len,
+            fast,
+        }
+    }
+
+    /// Decode one exponent from the reader (resolving ESC to the raw byte).
+    #[inline]
+    pub fn decode(&self, r: &mut BitReader) -> Result<u8> {
+        // Fast path: direct table on the next FAST_BITS bits.
+        let probe = r.peek_zeroext(FAST_BITS) as usize;
+        let hit = self.fast[probe];
+        if hit != FAST_MISS {
+            let len = hit & 0xff;
+            if (r.remaining() as u32) >= len {
+                r.skip(len)?;
+                return Ok((hit >> 8) as u8);
+            }
+            // Too few bits left for this codeword: fall through so the
+            // slow path reports the precise exhaustion error.
+        }
+        self.decode_slow(r)
+    }
+
+    /// Length-class walk for long codes, ESC, and stream-tail errors.
+    fn decode_slow(&self, r: &mut BitReader) -> Result<u8> {
+        // Left-aligned 32-bit window; compare against per-length thresholds
+        // from the longest down — the window is within a length class iff
+        // it is >= that class's first code and < the next class's.
+        let window = r.peek_zeroext(32);
+        let offset = r.pos();
+        // Find the smallest length whose next-class threshold exceeds window.
+        for k in 0..self.lengths.len() {
+            let len = self.lengths[k];
+            let upper = if k + 1 < self.lengths.len() {
+                self.first_code_aligned[k + 1]
+            } else {
+                u64::MAX
+            };
+            if window < upper {
+                if (r.remaining() as u32) < len {
+                    return Err(Error::BitstreamExhausted {
+                        offset,
+                        needed: len as usize - r.remaining(),
+                    });
+                }
+                let code = (window >> (32 - len)) as u32;
+                let first = (self.first_code_aligned[k] >> (32 - len)) as u32;
+                let idx = self.first_index[k] + (code - first) as usize;
+                if idx >= self.symbols.len() {
+                    return Err(Error::InvalidCodeword { offset });
+                }
+                r.skip(len)?;
+                let sym = self.symbols[idx];
+                if sym == ESC {
+                    return Ok(r.get(8)? as u8);
+                }
+                return Ok(sym as u8);
+            }
+        }
+        Err(Error::InvalidCodeword { offset })
+    }
+
+    /// The ESC code length (hardware sizing input).
+    pub fn esc_len(&self) -> u32 {
+        self.esc_len
+    }
+}
+
+/// Length-limited Huffman code lengths via the package–merge algorithm.
+///
+/// Returns one length per input symbol (same order), each ≤ `max_len`,
+/// forming a complete prefix code of minimal weighted length.
+fn package_merge(syms: &[(u16, u64)], max_len: u32) -> Result<Vec<u32>> {
+    let n = syms.len();
+    if n == 0 {
+        return Err(Error::EmptyHistogram);
+    }
+    if n == 1 {
+        // A single symbol still needs 1 bit to be decodable mid-stream.
+        return Ok(vec![1]);
+    }
+    if (max_len as usize) < 63 && (1u128 << max_len) < n as u128 {
+        return Err(Error::InvalidParameter(format!(
+            "cannot fit {n} symbols in codes of ≤{max_len} bits"
+        )));
+    }
+
+    // Package–merge: items are (weight, coin-set of original indices).
+    // At each level we merge pairs ("package") and re-add the originals.
+    #[derive(Clone)]
+    struct Item {
+        weight: u64,
+        /// Count per original symbol index contributed by this item.
+        members: Vec<u32>,
+    }
+
+    let originals: Vec<Item> = {
+        let mut v: Vec<(usize, u64)> = syms.iter().map(|&(_, w)| w).enumerate().collect();
+        v.sort_by_key(|&(i, w)| (w, i));
+        v.into_iter()
+            .map(|(i, w)| {
+                let mut members = vec![0u32; n];
+                members[i] = 1;
+                Item { weight: w, members }
+            })
+            .collect()
+    };
+
+    let mut level: Vec<Item> = originals.clone();
+    for _ in 1..max_len {
+        // Package: pair adjacent items.
+        let mut packages: Vec<Item> = Vec::with_capacity(level.len() / 2);
+        let mut it = level.chunks_exact(2);
+        for pair in &mut it {
+            let mut members = pair[0].members.clone();
+            for (m, o) in members.iter_mut().zip(&pair[1].members) {
+                *m += o;
+            }
+            packages.push(Item {
+                weight: pair[0].weight + pair[1].weight,
+                members,
+            });
+        }
+        // Merge with the originals (both sorted; stable merge).
+        let mut merged = Vec::with_capacity(packages.len() + originals.len());
+        let (mut i, mut j) = (0, 0);
+        while i < originals.len() || j < packages.len() {
+            let take_orig = match (originals.get(i), packages.get(j)) {
+                (Some(a), Some(b)) => a.weight <= b.weight,
+                (Some(_), None) => true,
+                _ => false,
+            };
+            if take_orig {
+                merged.push(originals[i].clone());
+                i += 1;
+            } else {
+                merged.push(packages[j].clone());
+                j += 1;
+            }
+        }
+        level = merged;
+    }
+
+    // Take the first 2n-2 items; each appearance of symbol i adds 1 to its
+    // code length.
+    let mut lengths = vec![0u32; n];
+    for item in level.iter().take(2 * n - 2) {
+        for (idx, &c) in item.members.iter().enumerate() {
+            lengths[idx] += c;
+        }
+    }
+    debug_assert!(lengths.iter().all(|&l| l >= 1 && l <= max_len));
+    // Kraft equality must hold for a minimal complete code.
+    debug_assert_eq!(
+        lengths.iter().map(|&l| 1u128 << (64 - l)).sum::<u128>(),
+        1u128 << 64
+    );
+    Ok(lengths)
+}
+
+/// A self-contained compressed exponent block: codebook header + payload.
+#[derive(Clone, Debug)]
+pub struct EncodedExponents {
+    /// Serialized bits: header then payload (MSB-first).
+    pub bytes: Vec<u8>,
+    /// Exact bit length (excludes byte-alignment padding).
+    pub bits: usize,
+    /// Number of exponents encoded.
+    pub count: usize,
+}
+
+impl EncodedExponents {
+    /// Compression ratio vs raw 8-bit exponents (header included).
+    pub fn ratio(&self) -> f64 {
+        (self.count as f64 * 8.0) / self.bits as f64
+    }
+}
+
+/// Compress an exponent stream with a per-block codebook (the per-layer
+/// boundary of §4.1 maps to one call per layer output).
+pub fn compress_exponents(exponents: &[u8]) -> Result<EncodedExponents> {
+    let hist = Histogram::from_bytes(exponents);
+    let book = CodeBook::lexi_default(&hist)?;
+    compress_with_book(exponents, &book)
+}
+
+/// Compress with an explicit codebook (e.g. one built from only the first
+/// 512 samples, as the hardware does).
+pub fn compress_with_book(exponents: &[u8], book: &CodeBook) -> Result<EncodedExponents> {
+    let mut w = BitWriter::new();
+    book.write_header(&mut w);
+    w.put(exponents.len() as u64, 32);
+    for &e in exponents {
+        book.encode_symbol(e, &mut w);
+    }
+    let bits = w.len_bits();
+    Ok(EncodedExponents {
+        bytes: w.into_bytes(),
+        bits,
+        count: exponents.len(),
+    })
+}
+
+/// Decompress a block produced by [`compress_exponents`].
+pub fn decompress_exponents(block: &EncodedExponents) -> Result<Vec<u8>> {
+    let mut r = BitReader::with_len(&block.bytes, block.bits);
+    let book = CodeBook::read_header(&mut r)?;
+    let count = r.get(32)? as usize;
+    let dec = book.decoder();
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        out.push(dec.decode(&mut r)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::check;
+
+    fn book_of(bytes: &[u8]) -> CodeBook {
+        CodeBook::lexi_default(&Histogram::from_bytes(bytes)).unwrap()
+    }
+
+    #[test]
+    fn single_symbol_stream() {
+        let data = vec![127u8; 100];
+        let block = compress_exponents(&data).unwrap();
+        assert_eq!(decompress_exponents(&block).unwrap(), data);
+        // 1 bit per symbol + header + count.
+        assert!(block.bits < 100 + 64 + 40);
+    }
+
+    #[test]
+    fn two_symbol_stream() {
+        let mut data = vec![126u8; 70];
+        data.extend(vec![127u8; 30]);
+        let block = compress_exponents(&data).unwrap();
+        assert_eq!(decompress_exponents(&block).unwrap(), data);
+    }
+
+    #[test]
+    fn escape_roundtrip() {
+        // 40 distinct symbols forces 8 of them through ESC.
+        let mut data = Vec::new();
+        for s in 0..40u8 {
+            for _ in 0..(40 - s) {
+                data.push(s);
+            }
+        }
+        let book = book_of(&data);
+        assert_eq!(book.num_symbols(), 32);
+        let block = compress_exponents(&data).unwrap();
+        assert_eq!(decompress_exponents(&block).unwrap(), data);
+    }
+
+    #[test]
+    fn esc_is_all_ones() {
+        let data: Vec<u8> = (0..200u32).map(|i| (i % 7) as u8 * 3 + 100).collect();
+        let book = book_of(&data);
+        let esc = book.escape();
+        assert_eq!(esc.bits, (1 << esc.len) - 1);
+    }
+
+    #[test]
+    fn code_lengths_respect_cap() {
+        // Fibonacci-ish weights produce deep unconstrained Huffman trees.
+        let mut hist = Histogram::default();
+        let (mut a, mut b) = (1u64, 1u64);
+        for s in 0..30u8 {
+            hist.add(s, a);
+            let c = a + b;
+            a = b;
+            b = c;
+        }
+        let book = CodeBook::from_histogram(&hist, 32, 12).unwrap();
+        assert!(book.max_len() <= 12, "max_len {}", book.max_len());
+        // And still decodes.
+        let data: Vec<u8> = (0..30u8).flat_map(|s| vec![s; 3]).collect();
+        let block = compress_with_book(&data, &book).unwrap();
+        assert_eq!(decompress_exponents(&block).unwrap(), data);
+    }
+
+    #[test]
+    fn prefix_free_property() {
+        check("codes are prefix-free", 100, |g| {
+            let (n, a) = (g.usize(1..2000), g.usize(1..64));
+            let data = g.skewed_bytes(n, a);
+            let book = book_of(&data);
+            let mut all: Vec<Code> = (0..=255u8).filter_map(|s| book.code(s)).collect();
+            all.push(book.escape());
+            for (i, a) in all.iter().enumerate() {
+                for (j, b) in all.iter().enumerate() {
+                    if i == j {
+                        continue;
+                    }
+                    let (short, long) = if a.len <= b.len { (a, b) } else { (b, a) };
+                    let prefix = long.bits >> (long.len - short.len);
+                    assert!(
+                        !(prefix == short.bits && a.len != b.len || a.bits == b.bits && a.len == b.len),
+                        "prefix violation {a:?} {b:?}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_roundtrip_arbitrary_streams() {
+        check("huffman roundtrip", 150, |g| {
+            let n = g.usize(1..3000);
+            // Mix of skewed and fully-random bytes exercises ESC heavily.
+            let data = if g.bool(0.7) {
+                { let a = g.usize(2..80); g.skewed_bytes(n, a) }
+            } else {
+                g.vec(n, |g| g.u8())
+            };
+            let block = compress_exponents(&data).unwrap();
+            assert_eq!(decompress_exponents(&block).unwrap(), data);
+        });
+    }
+
+    #[test]
+    fn prop_header_roundtrip() {
+        check("codebook header roundtrip", 100, |g| {
+            let (n, a) = (g.usize(1..500), g.usize(1..40));
+            let data = g.skewed_bytes(n, a);
+            let book = book_of(&data);
+            let mut w = BitWriter::new();
+            book.write_header(&mut w);
+            let bits = w.len_bits();
+            let bytes = w.into_bytes();
+            let mut r = BitReader::with_len(&bytes, bits);
+            let back = CodeBook::read_header(&mut r).unwrap();
+            assert_eq!(back, book);
+        });
+    }
+
+    #[test]
+    fn prop_compression_beats_entropy_bound_within_1bit() {
+        check("huffman ≤ H+1 per symbol", 60, |g| {
+            let (n, a) = (g.usize(256..4000), g.usize(2..30));
+            let data = g.skewed_bytes(n, a);
+            let hist = Histogram::from_bytes(&data);
+            let book = CodeBook::lexi_default(&hist).unwrap();
+            let payload = book.payload_bits(&hist) as f64;
+            let bound = hist.entropy_bits() * data.len() as f64;
+            assert!(
+                payload <= bound + data.len() as f64 + 16.0,
+                "payload {payload} vs bound {bound}"
+            );
+        });
+    }
+
+    #[test]
+    fn gaussian_exponents_hit_paper_ratio() {
+        // Table 2 reports ~3.1× exponent CR on LLM weights; Gaussian weights
+        // with realistic σ should land in the same band (2.5–4×).
+        use crate::bf16::Bf16;
+        use crate::prng::Rng;
+        let mut rng = Rng::new(2024);
+        let exps: Vec<u8> = (0..200_000)
+            .map(|_| Bf16::from_f32(rng.normal_with(0.0, 0.02) as f32).exponent())
+            .collect();
+        let block = compress_exponents(&exps).unwrap();
+        let cr = block.ratio();
+        assert!((2.2..4.5).contains(&cr), "CR {cr}");
+        assert_eq!(decompress_exponents(&block).unwrap(), exps);
+    }
+
+    #[test]
+    fn malformed_headers_rejected() {
+        // Truncated stream.
+        let data = vec![1u8, 2, 3];
+        let block = compress_exponents(&data).unwrap();
+        let mut r = BitReader::with_len(&block.bytes, 10);
+        assert!(CodeBook::read_header(&mut r).is_err());
+        // Garbage bits.
+        let garbage = [0xffu8; 8];
+        let mut r2 = BitReader::new(&garbage);
+        assert!(CodeBook::read_header(&mut r2).is_err());
+    }
+
+    #[test]
+    fn empty_histogram_rejected() {
+        assert_eq!(
+            CodeBook::lexi_default(&Histogram::default()).unwrap_err(),
+            Error::EmptyHistogram
+        );
+    }
+}

@@ -1,0 +1,35 @@
+//! # lexi-core — BF16 exponent codecs and profiling substrate
+//!
+//! Software reference implementations of everything LEXI does to bits:
+//!
+//! * [`bf16`] — BF16 field extraction ({sign, exponent, mantissa}) and
+//!   conversions; the profiling substrate of the paper's Fig. 1(a).
+//! * [`stats`] — Shannon entropy, exponent histograms, distinct-value counts.
+//! * [`bitstream`] — MSB-first bit-level reader/writer used by every codec.
+//! * [`huffman`] — canonical Huffman over the ≤32-value exponent alphabet
+//!   with the reserved all-ones escape code (paper §4.2.2), i.e. the LEXI
+//!   algorithm itself, independent of its hardware realization.
+//! * [`rle`], [`bdi`] — the paper's Table 2 baselines (run-length coding and
+//!   base-delta-immediate).
+//! * [`flit`] — flit-aligned packetization
+//!   `{header, signs, mantissas, compressed exponents}` (paper §4.1/§4.3).
+//! * [`prng`], [`proptest`] — deterministic PRNG + a minimal property-test
+//!   driver (the offline crate set has no `rand`/`proptest`; these are
+//!   first-class substrates here, not mocks).
+//!
+//! The cycle-accurate hardware realization lives in `lexi-hw`; this crate is
+//! the bit-exact oracle it is tested against.
+
+pub mod bdi;
+pub mod bf16;
+pub mod bitstream;
+pub mod error;
+pub mod flit;
+pub mod huffman;
+pub mod prng;
+pub mod proptest;
+pub mod rle;
+pub mod stats;
+
+pub use bf16::Bf16;
+pub use error::{Error, Result};

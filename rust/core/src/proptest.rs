@@ -1,0 +1,165 @@
+//! Minimal property-based testing driver.
+//!
+//! The offline crate set has no `proptest`, so this module provides the
+//! slice of it the test suites need: run a property over many seeded random
+//! cases, and on failure report the exact seed + case index so the failure
+//! is reproducible by construction.
+//!
+//! ```
+//! use lexi_core::proptest::{check, Gen};
+//! check("addition commutes", 200, |g| {
+//!     let a = g.u64(0..1 << 32);
+//!     let b = g.u64(0..1 << 32);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::prng::Rng;
+use std::ops::Range;
+
+/// Case-local generator handed to properties.
+pub struct Gen {
+    rng: Rng,
+    /// Seed of this particular case, for failure reports.
+    pub case_seed: u64,
+}
+
+impl Gen {
+    /// Uniform `u64` in `range`.
+    pub fn u64(&mut self, range: Range<u64>) -> u64 {
+        assert!(range.start < range.end, "empty range");
+        range.start + self.rng.below(range.end - range.start)
+    }
+
+    /// Uniform `usize` in `range`.
+    pub fn usize(&mut self, range: Range<usize>) -> usize {
+        self.u64(range.start as u64..range.end as u64) as usize
+    }
+
+    /// Uniform `u8`.
+    pub fn u8(&mut self) -> u8 {
+        (self.rng.next_u32() & 0xff) as u8
+    }
+
+    /// Uniform `u16`.
+    pub fn u16(&mut self) -> u16 {
+        (self.rng.next_u32() & 0xffff) as u16
+    }
+
+    /// Bernoulli trial.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// Uniform float in `[lo, hi)`.
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range(lo, hi)
+    }
+
+    /// Standard normal.
+    pub fn normal(&mut self) -> f64 {
+        self.rng.normal()
+    }
+
+    /// A vector of `len` items built by `f`.
+    pub fn vec<T>(&mut self, len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// A byte vector with a skewed (Huffman-friendly) symbol distribution
+    /// over `alphabet` symbols — the shape real exponent streams have.
+    pub fn skewed_bytes(&mut self, len: usize, alphabet: usize) -> Vec<u8> {
+        let base = self.u8();
+        (0..len)
+            .map(|_| {
+                // Geometric-ish: most mass near `base`.
+                let mut off = 0usize;
+                while off + 1 < alphabet && self.bool(0.45) {
+                    off += 1;
+                }
+                base.wrapping_add(off as u8)
+            })
+            .collect()
+    }
+
+    /// Access the raw RNG for anything not covered above.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` over `cases` seeded cases. Panics (with the failing seed) on
+/// the first failure. The base seed is derived from the property name so
+/// distinct properties explore distinct spaces but remain reproducible.
+pub fn check(name: &str, cases: u64, mut prop: impl FnMut(&mut Gen)) {
+    let base = fnv1a(name.as_bytes());
+    for i in 0..cases {
+        let case_seed = base ^ (i.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut g = Gen {
+            rng: Rng::new(case_seed),
+            case_seed,
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {i}/{cases} (seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed (debugging aid).
+pub fn check_seed(seed: u64, mut prop: impl FnMut(&mut Gen)) {
+    let mut g = Gen {
+        rng: Rng::new(seed),
+        case_seed: seed,
+    };
+    prop(&mut g);
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("u64 in range", 100, |g| {
+            let x = g.u64(10..20);
+            assert!((10..20).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports_seed() {
+        check("always fails", 10, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn skewed_bytes_are_skewed() {
+        check("skewed bytes concentrate", 20, |g| {
+            let v = g.skewed_bytes(2000, 8);
+            let mut hist = [0usize; 256];
+            for &b in &v {
+                hist[b as usize] += 1;
+            }
+            let max = *hist.iter().max().unwrap();
+            // Most common symbol holds a majority-ish share.
+            assert!(max * 2 > v.len(), "max {max} of {}", v.len());
+        });
+    }
+}

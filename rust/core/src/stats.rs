@@ -1,0 +1,224 @@
+//! Entropy and distribution statistics for BF16 field streams.
+//!
+//! Implements the paper's §3 profiling: Shannon entropy of the exponent /
+//! mantissa / sign streams, distinct-value counts, and the ideal
+//! (entropy-bound) compression ratios those imply.
+
+use crate::bf16::Bf16;
+
+/// A 256-bin histogram over byte symbols (exponents or mantissas).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Histogram {
+    pub counts: [u64; 256],
+    pub total: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            counts: [0; 256],
+            total: 0,
+        }
+    }
+}
+
+impl Histogram {
+    /// Build from a byte stream.
+    pub fn from_bytes(bytes: &[u8]) -> Self {
+        let mut h = Histogram::default();
+        for &b in bytes {
+            h.counts[b as usize] += 1;
+        }
+        h.total = bytes.len() as u64;
+        h
+    }
+
+    /// Accumulate one observation.
+    #[inline]
+    pub fn add(&mut self, symbol: u8, count: u64) {
+        self.counts[symbol as usize] += count;
+        self.total += count;
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        for i in 0..256 {
+            self.counts[i] += other.counts[i];
+        }
+        self.total += other.total;
+    }
+
+    /// Shannon entropy in bits per symbol.
+    pub fn entropy_bits(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let n = self.total as f64;
+        let mut h = 0.0;
+        for &c in &self.counts {
+            if c > 0 {
+                let p = c as f64 / n;
+                h -= p * p.log2();
+            }
+        }
+        h
+    }
+
+    /// Number of symbols with non-zero count (the paper reports <32 for
+    /// exponent streams).
+    pub fn distinct(&self) -> usize {
+        self.counts.iter().filter(|&&c| c > 0).count()
+    }
+
+    /// Symbols sorted by descending count (ties broken by symbol value),
+    /// restricted to non-zero entries. This is exactly the input order the
+    /// hardware bitonic sorter must produce.
+    pub fn sorted_symbols(&self) -> Vec<(u8, u64)> {
+        let mut v: Vec<(u8, u64)> = (0..256u16)
+            .filter(|&s| self.counts[s as usize] > 0)
+            .map(|s| (s as u8, self.counts[s as usize]))
+            .collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v
+    }
+
+    /// The `k` most frequent symbols' share of total mass — the quantity
+    /// that determines lane-cache hit rates (Fig 4).
+    pub fn top_k_mass(&self, k: usize) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let top: u64 = self.sorted_symbols().iter().take(k).map(|&(_, c)| c).sum();
+        top as f64 / self.total as f64
+    }
+}
+
+/// Per-field profiling summary of a BF16 tensor (one row of Fig 1a).
+#[derive(Clone, Debug)]
+pub struct FieldProfile {
+    pub count: usize,
+    pub exp_entropy_bits: f64,
+    pub mant_entropy_bits: f64,
+    pub sign_entropy_bits: f64,
+    pub exp_distinct: usize,
+    pub exp_hist: Histogram,
+}
+
+impl FieldProfile {
+    /// Profile a BF16 stream.
+    pub fn of(values: &[Bf16]) -> Self {
+        let mut exp_hist = Histogram::default();
+        let mut mant_hist = Histogram::default();
+        let mut ones = 0u64;
+        for &v in values {
+            exp_hist.add(v.exponent(), 1);
+            mant_hist.add(v.mantissa(), 1);
+            ones += v.sign() as u64;
+        }
+        let n = values.len() as u64;
+        let sign_entropy_bits = if n == 0 {
+            0.0
+        } else {
+            binary_entropy(ones as f64 / n as f64)
+        };
+        FieldProfile {
+            count: values.len(),
+            exp_entropy_bits: exp_hist.entropy_bits(),
+            mant_entropy_bits: mant_hist.entropy_bits(),
+            sign_entropy_bits,
+            exp_distinct: exp_hist.distinct(),
+            exp_hist,
+        }
+    }
+
+    /// Ideal exponent compression ratio: 8 bits / entropy.
+    pub fn ideal_exp_cr(&self) -> f64 {
+        if self.exp_entropy_bits <= 0.0 {
+            f64::INFINITY
+        } else {
+            8.0 / self.exp_entropy_bits
+        }
+    }
+
+    /// Ideal whole-value compression ratio if only exponents are coded:
+    /// 16 / (1 + 7 + H(exp)).
+    pub fn ideal_value_cr(&self) -> f64 {
+        16.0 / (8.0 + self.exp_entropy_bits)
+    }
+}
+
+/// Binary entropy H(p) in bits.
+pub fn binary_entropy(p: f64) -> f64 {
+    if p <= 0.0 || p >= 1.0 {
+        0.0
+    } else {
+        -p * p.log2() - (1.0 - p) * (1.0 - p).log2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    #[test]
+    fn entropy_of_uniform_bytes_is_8() {
+        let bytes: Vec<u8> = (0..=255u8).cycle().take(256 * 64).collect();
+        let h = Histogram::from_bytes(&bytes);
+        assert!((h.entropy_bits() - 8.0).abs() < 1e-9);
+        assert_eq!(h.distinct(), 256);
+    }
+
+    #[test]
+    fn entropy_of_constant_is_0() {
+        let h = Histogram::from_bytes(&[42u8; 1000]);
+        assert_eq!(h.entropy_bits(), 0.0);
+        assert_eq!(h.distinct(), 1);
+        assert_eq!(h.top_k_mass(1), 1.0);
+    }
+
+    #[test]
+    fn merge_matches_concat() {
+        let a = Histogram::from_bytes(&[1, 2, 3, 3]);
+        let b = Histogram::from_bytes(&[3, 4]);
+        let mut m = a.clone();
+        m.merge(&b);
+        assert_eq!(m, Histogram::from_bytes(&[1, 2, 3, 3, 3, 4]));
+    }
+
+    #[test]
+    fn gaussian_bf16_exponents_have_low_entropy() {
+        // The paper's core observation: exponents of well-scaled tensors
+        // carry < 3 bits of entropy and < 32 distinct values dominate.
+        let mut rng = Rng::new(99);
+        let vals: Vec<Bf16> = (0..100_000)
+            .map(|_| Bf16::from_f32(rng.normal_with(0.0, 0.02) as f32))
+            .collect();
+        let p = FieldProfile::of(&vals);
+        assert!(
+            p.exp_entropy_bits < 4.5,
+            "exp entropy {}",
+            p.exp_entropy_bits
+        );
+        assert!(
+            p.mant_entropy_bits > 6.5,
+            "mant entropy {}",
+            p.mant_entropy_bits
+        );
+        // ≥99% of mass within the 32 most frequent exponents.
+        assert!(p.exp_hist.top_k_mass(32) > 0.99);
+    }
+
+    #[test]
+    fn sorted_symbols_descending() {
+        let h = Histogram::from_bytes(&[5, 5, 5, 7, 7, 9]);
+        assert_eq!(h.sorted_symbols(), vec![(5, 3), (7, 2), (9, 1)]);
+    }
+
+    #[test]
+    fn binary_entropy_extremes() {
+        assert_eq!(binary_entropy(0.0), 0.0);
+        assert_eq!(binary_entropy(1.0), 0.0);
+        assert!((binary_entropy(0.5) - 1.0).abs() < 1e-12);
+    }
+}

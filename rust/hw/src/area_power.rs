@@ -1,0 +1,236 @@
+//! Area/power model, calibrated to the paper's GF 22 nm synthesis
+//! (Table 4) with Stillmaker–Baas scaling to the 16 nm Simba node.
+//!
+//! The paper's published component results pin the model:
+//!
+//! | component                | area (µm²) | power (mW) | count |
+//! |--------------------------|-----------:|-----------:|------:|
+//! | local cache (depth 8)    |       9.85 |       0.25 |  ×10  |
+//! | global hist + code gen   |     13113  |       5.23 |   ×1  |
+//! | encode LUT (32 entries)  |      79.87 |       1.74 |  ×10  |
+//! | decode LUT (4-stage)     |       98.5 |       2.03 |  ×10  |
+//!
+//! Totals: 14 995.2 µm², 45.43 mW; scaled ×0.3636 to 16 nm = 5 452.8 µm²
+//! = **0.09 %** of a 6 mm² Simba chiplet.
+//!
+//! Each component scales parametrically so the design-space sweeps (Figs.
+//! 4–6) can price alternative configurations: caches per entry, encode
+//! LUTs per entry, decoders per CAM bit (two published decoder points fit
+//! `area ≈ k·Σ(entries × window_bits)` with k ≈ 0.1539 µm²/bit and a
+//! negligible payload term).
+
+use crate::decoder::DecoderConfig;
+
+/// Area scale factor GF 22 nm → 16 nm (Stillmaker–Baas [36]; the paper's
+/// own totals imply exactly 5452.8 / 14995.2).
+pub const SCALE_22_TO_16: f64 = 5452.8 / 14995.2;
+
+/// Simba chiplet area in mm² (paper §5.4).
+pub const SIMBA_CHIPLET_MM2: f64 = 6.0;
+
+// --- calibration constants (GF 22 nm) -----------------------------------
+const CACHE_AREA_PER_ENTRY_UM2: f64 = 9.85 / 8.0;
+const CACHE_POWER_PER_ENTRY_MW: f64 = 0.25 / 8.0;
+const GLOBAL_HIST_AREA_UM2: f64 = 13113.0;
+const GLOBAL_HIST_POWER_MW: f64 = 5.23;
+const ENC_LUT_AREA_PER_ENTRY_UM2: f64 = 79.87 / 32.0;
+const ENC_LUT_POWER_MW: f64 = 1.74;
+/// Decoder CAM cost per (entry × window-bit); fit from the paper's two
+/// published decoder points (98.5 µm² 4-stage vs 157.6 µm² monolithic).
+const DEC_AREA_PER_CAM_BIT_UM2: f64 = 0.1539;
+const DEC_AREA_PER_ENTRY_PAYLOAD_UM2: f64 = 0.002;
+/// Decoder power tracks area at the published density (2.03 mW / 98.5 µm²).
+const DEC_POWER_PER_UM2_MW: f64 = 2.03 / 98.5;
+
+/// A full LEXI codec hardware configuration.
+#[derive(Clone, Debug)]
+pub struct LexiHwConfig {
+    /// Histogram/encode lanes (paper: 10).
+    pub lanes: usize,
+    /// Local cache entries per lane (paper: 8).
+    pub cache_depth: usize,
+    /// Encode LUT entries (alphabet cap; paper: 32).
+    pub enc_lut_entries: usize,
+    /// Decoder stage configuration (paper: 4-stage 8/16/24/32 × 8).
+    pub decoder: DecoderConfig,
+    /// Parallel decode lanes (paper: 10).
+    pub decode_lanes: usize,
+}
+
+impl LexiHwConfig {
+    /// The paper's chosen configuration.
+    pub fn paper_default() -> Self {
+        LexiHwConfig {
+            lanes: 10,
+            cache_depth: 8,
+            enc_lut_entries: 32,
+            decoder: DecoderConfig::paper_default(),
+            decode_lanes: 10,
+        }
+    }
+}
+
+/// One line of the area/power breakdown.
+#[derive(Clone, Debug)]
+pub struct BreakdownItem {
+    pub name: &'static str,
+    /// Area of one instance, µm² @ 22 nm.
+    pub unit_area_um2: f64,
+    /// Power of one instance, mW.
+    pub unit_power_mw: f64,
+    pub count: usize,
+}
+
+impl BreakdownItem {
+    /// Total area across instances.
+    pub fn total_area_um2(&self) -> f64 {
+        self.unit_area_um2 * self.count as f64
+    }
+
+    /// Total power across instances.
+    pub fn total_power_mw(&self) -> f64 {
+        self.unit_power_mw * self.count as f64
+    }
+}
+
+/// The full breakdown (Table 4).
+#[derive(Clone, Debug)]
+pub struct AreaPower {
+    pub items: Vec<BreakdownItem>,
+}
+
+impl AreaPower {
+    /// Evaluate the model for a configuration.
+    pub fn of(cfg: &LexiHwConfig) -> Self {
+        let items = vec![
+            BreakdownItem {
+                name: "Local Cache",
+                unit_area_um2: CACHE_AREA_PER_ENTRY_UM2 * cfg.cache_depth as f64,
+                unit_power_mw: CACHE_POWER_PER_ENTRY_MW * cfg.cache_depth as f64,
+                count: cfg.lanes,
+            },
+            BreakdownItem {
+                name: "Global Hist. & Code Gen.",
+                unit_area_um2: GLOBAL_HIST_AREA_UM2,
+                unit_power_mw: GLOBAL_HIST_POWER_MW,
+                count: 1,
+            },
+            BreakdownItem {
+                name: "Enc. LUT",
+                unit_area_um2: ENC_LUT_AREA_PER_ENTRY_UM2 * cfg.enc_lut_entries as f64,
+                unit_power_mw: ENC_LUT_POWER_MW,
+                count: cfg.lanes,
+            },
+            BreakdownItem {
+                name: "Dec. LUT",
+                unit_area_um2: decoder_area_um2(&cfg.decoder),
+                unit_power_mw: decoder_area_um2(&cfg.decoder) * DEC_POWER_PER_UM2_MW,
+                count: cfg.decode_lanes,
+            },
+        ];
+        AreaPower { items }
+    }
+
+    /// Total area @ 22 nm, µm².
+    pub fn total_area_um2(&self) -> f64 {
+        self.items.iter().map(|i| i.total_area_um2()).sum()
+    }
+
+    /// Total power, mW.
+    pub fn total_power_mw(&self) -> f64 {
+        self.items.iter().map(|i| i.total_power_mw()).sum()
+    }
+
+    /// Total area scaled to 16 nm, µm².
+    pub fn total_area_16nm_um2(&self) -> f64 {
+        self.total_area_um2() * SCALE_22_TO_16
+    }
+
+    /// Percent of a Simba chiplet occupied at 16 nm.
+    pub fn chiplet_overhead_pct(&self) -> f64 {
+        self.total_area_16nm_um2() / (SIMBA_CHIPLET_MM2 * 1e6) * 100.0
+    }
+}
+
+/// Decoder area for any stage configuration (CAM-bit model).
+pub fn decoder_area_um2(cfg: &DecoderConfig) -> f64 {
+    let cam_bits: f64 = cfg
+        .stage_shapes()
+        .iter()
+        .map(|&(bits, entries)| bits as f64 * entries as f64)
+        .sum();
+    let entries: f64 = cfg
+        .stage_shapes()
+        .iter()
+        .map(|&(_, e)| e as f64)
+        .sum();
+    cam_bits * DEC_AREA_PER_CAM_BIT_UM2 + entries * DEC_AREA_PER_ENTRY_PAYLOAD_UM2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol_pct: f64) -> bool {
+        (a - b).abs() <= b.abs() * tol_pct / 100.0
+    }
+
+    #[test]
+    fn paper_component_areas() {
+        let bp = AreaPower::of(&LexiHwConfig::paper_default());
+        let by_name = |n: &str| {
+            bp.items
+                .iter()
+                .find(|i| i.name == n)
+                .expect("component present")
+        };
+        assert!(close(by_name("Local Cache").unit_area_um2, 9.85, 1.0));
+        assert!(close(
+            by_name("Global Hist. & Code Gen.").unit_area_um2,
+            13113.0,
+            0.1
+        ));
+        assert!(close(by_name("Enc. LUT").unit_area_um2, 79.87, 1.0));
+        assert!(close(by_name("Dec. LUT").unit_area_um2, 98.5, 2.0));
+    }
+
+    #[test]
+    fn paper_totals() {
+        let bp = AreaPower::of(&LexiHwConfig::paper_default());
+        assert!(
+            close(bp.total_area_um2(), 14995.2, 1.0),
+            "area {}",
+            bp.total_area_um2()
+        );
+        assert!(
+            close(bp.total_power_mw(), 45.43, 2.0),
+            "power {}",
+            bp.total_power_mw()
+        );
+        assert!(
+            close(bp.total_area_16nm_um2(), 5452.8, 1.0),
+            "16nm {}",
+            bp.total_area_16nm_um2()
+        );
+        assert!(
+            close(bp.chiplet_overhead_pct(), 0.09, 5.0),
+            "overhead {}",
+            bp.chiplet_overhead_pct()
+        );
+    }
+
+    #[test]
+    fn monolithic_decoder_matches_fig6_point() {
+        let a = decoder_area_um2(&DecoderConfig::monolithic());
+        assert!(close(a, 157.6, 2.0), "area {a}");
+    }
+
+    #[test]
+    fn area_monotone_in_knobs() {
+        let base = AreaPower::of(&LexiHwConfig::paper_default()).total_area_um2();
+        let mut wide = LexiHwConfig::paper_default();
+        wide.lanes = 20;
+        wide.cache_depth = 16;
+        assert!(AreaPower::of(&wide).total_area_um2() > base);
+    }
+}

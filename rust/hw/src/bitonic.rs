@@ -1,0 +1,132 @@
+//! Parallel bitonic sorting network (paper §4.2.2 step 1, ref. Batcher [4]).
+//!
+//! The hardware sorts the ≤32 `(exponent, count)` pairs by descending count
+//! in a fixed network of compare-exchange stages. For n = 32 the network
+//! has log₂(32)·(log₂(32)+1)/2 = 15 stages, one stage per cycle — the "15
+//! cycles" in the paper's 78-cycle budget. This module implements the
+//! actual network (not a call to `sort`) so stage count and comparator
+//! count are measured, and validates it against `std` sorting.
+
+/// Result of a network sort.
+#[derive(Clone, Debug)]
+pub struct SortReport<T> {
+    pub sorted: Vec<T>,
+    /// Network stages = cycles at one stage/cycle.
+    pub stages: u64,
+    /// Total compare-exchange operations (area proxy).
+    pub comparators: u64,
+}
+
+/// Stages a bitonic network needs for `n` (padded to a power of two).
+pub fn stages_for(n: usize) -> u64 {
+    if n <= 1 {
+        return 0;
+    }
+    let k = (n.next_power_of_two()).trailing_zeros() as u64;
+    k * (k + 1) / 2
+}
+
+/// Sort by descending key using an explicit bitonic network.
+///
+/// `key` maps an element to its sort key (count); ties keep a deterministic
+/// order via the secondary key so hardware and software agree bit-exactly.
+pub fn sort_desc<T: Clone, K: Ord, F: Fn(&T) -> K>(items: &[T], key: F) -> SortReport<T> {
+    let n = items.len();
+    if n <= 1 {
+        return SortReport {
+            sorted: items.to_vec(),
+            stages: 0,
+            comparators: 0,
+        };
+    }
+    let size = n.next_power_of_two();
+    // Pad with None (sorts to the end under descending order).
+    let mut v: Vec<Option<T>> = items.iter().cloned().map(Some).collect();
+    v.resize(size, None);
+
+    let desc_less = |a: &Option<T>, b: &Option<T>| -> bool {
+        // "a should come before b" in descending order; None sinks last.
+        match (a, b) {
+            (Some(x), Some(y)) => key(x) >= key(y),
+            (Some(_), None) => true,
+            (None, _) => false,
+        }
+    };
+
+    let mut stages = 0u64;
+    let mut comparators = 0u64;
+    let mut k = 2;
+    while k <= size {
+        let mut j = k / 2;
+        while j >= 1 {
+            stages += 1;
+            for i in 0..size {
+                let l = i ^ j;
+                if l > i {
+                    comparators += 1;
+                    let ascending_block = i & k == 0;
+                    // For descending output, "ascending blocks" must place
+                    // larger first.
+                    let in_order = if ascending_block {
+                        desc_less(&v[i], &v[l])
+                    } else {
+                        desc_less(&v[l], &v[i])
+                    };
+                    if !in_order {
+                        v.swap(i, l);
+                    }
+                }
+            }
+            j /= 2;
+        }
+        k *= 2;
+    }
+
+    SortReport {
+        sorted: v.into_iter().flatten().collect(),
+        stages,
+        comparators,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use lexi_core::proptest::check;
+
+    #[test]
+    fn paper_stage_count_for_32() {
+        assert_eq!(stages_for(32), 15);
+    }
+
+    #[test]
+    fn stage_counts() {
+        assert_eq!(stages_for(1), 0);
+        assert_eq!(stages_for(2), 1);
+        assert_eq!(stages_for(4), 3);
+        assert_eq!(stages_for(8), 6);
+        assert_eq!(stages_for(16), 10);
+        assert_eq!(stages_for(33), 21); // pads to 64
+    }
+
+    #[test]
+    fn sorts_descending() {
+        let items = vec![(3u8, 5u64), (1, 9), (2, 1), (7, 9)];
+        let r = sort_desc(&items, |&(sym, cnt)| (cnt, std::cmp::Reverse(sym)));
+        assert_eq!(r.sorted, vec![(1, 9), (7, 9), (3, 5), (2, 1)]);
+        assert_eq!(r.stages, stages_for(4));
+    }
+
+    #[test]
+    fn prop_matches_std_sort() {
+        check("bitonic == std sort", 150, |g| {
+            let n = g.usize(0..40);
+            let items: Vec<(u8, u64)> = g.vec(n, |g| (g.u8(), g.u64(0..1000)));
+            let r = sort_desc(&items, |&(sym, cnt)| (cnt, std::cmp::Reverse(sym)));
+            let mut expect = items.clone();
+            expect.sort_by_key(|&(sym, cnt)| (std::cmp::Reverse(cnt), sym));
+            assert_eq!(r.sorted, expect);
+            assert_eq!(r.stages, stages_for(n));
+        });
+    }
+}

@@ -1,0 +1,188 @@
+//! The assembled LEXI egress pipeline (paper §4.2–§4.3): histogram window
+//! → codebook pipeline → streaming encode, with the paper's overlap model
+//! (all stages pipeline behind the data stream; the startup cost is paid
+//! once per layer).
+
+use crate::encoder::EncoderUnit;
+use crate::histogram_unit::{HistConfig, HistogramUnit};
+use crate::tree_builder::{self, TreeReport};
+use lexi_core::huffman::CodeBook;
+use lexi_core::Result;
+
+/// Number of leading activations sampled to build the codebook (paper:
+/// "We initiate tree generation with the first 512 activations").
+pub const SAMPLE_WINDOW: usize = 512;
+
+/// Full compressor configuration.
+#[derive(Clone, Debug)]
+pub struct CompressorConfig {
+    pub hist: HistConfig,
+    /// Alphabet cap for the encode LUTs.
+    pub max_symbols: usize,
+    /// Sample window for tree generation.
+    pub sample_window: usize,
+}
+
+impl CompressorConfig {
+    /// The paper's chosen design point.
+    pub fn paper_default() -> Self {
+        CompressorConfig {
+            hist: HistConfig::paper_default(),
+            max_symbols: 32,
+            sample_window: SAMPLE_WINDOW,
+        }
+    }
+}
+
+/// Cycle/size report for compressing one layer's exponent stream.
+#[derive(Clone, Debug)]
+pub struct CompressReport {
+    /// Histogram-phase cycles (ingest + drain of the sample window).
+    pub histogram_cycles: u64,
+    /// Codebook pipeline cycles (sort + merge + program).
+    pub tree_cycles: u64,
+    /// Streaming-encode cycles for the whole stream (⌈n/lanes⌉).
+    pub encode_cycles: u64,
+    /// One-time startup latency before the first codeword can leave.
+    pub startup_cycles: u64,
+    /// End-to-end cycles with pipelining (startup + encode).
+    pub total_cycles: u64,
+    /// Compressed payload bits (excluding codebook header).
+    pub payload_bits: u64,
+    /// Codebook header bits piggybacked on the stream.
+    pub header_bits: u64,
+    /// Exponents compressed.
+    pub count: u64,
+    /// Sample-window lane hit rate.
+    pub hit_rate: f64,
+    /// Escape-coded symbols (rare-exponent fallback).
+    pub escapes: u64,
+}
+
+impl CompressReport {
+    /// Exponent-stream compression ratio, header included.
+    pub fn ratio(&self) -> f64 {
+        (self.count * 8) as f64 / (self.payload_bits + self.header_bits) as f64
+    }
+
+    /// Effective exponents per cycle (line-rate check).
+    pub fn throughput(&self) -> f64 {
+        self.count as f64 / self.total_cycles as f64
+    }
+}
+
+/// The assembled compressor.
+pub struct Compressor {
+    cfg: CompressorConfig,
+}
+
+impl Compressor {
+    /// Build from a configuration.
+    pub fn new(cfg: CompressorConfig) -> Self {
+        Compressor { cfg }
+    }
+
+    /// Compress one layer's exponent stream. Returns the codebook, the
+    /// payload bytes (bit-exact with `lexi-core`), and the cycle report.
+    pub fn compress(&self, exponents: &[u8]) -> Result<(CodeBook, Vec<u8>, CompressReport)> {
+        let window = exponents.len().min(self.cfg.sample_window);
+        // Phase 1: histogram over the sample window through the M lanes.
+        let hist_unit = HistogramUnit::new(self.cfg.hist);
+        let hist_report = hist_unit.run(&exponents[..window]);
+
+        // Phase 2: codebook generation (bitonic sort → merge → program).
+        let tree: TreeReport = tree_builder::build_codebook(&hist_report.histogram, self.cfg.max_symbols)?;
+
+        // Phase 3: stream encode through the M lane LUTs. The sample
+        // window is buffered during phases 1–2 and drained first (the
+        // paper's non-blocking pipeline), so every exponent flows through
+        // the encoder exactly once.
+        let encoder = EncoderUnit::new(self.cfg.hist.lanes);
+        let (payload, enc_report) = encoder.encode(exponents, &tree.book);
+
+        let startup = hist_report.cycles + tree.total_cycles();
+        let report = CompressReport {
+            histogram_cycles: hist_report.cycles,
+            tree_cycles: tree.total_cycles(),
+            encode_cycles: enc_report.cycles,
+            startup_cycles: startup,
+            total_cycles: startup + enc_report.cycles,
+            payload_bits: enc_report.bits,
+            header_bits: tree.book.header_bits(),
+            count: exponents.len() as u64,
+            hit_rate: hist_report.hit_rate,
+            escapes: enc_report.escapes,
+        };
+        Ok((tree.book, payload, report))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use lexi_core::bitstream::BitReader;
+    use lexi_core::prng::Rng;
+    use lexi_core::proptest::check;
+    use lexi_core::Bf16;
+
+    fn gaussian_exponents(n: usize, sigma: f64, seed: u64) -> Vec<u8> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| Bf16::from_f32(rng.normal_with(0.0, sigma) as f32).exponent())
+            .collect()
+    }
+
+    #[test]
+    fn startup_is_amortized() {
+        // §4.3: the 78-cycle-class startup is negligible against ~2M
+        // activations per layer; throughput approaches `lanes`/cycle.
+        let data = gaussian_exponents(200_000, 0.02, 5);
+        let comp = Compressor::new(CompressorConfig::paper_default());
+        let (_, _, report) = comp.compress(&data).unwrap();
+        assert!(report.throughput() > 9.5, "throughput {}", report.throughput());
+        assert!(report.startup_cycles < 200, "startup {}", report.startup_cycles);
+    }
+
+    #[test]
+    fn compresses_gaussian_to_paper_band() {
+        let data = gaussian_exponents(100_000, 0.02, 9);
+        let comp = Compressor::new(CompressorConfig::paper_default());
+        let (_, _, report) = comp.compress(&data).unwrap();
+        let cr = report.ratio();
+        assert!((2.2..4.5).contains(&cr), "CR {cr}");
+    }
+
+    #[test]
+    fn stale_window_codebook_remains_lossless() {
+        check("compressor lossless with 512-window book", 40, |g| {
+            let n = g.usize(600..5000);
+            let data = g.vec(n, |g| {
+                if g.bool(0.9) {
+                    120 + (g.usize(0..8) as u8)
+                } else {
+                    g.u8() // rare outliers → escapes
+                }
+            });
+            let comp = Compressor::new(CompressorConfig::paper_default());
+            let (book, payload, report) = comp.compress(&data).unwrap();
+            let mut r = BitReader::with_len(&payload, report.payload_bits as usize);
+            let dec = book.decoder();
+            let out: Vec<u8> = (0..data.len())
+                .map(|_| dec.decode(&mut r).unwrap())
+                .collect();
+            assert_eq!(out, data);
+        });
+    }
+
+    #[test]
+    fn short_streams_work() {
+        // Streams shorter than the sample window.
+        let data = gaussian_exponents(17, 0.02, 3);
+        let comp = Compressor::new(CompressorConfig::paper_default());
+        let (book, payload, report) = comp.compress(&data).unwrap();
+        let mut r = BitReader::with_len(&payload, report.payload_bits as usize);
+        let dec = book.decoder();
+        let out: Vec<u8> = (0..17).map(|_| dec.decode(&mut r).unwrap()).collect();
+        assert_eq!(out, data);
+    }
+}

@@ -1,0 +1,322 @@
+//! Multi-stage LUT decompression circuit (paper §4.4, Fig. 3b).
+//!
+//! A naive single LUT indexed by the maximum code length is fast but
+//! area-hungry; LEXI segments the codebook by code length across stages
+//! with increasing prefix windows (8/16/24/32 bits in the chosen design).
+//! Stage k holds up to 8 **length-class** entries `{len, first_code,
+//! base_index}` — canonical decoding needs only one entry per code length,
+//! and each stage covers 8 lengths, so capacity is exact.
+//!
+//! A symbol whose codeword (plus raw escape byte, for ESC) fits in the
+//! stage-k window resolves in k cycles; short high-frequency codes resolve
+//! in stage 1 at line rate. Multiple decode lanes take whole flits
+//! round-robin (flit-atomic packing makes them independent).
+
+use lexi_core::bitstream::BitReader;
+use lexi_core::error::{Error, Result};
+use lexi_core::huffman::CodeBook;
+
+/// A multi-stage decoder configuration.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DecoderConfig {
+    /// Cumulative prefix window per stage, strictly increasing (bits).
+    pub stage_bits: Vec<u32>,
+    /// Length-class entries available per stage.
+    pub entries_per_stage: u32,
+}
+
+impl DecoderConfig {
+    /// The paper's chosen 4-stage design: 8/16/24/32-bit windows, 8
+    /// entries per stage.
+    pub fn paper_default() -> Self {
+        DecoderConfig {
+            stage_bits: vec![8, 16, 24, 32],
+            entries_per_stage: 8,
+        }
+    }
+
+    /// The monolithic comparison point: one 32-bit window holding every
+    /// length class (Fig. 6's "single 32-bit LUT").
+    pub fn monolithic() -> Self {
+        DecoderConfig {
+            stage_bits: vec![32],
+            entries_per_stage: 32,
+        }
+    }
+
+    /// Validate the config itself.
+    pub fn validate(&self) -> Result<()> {
+        if self.stage_bits.is_empty() {
+            return Err(Error::InvalidParameter("no stages".into()));
+        }
+        if !self.stage_bits.windows(2).all(|w| w[0] < w[1]) {
+            return Err(Error::InvalidParameter(
+                "stage windows must strictly increase".into(),
+            ));
+        }
+        if *self.stage_bits.last().expect("non-empty") > 32 {
+            return Err(Error::InvalidParameter("windows beyond 32 bits".into()));
+        }
+        Ok(())
+    }
+
+    /// The stage (1-based) that resolves a consumed bit-length, or None if
+    /// it exceeds the last window.
+    #[inline]
+    pub fn stage_of(&self, bits: u32) -> Option<u32> {
+        self.stage_bits
+            .iter()
+            .position(|&b| b >= bits)
+            .map(|k| k as u32 + 1)
+    }
+
+    /// Check that `book` (including its escape + raw byte) is decodable
+    /// and that no stage exceeds its entry capacity.
+    pub fn supports(&self, book: &CodeBook) -> Result<()> {
+        self.validate()?;
+        let worst = book.escape().len + 8;
+        if self.stage_of(worst).is_none() {
+            return Err(Error::InvalidParameter(format!(
+                "escape path needs {worst} bits > last window"
+            )));
+        }
+        // Count length classes per stage.
+        let mut classes: Vec<std::collections::BTreeSet<u32>> =
+            vec![Default::default(); self.stage_bits.len()];
+        for &(_, len) in book.canonical_pairs() {
+            let stage = self
+                .stage_of(len)
+                .ok_or_else(|| Error::InvalidParameter(format!("code length {len} too long")))?;
+            classes[stage as usize - 1].insert(len);
+        }
+        for (k, set) in classes.iter().enumerate() {
+            if set.len() as u32 > self.entries_per_stage {
+                return Err(Error::InvalidParameter(format!(
+                    "stage {} needs {} length classes > capacity {}",
+                    k + 1,
+                    set.len(),
+                    self.entries_per_stage
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Per-stage (window_bits, entries) — input to the area model.
+    pub fn stage_shapes(&self) -> Vec<(u32, u32)> {
+        self.stage_bits
+            .iter()
+            .map(|&b| (b, self.entries_per_stage))
+            .collect()
+    }
+}
+
+/// Cycle report for decoding one stream.
+#[derive(Clone, Debug, Default)]
+pub struct DecodeReport {
+    /// Total decode cycles (Σ per-symbol stage latency).
+    pub cycles: u64,
+    /// Symbols resolved per stage (index 0 = stage 1).
+    pub per_stage: Vec<u64>,
+    /// Symbols decoded.
+    pub symbols: u64,
+}
+
+impl DecodeReport {
+    /// Average cycles per symbol.
+    pub fn avg_latency(&self) -> f64 {
+        if self.symbols == 0 {
+            0.0
+        } else {
+            self.cycles as f64 / self.symbols as f64
+        }
+    }
+}
+
+/// The multi-stage decoder unit.
+pub struct DecoderUnit {
+    cfg: DecoderConfig,
+}
+
+impl DecoderUnit {
+    /// Build a decoder; errors if the config is invalid.
+    pub fn new(cfg: DecoderConfig) -> Result<Self> {
+        cfg.validate()?;
+        Ok(DecoderUnit { cfg })
+    }
+
+    /// Decode `count` exponents from `r` using `book`, with cycle-accurate
+    /// stage accounting. Bit-exact with `lexi-core`'s canonical decoder.
+    pub fn decode(
+        &self,
+        r: &mut BitReader,
+        book: &CodeBook,
+        count: usize,
+    ) -> Result<(Vec<u8>, DecodeReport)> {
+        self.cfg.supports(book)?;
+        let dec = book.decoder();
+        let mut out = Vec::with_capacity(count);
+        let mut report = DecodeReport {
+            per_stage: vec![0; self.cfg.stage_bits.len()],
+            ..Default::default()
+        };
+        for _ in 0..count {
+            let before = r.pos();
+            let sym = dec.decode(r)?;
+            let consumed = (r.pos() - before) as u32;
+            let stage = self
+                .cfg
+                .stage_of(consumed)
+                .ok_or(Error::InvalidCodeword { offset: before })?;
+            report.cycles += stage as u64;
+            report.per_stage[stage as usize - 1] += 1;
+            report.symbols += 1;
+            out.push(sym);
+        }
+        Ok((out, report))
+    }
+
+    /// Config accessor.
+    pub fn config(&self) -> &DecoderConfig {
+        &self.cfg
+    }
+}
+
+/// L parallel decode lanes consuming independent units (flits) round-robin:
+/// makespan = max over lanes of summed latencies.
+pub fn parallel_makespan(per_unit_cycles: &[u64], lanes: usize) -> u64 {
+    assert!(lanes >= 1);
+    let mut lane_time = vec![0u64; lanes];
+    for (i, &c) in per_unit_cycles.iter().enumerate() {
+        lane_time[i % lanes] += c;
+    }
+    lane_time.into_iter().max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use lexi_core::bitstream::BitWriter;
+    use lexi_core::proptest::check;
+    use lexi_core::stats::Histogram;
+
+    fn encode(data: &[u8], book: &CodeBook) -> (Vec<u8>, usize) {
+        let mut w = BitWriter::new();
+        for &e in data {
+            book.encode_symbol(e, &mut w);
+        }
+        let bits = w.len_bits();
+        (w.into_bytes(), bits)
+    }
+
+    #[test]
+    fn roundtrip_with_stage_accounting() {
+        check("multistage decode roundtrip", 80, |g| {
+            let n = g.usize(1..2000);
+            let data = if g.bool(0.7) {
+                let a = g.usize(1..40);
+                g.skewed_bytes(n, a)
+            } else {
+                g.vec(n, |g| g.u8())
+            };
+            let hist = Histogram::from_bytes(&data);
+            let book = CodeBook::lexi_default(&hist).unwrap();
+            let (bytes, bits) = encode(&data, &book);
+            let mut r = BitReader::with_len(&bytes, bits);
+            let unit = DecoderUnit::new(DecoderConfig::paper_default()).unwrap();
+            let (out, report) = unit.decode(&mut r, &book, data.len()).unwrap();
+            assert_eq!(out, data);
+            assert_eq!(report.symbols, data.len() as u64);
+            assert_eq!(report.per_stage.iter().sum::<u64>(), data.len() as u64);
+        });
+    }
+
+    #[test]
+    fn skewed_streams_resolve_mostly_in_stage1() {
+        // Fig 6: the 4-stage design averages ~1.16 cycles/symbol because
+        // high-frequency codes are short.
+        check("stage-1 dominance", 30, |g| {
+            let data = g.skewed_bytes(4000, 10);
+            let hist = Histogram::from_bytes(&data);
+            let book = CodeBook::lexi_default(&hist).unwrap();
+            let (bytes, bits) = encode(&data, &book);
+            let mut r = BitReader::with_len(&bytes, bits);
+            let unit = DecoderUnit::new(DecoderConfig::paper_default()).unwrap();
+            let (_, report) = unit.decode(&mut r, &book, data.len()).unwrap();
+            assert!(
+                report.avg_latency() < 1.5,
+                "avg latency {}",
+                report.avg_latency()
+            );
+            assert!(report.per_stage[0] * 10 > report.symbols * 8);
+        });
+    }
+
+    #[test]
+    fn monolithic_is_single_cycle() {
+        let data: Vec<u8> = (0..1000u32).map(|i| 120 + (i % 6) as u8).collect();
+        let hist = Histogram::from_bytes(&data);
+        let book = CodeBook::lexi_default(&hist).unwrap();
+        let (bytes, bits) = encode(&data, &book);
+        let mut r = BitReader::with_len(&bytes, bits);
+        let unit = DecoderUnit::new(DecoderConfig::monolithic()).unwrap();
+        let (out, report) = unit.decode(&mut r, &book, data.len()).unwrap();
+        assert_eq!(out, data);
+        assert_eq!(report.avg_latency(), 1.0);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(DecoderConfig {
+            stage_bits: vec![],
+            entries_per_stage: 8
+        }
+        .validate()
+        .is_err());
+        assert!(DecoderConfig {
+            stage_bits: vec![8, 8],
+            entries_per_stage: 8
+        }
+        .validate()
+        .is_err());
+        assert!(DecoderConfig {
+            stage_bits: vec![16, 40],
+            entries_per_stage: 8
+        }
+        .validate()
+        .is_err());
+    }
+
+    #[test]
+    fn capacity_violation_detected() {
+        // A 2-stage 16/32 config with only 4 entries/stage cannot hold
+        // >4 length classes below 16 bits.
+        let data: Vec<u8> = (0..200u32)
+            .flat_map(|i| vec![(i % 20) as u8; (21 - i % 20) as usize])
+            .collect();
+        let hist = Histogram::from_bytes(&data);
+        let book = CodeBook::lexi_default(&hist).unwrap();
+        let cfg = DecoderConfig {
+            stage_bits: vec![16, 32],
+            entries_per_stage: 4,
+        };
+        // Depending on the histogram this book may have >4 classes ≤16.
+        let classes: std::collections::BTreeSet<u32> = book
+            .canonical_pairs()
+            .iter()
+            .map(|&(_, l)| l)
+            .filter(|&l| l <= 16)
+            .collect();
+        if classes.len() > 4 {
+            assert!(cfg.supports(&book).is_err());
+        }
+    }
+
+    #[test]
+    fn parallel_lanes_split_work() {
+        let units = vec![10u64, 10, 10, 10, 10, 10, 10, 10, 10, 10];
+        assert_eq!(parallel_makespan(&units, 1), 100);
+        assert_eq!(parallel_makespan(&units, 10), 10);
+        assert_eq!(parallel_makespan(&units, 3), 40);
+    }
+}

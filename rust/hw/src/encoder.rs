@@ -1,0 +1,118 @@
+//! M-lane LUT encoder (paper §4.2.2 step 3 + §4.3).
+//!
+//! After codebook generation, the 32-entry encoding LUT is replicated at
+//! each of the M lanes; every lane transforms one 8-bit exponent into its
+//! codeword per cycle, single-cycle lookup, no contention. Programming all
+//! LUT entries takes one cycle per entry (32 worst case), counted in
+//! [`crate::tree_builder::TreeReport::program_cycles`].
+//!
+//! The emitted bitstream is **bit-exact** with `lexi-core`'s
+//! `compress_with_book` payload: lanes model throughput, not reordering —
+//! the network interface re-serializes codewords in stream order when
+//! packing flits (§4.3).
+
+use lexi_core::bitstream::BitWriter;
+use lexi_core::huffman::CodeBook;
+
+/// Cycle-accurate encode of an exponent stream through M parallel lanes.
+#[derive(Clone, Debug)]
+pub struct EncodeReport {
+    /// Cycles to push the whole stream through the lanes (⌈n/M⌉: each lane
+    /// encodes one symbol/cycle).
+    pub cycles: u64,
+    /// Output payload bits (no header).
+    pub bits: u64,
+    /// Symbols encoded via the escape path.
+    pub escapes: u64,
+}
+
+/// The M-lane encoder unit.
+pub struct EncoderUnit {
+    lanes: usize,
+}
+
+impl EncoderUnit {
+    /// An encoder with `lanes` parallel LUTs (paper selects 10).
+    pub fn new(lanes: usize) -> Self {
+        assert!(lanes >= 1);
+        EncoderUnit { lanes }
+    }
+
+    /// Encode `exponents` with `book`, returning the payload bitstream and
+    /// the cycle report.
+    pub fn encode(&self, exponents: &[u8], book: &CodeBook) -> (Vec<u8>, EncodeReport) {
+        let mut w = BitWriter::new();
+        let mut escapes = 0u64;
+        for &e in exponents {
+            if book.code(e).is_none() {
+                escapes += 1;
+            }
+            book.encode_symbol(e, &mut w);
+        }
+        let bits = w.len_bits() as u64;
+        let cycles = (exponents.len() as u64).div_ceil(self.lanes as u64);
+        (
+            w.into_bytes(),
+            EncodeReport {
+                cycles,
+                bits,
+                escapes,
+            },
+        )
+    }
+
+    /// Sustained throughput in exponents per cycle (≡ lanes).
+    pub fn throughput(&self) -> usize {
+        self.lanes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use lexi_core::proptest::check;
+    use lexi_core::stats::Histogram;
+
+    #[test]
+    fn bit_exact_with_core() {
+        check("hw encode == sw encode", 60, |g| {
+            let n = g.usize(1..3000);
+            let a = g.usize(1..50);
+            let data = g.skewed_bytes(n, a);
+            let hist = Histogram::from_bytes(&data);
+            let book = CodeBook::lexi_default(&hist).unwrap();
+
+            let (hw_bytes, report) = EncoderUnit::new(10).encode(&data, &book);
+
+            let mut w = BitWriter::new();
+            for &e in &data {
+                book.encode_symbol(e, &mut w);
+            }
+            assert_eq!(report.bits as usize, w.len_bits());
+            assert_eq!(hw_bytes, w.into_bytes());
+        });
+    }
+
+    #[test]
+    fn lanes_scale_throughput() {
+        let data = vec![127u8; 1000];
+        let hist = Histogram::from_bytes(&data);
+        let book = CodeBook::lexi_default(&hist).unwrap();
+        let (_, r1) = EncoderUnit::new(1).encode(&data, &book);
+        let (_, r10) = EncoderUnit::new(10).encode(&data, &book);
+        assert_eq!(r1.cycles, 1000);
+        assert_eq!(r10.cycles, 100);
+    }
+
+    #[test]
+    fn escape_counting() {
+        // Alphabet of 40 with a 32-cap → 8 escaped symbols.
+        let data: Vec<u8> = (0..40u8).flat_map(|s| vec![s; (41 - s) as usize]).collect();
+        let hist = Histogram::from_bytes(&data);
+        let book = CodeBook::lexi_default(&hist).unwrap();
+        let (_, r) = EncoderUnit::new(4).encode(&data, &book);
+        let expected: u64 = data.iter().filter(|&&e| book.code(e).is_none()).count() as u64;
+        assert_eq!(r.escapes, expected);
+        assert!(r.escapes > 0);
+    }
+}

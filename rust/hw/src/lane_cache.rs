@@ -1,0 +1,205 @@
+//! Per-lane local frequency cache (paper §4.2.1).
+//!
+//! Each of the M histogram lanes owns a small fully-associative cache of
+//! `{exponent, count}` entries. A hit increments the local count in one
+//! cycle; a miss evicts the **oldest** entry (FIFO, as the paper specifies:
+//! "the oldest exponent is evicted") to the global histogram and installs
+//! the new exponent with count 1.
+
+/// One cache entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Entry {
+    pub exponent: u8,
+    pub count: u32,
+    /// Insertion order stamp for FIFO eviction.
+    pub inserted_at: u64,
+}
+
+/// Result of presenting one exponent to the cache.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Access {
+    /// Count incremented locally.
+    Hit,
+    /// Cache had a free slot; installed without eviction.
+    MissInstalled,
+    /// Evicted `(exponent, count)` to make room.
+    MissEvicted(u8, u32),
+}
+
+/// A single lane's local frequency cache.
+#[derive(Clone, Debug)]
+pub struct LaneCache {
+    entries: Vec<Entry>,
+    depth: usize,
+    next_stamp: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl LaneCache {
+    /// A cache with `depth` entries (paper sweeps 1..32, selects 8).
+    pub fn new(depth: usize) -> Self {
+        assert!(depth >= 1, "cache needs at least one entry");
+        LaneCache {
+            entries: Vec::with_capacity(depth),
+            depth,
+            next_stamp: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Present one exponent; returns what happened.
+    pub fn access(&mut self, exponent: u8) -> Access {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.exponent == exponent) {
+            e.count += 1;
+            self.hits += 1;
+            return Access::Hit;
+        }
+        self.misses += 1;
+        let stamp = self.next_stamp;
+        self.next_stamp += 1;
+        if self.entries.len() < self.depth {
+            self.entries.push(Entry {
+                exponent,
+                count: 1,
+                inserted_at: stamp,
+            });
+            return Access::MissInstalled;
+        }
+        // FIFO: evict the oldest insertion.
+        let idx = self
+            .entries
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| e.inserted_at)
+            .map(|(i, _)| i)
+            .expect("cache non-empty");
+        let victim = self.entries[idx];
+        self.entries[idx] = Entry {
+            exponent,
+            count: 1,
+            inserted_at: stamp,
+        };
+        Access::MissEvicted(victim.exponent, victim.count)
+    }
+
+    /// Drain all resident entries (end of histogram phase): every entry
+    /// must be flushed to the global histogram.
+    pub fn drain(&mut self) -> Vec<(u8, u32)> {
+        let out = self.entries.iter().map(|e| (e.exponent, e.count)).collect();
+        self.entries.clear();
+        out
+    }
+
+    /// Hit rate so far.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Entries currently resident.
+    pub fn occupancy(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Configured depth.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use lexi_core::proptest::check;
+
+    #[test]
+    fn hit_increments() {
+        let mut c = LaneCache::new(4);
+        assert_eq!(c.access(10), Access::MissInstalled);
+        assert_eq!(c.access(10), Access::Hit);
+        assert_eq!(c.access(10), Access::Hit);
+        assert_eq!(c.drain(), vec![(10, 3)]);
+    }
+
+    #[test]
+    fn fifo_eviction_order() {
+        let mut c = LaneCache::new(2);
+        c.access(1);
+        c.access(2);
+        // 3 evicts 1 (oldest), not 2.
+        assert_eq!(c.access(3), Access::MissEvicted(1, 1));
+        // 4 evicts 2.
+        assert_eq!(c.access(4), Access::MissEvicted(2, 1));
+    }
+
+    #[test]
+    fn hit_does_not_refresh_fifo_age() {
+        let mut c = LaneCache::new(2);
+        c.access(1);
+        c.access(2);
+        c.access(1); // hit — FIFO age unchanged
+        assert_eq!(c.access(3), Access::MissEvicted(1, 2));
+    }
+
+    #[test]
+    fn skewed_stream_depth8_exceeds_90pct() {
+        // Fig 4: 8-entry caches achieve >90% hit rate on exponent streams.
+        check("depth-8 hit rate", 30, |g| {
+            let data = g.skewed_bytes(4000, 12);
+            let mut c = LaneCache::new(8);
+            for &e in &data {
+                c.access(e);
+            }
+            assert!(c.hit_rate() > 0.85, "hit rate {}", c.hit_rate());
+        });
+    }
+
+    #[test]
+    fn prop_counts_conserved() {
+        // Σ(evicted counts) + Σ(drained counts) == number of accesses.
+        check("lane cache conserves counts", 100, |g| {
+            let depth = g.usize(1..16);
+            let n = g.usize(1..2000);
+            let data = g.vec(n, |g| g.u8());
+            let mut c = LaneCache::new(depth);
+            let mut total: u64 = 0;
+            for &e in &data {
+                if let Access::MissEvicted(_, cnt) = c.access(e) {
+                    total += cnt as u64;
+                }
+            }
+            total += c.drain().iter().map(|&(_, c)| c as u64).sum::<u64>();
+            assert_eq!(total, n as u64);
+        });
+    }
+
+    #[test]
+    fn prop_per_symbol_counts_exact() {
+        check("lane cache per-symbol histogram exact", 50, |g| {
+            let a = g.usize(1..20);
+            let n = g.usize(1..1500).max(1);
+            let data = g.skewed_bytes(n, a);
+            let mut c = LaneCache::new(g.usize(1..10));
+            let mut hist = [0u64; 256];
+            for &e in &data {
+                if let Access::MissEvicted(sym, cnt) = c.access(e) {
+                    hist[sym as usize] += cnt as u64;
+                }
+            }
+            for (sym, cnt) in c.drain() {
+                hist[sym as usize] += cnt as u64;
+            }
+            let mut expect = [0u64; 256];
+            for &e in &data {
+                expect[e as usize] += 1;
+            }
+            assert_eq!(hist, expect);
+        });
+    }
+}

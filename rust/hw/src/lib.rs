@@ -1,0 +1,44 @@
+//! # lexi-hw — cycle-accurate model of the LEXI codec hardware
+//!
+//! This crate models the microarchitecture of Fig. 3 of the paper at cycle
+//! granularity, bit-exactly against the `lexi-core` software codecs:
+//!
+//! * [`lane_cache`] — per-lane local frequency caches (8-entry, FIFO
+//!   eviction) that accelerate histogram construction (paper §4.2.1).
+//! * [`arbiter`] — the 3-cycle-grant arbiter serializing lane evictions
+//!   into the single-ported global histogram.
+//! * [`histogram_unit`] — M lanes + arbiter + global histogram, stepped one
+//!   cycle at a time; reports ingestion latency and per-lane hit rates
+//!   (Figs. 4 and 5).
+//! * [`bitonic`] — the 15-stage parallel bitonic sorting network for ≤32
+//!   elements (paper §4.2.2 step 1).
+//! * [`tree_builder`] — priority-queue Huffman construction, 31-cycle worst
+//!   case (step 2), emitting code lengths for canonical assignment.
+//! * [`encoder`] — LUT programming (32 cycles) + M-lane single-cycle
+//!   encode, producing bitstreams identical to `lexi-core` (step 3, §4.3).
+//! * [`decoder`] — the multi-stage LUT decoder (8/16/24/32-bit prefixes,
+//!   8 length-class entries per stage) with per-symbol stage latency and
+//!   parallel decode lanes (§4.4).
+//! * [`compressor`] — the assembled egress pipeline: 512-sample histogram
+//!   phase → 78-cycle codebook pipeline → streaming encode.
+//! * [`area_power`] — GF 22 nm area/power model calibrated to the paper's
+//!   Table 4, with Stillmaker–Baas scaling to the 16 nm Simba node.
+
+pub mod arbiter;
+pub mod area_power;
+pub mod bitonic;
+pub mod compressor;
+pub mod decoder;
+pub mod encoder;
+pub mod histogram_unit;
+pub mod lane_cache;
+pub mod tree_builder;
+
+/// Clock frequency the paper synthesizes at (1 GHz): 1 cycle = 1 ns.
+pub const CLOCK_GHZ: f64 = 1.0;
+
+/// Convert cycles to nanoseconds at the synthesis clock.
+#[inline]
+pub fn cycles_to_ns(cycles: u64) -> f64 {
+    cycles as f64 / CLOCK_GHZ
+}

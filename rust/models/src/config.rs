@@ -1,0 +1,401 @@
+//! Block-level model configurations for the three evaluated LLMs.
+//!
+//! Checkpoints are unavailable offline, so each model exists at two scales:
+//!
+//! * [`ModelScale::Paper`] — dimensions chosen to land on the published
+//!   parameter counts (Jamba-tiny-dev ≈ 319 M, Zamba2 ≈ 1.2 B, Qwen1.5 ≈
+//!   1.8 B) with the right block mix; used by the analytic traffic model.
+//! * [`ModelScale::Tiny`] — a few-million-parameter variant with the same
+//!   block mix, runnable through the JAX/Pallas AOT path
+//!   (`python/compile/model.py` mirrors these dimensions exactly).
+
+/// The kind of a transformer/hybrid block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BlockKind {
+    /// Multi-head self-attention (+ per-block MLP where configured).
+    Attention,
+    /// Mamba selective-state-space block.
+    Mamba,
+    /// Mixture-of-experts MLP.
+    Moe,
+    /// Dense MLP.
+    Mlp,
+}
+
+/// Model scale variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelScale {
+    Paper,
+    Tiny,
+}
+
+/// A block-structured model description.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub scale: ModelScale,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    /// Expert hidden size (MoE blocks).
+    pub d_ff_expert: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    /// SSM state dimension per channel.
+    pub d_state: usize,
+    /// Mamba inner width (usually 2·d_model).
+    pub d_inner: usize,
+    /// Depthwise conv width in the Mamba block.
+    pub d_conv: usize,
+    pub vocab: usize,
+    /// Whether input/output embeddings share weights.
+    pub tied_embeddings: bool,
+    pub blocks: Vec<BlockKind>,
+}
+
+impl ModelConfig {
+    /// Head dimension.
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Parameters in one block of the given kind.
+    pub fn block_params(&self, kind: BlockKind) -> u64 {
+        let d = self.d_model as u64;
+        match kind {
+            // QKV + output projections (KV possibly grouped).
+            BlockKind::Attention => {
+                let kv = (self.n_kv_heads * self.head_dim()) as u64;
+                d * d * 2 + d * kv * 2
+            }
+            // in-proj (x,z) + conv + Δ/B/C projections + out-proj.
+            BlockKind::Mamba => {
+                let di = self.d_inner as u64;
+                let ds = self.d_state as u64;
+                d * di * 2           // in-proj to (x, z)
+                    + di * self.d_conv as u64
+                    + di * (ds * 2 + 1) // B, C, Δ projections (low-rank Δ folded)
+                    + di * ds           // A (log) parameter
+                    + di * d            // out-proj
+            }
+            BlockKind::Moe => {
+                let e = self.n_experts as u64;
+                let dfe = self.d_ff_expert as u64;
+                e * (d * dfe * 3) + d * e // gated experts + router
+            }
+            BlockKind::Mlp => d * self.d_ff as u64 * 3,
+        }
+    }
+
+    /// Embedding (+ unembedding) parameters.
+    pub fn embedding_params(&self) -> u64 {
+        let e = (self.vocab * self.d_model) as u64;
+        if self.tied_embeddings {
+            e
+        } else {
+            2 * e
+        }
+    }
+
+    /// Total parameter count.
+    pub fn total_params(&self) -> u64 {
+        self.embedding_params()
+            + self
+                .blocks
+                .iter()
+                .map(|&k| self.block_params(k))
+                .sum::<u64>()
+    }
+
+    /// Bytes of BF16 weights resident on compute chiplets (embeddings are
+    /// kept at the memory chiplets and streamed per token, so block
+    /// weights are what the WeightLoad phase moves).
+    pub fn block_weight_bytes(&self) -> u64 {
+        self.blocks
+            .iter()
+            .map(|&k| self.block_params(k) * 2)
+            .sum()
+    }
+
+    /// Per-token activation bytes crossing a block boundary.
+    pub fn act_bytes_per_token(&self) -> u64 {
+        self.d_model as u64 * 2
+    }
+
+    /// Per-token KV-cache bytes appended by one attention block.
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        (2 * self.n_kv_heads * self.head_dim()) as u64 * 2
+    }
+
+    /// SSM recurrent-state bytes of one Mamba block (sequence-length
+    /// independent — the hybrid models' key property).
+    pub fn ssm_state_bytes(&self) -> u64 {
+        (self.d_inner * self.d_state + self.d_inner * (self.d_conv - 1)) as u64 * 2
+    }
+
+    /// Approximate FLOPs for one token through one block (decode).
+    pub fn block_flops_per_token(&self, kind: BlockKind, context_len: u64) -> u64 {
+        let d = self.d_model as u64;
+        match kind {
+            BlockKind::Attention => {
+                let kv = (self.n_kv_heads * self.head_dim()) as u64;
+                // Projections + attention over the running context.
+                2 * (d * d * 2 + d * kv * 2) + 4 * context_len * d
+            }
+            BlockKind::Mamba => 2 * self.block_params(BlockKind::Mamba),
+            BlockKind::Moe => {
+                let dfe = self.d_ff_expert as u64;
+                2 * (self.top_k as u64) * d * dfe * 3 + 2 * d * self.n_experts as u64
+            }
+            BlockKind::Mlp => 2 * d * self.d_ff as u64 * 3,
+        }
+    }
+
+    // --- the three evaluated models -------------------------------------
+
+    /// Jamba-tiny-dev-like hybrid (paper scale ≈ 319 M params): mostly
+    /// Mamba with interleaved attention and MoE blocks (Jamba's 1:7
+    /// attention:Mamba ratio, MoE every other layer, scaled down).
+    pub fn jamba(scale: ModelScale) -> Self {
+        match scale {
+            ModelScale::Paper => {
+                let blocks = vec![
+                    BlockKind::Mamba,
+                    BlockKind::Moe,
+                    BlockKind::Mamba,
+                    BlockKind::Mlp,
+                    BlockKind::Attention,
+                    BlockKind::Moe,
+                    BlockKind::Mamba,
+                    BlockKind::Mlp,
+                    BlockKind::Mamba,
+                    BlockKind::Moe,
+                    BlockKind::Mamba,
+                    BlockKind::Mlp,
+                ];
+                ModelConfig {
+                    name: "jamba-tiny-dev",
+                    scale,
+                    d_model: 1024,
+                    n_heads: 16,
+                    n_kv_heads: 8,
+                    d_ff: 4096,
+                    d_ff_expert: 2048,
+                    n_experts: 8,
+                    top_k: 2,
+                    d_state: 16,
+                    d_inner: 2048,
+                    d_conv: 4,
+                    vocab: 65536,
+                    tied_embeddings: true,
+                    blocks,
+                }
+            }
+            ModelScale::Tiny => ModelConfig {
+                name: "jamba-tiny",
+                scale,
+                d_model: 128,
+                n_heads: 4,
+                n_kv_heads: 2,
+                d_ff: 512,
+                d_ff_expert: 256,
+                n_experts: 4,
+                top_k: 2,
+                d_state: 16,
+                d_inner: 256,
+                d_conv: 4,
+                vocab: 1024,
+                tied_embeddings: true,
+                blocks: vec![
+                    BlockKind::Mamba,
+                    BlockKind::Attention,
+                    BlockKind::Moe,
+                    BlockKind::Mamba,
+                ],
+            },
+        }
+    }
+
+    /// Zamba2-1.2B-like hybrid (paper scale ≈ 1.2 B): a deep Mamba
+    /// backbone with periodically applied shared attention blocks.
+    pub fn zamba(scale: ModelScale) -> Self {
+        match scale {
+            ModelScale::Paper => {
+                let mut blocks = Vec::new();
+                for i in 0..30 {
+                    blocks.push(BlockKind::Mamba);
+                    if i % 10 == 9 {
+                        blocks.push(BlockKind::Attention);
+                        blocks.push(BlockKind::Mlp);
+                    }
+                }
+                ModelConfig {
+                    name: "zamba2-1.2b",
+                    scale,
+                    d_model: 2048,
+                    n_heads: 32,
+                    n_kv_heads: 32,
+                    d_ff: 8192,
+                    d_ff_expert: 0,
+                    n_experts: 0,
+                    top_k: 0,
+                    d_state: 64,
+                    d_inner: 4096,
+                    d_conv: 4,
+                    vocab: 32000,
+                    tied_embeddings: true,
+                    blocks,
+                }
+            }
+            ModelScale::Tiny => {
+                let mut blocks = Vec::new();
+                for i in 0..4 {
+                    blocks.push(BlockKind::Mamba);
+                    if i == 3 {
+                        blocks.push(BlockKind::Attention);
+                    }
+                }
+                ModelConfig {
+                    name: "zamba-tiny",
+                    scale,
+                    d_model: 128,
+                    n_heads: 4,
+                    n_kv_heads: 4,
+                    d_ff: 512,
+                    d_ff_expert: 0,
+                    n_experts: 0,
+                    top_k: 0,
+                    d_state: 16,
+                    d_inner: 256,
+                    d_conv: 4,
+                    vocab: 1024,
+                    tied_embeddings: true,
+                    blocks,
+                }
+            }
+        }
+    }
+
+    /// Qwen1.5-1.8B-like transformer (paper scale ≈ 1.8 B): attention +
+    /// dense MLP throughout (the transformer-only comparison point).
+    pub fn qwen(scale: ModelScale) -> Self {
+        match scale {
+            ModelScale::Paper => {
+                let mut blocks = Vec::new();
+                for _ in 0..24 {
+                    blocks.push(BlockKind::Attention);
+                    blocks.push(BlockKind::Mlp);
+                }
+                ModelConfig {
+                    name: "qwen1.5-1.8b",
+                    scale,
+                    d_model: 2048,
+                    n_heads: 16,
+                    n_kv_heads: 16,
+                    d_ff: 5504,
+                    d_ff_expert: 0,
+                    n_experts: 0,
+                    top_k: 0,
+                    d_state: 0,
+                    d_inner: 0,
+                    d_conv: 1,
+                    vocab: 151936,
+                    tied_embeddings: true,
+                    blocks,
+                }
+            }
+            ModelScale::Tiny => {
+                let mut blocks = Vec::new();
+                for _ in 0..3 {
+                    blocks.push(BlockKind::Attention);
+                    blocks.push(BlockKind::Mlp);
+                }
+                ModelConfig {
+                    name: "qwen-tiny",
+                    scale,
+                    d_model: 128,
+                    n_heads: 4,
+                    n_kv_heads: 4,
+                    d_ff: 512,
+                    d_ff_expert: 0,
+                    n_experts: 0,
+                    top_k: 0,
+                    d_state: 0,
+                    d_inner: 0,
+                    d_conv: 1,
+                    vocab: 1024,
+                    tied_embeddings: true,
+                    blocks,
+                }
+            }
+        }
+    }
+
+    /// All three paper-scale models (the evaluation set).
+    pub fn paper_models() -> Vec<ModelConfig> {
+        vec![
+            ModelConfig::jamba(ModelScale::Paper),
+            ModelConfig::zamba(ModelScale::Paper),
+            ModelConfig::qwen(ModelScale::Paper),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn within_pct(v: u64, target: u64, pct: f64) -> bool {
+        let v = v as f64;
+        let t = target as f64;
+        (v - t).abs() <= t * pct / 100.0
+    }
+
+    #[test]
+    fn paper_param_counts() {
+        let j = ModelConfig::jamba(ModelScale::Paper).total_params();
+        let z = ModelConfig::zamba(ModelScale::Paper).total_params();
+        let q = ModelConfig::qwen(ModelScale::Paper).total_params();
+        assert!(within_pct(j, 319_000_000, 25.0), "jamba {j}");
+        assert!(within_pct(z, 1_200_000_000, 25.0), "zamba {z}");
+        assert!(within_pct(q, 1_800_000_000, 25.0), "qwen {q}");
+    }
+
+    #[test]
+    fn tiny_models_are_small() {
+        for cfg in [
+            ModelConfig::jamba(ModelScale::Tiny),
+            ModelConfig::zamba(ModelScale::Tiny),
+            ModelConfig::qwen(ModelScale::Tiny),
+        ] {
+            let p = cfg.total_params();
+            assert!(p < 25_000_000, "{} has {p} params", cfg.name);
+        }
+    }
+
+    #[test]
+    fn hybrid_state_is_sequence_independent() {
+        let z = ModelConfig::zamba(ModelScale::Paper);
+        // SSM state bytes do not depend on sequence length — the fixed
+        // size is the hybrid models' selling point.
+        assert!(z.ssm_state_bytes() > 0);
+        // KV grows per token.
+        assert!(z.kv_bytes_per_token() > 0);
+    }
+
+    #[test]
+    fn block_mix_matches_architectures() {
+        let j = ModelConfig::jamba(ModelScale::Paper);
+        assert!(j.blocks.contains(&BlockKind::Moe));
+        assert!(j.blocks.contains(&BlockKind::Mamba));
+        assert!(j.blocks.contains(&BlockKind::Attention));
+        let q = ModelConfig::qwen(ModelScale::Paper);
+        assert!(!q.blocks.contains(&BlockKind::Mamba));
+        let z = ModelConfig::zamba(ModelScale::Paper);
+        assert!(
+            z.blocks.iter().filter(|&&b| b == BlockKind::Mamba).count()
+                > z.blocks.len() * 2 / 3
+        );
+    }
+}

@@ -1,0 +1,90 @@
+//! Synthetic corpora standing in for WikiText-2 and C4.
+//!
+//! Inter-chiplet traffic depends on sequence shape (input/output lengths),
+//! not token identity; token streams are Zipf-distributed ids so anything
+//! content-sensitive (e.g. embedding-row locality studies) still sees
+//! realistic frequencies. Sequence shapes follow the paper's setup:
+//! WikiText-2 → 1 K input tokens, C4 → 2 K input tokens, both 512 output.
+
+use lexi_core::prng::{Rng, Zipf};
+
+/// A dataset stand-in.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Corpus {
+    pub name: &'static str,
+    pub input_tokens: usize,
+    pub output_tokens: usize,
+}
+
+impl Corpus {
+    /// WikiText-2 setup: 1 K input, 512 output.
+    pub fn wikitext2() -> Self {
+        Corpus {
+            name: "wikitext-2",
+            input_tokens: 1024,
+            output_tokens: 512,
+        }
+    }
+
+    /// C4 setup: 2 K input, 512 output.
+    pub fn c4() -> Self {
+        Corpus {
+            name: "c4",
+            input_tokens: 2048,
+            output_tokens: 512,
+        }
+    }
+
+    /// Both evaluation datasets.
+    pub fn all() -> Vec<Corpus> {
+        vec![Corpus::wikitext2(), Corpus::c4()]
+    }
+
+    /// A deterministic Zipf token stream of the input length.
+    pub fn tokens(&self, vocab: usize, seed: u64) -> Vec<u32> {
+        let mut rng = Rng::new(seed ^ fnv(self.name));
+        let z = Zipf::new(vocab, 1.05);
+        (0..self.input_tokens)
+            .map(|_| z.sample(&mut rng) as u32)
+            .collect()
+    }
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_sequence_shapes() {
+        assert_eq!(Corpus::wikitext2().input_tokens, 1024);
+        assert_eq!(Corpus::c4().input_tokens, 2048);
+        assert_eq!(Corpus::wikitext2().output_tokens, 512);
+        assert_eq!(Corpus::c4().output_tokens, 512);
+    }
+
+    #[test]
+    fn tokens_in_vocab_and_deterministic() {
+        let c = Corpus::wikitext2();
+        let a = c.tokens(4096, 3);
+        let b = c.tokens(4096, 3);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 1024);
+        assert!(a.iter().all(|&t| (t as usize) < 4096));
+    }
+
+    #[test]
+    fn corpora_differ() {
+        let a = Corpus::wikitext2().tokens(4096, 3);
+        let b = Corpus::c4().tokens(4096, 3);
+        assert_ne!(a[..100], b[..100]);
+    }
+}

@@ -1,0 +1,33 @@
+//! # lexi-models — hybrid-LLM model configs, synthetic tensors, corpora
+//!
+//! The paper evaluates Jamba-tiny-dev (319M), Zamba2-1.2B and Qwen1.5-1.8B
+//! on WikiText-2 (1K input tokens) and C4 (2K input tokens), 512 output
+//! tokens. Checkpoints and datasets are not available offline, so this
+//! crate provides architecture-faithful substitutes (documented in
+//! DESIGN.md):
+//!
+//! * [`config`] — block-level model descriptions (attention / Mamba / MoE /
+//!   MLP mix, dimensions, parameter counts) at two scales: `paper` (true
+//!   parameter counts, analytic traffic) and `tiny` (runnable in JAX via
+//!   the AOT path; matches `python/compile/model.py`).
+//! * [`weights`] — streaming synthetic weight tensors (Gaussian/Laplace
+//!   with fan-in-scaled σ per layer); reproduces the <3-bit exponent
+//!   entropy and <32-distinct-exponent concentration of trained LLMs
+//!   without materializing billions of values.
+//! * [`activations`] — synthetic activation/cache exponent streams for
+//!   paper-scale runs (layer-norm-bounded σ), used where the real tiny
+//!   model's tensors are not applicable.
+//! * [`corpus`] — deterministic Zipf token streams standing in for
+//!   WikiText-2 / C4 (traffic depends on sequence shape, not token
+//!   identity).
+//! * [`traffic`] — per-phase logical transfers (weights, activations,
+//!   KV-cache, SSM-state) for prefill + autoregressive decode.
+
+pub mod activations;
+pub mod config;
+pub mod corpus;
+pub mod traffic;
+pub mod weights;
+
+pub use config::{BlockKind, ModelConfig, ModelScale};
+pub use traffic::{Phase, TransferKind, TransferSpec};

@@ -1,0 +1,320 @@
+//! Logical transfer generation for prefill + autoregressive decode.
+//!
+//! Mirrors the paper's §5.1 dataflow on the Simba array:
+//! * **Weights** are loaded once from memory chiplets and stay resident
+//!   (that is why "compressed weights only" barely moves Table 3).
+//! * **Activations** cross chiplets at every block boundary, every token.
+//! * **Hybrid caches** (attention KV + Mamba SSM state) are written back
+//!   to memory block-by-block and fetched just before use — the dominant,
+//!   sequence-length-dependent traffic in decode.
+//!
+//! Transfers are *logical* (endpoint = memory or block); `lexi-sim` maps
+//! endpoints onto mesh nodes and applies compression ratios.
+
+use crate::config::{BlockKind, ModelConfig};
+use crate::corpus::Corpus;
+
+/// What a transfer carries (determines its compressibility class).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TransferKind {
+    Weights,
+    Activation,
+    KvCache,
+    SsmState,
+}
+
+/// Inference phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    WeightLoad,
+    Prefill,
+    /// Decode step index (0-based).
+    Decode(u32),
+}
+
+/// A logical endpoint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Endpoint {
+    /// Nearest memory chiplet (resolved by the system mapping).
+    Memory,
+    /// The chiplet hosting block `layer`.
+    Block(usize),
+}
+
+/// One logical transfer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TransferSpec {
+    pub phase: Phase,
+    pub layer: usize,
+    pub kind: TransferKind,
+    pub src: Endpoint,
+    pub dst: Endpoint,
+    /// Uncompressed payload size in bytes (BF16).
+    pub bytes: u64,
+}
+
+/// Generate the one-time weight-load transfers.
+pub fn weight_load(cfg: &ModelConfig) -> Vec<TransferSpec> {
+    cfg.blocks
+        .iter()
+        .enumerate()
+        .map(|(layer, &kind)| TransferSpec {
+            phase: Phase::WeightLoad,
+            layer,
+            kind: TransferKind::Weights,
+            src: Endpoint::Memory,
+            dst: Endpoint::Block(layer),
+            bytes: cfg.block_params(kind) * 2,
+        })
+        .collect()
+}
+
+/// Generate prefill transfers for the whole input sequence.
+pub fn prefill(cfg: &ModelConfig, corpus: &Corpus) -> Vec<TransferSpec> {
+    let n = corpus.input_tokens as u64;
+    let mut out = Vec::new();
+    for (layer, &kind) in cfg.blocks.iter().enumerate() {
+        // Input activations: embeddings from memory for block 0, else from
+        // the previous block's chiplet.
+        out.push(TransferSpec {
+            phase: Phase::Prefill,
+            layer,
+            kind: TransferKind::Activation,
+            src: if layer == 0 {
+                Endpoint::Memory
+            } else {
+                Endpoint::Block(layer - 1)
+            },
+            dst: Endpoint::Block(layer),
+            bytes: n * cfg.act_bytes_per_token(),
+        });
+        match kind {
+            BlockKind::Attention => out.push(TransferSpec {
+                phase: Phase::Prefill,
+                layer,
+                kind: TransferKind::KvCache,
+                src: Endpoint::Block(layer),
+                dst: Endpoint::Memory,
+                bytes: n * cfg.kv_bytes_per_token(),
+            }),
+            BlockKind::Mamba => out.push(TransferSpec {
+                phase: Phase::Prefill,
+                layer,
+                kind: TransferKind::SsmState,
+                src: Endpoint::Block(layer),
+                dst: Endpoint::Memory,
+                bytes: cfg.ssm_state_bytes(),
+            }),
+            _ => {}
+        }
+    }
+    // Final logits path back to memory (sampled there).
+    out.push(TransferSpec {
+        phase: Phase::Prefill,
+        layer: cfg.blocks.len() - 1,
+        kind: TransferKind::Activation,
+        src: Endpoint::Block(cfg.blocks.len() - 1),
+        dst: Endpoint::Memory,
+        bytes: cfg.act_bytes_per_token(),
+    });
+    out
+}
+
+/// Generate one decode step's transfers (`step` 0-based; the attention
+/// context is `input_tokens + step`).
+pub fn decode_step(cfg: &ModelConfig, corpus: &Corpus, step: u32) -> Vec<TransferSpec> {
+    let context = corpus.input_tokens as u64 + step as u64;
+    let phase = Phase::Decode(step);
+    let mut out = Vec::new();
+    for (layer, &kind) in cfg.blocks.iter().enumerate() {
+        out.push(TransferSpec {
+            phase,
+            layer,
+            kind: TransferKind::Activation,
+            src: if layer == 0 {
+                Endpoint::Memory
+            } else {
+                Endpoint::Block(layer - 1)
+            },
+            dst: Endpoint::Block(layer),
+            bytes: cfg.act_bytes_per_token(),
+        });
+        match kind {
+            BlockKind::Attention => {
+                // Fetch the whole running KV for this block, append one slot.
+                out.push(TransferSpec {
+                    phase,
+                    layer,
+                    kind: TransferKind::KvCache,
+                    src: Endpoint::Memory,
+                    dst: Endpoint::Block(layer),
+                    bytes: context * cfg.kv_bytes_per_token(),
+                });
+                out.push(TransferSpec {
+                    phase,
+                    layer,
+                    kind: TransferKind::KvCache,
+                    src: Endpoint::Block(layer),
+                    dst: Endpoint::Memory,
+                    bytes: cfg.kv_bytes_per_token(),
+                });
+            }
+            BlockKind::Mamba => {
+                out.push(TransferSpec {
+                    phase,
+                    layer,
+                    kind: TransferKind::SsmState,
+                    src: Endpoint::Memory,
+                    dst: Endpoint::Block(layer),
+                    bytes: cfg.ssm_state_bytes(),
+                });
+                out.push(TransferSpec {
+                    phase,
+                    layer,
+                    kind: TransferKind::SsmState,
+                    src: Endpoint::Block(layer),
+                    dst: Endpoint::Memory,
+                    bytes: cfg.ssm_state_bytes(),
+                });
+            }
+            _ => {}
+        }
+    }
+    // Logits to memory for sampling.
+    out.push(TransferSpec {
+        phase,
+        layer: cfg.blocks.len() - 1,
+        kind: TransferKind::Activation,
+        src: Endpoint::Block(cfg.blocks.len() - 1),
+        dst: Endpoint::Memory,
+        bytes: cfg.act_bytes_per_token(),
+    });
+    out
+}
+
+/// All transfers of a full inference (weight load + prefill + decode).
+pub fn full_inference(cfg: &ModelConfig, corpus: &Corpus) -> Vec<TransferSpec> {
+    let mut out = weight_load(cfg);
+    out.extend(prefill(cfg, corpus));
+    for t in 0..corpus.output_tokens as u32 {
+        out.extend(decode_step(cfg, corpus, t));
+    }
+    out
+}
+
+/// Aggregate bytes by transfer kind.
+pub fn volume_by_kind(transfers: &[TransferSpec]) -> std::collections::HashMap<TransferKind, u64> {
+    let mut m = std::collections::HashMap::new();
+    for t in transfers {
+        *m.entry(t.kind).or_insert(0) += t.bytes;
+    }
+    m
+}
+
+/// Aggregate bytes by the *block kind* the transfer belongs to (Fig 1c's
+/// Mamba / Transformer / MoE break-down). Weight-load traffic is excluded
+/// (Fig 1c is about runtime communication).
+pub fn volume_by_block_kind(
+    cfg: &ModelConfig,
+    transfers: &[TransferSpec],
+) -> std::collections::HashMap<BlockKind, u64> {
+    let mut m = std::collections::HashMap::new();
+    for t in transfers {
+        if t.phase == Phase::WeightLoad {
+            continue;
+        }
+        *m.entry(cfg.blocks[t.layer]).or_insert(0) += t.bytes;
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelScale;
+
+    #[test]
+    fn weight_load_moves_every_block_once() {
+        let cfg = ModelConfig::qwen(ModelScale::Paper);
+        let w = weight_load(&cfg);
+        assert_eq!(w.len(), cfg.blocks.len());
+        let total: u64 = w.iter().map(|t| t.bytes).sum();
+        assert_eq!(total, cfg.block_weight_bytes());
+    }
+
+    #[test]
+    fn kv_traffic_grows_with_context() {
+        let cfg = ModelConfig::qwen(ModelScale::Paper);
+        let corpus = Corpus::wikitext2();
+        let d0: u64 = decode_step(&cfg, &corpus, 0)
+            .iter()
+            .filter(|t| t.kind == TransferKind::KvCache)
+            .map(|t| t.bytes)
+            .sum();
+        let d511: u64 = decode_step(&cfg, &corpus, 511)
+            .iter()
+            .filter(|t| t.kind == TransferKind::KvCache)
+            .map(|t| t.bytes)
+            .sum();
+        assert!(d511 > d0);
+    }
+
+    #[test]
+    fn mamba_state_traffic_is_flat() {
+        let cfg = ModelConfig::zamba(ModelScale::Paper);
+        let corpus = Corpus::wikitext2();
+        let s = |step| -> u64 {
+            decode_step(&cfg, &corpus, step)
+                .iter()
+                .filter(|t| t.kind == TransferKind::SsmState)
+                .map(|t| t.bytes)
+                .sum()
+        };
+        assert_eq!(s(0), s(511));
+    }
+
+    #[test]
+    fn decode_dominates_comm_for_transformers() {
+        // The memory-wall premise: decode-phase traffic ≫ prefill traffic
+        // for a KV-heavy transformer.
+        let cfg = ModelConfig::qwen(ModelScale::Paper);
+        let corpus = Corpus::wikitext2();
+        let pre: u64 = prefill(&cfg, &corpus).iter().map(|t| t.bytes).sum();
+        let dec: u64 = (0..512)
+            .flat_map(|t| decode_step(&cfg, &corpus, t))
+            .map(|t| t.bytes)
+            .sum();
+        assert!(dec > pre * 10, "prefill {pre} decode {dec}");
+    }
+
+    #[test]
+    fn hybrid_reduces_cache_traffic_vs_transformer() {
+        // The hybrid-model premise (paper §1): replacing attention with
+        // Mamba slashes cache traffic per parameter.
+        let corpus = Corpus::wikitext2();
+        let cache_bytes = |cfg: &ModelConfig| -> u64 {
+            (0..512u32)
+                .flat_map(|t| decode_step(cfg, &corpus, t))
+                .filter(|t| matches!(t.kind, TransferKind::KvCache | TransferKind::SsmState))
+                .map(|t| t.bytes)
+                .sum()
+        };
+        let z = ModelConfig::zamba(ModelScale::Paper);
+        let q = ModelConfig::qwen(ModelScale::Paper);
+        let z_per_param = cache_bytes(&z) as f64 / z.total_params() as f64;
+        let q_per_param = cache_bytes(&q) as f64 / q.total_params() as f64;
+        assert!(
+            z_per_param < q_per_param,
+            "zamba {z_per_param} vs qwen {q_per_param}"
+        );
+    }
+
+    #[test]
+    fn volume_by_kind_sums_to_total() {
+        let cfg = ModelConfig::jamba(ModelScale::Paper);
+        let transfers = full_inference(&cfg, &Corpus::wikitext2());
+        let total: u64 = transfers.iter().map(|t| t.bytes).sum();
+        let by_kind = volume_by_kind(&transfers);
+        assert_eq!(by_kind.values().sum::<u64>(), total);
+    }
+}

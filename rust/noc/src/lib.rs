@@ -1,0 +1,27 @@
+//! # lexi-noc — cycle-level 2D-mesh network-on-interposer simulator
+//!
+//! The paper models inter-chiplet transfers with a modified cycle-accurate
+//! HeteroGarnet (gem5). That simulator is not available offline, so this
+//! crate provides the same abstraction level from scratch:
+//!
+//! * [`topology`] — 2D mesh coordinates and dimension-ordered (XY) routing.
+//! * [`packet`] — packets and flits (head/body/tail framing).
+//! * [`router`] — 5-port wormhole routers with credit-based flow control
+//!   and round-robin output arbitration.
+//! * [`network`] — the cycle loop: inject → route/forward → eject, with
+//!   per-packet latency and per-link utilization statistics.
+//! * [`traffic`] — synthetic patterns (uniform, transpose, hotspot) for
+//!   validation plus trace-driven injection for the chiplet system model.
+//!
+//! Links are parameterized in Gbps; with the paper's 100 Gbps NoI links
+//! and 128-bit flits, one network cycle is 1.28 ns.
+
+pub mod network;
+pub mod packet;
+pub mod router;
+pub mod topology;
+pub mod traffic;
+
+pub use network::{Network, NetworkConfig, SimStats};
+pub use packet::{Flit, FlitKind, PacketSpec};
+pub use topology::{Mesh, NodeId};

@@ -1,0 +1,98 @@
+//! Packets and flits.
+//!
+//! A message of `size_bits` becomes ⌈size/flit_bits⌉ flits framed
+//! head/body/tail (or a single-flit packet). Wormhole switching reserves a
+//! path per packet from head to tail.
+
+use crate::topology::NodeId;
+
+/// What position a flit holds in its packet.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlitKind {
+    Head,
+    Body,
+    Tail,
+    /// Single-flit packet (head and tail at once).
+    Single,
+}
+
+/// One flit in flight.
+#[derive(Clone, Copy, Debug)]
+pub struct Flit {
+    pub packet_id: u64,
+    pub kind: FlitKind,
+    pub src: NodeId,
+    pub dest: NodeId,
+    /// Sequence inside the packet (0 = head).
+    pub seq: u32,
+    /// Cycle at which this flit may next move (prevents multi-hop/cycle).
+    pub ready_at: u64,
+}
+
+impl Flit {
+    /// Does this flit release the wormhole lock?
+    #[inline]
+    pub fn is_tail(&self) -> bool {
+        matches!(self.kind, FlitKind::Tail | FlitKind::Single)
+    }
+
+    /// Does this flit acquire the wormhole lock?
+    #[inline]
+    pub fn is_head(&self) -> bool {
+        matches!(self.kind, FlitKind::Head | FlitKind::Single)
+    }
+}
+
+/// An injection request: one message on the NoI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PacketSpec {
+    pub src: NodeId,
+    pub dest: NodeId,
+    /// Message size in bits (payload incl. any codec headers).
+    pub size_bits: u64,
+    /// Earliest injection cycle.
+    pub inject_at: u64,
+}
+
+impl PacketSpec {
+    /// Number of flits for a given flit width.
+    pub fn flits(&self, flit_bits: u32) -> u32 {
+        (self.size_bits.div_ceil(flit_bits as u64)).max(1) as u32
+    }
+}
+
+/// Per-packet completion record.
+#[derive(Clone, Copy, Debug)]
+pub struct PacketRecord {
+    pub spec: PacketSpec,
+    pub inject_cycle: u64,
+    pub eject_cycle: u64,
+    pub flits: u32,
+}
+
+impl PacketRecord {
+    /// End-to-end latency in cycles (inject of head → eject of tail).
+    pub fn latency(&self) -> u64 {
+        self.eject_cycle - self.inject_cycle
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flit_count() {
+        let p = PacketSpec {
+            src: NodeId(0),
+            dest: NodeId(1),
+            size_bits: 129,
+            inject_at: 0,
+        };
+        assert_eq!(p.flits(128), 2);
+        let q = PacketSpec { size_bits: 128, ..p };
+        assert_eq!(q.flits(128), 1);
+        let z = PacketSpec { size_bits: 0, ..p };
+        assert_eq!(z.flits(128), 1);
+    }
+}

@@ -1,0 +1,166 @@
+//! 2D mesh topology and dimension-ordered routing.
+
+/// A node index in a 2D mesh (row-major).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u16);
+
+/// Router port directions. `Local` is the NI (network-interface) port.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(usize)]
+pub enum Port {
+    Local = 0,
+    North = 1,
+    South = 2,
+    East = 3,
+    West = 4,
+}
+
+/// Number of ports per router.
+pub const NUM_PORTS: usize = 5;
+
+impl Port {
+    /// All ports, index-aligned with the `repr`.
+    pub const ALL: [Port; NUM_PORTS] = [Port::Local, Port::North, Port::South, Port::East, Port::West];
+
+    /// The port a neighbouring router receives on when we send via `self`.
+    pub fn opposite(self) -> Port {
+        match self {
+            Port::Local => Port::Local,
+            Port::North => Port::South,
+            Port::South => Port::North,
+            Port::East => Port::West,
+            Port::West => Port::East,
+        }
+    }
+}
+
+/// A `cols × rows` 2D mesh (the paper's NoI is 6×6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Mesh {
+    pub cols: u16,
+    pub rows: u16,
+}
+
+impl Mesh {
+    /// Construct a mesh; panics on degenerate sizes.
+    pub fn new(cols: u16, rows: u16) -> Self {
+        assert!(cols >= 1 && rows >= 1, "mesh must be at least 1x1");
+        Mesh { cols, rows }
+    }
+
+    /// The paper's 6×6 Simba-style array.
+    pub fn simba_6x6() -> Self {
+        Mesh::new(6, 6)
+    }
+
+    /// Total nodes.
+    pub fn len(&self) -> usize {
+        self.cols as usize * self.rows as usize
+    }
+
+    /// True for the degenerate 0-node mesh (never constructable).
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// (x, y) of a node.
+    pub fn coords(&self, n: NodeId) -> (u16, u16) {
+        (n.0 % self.cols, n.0 / self.cols)
+    }
+
+    /// Node at (x, y).
+    pub fn node(&self, x: u16, y: u16) -> NodeId {
+        debug_assert!(x < self.cols && y < self.rows);
+        NodeId(y * self.cols + x)
+    }
+
+    /// Manhattan hop distance.
+    pub fn hops(&self, a: NodeId, b: NodeId) -> u32 {
+        let (ax, ay) = self.coords(a);
+        let (bx, by) = self.coords(b);
+        (ax.abs_diff(bx) + ay.abs_diff(by)) as u32
+    }
+
+    /// Dimension-ordered (XY) routing: next output port from `at` toward
+    /// `dest`. X first, then Y; `Local` when arrived.
+    pub fn route_xy(&self, at: NodeId, dest: NodeId) -> Port {
+        let (ax, ay) = self.coords(at);
+        let (dx, dy) = self.coords(dest);
+        if ax < dx {
+            Port::East
+        } else if ax > dx {
+            Port::West
+        } else if ay < dy {
+            Port::South
+        } else if ay > dy {
+            Port::North
+        } else {
+            Port::Local
+        }
+    }
+
+    /// Neighbour of `n` through `port`, if within the mesh.
+    pub fn neighbour(&self, n: NodeId, port: Port) -> Option<NodeId> {
+        let (x, y) = self.coords(n);
+        match port {
+            Port::Local => None,
+            Port::North => (y > 0).then(|| self.node(x, y - 1)),
+            Port::South => (y + 1 < self.rows).then(|| self.node(x, y + 1)),
+            Port::East => (x + 1 < self.cols).then(|| self.node(x + 1, y)),
+            Port::West => (x > 0).then(|| self.node(x - 1, y)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coords_roundtrip() {
+        let m = Mesh::simba_6x6();
+        for i in 0..m.len() as u16 {
+            let (x, y) = m.coords(NodeId(i));
+            assert_eq!(m.node(x, y), NodeId(i));
+        }
+    }
+
+    #[test]
+    fn xy_route_reaches_dest() {
+        let m = Mesh::new(5, 7);
+        for a in 0..m.len() as u16 {
+            for b in 0..m.len() as u16 {
+                let (mut at, dest) = (NodeId(a), NodeId(b));
+                let mut steps = 0;
+                loop {
+                    let p = m.route_xy(at, dest);
+                    if p == Port::Local {
+                        break;
+                    }
+                    at = m.neighbour(at, p).expect("XY route stays in-mesh");
+                    steps += 1;
+                    assert!(steps <= m.hops(NodeId(a), dest), "non-minimal route");
+                }
+                assert_eq!(at, dest);
+                assert_eq!(steps, m.hops(NodeId(a), dest));
+            }
+        }
+    }
+
+    #[test]
+    fn opposite_ports() {
+        assert_eq!(Port::North.opposite(), Port::South);
+        assert_eq!(Port::East.opposite(), Port::West);
+        assert_eq!(Port::West.opposite(), Port::East);
+        assert_eq!(Port::South.opposite(), Port::North);
+    }
+
+    #[test]
+    fn x_before_y() {
+        let m = Mesh::new(4, 4);
+        // From (0,0) to (2,2): first move must be East.
+        assert_eq!(m.route_xy(m.node(0, 0), m.node(2, 2)), Port::East);
+        // From (2,0) to (2,2): X aligned → South.
+        assert_eq!(m.route_xy(m.node(2, 0), m.node(2, 2)), Port::South);
+    }
+}

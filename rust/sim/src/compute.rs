@@ -1,0 +1,97 @@
+//! Per-block compute-latency model.
+//!
+//! LEXI never changes arithmetic (paper §5.3: "computation latency remains
+//! identical in uncompressed and compressed settings"), so a simple
+//! roofline model suffices: block latency = FLOPs / chiplet throughput.
+//! The default matches a Simba-class inference chiplet (≈2 TFLOP/s BF16).
+
+use lexi_models::config::ModelConfig;
+use lexi_models::corpus::Corpus;
+
+/// Compute model parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct ComputeModel {
+    /// Sustained BF16 throughput per chiplet, TFLOP/s.
+    pub chiplet_tflops: f64,
+}
+
+impl Default for ComputeModel {
+    fn default() -> Self {
+        ComputeModel { chiplet_tflops: 2.0 }
+    }
+}
+
+impl ComputeModel {
+    /// Nanoseconds for `flops` on one chiplet.
+    #[inline]
+    pub fn ns_for_flops(&self, flops: u64) -> f64 {
+        // TFLOP/s = 1e3 FLOP/ns.
+        flops as f64 / (self.chiplet_tflops * 1e3)
+    }
+
+    /// Compute time of one decode step: blocks execute in a pipeline but a
+    /// single request is serial across layers.
+    pub fn decode_step_ns(&self, cfg: &ModelConfig, context_len: u64) -> f64 {
+        cfg.blocks
+            .iter()
+            .map(|&k| self.ns_for_flops(cfg.block_flops_per_token(k, context_len)))
+            .sum()
+    }
+
+    /// Compute time of the prefill phase. Tokens pipeline across layers,
+    /// so the bound is the per-chiplet work: tokens × per-block time, for
+    /// the busiest block assignment (uniform here → sum over layers once,
+    /// times tokens, divided by the pipeline overlap ≈ layer count when
+    /// tokens ≫ layers — net: tokens × max-block time + fill/drain).
+    pub fn prefill_ns(&self, cfg: &ModelConfig, corpus: &Corpus) -> f64 {
+        let n = corpus.input_tokens as u64;
+        let per_token: Vec<f64> = cfg
+            .blocks
+            .iter()
+            .map(|&k| self.ns_for_flops(cfg.block_flops_per_token(k, corpus.input_tokens as u64)))
+            .collect();
+        let bottleneck = per_token.iter().cloned().fold(0.0f64, f64::max);
+        let fill: f64 = per_token.iter().sum();
+        n as f64 * bottleneck + fill
+    }
+
+    /// Total compute for a full inference.
+    pub fn total_ns(&self, cfg: &ModelConfig, corpus: &Corpus) -> f64 {
+        let mut t = self.prefill_ns(cfg, corpus);
+        for step in 0..corpus.output_tokens as u64 {
+            t += self.decode_step_ns(cfg, corpus.input_tokens as u64 + step);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use lexi_models::ModelScale;
+
+    #[test]
+    fn bigger_models_compute_longer() {
+        let m = ComputeModel::default();
+        let corpus = Corpus::wikitext2();
+        let j = m.total_ns(&ModelConfig::jamba(ModelScale::Paper), &corpus);
+        let q = m.total_ns(&ModelConfig::qwen(ModelScale::Paper), &corpus);
+        assert!(q > j, "qwen {q} jamba {j}");
+    }
+
+    #[test]
+    fn decode_step_grows_with_context_for_attention() {
+        let m = ComputeModel::default();
+        let cfg = ModelConfig::qwen(ModelScale::Paper);
+        assert!(m.decode_step_ns(&cfg, 2048) > m.decode_step_ns(&cfg, 128));
+    }
+
+    #[test]
+    fn throughput_scales_inverse() {
+        let cfg = ModelConfig::qwen(ModelScale::Paper);
+        let corpus = Corpus::wikitext2();
+        let slow = ComputeModel { chiplet_tflops: 1.0 }.total_ns(&cfg, &corpus);
+        let fast = ComputeModel { chiplet_tflops: 4.0 }.total_ns(&cfg, &corpus);
+        assert!((slow / fast - 4.0).abs() < 0.01);
+    }
+}

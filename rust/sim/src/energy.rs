@@ -1,0 +1,156 @@
+//! Interconnect energy model.
+//!
+//! The paper's Table 4 reports codec *power*; the flip side of LEXI's
+//! pitch is that moving fewer bits saves link energy far in excess of
+//! what the codecs burn. This module quantifies that: link energy per bit
+//! (interposer SerDes + wire), codec energy per compressed/decompressed
+//! value, and the net energy balance of a workload.
+//!
+//! Link energy constants follow published interposer numbers (≈0.5–1
+//! pJ/bit for organic/silicon interposer links; we default to 0.8 pJ/bit,
+//! the mid-range used in Simba-class studies). Codec energy derives from
+//! the Table 4 power at 1 GHz and the measured throughput (10 values /
+//! cycle across lanes).
+
+use crate::compression::{CompressionMode, CrTable};
+use crate::simba::SimbaSystem;
+use lexi_models::corpus::Corpus;
+use lexi_models::traffic::{self, TransferKind};
+use lexi_models::ModelConfig;
+
+/// Energy model parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyModel {
+    /// Inter-chiplet link energy, pJ per bit **per hop** (every traversed
+    /// link segment + router burns this; codecs pay only at endpoints —
+    /// that asymmetry is why compression wins on energy).
+    pub link_pj_per_bit: f64,
+    /// Compressor energy per value (10 lanes @ 25.13 mW ≈ 2.5 pJ/value at
+    /// 10 values/ns).
+    pub compress_pj_per_value: f64,
+    /// Decompressor energy per value (20.3 mW across 10 lanes).
+    pub decompress_pj_per_value: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        // Codec: Table 4 power totals at 1 GHz, 10 values/cycle.
+        // Compress side = local caches (2.5) + hist/codegen (5.23) +
+        // enc LUTs (17.4) = 25.13 mW → 25.13 pJ/ns ÷ 10 values/ns.
+        EnergyModel {
+            link_pj_per_bit: 0.8,
+            compress_pj_per_value: 2.513,
+            decompress_pj_per_value: 2.03,
+        }
+    }
+}
+
+/// Energy report for one workload.
+#[derive(Clone, Debug)]
+pub struct EnergyReport {
+    pub mode: CompressionMode,
+    /// Link energy, µJ.
+    pub link_uj: f64,
+    /// Codec energy (compress + decompress), µJ.
+    pub codec_uj: f64,
+}
+
+impl EnergyReport {
+    /// Total interconnect energy, µJ.
+    pub fn total_uj(&self) -> f64 {
+        self.link_uj + self.codec_uj
+    }
+}
+
+impl EnergyModel {
+    /// Evaluate the energy of a full inference under `mode` on `system`
+    /// (hop counts come from the XY routes between resolved endpoints).
+    pub fn run(
+        &self,
+        system: &SimbaSystem,
+        cfg: &ModelConfig,
+        corpus: &Corpus,
+        mode: CompressionMode,
+        crs: &CrTable,
+    ) -> EnergyReport {
+        let transfers = traffic::full_inference(cfg, corpus);
+        let mut link_pj = 0.0;
+        let mut codec_pj = 0.0;
+        for t in &transfers {
+            let wire_bits = crs.wire_bytes(t.bytes, t.kind, mode) as f64 * 8.0;
+            let hops = system.hops(t.src, t.dst, t.layer).max(1) as f64;
+            link_pj += wire_bits * self.link_pj_per_bit * hops;
+            if mode.compresses(t.kind) {
+                let values = t.bytes as f64 / 2.0; // BF16
+                // Weights compress offline: only decompression energy.
+                if t.kind != TransferKind::Weights {
+                    codec_pj += values * self.compress_pj_per_value;
+                }
+                codec_pj += values * self.decompress_pj_per_value;
+            }
+        }
+        EnergyReport {
+            mode,
+            link_uj: link_pj / 1e6,
+            codec_uj: codec_pj / 1e6,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use lexi_models::ModelScale;
+
+    use crate::simba::SimbaSystem;
+
+    fn setup() -> (SimbaSystem, ModelConfig, Corpus, CrTable) {
+        let cfg = ModelConfig::qwen(ModelScale::Paper);
+        let crs = CrTable::measure(&cfg, 42);
+        (
+            SimbaSystem::paper_default(),
+            cfg,
+            Corpus::wikitext2(),
+            crs,
+        )
+    }
+
+    #[test]
+    fn lexi_saves_net_energy() {
+        // The codec burn must be far below the link savings — otherwise
+        // the whole scheme is pointless.
+        let (sys, cfg, corpus, crs) = setup();
+        let m = EnergyModel::default();
+        let unc = m.run(&sys, &cfg, &corpus, CompressionMode::Uncompressed, &crs);
+        let lexi = m.run(&sys, &cfg, &corpus, CompressionMode::Lexi, &crs);
+        assert!(lexi.total_uj() < unc.total_uj());
+        let savings = 1.0 - lexi.total_uj() / unc.total_uj();
+        assert!((0.20..0.45).contains(&savings), "savings {savings:.3}");
+        // Codec energy well below what it saves on the links.
+        let link_saved = unc.link_uj - lexi.link_uj;
+        assert!(
+            lexi.codec_uj < 0.5 * link_saved,
+            "codec {} vs saved {}",
+            lexi.codec_uj,
+            link_saved
+        );
+    }
+
+    #[test]
+    fn uncompressed_burns_no_codec_energy() {
+        let (sys, cfg, corpus, crs) = setup();
+        let r =
+            EnergyModel::default().run(&sys, &cfg, &corpus, CompressionMode::Uncompressed, &crs);
+        assert_eq!(r.codec_uj, 0.0);
+    }
+
+    #[test]
+    fn weights_only_skips_runtime_compress_energy() {
+        let (sys, cfg, corpus, crs) = setup();
+        let m = EnergyModel::default();
+        let wo = m.run(&sys, &cfg, &corpus, CompressionMode::WeightsOnly, &crs);
+        let lexi = m.run(&sys, &cfg, &corpus, CompressionMode::Lexi, &crs);
+        assert!(wo.codec_uj < lexi.codec_uj);
+        assert!(wo.codec_uj > 0.0);
+    }
+}

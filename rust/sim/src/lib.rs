@@ -1,0 +1,26 @@
+//! # lexi-sim — Simba chiplet system model and end-to-end engine
+//!
+//! Glues the substrates together into the paper's evaluation platform
+//! (§5.1): a 6×6 homogeneous chiplet array on a 2D-mesh NoI with 100 Gbps
+//! links, block-level kernel mapping, memory chiplets holding weights and
+//! hybrid caches, and LEXI codecs at every router ingress/egress.
+//!
+//! * [`simba`] — the array: memory-node placement, block→chiplet mapping,
+//!   endpoint resolution.
+//! * [`compression`] — compression modes (uncompressed / weights-only /
+//!   LEXI) and measured per-kind wire ratios (value-level, including sign
+//!   + mantissa passthrough and flit framing).
+//! * [`compute`] — per-block compute-latency model (keeps computation
+//!   constant across modes, as the paper notes).
+//! * [`engine`] — the end-to-end analytic engine (full paper-scale
+//!   workloads) with a cycle-accurate NoC cross-check for small windows.
+
+pub mod compression;
+pub mod compute;
+pub mod energy;
+pub mod engine;
+pub mod simba;
+
+pub use compression::{CompressionMode, CrTable};
+pub use engine::{E2eReport, Engine};
+pub use simba::SimbaSystem;

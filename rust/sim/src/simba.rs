@@ -1,0 +1,122 @@
+//! The Simba-style 6×6 chiplet array (paper §5.1).
+//!
+//! A homogeneous mesh of compute chiplets plus memory chiplets at the mesh
+//! edge (package-level DRAM/HBM attach points). Model blocks are mapped
+//! round-robin across compute chiplets; memory endpoints resolve to the
+//! memory chiplet nearest the referencing block's chiplet.
+
+use lexi_models::traffic::Endpoint;
+use lexi_models::ModelConfig;
+use lexi_noc::{Mesh, NodeId};
+
+/// The chiplet system.
+#[derive(Clone, Debug)]
+pub struct SimbaSystem {
+    pub mesh: Mesh,
+    /// Nodes hosting memory controllers (edge-attached).
+    pub memory_nodes: Vec<NodeId>,
+    /// Remaining nodes, in mapping order.
+    pub compute_nodes: Vec<NodeId>,
+}
+
+impl SimbaSystem {
+    /// The paper's 6×6 array with four edge-center memory chiplets
+    /// (west/east column centers — HBM PHYs live on package edges).
+    pub fn paper_default() -> Self {
+        Self::new(Mesh::simba_6x6(), &[(0, 2), (0, 3), (5, 2), (5, 3)])
+    }
+
+    /// Custom array: `memory_xy` lists memory-chiplet coordinates.
+    pub fn new(mesh: Mesh, memory_xy: &[(u16, u16)]) -> Self {
+        let memory_nodes: Vec<NodeId> = memory_xy.iter().map(|&(x, y)| mesh.node(x, y)).collect();
+        assert!(!memory_nodes.is_empty(), "need at least one memory chiplet");
+        let compute_nodes: Vec<NodeId> = (0..mesh.len() as u16)
+            .map(NodeId)
+            .filter(|n| !memory_nodes.contains(n))
+            .collect();
+        SimbaSystem {
+            mesh,
+            memory_nodes,
+            compute_nodes,
+        }
+    }
+
+    /// Chiplet hosting block `layer` (round-robin over compute chiplets,
+    /// consecutive blocks on neighbouring mapping slots).
+    pub fn block_node(&self, layer: usize) -> NodeId {
+        self.compute_nodes[layer % self.compute_nodes.len()]
+    }
+
+    /// Memory chiplet nearest to `node`.
+    pub fn nearest_memory(&self, node: NodeId) -> NodeId {
+        *self
+            .memory_nodes
+            .iter()
+            .min_by_key(|&&m| self.mesh.hops(node, m))
+            .expect("memory nodes non-empty")
+    }
+
+    /// Resolve a logical endpoint for a transfer touching `layer`.
+    pub fn resolve(&self, ep: Endpoint, layer: usize) -> NodeId {
+        match ep {
+            Endpoint::Block(l) => self.block_node(l),
+            Endpoint::Memory => self.nearest_memory(self.block_node(layer)),
+        }
+    }
+
+    /// Mesh hops between the resolved endpoints of a (src, dst) pair.
+    pub fn hops(&self, src: Endpoint, dst: Endpoint, layer: usize) -> u32 {
+        self.mesh
+            .hops(self.resolve(src, layer), self.resolve(dst, layer))
+    }
+
+    /// Sanity: can this system host the model (≥1 compute chiplet)?
+    pub fn fits(&self, _cfg: &ModelConfig) -> bool {
+        !self.compute_nodes.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use lexi_models::ModelScale;
+
+    #[test]
+    fn paper_array_shape() {
+        let s = SimbaSystem::paper_default();
+        assert_eq!(s.mesh.len(), 36);
+        assert_eq!(s.memory_nodes.len(), 4);
+        assert_eq!(s.compute_nodes.len(), 32);
+    }
+
+    #[test]
+    fn blocks_map_round_robin() {
+        let s = SimbaSystem::paper_default();
+        let cfg = ModelConfig::qwen(ModelScale::Paper);
+        assert!(s.fits(&cfg));
+        let n0 = s.block_node(0);
+        let n32 = s.block_node(32);
+        assert_eq!(n0, n32); // wraps after 32 compute chiplets
+        assert_ne!(s.block_node(0), s.block_node(1));
+    }
+
+    #[test]
+    fn nearest_memory_is_minimal() {
+        let s = SimbaSystem::paper_default();
+        for layer in 0..8 {
+            let b = s.block_node(layer);
+            let m = s.nearest_memory(b);
+            for &other in &s.memory_nodes {
+                assert!(s.mesh.hops(b, m) <= s.mesh.hops(b, other));
+            }
+        }
+    }
+
+    #[test]
+    fn memory_nodes_excluded_from_compute() {
+        let s = SimbaSystem::paper_default();
+        for m in &s.memory_nodes {
+            assert!(!s.compute_nodes.contains(m));
+        }
+    }
+}

@@ -1,0 +1,500 @@
+//! The `lexi` command-line driver (hand-rolled args: no clap offline).
+//!
+//! ```text
+//! lexi profile  [--model jamba] [--decode 8] [--artifacts DIR]
+//! lexi e2e      [--scale paper|tiny] [--model NAME|all] [--dataset wikitext2|c4|all]
+//! lexi table2
+//! lexi hw
+//! lexi noc      [--pattern uniform|transpose|hotspot] [--mesh 6x6]
+//! lexi dse      [--what hitrate|codebook|decoder]
+//! ```
+
+use crate::coordinator::Session;
+use crate::runtime::{Manifest, Runtime};
+use anyhow::{anyhow, bail, Result};
+use lexi_bench::{fmt_ns, fmt_ratio, Table};
+use lexi_hw::area_power::{AreaPower, LexiHwConfig};
+use lexi_hw::decoder::DecoderConfig;
+use lexi_hw::histogram_unit::{HistConfig, HistogramUnit};
+use lexi_models::corpus::Corpus;
+use lexi_models::weights::WeightStream;
+use lexi_models::{ModelConfig, ModelScale};
+use lexi_noc::{Mesh, Network, NetworkConfig, NodeId};
+use lexi_sim::compression::{CompressionMode, CrTable};
+use lexi_sim::engine::Engine;
+use std::collections::HashMap;
+
+/// Parsed flags: `--key value` pairs after the subcommand.
+pub struct Flags {
+    map: HashMap<String, String>,
+}
+
+impl Flags {
+    /// Parse from raw args (after the subcommand).
+    pub fn parse(args: &[String]) -> Result<Self> {
+        let mut map = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let key = args[i]
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got '{}'", args[i]))?;
+            let val = args
+                .get(i + 1)
+                .ok_or_else(|| anyhow!("--{key} needs a value"))?;
+            map.insert(key.to_string(), val.clone());
+            i += 2;
+        }
+        Ok(Flags { map })
+    }
+
+    /// Flag value or default.
+    pub fn get<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.map.get(key).map(String::as_str).unwrap_or(default)
+    }
+
+    /// Numeric flag.
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
+        }
+    }
+}
+
+/// Entry point used by `main`.
+pub fn run(args: Vec<String>) -> Result<()> {
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = Flags::parse(args.get(1..).unwrap_or(&[]))?;
+    match cmd {
+        "profile" => cmd_profile(&flags),
+        "e2e" => cmd_e2e(&flags),
+        "table2" => cmd_table2(),
+        "hw" => cmd_hw(),
+        "noc" => cmd_noc(&flags),
+        "dse" => cmd_dse(&flags),
+        "energy" => cmd_energy(&flags),
+        "serve" => cmd_serve(&flags),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            bail!("unknown command '{other}'")
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "lexi — lossless BF16 exponent coding for inter-chiplet communication\n\
+         \n\
+         commands:\n\
+         \x20 profile  --model jamba|zamba|qwen --decode N --artifacts DIR\n\
+         \x20          run the AOT model via PJRT; profile real exponent streams\n\
+         \x20 e2e      --scale paper|tiny --model NAME|all --dataset wikitext2|c4|all\n\
+         \x20          Table 3 / Fig 7: comm + end-to-end latency per mode\n\
+         \x20 table2   exponent CR comparison (RLE / BDI / LEXI) on weights\n\
+         \x20 hw       Table 4: area/power breakdown (GF 22 nm + 16 nm scaling)\n\
+         \x20 noc      --pattern uniform|transpose|hotspot — cycle-accurate NoI run\n\
+         \x20 dse      --what hitrate|codebook|decoder — design-space sweeps (Figs 4-6)\n\
+         \x20 energy   interconnect energy per inference (link vs codec)\n\
+         \x20 serve    --requests N — concurrent-decode throughput ceiling"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flags_parse_pairs() {
+        let args: Vec<String> = ["--model", "jamba", "--decode", "8"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let f = Flags::parse(&args).unwrap();
+        assert_eq!(f.get("model", "x"), "jamba");
+        assert_eq!(f.get_usize("decode", 0).unwrap(), 8);
+        assert_eq!(f.get("missing", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn flags_reject_malformed() {
+        let bad1: Vec<String> = vec!["model".into()];
+        assert!(Flags::parse(&bad1).is_err());
+        let bad2: Vec<String> = vec!["--model".into()];
+        assert!(Flags::parse(&bad2).is_err());
+        let bad3: Vec<String> = vec!["--n".into(), "abc".into()];
+        assert!(Flags::parse(&bad3).unwrap().get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(vec!["frobnicate".into()]).is_err());
+        assert!(run(vec!["help".into()]).is_ok());
+    }
+}
+
+// --- profile ---------------------------------------------------------------
+
+fn cmd_profile(flags: &Flags) -> Result<()> {
+    let model = flags.get("model", "jamba");
+    let steps = flags.get_usize("decode", 8)?;
+    let artifacts = flags.get("artifacts", "artifacts");
+
+    let manifest = Manifest::load(artifacts)?;
+    let rt = Runtime::cpu()?;
+    eprintln!("pjrt platform: {}", rt.platform());
+    let loaded = rt.load_model(&manifest, model)?;
+    let mm = loaded.manifest.clone();
+    let corpus = Corpus::wikitext2();
+    let tokens: Vec<i32> = corpus
+        .tokens(mm.vocab, 7)
+        .iter()
+        .take(mm.seq_in)
+        .map(|&t| t as i32)
+        .collect();
+
+    let session = Session::new(loaded);
+    let report = session.run(&tokens, steps)?;
+
+    println!(
+        "\nmodel={} prompt={} generated={:?}",
+        report.model, report.prompt_len, report.generated
+    );
+    let mut t = Table::new(&[
+        "stream", "kind", "values", "H(exp)", "H(mant)", "#exp", "LEXI", "RLE", "BDI", "wire",
+    ]);
+    for p in &report.profiles {
+        t.row(vec![
+            p.name.clone(),
+            format!("{:?}", p.kind),
+            p.count.to_string(),
+            format!("{:.2}", p.exp_entropy),
+            format!("{:.2}", p.mant_entropy),
+            p.exp_distinct.to_string(),
+            fmt_ratio(p.lexi_cr),
+            fmt_ratio(p.rle_cr),
+            fmt_ratio(p.bdi_cr),
+            fmt_ratio(p.wire_ratio),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nmean exponent entropy: {:.2} bits (paper: <3 bits)",
+        report.mean_exp_entropy()
+    );
+    Ok(())
+}
+
+// --- e2e (Table 3 / Fig 7) ---------------------------------------------------
+
+fn cmd_e2e(flags: &Flags) -> Result<()> {
+    let scale = match flags.get("scale", "paper") {
+        "paper" => ModelScale::Paper,
+        "tiny" => ModelScale::Tiny,
+        other => bail!("unknown scale '{other}'"),
+    };
+    let model_sel = flags.get("model", "all");
+    let ds_sel = flags.get("dataset", "all");
+
+    let models: Vec<ModelConfig> = [
+        ModelConfig::jamba(scale),
+        ModelConfig::zamba(scale),
+        ModelConfig::qwen(scale),
+    ]
+    .into_iter()
+    .filter(|m| model_sel == "all" || m.name.contains(model_sel))
+    .collect();
+    if models.is_empty() {
+        bail!("no model matches '{model_sel}'");
+    }
+    let corpora: Vec<Corpus> = Corpus::all()
+        .into_iter()
+        .filter(|c| ds_sel == "all" || c.name.contains(ds_sel))
+        .collect();
+
+    let engine = Engine::paper_default();
+    let mut t3 = Table::new(&["dataset", "method", "model", "comm (ms)", "e2e (ms)", "comm %"]);
+    for corpus in &corpora {
+        for cfg in &models {
+            let crs = CrTable::measure(cfg, 42);
+            for mode in CompressionMode::ALL {
+                let r = engine.run(cfg, corpus, mode, &crs);
+                t3.row(vec![
+                    corpus.name.into(),
+                    format!("{mode:?}"),
+                    cfg.name.into(),
+                    format!("{:.2}", r.comm_ms()),
+                    format!("{:.2}", r.e2e_ms()),
+                    format!("{:.0}%", r.comm_fraction() * 100.0),
+                ]);
+            }
+        }
+    }
+    t3.print();
+
+    println!("\nreductions vs uncompressed (paper: comm 33-45%, e2e 30-35%):");
+    let mut t7 = Table::new(&["dataset", "model", "comm red.", "e2e red."]);
+    for corpus in &corpora {
+        for cfg in &models {
+            let crs = CrTable::measure(cfg, 42);
+            let unc = engine.run(cfg, corpus, CompressionMode::Uncompressed, &crs);
+            let lexi = engine.run(cfg, corpus, CompressionMode::Lexi, &crs);
+            t7.row(vec![
+                corpus.name.into(),
+                cfg.name.into(),
+                format!("{:.1}%", (1.0 - lexi.comm_ns / unc.comm_ns) * 100.0),
+                format!("{:.1}%", (1.0 - lexi.e2e_ns() / unc.e2e_ns()) * 100.0),
+            ]);
+        }
+    }
+    t7.print();
+    Ok(())
+}
+
+// --- table2 ------------------------------------------------------------------
+
+fn cmd_table2() -> Result<()> {
+    let mut t = Table::new(&["model", "Base", "RLE", "BDI", "LEXI"]);
+    for cfg in ModelConfig::paper_models() {
+        let mut lexi = 0.0;
+        let mut rle_r = 0.0;
+        let mut bdi_r = 0.0;
+        let layers = [0usize, cfg.blocks.len() / 2, cfg.blocks.len() - 1];
+        for &layer in &layers {
+            let exps = WeightStream::sample_exponents(&cfg, layer, 42, 200_000);
+            lexi += lexi_core::huffman::compress_exponents(&exps)?.ratio();
+            rle_r += lexi_core::rle::coding_ratio(&exps);
+            bdi_r += lexi_core::bdi::coding_ratio(&exps);
+        }
+        let n = layers.len() as f64;
+        t.row(vec![
+            cfg.name.into(),
+            "1.00×".into(),
+            fmt_ratio(rle_r / n),
+            fmt_ratio(bdi_r / n),
+            fmt_ratio(lexi / n),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+// --- hw (Table 4) --------------------------------------------------------------
+
+fn cmd_hw() -> Result<()> {
+    let bp = AreaPower::of(&LexiHwConfig::paper_default());
+    let mut t = Table::new(&["component", "area (µm²)", "power (mW)", "lanes", "total area", "total power"]);
+    for item in &bp.items {
+        t.row(vec![
+            item.name.into(),
+            format!("{:.2}", item.unit_area_um2),
+            format!("{:.2}", item.unit_power_mw),
+            format!("×{}", item.count),
+            format!("{:.1}", item.total_area_um2()),
+            format!("{:.2}", item.total_power_mw()),
+        ]);
+    }
+    t.print();
+    println!(
+        "\ntotal: {:.1} µm² @22nm, {:.2} mW; {:.1} µm² @16nm; {:.3}% of a 6 mm² Simba chiplet",
+        bp.total_area_um2(),
+        bp.total_power_mw(),
+        bp.total_area_16nm_um2(),
+        bp.chiplet_overhead_pct()
+    );
+    Ok(())
+}
+
+// --- noc -------------------------------------------------------------------------
+
+fn cmd_noc(flags: &Flags) -> Result<()> {
+    let mesh_s = flags.get("mesh", "6x6");
+    let (cols, rows) = mesh_s
+        .split_once('x')
+        .and_then(|(a, b)| Some((a.parse().ok()?, b.parse().ok()?)))
+        .ok_or_else(|| anyhow!("bad --mesh '{mesh_s}' (want CxR)"))?;
+    let mesh = Mesh::new(cols, rows);
+    let cfg = NetworkConfig {
+        mesh,
+        ..NetworkConfig::paper_default()
+    };
+    let pattern = flags.get("pattern", "uniform");
+    let size_bits = flags.get_usize("size-bits", 128 * 64)? as u64;
+    let count = flags.get_usize("count", 500)?;
+
+    let specs = match pattern {
+        "uniform" => {
+            let mut rng = lexi_core::prng::Rng::new(1);
+            lexi_noc::traffic::uniform_random(mesh, count, size_bits, 0.25, &mut rng)
+        }
+        "transpose" => lexi_noc::traffic::transpose(mesh, size_bits),
+        "hotspot" => lexi_noc::traffic::hotspot(mesh, NodeId(0), size_bits),
+        other => bail!("unknown pattern '{other}'"),
+    };
+    let n = specs.len();
+    let mut net = Network::new(cfg);
+    net.schedule_packets(&specs);
+    let stats = net.run_to_completion(50_000_000);
+    println!(
+        "pattern={pattern} mesh={mesh_s}: {n} packets, {} flits, {} cycles ({})",
+        stats.delivered_flits,
+        stats.cycles,
+        fmt_ns(stats.cycles as f64 * cfg.cycle_ns())
+    );
+    println!(
+        "avg latency {:.1} cycles, max {}, link util {:.1}%",
+        stats.avg_latency(),
+        stats.max_latency,
+        stats.link_utilization(net.link_count()) * 100.0
+    );
+    Ok(())
+}
+
+// --- dse (Figs 4/5/6) --------------------------------------------------------------
+
+fn cmd_dse(flags: &Flags) -> Result<()> {
+    match flags.get("what", "hitrate") {
+        "hitrate" => {
+            let mut t = Table::new(&["depth", "jamba", "zamba", "qwen"]);
+            let streams: Vec<Vec<u8>> = ModelConfig::paper_models()
+                .iter()
+                .map(|cfg| WeightStream::sample_exponents(cfg, 0, 9, 100_000))
+                .collect();
+            for depth in [1usize, 2, 4, 8, 16, 32] {
+                let mut row = vec![depth.to_string()];
+                for s in &streams {
+                    let mut cache = lexi_hw::lane_cache::LaneCache::new(depth);
+                    for &e in s {
+                        cache.access(e);
+                    }
+                    row.push(format!("{:.1}%", cache.hit_rate() * 100.0));
+                }
+                t.row(row);
+            }
+            t.print();
+        }
+        "codebook" => {
+            let cfg0 = ModelConfig::jamba(ModelScale::Paper);
+            let exps = WeightStream::sample_exponents(&cfg0, 0, 9, 512);
+            let mut t = Table::new(&["lanes", "depth", "cache KiB", "latency (ns)"]);
+            for (lanes, depth) in [
+                (1usize, 4usize),
+                (1, 8),
+                (2, 8),
+                (4, 8),
+                (8, 8),
+                (10, 8),
+                (16, 8),
+                (32, 8),
+                (32, 16),
+            ] {
+                let hc = HistConfig { lanes, depth };
+                let r = HistogramUnit::new(hc).run(&exps);
+                t.row(vec![
+                    lanes.to_string(),
+                    depth.to_string(),
+                    format!("{:.3}", hc.cache_bytes() as f64 / 1024.0),
+                    format!("{}", r.cycles),
+                ]);
+            }
+            t.print();
+        }
+        "decoder" => {
+            let mut t = Table::new(&["config", "area (µm²)", "avg ns / 10 exps"]);
+            let cfg0 = ModelConfig::jamba(ModelScale::Paper);
+            let exps = WeightStream::sample_exponents(&cfg0, 0, 9, 50_000);
+            let hist = lexi_core::stats::Histogram::from_bytes(&exps);
+            let book = lexi_core::huffman::CodeBook::lexi_default(&hist)?;
+            let mut w = lexi_core::bitstream::BitWriter::new();
+            for &e in &exps {
+                book.encode_symbol(e, &mut w);
+            }
+            let bits = w.len_bits();
+            let bytes = w.into_bytes();
+            for (name, dc) in [
+                ("1-stage 32b", DecoderConfig::monolithic()),
+                (
+                    "2-stage 16/32",
+                    DecoderConfig {
+                        stage_bits: vec![16, 32],
+                        entries_per_stage: 16,
+                    },
+                ),
+                (
+                    "3-stage 11/22/32",
+                    DecoderConfig {
+                        stage_bits: vec![11, 22, 32],
+                        entries_per_stage: 11,
+                    },
+                ),
+                ("4-stage 8/16/24/32", DecoderConfig::paper_default()),
+            ] {
+                let unit = lexi_hw::decoder::DecoderUnit::new(dc.clone())?;
+                let mut r = lexi_core::bitstream::BitReader::with_len(&bytes, bits);
+                let (_, rep) = unit.decode(&mut r, &book, exps.len())?;
+                t.row(vec![
+                    name.into(),
+                    format!("{:.1}", lexi_hw::area_power::decoder_area_um2(&dc)),
+                    format!("{:.2}", rep.avg_latency() * 10.0),
+                ]);
+            }
+            t.print();
+        }
+        other => bail!("unknown dse target '{other}'"),
+    }
+    Ok(())
+}
+
+// --- energy (extension) -------------------------------------------------------
+
+fn cmd_energy(_flags: &Flags) -> Result<()> {
+    use lexi_sim::energy::EnergyModel;
+    let engine = Engine::paper_default();
+    let corpus = Corpus::wikitext2();
+    let em = EnergyModel::default();
+    let mut t = Table::new(&["model", "mode", "link (mJ)", "codec (mJ)", "saved"]);
+    for cfg in ModelConfig::paper_models() {
+        let crs = CrTable::measure(&cfg, 42);
+        let unc = em.run(&engine.system, &cfg, &corpus, CompressionMode::Uncompressed, &crs);
+        for mode in CompressionMode::ALL {
+            let r = em.run(&engine.system, &cfg, &corpus, mode, &crs);
+            t.row(vec![
+                cfg.name.into(),
+                format!("{mode:?}"),
+                format!("{:.2}", r.link_uj / 1e3),
+                format!("{:.3}", r.codec_uj / 1e3),
+                format!("{:.1}%", (1.0 - r.total_uj() / unc.total_uj()) * 100.0),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+// --- serve (extension) --------------------------------------------------------
+
+fn cmd_serve(flags: &Flags) -> Result<()> {
+    let max_req = flags.get_usize("requests", 64)?;
+    let engine = Engine::paper_default();
+    let corpus = Corpus::wikitext2();
+    let cfg = ModelConfig::qwen(ModelScale::Paper);
+    let crs = CrTable::measure(&cfg, 42);
+    let mut t = Table::new(&["requests", "uncompressed tok/s", "LEXI tok/s", "gain"]);
+    let mut n = 1usize;
+    while n <= max_req {
+        let unc = engine.run_concurrent(&cfg, &corpus, CompressionMode::Uncompressed, &crs, n);
+        let lexi = engine.run_concurrent(&cfg, &corpus, CompressionMode::Lexi, &crs, n);
+        t.row(vec![
+            n.to_string(),
+            format!("{:.0}", unc.tokens_per_s),
+            format!("{:.0}", lexi.tokens_per_s),
+            format!("{:.2}x", lexi.tokens_per_s / unc.tokens_per_s),
+        ]);
+        n *= 2;
+    }
+    t.print();
+    Ok(())
+}

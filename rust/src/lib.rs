@@ -1,0 +1,28 @@
+//! # lexi — LEXI: Lossless Exponent Coding for Efficient Inter-Chiplet
+//! # Communication in Hybrid LLMs (paper reproduction)
+//!
+//! The top-level crate wires the substrates together:
+//!
+//! * [`runtime`] — PJRT CPU runtime loading the AOT HLO-text artifacts
+//!   produced by `python/compile/aot.py` (L2/L1 never run at inference).
+//! * [`coordinator`] — the L3 inference coordinator: decode loop, tensor
+//!   capture, profiling, measured compression ratios.
+//! * [`cli`] — the `lexi` command-line driver.
+//! * [`json`] — minimal JSON for `artifacts/manifest.json`.
+//!
+//! Library crates: `lexi-core` (codecs), `lexi-hw` (cycle-accurate codec
+//! hardware), `lexi-noc` (NoI simulator), `lexi-models` (model configs +
+//! synthetic tensors), `lexi-sim` (Simba system + e2e engine),
+//! `lexi-bench` (bench harness).
+
+pub mod cli;
+pub mod coordinator;
+pub mod json;
+pub mod runtime;
+
+pub use lexi_bench as bench;
+pub use lexi_core as core;
+pub use lexi_hw as hw;
+pub use lexi_models as models;
+pub use lexi_noc as noc;
+pub use lexi_sim as sim;

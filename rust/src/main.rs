@@ -1,0 +1,9 @@
+//! `lexi` binary entrypoint. See `cli` for the command set.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = lexi::cli::run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

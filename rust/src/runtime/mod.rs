@@ -1,0 +1,359 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! The bridge from the Rust L3 coordinator to the JAX/Pallas-authored
+//! model: `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. HLO *text* is the interchange format
+//! (see `python/compile/aot.py` for why). Python never runs here.
+
+use crate::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Shape + dtype of one runtime tensor.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("missing dtype"))?
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One executable's signature.
+#[derive(Clone, Debug)]
+pub struct ExecSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub output_names: Vec<String>,
+}
+
+impl ExecSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing {key}"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        Ok(ExecSpec {
+            file: j
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("missing file"))?
+                .to_string(),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+            output_names: j
+                .get("output_names")
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|x| x.as_str().map(str::to_string))
+                        .collect()
+                })
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// Per-model manifest entry.
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    pub name: String,
+    pub seq_in: usize,
+    pub out_max: usize,
+    pub max_seq: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub blocks: Vec<String>,
+    pub prefill: ExecSpec,
+    pub decode: ExecSpec,
+}
+
+/// The parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: HashMap<String, ModelManifest>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from the artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let mut models = HashMap::new();
+        for (name, entry) in j.as_obj().ok_or_else(|| anyhow!("manifest not an object"))? {
+            let usize_of = |key: &str| -> Result<usize> {
+                entry
+                    .get(key)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("missing {key}"))
+            };
+            models.insert(
+                name.clone(),
+                ModelManifest {
+                    name: name.clone(),
+                    seq_in: usize_of("seq_in")?,
+                    out_max: usize_of("out_max")?,
+                    max_seq: usize_of("max_seq")?,
+                    vocab: usize_of("vocab")?,
+                    d_model: usize_of("d_model")?,
+                    blocks: entry
+                        .get("blocks")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("missing blocks"))?
+                        .iter()
+                        .filter_map(|b| b.as_str().map(str::to_string))
+                        .collect(),
+                    prefill: ExecSpec::from_json(
+                        entry.get("prefill").ok_or_else(|| anyhow!("missing prefill"))?,
+                    )?,
+                    decode: ExecSpec::from_json(
+                        entry.get("decode").ok_or_else(|| anyhow!("missing decode"))?,
+                    )?,
+                },
+            );
+        }
+        Ok(Manifest { dir, models })
+    }
+}
+
+/// A dense f32 tensor moving across the runtime boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero tensor of a spec's shape.
+    pub fn zeros(spec: &TensorSpec) -> Self {
+        Tensor {
+            shape: spec.shape.clone(),
+            data: vec![0.0; spec.elements()],
+        }
+    }
+
+    /// Elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Is the tensor empty (zero-sized dimension)?
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// View as BF16 values (exact: the model bf16-quantizes its outputs).
+    pub fn to_bf16(&self) -> Vec<lexi_core::Bf16> {
+        self.data.iter().map(|&x| lexi_core::Bf16::from_f32(x)).collect()
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        if self.data.is_empty() {
+            return Ok(xla::Literal::create_from_shape(
+                xla::PrimitiveType::F32,
+                &self.shape,
+            ));
+        }
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+}
+
+/// The PJRT CPU runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()?,
+        })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile both executables of `model`.
+    pub fn load_model(&self, manifest: &Manifest, model: &str) -> Result<LoadedModel> {
+        let mm = manifest
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow!("model '{model}' not in manifest"))?
+            .clone();
+        let compile = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = manifest.dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(self.client.compile(&comp)?)
+        };
+        let prefill = compile(&mm.prefill.file).context("compiling prefill")?;
+        let decode = compile(&mm.decode.file).context("compiling decode")?;
+        Ok(LoadedModel {
+            manifest: mm,
+            prefill,
+            decode,
+        })
+    }
+}
+
+/// Prefill outputs (order fixed by the AOT manifest).
+#[derive(Clone, Debug)]
+pub struct PrefillOut {
+    pub logits: Tensor,
+    pub acts: Tensor,
+    pub kv: Tensor,
+    pub ssm: Tensor,
+    pub conv: Tensor,
+}
+
+/// Decode-step outputs.
+#[derive(Clone, Debug)]
+pub struct DecodeOut {
+    pub logits: Tensor,
+    pub acts: Tensor,
+    pub kv: Tensor,
+    pub ssm: Tensor,
+    pub conv: Tensor,
+}
+
+/// A compiled model pair (prefill + decode).
+pub struct LoadedModel {
+    pub manifest: ModelManifest,
+    prefill: xla::PjRtLoadedExecutable,
+    decode: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModel {
+    /// Run prefill over `tokens` (must be exactly `seq_in` long).
+    pub fn run_prefill(&self, tokens: &[i32]) -> Result<PrefillOut> {
+        if tokens.len() != self.manifest.seq_in {
+            bail!(
+                "prefill expects {} tokens, got {}",
+                self.manifest.seq_in,
+                tokens.len()
+            );
+        }
+        let input = xla::Literal::vec1(tokens);
+        let outs = self.execute(&self.prefill, vec![input], &self.manifest.prefill)?;
+        let mut it = outs.into_iter();
+        Ok(PrefillOut {
+            logits: it.next().ok_or_else(|| anyhow!("missing logits"))?,
+            acts: it.next().ok_or_else(|| anyhow!("missing acts"))?,
+            kv: it.next().ok_or_else(|| anyhow!("missing kv"))?,
+            ssm: it.next().ok_or_else(|| anyhow!("missing ssm"))?,
+            conv: it.next().ok_or_else(|| anyhow!("missing conv"))?,
+        })
+    }
+
+    /// Run one decode step at absolute position `pos`.
+    pub fn run_decode(
+        &self,
+        token: i32,
+        pos: i32,
+        kv: &Tensor,
+        ssm: &Tensor,
+        conv: &Tensor,
+    ) -> Result<DecodeOut> {
+        let inputs = vec![
+            xla::Literal::scalar(token),
+            xla::Literal::scalar(pos),
+            kv.to_literal()?,
+            ssm.to_literal()?,
+            conv.to_literal()?,
+        ];
+        let outs = self.execute(&self.decode, inputs, &self.manifest.decode)?;
+        let mut it = outs.into_iter();
+        Ok(DecodeOut {
+            logits: it.next().ok_or_else(|| anyhow!("missing logits"))?,
+            acts: it.next().ok_or_else(|| anyhow!("missing acts"))?,
+            kv: it.next().ok_or_else(|| anyhow!("missing kv"))?,
+            ssm: it.next().ok_or_else(|| anyhow!("missing ssm"))?,
+            conv: it.next().ok_or_else(|| anyhow!("missing conv"))?,
+        })
+    }
+
+    fn execute(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: Vec<xla::Literal>,
+        spec: &ExecSpec,
+    ) -> Result<Vec<Tensor>> {
+        let result = exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "expected {} outputs, got {}",
+                spec.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&spec.outputs)
+            .map(|(lit, ospec)| {
+                let data = if ospec.elements() == 0 {
+                    Vec::new()
+                } else {
+                    lit.to_vec::<f32>()?
+                };
+                if data.len() != ospec.elements() {
+                    bail!(
+                        "output elements {} != spec {}",
+                        data.len(),
+                        ospec.elements()
+                    );
+                }
+                Ok(Tensor {
+                    shape: ospec.shape.clone(),
+                    data,
+                })
+            })
+            .collect()
+    }
+}
+
+/// Greedy argmax over logits.
+pub fn argmax(logits: &Tensor) -> i32 {
+    logits
+        .data
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+        .map(|(i, _)| i as i32)
+        .unwrap_or(0)
+}

@@ -1,0 +1,92 @@
+//! Runtime integration: PJRT + AOT artifacts + coordinator.
+//!
+//! These tests need `artifacts/` (run `make artifacts`); they skip — not
+//! fail — when it is absent, so `cargo test` works on a fresh checkout.
+
+use lexi::coordinator::Session;
+use lexi::models::corpus::Corpus;
+use lexi::runtime::{Manifest, Runtime};
+use lexi::sim::compression::CompressionMode;
+use lexi::sim::engine::Engine;
+use lexi::models::{ModelConfig, ModelScale};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn manifest_parses_and_is_consistent() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let m = Manifest::load(&dir).unwrap();
+    for name in ["jamba", "zamba", "qwen"] {
+        let mm = m.models.get(name).unwrap_or_else(|| panic!("{name} missing"));
+        assert_eq!(mm.seq_in, 128);
+        assert_eq!(mm.prefill.output_names[0], "logits");
+        assert_eq!(mm.decode.inputs.len(), 5);
+        assert!(dir.join(&mm.prefill.file).exists());
+        assert!(dir.join(&mm.decode.file).exists());
+    }
+}
+
+#[test]
+fn coordinated_inference_profiles_real_streams() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let loaded = rt.load_model(&manifest, "jamba").unwrap();
+    let mm = loaded.manifest.clone();
+    let corpus = Corpus::wikitext2();
+    let tokens: Vec<i32> = corpus
+        .tokens(mm.vocab, 11)
+        .iter()
+        .take(mm.seq_in)
+        .map(|&t| t as i32)
+        .collect();
+    let session = Session::new(loaded);
+    let report = session.run(&tokens, 4).unwrap();
+
+    assert_eq!(report.generated.len(), 4);
+    assert!(!report.profiles.is_empty());
+    // The paper's core claims on REAL tensors:
+    for p in &report.profiles {
+        assert!(p.exp_entropy < 4.5, "{}: H {}", p.name, p.exp_entropy);
+        assert!(p.mant_entropy > 6.0, "{}: Hm {}", p.name, p.mant_entropy);
+        assert!(p.exp_distinct <= 40, "{}: {}", p.name, p.exp_distinct);
+        assert!(p.lexi_cr > 1.8, "{}: cr {}", p.name, p.lexi_cr);
+        assert!(p.rle_cr < 1.1, "{}: rle {}", p.name, p.rle_cr);
+        assert!(p.wire_ratio > 1.2, "{}: wire {}", p.name, p.wire_ratio);
+    }
+
+    // Measured ratios drive the engine into the paper's reduction band.
+    let crs = report.measured_cr_table();
+    let engine = Engine::paper_default();
+    let cfg = ModelConfig::jamba(ModelScale::Paper);
+    let unc = engine.run(&cfg, &corpus, CompressionMode::Uncompressed, &crs);
+    let lexi = engine.run(&cfg, &corpus, CompressionMode::Lexi, &crs);
+    let red = 1.0 - lexi.comm_ns / unc.comm_ns;
+    assert!((0.25..0.50).contains(&red), "comm reduction {red:.3}");
+}
+
+#[test]
+fn decode_is_reproducible_across_sessions() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let run = || {
+        let loaded = rt.load_model(&manifest, "zamba").unwrap();
+        let mm = loaded.manifest.clone();
+        let tokens: Vec<i32> = (0..mm.seq_in as i32).map(|i| (i * 3) % mm.vocab as i32).collect();
+        Session::new(loaded).run(&tokens, 3).unwrap().generated
+    };
+    assert_eq!(run(), run());
+}
