@@ -11,6 +11,7 @@ use lexi::models::activations;
 use lexi::models::traffic::TransferKind;
 use lexi::models::{ModelConfig, ModelScale};
 use lexi_bench::Table;
+use lexi_core::batch::LaneCodec;
 use lexi_core::bitstream::{BitReader, BitWriter};
 use lexi_core::huffman::CodeBook;
 use lexi_core::stats::Histogram;
@@ -112,4 +113,23 @@ fn main() {
         "10 decode lanes, 1000 flits x 10 values: makespan {makespan} cycles \
          (line rate = 1000 flit-cycles)"
     );
+
+    // Measured multi-lane makespan through the batch lane format (§4.4):
+    // the same stream interleaved across N hardware lanes, decoded by the
+    // chosen 4-stage unit per lane.
+    let unit = DecoderUnit::new(DecoderConfig::paper_default()).expect("valid config");
+    println!("\nmulti-lane decode of {} exponents (4-stage unit per lane):", exps.len());
+    let mut lt = Table::new(&["lanes", "makespan (cycles)", "eff. cycles/exp", "lane speedup"]);
+    for lanes in [1usize, 2, 4, 8, 10] {
+        let stream = LaneCodec::new(lanes).expect("lane count").encode(&exps, &book);
+        let (out, rep) = unit.decode_lane_stream(&stream, &book).expect("decodes");
+        assert_eq!(out, exps, "lane decode must be bit-exact");
+        lt.row(vec![
+            lanes.to_string(),
+            rep.makespan.to_string(),
+            format!("{:.3}", rep.effective_latency()),
+            format!("{:.2}x", rep.lane_speedup()),
+        ]);
+    }
+    lt.print();
 }

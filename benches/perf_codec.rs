@@ -1,13 +1,19 @@
 //! §Perf — software codec hot-path throughput.
 //!
 //! Targets (DESIGN.md §Perf): ≥100 M exponents/s single-core encode on the
-//! table-driven path; decode within 2× of encode. Used for the
-//! before/after iteration log in EXPERIMENTS.md §Perf.
+//! batch path (≥3× the scalar path); batch decode within 2× of encode and
+//! ≥2× the scalar decode. Scalar rows are kept as the before/after
+//! baseline. Emits `BENCH_perf_codec.json` (path → median ns, M/s) so the
+//! bench trajectory accumulates across PRs.
+//!
+//! `LEXI_BENCH_N` overrides the stream length (ci.sh smoke-runs this file
+//! as an example with debug assertions on and a small N).
 
 use lexi::models::activations;
 use lexi::models::traffic::TransferKind;
 use lexi::models::{ModelConfig, ModelScale};
-use lexi_bench::{bench, Table};
+use lexi_bench::{bench, Table, Timing};
+use lexi_core::batch::{BatchEncoder, LaneCodec};
 use lexi_core::bf16::FieldStreams;
 use lexi_core::bitstream::{BitReader, BitWriter};
 use lexi_core::flit::{self, FlitFormat};
@@ -15,23 +21,45 @@ use lexi_core::huffman::{self, CodeBook};
 use lexi_core::stats::Histogram;
 use lexi_core::Bf16;
 
-const N: usize = 1_000_000;
+struct Row {
+    name: String,
+    median_ns: f64,
+    m_per_s: f64,
+}
+
+fn record(t: &mut Table, rows: &mut Vec<Row>, timing: &Timing, name: &str, items: u64, unit: &str) -> f64 {
+    let m_per_s = timing.throughput(items) / 1e6;
+    t.row(vec![
+        name.into(),
+        format!("{:?}", timing.median()),
+        format!("{m_per_s:.0} M {unit}/s"),
+    ]);
+    rows.push(Row {
+        name: name.into(),
+        median_ns: timing.median().as_nanos() as f64,
+        m_per_s,
+    });
+    m_per_s
+}
 
 fn main() {
+    let n: usize = std::env::var("LEXI_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1_000_000)
+        .max(1024);
     let cfg = ModelConfig::jamba(ModelScale::Paper);
-    let exps = activations::sample_exponents(&cfg, 0, TransferKind::Activation, 42, N);
+    let exps = activations::sample_exponents(&cfg, 0, TransferKind::Activation, 42, n);
     let hist = Histogram::from_bytes(&exps);
     let book = CodeBook::lexi_default(&hist).expect("non-empty");
+    let payload_bits = book.payload_bits(&hist);
 
     let mut t = Table::new(&["path", "median", "throughput"]);
+    let mut rows: Vec<Row> = Vec::new();
 
     // Histogram construction.
     let h = bench("histogram", 1, 7, || Histogram::from_bytes(&exps));
-    t.row(vec![
-        "histogram (1M exps)".into(),
-        format!("{:?}", h.median()),
-        format!("{:.0} M/s", h.throughput(N as u64) / 1e6),
-    ]);
+    record(&mut t, &mut rows, &h, "histogram", n as u64, "exps");
 
     // Codebook build.
     let cb = bench("codebook", 1, 7, || CodeBook::lexi_default(&hist).unwrap());
@@ -40,53 +68,87 @@ fn main() {
         format!("{:?}", cb.median()),
         format!("{:.0} books/s", cb.throughput(1)),
     ]);
+    rows.push(Row {
+        name: "codebook build".into(),
+        median_ns: cb.median().as_nanos() as f64,
+        m_per_s: cb.throughput(1) / 1e6,
+    });
 
-    // Encode.
-    let enc = bench("encode", 1, 7, || {
+    // --- encode: scalar baseline vs batch vs lanes ----------------------
+    let enc_scalar = bench("encode scalar", 1, 7, || {
         let mut w = BitWriter::new();
         for &e in &exps {
             book.encode_symbol(e, &mut w);
         }
         w
     });
-    t.row(vec![
-        "encode (1M exps)".into(),
-        format!("{:?}", enc.median()),
-        format!("{:.0} M exps/s", enc.throughput(N as u64) / 1e6),
-    ]);
+    let enc_scalar_mps = record(&mut t, &mut rows, &enc_scalar, "encode scalar", n as u64, "exps");
 
-    // Decode.
+    let batch_enc = BatchEncoder::new(&book);
+    let enc_batch = bench("encode batch", 1, 7, || {
+        let mut w = BitWriter::new();
+        w.reserve_bits(payload_bits);
+        batch_enc.encode_block(&exps, &mut w);
+        w
+    });
+    let enc_batch_mps = record(&mut t, &mut rows, &enc_batch, "encode batch", n as u64, "exps");
+
+    let lane4 = LaneCodec::new(4).expect("valid");
+    let enc_lanes = bench("encode lanes=4", 1, 7, || lane4.encode(&exps, &book));
+    record(&mut t, &mut rows, &enc_lanes, "encode lanes=4", n as u64, "exps");
+
+    // --- decode: scalar baseline vs batch vs lanes ----------------------
     let mut w = BitWriter::new();
-    for &e in &exps {
-        book.encode_symbol(e, &mut w);
-    }
+    batch_enc.encode_block(&exps, &mut w);
     let bits = w.len_bits();
     let bytes = w.into_bytes();
-    let dec_book = book.clone();
-    let dec = bench("decode", 1, 7, || {
-        let d = dec_book.decoder();
+
+    let dec_scalar = bench("decode scalar", 1, 7, || {
+        let d = book.decoder();
         let mut r = BitReader::with_len(&bytes, bits);
-        let mut out = Vec::with_capacity(N);
-        for _ in 0..N {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
             out.push(d.decode(&mut r).unwrap());
         }
         out
     });
-    t.row(vec![
-        "decode (1M exps)".into(),
-        format!("{:?}", dec.median()),
-        format!("{:.0} M exps/s", dec.throughput(N as u64) / 1e6),
-    ]);
+    let dec_scalar_mps = record(&mut t, &mut rows, &dec_scalar, "decode scalar", n as u64, "exps");
 
-    // End-to-end block compress (hist + book + encode).
+    let dec_batch = bench("decode batch", 1, 7, || {
+        let d = book.decoder();
+        let mut r = BitReader::with_len(&bytes, bits);
+        let mut out = vec![0u8; n];
+        d.decode_block_into(&mut r, &mut out).unwrap();
+        out
+    });
+    let dec_batch_mps = record(&mut t, &mut rows, &dec_batch, "decode batch", n as u64, "exps");
+
+    let lane_stream = lane4.encode(&exps, &book);
+    let dec_lanes = bench("decode lanes=4", 1, 7, || {
+        LaneCodec::decode(&lane_stream, &book).unwrap()
+    });
+    record(&mut t, &mut rows, &dec_lanes, "decode lanes=4", n as u64, "exps");
+
+    // Cross-path equivalence sanity (cheap; the test suites pin this
+    // property-style).
+    {
+        let d = book.decoder();
+        let mut r = BitReader::with_len(&bytes, bits);
+        let mut out = vec![0u8; n];
+        d.decode_block_into(&mut r, &mut out).unwrap();
+        assert_eq!(out, exps, "batch decode must be bit-exact");
+        assert_eq!(
+            LaneCodec::decode(&lane_stream, &book).unwrap(),
+            exps,
+            "lane decode must be bit-exact"
+        );
+    }
+
+    // End-to-end block compress (hist + book + batch encode).
     let blk = bench("compress_exponents", 1, 5, || {
         huffman::compress_exponents(&exps).unwrap()
     });
-    t.row(vec![
-        "compress_exponents".into(),
-        format!("{:?}", blk.median()),
-        format!("{:.0} M exps/s", blk.throughput(N as u64) / 1e6),
-    ]);
+    record(&mut t, &mut rows, &blk, "compress_exponents", n as u64, "exps");
 
     // Flit pack (values, not just exponents).
     let mut rng = lexi_core::prng::Rng::new(3);
@@ -105,17 +167,49 @@ fn main() {
     let pk = bench("flit pack", 1, 5, || {
         flit::pack(&streams, &book, format).unwrap()
     });
-    t.row(vec![
-        "flit pack (1M values)".into(),
-        format!("{:?}", pk.median()),
-        format!("{:.0} M vals/s", pk.throughput(N as u64) / 1e6),
-    ]);
+    record(&mut t, &mut rows, &pk, "flit pack", n as u64, "vals");
+
+    let transfer = flit::pack(&streams, &book, format).unwrap();
+    let up = bench("flit unpack", 1, 5, || flit::unpack(&transfer).unwrap());
+    record(&mut t, &mut rows, &up, "flit unpack", n as u64, "vals");
 
     t.print();
 
-    let enc_rate = enc.throughput(N as u64) / 1e6;
+    let enc_speedup = enc_batch_mps / enc_scalar_mps;
+    let dec_speedup = dec_batch_mps / dec_scalar_mps;
     println!(
-        "\nencode throughput {enc_rate:.0} M exps/s (target ≥100 M/s) — {}",
-        if enc_rate >= 100.0 { "PASS" } else { "BELOW TARGET" }
+        "\nbatch encode {enc_batch_mps:.0} M exps/s (target ≥100 M/s, ≥3× scalar {enc_scalar_mps:.0}) — {}",
+        if enc_batch_mps >= 100.0 && enc_speedup >= 3.0 { "PASS" } else { "BELOW TARGET" }
     );
+    println!(
+        "batch decode {dec_batch_mps:.0} M exps/s (target ≥2× scalar {dec_scalar_mps:.0}) — {}",
+        if dec_speedup >= 2.0 { "PASS" } else { "BELOW TARGET" }
+    );
+    println!(
+        "decode/encode ratio {:.2} (informal goal: decode within 2× of encode)",
+        enc_batch_mps / dec_batch_mps.max(1e-9)
+    );
+
+    // Machine-readable trajectory row (hand-rolled JSON: no serde offline).
+    let mut json = String::from("{\n");
+    json.push_str(&format!("  \"bench\": \"perf_codec\",\n  \"n\": {n},\n"));
+    json.push_str(&format!(
+        "  \"encode_batch_speedup\": {enc_speedup:.3},\n  \"decode_batch_speedup\": {dec_speedup:.3},\n"
+    ));
+    json.push_str("  \"rows\": {\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    \"{}\": {{\"median_ns\": {:.0}, \"m_per_s\": {:.3}}}{}\n",
+            r.name,
+            r.median_ns,
+            r.m_per_s,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  }\n}\n");
+    let out_path = "BENCH_perf_codec.json";
+    match std::fs::write(out_path, &json) {
+        Ok(()) => println!("\nwrote {out_path}"),
+        Err(e) => eprintln!("\ncould not write {out_path}: {e}"),
+    }
 }

@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Tier-1 gate (ROADMAP.md) + §Perf smoke.
+#
+#   ./ci.sh          full gate: release build, tests, debug-assert smoke
+#   ./ci.sh --quick  build + tests only
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+if [[ "${1:-}" != "--quick" ]]; then
+    # Smoke-run the §Perf codec bench with debug assertions on (dev
+    # profile via the example target) and a small stream, so invariant
+    # violations in the batch engine fail CI even without a perf run.
+    echo "== perf_codec smoke (debug assertions, N=20000) =="
+    LEXI_BENCH_N=20000 cargo run --example perf_codec_smoke
+
+    # Full-size release run: prints the before/after table and refreshes
+    # BENCH_perf_codec.json (the §Perf trajectory).
+    echo "== perf_codec (release) =="
+    cargo bench --bench perf_codec
+fi
+
+echo "ci.sh: all green"

@@ -1,0 +1,166 @@
+//! Minimal offline shim for the `anyhow` API surface the `lexi` crate
+//! uses: [`Error`], [`Result`], [`anyhow!`], [`bail!`], and the
+//! [`Context`] extension trait.
+//!
+//! Semantics mirror the real crate where it matters to callers:
+//!
+//! * `Error` converts from any `std::error::Error` via `?` (and therefore
+//!   must not implement `std::error::Error` itself — same coherence trick
+//!   the real crate relies on).
+//! * `.context(..)` / `.with_context(..)` prepend a layer; `{:#}` (and
+//!   `{:#?}`) render the whole chain `context: cause`.
+//!
+//! Error payloads are eagerly stringified — no downcasting, no backtraces.
+//! That is all this repository needs; swap in the real crate if more of
+//! the API becomes necessary.
+
+use std::fmt;
+
+/// A stringified error with optional context layers (outermost first).
+pub struct Error {
+    layers: Vec<String>,
+}
+
+impl Error {
+    /// Build from a displayable message (what `anyhow!` expands to).
+    pub fn msg(message: impl fmt::Display) -> Self {
+        Error {
+            layers: vec![message.to_string()],
+        }
+    }
+
+    /// Prepend a context layer.
+    pub fn context(mut self, context: impl fmt::Display) -> Self {
+        self.layers.insert(0, context.to_string());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: full chain, outermost context first.
+            write!(f, "{}", self.layers.join(": "))
+        } else {
+            write!(f, "{}", self.layers[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.layers[0])?;
+        if self.layers.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for layer in &self.layers[1..] {
+                write!(f, "\n    {layer}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow`-style result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Context-attaching extension for results (and options).
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Wrap the error with a lazily built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        // `{:#}` keeps the full chain when E is itself an anyhow Error.
+        self.map_err(|e| Error::msg(format!("{e:#}")).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{e:#}")).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(format!("{e}"), "missing thing");
+    }
+
+    #[test]
+    fn context_layers_render_in_alternate() {
+        let e: Result<()> = std::result::Result::<(), _>::Err(io_err()).context("opening config");
+        let e = e.unwrap_err();
+        assert_eq!(format!("{e}"), "opening config");
+        assert_eq!(format!("{e:#}"), "opening config: missing thing");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(format!("{e}"), "bad value 7");
+        fn f() -> Result<()> {
+            bail!("nope: {}", "reason")
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "nope: reason");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("empty").unwrap_err();
+        assert_eq!(format!("{e}"), "empty");
+    }
+}

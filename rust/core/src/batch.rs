@@ -1,0 +1,632 @@
+//! §Perf — the batch codec engine: word-at-a-time encode and multi-lane
+//! interleaved streams.
+//!
+//! The scalar paths in [`huffman`] are the bit-exact oracle; this module
+//! is how the software hot loop actually runs them (DESIGN.md §Perf):
+//!
+//! * [`BatchEncoder`] — a pair-fused table encoder. The ≤32-symbol LEXI
+//!   alphabet (paper §4.2.2) makes a dense `nsym × nsym` pair LUT tiny
+//!   (≤ 16 KiB), so two exponents cost one lookup + one [`BitWriter::put`]
+//!   whenever their combined codeword fits the 64-bit accumulator.
+//!   Escaped symbols fall back to the packed scalar LUT.
+//! * [`LaneCodec`] / [`LaneStream`] — an `N`-lane interleaved stream
+//!   format mirroring the paper's multi-lane LUT decoder (§4.4): symbol
+//!   `i` goes to lane `i mod N` and each lane is an independent bitstream
+//!   over the shared codebook, so `N` refill decoders proceed without
+//!   serial bit-offset dependencies (physical lanes in hardware,
+//!   instruction-level parallelism in software).
+//!
+//! The refill-based block *decoder* lives on
+//! [`CanonicalDecoder::decode_block_into`], next to the tables it probes.
+//!
+//! [`huffman`]: crate::huffman
+//! [`CanonicalDecoder::decode_block_into`]: crate::huffman::CanonicalDecoder::decode_block_into
+
+use crate::bitstream::{BitReader, BitWriter};
+use crate::error::{Error, Result};
+use crate::huffman::{CodeBook, ESC_SYMBOL};
+
+/// Maximum supported lane count (8 matches the paper's decoder sweep;
+/// headroom beyond it costs nothing in the format).
+pub const MAX_LANES: usize = 64;
+
+/// Pair LUT is built only for alphabets up to this size: the paper's
+/// pipeline caps the primary alphabet at 32, and a degenerate 256-symbol
+/// book would need a 1 MiB table that no longer fits in L1/L2.
+const PAIR_MAX_SYMS: usize = 64;
+
+/// Sentinel in the dense-index table for "no dedicated code".
+const NO_PAIR: u8 = 0xff;
+
+/// Word-at-a-time encoder over one codebook (§Perf).
+///
+/// Construction cost is `O(nsym²)` table fills (≤ 4096 entries), so build
+/// it once per stream/transfer, not per flit.
+pub struct BatchEncoder<'a> {
+    book: &'a CodeBook,
+    /// Dense pair-LUT index per exponent, or [`NO_PAIR`].
+    dense: [u8; 256],
+    /// Dedicated-symbol count = pair-LUT stride.
+    nsym: usize,
+    /// Fused `(bits, len)` per dense symbol pair; `len == 0` marks a pair
+    /// whose combined code exceeds one `put` (fall back to two).
+    pair: Vec<(u64, u32)>,
+}
+
+impl<'a> BatchEncoder<'a> {
+    /// Build the pair-fused encoder for `book`.
+    pub fn new(book: &'a CodeBook) -> Self {
+        let mut dense = [NO_PAIR; 256];
+        let mut dedicated: Vec<u8> = Vec::new();
+        for &(sym, _) in book.canonical_pairs() {
+            if sym != ESC_SYMBOL && dedicated.len() < PAIR_MAX_SYMS {
+                dense[sym as usize] = dedicated.len() as u8;
+                dedicated.push(sym as u8);
+            }
+        }
+        let nsym = dedicated.len();
+        let mut pair = Vec::new();
+        if nsym > 0 {
+            pair = vec![(0u64, 0u32); nsym * nsym];
+            for (i, &a) in dedicated.iter().enumerate() {
+                let ca = book.code(a).expect("dedicated symbol has a code");
+                for (j, &b) in dedicated.iter().enumerate() {
+                    let cb = book.code(b).expect("dedicated symbol has a code");
+                    let len = ca.len + cb.len;
+                    // One `put` takes ≤ 56 bits; dedicated codes are ≤ 31
+                    // each, so only pathological books exceed this.
+                    if len <= 56 {
+                        pair[i * nsym + j] =
+                            (((ca.bits as u64) << cb.len) | cb.bits as u64, len);
+                    }
+                }
+            }
+        }
+        BatchEncoder {
+            book,
+            dense,
+            nsym,
+            pair,
+        }
+    }
+
+    /// Fused `(bits, len)` for the dedicated pair `(a, b)`, if fusable.
+    #[inline]
+    fn pair_of(&self, a: u8, b: u8) -> Option<(u64, u32)> {
+        let (da, db) = (self.dense[a as usize], self.dense[b as usize]);
+        if da != NO_PAIR && db != NO_PAIR {
+            let entry = self.pair[da as usize * self.nsym + db as usize];
+            if entry.1 != 0 {
+                return Some(entry);
+            }
+        }
+        None
+    }
+
+    /// Emit a two-symbol group: one fused put, or two scalar LUT puts.
+    #[inline]
+    fn emit_duo(&self, a: u8, b: u8, fused: Option<(u64, u32)>, w: &mut BitWriter) {
+        match fused {
+            Some((bits, len)) => w.put(bits, len),
+            None => {
+                self.book.encode_symbol(a, w);
+                self.book.encode_symbol(b, w);
+            }
+        }
+    }
+
+    /// Encode `exps` into `w`: up to **four symbols per `put`** — two
+    /// pair-LUT lookups fused into one accumulator write when the combined
+    /// length fits 56 bits (always, for realistic ≤ 7-bit/pair books).
+    /// Emits exactly the bits the scalar [`CodeBook::encode_symbol`] loop
+    /// would: fusing is MSB-first concatenation, which is associative.
+    pub fn encode_block(&self, exps: &[u8], w: &mut BitWriter) {
+        if self.pair.is_empty() {
+            for &e in exps {
+                self.book.encode_symbol(e, w);
+            }
+            return;
+        }
+        let mut quads = exps.chunks_exact(4);
+        for quad in quads.by_ref() {
+            let lo = self.pair_of(quad[0], quad[1]);
+            let hi = self.pair_of(quad[2], quad[3]);
+            match (lo, hi) {
+                (Some((b1, l1)), Some((b2, l2))) if l1 + l2 <= 56 => {
+                    w.put((b1 << l2) | b2, l1 + l2);
+                }
+                (lo, hi) => {
+                    self.emit_duo(quad[0], quad[1], lo, w);
+                    self.emit_duo(quad[2], quad[3], hi, w);
+                }
+            }
+        }
+        let mut duos = quads.remainder().chunks_exact(2);
+        for duo in duos.by_ref() {
+            let fused = self.pair_of(duo[0], duo[1]);
+            self.emit_duo(duo[0], duo[1], fused, w);
+        }
+        if let &[last] = duos.remainder() {
+            self.book.encode_symbol(last, w);
+        }
+    }
+}
+
+/// `N`-lane interleaved stream codec (paper §4.4, software mirror).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LaneCodec {
+    lanes: usize,
+}
+
+impl LaneCodec {
+    /// A codec with `lanes` ∈ `1..=MAX_LANES`.
+    pub fn new(lanes: usize) -> Result<Self> {
+        if lanes == 0 || lanes > MAX_LANES {
+            return Err(Error::InvalidParameter(format!(
+                "lane count {lanes} out of range 1..={MAX_LANES}"
+            )));
+        }
+        Ok(LaneCodec { lanes })
+    }
+
+    /// Lane count.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Encode `exps` round-robin across the lanes (symbol `i` → lane
+    /// `i mod N`), each lane through the pair-fused batch encoder.
+    pub fn encode(&self, exps: &[u8], book: &CodeBook) -> LaneStream {
+        let n = self.lanes;
+        // Release-safe guards: the wire header stores count and per-lane
+        // bit lengths as u32; silent wrapping would serialize a stream
+        // that decodes to the wrong symbols.
+        assert!(
+            exps.len() <= u32::MAX as usize,
+            "lane stream supports at most u32::MAX symbols"
+        );
+        let enc = BatchEncoder::new(book);
+        let mut payloads: Vec<Vec<u8>> = Vec::with_capacity(n);
+        let mut lane_bits: Vec<u32> = Vec::with_capacity(n);
+        let mut scratch: Vec<u8> = Vec::with_capacity(exps.len().div_ceil(n));
+        for l in 0..n {
+            scratch.clear();
+            scratch.extend(exps.iter().skip(l).step_by(n));
+            let mut w = BitWriter::new();
+            w.reserve_bits(scratch.len() as u64 * 2);
+            enc.encode_block(&scratch, &mut w);
+            assert!(
+                w.len_bits() <= u32::MAX as usize,
+                "lane payload exceeds the u32 bit-length header"
+            );
+            lane_bits.push(w.len_bits() as u32);
+            payloads.push(w.into_bytes());
+        }
+
+        let payload_len: usize = payloads.iter().map(Vec::len).sum();
+        let mut bytes = Vec::with_capacity(5 + 4 * n + payload_len);
+        bytes.push(n as u8);
+        bytes.extend_from_slice(&(exps.len() as u32).to_be_bytes());
+        for &b in &lane_bits {
+            bytes.extend_from_slice(&b.to_be_bytes());
+        }
+        for p in &payloads {
+            bytes.extend_from_slice(p);
+        }
+        LaneStream {
+            lanes: n,
+            count: exps.len(),
+            lane_bits,
+            bytes,
+        }
+    }
+
+    /// Decode a lane stream back to the original symbol order. Inverse of
+    /// [`encode`] for any codebook that round-trips the symbols.
+    ///
+    /// [`encode`]: LaneCodec::encode
+    pub fn decode(stream: &LaneStream, book: &CodeBook) -> Result<Vec<u8>> {
+        // Validation first: `count` is only trusted (and allocated) after
+        // `validated_lanes` has bounded it by the payload bit lengths.
+        let views = stream.validated_lanes()?;
+        let n = stream.lanes;
+        let dec = book.decoder();
+        let mut out = vec![0u8; stream.count];
+        let mut tmp = vec![0u8; stream.count.div_ceil(n)];
+        for v in views {
+            let mut r = BitReader::with_len(&stream.bytes[v.range.clone()], v.bits as usize);
+            let lane_out = &mut tmp[..v.symbols];
+            dec.decode_block_into(&mut r, lane_out)?;
+            for (k, &sym) in lane_out.iter().enumerate() {
+                out[v.lane + k * n] = sym;
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// One validated lane of a [`LaneStream`]: its payload location and the
+/// symbol count it must yield. Produced by [`LaneStream::validated_lanes`],
+/// shared by the software decoder and the `lexi-hw` lane model so format
+/// validation lives in exactly one place.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LaneView {
+    /// Lane index.
+    pub lane: usize,
+    /// Byte range of the payload within `LaneStream::bytes`.
+    pub range: std::ops::Range<usize>,
+    /// Payload bit length (excludes byte-alignment padding).
+    pub bits: u32,
+    /// Symbols this lane decodes to.
+    pub symbols: usize,
+}
+
+/// A serialized `N`-lane stream.
+///
+/// Wire layout (all multi-byte fields big-endian):
+///
+/// ```text
+/// { lanes:u8 | count:u32 | lane_bits:u32 × lanes | lane payloads, each byte-aligned }
+/// ```
+///
+/// The per-lane bit lengths in the header are what lets a hardware
+/// receiver point `N` decoders at their lanes before any decoding
+/// happens — the same reason the flit format is flit-atomic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LaneStream {
+    /// Lane count.
+    pub lanes: usize,
+    /// Total symbols across all lanes.
+    pub count: usize,
+    /// Per-lane payload bit lengths (excludes byte-alignment padding).
+    pub lane_bits: Vec<u32>,
+    /// The full serialized stream (header + payloads).
+    pub bytes: Vec<u8>,
+}
+
+impl LaneStream {
+    /// Header size in bytes.
+    pub fn header_bytes(&self) -> usize {
+        5 + 4 * self.lanes
+    }
+
+    /// Symbols assigned to lane `l` (round-robin remainder arithmetic).
+    pub fn lane_len(&self, l: usize) -> usize {
+        debug_assert!(l < self.lanes);
+        (self.count + self.lanes - 1 - l) / self.lanes
+    }
+
+    /// Byte range of lane `l`'s payload within [`bytes`].
+    ///
+    /// [`bytes`]: LaneStream::bytes
+    pub fn lane_range(&self, l: usize) -> std::ops::Range<usize> {
+        let mut off = self.header_bytes();
+        for i in 0..l {
+            off += (self.lane_bits[i] as usize).div_ceil(8);
+        }
+        off..off + (self.lane_bits[l] as usize).div_ceil(8)
+    }
+
+    /// Total wire size (header + payloads).
+    pub fn wire_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// Validate the header against the payload and return one
+    /// [`LaneView`] per lane. This is the *only* place the lane format
+    /// is trusted: it checks the lane count, that every payload range
+    /// lies inside `bytes`, and that each lane's symbol share fits its
+    /// bit length (every codeword is ≥ 1 bit) — which bounds `count` by
+    /// the actual wire size, so a hostile header cannot demand a
+    /// multi-gigabyte output allocation.
+    pub fn validated_lanes(&self) -> Result<Vec<LaneView>> {
+        if self.lanes == 0 || self.lanes > MAX_LANES || self.lane_bits.len() != self.lanes {
+            return Err(Error::InvalidParameter(format!(
+                "malformed lane stream: {} lanes, {} lengths",
+                self.lanes,
+                self.lane_bits.len()
+            )));
+        }
+        let mut views = Vec::with_capacity(self.lanes);
+        let mut off = self.header_bytes();
+        for l in 0..self.lanes {
+            let bits = self.lane_bits[l];
+            let end = off
+                .checked_add((bits as usize).div_ceil(8))
+                .ok_or_else(|| Error::InvalidParameter("lane offsets overflow".into()))?;
+            if end > self.bytes.len() {
+                return Err(Error::InvalidParameter(format!(
+                    "lane {l} payload exceeds stream ({end} > {} bytes)",
+                    self.bytes.len()
+                )));
+            }
+            let symbols = self.lane_len(l);
+            if symbols > bits as usize {
+                return Err(Error::InvalidParameter(format!(
+                    "lane {l}: {symbols} symbols cannot fit in {bits} payload bits"
+                )));
+            }
+            views.push(LaneView {
+                lane: l,
+                range: off..end,
+                bits,
+                symbols,
+            });
+            off = end;
+        }
+        Ok(views)
+    }
+
+    /// Parse a serialized stream (inverse of the header
+    /// [`LaneCodec::encode`] writes). Runs [`validated_lanes`], so the
+    /// returned stream is safe to hand to either decoder.
+    ///
+    /// [`validated_lanes`]: LaneStream::validated_lanes
+    pub fn from_bytes(bytes: Vec<u8>) -> Result<Self> {
+        if bytes.len() < 5 {
+            return Err(Error::InvalidParameter(
+                "lane stream shorter than its fixed header".into(),
+            ));
+        }
+        let lanes = bytes[0] as usize;
+        if lanes == 0 || lanes > MAX_LANES {
+            return Err(Error::InvalidParameter(format!(
+                "lane count {lanes} out of range 1..={MAX_LANES}"
+            )));
+        }
+        let count =
+            u32::from_be_bytes(bytes[1..5].try_into().expect("4 bytes")) as usize;
+        let header = 5 + 4 * lanes;
+        if bytes.len() < header {
+            return Err(Error::InvalidParameter(format!(
+                "lane stream header truncated: {} < {header} bytes",
+                bytes.len()
+            )));
+        }
+        let lane_bits: Vec<u32> = (0..lanes)
+            .map(|l| {
+                u32::from_be_bytes(
+                    bytes[5 + 4 * l..9 + 4 * l].try_into().expect("4 bytes"),
+                )
+            })
+            .collect();
+        let stream = LaneStream {
+            lanes,
+            count,
+            lane_bits,
+            bytes,
+        };
+        stream.validated_lanes()?;
+        Ok(stream)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::huffman::{compress_exponents, compress_with_book, decompress_exponents};
+    use crate::proptest::check;
+    use crate::stats::Histogram;
+
+    fn book_of(data: &[u8]) -> CodeBook {
+        CodeBook::lexi_default(&Histogram::from_bytes(data)).unwrap()
+    }
+
+    /// The scalar per-symbol oracle the batch paths must match bit-for-bit.
+    fn scalar_encode(data: &[u8], book: &CodeBook) -> (Vec<u8>, usize) {
+        let mut w = BitWriter::new();
+        for &e in data {
+            book.encode_symbol(e, &mut w);
+        }
+        let bits = w.len_bits();
+        (w.into_bytes(), bits)
+    }
+
+    fn scalar_decode(bytes: &[u8], bits: usize, book: &CodeBook, n: usize) -> Vec<u8> {
+        let dec = book.decoder();
+        let mut r = BitReader::with_len(bytes, bits);
+        (0..n).map(|_| dec.decode(&mut r).unwrap()).collect()
+    }
+
+    #[test]
+    fn prop_batch_encode_is_bit_identical_to_scalar() {
+        check("batch encode == scalar encode", 120, |g| {
+            let n = g.usize(0..3000);
+            // Skewed (few symbols, pair-LUT heavy) or uniform (ESC-heavy,
+            // >32 distinct exponents → fallback path).
+            let data = if g.bool(0.6) {
+                let a = g.usize(1..50);
+                g.skewed_bytes(n.max(1), a)
+            } else {
+                g.vec(n.max(1), |g| g.u8())
+            };
+            let book = book_of(&data);
+            let (want_bytes, want_bits) = scalar_encode(&data, &book);
+            let enc = BatchEncoder::new(&book);
+            let mut w = BitWriter::new();
+            enc.encode_block(&data, &mut w);
+            assert_eq!(w.len_bits(), want_bits);
+            assert_eq!(w.into_bytes(), want_bytes);
+        });
+    }
+
+    #[test]
+    fn prop_batch_encode_scalar_decode_roundtrip() {
+        check("batch encode → scalar decode", 100, |g| {
+            let n = g.usize(1..2500);
+            let data = if g.bool(0.7) {
+                let a = g.usize(1..40);
+                g.skewed_bytes(n, a)
+            } else {
+                g.vec(n, |g| g.u8())
+            };
+            let book = book_of(&data);
+            let enc = BatchEncoder::new(&book);
+            let mut w = BitWriter::new();
+            enc.encode_block(&data, &mut w);
+            let bits = w.len_bits();
+            let bytes = w.into_bytes();
+            assert_eq!(scalar_decode(&bytes, bits, &book, data.len()), data);
+        });
+    }
+
+    #[test]
+    fn prop_scalar_encode_batch_decode_roundtrip() {
+        check("scalar encode → batch decode", 100, |g| {
+            let n = g.usize(1..2500);
+            // ESC-heavy mix: >32 distinct exponents in most cases.
+            let data = if g.bool(0.5) {
+                g.vec(n, |g| g.u8())
+            } else {
+                let a = g.usize(33..120);
+                g.skewed_bytes(n, a)
+            };
+            let book = book_of(&data);
+            let (bytes, bits) = scalar_encode(&data, &book);
+            let dec = book.decoder();
+            let mut r = BitReader::with_len(&bytes, bits);
+            let mut out = vec![0u8; data.len()];
+            dec.decode_block_into(&mut r, &mut out).unwrap();
+            assert_eq!(out, data);
+            assert_eq!(r.remaining(), 0);
+        });
+    }
+
+    #[test]
+    fn single_symbol_stream_roundtrips() {
+        let data = vec![127u8; 777];
+        let book = book_of(&data);
+        let enc = BatchEncoder::new(&book);
+        let mut w = BitWriter::new();
+        enc.encode_block(&data, &mut w);
+        let bits = w.len_bits();
+        let bytes = w.into_bytes();
+        // 1-bit codes: 777 bits total.
+        assert_eq!(bits, 777);
+        let dec = book.decoder();
+        let mut r = BitReader::with_len(&bytes, bits);
+        let mut out = vec![0u8; data.len()];
+        dec.decode_block_into(&mut r, &mut out).unwrap();
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn prop_truncated_streams_error_not_panic() {
+        check("batch decode rejects truncated tails", 80, |g| {
+            let n = g.usize(2..800);
+            let a = g.usize(1..60);
+            let data = g.skewed_bytes(n, a);
+            let book = book_of(&data);
+            let (bytes, bits) = scalar_encode(&data, &book);
+            let cut = g.usize(1..bits);
+            let short_bits = bits - cut;
+            let short_bytes = &bytes[..short_bits.div_ceil(8)];
+            let dec = book.decoder();
+            let mut r = BitReader::with_len(short_bytes, short_bits);
+            let mut out = vec![0u8; data.len()];
+            // Must error (the full count can no longer fit), never panic
+            // or hand back a fabricated tail.
+            assert!(dec.decode_block_into(&mut r, &mut out).is_err());
+        });
+    }
+
+    #[test]
+    fn prop_lane_roundtrip_all_lane_counts() {
+        check("lane codec roundtrip lanes∈{1,2,4,8}", 80, |g| {
+            let n = g.usize(0..2000);
+            let data = if g.bool(0.7) {
+                let a = g.usize(1..40);
+                g.skewed_bytes(n.max(1), a)
+            } else {
+                g.vec(n.max(1), |g| g.u8())
+            };
+            let book = book_of(&data);
+            for lanes in [1usize, 2, 4, 8] {
+                let codec = LaneCodec::new(lanes).unwrap();
+                let stream = codec.encode(&data, &book);
+                assert_eq!(stream.lanes, lanes);
+                assert_eq!(stream.count, data.len());
+                let back = LaneCodec::decode(&stream, &book).unwrap();
+                assert_eq!(back, data, "lanes {lanes}");
+                // Serialization header survives a parse.
+                let parsed = LaneStream::from_bytes(stream.bytes.clone()).unwrap();
+                assert_eq!(parsed, stream);
+                assert_eq!(LaneCodec::decode(&parsed, &book).unwrap(), data);
+            }
+        });
+    }
+
+    #[test]
+    fn lane_stream_layout_is_as_documented() {
+        let data: Vec<u8> = (0..100u32).map(|i| 120 + (i % 5) as u8).collect();
+        let book = book_of(&data);
+        let codec = LaneCodec::new(4).unwrap();
+        let s = codec.encode(&data, &book);
+        assert_eq!(s.bytes[0], 4);
+        assert_eq!(
+            u32::from_be_bytes(s.bytes[1..5].try_into().unwrap()),
+            100
+        );
+        assert_eq!(s.header_bytes(), 5 + 16);
+        assert_eq!(s.lane_len(0), 25);
+        assert_eq!(s.lane_len(3), 25);
+        let total: usize = (0..4).map(|l| s.lane_range(l).len()).sum();
+        assert_eq!(s.header_bytes() + total, s.bytes.len());
+    }
+
+    #[test]
+    fn hostile_count_header_rejected() {
+        // lanes=1, count=u32::MAX, lane_bits=0: a 13-byte stream whose
+        // header demands a 4 GiB output. validated_lanes must reject it
+        // (count bounded by payload bits) before any allocation.
+        let mut bytes = vec![1u8];
+        bytes.extend_from_slice(&u32::MAX.to_be_bytes());
+        bytes.extend_from_slice(&0u32.to_be_bytes());
+        assert!(LaneStream::from_bytes(bytes.clone()).is_err());
+        // Same header smuggled around from_bytes: both decoders refuse.
+        let stream = LaneStream {
+            lanes: 1,
+            count: u32::MAX as usize,
+            lane_bits: vec![0],
+            bytes,
+        };
+        let book = book_of(&[7u8; 16]);
+        assert!(LaneCodec::decode(&stream, &book).is_err());
+    }
+
+    #[test]
+    fn lane_stream_truncation_rejected() {
+        let data = vec![9u8; 300];
+        let book = book_of(&data);
+        let s = LaneCodec::new(2).unwrap().encode(&data, &book);
+        for cut in [1usize, 4, s.bytes.len() - s.header_bytes() + 1] {
+            let mut short = s.bytes.clone();
+            short.truncate(s.bytes.len().saturating_sub(cut));
+            assert!(LaneStream::from_bytes(short).is_err(), "cut {cut}");
+        }
+        assert!(LaneCodec::new(0).is_err());
+        assert!(LaneCodec::new(MAX_LANES + 1).is_err());
+    }
+
+    #[test]
+    fn compressed_block_sizes_unchanged_by_rewire() {
+        // compress_with_book routes through the batch engine; its output
+        // must be byte-identical to header + count + scalar payload.
+        let data: Vec<u8> = (0..5000u32).map(|i| (i % 41) as u8).collect();
+        let book = book_of(&data);
+        let mut w = BitWriter::new();
+        book.write_header(&mut w);
+        w.put(data.len() as u64, 32);
+        for &e in &data {
+            book.encode_symbol(e, &mut w);
+        }
+        let want_bits = w.len_bits();
+        let want_bytes = w.into_bytes();
+        let block = compress_with_book(&data, &book).unwrap();
+        assert_eq!(block.bits, want_bits);
+        assert_eq!(block.bytes, want_bytes);
+        // And the public roundtrip still holds.
+        let blk2 = compress_exponents(&data).unwrap();
+        assert_eq!(decompress_exponents(&blk2).unwrap(), data);
+    }
+}

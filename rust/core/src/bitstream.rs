@@ -42,10 +42,31 @@ impl BitWriter {
         // nbits < 8 on entry, so nbits + n ≤ 63: no overflow.
         self.acc = (self.acc << n) | value;
         self.nbits += n;
-        while self.nbits >= 8 {
-            self.nbits -= 8;
-            self.buf.push((self.acc >> self.nbits) as u8);
+        if self.nbits >= 8 {
+            self.spill();
         }
+    }
+
+    /// Spill every whole accumulated byte in one word-sized step (§Perf):
+    /// two shifts + one `extend_from_slice` instead of the former per-byte
+    /// loop, so an 8-byte drain costs one memcpy. Kept out of line so the
+    /// common no-spill `put` stays a branch over a shift+or.
+    #[inline]
+    fn spill(&mut self) {
+        // nbits ∈ 8..=63 here ⇒ whole ∈ 8..=56, both shifts in range.
+        let whole = self.nbits & !7;
+        let rem = self.nbits - whole;
+        // Keep the low `rem` bits; left-align the `whole` bits above them.
+        let word = ((self.acc >> rem) << (64 - whole)).to_be_bytes();
+        self.buf.extend_from_slice(&word[..(whole / 8) as usize]);
+        self.nbits = rem;
+    }
+
+    /// Pre-reserve backing capacity for `bits` more bits (§Perf: the batch
+    /// encoder sizes the buffer once from `CodeBook::payload_bits` instead
+    /// of growing it amortized).
+    pub fn reserve_bits(&mut self, bits: u64) {
+        self.buf.reserve((bits as usize).div_ceil(8));
     }
 
     /// Write a single bit.
@@ -176,6 +197,16 @@ impl<'a> BitReader<'a> {
         Ok(())
     }
 
+    /// `(buffer, bit position, readable bit length)` — the raw parts a
+    /// batch decoder builds its [`BitRefill`] window from. The caller is
+    /// responsible for re-syncing with [`skip`] after consuming.
+    ///
+    /// [`skip`]: BitReader::skip
+    #[inline]
+    pub fn raw_parts(&self) -> (&'a [u8], usize, usize) {
+        (self.buf, self.pos, self.len_bits)
+    }
+
     #[inline]
     fn peek_unchecked(&self, n: u32) -> u64 {
         debug_assert!(n <= 57, "peek window limited by the u64 gather");
@@ -200,6 +231,136 @@ impl<'a> BitReader<'a> {
             w
         };
         (window << bit) >> (64 - n)
+    }
+}
+
+/// Refill-based bit window over a byte slice (§Perf) — the batch
+/// decoder's register file.
+///
+/// Invariants:
+///
+/// * `bitbuf` is **left-aligned**: its top `navail` bits are the next
+///   unconsumed stream bits; every bit below them is zero. Consuming
+///   shifts left (zeros in from the right).
+/// * **Tail semantics**: once the loaded bytes run out, reads see zeros;
+///   but when `len_bits` clamps mid-buffer, real buffer bytes *beyond*
+///   `len_bits` are still loaded into the window (unlike
+///   [`BitReader::peek_zeroext`], which zero-extends past `len_bits`).
+///   Callers must therefore gate every consume on [`remaining`] — the
+///   canonical decoder does, and its class-aligned comparisons make
+///   successful decodes independent of those trailing bits; only the
+///   *details* of an error (offset/needed/variant) may differ from the
+///   zero-extended view.
+///
+/// [`remaining`]: BitRefill::remaining
+/// * A [`refill`] tops the window up to ≥ 57 valid bits whenever unread
+///   bytes remain, with a single unaligned big-endian `u64` load on the
+///   fast path; after it, any codeword + escape byte (≤ 39 bits) decodes
+///   without touching memory again.
+/// * `pos()` is the absolute bit offset, so callers can re-sync an outer
+///   [`BitReader`] and report precise error offsets.
+///
+/// [`refill`]: BitRefill::refill
+#[derive(Clone, Debug)]
+pub struct BitRefill<'a> {
+    buf: &'a [u8],
+    /// Next byte to load.
+    byte_pos: usize,
+    /// Left-aligned window of loaded-but-unconsumed bits.
+    bitbuf: u64,
+    /// Valid bit count at the top of `bitbuf`.
+    navail: u32,
+    /// Total readable bits of `buf` (callers may clamp mid-byte).
+    len_bits: usize,
+}
+
+impl<'a> BitRefill<'a> {
+    /// Window over `buf`, starting at absolute bit `start`, reading at
+    /// most the first `len_bits` bits.
+    pub fn new(buf: &'a [u8], start: usize, len_bits: usize) -> Self {
+        debug_assert!(start <= len_bits && len_bits <= buf.len() * 8);
+        let mut s = BitRefill {
+            buf,
+            byte_pos: start / 8,
+            bitbuf: 0,
+            navail: 0,
+            len_bits,
+        };
+        s.refill();
+        // Pre-consume the intra-byte offset. If start is mid-byte the
+        // byte exists, so the refill loaded ≥ 8 bits.
+        let sub = (start % 8) as u32;
+        s.bitbuf <<= sub;
+        s.navail -= sub;
+        s
+    }
+
+    /// Absolute bit position consumed so far.
+    #[inline]
+    pub fn pos(&self) -> usize {
+        self.byte_pos * 8 - self.navail as usize
+    }
+
+    /// Bits remaining before `len_bits`.
+    #[inline]
+    pub fn remaining(&self) -> usize {
+        self.len_bits - self.pos()
+    }
+
+    /// Valid bits currently in the window.
+    #[inline]
+    pub fn navail(&self) -> u32 {
+        self.navail
+    }
+
+    /// The left-aligned window (top [`navail`] bits valid, rest zero).
+    ///
+    /// [`navail`]: BitRefill::navail
+    #[inline]
+    pub fn window(&self) -> u64 {
+        self.bitbuf
+    }
+
+    /// Top the window up to ≥ 57 valid bits, or to end-of-buffer.
+    #[inline]
+    pub fn refill(&mut self) {
+        if self.byte_pos + 8 <= self.buf.len() {
+            // Fast path: one unaligned big-endian load covers the top-up.
+            let arr: [u8; 8] = self.buf[self.byte_pos..self.byte_pos + 8]
+                .try_into()
+                .expect("slice is 8 bytes");
+            let w = u64::from_be_bytes(arr);
+            // Whole bytes that fit above the valid region (0, 8, ..., 64).
+            let add = (64 - self.navail) & !7;
+            if add > 0 {
+                // Mask w down to its top `add` bits so nothing leaks into
+                // the zero region below `navail + add`.
+                let chunk = if add == 64 { w } else { (w >> (64 - add)) << (64 - add) };
+                self.bitbuf |= chunk >> self.navail;
+                self.navail += add;
+                self.byte_pos += (add / 8) as usize;
+            }
+        } else {
+            // Tail: per-byte loads of whatever real bytes remain.
+            while self.navail <= 56 && self.byte_pos < self.buf.len() {
+                self.bitbuf |= (self.buf[self.byte_pos] as u64) << (56 - self.navail);
+                self.navail += 8;
+                self.byte_pos += 1;
+            }
+        }
+    }
+
+    /// Consume `n` bits. The caller must have checked `n ≤ remaining()`;
+    /// after a [`refill`], `navail ≥ 57` or the stream tail is fully
+    /// loaded, so `n ≤ remaining()` implies `n ≤ navail`.
+    ///
+    /// [`refill`]: BitRefill::refill
+    #[inline]
+    pub fn consume(&mut self, n: u32) {
+        debug_assert!(n as usize <= self.remaining(), "consume past stream end");
+        debug_assert!(n <= self.navail, "consume past loaded window");
+        self.bitbuf <<= n;
+        self.navail -= n;
     }
 }
 
@@ -290,6 +451,32 @@ mod tests {
                 assert_eq!(r.get(b).unwrap(), v);
             }
             assert_eq!(r.remaining(), 0);
+        });
+    }
+
+    #[test]
+    fn prop_refill_matches_reader() {
+        check("refill window == reader bits", 150, |g| {
+            let n = g.usize(1..120);
+            let bytes = g.vec(n, |g| g.u8());
+            let len_bits = g.usize(1..bytes.len() * 8 + 1);
+            let start = g.usize(0..len_bits + 1);
+            let mut rf = BitRefill::new(&bytes, start, len_bits);
+            let mut rd = BitReader::with_len(&bytes, len_bits);
+            rd.skip(start as u32).unwrap();
+            assert_eq!(rf.pos(), start);
+            assert_eq!(rf.remaining(), rd.remaining());
+            while rf.remaining() > 0 {
+                if rf.navail() < 40 {
+                    rf.refill();
+                }
+                let take = g.usize(1..rf.remaining().min(32) + 1) as u32;
+                let want = rd.get(take).unwrap();
+                let got = rf.window() >> (64 - take);
+                assert_eq!(got, want, "at bit {}", rf.pos());
+                rf.consume(take);
+            }
+            assert_eq!(rf.pos(), len_bits);
         });
     }
 

@@ -1,34 +1,53 @@
 //! Error type shared by the lexi-core codecs.
+//!
+//! `Display` and `std::error::Error` are implemented by hand: the offline
+//! crate set has no `thiserror`, and the derive buys nothing at this size.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors produced by the software codecs.
-#[derive(Debug, Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum Error {
     /// The bitstream ended in the middle of a codeword or field.
-    #[error("bitstream exhausted: needed {needed} more bits at offset {offset}")]
     BitstreamExhausted { offset: usize, needed: usize },
 
     /// A decoded codeword does not exist in the codebook.
-    #[error("invalid codeword at bit offset {offset}")]
     InvalidCodeword { offset: usize },
 
     /// Codebook construction was handed an empty histogram.
-    #[error("cannot build a codebook from an empty histogram")]
     EmptyHistogram,
 
     /// Codebook (de)serialization failed.
-    #[error("malformed codebook header: {0}")]
     MalformedCodebook(String),
 
     /// Flit parsing failed.
-    #[error("malformed flit: {0}")]
     MalformedFlit(String),
 
     /// A parameter is outside its supported range.
-    #[error("invalid parameter: {0}")]
     InvalidParameter(String),
 }
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::BitstreamExhausted { offset, needed } => write!(
+                f,
+                "bitstream exhausted: needed {needed} more bits at offset {offset}"
+            ),
+            Error::InvalidCodeword { offset } => {
+                write!(f, "invalid codeword at bit offset {offset}")
+            }
+            Error::EmptyHistogram => {
+                write!(f, "cannot build a codebook from an empty histogram")
+            }
+            Error::MalformedCodebook(msg) => write!(f, "malformed codebook header: {msg}"),
+            Error::MalformedFlit(msg) => write!(f, "malformed flit: {msg}"),
+            Error::InvalidParameter(msg) => write!(f, "invalid parameter: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
 
 /// Result alias for lexi-core operations.
 pub type Result<T> = std::result::Result<T, Error>;

@@ -13,6 +13,7 @@
 //! round-robin, §4.4). A layer transfer prepends the serialized codebook
 //! in dedicated flits.
 
+use crate::batch::BatchEncoder;
 use crate::bf16::FieldStreams;
 use crate::bitstream::{BitReader, BitWriter};
 use crate::error::{Error, Result};
@@ -115,6 +116,9 @@ pub fn pack(streams: &FieldStreams, book: &CodeBook, format: FlitFormat) -> Resu
     let codebook_flits = flits.len();
 
     // --- data flits (flit-atomic greedy fill) ---------------------------
+    // §Perf: one pair-fused batch encoder for the whole transfer; the
+    // greedy fill itself prices values off the packed `symbol_bits` LUT.
+    let enc = BatchEncoder::new(book);
     let mut i = 0usize;
     while i < n {
         // Greedily select how many values fit in this flit.
@@ -156,9 +160,7 @@ pub fn pack(streams: &FieldStreams, book: &CodeBook, format: FlitFormat) -> Resu
             }
             w.put(word, 7 * group.len() as u32);
         }
-        for j in 0..k {
-            book.encode_symbol(streams.exponents[i + j], &mut w);
-        }
+        enc.encode_block(&streams.exponents[i..i + k], &mut w);
         w.pad_to_multiple(format.flit_bits as usize);
         let mut bytes = w.into_bytes();
         bytes.resize(flit_bytes, 0);
@@ -194,15 +196,30 @@ pub fn unpack(transfer: &LayerTransfer) -> Result<FieldStreams> {
         let mut r = BitReader::with_len(&f.bytes, format.flit_bits as usize);
         let k = r.get(format.header_bits)? as usize;
         let base = out.signs.len();
-        for _ in 0..k {
-            out.signs.push(r.get_bit()? as u8);
+        // §Perf: read the fixed-width fields in the same word-sized
+        // groups `pack` wrote them (≤56 sign bits / 8×7 mantissa bits per
+        // get), then batch-decode the exponent run in one refill pass.
+        let mut got = 0usize;
+        while got < k {
+            let take = (k - got).min(56);
+            let word = r.get(take as u32)?;
+            for j in (0..take).rev() {
+                out.signs.push(((word >> j) & 1) as u8);
+            }
+            got += take;
         }
-        for _ in 0..k {
-            out.mantissas.push(r.get(7)? as u8);
+        let mut got = 0usize;
+        while got < k {
+            let take = (k - got).min(8);
+            let word = r.get(7 * take as u32)?;
+            for j in (0..take).rev() {
+                out.mantissas.push(((word >> (7 * j)) & 0x7f) as u8);
+            }
+            got += take;
         }
-        for _ in 0..k {
-            out.exponents.push(dec.decode(&mut r)?);
-        }
+        let ebase = out.exponents.len();
+        out.exponents.resize(ebase + k, 0);
+        dec.decode_block_into(&mut r, &mut out.exponents[ebase..])?;
         debug_assert_eq!(out.signs.len(), base + k);
     }
     if out.len() != count {

@@ -16,7 +16,8 @@
 //!   length) list prefixes each compressed stream, enough for the receiver
 //!   to rebuild the identical canonical code.
 
-use crate::bitstream::{BitReader, BitWriter};
+use crate::batch::BatchEncoder;
+use crate::bitstream::{BitReader, BitRefill, BitWriter};
 use crate::error::{Error, Result};
 use crate::stats::Histogram;
 
@@ -469,6 +470,109 @@ impl CanonicalDecoder {
     pub fn esc_len(&self) -> u32 {
         self.esc_len
     }
+
+    /// Batch-decode exactly `out.len()` symbols from `r` (§Perf).
+    ///
+    /// Refill-based: a local 64-bit [`BitRefill`] window is topped up at
+    /// most once per symbol (one unaligned load per ~2–4 short codes),
+    /// the fast table resolves short codes against the window registers
+    /// with no per-symbol bounds re-derivation, and symbols store
+    /// directly into `out` — no `Vec::push`. `r` is advanced past
+    /// everything consumed.
+    ///
+    /// Equivalence with repeated [`decode`]: every *successful* decode is
+    /// bit-exact, and a stream that errors under one path errors under
+    /// the other — but because [`BitRefill`] loads real buffer bytes past
+    /// a mid-byte `len_bits` clamp where [`decode`] zero-extends, the
+    /// error's offset/`needed` detail may differ on such tails.
+    ///
+    /// [`decode`]: CanonicalDecoder::decode
+    pub fn decode_block_into(&self, r: &mut BitReader, out: &mut [u8]) -> Result<()> {
+        let (buf, start, len_bits) = r.raw_parts();
+        let mut s = BitRefill::new(buf, start, len_bits);
+        for slot in out.iter_mut() {
+            // 40 bits cover the worst case (31-bit ESC + 8 raw bits), so
+            // one refill per symbol suffices.
+            if s.navail() < 40 {
+                s.refill();
+            }
+            *slot = self.decode_one(&mut s)?;
+        }
+        // Re-sync the outer reader (chunked: skip takes u32).
+        let mut left = s.pos() - start;
+        while left > 0 {
+            let step = left.min(1 << 30) as u32;
+            r.skip(step)?;
+            left -= step as usize;
+        }
+        Ok(())
+    }
+
+    /// One symbol off the refill window: fast-table probe, then the
+    /// length-class walk. Mirrors [`decode`]/[`decode_slow`] exactly.
+    ///
+    /// [`decode`]: CanonicalDecoder::decode
+    /// [`decode_slow`]: CanonicalDecoder::decode_slow
+    #[inline]
+    fn decode_one(&self, s: &mut BitRefill) -> Result<u8> {
+        let probe = (s.window() >> (64 - FAST_BITS)) as usize;
+        let hit = self.fast[probe];
+        if hit != FAST_MISS {
+            let len = hit & 0xff;
+            if s.remaining() >= len as usize {
+                s.consume(len);
+                return Ok((hit >> 8) as u8);
+            }
+        }
+        self.decode_one_slow(s)
+    }
+
+    fn decode_one_slow(&self, s: &mut BitRefill) -> Result<u8> {
+        // Same per-length-class comparison as `decode_slow`, against the
+        // top 32 bits of the refill window. For any *valid* codeword all
+        // window extensions stay inside its length class (class uppers
+        // are aligned to the class's code granularity), so tail garbage
+        // below `remaining()` cannot flip a successful decode.
+        let window = s.window() >> 32;
+        let offset = s.pos();
+        for k in 0..self.lengths.len() {
+            let len = self.lengths[k];
+            let upper = if k + 1 < self.lengths.len() {
+                self.first_code_aligned[k + 1]
+            } else {
+                u64::MAX
+            };
+            if window < upper {
+                if s.remaining() < len as usize {
+                    return Err(Error::BitstreamExhausted {
+                        offset,
+                        needed: len as usize - s.remaining(),
+                    });
+                }
+                let code = (window >> (32 - len)) as u32;
+                let first = (self.first_code_aligned[k] >> (32 - len)) as u32;
+                let idx = self.first_index[k] + (code - first) as usize;
+                if idx >= self.symbols.len() {
+                    return Err(Error::InvalidCodeword { offset });
+                }
+                s.consume(len);
+                let sym = self.symbols[idx];
+                if sym == ESC {
+                    if s.remaining() < 8 {
+                        return Err(Error::BitstreamExhausted {
+                            offset: s.pos(),
+                            needed: 8 - s.remaining(),
+                        });
+                    }
+                    let raw = (s.window() >> 56) as u8;
+                    s.consume(8);
+                    return Ok(raw);
+                }
+                return Ok(sym as u8);
+            }
+        }
+        Err(Error::InvalidCodeword { offset })
+    }
 }
 
 /// Length-limited Huffman code lengths via the package–merge algorithm.
@@ -586,18 +690,32 @@ impl EncodedExponents {
 pub fn compress_exponents(exponents: &[u8]) -> Result<EncodedExponents> {
     let hist = Histogram::from_bytes(exponents);
     let book = CodeBook::lexi_default(&hist)?;
-    compress_with_book(exponents, &book)
+    let mut w = BitWriter::new();
+    // §Perf: exact capacity up front — the histogram prices the payload.
+    w.reserve_bits(book.header_bits() + 32 + book.payload_bits(&hist));
+    compress_with_book_into(exponents, &book, w)
 }
 
 /// Compress with an explicit codebook (e.g. one built from only the first
-/// 512 samples, as the hardware does).
+/// 512 samples, as the hardware does). Routed through the batch engine
+/// ([`BatchEncoder`]); output is bit-identical to the scalar
+/// per-symbol path.
 pub fn compress_with_book(exponents: &[u8], book: &CodeBook) -> Result<EncodedExponents> {
     let mut w = BitWriter::new();
+    // No histogram here: reserve a 2-bit/symbol estimate (realistic
+    // streams land near it; worst case just re-grows).
+    w.reserve_bits(book.header_bits() + 32 + exponents.len() as u64 * 2);
+    compress_with_book_into(exponents, book, w)
+}
+
+fn compress_with_book_into(
+    exponents: &[u8],
+    book: &CodeBook,
+    mut w: BitWriter,
+) -> Result<EncodedExponents> {
     book.write_header(&mut w);
     w.put(exponents.len() as u64, 32);
-    for &e in exponents {
-        book.encode_symbol(e, &mut w);
-    }
+    BatchEncoder::new(book).encode_block(exponents, &mut w);
     let bits = w.len_bits();
     Ok(EncodedExponents {
         bytes: w.into_bytes(),
@@ -606,16 +724,15 @@ pub fn compress_with_book(exponents: &[u8], book: &CodeBook) -> Result<EncodedEx
     })
 }
 
-/// Decompress a block produced by [`compress_exponents`].
+/// Decompress a block produced by [`compress_exponents`]. Routed through
+/// the refill-based batch decoder ([`CanonicalDecoder::decode_block_into`]).
 pub fn decompress_exponents(block: &EncodedExponents) -> Result<Vec<u8>> {
     let mut r = BitReader::with_len(&block.bytes, block.bits);
     let book = CodeBook::read_header(&mut r)?;
     let count = r.get(32)? as usize;
     let dec = book.decoder();
-    let mut out = Vec::with_capacity(count);
-    for _ in 0..count {
-        out.push(dec.decode(&mut r)?);
-    }
+    let mut out = vec![0u8; count];
+    dec.decode_block_into(&mut r, &mut out)?;
     Ok(out)
 }
 

@@ -16,10 +16,14 @@
 //! * [`prng`], [`proptest`] — deterministic PRNG + a minimal property-test
 //!   driver (the offline crate set has no `rand`/`proptest`; these are
 //!   first-class substrates here, not mocks).
+//! * [`batch`] — §Perf: the word-at-a-time batch codec engine (pair-fused
+//!   encode, refill-based block decode, N-lane interleaved streams) that
+//!   the scalar codecs above are the bit-exact oracle for.
 //!
 //! The cycle-accurate hardware realization lives in `lexi-hw`; this crate is
 //! the bit-exact oracle it is tested against.
 
+pub mod batch;
 pub mod bdi;
 pub mod bf16;
 pub mod bitstream;

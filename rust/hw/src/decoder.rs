@@ -12,9 +12,10 @@
 //! in stage 1 at line rate. Multiple decode lanes take whole flits
 //! round-robin (flit-atomic packing makes them independent).
 
+use lexi_core::batch::LaneStream;
 use lexi_core::bitstream::BitReader;
 use lexi_core::error::{Error, Result};
-use lexi_core::huffman::CodeBook;
+use lexi_core::huffman::{CanonicalDecoder, CodeBook};
 
 /// A multi-stage decoder configuration.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -155,6 +156,17 @@ impl DecoderUnit {
     ) -> Result<(Vec<u8>, DecodeReport)> {
         self.cfg.supports(book)?;
         let dec = book.decoder();
+        self.decode_with(&dec, r, count)
+    }
+
+    /// Inner decode loop over an already-built canonical decoder, so
+    /// multi-lane callers validate and build tables once, not per lane.
+    fn decode_with(
+        &self,
+        dec: &CanonicalDecoder,
+        r: &mut BitReader,
+        count: usize,
+    ) -> Result<(Vec<u8>, DecodeReport)> {
         let mut out = Vec::with_capacity(count);
         let mut report = DecodeReport {
             per_stage: vec![0; self.cfg.stage_bits.len()],
@@ -179,6 +191,76 @@ impl DecoderUnit {
     /// Config accessor.
     pub fn config(&self) -> &DecoderConfig {
         &self.cfg
+    }
+
+    /// Decode an `N`-lane interleaved stream (paper §4.4): each lane runs
+    /// the multi-stage pipeline independently, and the unit's makespan is
+    /// the slowest lane — the quantity [`parallel_makespan`] models for
+    /// flit round-robin. Bit-exact with `LaneCodec::decode`.
+    pub fn decode_lane_stream(
+        &self,
+        stream: &LaneStream,
+        book: &CodeBook,
+    ) -> Result<(Vec<u8>, LaneDecodeReport)> {
+        // Format validation is shared with `LaneCodec::decode`: one
+        // source of truth for lane bounds, so format changes cannot fix
+        // one consumer and miss the other. Config support and decoder
+        // tables are likewise checked/built once, not per lane.
+        let views = stream.validated_lanes()?;
+        self.cfg.supports(book)?;
+        let dec = book.decoder();
+        let n = stream.lanes;
+        let mut out = vec![0u8; stream.count];
+        let mut per_lane_cycles = Vec::with_capacity(n);
+        for v in views {
+            let mut r = BitReader::with_len(&stream.bytes[v.range.clone()], v.bits as usize);
+            let (syms, report) = self.decode_with(&dec, &mut r, v.symbols)?;
+            for (k, &sym) in syms.iter().enumerate() {
+                out[v.lane + k * n] = sym;
+            }
+            per_lane_cycles.push(report.cycles);
+        }
+        let makespan = per_lane_cycles.iter().copied().max().unwrap_or(0);
+        Ok((
+            out,
+            LaneDecodeReport {
+                per_lane_cycles,
+                makespan,
+                symbols: stream.count as u64,
+            },
+        ))
+    }
+}
+
+/// Cycle report for one multi-lane decode.
+#[derive(Clone, Debug, Default)]
+pub struct LaneDecodeReport {
+    /// Total stage-latency cycles per lane.
+    pub per_lane_cycles: Vec<u64>,
+    /// Slowest lane — the unit's completion time with parallel lanes.
+    pub makespan: u64,
+    /// Symbols decoded across all lanes.
+    pub symbols: u64,
+}
+
+impl LaneDecodeReport {
+    /// Effective cycles per symbol with all lanes running.
+    pub fn effective_latency(&self) -> f64 {
+        if self.symbols == 0 {
+            0.0
+        } else {
+            self.makespan as f64 / self.symbols as f64
+        }
+    }
+
+    /// Speedup of the parallel-lane makespan over serializing every lane.
+    pub fn lane_speedup(&self) -> f64 {
+        let total: u64 = self.per_lane_cycles.iter().sum();
+        if self.makespan == 0 {
+            1.0
+        } else {
+            total as f64 / self.makespan as f64
+        }
     }
 }
 
@@ -318,5 +400,56 @@ mod tests {
         assert_eq!(parallel_makespan(&units, 1), 100);
         assert_eq!(parallel_makespan(&units, 10), 10);
         assert_eq!(parallel_makespan(&units, 3), 40);
+    }
+
+    #[test]
+    fn lane_stream_decodes_bit_exactly_across_lane_counts() {
+        use lexi_core::batch::LaneCodec;
+        check("hw lane decode roundtrip", 40, |g| {
+            let n = g.usize(1..2000);
+            let data = if g.bool(0.7) {
+                let a = g.usize(1..36);
+                g.skewed_bytes(n, a)
+            } else {
+                g.vec(n, |g| g.u8())
+            };
+            let hist = Histogram::from_bytes(&data);
+            let book = CodeBook::lexi_default(&hist).unwrap();
+            let unit = DecoderUnit::new(DecoderConfig::paper_default()).unwrap();
+            for lanes in [1usize, 2, 4, 8] {
+                let stream = LaneCodec::new(lanes).unwrap().encode(&data, &book);
+                let (out, report) = unit.decode_lane_stream(&stream, &book).unwrap();
+                assert_eq!(out, data, "lanes {lanes}");
+                assert_eq!(report.symbols, data.len() as u64);
+                assert_eq!(report.per_lane_cycles.len(), lanes);
+                assert_eq!(
+                    report.makespan,
+                    report.per_lane_cycles.iter().copied().max().unwrap()
+                );
+                // Software mirror agrees with the hw model's output.
+                assert_eq!(LaneCodec::decode(&stream, &book).unwrap(), data);
+            }
+        });
+    }
+
+    #[test]
+    fn more_lanes_never_slow_the_makespan() {
+        let data: Vec<u8> = (0..6000u32).map(|i| 118 + (i % 11) as u8).collect();
+        let hist = Histogram::from_bytes(&data);
+        let book = CodeBook::lexi_default(&hist).unwrap();
+        let unit = DecoderUnit::new(DecoderConfig::paper_default()).unwrap();
+        let mut prev = u64::MAX;
+        for lanes in [1usize, 2, 4, 8] {
+            use lexi_core::batch::LaneCodec;
+            let stream = LaneCodec::new(lanes).unwrap().encode(&data, &book);
+            let (_, report) = unit.decode_lane_stream(&stream, &book).unwrap();
+            assert!(
+                report.makespan <= prev,
+                "lanes {lanes}: makespan {} > previous {prev}",
+                report.makespan
+            );
+            assert!(report.lane_speedup() >= lanes as f64 * 0.8);
+            prev = report.makespan;
+        }
     }
 }

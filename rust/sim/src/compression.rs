@@ -6,6 +6,12 @@
 //! running the actual codec + flit packetizer over representative streams
 //! (synthetic at paper scale, real tensors at tiny scale via the runtime),
 //! not assumed.
+//!
+//! The measurement path routes through the §Perf batch engine
+//! (`lexi_core::batch`) via `compress_exponents` / `flit::pack`; the
+//! batch rewire is bit-identical to the scalar oracle, so every ratio in
+//! this table is unchanged — pinned by
+//! `batch_rewire_preserves_compressed_sizes` below.
 
 use lexi_core::bf16::FieldStreams;
 use lexi_core::flit::{self, FlitFormat};
@@ -208,6 +214,30 @@ mod tests {
         );
         assert!(t.wire_bytes(b, TransferKind::KvCache, CompressionMode::Lexi) < b);
         assert!(t.wire_bytes(b, TransferKind::Weights, CompressionMode::WeightsOnly) < b);
+    }
+
+    #[test]
+    fn batch_rewire_preserves_compressed_sizes() {
+        // The ISSUE-1 acceptance gate: compressed sizes (and therefore
+        // every CR table) must be byte-identical to the scalar path.
+        let cfg = ModelConfig::jamba(ModelScale::Paper);
+        for kind in [TransferKind::Activation, TransferKind::KvCache] {
+            let exps = activations::sample_exponents(&cfg, 0, kind, 9, 40_000);
+            let hist = Histogram::from_bytes(&exps);
+            let book = CodeBook::lexi_default(&hist).unwrap();
+            // Scalar oracle: header + count + one encode_symbol per exponent.
+            let mut w = lexi_core::bitstream::BitWriter::new();
+            book.write_header(&mut w);
+            w.put(exps.len() as u64, 32);
+            for &e in &exps {
+                book.encode_symbol(e, &mut w);
+            }
+            let want_bits = w.len_bits();
+            let want_bytes = w.into_bytes();
+            let block = huffman::compress_with_book(&exps, &book).unwrap();
+            assert_eq!(block.bits, want_bits, "{kind:?}");
+            assert_eq!(block.bytes, want_bytes, "{kind:?}");
+        }
     }
 
     #[test]

@@ -4,9 +4,17 @@
 //! model: `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
 //! `client.compile` → `execute`. HLO *text* is the interchange format
 //! (see `python/compile/aot.py` for why). Python never runs here.
+//!
+//! The `xla` crate is not in the offline crate set, so the PJRT half is
+//! gated behind the `pjrt` feature: the manifest/tensor layer always
+//! compiles, while the default build ships a [`Runtime`] stub that
+//! errors at construction. Everything downstream (coordinator, CLI)
+//! compiles against the same signatures either way.
 
 use crate::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, Context, Result};
+#[cfg(not(feature = "pjrt"))]
+use anyhow::bail;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -176,6 +184,7 @@ impl Tensor {
         self.data.iter().map(|&x| lexi_core::Bf16::from_f32(x)).collect()
     }
 
+    #[cfg(feature = "pjrt")]
     fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
         if self.data.is_empty() {
@@ -188,11 +197,33 @@ impl Tensor {
     }
 }
 
+/// Prefill outputs (order fixed by the AOT manifest).
+#[derive(Clone, Debug)]
+pub struct PrefillOut {
+    pub logits: Tensor,
+    pub acts: Tensor,
+    pub kv: Tensor,
+    pub ssm: Tensor,
+    pub conv: Tensor,
+}
+
+/// Decode-step outputs.
+#[derive(Clone, Debug)]
+pub struct DecodeOut {
+    pub logits: Tensor,
+    pub acts: Tensor,
+    pub kv: Tensor,
+    pub ssm: Tensor,
+    pub conv: Tensor,
+}
+
 /// The PJRT CPU runtime.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create a CPU PJRT client.
     pub fn cpu() -> Result<Self> {
@@ -231,38 +262,20 @@ impl Runtime {
     }
 }
 
-/// Prefill outputs (order fixed by the AOT manifest).
-#[derive(Clone, Debug)]
-pub struct PrefillOut {
-    pub logits: Tensor,
-    pub acts: Tensor,
-    pub kv: Tensor,
-    pub ssm: Tensor,
-    pub conv: Tensor,
-}
-
-/// Decode-step outputs.
-#[derive(Clone, Debug)]
-pub struct DecodeOut {
-    pub logits: Tensor,
-    pub acts: Tensor,
-    pub kv: Tensor,
-    pub ssm: Tensor,
-    pub conv: Tensor,
-}
-
 /// A compiled model pair (prefill + decode).
+#[cfg(feature = "pjrt")]
 pub struct LoadedModel {
     pub manifest: ModelManifest,
     prefill: xla::PjRtLoadedExecutable,
     decode: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 impl LoadedModel {
     /// Run prefill over `tokens` (must be exactly `seq_in` long).
     pub fn run_prefill(&self, tokens: &[i32]) -> Result<PrefillOut> {
         if tokens.len() != self.manifest.seq_in {
-            bail!(
+            anyhow::bail!(
                 "prefill expects {} tokens, got {}",
                 self.manifest.seq_in,
                 tokens.len()
@@ -316,7 +329,7 @@ impl LoadedModel {
         let result = exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
         let parts = result.to_tuple()?;
         if parts.len() != spec.outputs.len() {
-            bail!(
+            anyhow::bail!(
                 "expected {} outputs, got {}",
                 spec.outputs.len(),
                 parts.len()
@@ -332,7 +345,7 @@ impl LoadedModel {
                     lit.to_vec::<f32>()?
                 };
                 if data.len() != ospec.elements() {
-                    bail!(
+                    anyhow::bail!(
                         "output elements {} != spec {}",
                         data.len(),
                         ospec.elements()
@@ -344,6 +357,64 @@ impl LoadedModel {
                 })
             })
             .collect()
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+const NO_PJRT: &str =
+    "this build has no PJRT runtime: rebuild with `--features pjrt` (requires the `xla` crate, \
+     absent from the offline crate set)";
+
+/// Stub runtime compiled when the `pjrt` feature is off: construction
+/// fails with a clear message, so `lexi profile` and the runtime_e2e
+/// tests (which skip without artifacts anyway) degrade gracefully.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    _private: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Fails: the PJRT client is unavailable in this build.
+    pub fn cpu() -> Result<Self> {
+        bail!("{NO_PJRT}")
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        "stub (no pjrt)".to_string()
+    }
+
+    /// Fails: the PJRT client is unavailable in this build.
+    pub fn load_model(&self, _manifest: &Manifest, _model: &str) -> Result<LoadedModel> {
+        bail!("{NO_PJRT}")
+    }
+}
+
+/// Stub compiled model: carries the manifest so coordinator code
+/// typechecks; execution paths error.
+#[cfg(not(feature = "pjrt"))]
+pub struct LoadedModel {
+    pub manifest: ModelManifest,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl LoadedModel {
+    /// Fails: no executable is loaded in a stub build.
+    pub fn run_prefill(&self, _tokens: &[i32]) -> Result<PrefillOut> {
+        bail!("{NO_PJRT}")
+    }
+
+    /// Fails: no executable is loaded in a stub build.
+    pub fn run_decode(
+        &self,
+        _token: i32,
+        _pos: i32,
+        _kv: &Tensor,
+        _ssm: &Tensor,
+        _conv: &Tensor,
+    ) -> Result<DecodeOut> {
+        bail!("{NO_PJRT}")
     }
 }
 
