@@ -119,15 +119,32 @@ fn main() {
     // chosen 4-stage unit per lane.
     let unit = DecoderUnit::new(DecoderConfig::paper_default()).expect("valid config");
     println!("\nmulti-lane decode of {} exponents (4-stage unit per lane):", exps.len());
-    let mut lt = Table::new(&["lanes", "makespan (cycles)", "eff. cycles/exp", "lane speedup"]);
+    let mut lt = Table::new(&[
+        "lanes",
+        "makespan (cycles)",
+        "lockstep (cycles)",
+        "eff. cycles/exp",
+        "lockstep cycles/exp",
+        "lane speedup",
+    ]);
     for lanes in [1usize, 2, 4, 8, 10] {
         let stream = LaneCodec::new(lanes).expect("lane count").encode(&exps, &book);
         let (out, rep) = unit.decode_lane_stream(&stream, &book).expect("decodes");
         assert_eq!(out, exps, "lane decode must be bit-exact");
+        assert_eq!(
+            LaneCodec::decode_lockstep(&stream, &book).expect("decodes"),
+            exps,
+            "software lockstep must agree with the hw model"
+        );
+        // Independent lanes finish first; a round-synchronized lockstep
+        // scheduler pays for each round's slowest stage.
+        assert!(rep.lockstep_cycles >= rep.makespan);
         lt.row(vec![
             lanes.to_string(),
             rep.makespan.to_string(),
+            rep.lockstep_cycles.to_string(),
             format!("{:.3}", rep.effective_latency()),
+            format!("{:.3}", rep.lockstep_latency()),
             format!("{:.2}x", rep.lane_speedup()),
         ]);
     }

@@ -129,6 +129,26 @@ fn main() {
     });
     record(&mut t, &mut rows, &dec_lanes, "decode lanes=4", n as u64, "exps");
 
+    // --- lockstep vs lane-at-a-time (ISSUE 2 tentpole) ------------------
+    let lane8 = LaneCodec::new(8).expect("valid");
+    let lane_stream8 = lane8.encode(&exps, &book);
+    let dec_lanes8 = bench("decode lanes=8", 1, 7, || {
+        LaneCodec::decode(&lane_stream8, &book).unwrap()
+    });
+    let dec_lanes8_mps =
+        record(&mut t, &mut rows, &dec_lanes8, "decode lanes=8", n as u64, "exps");
+
+    let dec_lock4 = bench("decode lockstep=4", 1, 7, || {
+        LaneCodec::decode_lockstep(&lane_stream, &book).unwrap()
+    });
+    record(&mut t, &mut rows, &dec_lock4, "decode lockstep=4", n as u64, "exps");
+
+    let dec_lock8 = bench("decode lockstep=8", 1, 7, || {
+        LaneCodec::decode_lockstep(&lane_stream8, &book).unwrap()
+    });
+    let dec_lock8_mps =
+        record(&mut t, &mut rows, &dec_lock8, "decode lockstep=8", n as u64, "exps");
+
     // Cross-path equivalence sanity (cheap; the test suites pin this
     // property-style).
     {
@@ -141,6 +161,11 @@ fn main() {
             LaneCodec::decode(&lane_stream, &book).unwrap(),
             exps,
             "lane decode must be bit-exact"
+        );
+        assert_eq!(
+            LaneCodec::decode_lockstep(&lane_stream8, &book).unwrap(),
+            exps,
+            "lockstep decode must be bit-exact"
         );
     }
 
@@ -177,6 +202,7 @@ fn main() {
 
     let enc_speedup = enc_batch_mps / enc_scalar_mps;
     let dec_speedup = dec_batch_mps / dec_scalar_mps;
+    let lockstep_speedup = dec_lock8_mps / dec_lanes8_mps.max(1e-9);
     println!(
         "\nbatch encode {enc_batch_mps:.0} M exps/s (target ≥100 M/s, ≥3× scalar {enc_scalar_mps:.0}) — {}",
         if enc_batch_mps >= 100.0 && enc_speedup >= 3.0 { "PASS" } else { "BELOW TARGET" }
@@ -184,6 +210,10 @@ fn main() {
     println!(
         "batch decode {dec_batch_mps:.0} M exps/s (target ≥2× scalar {dec_scalar_mps:.0}) — {}",
         if dec_speedup >= 2.0 { "PASS" } else { "BELOW TARGET" }
+    );
+    println!(
+        "lockstep decode {dec_lock8_mps:.0} M exps/s at 8 lanes (target ≥1.5× lane-at-a-time {dec_lanes8_mps:.0}, measured {lockstep_speedup:.2}×) — {}",
+        if lockstep_speedup >= 1.5 { "PASS" } else { "BELOW TARGET" }
     );
     println!(
         "decode/encode ratio {:.2} (informal goal: decode within 2× of encode)",
@@ -195,6 +225,9 @@ fn main() {
     json.push_str(&format!("  \"bench\": \"perf_codec\",\n  \"n\": {n},\n"));
     json.push_str(&format!(
         "  \"encode_batch_speedup\": {enc_speedup:.3},\n  \"decode_batch_speedup\": {dec_speedup:.3},\n"
+    ));
+    json.push_str(&format!(
+        "  \"lockstep_speedup_8\": {lockstep_speedup:.3},\n"
     ));
     json.push_str("  \"rows\": {\n");
     for (i, r) in rows.iter().enumerate() {

@@ -20,9 +20,33 @@ if [[ "${1:-}" != "--quick" ]]; then
     LEXI_BENCH_N=20000 cargo run --example perf_codec_smoke
 
     # Full-size release run: prints the before/after table and refreshes
-    # BENCH_perf_codec.json (the §Perf trajectory).
+    # BENCH_perf_codec.json (the §Perf trajectory). Remove the checked-out
+    # copy first so a silent bench write failure cannot feed the gate a
+    # stale file (which, once a baseline is committed, would be the
+    # baseline itself — the gate would diff it against itself and pass).
     echo "== perf_codec (release) =="
+    rm -f BENCH_perf_codec.json
     cargo bench --bench perf_codec
+
+    # Perf-regression gate (ISSUE 2): diff the fresh JSON against the
+    # committed baseline; >15% throughput drop on any shared row fails.
+    # LEXI_SKIP_PERF_GATE=1 skips (toolchain-less or noisy containers);
+    # a missing baseline skips with a reminder to commit one.
+    if [[ "${LEXI_SKIP_PERF_GATE:-0}" == "1" ]]; then
+        echo "== perf gate: SKIPPED (LEXI_SKIP_PERF_GATE=1) =="
+    elif ! command -v python3 >/dev/null 2>&1; then
+        echo "== perf gate: SKIPPED (no python3) =="
+    else
+        baseline=$(mktemp)
+        if git show HEAD:BENCH_perf_codec.json > "$baseline" 2>/dev/null; then
+            echo "== perf gate: fresh BENCH_perf_codec.json vs HEAD baseline =="
+            python3 tools/perf_gate.py BENCH_perf_codec.json "$baseline"
+        else
+            echo "== perf gate: SKIPPED (no committed BENCH_perf_codec.json baseline —"
+            echo "   commit the freshly written one to arm the gate) =="
+        fi
+        rm -f "$baseline"
+    fi
 fi
 
 echo "ci.sh: all green"

@@ -11,24 +11,44 @@
 //!   Escaped symbols fall back to the packed scalar LUT.
 //! * [`LaneCodec`] / [`LaneStream`] — an `N`-lane interleaved stream
 //!   format mirroring the paper's multi-lane LUT decoder (§4.4): symbol
-//!   `i` goes to lane `i mod N` and each lane is an independent bitstream
-//!   over the shared codebook, so `N` refill decoders proceed without
-//!   serial bit-offset dependencies (physical lanes in hardware,
-//!   instruction-level parallelism in software).
+//!   `i` goes to lane `i mod N` and each lane is an independent bitstream,
+//!   so `N` refill decoders proceed without serial bit-offset dependencies
+//!   (physical lanes in hardware, instruction-level parallelism in
+//!   software). Lanes share one codebook by default; the v2 header
+//!   ([`LANE_BOOKS_FLAG`]) optionally embeds **per-lane codebooks** for
+//!   multi-tenant links whose lanes carry differently-distributed streams.
+//! * [`LaneCodec::decode_lockstep`] — the lockstep interleaved decoder
+//!   (§Perf, DESIGN.md §Lockstep): all `N` windows held live in
+//!   struct-of-arrays state ([`LaneWindows`]) and advanced one symbol per
+//!   lane per round, so the `N` independent table lookups pipeline
+//!   instead of running lane-at-a-time.
 //!
 //! The refill-based block *decoder* lives on
 //! [`CanonicalDecoder::decode_block_into`], next to the tables it probes.
 //!
 //! [`huffman`]: crate::huffman
 //! [`CanonicalDecoder::decode_block_into`]: crate::huffman::CanonicalDecoder::decode_block_into
+//! [`LaneWindows`]: crate::bitstream::LaneWindows
 
-use crate::bitstream::{BitReader, BitWriter};
+use crate::bitstream::{BitReader, BitWriter, LaneWindows};
 use crate::error::{Error, Result};
-use crate::huffman::{CodeBook, ESC_SYMBOL};
+use crate::huffman::{CanonicalDecoder, CodeBook, ESC_SYMBOL};
 
 /// Maximum supported lane count (8 matches the paper's decoder sweep;
-/// headroom beyond it costs nothing in the format).
+/// headroom beyond it costs nothing in the format). Must stay ≤ 127 so
+/// the lane count shares the header byte with [`LANE_BOOKS_FLAG`].
 pub const MAX_LANES: usize = 64;
+
+/// v2 header flag (top bit of the first wire byte): the stream embeds
+/// one codebook per lane. v1 streams have the bit clear, so every v1
+/// byte sequence parses identically under the v2 reader.
+pub const LANE_BOOKS_FLAG: u8 = 0x80;
+
+/// Largest serialized per-lane codebook header we accept, in bits: the
+/// `count:6` field of [`CodeBook::write_header`] caps entries at 63, at
+/// 14 bits each plus the 6-bit count. A hostile header demanding more is
+/// rejected before any book parsing or allocation.
+pub const MAX_BOOK_HEADER_BITS: u32 = 6 + 14 * 63;
 
 /// Pair LUT is built only for alphabets up to this size: the paper's
 /// pipeline caps the primary alphabet at 32, and a degenerate 256-symbol
@@ -175,9 +195,54 @@ impl LaneCodec {
     }
 
     /// Encode `exps` round-robin across the lanes (symbol `i` → lane
-    /// `i mod N`), each lane through the pair-fused batch encoder.
+    /// `i mod N`), each lane through the pair-fused batch encoder over
+    /// one shared codebook (v1 wire format).
     pub fn encode(&self, exps: &[u8], book: &CodeBook) -> LaneStream {
+        let enc = BatchEncoder::new(book);
+        let encs: Vec<&BatchEncoder> = vec![&enc; self.lanes];
+        self.encode_with(exps, &encs, None)
+    }
+
+    /// Encode with one codebook **per lane** (v2 wire format): lane `l`'s
+    /// substream is encoded with `books[l]`, and all `lanes` book headers
+    /// ride in the stream so the receiver needs no side channel. This is
+    /// the multi-tenant link shape: differently-distributed streams share
+    /// the physical lanes, each under its own code.
+    ///
+    /// Errors if `books.len() != lanes` or a book is too large to
+    /// serialize (more than 63 canonical entries — see
+    /// [`CodeBook::write_header`]'s 6-bit count field).
+    pub fn encode_per_lane(&self, exps: &[u8], books: &[CodeBook]) -> Result<LaneStream> {
+        if books.len() != self.lanes {
+            return Err(Error::InvalidParameter(format!(
+                "{} books for {} lanes",
+                books.len(),
+                self.lanes
+            )));
+        }
+        for (l, b) in books.iter().enumerate() {
+            if b.canonical_pairs().len() > 63 {
+                return Err(Error::InvalidParameter(format!(
+                    "lane {l}: codebook with {} entries exceeds the 63-entry wire header",
+                    b.canonical_pairs().len()
+                )));
+            }
+        }
+        let encs_owned: Vec<BatchEncoder> = books.iter().map(BatchEncoder::new).collect();
+        let encs: Vec<&BatchEncoder> = encs_owned.iter().collect();
+        Ok(self.encode_with(exps, &encs, Some(books)))
+    }
+
+    /// Shared encode core: round-robin split, per-lane batch encode, then
+    /// header + optional book table + payload serialization.
+    fn encode_with(
+        &self,
+        exps: &[u8],
+        encs: &[&BatchEncoder],
+        books: Option<&[CodeBook]>,
+    ) -> LaneStream {
         let n = self.lanes;
+        debug_assert_eq!(encs.len(), n);
         // Release-safe guards: the wire header stores count and per-lane
         // bit lengths as u32; silent wrapping would serialize a stream
         // that decodes to the wrong symbols.
@@ -185,7 +250,6 @@ impl LaneCodec {
             exps.len() <= u32::MAX as usize,
             "lane stream supports at most u32::MAX symbols"
         );
-        let enc = BatchEncoder::new(book);
         let mut payloads: Vec<Vec<u8>> = Vec::with_capacity(n);
         let mut lane_bits: Vec<u32> = Vec::with_capacity(n);
         let mut scratch: Vec<u8> = Vec::with_capacity(exps.len().div_ceil(n));
@@ -194,7 +258,7 @@ impl LaneCodec {
             scratch.extend(exps.iter().skip(l).step_by(n));
             let mut w = BitWriter::new();
             w.reserve_bits(scratch.len() as u64 * 2);
-            enc.encode_block(&scratch, &mut w);
+            encs[l].encode_block(&scratch, &mut w);
             assert!(
                 w.len_bits() <= u32::MAX as usize,
                 "lane payload exceeds the u32 bit-length header"
@@ -203,12 +267,33 @@ impl LaneCodec {
             payloads.push(w.into_bytes());
         }
 
+        // Serialized per-lane book headers (v2 only).
+        let mut book_bits: Vec<u16> = Vec::new();
+        let mut book_blobs: Vec<Vec<u8>> = Vec::new();
+        if let Some(bs) = books {
+            for b in bs {
+                let mut w = BitWriter::new();
+                b.write_header(&mut w);
+                debug_assert!(w.len_bits() as u32 <= MAX_BOOK_HEADER_BITS);
+                book_bits.push(w.len_bits() as u16);
+                book_blobs.push(w.into_bytes());
+            }
+        }
+
         let payload_len: usize = payloads.iter().map(Vec::len).sum();
-        let mut bytes = Vec::with_capacity(5 + 4 * n + payload_len);
-        bytes.push(n as u8);
+        let books_len: usize =
+            book_blobs.iter().map(Vec::len).sum::<usize>() + 2 * book_bits.len();
+        let mut bytes = Vec::with_capacity(5 + 4 * n + books_len + payload_len);
+        bytes.push(n as u8 | if books.is_some() { LANE_BOOKS_FLAG } else { 0 });
         bytes.extend_from_slice(&(exps.len() as u32).to_be_bytes());
         for &b in &lane_bits {
             bytes.extend_from_slice(&b.to_be_bytes());
+        }
+        for &b in &book_bits {
+            bytes.extend_from_slice(&b.to_be_bytes());
+        }
+        for blob in &book_blobs {
+            bytes.extend_from_slice(blob);
         }
         for p in &payloads {
             bytes.extend_from_slice(p);
@@ -217,23 +302,34 @@ impl LaneCodec {
             lanes: n,
             count: exps.len(),
             lane_bits,
+            book_bits,
+            books: books.map(|b| b.to_vec()).unwrap_or_default(),
             bytes,
         }
     }
 
-    /// Decode a lane stream back to the original symbol order. Inverse of
-    /// [`encode`] for any codebook that round-trips the symbols.
+    /// Decode a lane stream back to the original symbol order, one lane
+    /// at a time (each through the refill block decoder). Inverse of
+    /// [`encode`] / [`encode_per_lane`]; embedded per-lane books take
+    /// precedence over the `book` argument.
+    ///
+    /// This is the measurement baseline for [`decode_lockstep`], which is
+    /// the faster path — lane-at-a-time drains each lane's dependence
+    /// chain serially.
     ///
     /// [`encode`]: LaneCodec::encode
+    /// [`encode_per_lane`]: LaneCodec::encode_per_lane
+    /// [`decode_lockstep`]: LaneCodec::decode_lockstep
     pub fn decode(stream: &LaneStream, book: &CodeBook) -> Result<Vec<u8>> {
         // Validation first: `count` is only trusted (and allocated) after
         // `validated_lanes` has bounded it by the payload bit lengths.
         let views = stream.validated_lanes()?;
         let n = stream.lanes;
-        let dec = book.decoder();
+        let decs = LaneDecoders::for_stream(stream, book);
         let mut out = vec![0u8; stream.count];
         let mut tmp = vec![0u8; stream.count.div_ceil(n)];
         for v in views {
+            let dec = decs.lane(v.lane);
             let mut r = BitReader::with_len(&stream.bytes[v.range.clone()], v.bits as usize);
             let lane_out = &mut tmp[..v.symbols];
             dec.decode_block_into(&mut r, lane_out)?;
@@ -242,6 +338,103 @@ impl LaneCodec {
             }
         }
         Ok(out)
+    }
+
+    /// Decode a lane stream with **all lanes held live in one lockstep
+    /// round-robin loop** (§Perf, DESIGN.md §Lockstep) — the software
+    /// analogue of the paper's N parallel LUT decoders sustaining link
+    /// bandwidth (§4.4).
+    ///
+    /// State is struct-of-arrays ([`LaneWindows`]): per-lane window,
+    /// bit-position and refill cursor in parallel arrays. Round `k`
+    /// decodes one symbol from every lane and writes `out[k*N .. k*N+N]`
+    /// in order — the N window probes have no data dependence on each
+    /// other (they pipeline in the CPU), and the output is written
+    /// sequentially instead of lane-at-a-time's strided scatter. A scalar
+    /// tail drains the final partial round (lanes `0..count % N`).
+    ///
+    /// Bit-exact with [`decode`] and with the scalar per-symbol oracle:
+    /// each lane consumes exactly the bits the lane-at-a-time path does
+    /// (pinned by property tests). Embedded per-lane books take
+    /// precedence over the `book` argument.
+    ///
+    /// [`decode`]: LaneCodec::decode
+    /// [`LaneWindows`]: crate::bitstream::LaneWindows
+    pub fn decode_lockstep(stream: &LaneStream, book: &CodeBook) -> Result<Vec<u8>> {
+        let views = stream.validated_lanes()?;
+        let n = stream.lanes;
+        let decs = LaneDecoders::for_stream(stream, book);
+        // Per-lane decoder table, hoisting the shared-vs-per-lane branch
+        // out of the hot loop.
+        let dec_by_lane = decs.by_lane(n);
+        let mut out = vec![0u8; stream.count];
+        let spans: Vec<(usize, usize)> = views
+            .iter()
+            .map(|v| (v.range.start * 8, v.range.start * 8 + v.bits as usize))
+            .collect();
+        let mut wins = LaneWindows::new(&stream.bytes, &spans);
+        // One symbol per lane per round; the final partial round is the
+        // scalar tail drain (lanes 0..count % n, in lane order). The
+        // refill cadence matches decode_block_into: top up to ≥ 40 valid
+        // bits before each symbol (worst codeword + escape byte ≤ 39
+        // bits).
+        let rounds = stream.count.div_ceil(n);
+        for k in 0..rounds {
+            let base = k * n;
+            let active = n.min(stream.count - base);
+            for l in 0..active {
+                if wins.navail(l) < 40 {
+                    wins.refill(l);
+                }
+                let (sym, used) = dec_by_lane[l].decode_from_window(
+                    wins.window(l),
+                    wins.remaining(l),
+                    wins.pos(l),
+                )?;
+                out[base + l] = sym;
+                wins.consume(l, used);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Decoder tables for a stream: one per embedded book, or a single
+/// shared one. The book-precedence and indexing rules (embedded v2
+/// books win over the caller's shared book; shared ⇒ one table serves
+/// every lane) live here *once*, shared by both software decode paths
+/// and the `lexi-hw` cycle model — so a change to precedence cannot
+/// desynchronize the paths the bit-exactness tests compare.
+pub struct LaneDecoders {
+    decs: Vec<CanonicalDecoder>,
+}
+
+impl LaneDecoders {
+    /// Build the decoder tables for `stream`: its embedded per-lane
+    /// books when present, else the shared `book`.
+    pub fn for_stream(stream: &LaneStream, book: &CodeBook) -> Self {
+        let decs = if stream.books.is_empty() {
+            vec![book.decoder()]
+        } else {
+            stream.books.iter().map(|b| b.decoder()).collect()
+        };
+        LaneDecoders { decs }
+    }
+
+    /// The decoder serving lane `l`.
+    #[inline]
+    pub fn lane(&self, l: usize) -> &CanonicalDecoder {
+        if self.decs.len() == 1 {
+            &self.decs[0]
+        } else {
+            &self.decs[l]
+        }
+    }
+
+    /// Per-lane reference table for hot loops (one indexed load per
+    /// symbol instead of a branch).
+    pub fn by_lane(&self, lanes: usize) -> Vec<&CanonicalDecoder> {
+        (0..lanes).map(|l| self.lane(l)).collect()
     }
 }
 
@@ -266,8 +459,18 @@ pub struct LaneView {
 /// Wire layout (all multi-byte fields big-endian):
 ///
 /// ```text
-/// { lanes:u8 | count:u32 | lane_bits:u32 × lanes | lane payloads, each byte-aligned }
+/// v1: { lanes:u8           | count:u32 | lane_bits:u32 × lanes
+///       | lane payloads, each byte-aligned }
+/// v2: { 0x80|lanes:u8      | count:u32 | lane_bits:u32 × lanes
+///       | book_bits:u16 × lanes | book headers, each byte-aligned
+///       | lane payloads, each byte-aligned }
 /// ```
+///
+/// The top bit of the first byte ([`LANE_BOOKS_FLAG`]) selects v2:
+/// per-lane codebook headers (as written by [`CodeBook::write_header`])
+/// ride between the lane-bit table and the payloads, so multi-tenant
+/// links can carry differently-distributed streams per lane. v1 bytes
+/// are unchanged and parse identically under the v2 reader.
 ///
 /// The per-lane bit lengths in the header are what lets a hardware
 /// receiver point `N` decoders at their lanes before any decoding
@@ -280,14 +483,28 @@ pub struct LaneStream {
     pub count: usize,
     /// Per-lane payload bit lengths (excludes byte-alignment padding).
     pub lane_bits: Vec<u32>,
+    /// Per-lane codebook header bit lengths (v2; empty ⇒ shared-book v1).
+    pub book_bits: Vec<u16>,
+    /// Parsed per-lane codebooks, parallel to `book_bits` (empty for v1).
+    pub books: Vec<CodeBook>,
     /// The full serialized stream (header + payloads).
     pub bytes: Vec<u8>,
 }
 
 impl LaneStream {
-    /// Header size in bytes.
+    /// Header size in bytes: fixed fields + lane-bit table + (v2 only)
+    /// the book-bit table and the byte-aligned book headers.
     pub fn header_bytes(&self) -> usize {
-        5 + 4 * self.lanes
+        let mut h = 5 + 4 * self.lanes;
+        if !self.book_bits.is_empty() {
+            h += 2 * self.book_bits.len();
+            h += self
+                .book_bits
+                .iter()
+                .map(|&b| (b as usize).div_ceil(8))
+                .sum::<usize>();
+        }
+        h
     }
 
     /// Symbols assigned to lane `l` (round-robin remainder arithmetic).
@@ -314,11 +531,13 @@ impl LaneStream {
 
     /// Validate the header against the payload and return one
     /// [`LaneView`] per lane. This is the *only* place the lane format
-    /// is trusted: it checks the lane count, that every payload range
-    /// lies inside `bytes`, and that each lane's symbol share fits its
-    /// bit length (every codeword is ≥ 1 bit) — which bounds `count` by
-    /// the actual wire size, so a hostile header cannot demand a
-    /// multi-gigabyte output allocation.
+    /// is trusted: it checks the lane count, the per-lane book table
+    /// (count must match the lanes, each header length bounded by
+    /// [`MAX_BOOK_HEADER_BITS`]), that every payload range lies inside
+    /// `bytes`, and that each lane's symbol share fits its bit length
+    /// (every codeword is ≥ 1 bit) — which bounds `count` by the actual
+    /// wire size, so a hostile header cannot demand a multi-gigabyte
+    /// output allocation.
     pub fn validated_lanes(&self) -> Result<Vec<LaneView>> {
         if self.lanes == 0 || self.lanes > MAX_LANES || self.lane_bits.len() != self.lanes {
             return Err(Error::InvalidParameter(format!(
@@ -326,6 +545,32 @@ impl LaneStream {
                 self.lanes,
                 self.lane_bits.len()
             )));
+        }
+        // Per-lane book table (v2): all-or-nothing, one book per lane,
+        // every header length in range. Hostile counts/lengths die here,
+        // before any decoder indexes `books[lane]`.
+        if self.books.len() != self.book_bits.len() {
+            return Err(Error::InvalidParameter(format!(
+                "malformed lane stream: {} books for {} book lengths",
+                self.books.len(),
+                self.book_bits.len()
+            )));
+        }
+        if !self.book_bits.is_empty() {
+            if self.book_bits.len() != self.lanes {
+                return Err(Error::InvalidParameter(format!(
+                    "malformed lane stream: {} per-lane books for {} lanes",
+                    self.book_bits.len(),
+                    self.lanes
+                )));
+            }
+            for (l, &bb) in self.book_bits.iter().enumerate() {
+                if bb == 0 || bb as u32 > MAX_BOOK_HEADER_BITS {
+                    return Err(Error::InvalidParameter(format!(
+                        "lane {l}: book header of {bb} bits out of range 1..={MAX_BOOK_HEADER_BITS}"
+                    )));
+                }
+            }
         }
         let mut views = Vec::with_capacity(self.lanes);
         let mut off = self.header_bytes();
@@ -358,8 +603,11 @@ impl LaneStream {
     }
 
     /// Parse a serialized stream (inverse of the header
-    /// [`LaneCodec::encode`] writes). Runs [`validated_lanes`], so the
-    /// returned stream is safe to hand to either decoder.
+    /// [`LaneCodec::encode`] / [`LaneCodec::encode_per_lane`] write).
+    /// Runs [`validated_lanes`], so the returned stream is safe to hand
+    /// to any decoder. Hostile book tables are rejected with bounded
+    /// work: allocations are capped by [`MAX_LANES`] books of
+    /// [`MAX_BOOK_HEADER_BITS`] bits each, checked before parsing.
     ///
     /// [`validated_lanes`]: LaneStream::validated_lanes
     pub fn from_bytes(bytes: Vec<u8>) -> Result<Self> {
@@ -368,7 +616,8 @@ impl LaneStream {
                 "lane stream shorter than its fixed header".into(),
             ));
         }
-        let lanes = bytes[0] as usize;
+        let has_books = bytes[0] & LANE_BOOKS_FLAG != 0;
+        let lanes = (bytes[0] & !LANE_BOOKS_FLAG) as usize;
         if lanes == 0 || lanes > MAX_LANES {
             return Err(Error::InvalidParameter(format!(
                 "lane count {lanes} out of range 1..={MAX_LANES}"
@@ -390,10 +639,55 @@ impl LaneStream {
                 )
             })
             .collect();
+        let mut book_bits: Vec<u16> = Vec::new();
+        let mut books: Vec<CodeBook> = Vec::new();
+        if has_books {
+            let table_end = header + 2 * lanes;
+            if bytes.len() < table_end {
+                return Err(Error::InvalidParameter(format!(
+                    "lane stream book table truncated: {} < {table_end} bytes",
+                    bytes.len()
+                )));
+            }
+            book_bits = (0..lanes)
+                .map(|l| {
+                    u16::from_be_bytes(
+                        bytes[header + 2 * l..header + 2 * l + 2]
+                            .try_into()
+                            .expect("2 bytes"),
+                    )
+                })
+                .collect();
+            // Length bounds before any book parsing or allocation.
+            for (l, &bb) in book_bits.iter().enumerate() {
+                if bb == 0 || bb as u32 > MAX_BOOK_HEADER_BITS {
+                    return Err(Error::InvalidParameter(format!(
+                        "lane {l}: book header of {bb} bits out of range 1..={MAX_BOOK_HEADER_BITS}"
+                    )));
+                }
+            }
+            let mut off = table_end;
+            books = Vec::with_capacity(lanes);
+            for (l, &bb) in book_bits.iter().enumerate() {
+                let blob = (bb as usize).div_ceil(8);
+                let end = off + blob;
+                if end > bytes.len() {
+                    return Err(Error::InvalidParameter(format!(
+                        "lane {l} book header exceeds stream ({end} > {} bytes)",
+                        bytes.len()
+                    )));
+                }
+                let mut r = BitReader::with_len(&bytes[off..end], bb as usize);
+                books.push(CodeBook::read_header(&mut r)?);
+                off = end;
+            }
+        }
         let stream = LaneStream {
             lanes,
             count,
             lane_bits,
+            book_bits,
+            books,
             bytes,
         };
         stream.validated_lanes()?;
@@ -583,15 +877,18 @@ mod tests {
         bytes.extend_from_slice(&u32::MAX.to_be_bytes());
         bytes.extend_from_slice(&0u32.to_be_bytes());
         assert!(LaneStream::from_bytes(bytes.clone()).is_err());
-        // Same header smuggled around from_bytes: both decoders refuse.
+        // Same header smuggled around from_bytes: all decoders refuse.
         let stream = LaneStream {
             lanes: 1,
             count: u32::MAX as usize,
             lane_bits: vec![0],
+            book_bits: vec![],
+            books: vec![],
             bytes,
         };
         let book = book_of(&[7u8; 16]);
         assert!(LaneCodec::decode(&stream, &book).is_err());
+        assert!(LaneCodec::decode_lockstep(&stream, &book).is_err());
     }
 
     #[test]
@@ -606,6 +903,182 @@ mod tests {
         }
         assert!(LaneCodec::new(0).is_err());
         assert!(LaneCodec::new(MAX_LANES + 1).is_err());
+    }
+
+    #[test]
+    fn prop_lockstep_matches_lane_at_a_time_and_scalar() {
+        // The tentpole equivalence: lockstep ⇔ lane-at-a-time ⇔ scalar
+        // order, across lane counts, skewed and ESC-heavy alphabets.
+        check("lockstep == lane-at-a-time == scalar", 100, |g| {
+            let n = g.usize(1..2500);
+            let data = match g.usize(0..3) {
+                0 => {
+                    let a = g.usize(1..32);
+                    g.skewed_bytes(n, a)
+                }
+                // ESC-heavy: >32 distinct exponents force escape codes.
+                1 => {
+                    let a = g.usize(33..140);
+                    g.skewed_bytes(n, a)
+                }
+                _ => g.vec(n, |g| g.u8()),
+            };
+            let book = book_of(&data);
+            for lanes in [1usize, 2, 4, 8] {
+                let codec = LaneCodec::new(lanes).unwrap();
+                let stream = codec.encode(&data, &book);
+                let lane_at_a_time = LaneCodec::decode(&stream, &book).unwrap();
+                let lockstep = LaneCodec::decode_lockstep(&stream, &book).unwrap();
+                assert_eq!(lockstep, data, "lockstep lanes {lanes}");
+                assert_eq!(lane_at_a_time, lockstep, "paths diverge at lanes {lanes}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_lockstep_rejects_truncated_tails() {
+        check("lockstep errors on truncated lanes", 60, |g| {
+            let n = g.usize(8..1200);
+            let a = g.usize(1..60);
+            let data = g.skewed_bytes(n, a);
+            let book = book_of(&data);
+            let lanes = [1usize, 2, 4, 8][g.usize(0..4)];
+            let stream = LaneCodec::new(lanes).unwrap().encode(&data, &book);
+            // Shrink one lane's advertised bit length: the missing tail
+            // must surface as an error on both decode paths, not a panic
+            // or fabricated symbols.
+            let mut short = stream.clone();
+            let l = g.usize(0..lanes);
+            if short.lane_bits[l] == 0 {
+                return;
+            }
+            let cut = g.usize(1..short.lane_bits[l] as usize + 1) as u32;
+            short.lane_bits[l] -= cut;
+            let a = LaneCodec::decode(&short, &book);
+            let b = LaneCodec::decode_lockstep(&short, &book);
+            assert!(a.is_err(), "lane-at-a-time accepted a truncated lane");
+            assert!(b.is_err(), "lockstep accepted a truncated lane");
+        });
+    }
+
+    #[test]
+    fn prop_per_lane_books_roundtrip() {
+        // Multi-tenant shape: lane l's substream is drawn from its own
+        // distribution, encoded under its own codebook, and the books
+        // ride in the v2 header — decode needs no side channel.
+        check("per-lane codebooks roundtrip", 60, |g| {
+            let lanes = [1usize, 2, 4, 8][g.usize(0..4)];
+            let n = g.usize(lanes..2000);
+            let bases: Vec<u8> = (0..lanes).map(|_| g.u8()).collect();
+            // Symbol i belongs to tenant i % lanes, clustered near that
+            // tenant's base so per-lane distributions genuinely differ.
+            let data: Vec<u8> = (0..n)
+                .map(|i| {
+                    let mut off = 0u8;
+                    while off < 6 && g.bool(0.4) {
+                        off += 1;
+                    }
+                    bases[i % lanes].wrapping_add(off)
+                })
+                .collect();
+            let codec = LaneCodec::new(lanes).unwrap();
+            let books: Vec<CodeBook> = (0..lanes)
+                .map(|l| {
+                    let lane_syms: Vec<u8> =
+                        data.iter().copied().skip(l).step_by(lanes).collect();
+                    book_of(&lane_syms)
+                })
+                .collect();
+            let stream = codec.encode_per_lane(&data, &books).unwrap();
+            assert_eq!(stream.books.len(), lanes);
+            assert_eq!(stream.bytes[0] & LANE_BOOKS_FLAG, LANE_BOOKS_FLAG);
+            // The `book` argument is ignored when books are embedded: pass
+            // a deliberately wrong shared book.
+            let wrong = book_of(&[1u8, 2, 3]);
+            assert_eq!(LaneCodec::decode(&stream, &wrong).unwrap(), data);
+            assert_eq!(LaneCodec::decode_lockstep(&stream, &wrong).unwrap(), data);
+            // And the wire bytes reparse to an identical stream.
+            let parsed = LaneStream::from_bytes(stream.bytes.clone()).unwrap();
+            assert_eq!(parsed, stream);
+            assert_eq!(LaneCodec::decode_lockstep(&parsed, &wrong).unwrap(), data);
+        });
+    }
+
+    #[test]
+    fn prop_hostile_book_headers_rejected_cheaply() {
+        // Fuzz the v2 book region: flipped bytes and forged lengths must
+        // either parse to a consistent stream or be rejected — never
+        // panic, and never allocate beyond the bounded book table.
+        check("hostile per-lane-book headers", 80, |g| {
+            let lanes = [1usize, 2, 4][g.usize(0..3)];
+            let n = g.usize(lanes..400);
+            let a = g.usize(1..20);
+            let data = g.skewed_bytes(n, a);
+            let books: Vec<CodeBook> = (0..lanes).map(|_| book_of(&data)).collect();
+            let stream = LaneCodec::new(lanes)
+                .unwrap()
+                .encode_per_lane(&data, &books)
+                .unwrap();
+            let mut bytes = stream.bytes.clone();
+            match g.usize(0..3) {
+                0 => {
+                    // Garble bytes inside the book region.
+                    let lo = 5 + 4 * lanes;
+                    let hi = stream.header_bytes();
+                    for _ in 0..g.usize(1..6) {
+                        let i = g.usize(lo..hi);
+                        bytes[i] ^= g.u8() | 1;
+                    }
+                }
+                1 => {
+                    // Forge a book length: zero, huge, or past the stream.
+                    let l = g.usize(0..lanes);
+                    let forged: u16 = match g.usize(0..3) {
+                        0 => 0,
+                        1 => u16::MAX,
+                        _ => MAX_BOOK_HEADER_BITS as u16 + g.u16() % 1000 + 1,
+                    };
+                    let at = 5 + 4 * lanes + 2 * l;
+                    bytes[at..at + 2].copy_from_slice(&forged.to_be_bytes());
+                }
+                _ => {
+                    // Truncate inside the book region.
+                    let keep = g.usize(5..stream.header_bytes());
+                    bytes.truncate(keep);
+                }
+            }
+            // Must not panic; errors are expected, the rare survivor must
+            // still satisfy its own validation.
+            if let Ok(s) = LaneStream::from_bytes(bytes) {
+                assert!(s.validated_lanes().is_ok());
+            }
+        });
+    }
+
+    #[test]
+    fn empty_and_single_symbol_lane_streams() {
+        // Regression (ISSUE 2 satellite): zero-symbol and one-symbol
+        // streams round-trip on every path at every lane count.
+        let book = book_of(&[9u8, 9, 9, 10]);
+        for lanes in [1usize, 2, 4, 8] {
+            let codec = LaneCodec::new(lanes).unwrap();
+            for data in [&[][..], &[9u8][..]] {
+                let stream = codec.encode(data, &book);
+                assert_eq!(stream.count, data.len());
+                assert_eq!(
+                    LaneCodec::decode(&stream, &book).unwrap(),
+                    data,
+                    "lane-at-a-time lanes {lanes}"
+                );
+                assert_eq!(
+                    LaneCodec::decode_lockstep(&stream, &book).unwrap(),
+                    data,
+                    "lockstep lanes {lanes}"
+                );
+                let parsed = LaneStream::from_bytes(stream.bytes.clone()).unwrap();
+                assert_eq!(parsed, stream);
+            }
+        }
     }
 
     #[test]

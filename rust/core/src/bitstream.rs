@@ -364,6 +364,145 @@ impl<'a> BitRefill<'a> {
     }
 }
 
+/// Struct-of-arrays register file: `N` concurrent [`BitRefill`]-style
+/// windows over one shared buffer (§Perf) — the lockstep lane decoder's
+/// state.
+///
+/// Every lane obeys the [`BitRefill`] invariants (left-aligned window,
+/// top `navail` bits valid, consuming shifts left). Two deliberate
+/// differences from holding `N` separate `BitRefill`s:
+///
+/// * State lives in **parallel arrays** (`window`, `byte_pos`, `navail`,
+///   `end_bits` per lane), so the lockstep round-robin loop in
+///   [`batch`] reads and writes `window[l]`/`navail[l]` for `N`
+///   independent lanes back-to-back — the `N` table lookups have no
+///   data dependence on each other and pipeline in the CPU.
+/// * All lanes share **one buffer** with per-lane `(start, end)` bit
+///   spans, so a refill of a mid-stream lane may load bytes belonging
+///   to the *next* lane into the window. This is the same "real bytes
+///   beyond the clamp" tail semantics `BitRefill` documents: every
+///   consume must be gated on [`remaining`], and the canonical
+///   decoder's class-aligned comparisons make successful decodes
+///   independent of those trailing bits (only error *details* can
+///   differ from a zero-extended view).
+///
+/// [`batch`]: crate::batch
+/// [`remaining`]: LaneWindows::remaining
+#[derive(Clone, Debug)]
+pub struct LaneWindows<'a> {
+    buf: &'a [u8],
+    /// Next byte to load, per lane.
+    byte_pos: Vec<usize>,
+    /// Left-aligned windows of loaded-but-unconsumed bits.
+    window: Vec<u64>,
+    /// Valid bit count at the top of each window.
+    navail: Vec<u32>,
+    /// Absolute end bit of each lane's readable span.
+    end_bits: Vec<usize>,
+}
+
+impl<'a> LaneWindows<'a> {
+    /// Windows over `buf`, one per `(start_bit, end_bit)` span. Spans are
+    /// absolute bit offsets and may touch (lane payloads are typically
+    /// byte-aligned back-to-back); `start ≤ end ≤ buf.len() * 8` each.
+    pub fn new(buf: &'a [u8], spans: &[(usize, usize)]) -> Self {
+        let n = spans.len();
+        let mut w = LaneWindows {
+            buf,
+            byte_pos: Vec::with_capacity(n),
+            window: Vec::with_capacity(n),
+            navail: Vec::with_capacity(n),
+            end_bits: Vec::with_capacity(n),
+        };
+        for (l, &(start, end)) in spans.iter().enumerate() {
+            debug_assert!(start <= end && end <= buf.len() * 8);
+            w.byte_pos.push(start / 8);
+            w.window.push(0);
+            w.navail.push(0);
+            w.end_bits.push(end);
+            w.refill(l);
+            // Pre-consume the intra-byte offset; if start is mid-byte the
+            // byte exists, so the refill loaded ≥ 8 bits.
+            let sub = (start % 8) as u32;
+            w.window[l] <<= sub;
+            w.navail[l] -= sub;
+        }
+        w
+    }
+
+    /// Number of lanes.
+    #[inline]
+    pub fn lanes(&self) -> usize {
+        self.end_bits.len()
+    }
+
+    /// Absolute bit position lane `l` has consumed up to.
+    #[inline]
+    pub fn pos(&self, l: usize) -> usize {
+        self.byte_pos[l] * 8 - self.navail[l] as usize
+    }
+
+    /// Bits remaining in lane `l`'s span.
+    #[inline]
+    pub fn remaining(&self, l: usize) -> usize {
+        self.end_bits[l] - self.pos(l)
+    }
+
+    /// Valid bits currently in lane `l`'s window.
+    #[inline]
+    pub fn navail(&self, l: usize) -> u32 {
+        self.navail[l]
+    }
+
+    /// Lane `l`'s left-aligned window (top [`navail`] bits valid).
+    ///
+    /// [`navail`]: LaneWindows::navail
+    #[inline]
+    pub fn window(&self, l: usize) -> u64 {
+        self.window[l]
+    }
+
+    /// Top lane `l`'s window up to ≥ 57 valid bits, or to end-of-buffer.
+    /// Same two-path load as [`BitRefill::refill`].
+    #[inline]
+    pub fn refill(&mut self, l: usize) {
+        let byte_pos = self.byte_pos[l];
+        let navail = self.navail[l];
+        if byte_pos + 8 <= self.buf.len() {
+            let arr: [u8; 8] = self.buf[byte_pos..byte_pos + 8]
+                .try_into()
+                .expect("slice is 8 bytes");
+            let w = u64::from_be_bytes(arr);
+            let add = (64 - navail) & !7;
+            if add > 0 {
+                let chunk = if add == 64 { w } else { (w >> (64 - add)) << (64 - add) };
+                self.window[l] |= chunk >> navail;
+                self.navail[l] = navail + add;
+                self.byte_pos[l] = byte_pos + (add / 8) as usize;
+            }
+        } else {
+            while self.navail[l] <= 56 && self.byte_pos[l] < self.buf.len() {
+                self.window[l] |=
+                    (self.buf[self.byte_pos[l]] as u64) << (56 - self.navail[l]);
+                self.navail[l] += 8;
+                self.byte_pos[l] += 1;
+            }
+        }
+    }
+
+    /// Consume `n` bits from lane `l`. Caller gates on [`remaining`], as
+    /// with [`BitRefill::consume`].
+    ///
+    /// [`remaining`]: LaneWindows::remaining
+    #[inline]
+    pub fn consume(&mut self, l: usize, n: u32) {
+        debug_assert!(n as usize <= self.remaining(l), "consume past lane end");
+        debug_assert!(n <= self.navail[l], "consume past loaded window");
+        self.window[l] <<= n;
+        self.navail[l] -= n;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -477,6 +616,59 @@ mod tests {
                 rf.consume(take);
             }
             assert_eq!(rf.pos(), len_bits);
+        });
+    }
+
+    #[test]
+    fn prop_lane_windows_match_per_lane_refills() {
+        check("LaneWindows == N independent BitRefills", 120, |g| {
+            let nbytes = g.usize(8..160);
+            let bytes = g.vec(nbytes, |g| g.u8());
+            let lanes = g.usize(1..9);
+            // Carve the buffer into `lanes` contiguous spans (some may be
+            // empty), mimicking back-to-back lane payloads.
+            let total_bits = bytes.len() * 8;
+            let mut cuts: Vec<usize> = (0..lanes - 1)
+                .map(|_| g.usize(0..total_bits + 1))
+                .collect();
+            cuts.sort_unstable();
+            cuts.insert(0, 0);
+            cuts.push(total_bits);
+            let spans: Vec<(usize, usize)> =
+                cuts.windows(2).map(|w| (w[0], w[1])).collect();
+            let mut lw = LaneWindows::new(&bytes, &spans);
+            let mut refs: Vec<BitRefill> = spans
+                .iter()
+                .map(|&(s, e)| BitRefill::new(&bytes, s, e))
+                .collect();
+            // Round-robin consumption: both views must agree bit-for-bit
+            // at every step, even when a lane's refill loads bytes that
+            // belong to its neighbour.
+            let mut live = true;
+            while live {
+                live = false;
+                for l in 0..lanes {
+                    if lw.remaining(l) == 0 {
+                        assert_eq!(refs[l].remaining(), 0, "lane {l}");
+                        continue;
+                    }
+                    live = true;
+                    if lw.navail(l) < 40 {
+                        lw.refill(l);
+                    }
+                    if refs[l].navail() < 40 {
+                        refs[l].refill();
+                    }
+                    assert_eq!(lw.pos(l), refs[l].pos(), "lane {l}");
+                    assert_eq!(lw.remaining(l), refs[l].remaining(), "lane {l}");
+                    let take = g.usize(1..lw.remaining(l).min(32) + 1) as u32;
+                    let want = refs[l].window() >> (64 - take);
+                    let got = lw.window(l) >> (64 - take);
+                    assert_eq!(got, want, "lane {l} at bit {}", lw.pos(l));
+                    lw.consume(l, take);
+                    refs[l].consume(take);
+                }
+            }
         });
     }
 

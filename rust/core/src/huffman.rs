@@ -515,26 +515,55 @@ impl CanonicalDecoder {
     /// [`decode_slow`]: CanonicalDecoder::decode_slow
     #[inline]
     fn decode_one(&self, s: &mut BitRefill) -> Result<u8> {
-        let probe = (s.window() >> (64 - FAST_BITS)) as usize;
+        let (sym, used) = self.decode_from_window(s.window(), s.remaining(), s.pos())?;
+        s.consume(used);
+        Ok(sym)
+    }
+
+    /// Decode one symbol from a left-aligned 64-bit `window` holding
+    /// `remaining` readable bits, **without touching any stream state**:
+    /// returns `(symbol, consumed_bits)` and leaves the consume to the
+    /// caller. `pos` is only used for error offsets.
+    ///
+    /// This is the single decode kernel behind both the refill block
+    /// decoder ([`decode_block_into`]) and the lockstep multi-lane loop
+    /// in [`batch`] — the SoA lane state there owns its windows, so the
+    /// kernel must be pure. The caller guarantees the window holds ≥ 40
+    /// valid bits or the stream tail fully loaded (one refill per symbol
+    /// suffices: worst codeword + escape byte ≤ 39 bits).
+    ///
+    /// [`decode_block_into`]: CanonicalDecoder::decode_block_into
+    /// [`batch`]: crate::batch
+    #[inline]
+    pub(crate) fn decode_from_window(
+        &self,
+        window: u64,
+        remaining: usize,
+        pos: usize,
+    ) -> Result<(u8, u32)> {
+        let probe = (window >> (64 - FAST_BITS)) as usize;
         let hit = self.fast[probe];
         if hit != FAST_MISS {
             let len = hit & 0xff;
-            if s.remaining() >= len as usize {
-                s.consume(len);
-                return Ok((hit >> 8) as u8);
+            if remaining >= len as usize {
+                return Ok(((hit >> 8) as u8, len));
             }
         }
-        self.decode_one_slow(s)
+        self.decode_from_window_slow(window, remaining, pos)
     }
 
-    fn decode_one_slow(&self, s: &mut BitRefill) -> Result<u8> {
+    fn decode_from_window_slow(
+        &self,
+        window: u64,
+        remaining: usize,
+        pos: usize,
+    ) -> Result<(u8, u32)> {
         // Same per-length-class comparison as `decode_slow`, against the
-        // top 32 bits of the refill window. For any *valid* codeword all
-        // window extensions stay inside its length class (class uppers
-        // are aligned to the class's code granularity), so tail garbage
-        // below `remaining()` cannot flip a successful decode.
-        let window = s.window() >> 32;
-        let offset = s.pos();
+        // top 32 bits of the window. For any *valid* codeword all window
+        // extensions stay inside its length class (class uppers are
+        // aligned to the class's code granularity), so tail garbage
+        // below `remaining` cannot flip a successful decode.
+        let w32 = window >> 32;
         for k in 0..self.lengths.len() {
             let len = self.lengths[k];
             let upper = if k + 1 < self.lengths.len() {
@@ -542,36 +571,34 @@ impl CanonicalDecoder {
             } else {
                 u64::MAX
             };
-            if window < upper {
-                if s.remaining() < len as usize {
+            if w32 < upper {
+                if remaining < len as usize {
                     return Err(Error::BitstreamExhausted {
-                        offset,
-                        needed: len as usize - s.remaining(),
+                        offset: pos,
+                        needed: len as usize - remaining,
                     });
                 }
-                let code = (window >> (32 - len)) as u32;
+                let code = (w32 >> (32 - len)) as u32;
                 let first = (self.first_code_aligned[k] >> (32 - len)) as u32;
                 let idx = self.first_index[k] + (code - first) as usize;
                 if idx >= self.symbols.len() {
-                    return Err(Error::InvalidCodeword { offset });
+                    return Err(Error::InvalidCodeword { offset: pos });
                 }
-                s.consume(len);
                 let sym = self.symbols[idx];
                 if sym == ESC {
-                    if s.remaining() < 8 {
+                    if remaining < len as usize + 8 {
                         return Err(Error::BitstreamExhausted {
-                            offset: s.pos(),
-                            needed: 8 - s.remaining(),
+                            offset: pos + len as usize,
+                            needed: len as usize + 8 - remaining,
                         });
                     }
-                    let raw = (s.window() >> 56) as u8;
-                    s.consume(8);
-                    return Ok(raw);
+                    let raw = ((window << len) >> 56) as u8;
+                    return Ok((raw, len + 8));
                 }
-                return Ok(sym as u8);
+                return Ok((sym as u8, len));
             }
         }
-        Err(Error::InvalidCodeword { offset })
+        Err(Error::InvalidCodeword { offset: pos })
     }
 }
 
@@ -730,6 +757,16 @@ pub fn decompress_exponents(block: &EncodedExponents) -> Result<Vec<u8>> {
     let mut r = BitReader::with_len(&block.bytes, block.bits);
     let book = CodeBook::read_header(&mut r)?;
     let count = r.get(32)? as usize;
+    // Bound the untrusted count by the remaining payload before the
+    // output allocation (every codeword is ≥ 1 bit) — same hardening as
+    // LaneStream::validated_lanes; a hostile header cannot demand a
+    // multi-gigabyte zero-fill from a tiny block.
+    if count > r.remaining() {
+        return Err(Error::InvalidParameter(format!(
+            "block header claims {count} symbols but only {} payload bits remain",
+            r.remaining()
+        )));
+    }
     let dec = book.decoder();
     let mut out = vec![0u8; count];
     dec.decode_block_into(&mut r, &mut out)?;
@@ -902,6 +939,29 @@ mod tests {
         let garbage = [0xffu8; 8];
         let mut r2 = BitReader::new(&garbage);
         assert!(CodeBook::read_header(&mut r2).is_err());
+    }
+
+    #[test]
+    fn hostile_block_count_rejected_before_allocation() {
+        // Forge the 32-bit count field to u32::MAX on a valid tiny block:
+        // decompress must reject (count bounded by remaining payload
+        // bits) instead of zero-filling a 4 GiB output first.
+        let data = vec![5u8; 64];
+        let block = compress_exponents(&data).unwrap();
+        let book = {
+            let mut r = BitReader::with_len(&block.bytes, block.bits);
+            let b = CodeBook::read_header(&mut r).unwrap();
+            assert_eq!(r.get(32).unwrap() as usize, data.len());
+            b
+        };
+        let count_at = book.header_bits() as usize; // count field offset
+        let mut forged = block.clone();
+        // Overwrite the 32 bits at `count_at` with all-ones.
+        for bit in count_at..count_at + 32 {
+            forged.bytes[bit / 8] |= 0x80 >> (bit % 8);
+        }
+        let err = decompress_exponents(&forged).unwrap_err();
+        assert!(matches!(err, Error::InvalidParameter(_)), "{err:?}");
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! in stage 1 at line rate. Multiple decode lanes take whole flits
 //! round-robin (flit-atomic packing makes them independent).
 
-use lexi_core::batch::LaneStream;
+use lexi_core::batch::{LaneDecoders, LaneStream};
 use lexi_core::bitstream::BitReader;
 use lexi_core::error::{Error, Result};
 use lexi_core::huffman::{CanonicalDecoder, CodeBook};
@@ -193,10 +193,24 @@ impl DecoderUnit {
         &self.cfg
     }
 
-    /// Decode an `N`-lane interleaved stream (paper §4.4): each lane runs
-    /// the multi-stage pipeline independently, and the unit's makespan is
-    /// the slowest lane — the quantity [`parallel_makespan`] models for
-    /// flit round-robin. Bit-exact with `LaneCodec::decode`.
+    /// Decode an `N`-lane interleaved stream (paper §4.4) with a
+    /// **lockstep cycle model**: lanes advance one symbol per round, and
+    /// each round's latency is tracked as the *occupancy* of its slowest
+    /// lane (the per-round `max` of stage latencies), not as independent
+    /// per-lane sums. The report carries both views:
+    ///
+    /// * [`LaneDecodeReport::makespan`] — slowest lane's summed cycles:
+    ///   completion time when the `N` lanes run fully independently (each
+    ///   with its own window registers and scheduler).
+    /// * [`LaneDecodeReport::lockstep_cycles`] — Σ over rounds of the
+    ///   round's slowest stage: completion time for a lockstep
+    ///   implementation whose lanes share one round scheduler, the
+    ///   structure `LaneCodec::decode_lockstep` mirrors in software.
+    ///
+    /// Embedded per-lane codebooks (v2 streams) take precedence over the
+    /// `book` argument; every book in use must satisfy
+    /// [`DecoderConfig::supports`]. Bit-exact with `LaneCodec::decode`
+    /// and `LaneCodec::decode_lockstep`.
     pub fn decode_lane_stream(
         &self,
         stream: &LaneStream,
@@ -205,20 +219,49 @@ impl DecoderUnit {
         // Format validation is shared with `LaneCodec::decode`: one
         // source of truth for lane bounds, so format changes cannot fix
         // one consumer and miss the other. Config support and decoder
-        // tables are likewise checked/built once, not per lane.
+        // tables are likewise checked/built once per book, not per lane.
         let views = stream.validated_lanes()?;
-        self.cfg.supports(book)?;
-        let dec = book.decoder();
+        if stream.books.is_empty() {
+            self.cfg.supports(book)?;
+        } else {
+            for b in &stream.books {
+                self.cfg.supports(b)?;
+            }
+        }
+        // Book precedence + per-lane indexing live in lexi-core's
+        // LaneDecoders, shared with both software decode paths.
+        let decs = LaneDecoders::for_stream(stream, book);
         let n = stream.lanes;
         let mut out = vec![0u8; stream.count];
-        let mut per_lane_cycles = Vec::with_capacity(n);
-        for v in views {
-            let mut r = BitReader::with_len(&stream.bytes[v.range.clone()], v.bits as usize);
-            let (syms, report) = self.decode_with(&dec, &mut r, v.symbols)?;
-            for (k, &sym) in syms.iter().enumerate() {
-                out[v.lane + k * n] = sym;
+        let mut readers: Vec<BitReader> = views
+            .iter()
+            .map(|v| BitReader::with_len(&stream.bytes[v.range.clone()], v.bits as usize))
+            .collect();
+        let dec_by_lane = decs.by_lane(n);
+        let mut per_lane_cycles = vec![0u64; n];
+        let mut lockstep_cycles = 0u64;
+        // Round-robin rounds, mirroring the software lockstep loop: round
+        // k decodes symbols k*n .. k*n + active.
+        let rounds = stream.count.div_ceil(n);
+        for k in 0..rounds {
+            let base = k * n;
+            let active = n.min(stream.count - base);
+            let mut round_max = 0u64;
+            for l in 0..active {
+                let r = &mut readers[l];
+                let before = r.pos();
+                let sym = dec_by_lane[l].decode(r)?;
+                let consumed = (r.pos() - before) as u32;
+                let stage = self
+                    .cfg
+                    .stage_of(consumed)
+                    .ok_or(Error::InvalidCodeword { offset: before })?
+                    as u64;
+                per_lane_cycles[l] += stage;
+                round_max = round_max.max(stage);
+                out[base + l] = sym;
             }
-            per_lane_cycles.push(report.cycles);
+            lockstep_cycles += round_max;
         }
         let makespan = per_lane_cycles.iter().copied().max().unwrap_or(0);
         Ok((
@@ -226,6 +269,7 @@ impl DecoderUnit {
             LaneDecodeReport {
                 per_lane_cycles,
                 makespan,
+                lockstep_cycles,
                 symbols: stream.count as u64,
             },
         ))
@@ -237,14 +281,20 @@ impl DecoderUnit {
 pub struct LaneDecodeReport {
     /// Total stage-latency cycles per lane.
     pub per_lane_cycles: Vec<u64>,
-    /// Slowest lane — the unit's completion time with parallel lanes.
+    /// Slowest lane — the unit's completion time with fully independent
+    /// parallel lanes.
     pub makespan: u64,
+    /// Σ over rounds of the round's slowest stage — completion time for
+    /// a lockstep implementation (lanes share one round scheduler).
+    /// Always ≥ `makespan`; the gap is the cost of round synchronization.
+    pub lockstep_cycles: u64,
     /// Symbols decoded across all lanes.
     pub symbols: u64,
 }
 
 impl LaneDecodeReport {
-    /// Effective cycles per symbol with all lanes running.
+    /// Effective cycles per symbol with all lanes running independently.
+    /// 0 for an empty stream (no division by a zero symbol count).
     pub fn effective_latency(&self) -> f64 {
         if self.symbols == 0 {
             0.0
@@ -253,7 +303,19 @@ impl LaneDecodeReport {
         }
     }
 
+    /// Effective cycles per symbol under the lockstep round scheduler.
+    /// 0 for an empty stream.
+    pub fn lockstep_latency(&self) -> f64 {
+        if self.symbols == 0 {
+            0.0
+        } else {
+            self.lockstep_cycles as f64 / self.symbols as f64
+        }
+    }
+
     /// Speedup of the parallel-lane makespan over serializing every lane.
+    /// 1.0 when the makespan is zero (empty or zero-cycle streams have
+    /// nothing to speed up — guarded, no division by zero).
     pub fn lane_speedup(&self) -> f64 {
         let total: u64 = self.per_lane_cycles.iter().sum();
         if self.makespan == 0 {
@@ -265,9 +327,11 @@ impl LaneDecodeReport {
 }
 
 /// L parallel decode lanes consuming independent units (flits) round-robin:
-/// makespan = max over lanes of summed latencies.
+/// makespan = max over lanes of summed latencies. `lanes == 0` is clamped
+/// to one (a degenerate caller gets the serial makespan, not a panic) and
+/// an empty unit list yields 0.
 pub fn parallel_makespan(per_unit_cycles: &[u64], lanes: usize) -> u64 {
-    assert!(lanes >= 1);
+    let lanes = lanes.max(1);
     let mut lane_time = vec![0u64; lanes];
     for (i, &c) in per_unit_cycles.iter().enumerate() {
         lane_time[i % lanes] += c;
@@ -400,6 +464,116 @@ mod tests {
         assert_eq!(parallel_makespan(&units, 1), 100);
         assert_eq!(parallel_makespan(&units, 10), 10);
         assert_eq!(parallel_makespan(&units, 3), 40);
+    }
+
+    #[test]
+    fn parallel_makespan_degenerate_inputs() {
+        // Guards (ISSUE 2 satellite): empty unit lists and a zero lane
+        // count must not panic or divide by zero.
+        assert_eq!(parallel_makespan(&[], 4), 0);
+        assert_eq!(parallel_makespan(&[], 0), 0);
+        assert_eq!(parallel_makespan(&[7, 3], 0), 10); // clamped to 1 lane
+    }
+
+    #[test]
+    fn zero_and_single_symbol_lane_streams_report_safely() {
+        use lexi_core::batch::LaneCodec;
+        let book = {
+            let data = vec![11u8, 11, 12, 13];
+            let hist = Histogram::from_bytes(&data);
+            CodeBook::lexi_default(&hist).unwrap()
+        };
+        let unit = DecoderUnit::new(DecoderConfig::paper_default()).unwrap();
+        for lanes in [1usize, 4, 8] {
+            // Zero symbols: all latencies and speedups are defined.
+            let empty = LaneCodec::new(lanes).unwrap().encode(&[], &book);
+            let (out, rep) = unit.decode_lane_stream(&empty, &book).unwrap();
+            assert!(out.is_empty());
+            assert_eq!(rep.symbols, 0);
+            assert_eq!(rep.makespan, 0);
+            assert_eq!(rep.lockstep_cycles, 0);
+            assert_eq!(rep.effective_latency(), 0.0);
+            assert_eq!(rep.lockstep_latency(), 0.0);
+            assert_eq!(rep.lane_speedup(), 1.0);
+            // One symbol: exactly one lane occupied for one stage.
+            let one = LaneCodec::new(lanes).unwrap().encode(&[11], &book);
+            let (out, rep) = unit.decode_lane_stream(&one, &book).unwrap();
+            assert_eq!(out, vec![11]);
+            assert_eq!(rep.symbols, 1);
+            assert!(rep.makespan >= 1);
+            assert_eq!(rep.lockstep_cycles, rep.makespan);
+            assert!(rep.effective_latency() >= 1.0);
+            assert!(rep.lane_speedup() >= 1.0);
+        }
+    }
+
+    #[test]
+    fn lockstep_cycles_bound_by_makespan_and_serial_sum() {
+        // Round-max occupancy sits between the independent-lane makespan
+        // and the fully serial sum, at every lane count.
+        check("lockstep cycle bounds", 40, |g| {
+            use lexi_core::batch::LaneCodec;
+            let n = g.usize(1..3000);
+            let a = g.usize(1..40);
+            let data = g.skewed_bytes(n, a);
+            let hist = Histogram::from_bytes(&data);
+            let book = CodeBook::lexi_default(&hist).unwrap();
+            let unit = DecoderUnit::new(DecoderConfig::paper_default()).unwrap();
+            for lanes in [1usize, 2, 4, 8] {
+                let stream = LaneCodec::new(lanes).unwrap().encode(&data, &book);
+                let (_, rep) = unit.decode_lane_stream(&stream, &book).unwrap();
+                let serial: u64 = rep.per_lane_cycles.iter().sum();
+                assert!(
+                    rep.makespan <= rep.lockstep_cycles,
+                    "lanes {lanes}: makespan {} > lockstep {}",
+                    rep.makespan,
+                    rep.lockstep_cycles
+                );
+                assert!(
+                    rep.lockstep_cycles <= serial,
+                    "lanes {lanes}: lockstep {} > serial {serial}",
+                    rep.lockstep_cycles
+                );
+                // With one lane the three collapse.
+                if lanes == 1 {
+                    assert_eq!(rep.lockstep_cycles, rep.makespan);
+                    assert_eq!(rep.makespan, serial);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn per_lane_books_flow_through_hw_unit() {
+        use lexi_core::batch::LaneCodec;
+        // Two tenants with disjoint exponent ranges share a 2-lane link.
+        let lanes = 2usize;
+        let data: Vec<u8> = (0..600)
+            .map(|i| if i % 2 == 0 { 40 + (i / 2 % 3) as u8 } else { 200 + (i / 2 % 5) as u8 })
+            .collect();
+        let books: Vec<CodeBook> = (0..lanes)
+            .map(|l| {
+                let lane_syms: Vec<u8> = data.iter().copied().skip(l).step_by(lanes).collect();
+                let hist = Histogram::from_bytes(&lane_syms);
+                CodeBook::lexi_default(&hist).unwrap()
+            })
+            .collect();
+        let stream = LaneCodec::new(lanes)
+            .unwrap()
+            .encode_per_lane(&data, &books)
+            .unwrap();
+        let unit = DecoderUnit::new(DecoderConfig::paper_default()).unwrap();
+        // The shared-book argument is ignored when books are embedded.
+        let wrong = {
+            let hist = Histogram::from_bytes(&[1u8, 2, 3]);
+            CodeBook::lexi_default(&hist).unwrap()
+        };
+        let (out, rep) = unit.decode_lane_stream(&stream, &wrong).unwrap();
+        assert_eq!(out, data);
+        assert_eq!(rep.symbols, data.len() as u64);
+        // And agrees with both software mirrors.
+        assert_eq!(LaneCodec::decode(&stream, &wrong).unwrap(), data);
+        assert_eq!(LaneCodec::decode_lockstep(&stream, &wrong).unwrap(), data);
     }
 
     #[test]

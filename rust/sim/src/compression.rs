@@ -12,12 +12,21 @@
 //! batch rewire is bit-identical to the scalar oracle, so every ratio in
 //! this table is unchanged — pinned by
 //! `batch_rewire_preserves_compressed_sizes` below.
+//!
+//! Beyond ratios, [`CrTable`] also carries the **decoder makespan
+//! model** (ISSUE 2): `DecoderUnit::decode_lane_stream` is run over a
+//! representative stream per kind at each [`CACHED_LANES`] count, and
+//! the slowest-lane makespan per symbol is cached for
+//! `Engine::transfer_ns` to couple transfer latency to the real decoder
+//! instead of analytic per-kind ratios only.
 
+use lexi_core::batch::LaneCodec;
 use lexi_core::bf16::FieldStreams;
 use lexi_core::flit::{self, FlitFormat};
 use lexi_core::huffman::{self, CodeBook};
 use lexi_core::stats::Histogram;
 use lexi_core::Bf16;
+use lexi_hw::decoder::{DecoderConfig, DecoderUnit};
 use lexi_models::activations;
 use lexi_models::traffic::TransferKind;
 use lexi_models::weights::WeightStream;
@@ -61,22 +70,47 @@ pub struct KindRatios {
     pub wire_ratio: f64,
 }
 
-/// Per-kind measured ratios for one model.
+/// Per-kind measured ratios for one model, plus the measured decoder
+/// makespan model the engine's transfer latency couples to (ISSUE 2).
 #[derive(Clone, Debug)]
 pub struct CrTable {
     pub ratios: HashMap<TransferKind, KindRatios>,
+    /// Measured `DecoderUnit::decode_lane_stream` makespans, cached per
+    /// `(kind, lanes)`: effective decoder **cycles per transferred
+    /// symbol** with `lanes` parallel LUT decoders (slowest-lane makespan
+    /// ÷ total symbols). Empty for tables built from runtime profiles
+    /// ([`CrTable::from_ratios`]); lookups then fall back to the
+    /// paper-nominal latency.
+    pub decode_cycles: HashMap<(TransferKind, usize), f64>,
 }
 
 /// Sample size per (kind, layer) for ratio measurement. The streams are
 /// i.i.d. within a layer, so a 16 K sample pins the ratio to ±1%.
 const SAMPLE: usize = 16 * 1024;
 
+/// Sample size for the decoder-makespan measurement (per kind; the
+/// makespan-per-symbol statistic stabilizes faster than the ratios).
+const DECODE_SAMPLE: usize = 8 * 1024;
+
+/// Lane counts the makespan model is measured at. Lookups at other lane
+/// counts scale inverse-linearly from the nearest measured point.
+pub const CACHED_LANES: [usize; 5] = [1, 2, 4, 8, 16];
+
+/// Fig 6's 4-stage average (≈1.16 cycles/symbol): the fallback when a
+/// table carries no makespan measurements.
+const NOMINAL_CYCLES_PER_SYMBOL: f64 = 1.16;
+
 impl CrTable {
     /// Measure ratios for `cfg` by running the codec over synthetic
-    /// streams of each kind across several layers.
+    /// streams of each kind across several layers, and the decoder
+    /// makespan model by running the cycle-accurate multi-lane LUT unit
+    /// (`lexi-hw`) over a representative stream per kind at each
+    /// [`CACHED_LANES`] count.
     pub fn measure(cfg: &ModelConfig, seed: u64) -> Self {
         let mut ratios = HashMap::new();
+        let mut decode_cycles = HashMap::new();
         let layers: Vec<usize> = pick_layers(cfg);
+        let unit = DecoderUnit::new(DecoderConfig::paper_default()).expect("paper config valid");
         for kind in [
             TransferKind::Weights,
             TransferKind::Activation,
@@ -85,7 +119,8 @@ impl CrTable {
         ] {
             let mut exp_cr = 0.0;
             let mut wire = 0.0;
-            for &layer in &layers {
+            let mut mid_exps: Vec<u8> = Vec::new();
+            for (i, &layer) in layers.iter().enumerate() {
                 let values: Vec<Bf16> = match kind {
                     TransferKind::Weights => {
                         let mut s = WeightStream::for_block(cfg, layer, seed);
@@ -104,6 +139,14 @@ impl CrTable {
                 let (e, w) = measure_streams(&values);
                 exp_cr += e;
                 wire += w;
+                // The middle layer doubles as the makespan-model sample.
+                if i == layers.len() / 2 {
+                    mid_exps = FieldStreams::split(&values)
+                        .exponents
+                        .into_iter()
+                        .take(DECODE_SAMPLE)
+                        .collect();
+                }
             }
             let n = layers.len() as f64;
             ratios.insert(
@@ -113,8 +156,41 @@ impl CrTable {
                     wire_ratio: wire / n,
                 },
             );
+            // Decoder makespan per symbol at each cached lane count.
+            if !mid_exps.is_empty() {
+                let hist = Histogram::from_bytes(&mid_exps);
+                let book = CodeBook::lexi_default(&hist).expect("non-empty");
+                for lanes in CACHED_LANES {
+                    let stream = LaneCodec::new(lanes)
+                        .expect("cached lane count valid")
+                        .encode(&mid_exps, &book);
+                    let (_, rep) = unit
+                        .decode_lane_stream(&stream, &book)
+                        .expect("measured stream decodes");
+                    decode_cycles.insert(
+                        (kind, lanes),
+                        rep.makespan as f64 / mid_exps.len() as f64,
+                    );
+                }
+            }
         }
-        CrTable { ratios }
+        CrTable {
+            ratios,
+            decode_cycles,
+        }
+    }
+
+    /// A table from externally measured ratios (e.g. the runtime
+    /// coordinator's tensor profiles) with no decoder-makespan cache;
+    /// [`decode_cycles_per_symbol`] falls back to the paper-nominal
+    /// latency.
+    ///
+    /// [`decode_cycles_per_symbol`]: CrTable::decode_cycles_per_symbol
+    pub fn from_ratios(ratios: HashMap<TransferKind, KindRatios>) -> Self {
+        CrTable {
+            ratios,
+            decode_cycles: HashMap::new(),
+        }
     }
 
     /// Wire bytes for a transfer of `bytes` of `kind` under `mode`.
@@ -129,6 +205,41 @@ impl CrTable {
     /// Exponent CR of a kind (Table 2 reporting).
     pub fn exponent_cr(&self, kind: TransferKind) -> f64 {
         self.ratios[&kind].exponent_cr
+    }
+
+    /// Measured decoder cycles per transferred symbol with `lanes`
+    /// parallel decoders: an exact cache hit when `lanes` is in
+    /// [`CACHED_LANES`], otherwise the nearest measured point scaled
+    /// inverse-linearly (lane throughput is ~linear until the link
+    /// saturates), or the paper-nominal Fig 6 latency when no
+    /// measurements exist at all.
+    pub fn decode_cycles_per_symbol(&self, kind: TransferKind, lanes: usize) -> f64 {
+        let lanes = lanes.max(1);
+        if let Some(&c) = self.decode_cycles.get(&(kind, lanes)) {
+            return c;
+        }
+        // Walk CACHED_LANES in its fixed order (not the HashMap, whose
+        // iteration order is randomized per process): deterministic
+        // nearest-point selection, ties resolved to the smaller count.
+        let mut best: Option<(usize, f64)> = None;
+        for l in CACHED_LANES {
+            let Some(&c) = self.decode_cycles.get(&(kind, l)) else {
+                continue;
+            };
+            let closer = match best {
+                None => true,
+                Some((bl, _)) => {
+                    (l as i64 - lanes as i64).abs() < (bl as i64 - lanes as i64).abs()
+                }
+            };
+            if closer {
+                best = Some((l, c));
+            }
+        }
+        match best {
+            Some((l, c)) => c * l as f64 / lanes as f64,
+            None => NOMINAL_CYCLES_PER_SYMBOL / lanes as f64,
+        }
     }
 }
 
@@ -249,5 +360,51 @@ mod tests {
             a.exponent_cr(TransferKind::Activation),
             b.exponent_cr(TransferKind::Activation)
         );
+        assert_eq!(
+            a.decode_cycles_per_symbol(TransferKind::Activation, 8),
+            b.decode_cycles_per_symbol(TransferKind::Activation, 8)
+        );
+    }
+
+    #[test]
+    fn decode_cache_covers_all_kinds_and_scales_with_lanes() {
+        let cfg = ModelConfig::qwen(ModelScale::Paper);
+        let t = CrTable::measure(&cfg, 42);
+        for kind in [
+            TransferKind::Weights,
+            TransferKind::Activation,
+            TransferKind::KvCache,
+            TransferKind::SsmState,
+        ] {
+            for lanes in CACHED_LANES {
+                assert!(
+                    t.decode_cycles.contains_key(&(kind, lanes)),
+                    "{kind:?} lanes {lanes} missing from cache"
+                );
+            }
+            // Per-symbol occupancy shrinks ~linearly as lanes grow
+            // (round-robin keeps lanes balanced on i.i.d. streams).
+            let c1 = t.decode_cycles_per_symbol(kind, 1);
+            let c8 = t.decode_cycles_per_symbol(kind, 8);
+            assert!(c1 >= 1.0, "{kind:?}: 1-lane {c1} below 1 cycle/symbol");
+            assert!(
+                c8 < c1 / 4.0,
+                "{kind:?}: 8 lanes ({c8}) not ≥4× faster than 1 ({c1})"
+            );
+            // Uncached lane counts interpolate from the nearest point.
+            let c12 = t.decode_cycles_per_symbol(kind, 12);
+            assert!(c12 > 0.0 && c12 < c8);
+        }
+    }
+
+    #[test]
+    fn ratio_only_tables_fall_back_to_nominal_latency() {
+        let cfg = ModelConfig::qwen(ModelScale::Paper);
+        let measured = CrTable::measure(&cfg, 42);
+        let bare = CrTable::from_ratios(measured.ratios.clone());
+        assert!(bare.decode_cycles.is_empty());
+        let c = bare.decode_cycles_per_symbol(TransferKind::Activation, 8);
+        // Nominal 1.16 cycles split across 8 lanes.
+        assert!((c - 1.16 / 8.0).abs() < 1e-9, "fallback {c}");
     }
 }

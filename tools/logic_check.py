@@ -1,0 +1,788 @@
+#!/usr/bin/env python3
+"""Logic-level validation of PR 2's new Rust arithmetic (no toolchain in
+this container). Mirrors the Rust bit-for-bit:
+
+  * BitWriter accumulator/spill       (bitstream.rs, unchanged, needed)
+  * BitRefill window                  (bitstream.rs, reference for lanes)
+  * LaneWindows SoA refill/consume    (NEW: bitstream.rs)
+  * CanonicalDecoder tables + decode_from_window (NEW pure kernel)
+  * LaneCodec encode / v1+v2 wire format / from_bytes validation (NEW)
+  * lane-at-a-time decode vs lockstep decode (NEW)
+  * hw lockstep cycle model bounds    (NEW: decoder.rs)
+
+Reference implementations are independent (string-of-bits codec), so a
+mirror bug and a reference bug can't cancel.
+"""
+
+import random
+
+MASK64 = (1 << 64) - 1
+FAST_BITS = 11
+FAST_MISS = (1 << 32) - 1
+ESC = 256
+MAX_LANES = 64
+LANE_BOOKS_FLAG = 0x80
+MAX_BOOK_HEADER_BITS = 6 + 14 * 63
+
+
+# --------------------------------------------------------------------------
+# Codebook: canonical assignment mirroring huffman.rs::from_canonical.
+# Lengths come from an independent reference Huffman (heapq) clamped to 24.
+def build_lengths(freqs):
+    import heapq
+    syms = sorted(freqs.items())
+    items = [(c, i, [s]) for i, (s, c) in enumerate(syms)]
+    if len(items) == 1:
+        return {syms[0][0]: 1}
+    heapq.heapify(items)
+    depth = {s: 0 for s, _ in syms}
+    n = len(items)
+    while len(items) > 1:
+        a = heapq.heappop(items)
+        b = heapq.heappop(items)
+        for s in a[2] + b[2]:
+            depth[s] += 1
+        n += 1
+        heapq.heappush(items, (a[0] + b[0], n, a[2] + b[2]))
+    if max(depth.values()) > 24:
+        return None  # rare; caller retries with other data
+    return depth
+
+
+def make_book(data, max_symbols=32):
+    """(codes, esc_code, canonical) with ESC all-ones last, like Rust."""
+    freqs = {}
+    for b in data:
+        freqs[b] = freqs.get(b, 0) + 1
+    top = sorted(freqs.items(), key=lambda kv: (-kv[1], kv[0]))[:max_symbols]
+    esc_mass = sum(c for s, c in freqs.items() if s not in dict(top))
+    w = {s: c for s, c in top}
+    w[ESC] = max(esc_mass, 1)
+    lengths = build_lengths(w)
+    if lengths is None:
+        return None
+    # ESC must hold the max length (swap like the Rust does).
+    lmax = max(lengths.values())
+    if lengths[ESC] < lmax:
+        other = next(s for s, l in lengths.items() if l == lmax)
+        lengths[ESC], lengths[other] = lengths[other], lengths[ESC]
+    canonical = sorted(lengths.items(), key=lambda sl: (sl[1], sl[0] == ESC, sl[0]))
+    codes = {}
+    esc_code = None
+    nxt = 0
+    prev = canonical[0][1]
+    for sym, ln in canonical:
+        nxt <<= ln - prev
+        prev = ln
+        if sym == ESC:
+            esc_code = (nxt, ln)
+        else:
+            codes[sym] = (nxt, ln)
+        nxt += 1
+    assert esc_code[0] == (1 << esc_code[1]) - 1, "ESC must be all-ones"
+    return codes, esc_code, canonical
+
+
+# --------------------------------------------------------------------------
+# Reference codec: plain bit-string operations (independent of the mirror).
+def ref_encode(data, book):
+    codes, esc, _ = book
+    bits = []
+    for b in data:
+        if b in codes:
+            c, l = codes[b]
+        else:
+            c, l = (esc[0] << 8) | b, esc[1] + 8
+        bits.append(format(c, "0{}b".format(l)))
+    s = "".join(bits)
+    return s
+
+
+def ref_decode(bitstr, book, count):
+    codes, esc, _ = book
+    rev = {format(c, "0{}b".format(l)): s for s, (c, l) in codes.items()}
+    esc_s = format(esc[0], "0{}b".format(esc[1]))
+    out = []
+    i = 0
+    for _ in range(count):
+        for l in range(1, 33):
+            pref = bitstr[i : i + l]
+            if len(pref) < l:
+                return None  # exhausted
+            if pref == esc_s:
+                raw = bitstr[i + l : i + l + 8]
+                if len(raw) < 8:
+                    return None
+                out.append(int(raw, 2))
+                i += l + 8
+                break
+            if pref in rev:
+                out.append(rev[pref])
+                i += l
+                break
+        else:
+            return None
+    return out, i
+
+
+# --------------------------------------------------------------------------
+# Mirror of BitWriter (put/spill/into_bytes).
+class BitWriter:
+    def __init__(self):
+        self.buf = bytearray()
+        self.acc = 0
+        self.nbits = 0
+
+    def put(self, value, n):
+        assert n <= 56 and value < (1 << n) or n == 0
+        self.acc = ((self.acc << n) | value) & MASK64
+        self.nbits += n
+        if self.nbits >= 8:
+            whole = self.nbits & ~7
+            rem = self.nbits - whole
+            word = ((self.acc >> rem) << (64 - whole)) & MASK64
+            self.buf += word.to_bytes(8, "big")[: whole // 8]
+            self.nbits = rem
+
+    def len_bits(self):
+        return len(self.buf) * 8 + self.nbits
+
+    def into_bytes(self):
+        if self.nbits:
+            pad = 8 - self.nbits
+            self.buf.append((self.acc << pad) & 0xFF)
+            self.nbits = 0
+        return bytes(self.buf)
+
+
+# --------------------------------------------------------------------------
+# Mirror of BitRefill.
+class BitRefill:
+    def __init__(self, buf, start, len_bits):
+        assert start <= len_bits <= len(buf) * 8
+        self.buf = buf
+        self.byte_pos = start // 8
+        self.bitbuf = 0
+        self.navail = 0
+        self.len_bits = len_bits
+        self.refill()
+        sub = start % 8
+        self.bitbuf = (self.bitbuf << sub) & MASK64
+        self.navail -= sub
+
+    def pos(self):
+        return self.byte_pos * 8 - self.navail
+
+    def remaining(self):
+        return self.len_bits - self.pos()
+
+    def refill(self):
+        if self.byte_pos + 8 <= len(self.buf):
+            w = int.from_bytes(self.buf[self.byte_pos : self.byte_pos + 8], "big")
+            add = (64 - self.navail) & ~7
+            if add > 0:
+                chunk = w if add == 64 else ((w >> (64 - add)) << (64 - add)) & MASK64
+                self.bitbuf |= chunk >> self.navail
+                self.navail += add
+                self.byte_pos += add // 8
+        else:
+            while self.navail <= 56 and self.byte_pos < len(self.buf):
+                self.bitbuf |= self.buf[self.byte_pos] << (56 - self.navail)
+                self.navail += 8
+                self.byte_pos += 1
+
+    def consume(self, n):
+        assert n <= self.remaining() and n <= self.navail
+        self.bitbuf = (self.bitbuf << n) & MASK64
+        self.navail -= n
+
+
+# --------------------------------------------------------------------------
+# Mirror of the NEW LaneWindows (SoA over one shared buffer).
+class LaneWindows:
+    def __init__(self, buf, spans):
+        self.buf = buf
+        self.byte_pos = []
+        self.window = []
+        self.navail = []
+        self.end_bits = []
+        for (start, end) in spans:
+            assert start <= end <= len(buf) * 8
+            self.byte_pos.append(start // 8)
+            self.window.append(0)
+            self.navail.append(0)
+            self.end_bits.append(end)
+            l = len(self.byte_pos) - 1
+            self.refill(l)
+            sub = start % 8
+            self.window[l] = (self.window[l] << sub) & MASK64
+            self.navail[l] -= sub
+
+    def pos(self, l):
+        return self.byte_pos[l] * 8 - self.navail[l]
+
+    def remaining(self, l):
+        return self.end_bits[l] - self.pos(l)
+
+    def refill(self, l):
+        bp = self.byte_pos[l]
+        na = self.navail[l]
+        if bp + 8 <= len(self.buf):
+            w = int.from_bytes(self.buf[bp : bp + 8], "big")
+            add = (64 - na) & ~7
+            if add > 0:
+                chunk = w if add == 64 else ((w >> (64 - add)) << (64 - add)) & MASK64
+                self.window[l] |= chunk >> na
+                self.navail[l] = na + add
+                self.byte_pos[l] = bp + add // 8
+        else:
+            while self.navail[l] <= 56 and self.byte_pos[l] < len(self.buf):
+                self.window[l] |= self.buf[self.byte_pos[l]] << (56 - self.navail[l])
+                self.navail[l] += 8
+                self.byte_pos[l] += 1
+
+    def consume(self, l, n):
+        assert n <= self.remaining(l) and n <= self.navail[l], (l, n)
+        self.window[l] = (self.window[l] << n) & MASK64
+        self.navail[l] -= n
+
+
+# --------------------------------------------------------------------------
+# Mirror of CanonicalDecoder + the NEW pure decode_from_window kernel.
+class Decoder:
+    def __init__(self, book):
+        _, _, canonical = book
+        self.first_code_aligned = []
+        self.first_index = []
+        self.lengths = []
+        self.symbols = []
+        self.fast = [FAST_MISS] * (1 << FAST_BITS)
+        nxt = 0
+        prev = canonical[0][1]
+        for i, (sym, ln) in enumerate(canonical):
+            nxt <<= ln - prev
+            prev = ln
+            if not self.lengths or self.lengths[-1] != ln:
+                self.lengths.append(ln)
+                self.first_index.append(i)
+                self.first_code_aligned.append(nxt << (32 - ln))
+            self.symbols.append(sym)
+            if ln <= FAST_BITS and sym != ESC:
+                lo = nxt << (FAST_BITS - ln)
+                hi = (nxt + 1) << (FAST_BITS - ln)
+                packed = (sym << 8) | ln
+                for s in range(lo, hi):
+                    self.fast[s] = packed
+            nxt += 1
+
+    def decode_from_window(self, window, remaining, pos):
+        probe = window >> (64 - FAST_BITS)
+        hit = self.fast[probe]
+        if hit != FAST_MISS:
+            ln = hit & 0xFF
+            if remaining >= ln:
+                return (hit >> 8, ln)
+        return self._slow(window, remaining, pos)
+
+    def _slow(self, window, remaining, pos):
+        w32 = window >> 32
+        for k in range(len(self.lengths)):
+            ln = self.lengths[k]
+            upper = (
+                self.first_code_aligned[k + 1]
+                if k + 1 < len(self.lengths)
+                else MASK64
+            )
+            if w32 < upper:
+                if remaining < ln:
+                    raise EOFError("exhausted")
+                code = w32 >> (32 - ln)
+                first = self.first_code_aligned[k] >> (32 - ln)
+                idx = self.first_index[k] + (code - first)
+                if idx >= len(self.symbols):
+                    raise ValueError("invalid codeword")
+                sym = self.symbols[idx]
+                if sym == ESC:
+                    if remaining < ln + 8:
+                        raise EOFError("exhausted esc")
+                    raw = ((window << ln) & MASK64) >> 56
+                    return (raw, ln + 8)
+                return (sym, ln)
+        raise ValueError("invalid codeword")
+
+    def decode_block(self, buf, start, len_bits, count):
+        """Mirror of decode_block_into (single-lane refill loop)."""
+        s = BitRefill(buf, start, len_bits)
+        out = []
+        for _ in range(count):
+            if s.navail < 40:
+                s.refill()
+            sym, used = self.decode_from_window(s.bitbuf, s.remaining(), s.pos())
+            s.consume(used)
+            out.append(sym)
+        return out
+
+
+# --------------------------------------------------------------------------
+# Mirror of LaneCodec encode (v1/v2) + both decode paths + from_bytes.
+def book_header_bits(book):
+    return 6 + 14 * len(book[2])
+
+
+def write_book_header(book, w):
+    _, _, canonical = book
+    w.put(len(canonical), 6)
+    for sym, ln in canonical:
+        w.put(1 if sym == ESC else 0, 1)
+        w.put(sym & 0xFF, 8)
+        w.put(ln, 5)
+
+
+def parse_book_header(buf, off, bits):
+    """Mirror of CodeBook::read_header + from_canonical checks."""
+    r = BitRefill(bytes(buf[off : off + (bits + 7) // 8]), 0, bits)
+
+    def get(n):
+        if r.remaining() < n:
+            raise EOFError()
+        if r.navail < n:
+            r.refill()
+        v = r.bitbuf >> (64 - n)
+        r.consume(n)
+        return v
+
+    count = get(6)
+    if count < 1:
+        raise ValueError("zero entries")
+    canonical = []
+    prev = 0
+    esc_seen = False
+    for i in range(count):
+        is_esc = get(1) == 1
+        sym = get(8)
+        ln = get(5)
+        if ln == 0 or ln > 31:
+            raise ValueError("length out of range")
+        if ln < prev:
+            raise ValueError("not canonical order")
+        prev = ln
+        sym = ESC if is_esc else sym
+        if sym == ESC:
+            if esc_seen:
+                raise ValueError("dup esc")
+            esc_seen = True
+        canonical.append((sym, ln))
+    if not esc_seen or canonical[-1][0] != ESC:
+        raise ValueError("esc missing/not last")
+    if sum(1 << (32 - l) for _, l in canonical) != 1 << 32:
+        raise ValueError("kraft")
+    # rebuild codes
+    codes = {}
+    esc_code = None
+    nxt = 0
+    prev = canonical[0][1]
+    for sym, ln in canonical:
+        nxt <<= ln - prev
+        prev = ln
+        if sym == ESC:
+            esc_code = (nxt, ln)
+        else:
+            if sym in codes:
+                raise ValueError("dup sym")
+            codes[sym] = (nxt, ln)
+        nxt += 1
+    return codes, esc_code, canonical
+
+
+def lane_encode(data, lanes, books, embed):
+    """books: list of per-lane book (len==lanes). embed=True → v2."""
+    payloads = []
+    lane_bits = []
+    for l in range(lanes):
+        sub = data[l::lanes]
+        w = BitWriter()
+        codes, esc, _ = books[l]
+        for b in sub:
+            if b in codes:
+                c, ln = codes[b]
+            else:
+                c, ln = (esc[0] << 8) | b, esc[1] + 8
+            w.put(c, ln)
+        lane_bits.append(w.len_bits())
+        payloads.append(w.into_bytes())
+    out = bytearray()
+    out.append(lanes | (LANE_BOOKS_FLAG if embed else 0))
+    out += len(data).to_bytes(4, "big")
+    for b in lane_bits:
+        out += b.to_bytes(4, "big")
+    book_bits = []
+    if embed:
+        blobs = []
+        for bk in books:
+            w = BitWriter()
+            write_book_header(bk, w)
+            book_bits.append(w.len_bits())
+            blobs.append(w.into_bytes())
+        for bb in book_bits:
+            out += bb.to_bytes(2, "big")
+        for blob in blobs:
+            out += blob
+    for p in payloads:
+        out += p
+    return bytes(out), lane_bits, book_bits
+
+
+def lane_len(count, lanes, l):
+    return (count + lanes - 1 - l) // lanes
+
+
+def parse_stream(bytes_):
+    """Mirror of from_bytes + validated_lanes. Returns parsed dict."""
+    if len(bytes_) < 5:
+        raise ValueError("short")
+    has_books = bytes_[0] & LANE_BOOKS_FLAG != 0
+    lanes = bytes_[0] & ~LANE_BOOKS_FLAG & 0xFF
+    if lanes == 0 or lanes > MAX_LANES:
+        raise ValueError("lanes")
+    count = int.from_bytes(bytes_[1:5], "big")
+    header = 5 + 4 * lanes
+    if len(bytes_) < header:
+        raise ValueError("header trunc")
+    lane_bits = [
+        int.from_bytes(bytes_[5 + 4 * l : 9 + 4 * l], "big") for l in range(lanes)
+    ]
+    book_bits, books = [], []
+    off = header
+    if has_books:
+        table_end = header + 2 * lanes
+        if len(bytes_) < table_end:
+            raise ValueError("book table trunc")
+        book_bits = [
+            int.from_bytes(bytes_[header + 2 * l : header + 2 * l + 2], "big")
+            for l in range(lanes)
+        ]
+        for bb in book_bits:
+            if bb == 0 or bb > MAX_BOOK_HEADER_BITS:
+                raise ValueError("book bits range")
+        off = table_end
+        for bb in book_bits:
+            blob = (bb + 7) // 8
+            if off + blob > len(bytes_):
+                raise ValueError("book blob trunc")
+            books.append(parse_book_header(bytes_, off, bb))
+            off += blob
+    # validated_lanes
+    views = []
+    for l in range(lanes):
+        bits = lane_bits[l]
+        end = off + (bits + 7) // 8
+        if end > len(bytes_):
+            raise ValueError("lane payload")
+        symbols = lane_len(count, lanes, l)
+        if symbols > bits:
+            raise ValueError("symbols>bits")
+        views.append((l, off, end, bits, symbols))
+        off = end
+    return dict(
+        lanes=lanes, count=count, lane_bits=lane_bits, books=books, views=views,
+        bytes=bytes_,
+    )
+
+
+def decode_lane_at_a_time(stream, shared_book):
+    decs = (
+        [Decoder(shared_book)]
+        if not stream["books"]
+        else [Decoder(b) for b in stream["books"]]
+    )
+    n = stream["lanes"]
+    out = [0] * stream["count"]
+    for (l, start, end, bits, symbols) in stream["views"]:
+        dec = decs[0] if len(decs) == 1 else decs[l]
+        # sliced view, exactly like the Rust BitReader::with_len slice
+        syms = dec.decode_block(stream["bytes"][start:end], 0, bits, symbols)
+        for k, s in enumerate(syms):
+            out[l + k * n] = s
+    return out
+
+
+def decode_lockstep(stream, shared_book):
+    decs = (
+        [Decoder(shared_book)]
+        if not stream["books"]
+        else [Decoder(b) for b in stream["books"]]
+    )
+    n = stream["lanes"]
+    dec_by_lane = [decs[0] if len(decs) == 1 else decs[l] for l in range(n)]
+    out = [0] * stream["count"]
+    spans = [(start * 8, start * 8 + bits) for (_, start, _, bits, _) in stream["views"]]
+    wins = LaneWindows(stream["bytes"], spans)
+    # Merged loop, as in the Rust: the final partial round (active < n)
+    # is the scalar tail drain.
+    rounds = -(-stream["count"] // n)
+    for k in range(rounds):
+        base = k * n
+        active = min(n, stream["count"] - base)
+        for l in range(active):
+            if wins.navail[l] < 40:
+                wins.refill(l)
+            sym, used = dec_by_lane[l].decode_from_window(
+                wins.window[l], wins.remaining(l), wins.pos(l)
+            )
+            out[base + l] = sym
+            wins.consume(l, used)
+    return out
+
+
+# --------------------------------------------------------------------------
+def gen_data(rng, n, esc_heavy):
+    base = rng.randrange(256)
+    alpha = rng.randrange(33, 140) if esc_heavy else rng.randrange(1, 32)
+    out = []
+    for _ in range(n):
+        off = 0
+        while off + 1 < alpha and rng.random() < 0.45:
+            off += 1
+        out.append((base + off) % 256)
+    return out
+
+
+def main():
+    rng = random.Random(20260729)
+    cases = 0
+
+    # 1) Shared-book: reference codec vs mirror kernel, both decode paths,
+    #    all lane counts — the tentpole bit-exactness claim.
+    for trial in range(120):
+        n = rng.randrange(1, 1200)
+        data = gen_data(rng, n, rng.random() < 0.4)
+        book = make_book(data)
+        if book is None:
+            continue
+        # reference single-stream roundtrip pins the book construction
+        enc = ref_encode(data, book)
+        ref = ref_decode(enc, book, len(data))
+        assert ref is not None and ref[0] == data, "reference codec broken"
+        for lanes in (1, 2, 4, 8):
+            wire, _, _ = lane_encode(data, lanes, [book] * lanes, embed=False)
+            st = parse_stream(wire)
+            a = decode_lane_at_a_time(st, book)
+            b = decode_lockstep(st, book)
+            assert a == data, f"lane-at-a-time mismatch n={n} lanes={lanes}"
+            assert b == data, f"lockstep mismatch n={n} lanes={lanes}"
+        cases += 1
+    print(f"[1] shared-book lockstep==lane-at-a-time==scalar: {cases} cases OK")
+
+    # 2) Per-lane books (v2): tenants with different distributions.
+    ok2 = 0
+    for trial in range(60):
+        lanes = rng.choice((1, 2, 4, 8))
+        n = rng.randrange(lanes, 900)
+        bases = [rng.randrange(256) for _ in range(lanes)]
+        data = []
+        for i in range(n):
+            off = 0
+            while off < 6 and rng.random() < 0.4:
+                off += 1
+            data.append((bases[i % lanes] + off) % 256)
+        books = []
+        bad = False
+        for l in range(lanes):
+            bk = make_book(data[l::lanes] or [0])
+            if bk is None:
+                bad = True
+                break
+            books.append(bk)
+        if bad:
+            continue
+        wire, _, bb = lane_encode(data, lanes, books, embed=True)
+        assert all(0 < x <= MAX_BOOK_HEADER_BITS for x in bb)
+        st = parse_stream(wire)
+        assert len(st["books"]) == lanes
+        wrong = make_book([1, 2, 3])
+        a = decode_lane_at_a_time(st, wrong)
+        b = decode_lockstep(st, wrong)
+        assert a == data and b == data, "v2 roundtrip mismatch"
+        ok2 += 1
+    print(f"[2] v2 per-lane-books roundtrip: {ok2} cases OK")
+
+    # 3) Truncated lanes: both paths must error, never 'succeed'.
+    ok3 = 0
+    for trial in range(60):
+        n = rng.randrange(8, 600)
+        data = gen_data(rng, n, False)
+        book = make_book(data)
+        if book is None:
+            continue
+        lanes = rng.choice((1, 2, 4, 8))
+        wire, lane_bits, _ = lane_encode(data, lanes, [book] * lanes, embed=False)
+        l = rng.randrange(lanes)
+        if lane_bits[l] == 0:
+            continue
+        cut = rng.randrange(1, lane_bits[l] + 1)
+        forged = bytearray(wire)
+        forged[5 + 4 * l : 9 + 4 * l] = (lane_bits[l] - cut).to_bytes(4, "big")
+        for decoder in (decode_lane_at_a_time, decode_lockstep):
+            try:
+                st = parse_stream(bytes(forged))
+                decoder(st, book)
+                assert False, f"truncated lane decoded lanes={lanes} cut={cut}"
+            except (ValueError, EOFError, AssertionError) as e:
+                if isinstance(e, AssertionError) and "truncated lane" in str(e):
+                    raise
+        ok3 += 1
+    print(f"[3] truncated lanes rejected on both paths: {ok3} cases OK")
+
+    # 4) Hostile v2 book headers: garbled/forged/truncated must not crash
+    #    or mis-validate (mirrors prop_hostile_book_headers_rejected_cheaply).
+    ok4 = survivors = 0
+    for trial in range(200):
+        lanes = rng.choice((1, 2, 4))
+        n = rng.randrange(lanes, 300)
+        data = gen_data(rng, n, False)
+        book = make_book(data)
+        if book is None:
+            continue
+        wire, _, bb = lane_encode(data, lanes, [book] * lanes, embed=True)
+        forged = bytearray(wire)
+        mode = rng.randrange(3)
+        header_end = 5 + 4 * lanes + 2 * lanes + sum((x + 7) // 8 for x in bb)
+        if mode == 0:
+            for _ in range(rng.randrange(1, 6)):
+                i = rng.randrange(5 + 4 * lanes, header_end)
+                forged[i] ^= rng.randrange(1, 256)
+        elif mode == 1:
+            l = rng.randrange(lanes)
+            v = rng.choice((0, 0xFFFF, MAX_BOOK_HEADER_BITS + rng.randrange(1, 1000)))
+            at = 5 + 4 * lanes + 2 * l
+            forged[at : at + 2] = v.to_bytes(2, "big")
+        else:
+            forged = forged[: rng.randrange(5, header_end)]
+        try:
+            st = parse_stream(bytes(forged))
+            survivors += 1  # parsed consistently — allowed
+        except (ValueError, EOFError):
+            pass
+        ok4 += 1
+    print(f"[4] hostile book headers: {ok4} fuzz cases, {survivors} consistent survivors, rest rejected")
+
+    # 5) Empty / single-symbol streams across lane counts.
+    book = make_book([9, 9, 9, 10])
+    for lanes in (1, 2, 4, 8):
+        for data in ([], [9]):
+            wire, _, _ = lane_encode(data, lanes, [book] * lanes, embed=False)
+            st = parse_stream(wire)
+            assert decode_lane_at_a_time(st, book) == data
+            assert decode_lockstep(st, book) == data
+    print("[5] empty/single-symbol streams OK")
+
+    # 6) LaneWindows ≡ per-lane BitRefill on random spans (SoA port check).
+    for trial in range(150):
+        nbytes = rng.randrange(8, 160)
+        buf = bytes(rng.randrange(256) for _ in range(nbytes))
+        lanes = rng.randrange(1, 9)
+        total = nbytes * 8
+        cuts = sorted(rng.randrange(total + 1) for _ in range(lanes - 1))
+        spans = list(zip([0] + cuts, cuts + [total]))
+        lw = LaneWindows(buf, spans)
+        refs = [BitRefill(buf, s, e) for s, e in spans]
+        live = True
+        while live:
+            live = False
+            for l in range(lanes):
+                if lw.remaining(l) == 0:
+                    assert refs[l].remaining() == 0
+                    continue
+                live = True
+                if lw.navail[l] < 40:
+                    lw.refill(l)
+                if refs[l].navail < 40:
+                    refs[l].refill()
+                assert lw.pos(l) == refs[l].pos()
+                take = rng.randrange(1, min(lw.remaining(l), 32) + 1)
+                assert (lw.window[l] >> (64 - take)) == (refs[l].bitbuf >> (64 - take)), (
+                    f"window mismatch lane {l} at bit {lw.pos(l)}"
+                )
+                lw.consume(l, take)
+                refs[l].consume(take)
+    print("[6] LaneWindows SoA == N independent BitRefills: 150 cases OK")
+
+    # 7) hw lockstep cycle model bounds: makespan <= lockstep <= serial.
+    def stage_of(bits):
+        for k, w in enumerate((8, 16, 24, 32)):
+            if w >= bits:
+                return k + 1
+        return None
+
+    for trial in range(60):
+        n = rng.randrange(1, 1500)
+        data = gen_data(rng, n, rng.random() < 0.3)
+        book = make_book(data)
+        if book is None:
+            continue
+        for lanes in (1, 2, 4, 8):
+            wire, _, _ = lane_encode(data, lanes, [book] * lanes, embed=False)
+            st = parse_stream(wire)
+            dec = Decoder(book)
+            # replay per-lane symbol stages in round order
+            per_lane = [0] * lanes
+            lockstep = 0
+            readers = [
+                BitRefill(st["bytes"][s:e], 0, bits)
+                for (_, s, e, bits, _) in st["views"]
+            ]
+            rounds = -(-st["count"] // lanes)
+            ok = True
+            for k in range(rounds):
+                active = min(lanes, st["count"] - k * lanes)
+                rmax = 0
+                for l in range(active):
+                    r = readers[l]
+                    if r.navail < 40:
+                        r.refill()
+                    sym, used = dec.decode_from_window(r.bitbuf, r.remaining(), r.pos())
+                    r.consume(used)
+                    stg = stage_of(used)
+                    per_lane[l] += stg
+                    rmax = max(rmax, stg)
+                lockstep += rmax
+            makespan = max(per_lane) if per_lane else 0
+            serial = sum(per_lane)
+            assert makespan <= lockstep <= serial, (makespan, lockstep, serial)
+            if lanes == 1:
+                assert makespan == lockstep == serial
+    print("[7] lockstep cycle model bounds hold (makespan<=lockstep<=serial)")
+
+    # 7b) decompress count guard: count bounded by remaining payload bits
+    #     (every codeword >= 1 bit) rejects hostile headers and never a
+    #     valid block (valid payload always has >= count bits).
+    for trial in range(100):
+        n = rng.randrange(1, 400)
+        data = gen_data(rng, n, False)
+        book = make_book(data)
+        if book is None:
+            continue
+        payload_bits = len(ref_encode(data, book))
+        assert n <= payload_bits, "valid block rejected by count guard"
+        hostile_count = (1 << 32) - 1
+        assert hostile_count > payload_bits, "hostile count passes the guard"
+    print("[7b] decompress count guard: valid blocks pass, hostile counts rejected")
+
+    # 8) Engine coupling arithmetic: max(wire, decode) + startup algebra.
+    for trial in range(2000):
+        wire = rng.uniform(0, 1e6)
+        decode = rng.uniform(0, 1e6)
+        hops = rng.uniform(0, 100)
+        startup = 170.0
+        ns = wire + hops
+        if decode > wire:
+            ns += decode - wire
+        ns += startup
+        assert abs(ns - (max(wire, decode) + hops + startup)) < 1e-6
+    print("[8] transfer_ns coupling == max(wire, decode) + hops + startup")
+
+    print("\nALL LOGIC CHECKS PASSED")
+
+
+if __name__ == "__main__":
+    main()

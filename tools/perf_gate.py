@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Perf-regression gate for BENCH_perf_codec.json (ISSUE 2 satellite).
+
+Usage: perf_gate.py FRESH BASELINE [--threshold 0.15]
+
+Compares the throughput rows of a freshly produced bench JSON against the
+committed baseline and fails (exit 1) if any shared row's `m_per_s`
+dropped by more than the threshold. Rows present in only one file are
+reported but never fail the gate (new benches shouldn't need a baseline
+edit to land, and removed benches shouldn't block CI).
+
+ci.sh wires this up after `cargo bench --bench perf_codec`, diffing
+against `git show HEAD:BENCH_perf_codec.json`; set LEXI_SKIP_PERF_GATE=1
+(e.g. in toolchain-less or noisy-neighbour containers) to skip.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path):
+    with open(path) as f:
+        data = json.load(f)
+    rows = data.get("rows", {})
+    return {
+        name: row["m_per_s"]
+        for name, row in rows.items()
+        if isinstance(row, dict) and row.get("m_per_s", 0) > 0
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("fresh", help="freshly generated BENCH_perf_codec.json")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.15,
+        help="max tolerated fractional throughput drop (default 0.15)",
+    )
+    args = ap.parse_args()
+
+    try:
+        fresh = load_rows(args.fresh)
+    except (OSError, json.JSONDecodeError) as e:
+        # ci.sh deletes the stale file before the bench run, so an
+        # unreadable fresh file means the bench failed to produce one —
+        # that's a gate failure, not a skip (a stale file must never
+        # stand in for a fresh run).
+        print(f"perf_gate: FAIL (fresh bench output unreadable: {e})")
+        return 1
+    try:
+        base = load_rows(args.baseline)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"perf_gate: SKIP (unreadable baseline: {e})")
+        return 0
+
+    if not base:
+        print("perf_gate: SKIP (baseline has no throughput rows)")
+        return 0
+
+    shared = sorted(set(fresh) & set(base))
+    regressions = []
+    print(f"perf_gate: {len(shared)} shared rows, threshold {args.threshold:.0%}")
+    for name in shared:
+        drop = 1.0 - fresh[name] / base[name]
+        marker = ""
+        if drop > args.threshold:
+            regressions.append((name, drop))
+            marker = "  << REGRESSION"
+        print(
+            f"  {name:24s} {base[name]:10.1f} -> {fresh[name]:10.1f} M/s "
+            f"({-drop:+8.1%}){marker}"
+        )
+    for name in sorted(set(fresh) - set(base)):
+        print(f"  {name:24s} (new row, no baseline)")
+    for name in sorted(set(base) - set(fresh)):
+        print(f"  {name:24s} (baseline row absent from fresh run)")
+
+    if regressions:
+        worst = max(regressions, key=lambda r: r[1])
+        print(
+            f"perf_gate: FAIL — {len(regressions)} row(s) dropped >"
+            f"{args.threshold:.0%} (worst: {worst[0]} {worst[1]:.1%})"
+        )
+        return 1
+    print("perf_gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
