@@ -169,6 +169,22 @@ fn main() {
         );
     }
 
+    // --- BDI baseline (ISSUE 3: the codec is now swappable; track the
+    // alternative backend's throughput alongside the Huffman engine) ----
+    let bdi_enc = bench("bdi encode", 1, 7, || lexi_core::bdi::compress(&exps));
+    record(&mut t, &mut rows, &bdi_enc, "bdi encode", n as u64, "exps");
+
+    let bdi_block = lexi_core::bdi::compress(&exps);
+    let bdi_dec = bench("bdi decode", 1, 7, || {
+        lexi_core::bdi::decompress(&bdi_block).unwrap()
+    });
+    record(&mut t, &mut rows, &bdi_dec, "bdi decode", n as u64, "exps");
+    assert_eq!(
+        lexi_core::bdi::decompress(&bdi_block).unwrap(),
+        exps,
+        "bdi decode must be lossless"
+    );
+
     // End-to-end block compress (hist + book + batch encode).
     let blk = bench("compress_exponents", 1, 5, || {
         huffman::compress_exponents(&exps).unwrap()

@@ -6,11 +6,17 @@
 //! ≈ 0.63×; BDI reads ~2.1× (midrange-base variant) — same ordering,
 //! same conclusion: frequency redundancy, not run or delta locality, is
 //! the exploitable structure.
+//!
+//! Huffman and BDI both dispatch through the `ExpCodec` registry
+//! (ISSUE 3) — the same trait path `CrTable`, `flit`, and the engine
+//! use — so this table pins the trait route, not a parallel direct one.
+//! RLE is a Table 2-only baseline and stays a direct call.
 
 use lexi::models::weights::WeightStream;
 use lexi::models::ModelConfig;
 use lexi_bench::{fmt_ratio, Table};
-use lexi_core::{bdi, huffman, rle};
+use lexi_core::codec::CodecKind;
+use lexi_core::rle;
 
 fn main() {
     println!("Table 2 — exponent CR by method (weights):");
@@ -20,14 +26,23 @@ fn main() {
         let (mut l, mut r, mut b) = (0.0, 0.0, 0.0);
         for &layer in &layers {
             let exps = WeightStream::sample_exponents(&cfg, layer, 42, 300_000);
-            l += huffman::compress_exponents(&exps).expect("non-empty").ratio();
+            l += CodecKind::Huffman
+                .codec()
+                .encode(&exps)
+                .expect("non-empty")
+                .ratio();
             r += rle::coding_ratio(&exps);
-            b += bdi::coding_ratio(&exps);
+            b += CodecKind::Bdi.codec().coding_ratio(&exps);
         }
         let n = layers.len() as f64;
         let (l, r, b) = (l / n, r / n, b / n);
         assert!(l > b && b > 1.0 && r < 1.0, "method ordering must hold");
         assert!((2.5..3.8).contains(&l), "LEXI CR {l}");
+        assert_eq!(
+            CodecKind::Raw.codec().coding_ratio(&[1, 2, 3]),
+            1.0,
+            "Base column is the Raw codec by definition"
+        );
         t.row(vec![
             cfg.name.into(),
             "1.00×".into(),

@@ -60,9 +60,10 @@ fn main() -> anyhow::Result<()> {
 
     // --- 3: measured ratios ------------------------------------------------
     let crs = report.measured_cr_table();
-    let mut t = Table::new(&["kind", "exponent CR", "wire ratio"]);
-    for (kind, r) in &crs.ratios {
+    let mut t = Table::new(&["codec", "kind", "exponent CR", "wire ratio"]);
+    for ((codec, kind), r) in &crs.ratios {
         t.row(vec![
+            codec.name().into(),
             format!("{kind:?}"),
             format!("{:.2}x", r.exponent_cr),
             format!("{:.2}x", r.wire_ratio),

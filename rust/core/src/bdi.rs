@@ -2,11 +2,27 @@
 //! [30]), specialized to 8-bit exponent streams.
 //!
 //! Each fixed-size block is encoded as a tag, an 8-bit base (the block's
-//! first value), and per-element deltas of the narrowest width in
-//! {0, 1, 2, 3, 4} bits that covers all deltas; blocks that fit no width
-//! fall back to raw bytes. The paper quotes "3-bit delta encoding" and a
-//! ~2.4× exponent CR; the adaptive widths reproduce that operating point
-//! on realistic exponent streams (3-bit is the commonly selected width).
+//! **midrange** — halfway between the block min and max, which minimizes
+//! the needed two's-complement delta width), and per-element deltas of
+//! the narrowest width in {0, 1, 2, 3, 4, 5} bits that covers all
+//! deltas; blocks that fit no width fall back to raw bytes. The paper
+//! quotes "3-bit delta encoding" and a ~2.4× exponent CR; the adaptive
+//! widths reproduce that operating point on realistic exponent streams
+//! (3-bit is the commonly selected width).
+//!
+//! Wire layout (MSB-first; the independent Python mirror lives in
+//! `tools/logic_check.py` §BDI):
+//!
+//! ```text
+//! compress:       { count:32 | block* }
+//! delta block:    { tag:3 = width index | base:8 | delta:width × n }
+//! raw block:      { tag:3 = 6           | byte:8 × n }
+//! ```
+//!
+//! The headerless block stream ([`encode_blocks`] / [`decode_blocks`])
+//! is also what `flit::pack` embeds per flit when the transfer's
+//! [`CodecKind::Bdi`](crate::codec::CodecKind) is selected — the flit
+//! header already carries the element count.
 
 use crate::bitstream::{BitReader, BitWriter};
 use crate::error::{Error, Result};
@@ -18,6 +34,10 @@ pub const BLOCK: usize = 32;
 const WIDTHS: [u32; 6] = [0, 1, 2, 3, 4, 5];
 const TAG_BITS: u32 = 3;
 const TAG_RAW: u64 = WIDTHS.len() as u64;
+
+/// Smallest possible encoded block: tag + base, zero-width deltas. Used
+/// to bound hostile count headers before any allocation.
+pub const MIN_BLOCK_BITS: usize = (TAG_BITS + 8) as usize;
 
 /// A compressed BDI block stream.
 #[derive(Clone, Debug)]
@@ -68,10 +88,42 @@ fn signed_width(d: i16) -> u32 {
     }
 }
 
-/// Compress a byte stream with adaptive-width BDI.
-pub fn compress(data: &[u8]) -> BdiBlock {
-    let mut w = BitWriter::new();
-    w.put(data.len() as u64, 32);
+/// Exact encoded size in bits of one block (≤ [`BLOCK`] elements) —
+/// `tag + base + width·n` or `tag + 8·n` for the raw fallback. This is
+/// the pricing function `flit::pack`'s greedy fill uses; it mirrors
+/// [`encode_blocks`] exactly (asserted by tests).
+pub fn block_bits(block: &[u8]) -> usize {
+    debug_assert!(!block.is_empty() && block.len() <= BLOCK);
+    let base = pick_base(block);
+    match pick_width(block, base) {
+        Some(wi) => MIN_BLOCK_BITS + WIDTHS[wi] as usize * block.len(),
+        None => TAG_BITS as usize + 8 * block.len(),
+    }
+}
+
+/// Exact headerless stream size in bits for a whole byte stream.
+pub fn stream_bits(data: &[u8]) -> usize {
+    data.chunks(BLOCK).map(block_bits).sum()
+}
+
+/// Per-block decode-cycle cost under the simple hardware model the sim
+/// charges BDI with (ISSUE 3): one cycle each for the tag and base
+/// fetches plus one per delta; a raw block skips the base fetch. No
+/// codebook pipeline, so (unlike Huffman) there is no startup cost.
+pub fn block_decode_cycles(data: &[u8]) -> Vec<u64> {
+    data.chunks(BLOCK)
+        .map(|b| {
+            let base = pick_base(b);
+            match pick_width(b, base) {
+                Some(_) => 2 + b.len() as u64,
+                None => 1 + b.len() as u64,
+            }
+        })
+        .collect()
+}
+
+/// Write the headerless block stream for `data` (chunks of [`BLOCK`]).
+pub fn encode_blocks(data: &[u8], w: &mut BitWriter) {
     for block in data.chunks(BLOCK) {
         let base = pick_base(block);
         match pick_width(block, base) {
@@ -94,6 +146,54 @@ pub fn compress(data: &[u8]) -> BdiBlock {
             }
         }
     }
+}
+
+/// Read exactly `out.len()` symbols of headerless block stream from `r`.
+/// Lossless inverse of [`encode_blocks`].
+pub fn decode_blocks(r: &mut BitReader, out: &mut [u8]) -> Result<()> {
+    let mut done = 0usize;
+    while done < out.len() {
+        let n = (out.len() - done).min(BLOCK);
+        let tag = r.get(TAG_BITS)?;
+        if tag == TAG_RAW {
+            for slot in &mut out[done..done + n] {
+                *slot = r.get(8)? as u8;
+            }
+        } else {
+            let width = *WIDTHS
+                .get(tag as usize)
+                .ok_or(Error::InvalidCodeword { offset: r.pos() })?;
+            let base = r.get(8)? as i16;
+            if width == 0 {
+                for slot in &mut out[done..done + n] {
+                    *slot = base as u8;
+                }
+            } else {
+                for slot in &mut out[done..done + n] {
+                    let raw = r.get(width)?;
+                    // Sign-extend.
+                    let shift = 64 - width;
+                    let d = ((raw << shift) as i64) >> shift;
+                    *slot = (base + d as i16) as u8;
+                }
+            }
+        }
+        done += n;
+    }
+    Ok(())
+}
+
+/// Compress a byte stream with adaptive-width BDI.
+pub fn compress(data: &[u8]) -> BdiBlock {
+    let mut w = BitWriter::new();
+    // Cheap capacity bound — 8·n + MIN_BLOCK_BITS per block dominates
+    // both block shapes (raw: 3 + 8n, delta: 11 + wn with w ≤ 5 < 8) —
+    // rather than an exact `stream_bits` pass that would rerun the
+    // base/width analysis encode_blocks is about to do anyway.
+    let blocks = data.len().div_ceil(BLOCK) as u64;
+    w.reserve_bits(32 + data.len() as u64 * 8 + blocks * MIN_BLOCK_BITS as u64);
+    w.put(data.len() as u64, 32);
+    encode_blocks(data, &mut w);
     let bits = w.len_bits();
     BdiBlock {
         bytes: w.into_bytes(),
@@ -104,36 +204,29 @@ pub fn compress(data: &[u8]) -> BdiBlock {
 
 /// Decompress a BDI stream. Lossless inverse of [`compress`].
 pub fn decompress(block: &BdiBlock) -> Result<Vec<u8>> {
-    let mut r = BitReader::with_len(&block.bytes, block.bits);
+    decompress_bits(&block.bytes, block.bits)
+}
+
+/// Decompress from raw parts (what [`crate::codec::BdiCodec`] and
+/// forged-header tests use).
+pub fn decompress_bits(bytes: &[u8], bits: usize) -> Result<Vec<u8>> {
+    let mut r = BitReader::with_len(bytes, bits.min(bytes.len() * 8));
     let count = r.get(32)? as usize;
-    let mut out = Vec::with_capacity(count);
-    while out.len() < count {
-        let n = (count - out.len()).min(BLOCK);
-        let tag = r.get(TAG_BITS)?;
-        if tag == TAG_RAW {
-            for _ in 0..n {
-                out.push(r.get(8)? as u8);
-            }
-        } else {
-            let width = *WIDTHS
-                .get(tag as usize)
-                .ok_or(Error::InvalidCodeword { offset: r.pos() })?;
-            let base = r.get(8)? as i16;
-            if width == 0 {
-                for _ in 0..n {
-                    out.push(base as u8);
-                }
-            } else {
-                for _ in 0..n {
-                    let raw = r.get(width)?;
-                    // Sign-extend.
-                    let shift = 64 - width;
-                    let d = ((raw << shift) as i64) >> shift;
-                    out.push((base + d as i16) as u8);
-                }
-            }
-        }
+    // Bound the untrusted count by the remaining payload before the
+    // output allocation: `count` symbols need at least
+    // ceil(count / BLOCK) blocks of ≥ MIN_BLOCK_BITS each — the same
+    // hardening as `huffman::decompress_exponents`'s count-header guard;
+    // a hostile header cannot demand a multi-gigabyte zero-fill from a
+    // tiny block.
+    let min_bits = count.div_ceil(BLOCK).saturating_mul(MIN_BLOCK_BITS);
+    if min_bits > r.remaining() {
+        return Err(Error::InvalidParameter(format!(
+            "BDI header claims {count} symbols (≥{min_bits} bits) but only {} payload bits remain",
+            r.remaining()
+        )));
     }
+    let mut out = vec![0u8; count];
+    decode_blocks(&mut r, &mut out)?;
     Ok(out)
 }
 
@@ -198,6 +291,105 @@ mod tests {
             let b = compress(&data);
             assert_eq!(decompress(&b).unwrap(), data);
         });
+    }
+
+    #[test]
+    fn prop_esc_heavy_and_constant_streams_roundtrip() {
+        // ISSUE 3 satellite: mixed-regime streams — long constant runs
+        // (width-0 blocks) spliced with full-range noise (raw-fallback
+        // blocks) — exercise every tag on one stream.
+        check("bdi mixed-regime roundtrip", 120, |g| {
+            let mut data = Vec::new();
+            for _ in 0..g.usize(1..8) {
+                match g.usize(0..3) {
+                    0 => data.extend(vec![g.u8(); g.usize(1..120)]),
+                    1 => {
+                        let n = g.usize(1..120);
+                        data.extend(g.vec(n, |g| g.u8()));
+                    }
+                    _ => {
+                        let base = g.u8();
+                        let n = g.usize(1..120);
+                        data.extend(
+                            g.vec(n, |g| base.wrapping_add(g.usize(0..7) as u8)),
+                        );
+                    }
+                }
+            }
+            let b = compress(&data);
+            assert_eq!(decompress(&b).unwrap(), data);
+        });
+    }
+
+    #[test]
+    fn prop_truncated_input_rejected() {
+        // Any strict bit truncation must error, never mis-decode to a
+        // full-length output.
+        check("bdi truncation rejected", 80, |g| {
+            let n = g.usize(1..1500);
+            let data = { let a = g.usize(1..24); g.skewed_bytes(n, a) };
+            let b = compress(&data);
+            let cut = g.usize(1..b.bits);
+            let short_bits = b.bits - cut;
+            let mut bytes = b.bytes.clone();
+            bytes.truncate(short_bits.div_ceil(8));
+            match decompress_bits(&bytes, short_bits) {
+                Err(_) => {}
+                Ok(out) => assert_ne!(out, data, "truncated stream silently decoded"),
+            }
+        });
+    }
+
+    #[test]
+    fn hostile_count_rejected_before_allocation() {
+        // Forge the 32-bit count header to u32::MAX on a tiny valid
+        // stream: the guard must reject on the minimum-block-bits bound
+        // instead of zero-filling a 4 GiB output first.
+        let data = vec![7u8; 64];
+        let b = compress(&data);
+        let mut forged = b.bytes.clone();
+        for byte in forged.iter_mut().take(4) {
+            *byte = 0xff;
+        }
+        let err = decompress_bits(&forged, b.bits).unwrap_err();
+        assert!(matches!(err, Error::InvalidParameter(_)), "{err:?}");
+        // And a count only slightly too large for the payload also dies.
+        let mut bumped = b.bytes.clone();
+        // count occupies the first 4 bytes big-endian; 64 → claim 320,
+        // still far beyond the 2 width-0 blocks the payload holds.
+        bumped[2] = 0x01;
+        let err2 = decompress_bits(&bumped, b.bits).unwrap_err();
+        assert!(matches!(err2, Error::InvalidParameter(_)), "{err2:?}");
+    }
+
+    #[test]
+    fn prop_block_bits_matches_encoder() {
+        // The flit greedy fill prices BDI sections with block_bits /
+        // stream_bits; they must agree with the writer bit-for-bit.
+        check("bdi pricing == encoder", 100, |g| {
+            let n = g.usize(1..2000);
+            let data = if g.bool(0.5) {
+                { let a = g.usize(1..40); g.skewed_bytes(n, a) }
+            } else {
+                g.vec(n, |g| g.u8())
+            };
+            let mut w = BitWriter::new();
+            encode_blocks(&data, &mut w);
+            assert_eq!(w.len_bits(), stream_bits(&data));
+            let b = compress(&data);
+            assert_eq!(b.bits, 32 + stream_bits(&data));
+        });
+    }
+
+    #[test]
+    fn decode_cycle_model_bounds() {
+        let data: Vec<u8> = (0..BLOCK * 3 + 5).map(|i| (i * 31) as u8).collect();
+        let costs = block_decode_cycles(&data);
+        assert_eq!(costs.len(), 4);
+        for (i, &c) in costs.iter().enumerate() {
+            let n = if i < 3 { BLOCK as u64 } else { 5 };
+            assert!((n + 1..=n + 2).contains(&c), "block {i} cost {c}");
+        }
     }
 
     #[test]

@@ -1,0 +1,408 @@
+//! Pluggable exponent-codec layer (ISSUE 3 tentpole).
+//!
+//! The paper's Table 2 treats the codec as a design axis — LEXI's
+//! canonical Huffman against BDI-style delta coding and raw passthrough —
+//! and related systems (Huff-LLM, DFloat11; see PAPERS.md) pick different
+//! points on it. This module makes that axis a first-class abstraction:
+//!
+//! * [`ExpCodec`] — the trait every exponent codec implements: encode an
+//!   exponent byte stream into a self-describing [`CodedBlock`], decode it
+//!   back losslessly, and report the Table 2 coding ratio.
+//! * [`CodecKind`] — the registry and **wire tag**. Each kind maps to a
+//!   2-bit on-wire identifier (carried by `flit::pack` so `unpack` can
+//!   dispatch without out-of-band context) and to a `'static` codec
+//!   instance via [`CodecKind::codec`].
+//! * [`HuffmanCodec`] / [`BdiCodec`] / [`RawCodec`] — the three built-in
+//!   backends. Huffman routes through the exact same
+//!   [`huffman::compress_exponents`] batch engine as before, so bytes
+//!   produced via the trait are **bit-identical** to the direct path
+//!   (pinned by [`tests::huffman_via_trait_is_byte_identical`] and by
+//!   `lexi-sim`'s `batch_rewire_preserves_compressed_sizes`).
+//!
+//! Everything downstream (`sim::compression::CrTable`, `sim::engine`'s
+//! per-kind `CodecPolicy` in `lexi-models`, `flit`, the CLI `dse --what
+//! codec` sweep) dispatches through this trait instead of naming
+//! `huffman::*` directly.
+
+use crate::bdi;
+use crate::error::{Error, Result};
+use crate::huffman;
+
+/// Width of the on-wire codec tag (2 bits: 3 codecs + 1 reserved).
+pub const CODEC_TAG_BITS: u32 = 2;
+
+/// Registered exponent codecs. The discriminant order is frozen: it is
+/// the wire tag (`flit` header) and must never be reshuffled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum CodecKind {
+    /// Canonical Huffman + all-ones escape — the LEXI algorithm, backed
+    /// by the §Perf batch/lane engine.
+    Huffman,
+    /// Base–delta–immediate over 32-element blocks (Table 2 baseline).
+    Bdi,
+    /// Raw 8-bit passthrough (the "Base" column; also the honest fallback
+    /// for incompressible streams).
+    Raw,
+}
+
+impl CodecKind {
+    /// All registered codecs, Table 2 column order.
+    pub const ALL: [CodecKind; 3] = [CodecKind::Huffman, CodecKind::Bdi, CodecKind::Raw];
+
+    /// The 2-bit wire tag ([`CODEC_TAG_BITS`]).
+    #[inline]
+    pub fn wire_tag(self) -> u8 {
+        match self {
+            CodecKind::Huffman => 0,
+            CodecKind::Bdi => 1,
+            CodecKind::Raw => 2,
+        }
+    }
+
+    /// Inverse of [`wire_tag`]; tag 3 is reserved and rejected.
+    ///
+    /// [`wire_tag`]: CodecKind::wire_tag
+    pub fn from_wire_tag(tag: u8) -> Result<Self> {
+        match tag {
+            0 => Ok(CodecKind::Huffman),
+            1 => Ok(CodecKind::Bdi),
+            2 => Ok(CodecKind::Raw),
+            other => Err(Error::InvalidParameter(format!(
+                "unknown codec wire tag {other}"
+            ))),
+        }
+    }
+
+    /// Short stable name (CLI flags, report rows).
+    pub fn name(self) -> &'static str {
+        match self {
+            CodecKind::Huffman => "huffman",
+            CodecKind::Bdi => "bdi",
+            CodecKind::Raw => "raw",
+        }
+    }
+
+    /// Parse a [`name`] back into a kind.
+    ///
+    /// [`name`]: CodecKind::name
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "huffman" | "lexi" => Ok(CodecKind::Huffman),
+            "bdi" => Ok(CodecKind::Bdi),
+            "raw" | "none" => Ok(CodecKind::Raw),
+            other => Err(Error::InvalidParameter(format!(
+                "unknown codec '{other}' (want huffman|bdi|raw)"
+            ))),
+        }
+    }
+
+    /// The registered `'static` implementation for this kind.
+    pub fn codec(self) -> &'static dyn ExpCodec {
+        match self {
+            CodecKind::Huffman => &HUFFMAN,
+            CodecKind::Bdi => &BDI,
+            CodecKind::Raw => &RAW,
+        }
+    }
+}
+
+/// A compressed exponent block from any registered codec: the common
+/// currency between codecs, the flit packer, and the sim's CR tables.
+#[derive(Clone, Debug)]
+pub struct CodedBlock {
+    /// Which codec produced `bytes` (decode dispatches on this; on the
+    /// wire it travels as the [`CODEC_TAG_BITS`] tag).
+    pub kind: CodecKind,
+    /// Serialized payload, MSB-first (any codec-specific headers
+    /// included).
+    pub bytes: Vec<u8>,
+    /// Exact bit length (excludes byte-alignment padding).
+    pub bits: usize,
+    /// Number of exponents encoded.
+    pub count: usize,
+}
+
+impl CodedBlock {
+    /// Compression ratio vs raw 8-bit exponents (headers included) —
+    /// Table 2's headline metric. Empty blocks report 1.0.
+    pub fn ratio(&self) -> f64 {
+        if self.bits == 0 {
+            return 1.0;
+        }
+        (self.count as f64 * 8.0) / self.bits as f64
+    }
+}
+
+/// A lossless exponent-stream codec.
+///
+/// Contract:
+/// * `decode(encode(x)) == x` for every non-empty byte stream `x`;
+/// * `encode` fills [`CodedBlock::kind`] with [`ExpCodec::kind`], and
+///   `decode` rejects a block whose `kind` does not match (no silent
+///   cross-codec misparse);
+/// * hostile `bits`/`count` metadata is bounded **before** any
+///   `count`-sized allocation (same hardening as
+///   `huffman::decompress_exponents`'s count-header guard).
+pub trait ExpCodec: Sync {
+    /// The registry entry this codec implements.
+    fn kind(&self) -> CodecKind;
+
+    /// Compress an exponent stream into a self-describing block.
+    fn encode(&self, exponents: &[u8]) -> Result<CodedBlock>;
+
+    /// Losslessly invert [`encode`].
+    ///
+    /// [`encode`]: ExpCodec::encode
+    fn decode(&self, block: &CodedBlock) -> Result<Vec<u8>>;
+
+    /// The Table 2 coding ratio for `exponents` under this codec. The
+    /// default encodes and reads [`CodedBlock::ratio`]; backends override
+    /// where the paper reports a header-excluded number.
+    fn coding_ratio(&self, exponents: &[u8]) -> f64 {
+        if exponents.is_empty() {
+            return 1.0;
+        }
+        self.encode(exponents).map(|b| b.ratio()).unwrap_or(1.0)
+    }
+}
+
+fn check_kind(codec: &dyn ExpCodec, block: &CodedBlock) -> Result<()> {
+    if block.kind != codec.kind() {
+        return Err(Error::InvalidParameter(format!(
+            "codec mismatch: {} block handed to the {} codec",
+            block.kind.name(),
+            codec.kind().name()
+        )));
+    }
+    Ok(())
+}
+
+// --- Huffman (LEXI) --------------------------------------------------------
+
+/// The LEXI canonical-Huffman codec via the §Perf batch engine.
+pub struct HuffmanCodec;
+/// Registry instance behind [`CodecKind::Huffman`].
+pub static HUFFMAN: HuffmanCodec = HuffmanCodec;
+
+impl ExpCodec for HuffmanCodec {
+    fn kind(&self) -> CodecKind {
+        CodecKind::Huffman
+    }
+
+    /// Exactly [`huffman::compress_exponents`]: per-stream codebook,
+    /// serialized header + count + batch-encoded payload. Bit-identical
+    /// to the direct call.
+    fn encode(&self, exponents: &[u8]) -> Result<CodedBlock> {
+        let block = huffman::compress_exponents(exponents)?;
+        Ok(CodedBlock {
+            kind: CodecKind::Huffman,
+            bytes: block.bytes,
+            bits: block.bits,
+            count: block.count,
+        })
+    }
+
+    fn decode(&self, block: &CodedBlock) -> Result<Vec<u8>> {
+        check_kind(self, block)?;
+        let out = huffman::decompress_bits(&block.bytes, block.bits)?;
+        if out.len() != block.count {
+            return Err(Error::InvalidParameter(format!(
+                "block metadata claims {} symbols, stream header carried {}",
+                block.count,
+                out.len()
+            )));
+        }
+        Ok(out)
+    }
+}
+
+// --- BDI -------------------------------------------------------------------
+
+/// The Table 2 base–delta–immediate baseline.
+pub struct BdiCodec;
+/// Registry instance behind [`CodecKind::Bdi`].
+pub static BDI: BdiCodec = BdiCodec;
+
+impl ExpCodec for BdiCodec {
+    fn kind(&self) -> CodecKind {
+        CodecKind::Bdi
+    }
+
+    fn encode(&self, exponents: &[u8]) -> Result<CodedBlock> {
+        let block = bdi::compress(exponents);
+        Ok(CodedBlock {
+            kind: CodecKind::Bdi,
+            bytes: block.bytes,
+            bits: block.bits,
+            count: block.count,
+        })
+    }
+
+    fn decode(&self, block: &CodedBlock) -> Result<Vec<u8>> {
+        check_kind(self, block)?;
+        let out = bdi::decompress_bits(&block.bytes, block.bits)?;
+        if out.len() != block.count {
+            return Err(Error::InvalidParameter(format!(
+                "block metadata claims {} symbols, stream header carried {}",
+                block.count,
+                out.len()
+            )));
+        }
+        Ok(out)
+    }
+
+    /// Table 2 reports BDI's *pure* coding ratio (count header excluded).
+    fn coding_ratio(&self, exponents: &[u8]) -> f64 {
+        bdi::coding_ratio(exponents)
+    }
+}
+
+// --- Raw -------------------------------------------------------------------
+
+/// 8-bit passthrough: `bytes` is the exponent stream verbatim.
+pub struct RawCodec;
+/// Registry instance behind [`CodecKind::Raw`].
+pub static RAW: RawCodec = RawCodec;
+
+impl ExpCodec for RawCodec {
+    fn kind(&self) -> CodecKind {
+        CodecKind::Raw
+    }
+
+    fn encode(&self, exponents: &[u8]) -> Result<CodedBlock> {
+        Ok(CodedBlock {
+            kind: CodecKind::Raw,
+            bytes: exponents.to_vec(),
+            bits: exponents.len() * 8,
+            count: exponents.len(),
+        })
+    }
+
+    fn decode(&self, block: &CodedBlock) -> Result<Vec<u8>> {
+        check_kind(self, block)?;
+        if block.bits != block.count * 8 || block.bytes.len() * 8 < block.bits {
+            return Err(Error::InvalidParameter(format!(
+                "raw block geometry inconsistent: {} bits / {} count / {} bytes",
+                block.bits,
+                block.count,
+                block.bytes.len()
+            )));
+        }
+        Ok(block.bytes[..block.count].to_vec())
+    }
+
+    fn coding_ratio(&self, _exponents: &[u8]) -> f64 {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::check;
+
+    fn sample(seed: u64, n: usize) -> Vec<u8> {
+        let mut rng = crate::prng::Rng::new(seed);
+        (0..n)
+            .map(|_| crate::bf16::Bf16::from_f32(rng.normal_with(0.0, 0.05) as f32).exponent())
+            .collect()
+    }
+
+    #[test]
+    fn wire_tags_roundtrip_and_reject_reserved() {
+        for kind in CodecKind::ALL {
+            assert_eq!(CodecKind::from_wire_tag(kind.wire_tag()).unwrap(), kind);
+            assert_eq!(CodecKind::parse(kind.name()).unwrap(), kind);
+            assert_eq!(kind.codec().kind(), kind);
+        }
+        assert!(CodecKind::from_wire_tag(3).is_err());
+        assert!(CodecKind::parse("zstd").is_err());
+    }
+
+    /// The ISSUE 3 acceptance gate: Huffman through the trait must be
+    /// byte-identical to the direct `compress_exponents` path.
+    #[test]
+    fn huffman_via_trait_is_byte_identical() {
+        for seed in [1u64, 7, 42] {
+            let exps = sample(seed, 20_000);
+            let direct = huffman::compress_exponents(&exps).unwrap();
+            let via = CodecKind::Huffman.codec().encode(&exps).unwrap();
+            assert_eq!(via.bytes, direct.bytes);
+            assert_eq!(via.bits, direct.bits);
+            assert_eq!(via.count, direct.count);
+            assert_eq!(via.ratio(), direct.ratio());
+            assert_eq!(
+                CodecKind::Huffman.codec().decode(&via).unwrap(),
+                huffman::decompress_exponents(&direct).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn bdi_via_trait_matches_direct() {
+        let exps = sample(3, 10_000);
+        let direct = bdi::compress(&exps);
+        let via = CodecKind::Bdi.codec().encode(&exps).unwrap();
+        assert_eq!(via.bytes, direct.bytes);
+        assert_eq!(via.bits, direct.bits);
+        assert_eq!(CodecKind::Bdi.codec().decode(&via).unwrap(), exps);
+        // Table 2 semantics: header-excluded ratio.
+        assert_eq!(
+            CodecKind::Bdi.codec().coding_ratio(&exps),
+            bdi::coding_ratio(&exps)
+        );
+    }
+
+    #[test]
+    fn prop_all_codecs_roundtrip() {
+        check("ExpCodec roundtrip", 120, |g| {
+            let n = g.usize(1..2500);
+            let data = if g.bool(0.6) {
+                let a = g.usize(1..48);
+                g.skewed_bytes(n, a)
+            } else {
+                g.vec(n, |g| g.u8())
+            };
+            for kind in CodecKind::ALL {
+                let codec = kind.codec();
+                let block = codec.encode(&data).unwrap();
+                assert_eq!(block.kind, kind);
+                assert_eq!(block.count, data.len());
+                assert_eq!(codec.decode(&block).unwrap(), data, "{kind:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn kind_mismatch_rejected() {
+        let data = sample(9, 512);
+        let huff = CodecKind::Huffman.codec().encode(&data).unwrap();
+        let err = CodecKind::Bdi.codec().decode(&huff).unwrap_err();
+        assert!(matches!(err, Error::InvalidParameter(_)), "{err:?}");
+        let raw = CodecKind::Raw.codec().encode(&data).unwrap();
+        assert!(CodecKind::Huffman.codec().decode(&raw).is_err());
+    }
+
+    #[test]
+    fn coding_ratios_order_like_table2() {
+        // LEXI > BDI > Raw on realistic concentrated exponent streams.
+        let exps = sample(42, 100_000);
+        let lexi = CodecKind::Huffman.codec().coding_ratio(&exps);
+        let bdi_r = CodecKind::Bdi.codec().coding_ratio(&exps);
+        let raw = CodecKind::Raw.codec().coding_ratio(&exps);
+        assert!(lexi > bdi_r, "lexi {lexi} vs bdi {bdi_r}");
+        assert!(bdi_r > 1.0, "bdi {bdi_r}");
+        assert_eq!(raw, 1.0);
+    }
+
+    #[test]
+    fn raw_block_geometry_validated() {
+        let block = CodedBlock {
+            kind: CodecKind::Raw,
+            bytes: vec![1, 2, 3],
+            bits: 4096, // claims more bits than the buffer holds
+            count: 512,
+        };
+        assert!(CodecKind::Raw.codec().decode(&block).is_err());
+    }
+}

@@ -4,18 +4,29 @@
 //! compressed activations *flit-atomically*:
 //!
 //! ```text
-//! { Header(count) | sign bits | mantissas | compressed exponents | 0-pad }
+//! { Header(count) | sign bits | mantissas | coded exponents | 0-pad }
 //! ```
 //!
 //! The header says how many whole values the flit carries; values never
 //! straddle flits, so the decoder can process each flit independently
 //! (that is what lets the hardware fan flits out to parallel decode lanes
-//! round-robin, §4.4). A layer transfer prepends the serialized codebook
-//! in dedicated flits.
+//! round-robin, §4.4). A layer transfer prepends a head section in
+//! dedicated flits: a [`CODEC_TAG_BITS`]-bit **codec tag** (ISSUE 3: the
+//! wire is self-describing, [`unpack`] dispatches on it), the serialized
+//! codebook when the codec is Huffman, and the value count.
+//!
+//! Exponent sections are codec-dispatched per [`CodecKind`]:
+//! * `Huffman` — batch-encoded codewords (bit-identical to the pre-trait
+//!   packer);
+//! * `Bdi` — a headerless [`bdi::encode_blocks`] stream over the flit's
+//!   exponents (the flit count header already says how many);
+//! * `Raw` — the exponent bytes verbatim.
 
 use crate::batch::BatchEncoder;
+use crate::bdi;
 use crate::bf16::FieldStreams;
 use crate::bitstream::{BitReader, BitWriter};
+use crate::codec::{CodecKind, CODEC_TAG_BITS};
 use crate::error::{Error, Result};
 use crate::huffman::CodeBook;
 
@@ -65,12 +76,16 @@ impl FlitFormat {
     }
 }
 
-/// A complete per-layer transfer: codebook flits followed by data flits.
+/// A complete per-layer transfer: head flits followed by data flits.
 #[derive(Clone, Debug)]
 pub struct LayerTransfer {
     pub format: FlitFormat,
+    /// Exponent codec the transfer was packed with. Informational: the
+    /// authoritative copy is the wire tag in the head flits, which is
+    /// what [`unpack`] dispatches on.
+    pub codec: CodecKind,
     pub flits: Vec<Flit>,
-    /// Number of leading flits that carry the codebook header.
+    /// Number of leading flits that carry the codec tag + codebook header.
     pub codebook_flits: usize,
     /// Values packed.
     pub count: usize,
@@ -95,12 +110,36 @@ pub fn uncompressed_flits(format: FlitFormat, count: usize) -> u64 {
     (count as u64).div_ceil(per)
 }
 
-/// Pack field streams into a layer transfer using `book` for exponents.
+/// Pack field streams into a layer transfer using `book` for exponents —
+/// the LEXI (Huffman) path, byte-compatible with every existing caller.
 pub fn pack(streams: &FieldStreams, book: &CodeBook, format: FlitFormat) -> Result<LayerTransfer> {
+    pack_codec(streams, CodecKind::Huffman, Some(book), format)
+}
+
+/// Pack field streams with an explicit exponent codec (ISSUE 3). `book`
+/// is required for [`CodecKind::Huffman`] and ignored otherwise.
+pub fn pack_codec(
+    streams: &FieldStreams,
+    codec: CodecKind,
+    book: Option<&CodeBook>,
+    format: FlitFormat,
+) -> Result<LayerTransfer> {
+    let book = match (codec, book) {
+        (CodecKind::Huffman, Some(b)) => Some(b),
+        (CodecKind::Huffman, None) => {
+            return Err(Error::InvalidParameter(
+                "Huffman packing needs a codebook".into(),
+            ))
+        }
+        _ => None,
+    };
     let n = streams.len();
-    // --- codebook flits -------------------------------------------------
+    // --- head flits: codec tag, codebook (Huffman only), count ----------
     let mut head = BitWriter::new();
-    book.write_header(&mut head);
+    head.put(codec.wire_tag() as u64, CODEC_TAG_BITS);
+    if let Some(book) = book {
+        book.write_header(&mut head);
+    }
     head.put(n as u64, 32);
     head.pad_to_multiple(format.flit_bits as usize);
     let head_bytes = head.into_bytes();
@@ -117,25 +156,38 @@ pub fn pack(streams: &FieldStreams, book: &CodeBook, format: FlitFormat) -> Resu
 
     // --- data flits (flit-atomic greedy fill) ---------------------------
     // §Perf: one pair-fused batch encoder for the whole transfer; the
-    // greedy fill itself prices values off the packed `symbol_bits` LUT.
-    let enc = BatchEncoder::new(book);
+    // greedy fill itself prices values off the packed `symbol_bits` LUT
+    // (Huffman), `bdi::block_bits` (BDI), or the constant 16 bits (Raw).
+    let enc = book.map(BatchEncoder::new);
     let mut i = 0usize;
     while i < n {
         // Greedily select how many values fit in this flit.
-        let mut used = 0u32;
-        let mut k = 0usize;
-        while i + k < n {
-            let bits = format.value_bits(book.symbol_bits(streams.exponents[i + k]));
-            if used + bits > format.payload_bits() {
-                break;
+        let k = match codec {
+            CodecKind::Huffman => {
+                let book = book.expect("checked above");
+                let mut used = 0u32;
+                let mut k = 0usize;
+                while i + k < n {
+                    let bits =
+                        format.value_bits(book.symbol_bits(streams.exponents[i + k]));
+                    if used + bits > format.payload_bits() {
+                        break;
+                    }
+                    used += bits;
+                    k += 1;
+                }
+                k
             }
-            used += bits;
-            k += 1;
-        }
+            CodecKind::Bdi => bdi_fill(&streams.exponents[i..], format),
+            CodecKind::Raw => {
+                ((format.payload_bits() / 16) as usize).min(n - i)
+            }
+        };
         if k == 0 {
             // A single value larger than the payload cannot happen with
-            // sane formats (max value = 8 esc + 8 raw + 8 = 24 … payload
-            // ≥ 32-header); guard anyway.
+            // sane formats (max Huffman value = 8 esc + 8 raw + 8 = 24,
+            // max BDI/raw value = 8 + 11 = 19 … payload ≥ 32-header);
+            // guard anyway.
             return Err(Error::MalformedFlit(format!(
                 "value at {i} does not fit an empty flit"
             )));
@@ -160,7 +212,22 @@ pub fn pack(streams: &FieldStreams, book: &CodeBook, format: FlitFormat) -> Resu
             }
             w.put(word, 7 * group.len() as u32);
         }
-        enc.encode_block(&streams.exponents[i..i + k], &mut w);
+        let exps = &streams.exponents[i..i + k];
+        match codec {
+            CodecKind::Huffman => {
+                enc.as_ref().expect("checked above").encode_block(exps, &mut w)
+            }
+            CodecKind::Bdi => bdi::encode_blocks(exps, &mut w),
+            CodecKind::Raw => {
+                for group in exps.chunks(7) {
+                    let mut word = 0u64;
+                    for &e in group {
+                        word = (word << 8) | e as u64;
+                    }
+                    w.put(word, 8 * group.len() as u32);
+                }
+            }
+        }
         w.pad_to_multiple(format.flit_bits as usize);
         let mut bytes = w.into_bytes();
         bytes.resize(flit_bytes, 0);
@@ -170,25 +237,60 @@ pub fn pack(streams: &FieldStreams, book: &CodeBook, format: FlitFormat) -> Resu
 
     Ok(LayerTransfer {
         format,
+        codec,
         flits,
         codebook_flits,
         count: n,
     })
 }
 
+/// Greedy fill for the BDI exponent section: grow `k` while
+/// `k × (sign+mantissa) + bdi::stream_bits(exps[..k])` fits the payload.
+/// Only the trailing partial block's cost changes per step, so the scan
+/// is O(k · BLOCK) worst case — flits hold at most a few hundred values.
+///
+/// `k` is additionally capped at the count-header maximum: the header is
+/// sized for ≥9 bits/value ([`FlitFormat::new`]), but BDI's amortized
+/// floor is 8 + 11/32 ≈ 8.34 bits/value, so on some flit widths (e.g.
+/// 560 bits, header max 63) a width-0 stream would otherwise overflow
+/// the header field and corrupt everything after it.
+fn bdi_fill(exps: &[u8], format: FlitFormat) -> usize {
+    let kmax = (1usize << format.header_bits) - 1;
+    let mut k = 0usize;
+    let mut full_bits = 0usize; // completed 32-element blocks
+    while k < exps.len() && k < kmax {
+        let cand = k + 1;
+        let block_start = (cand - 1) / bdi::BLOCK * bdi::BLOCK;
+        let tail_bits = bdi::block_bits(&exps[block_start..cand]);
+        let used = cand * 8 + full_bits + tail_bits;
+        if used > format.payload_bits() as usize {
+            break;
+        }
+        k = cand;
+        if cand % bdi::BLOCK == 0 {
+            full_bits += tail_bits;
+        }
+    }
+    k
+}
+
 /// Unpack a layer transfer back into field streams. Lossless inverse of
-/// [`pack`].
+/// [`pack`] / [`pack_codec`]: the codec is read from the wire tag, not
+/// trusted from the struct.
 pub fn unpack(transfer: &LayerTransfer) -> Result<FieldStreams> {
     let format = transfer.format;
-    // --- codebook ---------------------------------------------------------
+    // --- head: codec tag, codebook, count --------------------------------
     let mut head_bytes = Vec::new();
     for f in &transfer.flits[..transfer.codebook_flits] {
         head_bytes.extend_from_slice(&f.bytes);
     }
     let mut r = BitReader::new(&head_bytes);
-    let book = CodeBook::read_header(&mut r)?;
+    let codec = CodecKind::from_wire_tag(r.get(CODEC_TAG_BITS)? as u8)?;
+    let dec = match codec {
+        CodecKind::Huffman => Some(CodeBook::read_header(&mut r)?.decoder()),
+        _ => None,
+    };
     let count = r.get(32)? as usize;
-    let dec = book.decoder();
 
     // --- data flits --------------------------------------------------------
     let mut out = FieldStreams::default();
@@ -198,7 +300,7 @@ pub fn unpack(transfer: &LayerTransfer) -> Result<FieldStreams> {
         let base = out.signs.len();
         // §Perf: read the fixed-width fields in the same word-sized
         // groups `pack` wrote them (≤56 sign bits / 8×7 mantissa bits per
-        // get), then batch-decode the exponent run in one refill pass.
+        // get), then batch-decode the exponent run in one pass.
         let mut got = 0usize;
         while got < k {
             let take = (k - got).min(56);
@@ -219,7 +321,23 @@ pub fn unpack(transfer: &LayerTransfer) -> Result<FieldStreams> {
         }
         let ebase = out.exponents.len();
         out.exponents.resize(ebase + k, 0);
-        dec.decode_block_into(&mut r, &mut out.exponents[ebase..])?;
+        match &dec {
+            Some(dec) => dec.decode_block_into(&mut r, &mut out.exponents[ebase..])?,
+            None if codec == CodecKind::Bdi => {
+                bdi::decode_blocks(&mut r, &mut out.exponents[ebase..])?
+            }
+            None => {
+                let mut got = 0usize;
+                while got < k {
+                    let take = (k - got).min(7);
+                    let word = r.get(8 * take as u32)?;
+                    for j in (0..take).rev() {
+                        out.exponents[ebase + got] = ((word >> (8 * j)) & 0xff) as u8;
+                        got += 1;
+                    }
+                }
+            }
+        }
         debug_assert_eq!(out.signs.len(), base + k);
     }
     if out.len() != count {
@@ -246,6 +364,10 @@ mod tests {
             .collect()
     }
 
+    fn book_for(streams: &FieldStreams) -> CodeBook {
+        CodeBook::lexi_default(&Histogram::from_bytes(&streams.exponents)).unwrap()
+    }
+
     #[test]
     fn format_header_sizing() {
         let f = FlitFormat::new(128).unwrap();
@@ -259,21 +381,102 @@ mod tests {
     fn pack_unpack_roundtrip() {
         let vals = gaussian_values(5000, 0.02, 7);
         let streams = FieldStreams::split(&vals);
-        let hist = Histogram::from_bytes(&streams.exponents);
-        let book = CodeBook::lexi_default(&hist).unwrap();
+        let book = book_for(&streams);
         let format = FlitFormat::new(128).unwrap();
         let t = pack(&streams, &book, format).unwrap();
+        assert_eq!(t.codec, CodecKind::Huffman);
         let back = unpack(&t).unwrap();
         assert_eq!(back, streams);
         assert_eq!(back.join(), vals);
     }
 
     #[test]
+    fn pack_codec_roundtrips_every_backend() {
+        let vals = gaussian_values(4000, 0.02, 13);
+        let streams = FieldStreams::split(&vals);
+        let book = book_for(&streams);
+        let format = FlitFormat::new(128).unwrap();
+        for codec in CodecKind::ALL {
+            let t = pack_codec(&streams, codec, Some(&book), format).unwrap();
+            assert_eq!(t.codec, codec);
+            assert_eq!(unpack(&t).unwrap().join(), vals, "{codec:?}");
+        }
+        // Huffman without a book is an error, not a panic.
+        assert!(pack_codec(&streams, CodecKind::Huffman, None, format).is_err());
+    }
+
+    #[test]
+    fn codec_wire_ratios_order() {
+        // On concentrated streams: Huffman > BDI > Raw ≈ 1.0 (raw pays
+        // only the head flit, so it sits just under 1×).
+        let vals = gaussian_values(30_000, 0.02, 5);
+        let streams = FieldStreams::split(&vals);
+        let book = book_for(&streams);
+        let format = FlitFormat::new(128).unwrap();
+        let ratio = |codec| {
+            pack_codec(&streams, codec, Some(&book), format)
+                .unwrap()
+                .ratio_vs_uncompressed()
+        };
+        let h = ratio(CodecKind::Huffman);
+        let b = ratio(CodecKind::Bdi);
+        let r = ratio(CodecKind::Raw);
+        assert!(h > b, "huffman {h} vs bdi {b}");
+        assert!(b > 1.05, "bdi {b}");
+        assert!((0.95..=1.0).contains(&r), "raw {r}");
+    }
+
+    #[test]
+    fn bdi_fill_never_overflows_the_count_header() {
+        // Regression (review finding): at flit widths where the
+        // 9-bit/value header sizing meets BDI's ~8.34-bit/value floor
+        // (560 bits → header max 63, but 65 width-0 values fit the
+        // payload), the greedy fill must clamp to the header range.
+        let vals: Vec<Bf16> = (0..1000)
+            .map(|i| Bf16::from_fields((i % 2) as u8, 120, (i % 128) as u8))
+            .collect();
+        let streams = FieldStreams::split(&vals);
+        for flit_bits in [560u32, 544, 576, 1096] {
+            let format = FlitFormat::new(flit_bits).unwrap();
+            let kmax = (1u64 << format.header_bits) - 1;
+            let t = pack_codec(&streams, CodecKind::Bdi, None, format).unwrap();
+            for f in &t.flits[t.codebook_flits..] {
+                let mut r = BitReader::with_len(&f.bytes, format.flit_bits as usize);
+                assert!(r.get(format.header_bits).unwrap() <= kmax);
+            }
+            assert_eq!(unpack(&t).unwrap().join(), vals, "{flit_bits}");
+        }
+    }
+
+    #[test]
+    fn unpack_dispatches_on_wire_tag_not_struct_field() {
+        // Corrupt the struct-level codec field: unpack must still decode
+        // correctly because the tag rides in the head flit bytes.
+        let vals = gaussian_values(800, 0.02, 3);
+        let streams = FieldStreams::split(&vals);
+        let format = FlitFormat::new(128).unwrap();
+        let mut t = pack_codec(&streams, CodecKind::Bdi, None, format).unwrap();
+        t.codec = CodecKind::Huffman; // lie in the struct
+        assert_eq!(unpack(&t).unwrap().join(), vals);
+    }
+
+    #[test]
+    fn reserved_wire_tag_rejected() {
+        let vals = gaussian_values(100, 0.02, 3);
+        let streams = FieldStreams::split(&vals);
+        let format = FlitFormat::new(128).unwrap();
+        let mut t = pack_codec(&streams, CodecKind::Raw, None, format).unwrap();
+        // Tag lives in the top CODEC_TAG_BITS of the first head byte;
+        // force the reserved pattern 0b11.
+        t.flits[0].bytes[0] |= 0b1100_0000;
+        assert!(unpack(&t).is_err());
+    }
+
+    #[test]
     fn compression_beats_uncompressed_framing() {
         let vals = gaussian_values(20_000, 0.05, 11);
         let streams = FieldStreams::split(&vals);
-        let hist = Histogram::from_bytes(&streams.exponents);
-        let book = CodeBook::lexi_default(&hist).unwrap();
+        let book = book_for(&streams);
         let format = FlitFormat::new(128).unwrap();
         let t = pack(&streams, &book, format).unwrap();
         let ratio = t.ratio_vs_uncompressed();
@@ -286,27 +489,29 @@ mod tests {
     fn codebook_flits_counted() {
         let vals = gaussian_values(100, 0.02, 3);
         let streams = FieldStreams::split(&vals);
-        let hist = Histogram::from_bytes(&streams.exponents);
-        let book = CodeBook::lexi_default(&hist).unwrap();
+        let book = book_for(&streams);
         let format = FlitFormat::new(128).unwrap();
         let t = pack(&streams, &book, format).unwrap();
         assert!(t.codebook_flits >= 1);
         assert!(t.codebook_flits <= 4);
+        // Book-less codecs need only the tag + count head flit.
+        let raw = pack_codec(&streams, CodecKind::Raw, None, format).unwrap();
+        assert_eq!(raw.codebook_flits, 1);
     }
 
     #[test]
-    fn prop_roundtrip_any_bf16() {
-        check("flit roundtrip arbitrary bf16", 80, |g| {
+    fn prop_roundtrip_any_bf16_any_codec() {
+        check("flit roundtrip arbitrary bf16 × codec", 80, |g| {
             let n = g.usize(1..2000);
             let vals: Vec<Bf16> = g.vec(n, |g| Bf16(g.u16()));
             let streams = FieldStreams::split(&vals);
-            let hist = Histogram::from_bytes(&streams.exponents);
-            let book = CodeBook::lexi_default(&hist).unwrap();
+            let book = book_for(&streams);
             // 1024/2048-bit flits exceed the 56-bit sign-word batch and
             // exercise the chunked path.
             let flit_bits = [64u32, 128, 256, 1024, 2048][g.usize(0..5)];
             let format = FlitFormat::new(flit_bits).unwrap();
-            let t = pack(&streams, &book, format).unwrap();
+            let codec = CodecKind::ALL[g.usize(0..3)];
+            let t = pack_codec(&streams, codec, Some(&book), format).unwrap();
             let back = unpack(&t).unwrap();
             assert_eq!(back.join(), vals);
         });

@@ -754,7 +754,16 @@ fn compress_with_book_into(
 /// Decompress a block produced by [`compress_exponents`]. Routed through
 /// the refill-based batch decoder ([`CanonicalDecoder::decode_block_into`]).
 pub fn decompress_exponents(block: &EncodedExponents) -> Result<Vec<u8>> {
-    let mut r = BitReader::with_len(&block.bytes, block.bits);
+    decompress_bits(&block.bytes, block.bits)
+}
+
+/// Decompress from raw parts — the entry the [`ExpCodec`] registry uses
+/// so a [`CodedBlock`] needn't be re-wrapped into [`EncodedExponents`].
+///
+/// [`ExpCodec`]: crate::codec::ExpCodec
+/// [`CodedBlock`]: crate::codec::CodedBlock
+pub fn decompress_bits(bytes: &[u8], bits: usize) -> Result<Vec<u8>> {
+    let mut r = BitReader::with_len(bytes, bits.min(bytes.len() * 8));
     let book = CodeBook::read_header(&mut r)?;
     let count = r.get(32)? as usize;
     // Bound the untrusted count by the remaining payload before the

@@ -11,6 +11,10 @@
 //!   algorithm itself, independent of its hardware realization.
 //! * [`rle`], [`bdi`] — the paper's Table 2 baselines (run-length coding and
 //!   base-delta-immediate).
+//! * [`codec`] — the pluggable [`ExpCodec`](codec::ExpCodec) layer: one
+//!   trait + [`CodecKind`](codec::CodecKind) registry/wire-tag over
+//!   Huffman, BDI, and raw passthrough, so every consumer (flit, sim,
+//!   CLI) swaps codecs without naming them.
 //! * [`flit`] — flit-aligned packetization
 //!   `{header, signs, mantissas, compressed exponents}` (paper §4.1/§4.3).
 //! * [`prng`], [`proptest`] — deterministic PRNG + a minimal property-test
@@ -27,6 +31,7 @@ pub mod batch;
 pub mod bdi;
 pub mod bf16;
 pub mod bitstream;
+pub mod codec;
 pub mod error;
 pub mod flit;
 pub mod huffman;

@@ -280,6 +280,25 @@ mod tests {
     }
 
     #[test]
+    fn hw_book_stream_decodes_via_expcodec_registry() {
+        // ISSUE 3 wire-compat: a hardware-encoded transfer is just a
+        // Huffman CodedBlock — the pluggable-codec decode path must
+        // accept it byte-for-byte, with no hw-specific escape hatch.
+        use lexi_core::codec::{CodecKind, CodedBlock};
+        let data: Vec<u8> = (0..3000u32).map(|i| 115 + (i % 11) as u8).collect();
+        let hist = Histogram::from_bytes(&data);
+        let r = build_codebook(&hist, 32).unwrap();
+        let block = lexi_core::huffman::compress_with_book(&data, &r.book).unwrap();
+        let coded = CodedBlock {
+            kind: CodecKind::Huffman,
+            bytes: block.bytes,
+            bits: block.bits,
+            count: block.count,
+        };
+        assert_eq!(CodecKind::Huffman.codec().decode(&coded).unwrap(), data);
+    }
+
+    #[test]
     fn esc_all_ones_in_hw_book() {
         let data: Vec<u8> = (0..500u32).map(|i| (i % 5) as u8 + 120).collect();
         let hist = Histogram::from_bytes(&data);

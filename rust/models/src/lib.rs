@@ -22,12 +22,16 @@
 //!   identity).
 //! * [`traffic`] — per-phase logical transfers (weights, activations,
 //!   KV-cache, SSM-state) for prefill + autoregressive decode.
+//! * [`policy`] — per-traffic-class codec assignment ([`CodecPolicy`]):
+//!   which `lexi_core::codec::CodecKind` each kind travels under.
 
 pub mod activations;
 pub mod config;
 pub mod corpus;
+pub mod policy;
 pub mod traffic;
 pub mod weights;
 
 pub use config::{BlockKind, ModelConfig, ModelScale};
+pub use policy::CodecPolicy;
 pub use traffic::{Phase, TransferKind, TransferSpec};

@@ -1,0 +1,164 @@
+//! Per-traffic-class codec policy (ISSUE 3).
+//!
+//! The paper compresses every traffic class with one codec (LEXI's
+//! Huffman). With the [`ExpCodec`](lexi_core::codec::ExpCodec) layer the
+//! codec becomes a per-[`TransferKind`] knob: SSM state vectors are small
+//! and delta-local (a decent BDI fit with zero codebook startup), KV
+//! cache and weights are frequency-concentrated (Huffman's home turf),
+//! and `Raw` is the honest "don't touch it" point. `lexi-sim`'s `Engine`
+//! carries a `CodecPolicy` so Table 3 can report mixed-codec operating
+//! points; `lexi dse --what codec` sweeps them.
+
+use crate::traffic::TransferKind;
+use lexi_core::codec::CodecKind;
+
+/// Which exponent codec each traffic class uses when a compression mode
+/// compresses it at all (the mode still gates *whether* a kind is
+/// compressed; the policy picks *how*).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CodecPolicy {
+    pub weights: CodecKind,
+    pub activation: CodecKind,
+    pub kv_cache: CodecKind,
+    pub ssm_state: CodecKind,
+}
+
+impl CodecPolicy {
+    /// The same codec for every class.
+    pub fn uniform(codec: CodecKind) -> Self {
+        CodecPolicy {
+            weights: codec,
+            activation: codec,
+            kv_cache: codec,
+            ssm_state: codec,
+        }
+    }
+
+    /// The paper's operating point: LEXI Huffman everywhere.
+    pub fn lexi_default() -> Self {
+        Self::uniform(CodecKind::Huffman)
+    }
+
+    /// A mixed hybrid-LLM point: BDI for the (delta-local, startup-
+    /// sensitive) SSM state, Huffman for everything else.
+    pub fn bdi_state() -> Self {
+        CodecPolicy {
+            ssm_state: CodecKind::Bdi,
+            ..Self::lexi_default()
+        }
+    }
+
+    /// The codec this policy assigns to `kind`.
+    #[inline]
+    pub fn codec_for(&self, kind: TransferKind) -> CodecKind {
+        match kind {
+            TransferKind::Weights => self.weights,
+            TransferKind::Activation => self.activation,
+            TransferKind::KvCache => self.kv_cache,
+            TransferKind::SsmState => self.ssm_state,
+        }
+    }
+
+    /// Reassign one class.
+    pub fn set(&mut self, kind: TransferKind, codec: CodecKind) {
+        match kind {
+            TransferKind::Weights => self.weights = codec,
+            TransferKind::Activation => self.activation = codec,
+            TransferKind::KvCache => self.kv_cache = codec,
+            TransferKind::SsmState => self.ssm_state = codec,
+        }
+    }
+
+    /// Parse a CLI spec: a bare codec name applies uniformly
+    /// (`huffman`), `bdi-state` is the mixed preset, and
+    /// `kind=codec,...` pairs override the default per class
+    /// (`ssm=bdi,kv=huffman`).
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        match spec {
+            "lexi" | "default" => return Ok(Self::lexi_default()),
+            "bdi-state" => return Ok(Self::bdi_state()),
+            _ => {}
+        }
+        if let Ok(codec) = CodecKind::parse(spec) {
+            return Ok(Self::uniform(codec));
+        }
+        let mut policy = Self::lexi_default();
+        for part in spec.split(',') {
+            let (kind_s, codec_s) = part
+                .split_once('=')
+                .ok_or_else(|| format!("bad policy entry '{part}' (want kind=codec)"))?;
+            let kind = match kind_s {
+                "weights" | "w" => TransferKind::Weights,
+                "act" | "activation" => TransferKind::Activation,
+                "kv" | "kvcache" => TransferKind::KvCache,
+                "ssm" | "state" => TransferKind::SsmState,
+                other => return Err(format!("unknown traffic kind '{other}'")),
+            };
+            let codec = CodecKind::parse(codec_s).map_err(|e| e.to_string())?;
+            policy.set(kind, codec);
+        }
+        Ok(policy)
+    }
+
+    /// Compact human-readable form (`w=huffman act=huffman kv=huffman
+    /// ssm=bdi`).
+    pub fn describe(&self) -> String {
+        format!(
+            "w={} act={} kv={} ssm={}",
+            self.weights.name(),
+            self.activation.name(),
+            self.kv_cache.name(),
+            self.ssm_state.name()
+        )
+    }
+}
+
+impl Default for CodecPolicy {
+    fn default() -> Self {
+        Self::lexi_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_all_huffman() {
+        let p = CodecPolicy::default();
+        for kind in TransferKind::ALL {
+            assert_eq!(p.codec_for(kind), CodecKind::Huffman);
+        }
+    }
+
+    #[test]
+    fn bdi_state_only_touches_ssm() {
+        let p = CodecPolicy::bdi_state();
+        assert_eq!(p.codec_for(TransferKind::SsmState), CodecKind::Bdi);
+        assert_eq!(p.codec_for(TransferKind::KvCache), CodecKind::Huffman);
+        assert_eq!(p.codec_for(TransferKind::Weights), CodecKind::Huffman);
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(
+            CodecPolicy::parse("bdi").unwrap(),
+            CodecPolicy::uniform(CodecKind::Bdi)
+        );
+        assert_eq!(CodecPolicy::parse("bdi-state").unwrap(), CodecPolicy::bdi_state());
+        let p = CodecPolicy::parse("ssm=bdi,kv=raw").unwrap();
+        assert_eq!(p.codec_for(TransferKind::SsmState), CodecKind::Bdi);
+        assert_eq!(p.codec_for(TransferKind::KvCache), CodecKind::Raw);
+        assert_eq!(p.codec_for(TransferKind::Activation), CodecKind::Huffman);
+        assert!(CodecPolicy::parse("zstd").is_err());
+        assert!(CodecPolicy::parse("kv:bdi").is_err());
+    }
+
+    #[test]
+    fn set_and_describe() {
+        let mut p = CodecPolicy::lexi_default();
+        p.set(TransferKind::Weights, CodecKind::Raw);
+        assert_eq!(p.codec_for(TransferKind::Weights), CodecKind::Raw);
+        assert_eq!(p.describe(), "w=raw act=huffman kv=huffman ssm=huffman");
+    }
+}

@@ -23,6 +23,16 @@ pub enum TransferKind {
     SsmState,
 }
 
+impl TransferKind {
+    /// Every traffic class, Table 3 reporting order.
+    pub const ALL: [TransferKind; 4] = [
+        TransferKind::Weights,
+        TransferKind::Activation,
+        TransferKind::KvCache,
+        TransferKind::SsmState,
+    ];
+}
+
 /// Inference phase.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Phase {

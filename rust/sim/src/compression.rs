@@ -7,23 +7,30 @@
 //! (synthetic at paper scale, real tensors at tiny scale via the runtime),
 //! not assumed.
 //!
-//! The measurement path routes through the §Perf batch engine
-//! (`lexi_core::batch`) via `compress_exponents` / `flit::pack`; the
-//! batch rewire is bit-identical to the scalar oracle, so every ratio in
-//! this table is unchanged — pinned by
-//! `batch_rewire_preserves_compressed_sizes` below.
+//! **Codec-parametric (ISSUE 3):** every measurement routes through the
+//! pluggable [`ExpCodec`] layer (`lexi_core::codec`) — no direct
+//! `huffman::compress_exponents` call remains here. [`CrTable`] carries
+//! ratios per `(codec, kind)` and decoder makespans per
+//! `(codec, kind, lanes)`, so `Engine` can price transfers under any
+//! [`CodecPolicy`](lexi_models::CodecPolicy). The Huffman column is
+//! bit-identical to the pre-trait path (the trait wraps the same batch
+//! engine; pinned by `batch_rewire_preserves_compressed_sizes` and
+//! `huffman_via_trait_matches_direct_path` below).
 //!
-//! Beyond ratios, [`CrTable`] also carries the **decoder makespan
-//! model** (ISSUE 2): `DecoderUnit::decode_lane_stream` is run over a
-//! representative stream per kind at each [`CACHED_LANES`] count, and
-//! the slowest-lane makespan per symbol is cached for
-//! `Engine::transfer_ns` to couple transfer latency to the real decoder
-//! instead of analytic per-kind ratios only.
+//! Decoder cost models per codec:
+//! * `Huffman` — the measured cycle-accurate multi-lane LUT unit
+//!   (`lexi-hw::DecoderUnit::decode_lane_stream`, slowest-lane makespan);
+//! * `Bdi` — a simple per-block model (`bdi::block_decode_cycles`: tag +
+//!   base fetches plus one cycle per delta), blocks round-robined over
+//!   the lanes;
+//! * `Raw` — zero (passthrough).
 
 use lexi_core::batch::LaneCodec;
+use lexi_core::bdi;
 use lexi_core::bf16::FieldStreams;
+use lexi_core::codec::CodecKind;
 use lexi_core::flit::{self, FlitFormat};
-use lexi_core::huffman::{self, CodeBook};
+use lexi_core::huffman::CodeBook;
 use lexi_core::stats::Histogram;
 use lexi_core::Bf16;
 use lexi_hw::decoder::{DecoderConfig, DecoderUnit};
@@ -59,29 +66,31 @@ impl CompressionMode {
     }
 }
 
-/// Measured ratios for one traffic class.
+/// Measured ratios for one traffic class under one codec.
 #[derive(Clone, Copy, Debug)]
 pub struct KindRatios {
     /// Exponent-stream CR (8 bits → 8/cr), header included — Table 2's
     /// metric.
     pub exponent_cr: f64,
     /// Whole-transfer wire ratio including sign/mantissa passthrough and
-    /// flit framing: uncompressed flits / LEXI flits.
+    /// flit framing: uncompressed flits / coded flits.
     pub wire_ratio: f64,
 }
 
-/// Per-kind measured ratios for one model, plus the measured decoder
-/// makespan model the engine's transfer latency couples to (ISSUE 2).
+/// Per-`(codec, kind)` measured ratios for one model, plus the measured
+/// decoder makespan model the engine's transfer latency couples to
+/// (ISSUE 2, now keyed by codec too — ISSUE 3).
 #[derive(Clone, Debug)]
 pub struct CrTable {
-    pub ratios: HashMap<TransferKind, KindRatios>,
-    /// Measured `DecoderUnit::decode_lane_stream` makespans, cached per
-    /// `(kind, lanes)`: effective decoder **cycles per transferred
-    /// symbol** with `lanes` parallel LUT decoders (slowest-lane makespan
-    /// ÷ total symbols). Empty for tables built from runtime profiles
-    /// ([`CrTable::from_ratios`]); lookups then fall back to the
-    /// paper-nominal latency.
-    pub decode_cycles: HashMap<(TransferKind, usize), f64>,
+    pub ratios: HashMap<(CodecKind, TransferKind), KindRatios>,
+    /// Decoder **cycles per transferred symbol** with `lanes` parallel
+    /// decoders, per `(codec, kind, lanes)`. Huffman entries are measured
+    /// on the cycle-accurate LUT unit (slowest-lane makespan ÷ symbols),
+    /// BDI entries come from the per-block cost model, Raw entries are
+    /// zero. Empty for tables built from runtime profiles
+    /// ([`CrTable::from_ratios`]); lookups then fall back to nominal
+    /// per-codec latencies.
+    pub decode_cycles: HashMap<(CodecKind, TransferKind, usize), f64>,
 }
 
 /// Sample size per (kind, layer) for ratio measurement. The streams are
@@ -96,29 +105,28 @@ const DECODE_SAMPLE: usize = 8 * 1024;
 /// counts scale inverse-linearly from the nearest measured point.
 pub const CACHED_LANES: [usize; 5] = [1, 2, 4, 8, 16];
 
-/// Fig 6's 4-stage average (≈1.16 cycles/symbol): the fallback when a
-/// table carries no makespan measurements.
+/// Fig 6's 4-stage average (≈1.16 cycles/symbol): the Huffman fallback
+/// when a table carries no makespan measurements.
 const NOMINAL_CYCLES_PER_SYMBOL: f64 = 1.16;
 
+/// BDI fallback: a full 32-element delta block costs 2 + 32 cycles under
+/// the per-block model → 34/32 ≈ 1.0625 cycles/symbol.
+const BDI_NOMINAL_CYCLES_PER_SYMBOL: f64 = 1.0625;
+
 impl CrTable {
-    /// Measure ratios for `cfg` by running the codec over synthetic
-    /// streams of each kind across several layers, and the decoder
-    /// makespan model by running the cycle-accurate multi-lane LUT unit
-    /// (`lexi-hw`) over a representative stream per kind at each
-    /// [`CACHED_LANES`] count.
+    /// Measure ratios for `cfg` by running every registered codec over
+    /// synthetic streams of each kind across several layers, and the
+    /// decoder makespan model per codec: the cycle-accurate multi-lane
+    /// LUT unit (`lexi-hw`) for Huffman, the per-block cost model for
+    /// BDI, zero for Raw — each at every [`CACHED_LANES`] count.
     pub fn measure(cfg: &ModelConfig, seed: u64) -> Self {
         let mut ratios = HashMap::new();
         let mut decode_cycles = HashMap::new();
         let layers: Vec<usize> = pick_layers(cfg);
         let unit = DecoderUnit::new(DecoderConfig::paper_default()).expect("paper config valid");
-        for kind in [
-            TransferKind::Weights,
-            TransferKind::Activation,
-            TransferKind::KvCache,
-            TransferKind::SsmState,
-        ] {
-            let mut exp_cr = 0.0;
-            let mut wire = 0.0;
+        let format = FlitFormat::new(128).expect("valid format");
+        for kind in TransferKind::ALL {
+            let mut sums: HashMap<CodecKind, (f64, f64)> = HashMap::new();
             let mut mid_exps: Vec<u8> = Vec::new();
             for (i, &layer) in layers.iter().enumerate() {
                 let values: Vec<Bf16> = match kind {
@@ -136,12 +144,25 @@ impl CrTable {
                     }
                     _ => synth_values(cfg, layer, kind, seed),
                 };
-                let (e, w) = measure_streams(&values);
-                exp_cr += e;
-                wire += w;
+                let streams = FieldStreams::split(&values);
+                let book = CodeBook::lexi_default(&Histogram::from_bytes(&streams.exponents))
+                    .expect("non-empty");
+                for codec in CodecKind::ALL {
+                    let exp_cr = codec
+                        .codec()
+                        .encode(&streams.exponents)
+                        .expect("non-empty")
+                        .ratio();
+                    let wire = flit::pack_codec(&streams, codec, Some(&book), format)
+                        .expect("packable")
+                        .ratio_vs_uncompressed();
+                    let e = sums.entry(codec).or_insert((0.0, 0.0));
+                    e.0 += exp_cr;
+                    e.1 += wire;
+                }
                 // The middle layer doubles as the makespan-model sample.
                 if i == layers.len() / 2 {
-                    mid_exps = FieldStreams::split(&values)
+                    mid_exps = streams
                         .exponents
                         .into_iter()
                         .take(DECODE_SAMPLE)
@@ -149,17 +170,21 @@ impl CrTable {
                 }
             }
             let n = layers.len() as f64;
-            ratios.insert(
-                kind,
-                KindRatios {
-                    exponent_cr: exp_cr / n,
-                    wire_ratio: wire / n,
-                },
-            );
+            for codec in CodecKind::ALL {
+                let (exp_cr, wire) = sums[&codec];
+                ratios.insert(
+                    (codec, kind),
+                    KindRatios {
+                        exponent_cr: exp_cr / n,
+                        wire_ratio: wire / n,
+                    },
+                );
+            }
             // Decoder makespan per symbol at each cached lane count.
             if !mid_exps.is_empty() {
                 let hist = Histogram::from_bytes(&mid_exps);
                 let book = CodeBook::lexi_default(&hist).expect("non-empty");
+                let bdi_costs = bdi::block_decode_cycles(&mid_exps);
                 for lanes in CACHED_LANES {
                     let stream = LaneCodec::new(lanes)
                         .expect("cached lane count valid")
@@ -168,9 +193,14 @@ impl CrTable {
                         .decode_lane_stream(&stream, &book)
                         .expect("measured stream decodes");
                     decode_cycles.insert(
-                        (kind, lanes),
+                        (CodecKind::Huffman, kind, lanes),
                         rep.makespan as f64 / mid_exps.len() as f64,
                     );
+                    decode_cycles.insert(
+                        (CodecKind::Bdi, kind, lanes),
+                        bdi_makespan_per_symbol(&bdi_costs, mid_exps.len(), lanes),
+                    );
+                    decode_cycles.insert((CodecKind::Raw, kind, lanes), 0.0);
                 }
             }
         }
@@ -180,42 +210,112 @@ impl CrTable {
         }
     }
 
-    /// A table from externally measured ratios (e.g. the runtime
-    /// coordinator's tensor profiles) with no decoder-makespan cache;
-    /// [`decode_cycles_per_symbol`] falls back to the paper-nominal
-    /// latency.
+    /// A table from externally measured **Huffman** ratios (e.g. the
+    /// runtime coordinator's tensor profiles) with no decoder-makespan
+    /// cache. Raw entries are synthesized at 1.0× (passthrough is exact);
+    /// any other unmeasured codec reads 1.0× on lookup (no measured
+    /// benefit is claimed for a codec nobody ran — see
+    /// [`wire_ratio_for`]), and [`decode_cycles_per_symbol_for`] falls
+    /// back to the per-codec nominal latencies.
     ///
-    /// [`decode_cycles_per_symbol`]: CrTable::decode_cycles_per_symbol
-    pub fn from_ratios(ratios: HashMap<TransferKind, KindRatios>) -> Self {
+    /// [`wire_ratio_for`]: CrTable::wire_ratio_for
+    /// [`decode_cycles_per_symbol_for`]: CrTable::decode_cycles_per_symbol_for
+    pub fn from_ratios(huffman: HashMap<TransferKind, KindRatios>) -> Self {
+        let mut ratios = HashMap::new();
+        for (kind, r) in huffman {
+            ratios.insert((CodecKind::Huffman, kind), r);
+            ratios.insert(
+                (CodecKind::Raw, kind),
+                KindRatios {
+                    exponent_cr: 1.0,
+                    wire_ratio: 1.0,
+                },
+            );
+        }
         CrTable {
             ratios,
             decode_cycles: HashMap::new(),
         }
     }
 
-    /// Wire bytes for a transfer of `bytes` of `kind` under `mode`.
+    /// Wire bytes for a transfer of `bytes` of `kind` under `mode`, with
+    /// the paper's (Huffman) codec.
     pub fn wire_bytes(&self, bytes: u64, kind: TransferKind, mode: CompressionMode) -> u64 {
+        self.wire_bytes_for(CodecKind::Huffman, bytes, kind, mode)
+    }
+
+    /// Wire bytes under an explicit codec (what [`Engine`] calls per its
+    /// [`CodecPolicy`](lexi_models::CodecPolicy)).
+    ///
+    /// [`Engine`]: crate::engine::Engine
+    pub fn wire_bytes_for(
+        &self,
+        codec: CodecKind,
+        bytes: u64,
+        kind: TransferKind,
+        mode: CompressionMode,
+    ) -> u64 {
         if !mode.compresses(kind) {
             return bytes;
         }
-        let r = self.ratios[&kind].wire_ratio;
+        let r = self.wire_ratio_for(codec, kind);
         ((bytes as f64 / r).ceil() as u64).max(1)
     }
 
-    /// Exponent CR of a kind (Table 2 reporting).
-    pub fn exponent_cr(&self, kind: TransferKind) -> f64 {
-        self.ratios[&kind].exponent_cr
+    /// Measured wire ratio of `(codec, kind)`; an unmeasured pair reads
+    /// 1.0 (no compression claimed). Borrowing another codec's measured
+    /// ratio here would be dishonest: a BDI policy on a ratio-only table
+    /// would inherit Huffman's *better* wire ratio while being charged
+    /// BDI's *cheaper* decode model, and read as strictly superior —
+    /// the opposite of the measured ordering.
+    pub fn wire_ratio_for(&self, codec: CodecKind, kind: TransferKind) -> f64 {
+        self.ratios
+            .get(&(codec, kind))
+            .map(|r| r.wire_ratio)
+            .unwrap_or(1.0)
     }
 
-    /// Measured decoder cycles per transferred symbol with `lanes`
-    /// parallel decoders: an exact cache hit when `lanes` is in
+    /// Exponent CR of a kind under the paper's codec (Table 2 reporting).
+    pub fn exponent_cr(&self, kind: TransferKind) -> f64 {
+        self.exponent_cr_for(CodecKind::Huffman, kind)
+    }
+
+    /// Exponent CR of `(codec, kind)` (same unmeasured-reads-1.0 rule
+    /// as [`wire_ratio_for`]).
+    ///
+    /// [`wire_ratio_for`]: CrTable::wire_ratio_for
+    pub fn exponent_cr_for(&self, codec: CodecKind, kind: TransferKind) -> f64 {
+        self.ratios
+            .get(&(codec, kind))
+            .map(|r| r.exponent_cr)
+            .unwrap_or(1.0)
+    }
+
+    /// Paper-codec decode occupancy (compat shim over
+    /// [`decode_cycles_per_symbol_for`]).
+    ///
+    /// [`decode_cycles_per_symbol_for`]: CrTable::decode_cycles_per_symbol_for
+    pub fn decode_cycles_per_symbol(&self, kind: TransferKind, lanes: usize) -> f64 {
+        self.decode_cycles_per_symbol_for(CodecKind::Huffman, kind, lanes)
+    }
+
+    /// Decoder cycles per transferred symbol for `(codec, kind)` with
+    /// `lanes` parallel decoders: an exact cache hit when `lanes` is in
     /// [`CACHED_LANES`], otherwise the nearest measured point scaled
     /// inverse-linearly (lane throughput is ~linear until the link
-    /// saturates), or the paper-nominal Fig 6 latency when no
-    /// measurements exist at all.
-    pub fn decode_cycles_per_symbol(&self, kind: TransferKind, lanes: usize) -> f64 {
+    /// saturates), or the per-codec nominal latency when no measurements
+    /// exist at all. Raw always decodes for free.
+    pub fn decode_cycles_per_symbol_for(
+        &self,
+        codec: CodecKind,
+        kind: TransferKind,
+        lanes: usize,
+    ) -> f64 {
+        if codec == CodecKind::Raw {
+            return 0.0;
+        }
         let lanes = lanes.max(1);
-        if let Some(&c) = self.decode_cycles.get(&(kind, lanes)) {
+        if let Some(&c) = self.decode_cycles.get(&(codec, kind, lanes)) {
             return c;
         }
         // Walk CACHED_LANES in its fixed order (not the HashMap, whose
@@ -223,7 +323,7 @@ impl CrTable {
         // nearest-point selection, ties resolved to the smaller count.
         let mut best: Option<(usize, f64)> = None;
         for l in CACHED_LANES {
-            let Some(&c) = self.decode_cycles.get(&(kind, l)) else {
+            let Some(&c) = self.decode_cycles.get(&(codec, kind, l)) else {
                 continue;
             };
             let closer = match best {
@@ -238,9 +338,30 @@ impl CrTable {
         }
         match best {
             Some((l, c)) => c * l as f64 / lanes as f64,
-            None => NOMINAL_CYCLES_PER_SYMBOL / lanes as f64,
+            None => {
+                let nominal = match codec {
+                    CodecKind::Bdi => BDI_NOMINAL_CYCLES_PER_SYMBOL,
+                    _ => NOMINAL_CYCLES_PER_SYMBOL,
+                };
+                nominal / lanes as f64
+            }
         }
     }
+}
+
+/// Slowest-lane BDI decode makespan per symbol: blocks dealt round-robin
+/// to `lanes` sequential block decoders, each block priced by the simple
+/// tag/base/delta cost model.
+fn bdi_makespan_per_symbol(block_costs: &[u64], symbols: usize, lanes: usize) -> f64 {
+    if symbols == 0 || block_costs.is_empty() {
+        return 0.0;
+    }
+    let lanes = lanes.max(1);
+    let mut lane_cycles = vec![0u64; lanes];
+    for (i, &c) in block_costs.iter().enumerate() {
+        lane_cycles[i % lanes] += c;
+    }
+    *lane_cycles.iter().max().expect("non-empty") as f64 / symbols as f64
 }
 
 /// Representative layers: first, middle, last.
@@ -267,22 +388,10 @@ fn synth_values(cfg: &ModelConfig, layer: usize, kind: TransferKind, seed: u64) 
         .collect()
 }
 
-/// (exponent CR, wire ratio) for one value sample.
-fn measure_streams(values: &[Bf16]) -> (f64, f64) {
-    let streams = FieldStreams::split(values);
-    let block = huffman::compress_exponents(&streams.exponents).expect("non-empty");
-    let exp_cr = block.ratio();
-
-    let hist = Histogram::from_bytes(&streams.exponents);
-    let book = CodeBook::lexi_default(&hist).expect("non-empty");
-    let format = FlitFormat::new(128).expect("valid format");
-    let transfer = flit::pack(&streams, &book, format).expect("packable");
-    (exp_cr, transfer.ratio_vs_uncompressed())
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use lexi_core::huffman;
     use lexi_models::ModelScale;
 
     #[test]
@@ -298,15 +407,17 @@ mod tests {
     #[test]
     fn wire_ratio_between_1_and_2() {
         // Exponent-only coding of 16-bit values caps the wire ratio at
-        // 16/8 = 2×; framing keeps it below that.
+        // 16/8 = 2×; framing keeps it below that. BDI sits between Raw
+        // and Huffman, and Raw pays only the head flit (just under 1×).
         let cfg = ModelConfig::qwen(ModelScale::Paper);
         let t = CrTable::measure(&cfg, 42);
-        for (kind, r) in &t.ratios {
-            assert!(
-                (1.05..2.0).contains(&r.wire_ratio),
-                "{kind:?}: wire {}",
-                r.wire_ratio
-            );
+        for kind in TransferKind::ALL {
+            let h = t.wire_ratio_for(CodecKind::Huffman, kind);
+            let b = t.wire_ratio_for(CodecKind::Bdi, kind);
+            let r = t.wire_ratio_for(CodecKind::Raw, kind);
+            assert!((1.05..2.0).contains(&h), "{kind:?}: huffman wire {h}");
+            assert!(b > 1.0 && b < h, "{kind:?}: bdi wire {b} vs huffman {h}");
+            assert!((0.9..=1.0).contains(&r), "{kind:?}: raw wire {r}");
         }
     }
 
@@ -325,6 +436,11 @@ mod tests {
         );
         assert!(t.wire_bytes(b, TransferKind::KvCache, CompressionMode::Lexi) < b);
         assert!(t.wire_bytes(b, TransferKind::Weights, CompressionMode::WeightsOnly) < b);
+        // A raw policy never shrinks the transfer, whatever the mode.
+        assert!(
+            t.wire_bytes_for(CodecKind::Raw, b, TransferKind::KvCache, CompressionMode::Lexi)
+                >= b
+        );
     }
 
     #[test]
@@ -352,6 +468,20 @@ mod tests {
     }
 
     #[test]
+    fn huffman_via_trait_matches_direct_path() {
+        // ISSUE 3 acceptance: the trait route the CrTable now measures
+        // through is byte-identical to the direct compress_exponents
+        // call it replaced.
+        let cfg = ModelConfig::jamba(ModelScale::Paper);
+        let exps = activations::sample_exponents(&cfg, 0, TransferKind::Activation, 9, 40_000);
+        let direct = huffman::compress_exponents(&exps).unwrap();
+        let via = CodecKind::Huffman.codec().encode(&exps).unwrap();
+        assert_eq!(via.bytes, direct.bytes);
+        assert_eq!(via.bits, direct.bits);
+        assert_eq!(via.ratio(), direct.ratio());
+    }
+
+    #[test]
     fn measurement_is_deterministic() {
         let cfg = ModelConfig::jamba(ModelScale::Paper);
         let a = CrTable::measure(&cfg, 7);
@@ -364,23 +494,24 @@ mod tests {
             a.decode_cycles_per_symbol(TransferKind::Activation, 8),
             b.decode_cycles_per_symbol(TransferKind::Activation, 8)
         );
+        assert_eq!(
+            a.decode_cycles_per_symbol_for(CodecKind::Bdi, TransferKind::SsmState, 4),
+            b.decode_cycles_per_symbol_for(CodecKind::Bdi, TransferKind::SsmState, 4)
+        );
     }
 
     #[test]
-    fn decode_cache_covers_all_kinds_and_scales_with_lanes() {
+    fn decode_cache_covers_all_codecs_kinds_and_scales_with_lanes() {
         let cfg = ModelConfig::qwen(ModelScale::Paper);
         let t = CrTable::measure(&cfg, 42);
-        for kind in [
-            TransferKind::Weights,
-            TransferKind::Activation,
-            TransferKind::KvCache,
-            TransferKind::SsmState,
-        ] {
-            for lanes in CACHED_LANES {
-                assert!(
-                    t.decode_cycles.contains_key(&(kind, lanes)),
-                    "{kind:?} lanes {lanes} missing from cache"
-                );
+        for kind in TransferKind::ALL {
+            for codec in CodecKind::ALL {
+                for lanes in CACHED_LANES {
+                    assert!(
+                        t.decode_cycles.contains_key(&(codec, kind, lanes)),
+                        "{codec:?} {kind:?} lanes {lanes} missing from cache"
+                    );
+                }
             }
             // Per-symbol occupancy shrinks ~linearly as lanes grow
             // (round-robin keeps lanes balanced on i.i.d. streams).
@@ -394,17 +525,57 @@ mod tests {
             // Uncached lane counts interpolate from the nearest point.
             let c12 = t.decode_cycles_per_symbol(kind, 12);
             assert!(c12 > 0.0 && c12 < c8);
+            // BDI: positive, near the per-block model's ~1.06
+            // cycles/symbol at one lane, and lane-scaling.
+            let b1 = t.decode_cycles_per_symbol_for(CodecKind::Bdi, kind, 1);
+            let b8 = t.decode_cycles_per_symbol_for(CodecKind::Bdi, kind, 8);
+            assert!((1.0..1.3).contains(&b1), "{kind:?}: bdi 1-lane {b1}");
+            assert!(b8 < b1 / 4.0, "{kind:?}: bdi 8-lane {b8} vs {b1}");
+            // Raw decodes for free at every lane count.
+            assert_eq!(t.decode_cycles_per_symbol_for(CodecKind::Raw, kind, 1), 0.0);
+            assert_eq!(t.decode_cycles_per_symbol_for(CodecKind::Raw, kind, 16), 0.0);
         }
     }
 
     #[test]
-    fn ratio_only_tables_fall_back_to_nominal_latency() {
+    fn ratio_only_tables_fall_back_per_codec() {
         let cfg = ModelConfig::qwen(ModelScale::Paper);
         let measured = CrTable::measure(&cfg, 42);
-        let bare = CrTable::from_ratios(measured.ratios.clone());
+        let mut huffman_ratios = HashMap::new();
+        for kind in TransferKind::ALL {
+            huffman_ratios.insert(
+                kind,
+                measured.ratios[&(CodecKind::Huffman, kind)],
+            );
+        }
+        let bare = CrTable::from_ratios(huffman_ratios);
         assert!(bare.decode_cycles.is_empty());
-        let c = bare.decode_cycles_per_symbol(TransferKind::Activation, 8);
         // Nominal 1.16 cycles split across 8 lanes.
+        let c = bare.decode_cycles_per_symbol(TransferKind::Activation, 8);
         assert!((c - 1.16 / 8.0).abs() < 1e-9, "fallback {c}");
+        // BDI falls back to its per-block nominal, Raw to zero.
+        let b = bare.decode_cycles_per_symbol_for(CodecKind::Bdi, TransferKind::Activation, 8);
+        assert!((b - 1.0625 / 8.0).abs() < 1e-9, "bdi fallback {b}");
+        assert_eq!(
+            bare.decode_cycles_per_symbol_for(CodecKind::Raw, TransferKind::Activation, 8),
+            0.0
+        );
+        // Ratio lookups: Raw synthesized at 1.0; unmeasured BDI also
+        // reads 1.0 — it must not inherit Huffman's better wire ratio
+        // while being charged BDI's cheaper decode model.
+        assert_eq!(bare.wire_ratio_for(CodecKind::Raw, TransferKind::KvCache), 1.0);
+        assert_eq!(bare.wire_ratio_for(CodecKind::Bdi, TransferKind::KvCache), 1.0);
+        assert!(bare.wire_ratio_for(CodecKind::Huffman, TransferKind::KvCache) > 1.0);
+    }
+
+    #[test]
+    fn bdi_makespan_model_balances_lanes() {
+        // 8 equal blocks over 4 lanes → 2 blocks per lane exactly.
+        let costs = vec![34u64; 8];
+        let per1 = bdi_makespan_per_symbol(&costs, 256, 1);
+        let per4 = bdi_makespan_per_symbol(&costs, 256, 4);
+        assert!((per1 - 34.0 * 8.0 / 256.0).abs() < 1e-12);
+        assert!((per4 - 34.0 * 2.0 / 256.0).abs() < 1e-12);
+        assert_eq!(bdi_makespan_per_symbol(&[], 0, 4), 0.0);
     }
 }

@@ -15,21 +15,29 @@
 //! **Makespan coupling (ISSUE 2):** compressed transfers additionally
 //! consult the *measured* multi-lane decoder model. `CrTable::measure`
 //! runs `lexi-hw`'s `DecoderUnit::decode_lane_stream` over representative
-//! streams and caches the slowest-lane makespan per `(kind, lanes)`;
-//! [`Engine::transfer_ns`] converts that into a decode time for the
-//! transfer's symbol count at [`Engine::decoder_lanes`] /
+//! streams and caches the slowest-lane makespan per `(codec, kind,
+//! lanes)`; [`Engine::transfer_ns`] converts that into a decode time for
+//! the transfer's symbol count at [`Engine::decoder_lanes`] /
 //! [`Engine::codec_ghz`]. Decoding is pipelined behind serialization
 //! (symbols stream through the LUT lanes as flits arrive), so the
 //! transfer only pays the *excess* of the decode makespan over the wire
 //! time — zero when the lanes sustain line rate (the paper's operating
 //! point), positive when an under-provisioned decoder throttles the link.
+//!
+//! **Codec policy (ISSUE 3):** [`Engine::codec_policy`] picks *which*
+//! `ExpCodec` each traffic kind travels under when a mode compresses it
+//! at all — wire bytes, decode makespan, and the codebook startup all
+//! follow the policy's codec (only Huffman has a codebook pipeline; Raw
+//! decodes for free). The default all-Huffman policy reproduces the
+//! paper's numbers exactly.
 
 use crate::compression::{CompressionMode, CrTable};
 use crate::compute::ComputeModel;
 use crate::simba::SimbaSystem;
+use lexi_core::codec::CodecKind;
 use lexi_models::corpus::Corpus;
 use lexi_models::traffic::{self, Phase, TransferKind, TransferSpec};
-use lexi_models::ModelConfig;
+use lexi_models::{CodecPolicy, ModelConfig};
 use std::collections::HashMap;
 
 /// Engine parameters.
@@ -44,6 +52,8 @@ pub struct Engine {
     /// One-time codebook-pipeline latency charged per runtime-compressed
     /// transfer (our measured 81-cycle worst case + sampling window at
     /// 1 GHz codec clock ≈ 170 ns; negligible against ms-scale layers).
+    /// Only the Huffman codec has a codebook pipeline; BDI and Raw
+    /// transfers never pay it.
     pub codec_startup_ns: f64,
     /// Parallel LUT decoder lanes at each receiver. The paper's ten lanes
     /// saturate the link on stage-1-resident streams; sixteen keeps the
@@ -53,6 +63,10 @@ pub struct Engine {
     pub decoder_lanes: usize,
     /// Codec clock, GHz (Fig 6 latencies assume 1 cycle ≈ 1 ns).
     pub codec_ghz: f64,
+    /// Which codec each traffic class travels under when compressed
+    /// (ISSUE 3). The paper point is Huffman everywhere; swapping e.g.
+    /// SSM state to BDI turns `run_modes` into a mixed-codec Table 3.
+    pub codec_policy: CodecPolicy,
 }
 
 impl Engine {
@@ -66,6 +80,15 @@ impl Engine {
             codec_startup_ns: 170.0,
             decoder_lanes: 16,
             codec_ghz: 1.0,
+            codec_policy: CodecPolicy::lexi_default(),
+        }
+    }
+
+    /// The paper engine under a different per-kind codec policy.
+    pub fn with_policy(policy: CodecPolicy) -> Self {
+        Engine {
+            codec_policy: policy,
+            ..Self::paper_default()
         }
     }
 
@@ -75,18 +98,23 @@ impl Engine {
     }
 
     /// Receiver-side decode makespan for a compressed transfer of `kind`,
-    /// from the measured `(kind, lanes)` cache: symbols × cycles-per-
-    /// symbol ÷ codec clock.
+    /// from the measured `(codec, kind, lanes)` cache: symbols ×
+    /// cycles-per-symbol ÷ codec clock. The codec is the one this
+    /// engine's [`CodecPolicy`] assigns to the kind.
     pub fn decode_makespan_ns(&self, t: &TransferSpec, crs: &CrTable) -> f64 {
         // One BF16 value (2 bytes) → one exponent symbol through the LUTs.
         let symbols = (t.bytes / 2).max(1);
-        symbols as f64 * crs.decode_cycles_per_symbol(t.kind, self.decoder_lanes)
+        let codec = self.codec_policy.codec_for(t.kind);
+        symbols as f64
+            * crs.decode_cycles_per_symbol_for(codec, t.kind, self.decoder_lanes)
             / self.codec_ghz
     }
 
-    /// Latency of one transfer under `mode`.
+    /// Latency of one transfer under `mode`, with the codec chosen per
+    /// kind by [`Engine::codec_policy`].
     pub fn transfer_ns(&self, t: &TransferSpec, mode: CompressionMode, crs: &CrTable) -> f64 {
-        let wire_bytes = crs.wire_bytes(t.bytes, t.kind, mode);
+        let codec = self.codec_policy.codec_for(t.kind);
+        let wire_bytes = crs.wire_bytes_for(codec, t.bytes, t.kind, mode);
         let bits = wire_bytes * 8;
         let flits = bits.div_ceil(self.flit_bits as u64).max(1);
         let hops = self.system.hops(t.src, t.dst, t.layer) as u64;
@@ -101,8 +129,8 @@ impl Engine {
             }
             // Runtime compression pays the codebook startup; weights are
             // compressed offline (decompression LUTs stream in with the
-            // data).
-            if t.kind != TransferKind::Weights {
+            // data), and only Huffman has a codebook pipeline at all.
+            if t.kind != TransferKind::Weights && codec == CodecKind::Huffman {
                 ns += self.codec_startup_ns;
             }
         }
@@ -182,7 +210,8 @@ impl Engine {
         // Per-directed-link occupancy of one request's step (XY routes).
         let mut link_bits: HashMap<(u16, u16), u64> = HashMap::new();
         for t in &transfers {
-            let wire_bits = crs.wire_bytes(t.bytes, t.kind, mode) * 8;
+            let codec = self.codec_policy.codec_for(t.kind);
+            let wire_bits = crs.wire_bytes_for(codec, t.bytes, t.kind, mode) * 8;
             let mut at = self.system.resolve(t.src, t.layer);
             let dst = self.system.resolve(t.dst, t.layer);
             while at != dst {
@@ -411,6 +440,60 @@ mod tests {
                 "{:?}: coupled {coupled:.0} ns vs wire {wire_only:.0} ns",
                 t.kind
             );
+        }
+    }
+
+    #[test]
+    fn raw_policy_neutralizes_compression() {
+        // A uniform Raw policy under the Lexi mode must land within a
+        // couple of percent of the uncompressed run (raw packing pays a
+        // head flit per transfer, so it can only be slightly *worse*),
+        // and must never pay the Huffman codebook startup.
+        let cfg = ModelConfig::qwen(ModelScale::Paper);
+        let (eng, crs) = setup(&cfg);
+        let raw = Engine::with_policy(CodecPolicy::uniform(CodecKind::Raw));
+        let corpus = Corpus::wikitext2();
+        let unc = eng.run(&cfg, &corpus, CompressionMode::Uncompressed, &crs);
+        let r = raw.run(&cfg, &corpus, CompressionMode::Lexi, &crs);
+        let rel = r.comm_ns / unc.comm_ns;
+        assert!((0.99..1.05).contains(&rel), "raw/unc comm ratio {rel:.4}");
+    }
+
+    #[test]
+    fn codec_policies_order_like_their_wire_ratios() {
+        // Mixed-codec Table 3 (ISSUE 3): all-Huffman < bdi-state hybrid
+        // ≤ all-BDI < all-Raw ≈ uncompressed, on a hybrid model with SSM
+        // traffic.
+        let cfg = ModelConfig::jamba(ModelScale::Paper);
+        let (_, crs) = setup(&cfg);
+        let corpus = Corpus::wikitext2();
+        let comm = |policy: CodecPolicy| {
+            Engine::with_policy(policy)
+                .run(&cfg, &corpus, CompressionMode::Lexi, &crs)
+                .comm_ns
+        };
+        let huff = comm(CodecPolicy::lexi_default());
+        let hybrid = comm(CodecPolicy::bdi_state());
+        let bdi = comm(CodecPolicy::uniform(CodecKind::Bdi));
+        let raw = comm(CodecPolicy::uniform(CodecKind::Raw));
+        assert!(huff < hybrid, "huffman {huff:.0} vs hybrid {hybrid:.0}");
+        assert!(hybrid <= bdi, "hybrid {hybrid:.0} vs bdi {bdi:.0}");
+        assert!(bdi < raw, "bdi {bdi:.0} vs raw {raw:.0}");
+    }
+
+    #[test]
+    fn default_policy_is_the_paper_point() {
+        // The codec-policy refactor must not move the paper operating
+        // point: an explicitly-all-Huffman engine is bit-for-bit the
+        // default engine.
+        let cfg = ModelConfig::qwen(ModelScale::Paper);
+        let (eng, crs) = setup(&cfg);
+        let explicit = Engine::with_policy(CodecPolicy::uniform(CodecKind::Huffman));
+        let corpus = Corpus::wikitext2();
+        for mode in CompressionMode::ALL {
+            let a = eng.run(&cfg, &corpus, mode, &crs);
+            let b = explicit.run(&cfg, &corpus, mode, &crs);
+            assert_eq!(a.comm_ns, b.comm_ns, "{mode:?}");
         }
     }
 

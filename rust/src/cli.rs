@@ -6,19 +6,21 @@
 //! lexi table2
 //! lexi hw
 //! lexi noc      [--pattern uniform|transpose|hotspot] [--mesh 6x6]
-//! lexi dse      [--what hitrate|codebook|decoder]
+//! lexi dse      [--what hitrate|codebook|decoder|codec] [--model jamba]
 //! ```
 
 use crate::coordinator::Session;
 use crate::runtime::{Manifest, Runtime};
 use anyhow::{anyhow, bail, Result};
 use lexi_bench::{fmt_ns, fmt_ratio, Table};
+use lexi_core::codec::CodecKind;
 use lexi_hw::area_power::{AreaPower, LexiHwConfig};
 use lexi_hw::decoder::DecoderConfig;
 use lexi_hw::histogram_unit::{HistConfig, HistogramUnit};
 use lexi_models::corpus::Corpus;
+use lexi_models::traffic::TransferKind;
 use lexi_models::weights::WeightStream;
-use lexi_models::{ModelConfig, ModelScale};
+use lexi_models::{CodecPolicy, ModelConfig, ModelScale};
 use lexi_noc::{Mesh, Network, NetworkConfig, NodeId};
 use lexi_sim::compression::{CompressionMode, CrTable};
 use lexi_sim::engine::Engine;
@@ -97,7 +99,8 @@ fn print_help() {
          \x20 table2   exponent CR comparison (RLE / BDI / LEXI) on weights\n\
          \x20 hw       Table 4: area/power breakdown (GF 22 nm + 16 nm scaling)\n\
          \x20 noc      --pattern uniform|transpose|hotspot — cycle-accurate NoI run\n\
-         \x20 dse      --what hitrate|codebook|decoder — design-space sweeps (Figs 4-6)\n\
+         \x20 dse      --what hitrate|codebook|decoder|codec — design-space sweeps\n\
+         \x20          (Figs 4-6; 'codec' prints the per-kind Huffman/BDI/Raw table)\n\
          \x20 energy   interconnect energy per inference (link vs codec)\n\
          \x20 serve    --requests N — concurrent-decode throughput ceiling"
     );
@@ -265,9 +268,11 @@ fn cmd_table2() -> Result<()> {
         let layers = [0usize, cfg.blocks.len() / 2, cfg.blocks.len() - 1];
         for &layer in &layers {
             let exps = WeightStream::sample_exponents(&cfg, layer, 42, 200_000);
-            lexi += lexi_core::huffman::compress_exponents(&exps)?.ratio();
+            // Compressors dispatch through the ExpCodec registry; RLE is
+            // a Table 2 baseline only and stays a direct call.
+            lexi += CodecKind::Huffman.codec().encode(&exps)?.ratio();
             rle_r += lexi_core::rle::coding_ratio(&exps);
-            bdi_r += lexi_core::bdi::coding_ratio(&exps);
+            bdi_r += CodecKind::Bdi.codec().coding_ratio(&exps);
         }
         let n = layers.len() as f64;
         t.row(vec![
@@ -401,6 +406,66 @@ fn cmd_dse(flags: &Flags) -> Result<()> {
                 ]);
             }
             t.print();
+        }
+        "codec" => {
+            // ISSUE 3: per-kind codec comparison from one measured
+            // CrTable — every number routes through the ExpCodec trait.
+            let model = flags.get("model", "jamba");
+            let cfg = match model {
+                "jamba" => ModelConfig::jamba(ModelScale::Paper),
+                "zamba" => ModelConfig::zamba(ModelScale::Paper),
+                "qwen" => ModelConfig::qwen(ModelScale::Paper),
+                other => bail!("unknown model '{other}'"),
+            };
+            let engine = Engine::paper_default();
+            let crs = CrTable::measure(&cfg, 42);
+            println!("codec comparison per traffic kind ({model}, paper scale):");
+            let mut t = Table::new(&[
+                "kind",
+                "codec",
+                "exp CR",
+                "wire ratio",
+                &format!("dec cyc/sym @{} lanes", engine.decoder_lanes),
+            ]);
+            for kind in TransferKind::ALL {
+                for codec in CodecKind::ALL {
+                    t.row(vec![
+                        format!("{kind:?}"),
+                        codec.name().into(),
+                        fmt_ratio(crs.exponent_cr_for(codec, kind)),
+                        fmt_ratio(crs.wire_ratio_for(codec, kind)),
+                        format!(
+                            "{:.3}",
+                            crs.decode_cycles_per_symbol_for(codec, kind, engine.decoder_lanes)
+                        ),
+                    ]);
+                }
+            }
+            t.print();
+
+            println!("\nmixed-codec operating points (full inference, Lexi mode):");
+            let corpus = Corpus::wikitext2();
+            let unc = engine.run(&cfg, &corpus, CompressionMode::Uncompressed, &crs);
+            let mut tp = Table::new(&["policy", "comm (ms)", "comm red."]);
+            for (name, policy) in [
+                ("all-huffman (paper)", CodecPolicy::lexi_default()),
+                ("bdi-state hybrid", CodecPolicy::bdi_state()),
+                ("all-bdi", CodecPolicy::uniform(CodecKind::Bdi)),
+                ("all-raw", CodecPolicy::uniform(CodecKind::Raw)),
+            ] {
+                let r = Engine::with_policy(policy).run(
+                    &cfg,
+                    &corpus,
+                    CompressionMode::Lexi,
+                    &crs,
+                );
+                tp.row(vec![
+                    format!("{name} ({})", policy.describe()),
+                    format!("{:.2}", r.comm_ms()),
+                    format!("{:.1}%", (1.0 - r.comm_ns / unc.comm_ns) * 100.0),
+                ]);
+            }
+            tp.print();
         }
         "decoder" => {
             let mut t = Table::new(&["config", "area (µm²)", "avg ns / 10 exps"]);

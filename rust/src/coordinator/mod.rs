@@ -11,10 +11,12 @@
 use crate::runtime::{argmax, LoadedModel};
 use anyhow::Result;
 use lexi_core::bf16::FieldStreams;
+use lexi_core::codec::CodecKind;
 use lexi_core::flit::{self, FlitFormat};
-use lexi_core::huffman::{self, CodeBook};
+use lexi_core::huffman::CodeBook;
+use lexi_core::rle;
 use lexi_core::stats::{FieldProfile, Histogram};
-use lexi_core::{bdi, rle, Bf16};
+use lexi_core::Bf16;
 use lexi_models::traffic::TransferKind;
 use lexi_sim::compression::{CrTable, KindRatios};
 use std::collections::HashMap;
@@ -58,12 +60,7 @@ impl SessionReport {
             e.2 += 1;
         }
         let mut ratios = HashMap::new();
-        for kind in [
-            TransferKind::Weights,
-            TransferKind::Activation,
-            TransferKind::KvCache,
-            TransferKind::SsmState,
-        ] {
+        for kind in TransferKind::ALL {
             // Kinds the tiny model lacks (e.g. SSM for qwen) fall back to
             // activation statistics — same layer-norm-bounded regime.
             let (cr, wire, n) = acc
@@ -202,17 +199,20 @@ impl Session {
 }
 
 /// Profile one f32 stream of bf16-representable values: entropies, codec
-/// CRs (LEXI vs RLE vs BDI) and the flit-level wire ratio.
+/// CRs (LEXI vs RLE vs BDI, the compressors routed through the
+/// `ExpCodec` registry) and the flit-level wire ratio.
 pub fn profile_stream(name: String, kind: TransferKind, data: &[f32]) -> TensorProfile {
     let values: Vec<Bf16> = data.iter().map(|&x| Bf16::from_f32(x)).collect();
     let profile = FieldProfile::of(&values);
     let streams = FieldStreams::split(&values);
 
-    let lexi_cr = huffman::compress_exponents(&streams.exponents)
+    let lexi_cr = CodecKind::Huffman
+        .codec()
+        .encode(&streams.exponents)
         .map(|b| b.ratio())
         .unwrap_or(1.0);
     let rle_cr = rle::coding_ratio(&streams.exponents);
-    let bdi_cr = bdi::coding_ratio(&streams.exponents);
+    let bdi_cr = CodecKind::Bdi.codec().coding_ratio(&streams.exponents);
 
     let wire_ratio = (|| -> lexi_core::Result<f64> {
         let hist = Histogram::from_bytes(&streams.exponents);
@@ -277,13 +277,10 @@ mod tests {
             }],
         };
         let t = report.measured_cr_table();
-        for kind in [
-            TransferKind::Weights,
-            TransferKind::Activation,
-            TransferKind::KvCache,
-            TransferKind::SsmState,
-        ] {
-            assert!(t.ratios.contains_key(&kind));
+        for kind in TransferKind::ALL {
+            assert!(t.ratios.contains_key(&(CodecKind::Huffman, kind)));
+            // Ratio-only tables synthesize the Raw column at 1.0×.
+            assert_eq!(t.wire_ratio_for(CodecKind::Raw, kind), 1.0);
         }
     }
 }

@@ -1,14 +1,17 @@
 #!/usr/bin/env python3
-"""Logic-level validation of PR 2's new Rust arithmetic (no toolchain in
-this container). Mirrors the Rust bit-for-bit:
+"""Logic-level validation of PR 2/3's new Rust arithmetic (no toolchain
+in this container). Mirrors the Rust bit-for-bit:
 
   * BitWriter accumulator/spill       (bitstream.rs, unchanged, needed)
   * BitRefill window                  (bitstream.rs, reference for lanes)
-  * LaneWindows SoA refill/consume    (NEW: bitstream.rs)
-  * CanonicalDecoder tables + decode_from_window (NEW pure kernel)
-  * LaneCodec encode / v1+v2 wire format / from_bytes validation (NEW)
-  * lane-at-a-time decode vs lockstep decode (NEW)
-  * hw lockstep cycle model bounds    (NEW: decoder.rs)
+  * LaneWindows SoA refill/consume    (bitstream.rs)
+  * CanonicalDecoder tables + decode_from_window (pure kernel)
+  * LaneCodec encode / v1+v2 wire format / from_bytes validation
+  * lane-at-a-time decode vs lockstep decode
+  * hw lockstep cycle model bounds    (decoder.rs)
+  * BDI tag/base/delta bit layout     (NEW PR 3: bdi.rs — mirror encode
+    vs an independent string-of-bits reference, roundtrip, block-bits
+    pricing, truncation + hostile-count-guard arithmetic)
 
 Reference implementations are independent (string-of-bits codec), so a
 mirror bug and a reference bug can't cancel.
@@ -547,6 +550,168 @@ def gen_data(rng, n, esc_heavy):
     return out
 
 
+# --------------------------------------------------------------------------
+# BDI (PR 3): mirror of bdi.rs plus an independent reference for the
+# tag/base/delta wire layout:
+#
+#   compress:    { count:32 | block* }
+#   delta block: { tag:3 = width index | base:8 | delta:width x n }
+#   raw block:   { tag:3 = 6           | byte:8 x n }
+#
+# The mirror reproduces the Rust arithmetic (leading-zeros signed width,
+# midrange base); the reference builds the bit string independently with
+# explicit two's-complement range checks, so a shared bug can't cancel.
+BDI_BLOCK = 32
+BDI_WIDTHS = [0, 1, 2, 3, 4, 5]
+BDI_TAG_BITS = 3
+BDI_TAG_RAW = len(BDI_WIDTHS)
+BDI_MIN_BLOCK_BITS = BDI_TAG_BITS + 8
+
+
+def bdi_signed_width(d):
+    """Mirror of bdi.rs::signed_width (bit_length == 16 - leading_zeros)."""
+    if d == 0:
+        return 0
+    if d > 0:
+        return d.bit_length() + 1
+    return (-d - 1).bit_length() + 1
+
+
+def bdi_pick_base(block):
+    mn, mx = min(block), max(block)
+    return mn + (mx - mn) // 2
+
+
+def bdi_pick_width(block, base):
+    need = 0
+    for v in block:
+        need = max(need, bdi_signed_width(v - base))
+        if need > BDI_WIDTHS[-1]:
+            return None
+    for i, w in enumerate(BDI_WIDTHS):
+        if w >= need:
+            return i
+    return None
+
+
+def bdi_block_bits(block):
+    """Mirror of bdi.rs::block_bits (the flit greedy-fill pricer)."""
+    base = bdi_pick_base(block)
+    wi = bdi_pick_width(block, base)
+    if wi is None:
+        return BDI_TAG_BITS + 8 * len(block)
+    return BDI_MIN_BLOCK_BITS + BDI_WIDTHS[wi] * len(block)
+
+
+def bdi_mirror_compress(data):
+    """Mirror of bdi.rs::compress through the BitWriter mirror."""
+    w = BitWriter()
+    w.put(len(data), 32)
+    for i in range(0, len(data), BDI_BLOCK):
+        block = data[i : i + BDI_BLOCK]
+        base = bdi_pick_base(block)
+        wi = bdi_pick_width(block, base)
+        if wi is None:
+            w.put(BDI_TAG_RAW, BDI_TAG_BITS)
+            for v in block:
+                w.put(v, 8)
+        else:
+            width = BDI_WIDTHS[wi]
+            w.put(wi, BDI_TAG_BITS)
+            w.put(base, 8)
+            if width:
+                for v in block:
+                    w.put((v - base) & ((1 << width) - 1), width)
+    bits = w.len_bits()
+    return w.into_bytes(), bits
+
+
+def bdi_ref_encode(data):
+    """Independent reference: bit string with explicit range checks."""
+    bits = [format(len(data), "032b")]
+    for i in range(0, len(data), BDI_BLOCK):
+        block = data[i : i + BDI_BLOCK]
+        base = (min(block) + max(block)) // 2  # same value, derived differently
+        width = None
+        for cand in BDI_WIDTHS:
+            lo = -(1 << (cand - 1)) if cand else 0
+            hi = (1 << (cand - 1)) - 1 if cand else 0
+            if all(lo <= v - base <= hi for v in block):
+                width = cand
+                break
+        if width is None:
+            bits.append(format(BDI_TAG_RAW, "03b"))
+            bits.extend(format(v, "08b") for v in block)
+        else:
+            bits.append(format(BDI_WIDTHS.index(width), "03b"))
+            bits.append(format(base, "08b"))
+            if width:
+                bits.extend(
+                    format((v - base) & ((1 << width) - 1), "0{}b".format(width))
+                    for v in block
+                )
+    return "".join(bits)
+
+
+def bdi_ref_decode(bitstr):
+    """Reference decode incl. the decompress_bits hostile-count guard."""
+    i = 0
+
+    def take(n):
+        nonlocal i
+        if i + n > len(bitstr):
+            raise EOFError("bitstream exhausted")
+        v = int(bitstr[i : i + n], 2) if n else 0
+        i += n
+        return v
+
+    count = take(32)
+    blocks = -(-count // BDI_BLOCK)
+    if blocks * BDI_MIN_BLOCK_BITS > len(bitstr) - i:
+        raise ValueError("hostile count header")
+    out = []
+    while len(out) < count:
+        n = min(count - len(out), BDI_BLOCK)
+        tag = take(BDI_TAG_BITS)
+        if tag == BDI_TAG_RAW:
+            for _ in range(n):
+                out.append(take(8))
+        elif tag < len(BDI_WIDTHS):
+            width = BDI_WIDTHS[tag]
+            base = take(8)
+            if width == 0:
+                out.extend([base] * n)
+            else:
+                for _ in range(n):
+                    raw = take(width)
+                    if raw >= 1 << (width - 1):
+                        raw -= 1 << width
+                    out.append((base + raw) % 256)
+        else:
+            raise ValueError("invalid tag")
+    return out
+
+
+def bdi_gen_data(rng, n):
+    mode = rng.randrange(4)
+    if mode == 0:  # constant (width-0 blocks)
+        return [rng.randrange(256)] * n
+    if mode == 1:  # narrow deltas around a wandering base
+        base = rng.randrange(256)
+        out = []
+        for _ in range(n):
+            base = (base + rng.randrange(-1, 2)) % 256
+            out.append((base + rng.randrange(-3, 4)) % 256)
+        return out
+    if mode == 2:  # full-range noise (raw fallback blocks)
+        return [rng.randrange(256) for _ in range(n)]
+    # mixed regimes spliced together
+    out = []
+    while len(out) < n:
+        out.extend(bdi_gen_data(rng, min(n - len(out), rng.randrange(1, 80))))
+    return out
+
+
 def main():
     rng = random.Random(20260729)
     cases = 0
@@ -780,6 +945,42 @@ def main():
         ns += startup
         assert abs(ns - (max(wire, decode) + hops + startup)) < 1e-6
     print("[8] transfer_ns coupling == max(wire, decode) + hops + startup")
+
+    # 9) BDI (PR 3): mirror bits == independent reference bits, lossless
+    #    roundtrip, block-bits pricing exact, truncation rejected, and
+    #    the hostile-count guard arithmetic.
+    ok9 = 0
+    for trial in range(250):
+        n = rng.randrange(1, 1500)
+        data = bdi_gen_data(rng, n)
+        by, bits = bdi_mirror_compress(data)
+        mirror_str = "".join(format(b, "08b") for b in by)[:bits]
+        ref_str = bdi_ref_encode(data)
+        assert mirror_str == ref_str, f"BDI bit layout mismatch n={n}"
+        assert bdi_ref_decode(ref_str) == data, f"BDI roundtrip mismatch n={n}"
+        # block_bits pricing (flit greedy fill) must equal the writer.
+        priced = 32 + sum(
+            bdi_block_bits(data[i : i + BDI_BLOCK])
+            for i in range(0, len(data), BDI_BLOCK)
+        )
+        assert priced == bits, f"BDI pricing {priced} != encoded {bits}"
+        # Any strict truncation must raise, never mis-decode full-length.
+        cut = rng.randrange(1, bits)
+        try:
+            out = bdi_ref_decode(ref_str[: bits - cut])
+            assert out != data, "truncated BDI stream silently decoded"
+        except (EOFError, ValueError):
+            pass
+        # Hostile count: forge the 32-bit header to u32::MAX — the guard
+        # (ceil(count/32) blocks x 11 bits > remaining) must fire.
+        forged = format((1 << 32) - 1, "032b") + ref_str[32:]
+        try:
+            bdi_ref_decode(forged)
+            assert False, "hostile BDI count passed the guard"
+        except ValueError:
+            pass
+        ok9 += 1
+    print(f"[9] BDI mirror == independent reference, roundtrip, pricing, guards: {ok9} cases OK")
 
     print("\nALL LOGIC CHECKS PASSED")
 

@@ -6,8 +6,10 @@ Usage: perf_gate.py FRESH BASELINE [--threshold 0.15]
 Compares the throughput rows of a freshly produced bench JSON against the
 committed baseline and fails (exit 1) if any shared row's `m_per_s`
 dropped by more than the threshold. Rows present in only one file are
-reported but never fail the gate (new benches shouldn't need a baseline
-edit to land, and removed benches shouldn't block CI).
+reported but never fail the gate: new benches (e.g. the `bdi encode` /
+`bdi decode` rows ISSUE 3 added) land against an older baseline without
+a baseline edit, and removed benches don't block CI. A new row starts
+gating on the first run after its JSON is committed as the baseline.
 
 ci.sh wires this up after `cargo bench --bench perf_codec`, diffing
 against `git show HEAD:BENCH_perf_codec.json`; set LEXI_SKIP_PERF_GATE=1
@@ -75,7 +77,7 @@ def main():
             f"({-drop:+8.1%}){marker}"
         )
     for name in sorted(set(fresh) - set(base)):
-        print(f"  {name:24s} (new row, no baseline)")
+        print(f"  {name:24s} (new row, no baseline — never fails the gate)")
     for name in sorted(set(base) - set(fresh)):
         print(f"  {name:24s} (baseline row absent from fresh run)")
 
