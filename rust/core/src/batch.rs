@@ -19,9 +19,11 @@
 //!   multi-tenant links whose lanes carry differently-distributed streams.
 //! * [`LaneCodec::decode_lockstep`] — the lockstep interleaved decoder
 //!   (§Perf, DESIGN.md §Lockstep): all `N` windows held live in
-//!   struct-of-arrays state ([`LaneWindows`]) and advanced one symbol per
-//!   lane per round, so the `N` independent table lookups pipeline
-//!   instead of running lane-at-a-time.
+//!   struct-of-arrays state ([`LaneWindows`]) and advanced round-robin,
+//!   so the `N` independent table lookups pipeline instead of running
+//!   lane-at-a-time; on long streams each visit drains up to
+//!   [`lut::LUT_MAX_SYMS`] symbols in one multi-symbol LUT probe
+//!   (ISSUE 4, DESIGN.md §Multi-symbol LUT).
 //!
 //! The refill-based block *decoder* lives on
 //! [`CanonicalDecoder::decode_block_into`], next to the tables it probes.
@@ -33,6 +35,7 @@
 use crate::bitstream::{BitReader, BitWriter, LaneWindows};
 use crate::error::{Error, Result};
 use crate::huffman::{CanonicalDecoder, CodeBook, ESC_SYMBOL};
+use crate::lut::{self, MultiDecodeTable};
 
 /// Maximum supported lane count (8 matches the paper's decoder sweep;
 /// headroom beyond it costs nothing in the format). Must stay ≤ 127 so
@@ -346,12 +349,14 @@ impl LaneCodec {
     /// bandwidth (§4.4).
     ///
     /// State is struct-of-arrays ([`LaneWindows`]): per-lane window,
-    /// bit-position and refill cursor in parallel arrays. Round `k`
-    /// decodes one symbol from every lane and writes `out[k*N .. k*N+N]`
-    /// in order — the N window probes have no data dependence on each
-    /// other (they pipeline in the CPU), and the output is written
-    /// sequentially instead of lane-at-a-time's strided scatter. A scalar
-    /// tail drains the final partial round (lanes `0..count % N`).
+    /// bit-position and refill cursor in parallel arrays. Each
+    /// round-robin visit decodes from one lane — the N window probes
+    /// have no data dependence on each other (they pipeline in the CPU)
+    /// — and on streams past [`lut::LUT_DECODE_MIN_SYMBOLS`] a visit
+    /// drains **up to [`lut::LUT_MAX_SYMS`] symbols in one multi-LUT
+    /// probe** (ISSUE 4), multiplying the lockstep win; short streams
+    /// and [`decode_lockstep_scalar`] keep the one-symbol-per-visit
+    /// kernel.
     ///
     /// Bit-exact with [`decode`] and with the scalar per-symbol oracle:
     /// each lane consumes exactly the bits the lane-at-a-time path does
@@ -361,9 +366,47 @@ impl LaneCodec {
     /// [`decode`]: LaneCodec::decode
     /// [`LaneWindows`]: crate::bitstream::LaneWindows
     pub fn decode_lockstep(stream: &LaneStream, book: &CodeBook) -> Result<Vec<u8>> {
+        // §Perf (ISSUE 4): streams long enough to amortize the table
+        // fills drain up to LUT_MAX_SYMS symbols per lane visit. A
+        // shared book needs one fill; embedded per-lane books need one
+        // *per lane*, so the threshold applies to each table's share of
+        // the symbols, not the total.
+        let fills = stream.books.len().max(1);
+        let decs = if lut::amortizes_fill(stream.count / fills) {
+            LaneDecoders::for_stream_lut(stream, book)
+        } else {
+            LaneDecoders::for_stream(stream, book)
+        };
+        Self::decode_lockstep_with(stream, &decs)
+    }
+
+    /// [`decode_lockstep`] pinned to scalar (one-symbol-per-visit)
+    /// decoders regardless of stream size — the measurement baseline the
+    /// `decode lockstep={4,8}` bench rows track, and the ISSUE 2 shape
+    /// the multi-symbol LUT path is compared against.
+    ///
+    /// [`decode_lockstep`]: LaneCodec::decode_lockstep
+    pub fn decode_lockstep_scalar(stream: &LaneStream, book: &CodeBook) -> Result<Vec<u8>> {
+        Self::decode_lockstep_with(stream, &LaneDecoders::for_stream(stream, book))
+    }
+
+    /// Lockstep core over caller-built decoder tables. Each round-robin
+    /// visit to a lane drains **up to [`lut::LUT_MAX_SYMS`] symbols in
+    /// one multi-LUT probe** when the lane's decoder carries a table
+    /// (else exactly one via the scalar kernel): lane `l`'s `k`-th
+    /// symbol lands at `out[l + k*n]`, so the multi drain is a short
+    /// strided scatter — 1 probe per ~3–4 symbols buys back far more
+    /// than the scatter costs on < 3-bit-entropy streams. Per-lane bit
+    /// consumption, decoded symbols, and each lane's *own* failure
+    /// point are identical to the scalar loop (the LUT only fires on
+    /// full-fit entries); the one divergence: lanes progress at
+    /// different rates under the multi drain, so when **several** lanes
+    /// are malformed, *which* lane's error surfaces first may differ
+    /// from the one-symbol-per-round order. Both paths always error on
+    /// a stream either would reject.
+    pub fn decode_lockstep_with(stream: &LaneStream, decs: &LaneDecoders) -> Result<Vec<u8>> {
         let views = stream.validated_lanes()?;
         let n = stream.lanes;
-        let decs = LaneDecoders::for_stream(stream, book);
         // Per-lane decoder table, hoisting the shared-vs-per-lane branch
         // out of the hot loop.
         let dec_by_lane = decs.by_lane(n);
@@ -373,26 +416,47 @@ impl LaneCodec {
             .map(|v| (v.range.start * 8, v.range.start * 8 + v.bits as usize))
             .collect();
         let mut wins = LaneWindows::new(&stream.bytes, &spans);
-        // One symbol per lane per round; the final partial round is the
-        // scalar tail drain (lanes 0..count % n, in lane order). The
-        // refill cadence matches decode_block_into: top up to ≥ 40 valid
-        // bits before each symbol (worst codeword + escape byte ≤ 39
-        // bits).
-        let rounds = stream.count.div_ceil(n);
-        for k in 0..rounds {
-            let base = k * n;
-            let active = n.min(stream.count - base);
-            for l in 0..active {
-                if wins.navail(l) < 40 {
-                    wins.refill(l);
+        // Round-robin visits until every lane has produced its share;
+        // unfinished lanes are visited once per pass (with scalar
+        // decoders this is exactly the one-symbol-per-round loop; with
+        // multi drains, lanes advance at different rates — see the doc
+        // caveat on multi-lane error ordering). The refill cadence
+        // matches decode_block_into: ≥ 40 valid bits per visit (worst
+        // codeword + escape byte ≤ 39 bits; a LUT probe consumes ≤
+        // LUT_BITS).
+        let lane_syms: Vec<usize> = views.iter().map(|v| v.symbols).collect();
+        let mut done = vec![0usize; n];
+        let mut live = true;
+        while live {
+            live = false;
+            for l in 0..n {
+                let want = lane_syms[l] - done[l];
+                if want == 0 {
+                    continue;
+                }
+                live = true;
+                wins.ensure(l, 40);
+                if let Some(table) = dec_by_lane[l].multi_table() {
+                    let e = table.entry(wins.window(l));
+                    let c = MultiDecodeTable::count(e) as usize;
+                    let used = MultiDecodeTable::consumed(e);
+                    if c != 0 && c <= want && used as usize <= wins.remaining(l) {
+                        for (k, &sym) in e.to_le_bytes()[..c].iter().enumerate() {
+                            out[l + (done[l] + k) * n] = sym;
+                        }
+                        wins.consume(l, used);
+                        done[l] += c;
+                        continue;
+                    }
                 }
                 let (sym, used) = dec_by_lane[l].decode_from_window(
                     wins.window(l),
                     wins.remaining(l),
                     wins.pos(l),
                 )?;
-                out[base + l] = sym;
+                out[l + done[l] * n] = sym;
                 wins.consume(l, used);
+                done[l] += 1;
             }
         }
         Ok(out)
@@ -417,6 +481,22 @@ impl LaneDecoders {
             vec![book.decoder()]
         } else {
             stream.books.iter().map(|b| b.decoder()).collect()
+        };
+        LaneDecoders { decs }
+    }
+
+    /// Like [`for_stream`], but every decoder carries a multi-symbol
+    /// decode LUT ([`CodeBook::lut_decoder`]) — unconditional, so tests
+    /// and benches can force the LUT path on any stream size;
+    /// [`LaneCodec::decode_lockstep`] applies the
+    /// [`lut::LUT_DECODE_MIN_SYMBOLS`] threshold before calling this.
+    ///
+    /// [`for_stream`]: LaneDecoders::for_stream
+    pub fn for_stream_lut(stream: &LaneStream, book: &CodeBook) -> Self {
+        let decs = if stream.books.is_empty() {
+            vec![book.lut_decoder()]
+        } else {
+            stream.books.iter().map(|b| b.lut_decoder()).collect()
         };
         LaneDecoders { decs }
     }
@@ -931,6 +1011,19 @@ mod tests {
                 let lockstep = LaneCodec::decode_lockstep(&stream, &book).unwrap();
                 assert_eq!(lockstep, data, "lockstep lanes {lanes}");
                 assert_eq!(lane_at_a_time, lockstep, "paths diverge at lanes {lanes}");
+                // Force the multi-symbol LUT path regardless of the
+                // stream-size threshold (ISSUE 4): still bit-exact.
+                let lut = LaneCodec::decode_lockstep_with(
+                    &stream,
+                    &LaneDecoders::for_stream_lut(&stream, &book),
+                )
+                .unwrap();
+                assert_eq!(lut, data, "lut lockstep diverged at lanes {lanes}");
+                assert_eq!(
+                    LaneCodec::decode_lockstep_scalar(&stream, &book).unwrap(),
+                    data,
+                    "scalar lockstep baseline diverged at lanes {lanes}"
+                );
             }
         });
     }
@@ -958,6 +1051,13 @@ mod tests {
             let b = LaneCodec::decode_lockstep(&short, &book);
             assert!(a.is_err(), "lane-at-a-time accepted a truncated lane");
             assert!(b.is_err(), "lockstep accepted a truncated lane");
+            // And with the multi-LUT forced on: the LUT only fires on
+            // full-fit entries, so truncation errors survive unchanged.
+            let c = LaneCodec::decode_lockstep_with(
+                &short,
+                &LaneDecoders::for_stream_lut(&short, &book),
+            );
+            assert!(c.is_err(), "lut lockstep accepted a truncated lane");
         });
     }
 
@@ -997,6 +1097,15 @@ mod tests {
             let wrong = book_of(&[1u8, 2, 3]);
             assert_eq!(LaneCodec::decode(&stream, &wrong).unwrap(), data);
             assert_eq!(LaneCodec::decode_lockstep(&stream, &wrong).unwrap(), data);
+            // Embedded books drive the per-lane multi-LUTs too.
+            assert_eq!(
+                LaneCodec::decode_lockstep_with(
+                    &stream,
+                    &LaneDecoders::for_stream_lut(&stream, &wrong),
+                )
+                .unwrap(),
+                data
+            );
             // And the wire bytes reparse to an identical stream.
             let parsed = LaneStream::from_bytes(stream.bytes.clone()).unwrap();
             assert_eq!(parsed, stream);

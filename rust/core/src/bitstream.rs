@@ -321,6 +321,16 @@ impl<'a> BitRefill<'a> {
         self.bitbuf
     }
 
+    /// Refill only when fewer than `bits` are loaded — the hot-loop
+    /// cadence gate (decoders ensure 40 bits per visit: worst codeword +
+    /// escape byte ≤ 39, and a multi-symbol LUT probe ≤ `LUT_BITS`).
+    #[inline]
+    pub fn ensure(&mut self, bits: u32) {
+        if self.navail < bits {
+            self.refill();
+        }
+    }
+
     /// Top the window up to ≥ 57 valid bits, or to end-of-buffer.
     #[inline]
     pub fn refill(&mut self) {
@@ -460,6 +470,15 @@ impl<'a> LaneWindows<'a> {
     #[inline]
     pub fn window(&self, l: usize) -> u64 {
         self.window[l]
+    }
+
+    /// Refill lane `l` only when fewer than `bits` are loaded (same
+    /// cadence gate as [`BitRefill::ensure`]).
+    #[inline]
+    pub fn ensure(&mut self, l: usize, bits: u32) {
+        if self.navail[l] < bits {
+            self.refill(l);
+        }
     }
 
     /// Top lane `l`'s window up to ≥ 57 valid bits, or to end-of-buffer.

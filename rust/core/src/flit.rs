@@ -286,11 +286,15 @@ pub fn unpack(transfer: &LayerTransfer) -> Result<FieldStreams> {
     }
     let mut r = BitReader::new(&head_bytes);
     let codec = CodecKind::from_wire_tag(r.get(CODEC_TAG_BITS)? as u8)?;
-    let dec = match codec {
-        CodecKind::Huffman => Some(CodeBook::read_header(&mut r)?.decoder()),
+    let book = match codec {
+        CodecKind::Huffman => Some(CodeBook::read_header(&mut r)?),
         _ => None,
     };
     let count = r.get(32)? as usize;
+    // §Perf (ISSUE 4): one decoder serves every data flit of the
+    // transfer, so a transfer long enough to amortize the table fill
+    // decodes its per-flit exponent runs through the multi-symbol LUT.
+    let dec = book.map(|b| b.decoder_for(count));
 
     // --- data flits --------------------------------------------------------
     let mut out = FieldStreams::default();

@@ -19,6 +19,7 @@
 use crate::batch::BatchEncoder;
 use crate::bitstream::{BitReader, BitRefill, BitWriter};
 use crate::error::{Error, Result};
+use crate::lut::{self, MultiDecodeTable};
 use crate::stats::Histogram;
 
 /// Default alphabet cap (paper §4.2.2: "the primary pipeline is designed
@@ -341,6 +342,38 @@ impl CodeBook {
     pub fn decoder(&self) -> CanonicalDecoder {
         CanonicalDecoder::new(self)
     }
+
+    /// Build a canonical decoder with the **multi-symbol decode LUT**
+    /// attached (§Perf, ISSUE 4): block decodes emit up to
+    /// [`lut::LUT_MAX_SYMS`] exponents per table probe, bit-identical to
+    /// [`decoder`]'s output. Costs a `2^LUT_BITS`-probe table fill on top
+    /// of the scalar tables — build once per stream/transfer; short
+    /// blocks should stay on [`decoder`]
+    /// (see [`lut::LUT_DECODE_MIN_SYMBOLS`]).
+    ///
+    /// [`decoder`]: CodeBook::decoder
+    pub fn lut_decoder(&self) -> CanonicalDecoder {
+        let mut dec = CanonicalDecoder::new(self);
+        let table = MultiDecodeTable::from_decoder(&dec);
+        dec.multi = Some(table);
+        dec
+    }
+
+    /// The decoder a block of `symbols` should use: [`lut_decoder`] when
+    /// the block amortizes the table fill ([`lut::amortizes_fill`]),
+    /// else the plain [`decoder`]. The single home of the
+    /// threshold policy — `decompress_bits`, `flit::unpack`, and the
+    /// lane codec all route through it.
+    ///
+    /// [`decoder`]: CodeBook::decoder
+    /// [`lut_decoder`]: CodeBook::lut_decoder
+    pub fn decoder_for(&self, symbols: usize) -> CanonicalDecoder {
+        if lut::amortizes_fill(symbols) {
+            self.lut_decoder()
+        } else {
+            self.decoder()
+        }
+    }
 }
 
 /// Canonical Huffman decoder using per-length first-code tables, fronted
@@ -362,11 +395,22 @@ pub struct CanonicalDecoder {
     /// `(symbol << 8) | len`, or `FAST_MISS` for codes longer than
     /// `FAST_BITS` (fall back to the length-class walk).
     fast: Vec<u32>,
+    /// Multi-symbol decode LUT (ISSUE 4): present on decoders built via
+    /// [`CodeBook::lut_decoder`]; block decodes then drain up to
+    /// [`lut::LUT_MAX_SYMS`] symbols per probe. `None` keeps the scalar
+    /// fast table only (cheap build, the measurement baseline).
+    multi: Option<MultiDecodeTable>,
 }
 
 /// Width of the fast direct-decode table (2^11 × 4 B = 8 KiB).
 const FAST_BITS: u32 = 11;
-const FAST_MISS: u32 = u32::MAX;
+/// Miss sentinel; also marks ESC patterns (the raw byte may extend past
+/// the window) and codes longer than `FAST_BITS`.
+pub(crate) const FAST_MISS: u32 = u32::MAX;
+
+// The multi-symbol table ([`lut`]) reuses the fast table as its scratch
+// classifier, so the two widths must agree.
+const _: () = assert!(FAST_BITS == lut::LUT_BITS);
 
 impl CanonicalDecoder {
     fn new(book: &CodeBook) -> Self {
@@ -406,7 +450,23 @@ impl CanonicalDecoder {
             lengths,
             esc_len: book.esc.len,
             fast,
+            multi: None,
         }
+    }
+
+    /// The attached multi-symbol decode LUT, if this decoder was built
+    /// with [`CodeBook::lut_decoder`]. The `lexi-hw` cycle model and the
+    /// lockstep lane loop both probe it directly.
+    #[inline]
+    pub fn multi_table(&self) -> Option<&MultiDecodeTable> {
+        self.multi.as_ref()
+    }
+
+    /// The single-symbol fast table — the multi-symbol LUT's scratch
+    /// classifier ([`MultiDecodeTable::from_decoder`]).
+    #[inline]
+    pub(crate) fn fast_table(&self) -> &[u32] {
+        &self.fast
     }
 
     /// Decode one exponent from the reader (resolving ESC to the raw byte).
@@ -490,13 +550,16 @@ impl CanonicalDecoder {
     pub fn decode_block_into(&self, r: &mut BitReader, out: &mut [u8]) -> Result<()> {
         let (buf, start, len_bits) = r.raw_parts();
         let mut s = BitRefill::new(buf, start, len_bits);
-        for slot in out.iter_mut() {
-            // 40 bits cover the worst case (31-bit ESC + 8 raw bits), so
-            // one refill per symbol suffices.
-            if s.navail() < 40 {
-                s.refill();
+        match &self.multi {
+            Some(table) => self.decode_block_multi(table, &mut s, out)?,
+            None => {
+                for slot in out.iter_mut() {
+                    // 40 bits cover the worst case (31-bit ESC + 8 raw
+                    // bits), so one refill per symbol suffices.
+                    s.ensure(40);
+                    *slot = self.decode_one(&mut s)?;
+                }
             }
-            *slot = self.decode_one(&mut s)?;
         }
         // Re-sync the outer reader (chunked: skip takes u32).
         let mut left = s.pos() - start;
@@ -504,6 +567,39 @@ impl CanonicalDecoder {
             let step = left.min(1 << 30) as u32;
             r.skip(step)?;
             left -= step as usize;
+        }
+        Ok(())
+    }
+
+    /// Multi-symbol block loop (ISSUE 4): one LUT probe emits up to
+    /// [`lut::LUT_MAX_SYMS`] exponents. An entry is consumed only when it
+    /// holds ≥ 1 symbol, the block still wants that many, and its bits
+    /// fit `remaining()` — everything else (ESC-leading probes, long
+    /// codes, stream tails) takes the scalar kernel, so output **and
+    /// error details** are identical to the scalar loop.
+    fn decode_block_multi(
+        &self,
+        table: &MultiDecodeTable,
+        s: &mut BitRefill,
+        out: &mut [u8],
+    ) -> Result<()> {
+        let mut i = 0;
+        while i < out.len() {
+            // One visit consumes ≤ max(LUT_BITS, 39) bits; the 40-bit
+            // cadence of the scalar loop covers both arms.
+            s.ensure(40);
+            let e = table.entry(s.window());
+            let n = MultiDecodeTable::count(e) as usize;
+            let used = MultiDecodeTable::consumed(e);
+            if n != 0 && n <= out.len() - i && used as usize <= s.remaining() {
+                // Entry bytes 0..n are the decoded symbols in order.
+                out[i..i + n].copy_from_slice(&e.to_le_bytes()[..n]);
+                s.consume(used);
+                i += n;
+            } else {
+                out[i] = self.decode_one(s)?;
+                i += 1;
+            }
         }
         Ok(())
     }
@@ -776,7 +872,9 @@ pub fn decompress_bits(bytes: &[u8], bits: usize) -> Result<Vec<u8>> {
             r.remaining()
         )));
     }
-    let dec = book.decoder();
+    // §Perf (ISSUE 4): blocks long enough to amortize the table fill
+    // decode through the multi-symbol LUT; short blocks stay scalar.
+    let dec = book.decoder_for(count);
     let mut out = vec![0u8; count];
     dec.decode_block_into(&mut r, &mut out)?;
     Ok(out)

@@ -23,6 +23,10 @@
 //! * [`batch`] — §Perf: the word-at-a-time batch codec engine (pair-fused
 //!   encode, refill-based block decode, N-lane interleaved streams) that
 //!   the scalar codecs above are the bit-exact oracle for.
+//! * [`lut`] — §Perf: the multi-symbol decode LUT
+//!   ([`MultiDecodeTable`](lut::MultiDecodeTable)): one direct-table
+//!   probe emits up to 4 exponents, with sentinel fallback to the
+//!   canonical kernel so output stays bit-identical.
 //!
 //! The cycle-accurate hardware realization lives in `lexi-hw`; this crate is
 //! the bit-exact oracle it is tested against.
@@ -35,6 +39,7 @@ pub mod codec;
 pub mod error;
 pub mod flit;
 pub mod huffman;
+pub mod lut;
 pub mod prng;
 pub mod proptest;
 pub mod rle;

@@ -1,0 +1,414 @@
+//! §Perf — the multi-symbol decode LUT (ISSUE 4 tentpole).
+//!
+//! The paper's decoders "sustain the maximum link bandwidth via
+//! multi-lane LUT decoders" (§4.4) precisely because exponent streams
+//! carry < 3 bits of entropy: the [`LUT_BITS`]-bit window the fast table
+//! already peeks typically holds **3–4 complete codewords**, yet the
+//! single-symbol table decodes one and loops. [`MultiDecodeTable`] is the
+//! zstd/FSE trick applied to the canonical exponent code: a direct table
+//! indexed by the next [`LUT_BITS`] bits where each entry packs up to
+//! [`LUT_MAX_SYMS`] already-decoded exponents plus the total bits they
+//! consume, so one probe emits a whole run.
+//!
+//! ## Entry layout (one `u64` per probe)
+//!
+//! ```text
+//! bits  0..32   up to 4 decoded exponents, first-decoded in byte 0
+//!               (out[i..i+n] is literally to_le_bytes()[..n])
+//! bits 32..36   symbol count n (0 = sentinel: fall back to the scalar
+//!               kernel — ESC-leading, long-code, or partial patterns)
+//! bits 40..48   total bits consumed (≤ LUT_BITS)
+//! ```
+//!
+//! ## Fill algorithm
+//!
+//! The decoder's single-symbol fast table (same width: `huffman`
+//! compile-asserts `FAST_BITS == LUT_BITS`) already classifies every
+//! probe prefix — a dedicated `(sym, len)` hit, or a miss covering both
+//! ESC and codes longer than the window, the two cases that stop a pack
+//! identically. Each of the `2^LUT_BITS` entries then greedily
+//! re-probes its own suffix (`(p << used) & mask`: consumed bits shift
+//! out, zeros shift in) and appends codewords while they fit **entirely
+//! inside the known bits** — a codeword of length ≤ the remaining probe
+//! bits decodes identically under every window extension (prefix
+//! property), so packed symbols are exact, never speculative.
+//!
+//! ## Fallback contract
+//!
+//! The table is an accelerator, not a decoder: consumers use an entry
+//! only when `count ≥ 1`, the caller still wants ≥ `count` symbols, and
+//! `consumed ≤ remaining` readable bits. Everything else — ESC resolution
+//! (needs the raw byte), codes longer than the window, stream tails, and
+//! exhaustion errors — falls back to the scalar
+//! [`decode_from_window`] kernel, which is why every LUT path is
+//! bit-identical to the canonical decoder *including error details*
+//! (property-pinned here and in `huffman`/`batch`).
+//!
+//! [`decode_from_window`]: crate::huffman::CanonicalDecoder
+
+use crate::huffman::{CanonicalDecoder, CodeBook};
+
+/// Probe width in bits. 2^11 entries × 8 B = 16 KiB — L1-resident, and
+/// wide enough that a < 3-bit-entropy stream packs 3–4 codewords per
+/// probe. Tunable at compile time; K ∈ 11..=12 is the sweet spot (13+
+/// doubles the table past half of L1 for < 2% extra fill).
+pub const LUT_BITS: u32 = 11;
+
+/// Maximum symbols packed per entry (4 × 8-bit exponents fill the low
+/// 32 bits of the entry word; more would widen the entry and the copy).
+pub const LUT_MAX_SYMS: usize = 4;
+
+/// Block-decode callers only build the table when a stream carries at
+/// least this many symbols: the fill walks `2^LUT_BITS` probes, which a
+/// short block never amortizes.
+pub const LUT_DECODE_MIN_SYMBOLS: usize = 4096;
+
+/// The one build-or-not policy every decode surface consults
+/// ([`CodeBook::decoder_for`], the lockstep lane split): does a block of
+/// `symbols` amortize **one** table fill? Callers paying several fills
+/// (per-lane books) pass each table's share, not the total.
+///
+/// [`CodeBook::decoder_for`]: crate::huffman::CodeBook::decoder_for
+#[inline]
+pub fn amortizes_fill(symbols: usize) -> bool {
+    symbols >= LUT_DECODE_MIN_SYMBOLS
+}
+
+/// Table size in entries.
+const ENTRIES: usize = 1 << LUT_BITS;
+
+/// A multi-symbol direct decode table for one [`CodeBook`].
+#[derive(Clone, Debug)]
+pub struct MultiDecodeTable {
+    /// One packed entry per probe (layout in the module docs).
+    entries: Vec<u64>,
+    /// Mean symbols per probe over all `2^LUT_BITS` patterns, sentinel
+    /// probes counted as 1 (they still emit one symbol via the fallback
+    /// kernel). The hw model derives its symbols-per-cycle from this.
+    avg_fill: f64,
+}
+
+impl MultiDecodeTable {
+    /// Build the table for `book`. Convenience over [`from_decoder`]
+    /// when no decoder exists yet ([`CodeBook::lut_decoder`] reuses the
+    /// one it is already building instead).
+    ///
+    /// [`from_decoder`]: MultiDecodeTable::from_decoder
+    pub fn new(book: &CodeBook) -> Self {
+        Self::from_decoder(&book.decoder())
+    }
+
+    /// Build the table from a decoder's single-symbol fast table, which
+    /// is exactly the scratch classifier the pack loop needs: a hit is a
+    /// dedicated `(sym, len ≤ LUT_BITS)` codeword, and a miss covers
+    /// both ESC (excluded from the fast fill: the raw byte may extend
+    /// past the probe) and codes longer than the window — the two cases
+    /// that stop a pack identically. Reusing it keeps the subtle
+    /// canonical-walk fill in one place (`huffman` compile-asserts
+    /// `FAST_BITS == LUT_BITS`) and makes `lut_decoder` a single
+    /// canonical fill plus this `O(2^LUT_BITS · LUT_MAX_SYMS)` pack pass
+    /// (the `lut build` bench row keeps the cost visible).
+    pub(crate) fn from_decoder(dec: &CanonicalDecoder) -> Self {
+        let fast = dec.fast_table();
+        debug_assert_eq!(fast.len(), ENTRIES);
+        let mut entries = vec![0u64; ENTRIES];
+        let mut total_syms = 0u64;
+        for (p, entry) in entries.iter_mut().enumerate() {
+            let mut e = 0u64;
+            let mut used = 0u32;
+            let mut count = 0u32;
+            while (count as usize) < LUT_MAX_SYMS {
+                let rem = LUT_BITS - used;
+                if rem == 0 {
+                    break;
+                }
+                // Consumed bits shift out of the probe, zeros shift in;
+                // a hit is trusted only when it fits the known bits.
+                let s = fast[(p << used) & (ENTRIES - 1)];
+                if s == crate::huffman::FAST_MISS {
+                    break;
+                }
+                let len = s & 0xff;
+                if len > rem {
+                    break;
+                }
+                e |= ((s >> 8) as u64) << (8 * count);
+                used += len;
+                count += 1;
+            }
+            if count > 0 {
+                e |= (count as u64) << 32 | (used as u64) << 40;
+            }
+            *entry = e;
+            total_syms += count.max(1) as u64;
+        }
+        MultiDecodeTable {
+            entries,
+            avg_fill: total_syms as f64 / ENTRIES as f64,
+        }
+    }
+
+    /// The entry for a left-aligned 64-bit window (top [`LUT_BITS`] bits
+    /// are the probe).
+    #[inline]
+    pub fn entry(&self, window: u64) -> u64 {
+        self.entries[(window >> (64 - LUT_BITS)) as usize]
+    }
+
+    /// The entry for a raw [`LUT_BITS`]-bit probe (hardware-model path,
+    /// fed from `BitReader::peek_zeroext(LUT_BITS)`).
+    #[inline]
+    pub fn entry_at(&self, probe: usize) -> u64 {
+        self.entries[probe]
+    }
+
+    /// Symbols packed in `entry` (0 = sentinel, use the fallback kernel).
+    #[inline]
+    pub fn count(entry: u64) -> u32 {
+        ((entry >> 32) & 0xf) as u32
+    }
+
+    /// Total bits the packed symbols consume.
+    #[inline]
+    pub fn consumed(entry: u64) -> u32 {
+        ((entry >> 40) & 0xff) as u32
+    }
+
+    /// The `j`-th packed symbol (first decoded at `j = 0`).
+    #[inline]
+    pub fn symbol(entry: u64, j: u32) -> u8 {
+        (entry >> (8 * j)) as u8
+    }
+
+    /// Mean symbols per probe over all patterns (sentinels count as 1);
+    /// ∈ `1.0 ..= LUT_MAX_SYMS`. The hw decoder model's nominal
+    /// symbols-per-cycle.
+    pub fn avg_fill(&self) -> f64 {
+        self.avg_fill
+    }
+
+    /// Number of probes a fill walks (hardware fill-latency input).
+    pub fn fill_probes() -> u64 {
+        ENTRIES as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitstream::{BitReader, BitWriter};
+    use crate::huffman::{compress_exponents, decompress_exponents, CodeBook};
+    use crate::proptest::check;
+    use crate::stats::Histogram;
+
+    fn book_of(data: &[u8]) -> CodeBook {
+        CodeBook::lexi_default(&Histogram::from_bytes(data)).unwrap()
+    }
+
+    /// Independent per-probe reference: repeatedly find the unique
+    /// codeword (prefix-free ⇒ at most one, ESC included) that fits
+    /// entirely in the remaining probe bits. No scratch table, no
+    /// shift-reindexing — a fill bug and a reference bug can't cancel.
+    fn ref_entry(book: &CodeBook, probe: u32) -> (Vec<u8>, u32) {
+        let mut syms = Vec::new();
+        let mut used = 0u32;
+        'outer: while syms.len() < LUT_MAX_SYMS {
+            let rem = LUT_BITS - used;
+            if rem == 0 {
+                break;
+            }
+            let esc = book.escape();
+            if esc.len <= rem && (probe >> (rem - esc.len)) & ((1 << esc.len) - 1) == esc.bits
+            {
+                break; // ESC stays on the slow path
+            }
+            for s in 0..=255u8 {
+                if let Some(c) = book.code(s) {
+                    if c.len <= rem
+                        && (probe >> (rem - c.len)) & ((1u32 << c.len) - 1) == c.bits
+                    {
+                        syms.push(s);
+                        used += c.len;
+                        continue 'outer;
+                    }
+                }
+            }
+            break; // no full codeword fits the known bits
+        }
+        (syms, used)
+    }
+
+    #[test]
+    fn prop_entries_match_brute_force_enumeration() {
+        check("LUT entries == brute-force probe replay", 12, |g| {
+            let n = g.usize(16..3000);
+            let data = if g.bool(0.6) {
+                let a = g.usize(1..50);
+                g.skewed_bytes(n, a)
+            } else {
+                g.vec(n, |g| g.u8())
+            };
+            let book = book_of(&data);
+            let table = MultiDecodeTable::new(&book);
+            for p in 0..(1u32 << LUT_BITS) {
+                let e = table.entry_at(p as usize);
+                let (want_syms, want_used) = ref_entry(&book, p);
+                assert_eq!(
+                    MultiDecodeTable::count(e) as usize,
+                    want_syms.len(),
+                    "probe {p:#013b}: count"
+                );
+                assert_eq!(
+                    MultiDecodeTable::consumed(e),
+                    want_used,
+                    "probe {p:#013b}: consumed"
+                );
+                for (j, &s) in want_syms.iter().enumerate() {
+                    assert_eq!(
+                        MultiDecodeTable::symbol(e, j as u32),
+                        s,
+                        "probe {p:#013b}: symbol {j}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_lut_block_decode_is_bit_identical_to_scalar() {
+        check("lut decode == scalar decode", 80, |g| {
+            let n = g.usize(1..4000);
+            // Skewed (LUT-heavy), ESC-heavy uniform, or full-range noise.
+            let data = match g.usize(0..3) {
+                0 => {
+                    let a = g.usize(1..32);
+                    g.skewed_bytes(n, a)
+                }
+                1 => {
+                    let a = g.usize(33..140);
+                    g.skewed_bytes(n, a)
+                }
+                _ => g.vec(n, |g| g.u8()),
+            };
+            let book = book_of(&data);
+            let mut w = BitWriter::new();
+            for &e in &data {
+                book.encode_symbol(e, &mut w);
+            }
+            let bits = w.len_bits();
+            let bytes = w.into_bytes();
+
+            let scalar = book.decoder();
+            let lut = book.lut_decoder();
+            assert!(lut.multi_table().is_some());
+
+            let mut r1 = BitReader::with_len(&bytes, bits);
+            let mut out1 = vec![0u8; n];
+            scalar.decode_block_into(&mut r1, &mut out1).unwrap();
+            let mut r2 = BitReader::with_len(&bytes, bits);
+            let mut out2 = vec![0u8; n];
+            lut.decode_block_into(&mut r2, &mut out2).unwrap();
+
+            assert_eq!(out1, data);
+            assert_eq!(out2, out1, "lut path diverged from scalar");
+            assert_eq!(r1.pos(), r2.pos(), "consumed bit counts diverged");
+        });
+    }
+
+    #[test]
+    fn prop_truncated_streams_error_identically() {
+        check("lut decode truncation == scalar errors", 60, |g| {
+            let n = g.usize(2..1200);
+            let a = g.usize(1..80);
+            let data = g.skewed_bytes(n, a);
+            let book = book_of(&data);
+            let mut w = BitWriter::new();
+            for &e in &data {
+                book.encode_symbol(e, &mut w);
+            }
+            let bits = w.len_bits();
+            let bytes = w.into_bytes();
+            let cut = g.usize(1..bits);
+            let short_bits = bits - cut;
+            let short = &bytes[..short_bits.div_ceil(8)];
+
+            let run = |dec: &crate::huffman::CanonicalDecoder| {
+                let mut r = BitReader::with_len(short, short_bits);
+                let mut out = vec![0u8; n];
+                dec.decode_block_into(&mut r, &mut out).map(|()| out)
+            };
+            let scalar = run(&book.decoder());
+            let lut = run(&book.lut_decoder());
+            // Both must fail — and with the same precise error: the LUT
+            // only fires when consumed ≤ remaining, so every tail walks
+            // the identical scalar kernel.
+            assert!(scalar.is_err(), "scalar accepted a truncated stream");
+            assert_eq!(
+                scalar.as_ref().err(),
+                lut.as_ref().err(),
+                "exhaustion details diverged"
+            );
+        });
+    }
+
+    #[test]
+    fn degenerate_books_pack_one_symbol_per_entry() {
+        // A near-uniform 180-symbol alphabet under a 64-entry book gives
+        // every dedicated code ≥ 6 bits: two never fit an 11-bit probe,
+        // so the table degenerates to ≤ 1 symbol per entry and decoding
+        // leans wholly on the fallback — still bit-exact.
+        let data: Vec<u8> = (0..7200u32).map(|i| (i % 180) as u8).collect();
+        let hist = Histogram::from_bytes(&data);
+        let book = CodeBook::from_histogram(&hist, 64, 24).unwrap();
+        let min_len = book
+            .canonical_pairs()
+            .iter()
+            .map(|&(_, l)| l)
+            .min()
+            .unwrap();
+        assert!(min_len > LUT_BITS / 2, "alphabet not degenerate enough");
+        let table = MultiDecodeTable::new(&book);
+        for p in 0..(1usize << LUT_BITS) {
+            let e = table.entry_at(p);
+            assert!(
+                MultiDecodeTable::count(e) <= LUT_BITS / min_len,
+                "probe {p}: over-packed entry"
+            );
+        }
+        assert!(table.avg_fill() <= (LUT_BITS / min_len) as f64);
+        // And the public decode path still roundtrips through it.
+        let block = crate::huffman::compress_with_book(&data, &book).unwrap();
+        assert_eq!(decompress_exponents(&block).unwrap(), data);
+    }
+
+    #[test]
+    fn skewed_streams_fill_multiple_symbols_per_probe() {
+        // Paper-entropy stream (few dominant exponents → short codes):
+        // the uniform-probe average fill must exceed 2 symbols/probe.
+        let data: Vec<u8> = (0..4000u32).map(|i| 124 + (i % 100 / 45) as u8).collect();
+        let book = book_of(&data);
+        let table = MultiDecodeTable::new(&book);
+        assert!(
+            (1.0..=LUT_MAX_SYMS as f64).contains(&table.avg_fill()),
+            "avg fill {} out of range",
+            table.avg_fill()
+        );
+        assert!(
+            table.avg_fill() > 2.0,
+            "avg fill {} too low for a skewed book",
+            table.avg_fill()
+        );
+    }
+
+    #[test]
+    fn decompress_path_uses_lut_above_threshold() {
+        // Public roundtrip sanity on a stream big enough for the LUT
+        // threshold, plus one below it (scalar path) — identical output
+        // shape either way.
+        for n in [64usize, LUT_DECODE_MIN_SYMBOLS + 1] {
+            let data: Vec<u8> = (0..n).map(|i| 120 + (i % 5) as u8).collect();
+            let block = compress_exponents(&data).unwrap();
+            assert_eq!(decompress_exponents(&block).unwrap(), data, "n {n}");
+        }
+    }
+}

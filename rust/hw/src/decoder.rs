@@ -16,6 +16,7 @@ use lexi_core::batch::{LaneDecoders, LaneStream};
 use lexi_core::bitstream::BitReader;
 use lexi_core::error::{Error, Result};
 use lexi_core::huffman::{CanonicalDecoder, CodeBook};
+use lexi_core::lut::{MultiDecodeTable, LUT_BITS, LUT_MAX_SYMS};
 
 /// A multi-stage decoder configuration.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -134,20 +135,105 @@ impl DecodeReport {
     }
 }
 
+/// Multi-symbol front-table parameters (ISSUE 4, paper §4.4): a direct
+/// `2^LUT_BITS`-entry table in front of the length-class stages that
+/// resolves a whole **group of up to [`LUT_MAX_SYMS`] codewords in one
+/// cycle** — the hardware twin of `lexi-core`'s
+/// [`MultiDecodeTable`]. Probes whose entry is a sentinel (ESC-leading,
+/// long-code or partial patterns) fall through to the multi-stage walk
+/// and pay its per-stage latency as before.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MultiLutSpec {
+    /// Table entries written per cycle during the per-codebook fill
+    /// (a 64-bit entry per probe; a 512-bit SRAM write port fills 64
+    /// entries/cycle). Bounds the startup latency the sim charges.
+    pub fill_entries_per_cycle: u32,
+}
+
+impl MultiLutSpec {
+    /// Chosen design point: 2^11 × 64-bit entries (16 KiB) filled 64
+    /// entries per cycle → 32-cycle fill, invisible next to the
+    /// codebook pipeline's sampling window.
+    pub fn paper_default() -> Self {
+        MultiLutSpec {
+            fill_entries_per_cycle: 64,
+        }
+    }
+
+    /// Cycles to fill the table for one codebook (charged once per
+    /// runtime-compressed transfer, alongside the codebook startup).
+    pub fn fill_cycles(&self) -> u64 {
+        MultiDecodeTable::fill_probes().div_ceil(self.fill_entries_per_cycle.max(1) as u64)
+    }
+
+    /// Probe window width (mirrors `lexi-core`'s table).
+    pub fn lut_bits(&self) -> u32 {
+        LUT_BITS
+    }
+
+    /// Maximum symbols a probe resolves per cycle.
+    pub fn max_symbols_per_cycle(&self) -> usize {
+        LUT_MAX_SYMS
+    }
+}
+
 /// The multi-stage decoder unit.
 pub struct DecoderUnit {
     cfg: DecoderConfig,
+    /// Multi-symbol front table; `None` models the ISSUE 2 unit (one
+    /// symbol per lane per cycle at best).
+    multi: Option<MultiLutSpec>,
 }
 
 impl DecoderUnit {
-    /// Build a decoder; errors if the config is invalid.
+    /// Build a decoder; errors if the config is invalid. No multi-symbol
+    /// front table: each symbol pays its stage latency (legacy model).
     pub fn new(cfg: DecoderConfig) -> Result<Self> {
         cfg.validate()?;
-        Ok(DecoderUnit { cfg })
+        Ok(DecoderUnit { cfg, multi: None })
+    }
+
+    /// Build a decoder with the multi-symbol front table (ISSUE 4):
+    /// grouped probes resolve in one cycle, sentinel probes fall back to
+    /// the staged walk. The table is modeled on the lane path
+    /// ([`DecoderUnit::decode_lane_stream`]); the single-stream
+    /// [`DecoderUnit::decode`] keeps pure per-stage accounting (see its
+    /// doc).
+    pub fn with_multi(cfg: DecoderConfig, spec: MultiLutSpec) -> Result<Self> {
+        cfg.validate()?;
+        Ok(DecoderUnit {
+            cfg,
+            multi: Some(spec),
+        })
+    }
+
+    /// The multi-symbol front-table spec, if enabled.
+    pub fn multi(&self) -> Option<&MultiLutSpec> {
+        self.multi.as_ref()
+    }
+
+    /// Nominal symbols per cycle per lane for `book`: the front table's
+    /// average fill (uniform-probe mean, sentinels as 1), or 1.0 for the
+    /// legacy unit. Builds a table to measure it — a per-book startup
+    /// cost, not a per-symbol one.
+    pub fn symbols_per_cycle(&self, book: &CodeBook) -> f64 {
+        match &self.multi {
+            Some(_) => MultiDecodeTable::new(book).avg_fill(),
+            None => 1.0,
+        }
     }
 
     /// Decode `count` exponents from `r` using `book`, with cycle-accurate
     /// stage accounting. Bit-exact with `lexi-core`'s canonical decoder.
+    ///
+    /// This single-stream path always charges the **staged walk**, even
+    /// on units built with [`DecoderUnit::with_multi`]: its
+    /// [`DecodeReport::per_stage`] histogram is only meaningful for the
+    /// multi-stage pipeline (Fig 6's sweep consumes it), whereas the
+    /// front table bypasses the stages entirely. The multi-symbol cycle
+    /// model lives on the lane path
+    /// ([`DecoderUnit::decode_lane_stream`]), the surface the paper's
+    /// link-rate argument — and the sim's makespans — are about.
     pub fn decode(
         &self,
         r: &mut BitReader,
@@ -211,6 +297,12 @@ impl DecoderUnit {
     /// `book` argument; every book in use must satisfy
     /// [`DecoderConfig::supports`]. Bit-exact with `LaneCodec::decode`
     /// and `LaneCodec::decode_lockstep`.
+    ///
+    /// Units built via [`DecoderUnit::with_multi`] (ISSUE 4) front every
+    /// lane with the multi-symbol LUT: a visit that hits a full-fit
+    /// entry emits its whole codeword group for **one** cycle; sentinel
+    /// probes fall back to the staged walk. Symbols and errors are
+    /// unchanged — only the cycle accounting (and thus makespans) drops.
     pub fn decode_lane_stream(
         &self,
         stream: &LaneStream,
@@ -229,8 +321,14 @@ impl DecoderUnit {
             }
         }
         // Book precedence + per-lane indexing live in lexi-core's
-        // LaneDecoders, shared with both software decode paths.
-        let decs = LaneDecoders::for_stream(stream, book);
+        // LaneDecoders, shared with both software decode paths — a
+        // multi unit asks for LUT-carrying decoders, so the front
+        // tables inherit exactly the same precedence rule.
+        let decs = if self.multi.is_some() {
+            LaneDecoders::for_stream_lut(stream, book)
+        } else {
+            LaneDecoders::for_stream(stream, book)
+        };
         let n = stream.lanes;
         let mut out = vec![0u8; stream.count];
         let mut readers: Vec<BitReader> = views
@@ -240,26 +338,60 @@ impl DecoderUnit {
         let dec_by_lane = decs.by_lane(n);
         let mut per_lane_cycles = vec![0u64; n];
         let mut lockstep_cycles = 0u64;
-        // Round-robin rounds, mirroring the software lockstep loop: round
-        // k decodes symbols k*n .. k*n + active.
-        let rounds = stream.count.div_ceil(n);
-        for k in 0..rounds {
-            let base = k * n;
-            let active = n.min(stream.count - base);
+        // Multi-symbol front tables (ISSUE 4), when the unit has them
+        // (riding on the LUT decoders `for_stream_lut` built above): a
+        // probe that resolves a full-fit codeword group costs one
+        // cycle; sentinel probes fall back to the staged walk and pay
+        // its latency. With no tables every visit takes the fallback
+        // arm, which IS the legacy one-symbol-per-round model: the
+        // visit sets, stage charges, round maxima, and output indices
+        // are identical, so one loop serves both cycle models.
+        let lane_syms: Vec<usize> = views.iter().map(|v| v.symbols).collect();
+        let mut done = vec![0usize; n];
+        let mut live = true;
+        while live {
+            live = false;
             let mut round_max = 0u64;
-            for l in 0..active {
+            for l in 0..n {
+                let want = lane_syms[l] - done[l];
+                if want == 0 {
+                    continue;
+                }
+                live = true;
                 let r = &mut readers[l];
-                let before = r.pos();
-                let sym = dec_by_lane[l].decode(r)?;
-                let consumed = (r.pos() - before) as u32;
-                let stage = self
-                    .cfg
-                    .stage_of(consumed)
-                    .ok_or(Error::InvalidCodeword { offset: before })?
-                    as u64;
-                per_lane_cycles[l] += stage;
-                round_max = round_max.max(stage);
-                out[base + l] = sym;
+                let grouped = dec_by_lane[l].multi_table().and_then(|table| {
+                    let e = table.entry_at(r.peek_zeroext(LUT_BITS) as usize);
+                    let c = MultiDecodeTable::count(e) as usize;
+                    let used = MultiDecodeTable::consumed(e);
+                    (c != 0 && c <= want && used as usize <= r.remaining())
+                        .then_some((e, c, used))
+                });
+                let cost = match grouped {
+                    Some((e, c, used)) => {
+                        for k in 0..c {
+                            out[l + (done[l] + k) * n] =
+                                MultiDecodeTable::symbol(e, k as u32);
+                        }
+                        r.skip(used)?;
+                        done[l] += c;
+                        1 // one direct probe resolves the whole group
+                    }
+                    None => {
+                        let before = r.pos();
+                        let sym = dec_by_lane[l].decode(r)?;
+                        let consumed = (r.pos() - before) as u32;
+                        let stage = self
+                            .cfg
+                            .stage_of(consumed)
+                            .ok_or(Error::InvalidCodeword { offset: before })?
+                            as u64;
+                        out[l + done[l] * n] = sym;
+                        done[l] += 1;
+                        stage
+                    }
+                };
+                per_lane_cycles[l] += cost;
+                round_max = round_max.max(cost);
             }
             lockstep_cycles += round_max;
         }
@@ -604,6 +736,128 @@ mod tests {
                 assert_eq!(LaneCodec::decode(&stream, &book).unwrap(), data);
             }
         });
+    }
+
+    #[test]
+    fn multi_unit_is_bit_exact_and_never_slower() {
+        use lexi_core::batch::LaneCodec;
+        check("multi-symbol unit == legacy symbols, ≤ legacy cycles", 40, |g| {
+            let n = g.usize(1..2500);
+            let data = match g.usize(0..3) {
+                0 => {
+                    let a = g.usize(1..24);
+                    g.skewed_bytes(n, a)
+                }
+                1 => {
+                    let a = g.usize(33..140);
+                    g.skewed_bytes(n, a)
+                }
+                _ => g.vec(n, |g| g.u8()),
+            };
+            let hist = Histogram::from_bytes(&data);
+            let book = CodeBook::lexi_default(&hist).unwrap();
+            let legacy = DecoderUnit::new(DecoderConfig::paper_default()).unwrap();
+            let multi = DecoderUnit::with_multi(
+                DecoderConfig::paper_default(),
+                MultiLutSpec::paper_default(),
+            )
+            .unwrap();
+            for lanes in [1usize, 2, 4, 8] {
+                let stream = LaneCodec::new(lanes).unwrap().encode(&data, &book);
+                let (a, ra) = legacy.decode_lane_stream(&stream, &book).unwrap();
+                let (b, rb) = multi.decode_lane_stream(&stream, &book).unwrap();
+                assert_eq!(a, data, "legacy lanes {lanes}");
+                assert_eq!(b, data, "multi lanes {lanes}");
+                assert_eq!(ra.symbols, rb.symbols);
+                // Grouped probes cost 1 cycle for ≥ 1 symbols; fallback
+                // costs are identical — the multi unit never loses.
+                assert!(
+                    rb.makespan <= ra.makespan,
+                    "lanes {lanes}: multi makespan {} > legacy {}",
+                    rb.makespan,
+                    ra.makespan
+                );
+                // (lockstep_cycles carries no such guarantee: grouping
+                // shifts fallback symbols to earlier rounds, which can
+                // re-pair round maxima either way. The engine couples to
+                // the makespan, which only improves.)
+                // Occupancy invariants survive the grouped model.
+                let serial: u64 = rb.per_lane_cycles.iter().sum();
+                assert!(rb.makespan <= rb.lockstep_cycles);
+                assert!(rb.lockstep_cycles <= serial);
+            }
+        });
+    }
+
+    #[test]
+    fn multi_unit_beats_one_symbol_per_cycle_on_paper_streams() {
+        // The whole point of the front table (paper §4.4): a < 3-bit
+        // entropy stream decodes at > 1 symbol per lane-cycle, which the
+        // ISSUE 2 unit could never do (every symbol cost ≥ 1 stage).
+        let data: Vec<u8> = (0..20_000u32).map(|i| 124 + (i % 100 / 40) as u8).collect();
+        let hist = Histogram::from_bytes(&data);
+        let book = CodeBook::lexi_default(&hist).unwrap();
+        let multi = DecoderUnit::with_multi(
+            DecoderConfig::paper_default(),
+            MultiLutSpec::paper_default(),
+        )
+        .unwrap();
+        use lexi_core::batch::LaneCodec;
+        let stream = LaneCodec::new(1).unwrap().encode(&data, &book);
+        let (out, rep) = multi.decode_lane_stream(&stream, &book).unwrap();
+        assert_eq!(out, data);
+        let sym_per_cycle = rep.symbols as f64 / rep.makespan as f64;
+        assert!(
+            sym_per_cycle > 1.0,
+            "multi unit only reached {sym_per_cycle:.2} symbols/cycle"
+        );
+        assert!(sym_per_cycle <= LUT_MAX_SYMS as f64);
+        // And the nominal estimate agrees in direction.
+        assert!(multi.symbols_per_cycle(&book) > 1.0);
+        assert_eq!(
+            DecoderUnit::new(DecoderConfig::paper_default())
+                .unwrap()
+                .symbols_per_cycle(&book),
+            1.0
+        );
+    }
+
+    #[test]
+    fn multi_unit_handles_embedded_books() {
+        use lexi_core::batch::LaneCodec;
+        let lanes = 2usize;
+        let data: Vec<u8> = (0..600)
+            .map(|i| if i % 2 == 0 { 40 + (i / 2 % 3) as u8 } else { 200 + (i / 2 % 5) as u8 })
+            .collect();
+        let books: Vec<CodeBook> = (0..lanes)
+            .map(|l| {
+                let lane_syms: Vec<u8> = data.iter().copied().skip(l).step_by(lanes).collect();
+                CodeBook::lexi_default(&Histogram::from_bytes(&lane_syms)).unwrap()
+            })
+            .collect();
+        let stream = LaneCodec::new(lanes)
+            .unwrap()
+            .encode_per_lane(&data, &books)
+            .unwrap();
+        let multi = DecoderUnit::with_multi(
+            DecoderConfig::paper_default(),
+            MultiLutSpec::paper_default(),
+        )
+        .unwrap();
+        let wrong = CodeBook::lexi_default(&Histogram::from_bytes(&[1u8, 2, 3])).unwrap();
+        let (out, rep) = multi.decode_lane_stream(&stream, &wrong).unwrap();
+        assert_eq!(out, data);
+        assert_eq!(rep.symbols, data.len() as u64);
+    }
+
+    #[test]
+    fn multi_lut_fill_cycles_are_bounded() {
+        let spec = MultiLutSpec::paper_default();
+        // 2^11 entries at 64/cycle = 32 cycles — dwarfed by the codebook
+        // pipeline's sampling window, but no longer free.
+        assert_eq!(spec.fill_cycles(), 32);
+        assert_eq!(spec.lut_bits(), LUT_BITS);
+        assert_eq!(spec.max_symbols_per_cycle(), LUT_MAX_SYMS);
     }
 
     #[test]

@@ -9,9 +9,13 @@ in this container). Mirrors the Rust bit-for-bit:
   * LaneCodec encode / v1+v2 wire format / from_bytes validation
   * lane-at-a-time decode vs lockstep decode
   * hw lockstep cycle model bounds    (decoder.rs)
-  * BDI tag/base/delta bit layout     (NEW PR 3: bdi.rs — mirror encode
+  * BDI tag/base/delta bit layout     (PR 3: bdi.rs — mirror encode
     vs an independent string-of-bits reference, roundtrip, block-bits
     pricing, truncation + hostile-count-guard arithmetic)
+  * Multi-symbol decode LUT           (NEW PR 4: lut.rs — mirror of the
+    MultiDecodeTable fill/packing rules vs brute-force enumeration of
+    all 2^K probes through the string-of-bits reference codec, plus the
+    multi-symbol block-decode loop vs the reference decode)
 
 Reference implementations are independent (string-of-bits codec), so a
 mirror bug and a reference bug can't cancel.
@@ -692,6 +696,91 @@ def bdi_ref_decode(bitstr):
     return out
 
 
+# --------------------------------------------------------------------------
+# Multi-symbol decode LUT (PR 4): mirror of lut.rs::MultiDecodeTable.
+#
+# Entry layout (one 64-bit word per 2^LUT_BITS probe):
+#   bits  0..32  up to 4 decoded exponents, first-decoded in byte 0
+#   bits 32..36  symbol count (0 = sentinel, fall back to scalar kernel)
+#   bits 40..48  total bits consumed
+LUT_BITS = 11
+LUT_MAX_SYMS = 4
+SCRATCH_MISS = 0xFFFF
+SCRATCH_ESC = 0xFFFE
+
+
+def mirror_multi_table(book):
+    """Port of MultiDecodeTable::from_decoder: canonical scratch
+    classify, then a greedy shift-reindex pack of up to LUT_MAX_SYMS
+    codewords/probe. (The Rust reuses the decoder's fast table as the
+    scratch; its MISS sentinel covers ESC and too-long codes, which this
+    mirror's SCRATCH_ESC/SCRATCH_MISS split treats identically — both
+    stop the pack.)"""
+    _, _, canonical = book
+    size = 1 << LUT_BITS
+    scratch = [SCRATCH_MISS] * size
+    nxt = 0
+    prev = canonical[0][1]
+    for sym, ln in canonical:
+        nxt <<= ln - prev
+        prev = ln
+        if ln <= LUT_BITS:
+            lo = nxt << (LUT_BITS - ln)
+            hi = (nxt + 1) << (LUT_BITS - ln)
+            val = SCRATCH_ESC if sym == ESC else ((sym << 8) | ln)
+            for i in range(lo, hi):
+                scratch[i] = val
+        nxt += 1
+    entries = []
+    total = 0
+    for p in range(size):
+        e = 0
+        used = 0
+        cnt = 0
+        while cnt < LUT_MAX_SYMS:
+            rem = LUT_BITS - used
+            if rem == 0:
+                break
+            s = scratch[(p << used) & (size - 1)]
+            if s >= SCRATCH_ESC:
+                break
+            ln = s & 0xFF
+            if ln > rem:
+                break
+            e |= (s >> 8) << (8 * cnt)
+            used += ln
+            cnt += 1
+        if cnt:
+            e |= (cnt << 32) | (used << 40)
+        entries.append(e)
+        total += max(cnt, 1)
+    return entries, total / size
+
+
+def ref_multi_entry(rev, esc_s, probe):
+    """Independent brute force: decode the probe's bit string greedily
+    with the string-of-bits codec, stopping at ESC, at a codeword that
+    doesn't fully fit the known bits, or at LUT_MAX_SYMS symbols."""
+    bits = format(probe, "0{}b".format(LUT_BITS))
+    syms = []
+    used = 0
+    while len(syms) < LUT_MAX_SYMS:
+        hit = None
+        for l in range(1, LUT_BITS - used + 1):
+            pref = bits[used : used + l]
+            if pref == esc_s:
+                hit = "esc"
+                break
+            if pref in rev:
+                hit = (rev[pref], l)
+                break
+        if hit is None or hit == "esc":
+            break
+        syms.append(hit[0])
+        used += hit[1]
+    return syms, used
+
+
 def bdi_gen_data(rng, n):
     mode = rng.randrange(4)
     if mode == 0:  # constant (width-0 blocks)
@@ -981,6 +1070,70 @@ def main():
             pass
         ok9 += 1
     print(f"[9] BDI mirror == independent reference, roundtrip, pricing, guards: {ok9} cases OK")
+
+    # 10) Multi-symbol decode LUT (PR 4): for known codebooks, rebuild
+    #     every entry by brute-force enumeration of all 2^K probes with
+    #     the string-of-bits reference codec and assert symbols / count /
+    #     consumed-bits match the Rust packing rules, then run the
+    #     multi-symbol block-decode loop against the reference decode.
+    ok10 = 0
+    probes = 1 << LUT_BITS
+    for trial in range(20):
+        n = rng.randrange(16, 1200)
+        data = gen_data(rng, n, rng.random() < 0.35)
+        book = make_book(data)
+        if book is None:
+            continue
+        codes, esc, _ = book
+        rev = {format(c, "0{}b".format(l)): s for s, (c, l) in codes.items()}
+        esc_s = format(esc[0], "0{}b".format(esc[1]))
+        entries, avg = mirror_multi_table(book)
+        assert 1.0 <= avg <= LUT_MAX_SYMS, f"avg fill {avg} out of range"
+        min_len = min(l for _, (c, l) in codes.items()) if codes else LUT_BITS + 1
+        for p in range(probes):
+            e = entries[p]
+            cnt = (e >> 32) & 0xF
+            used = (e >> 40) & 0xFF
+            syms = [(e >> (8 * j)) & 0xFF for j in range(cnt)]
+            rsyms, rused = ref_multi_entry(rev, esc_s, p)
+            assert syms == rsyms and used == rused, (
+                f"multi entry mismatch probe={p:#0{LUT_BITS + 2}b}: "
+                f"mirror ({syms}, {used}) vs reference ({rsyms}, {rused})"
+            )
+            if min_len <= LUT_BITS:
+                assert cnt <= LUT_BITS // min_len, "entry over-packed"
+        # Multi-symbol block decode (decode_block_into's LUT loop) must
+        # reproduce the reference decode bit-for-bit, fallback included.
+        w = BitWriter()
+        for b in data:
+            if b in codes:
+                c, l = codes[b]
+            else:
+                c, l = (esc[0] << 8) | b, esc[1] + 8
+            w.put(c, l)
+        payload_bits = w.len_bits()
+        buf = w.into_bytes()
+        s = BitRefill(buf, 0, payload_bits)
+        dec = Decoder(book)
+        out = []
+        while len(out) < len(data):
+            if s.navail < 40:
+                s.refill()
+            e = entries[s.bitbuf >> (64 - LUT_BITS)]
+            cnt = (e >> 32) & 0xF
+            used = (e >> 40) & 0xFF
+            if cnt and cnt <= len(data) - len(out) and used <= s.remaining():
+                out.extend((e >> (8 * j)) & 0xFF for j in range(cnt))
+                s.consume(used)
+            else:
+                sym, u = dec.decode_from_window(s.bitbuf, s.remaining(), s.pos())
+                s.consume(u)
+                out.append(sym)
+        assert out == data, f"multi-symbol decode loop mismatch n={n}"
+        ok10 += 1
+    print(
+        f"[10] multi-symbol LUT: {ok10} books x {probes} probes match brute force, decode loop lossless"
+    )
 
     print("\nALL LOGIC CHECKS PASSED")
 
