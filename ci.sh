@@ -51,24 +51,33 @@ if [[ "${1:-}" != "--quick" ]]; then
     rm -f BENCH_perf_codec.json
     cargo bench --bench perf_codec
 
-    # Perf-regression gate (ISSUE 2): diff the fresh JSON against the
-    # committed baseline; >15% throughput drop on any shared row fails.
-    # LEXI_SKIP_PERF_GATE=1 skips (toolchain-less or noisy containers);
-    # a missing baseline skips with a reminder to commit one.
+    # NoC stepping bench (ISSUE 5): uniform/hotspot ± egress codec ports,
+    # cycles/s rows + the ≤1.3× codec-tagged slowdown target, dumped to
+    # BENCH_perf_noc.json for the same gate.
+    echo "== perf_noc (release) =="
+    rm -f BENCH_perf_noc.json
+    cargo bench --bench perf_noc
+
+    # Perf-regression gate (ISSUE 2, extended by ISSUE 5): diff each
+    # fresh JSON against the committed baseline; >15% throughput drop on
+    # any shared row fails. LEXI_SKIP_PERF_GATE=1 skips (toolchain-less
+    # or noisy containers); a missing baseline skips with a reminder.
     if [[ "${LEXI_SKIP_PERF_GATE:-0}" == "1" ]]; then
         echo "== perf gate: SKIPPED (LEXI_SKIP_PERF_GATE=1) =="
     elif ! command -v python3 >/dev/null 2>&1; then
         echo "== perf gate: SKIPPED (no python3) =="
     else
-        baseline=$(mktemp)
-        if git show HEAD:BENCH_perf_codec.json > "$baseline" 2>/dev/null; then
-            echo "== perf gate: fresh BENCH_perf_codec.json vs HEAD baseline =="
-            python3 tools/perf_gate.py BENCH_perf_codec.json "$baseline"
-        else
-            echo "== perf gate: SKIPPED (no committed BENCH_perf_codec.json baseline —"
-            echo "   commit the freshly written one to arm the gate) =="
-        fi
-        rm -f "$baseline"
+        for bench_json in BENCH_perf_codec.json BENCH_perf_noc.json; do
+            baseline=$(mktemp)
+            if git show "HEAD:$bench_json" > "$baseline" 2>/dev/null; then
+                echo "== perf gate: fresh $bench_json vs HEAD baseline =="
+                python3 tools/perf_gate.py "$bench_json" "$baseline"
+            else
+                echo "== perf gate: SKIPPED for $bench_json (no committed baseline —"
+                echo "   commit the freshly written one to arm the gate) =="
+            fi
+            rm -f "$baseline"
+        done
     fi
 fi
 

@@ -20,7 +20,6 @@
 use lexi::coordinator::Session;
 use lexi::models::corpus::Corpus;
 use lexi::models::{ModelConfig, ModelScale};
-use lexi::noc::traffic::{segment_transfer, MAX_PACKET_BITS};
 use lexi::noc::{Network, NetworkConfig, PacketSpec};
 use lexi::runtime::{Manifest, Runtime};
 use lexi::sim::compression::CompressionMode;
@@ -107,17 +106,22 @@ fn main() -> anyhow::Result<()> {
         .enumerate()
     {
         let transfers = lexi::models::traffic::decode_step(&tiny_cfg, &corpus, 0);
+        // Codec-tagged specs through the ExpCodec registry (ISSUE 5):
+        // the replay ships the same wire bytes the engine's policy
+        // prices and drains through the egress decoder ports.
         let mut specs: Vec<PacketSpec> = Vec::new();
         for tr in &transfers {
-            let src = engine.system.resolve(tr.src, tr.layer);
-            let dst = engine.system.resolve(tr.dst, tr.layer);
-            let bytes = crs.wire_bytes(tr.bytes, tr.kind, *mode);
-            specs.extend(segment_transfer(src, dst, bytes * 8, 0, MAX_PACKET_BITS));
+            specs.extend(lexi::sim::xval::tagged_specs(&engine, &crs, tr, *mode, 0));
         }
-        let mut net = Network::new(ncfg);
+        let ecfg = lexi::sim::xval::egress_config_for(
+            &engine,
+            &crs,
+            lexi::models::traffic::TransferKind::Activation,
+        );
+        let mut net = Network::with_egress(ncfg, ecfg);
         net.schedule_packets(&specs);
         let stats = net.run_to_completion(100_000_000);
-        cycle_ns[i] = stats.cycles as f64 * ncfg.cycle_ns();
+        cycle_ns[i] = stats.completion_cycle as f64 * ncfg.cycle_ns();
     }
     println!(
         "\ncycle-accurate NoI, one tiny decode step: {:.1} ns uncompressed -> {:.1} ns LEXI ({:.1}% faster)",

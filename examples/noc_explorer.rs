@@ -8,17 +8,26 @@
 //! cycle-accurate NoI under different array sizes and link bandwidths,
 //! with and without LEXI — the slower the links and the bigger the mesh,
 //! the more the compressed traffic matters.
+//!
+//! Since ISSUE 5 the replay is codec-aware end to end: wire sizes come
+//! from the engine's [`CodecPolicy`] through the `ExpCodec` registry
+//! (`wire_bytes_for`), packets carry codec tags, and ejection drains
+//! through the egress decoder ports — so the numbers here are the same
+//! wire bytes and decoder rates `lexi-sim`'s analytic engine charges.
 
 use lexi::models::corpus::Corpus;
 use lexi::models::{ModelConfig, ModelScale};
-use lexi::noc::traffic::{segment_transfer, MAX_PACKET_BITS};
 use lexi::noc::{Mesh, Network, NetworkConfig, PacketSpec};
 use lexi::sim::compression::{CompressionMode, CrTable};
 use lexi::sim::simba::SimbaSystem;
+use lexi::sim::xval;
+use lexi::sim::Engine;
 use lexi_bench::Table;
+use lexi_models::traffic::TransferKind;
 
 fn run_once(
     system: &SimbaSystem,
+    engine: &Engine,
     ncfg: NetworkConfig,
     crs: &CrTable,
     mode: CompressionMode,
@@ -28,20 +37,28 @@ fn run_once(
     let transfers = lexi::models::traffic::decode_step(&cfg, &corpus, 0);
     let mut specs: Vec<PacketSpec> = Vec::new();
     for tr in &transfers {
+        // The explorer sweeps mesh sizes, so endpoints resolve through
+        // the local system — everything else (wire bytes through the
+        // ExpCodec registry, the tagging rule) is shared with the
+        // engine via xval (regression: the legacy `wire_bytes` path
+        // ignored the codec policy).
         let src = system.resolve(tr.src, tr.layer);
         let dst = system.resolve(tr.dst, tr.layer);
-        let bytes = crs.wire_bytes(tr.bytes, tr.kind, mode);
-        specs.extend(segment_transfer(src, dst, bytes * 8, 0, MAX_PACKET_BITS));
+        specs.extend(xval::tagged_specs_between(engine, crs, tr, mode, src, dst, 0));
     }
-    let mut net = Network::new(ncfg);
+    // Egress decoder ports at the engine's measured operating point
+    // (per-kind rates differ little; Activation is representative).
+    let ecfg = xval::egress_config_for(engine, crs, TransferKind::Activation);
+    let mut net = Network::with_egress(ncfg, ecfg);
     net.schedule_packets(&specs);
     let stats = net.run_to_completion(1_000_000_000);
-    stats.cycles as f64 * ncfg.cycle_ns()
+    stats.completion_cycle as f64 * ncfg.cycle_ns()
 }
 
 fn main() -> anyhow::Result<()> {
     let cfg = ModelConfig::jamba(ModelScale::Tiny);
     let crs = CrTable::measure(&cfg, 42);
+    let engine = Engine::paper_default();
 
     println!("one decode step of jamba-tiny over the NoI (cycle-accurate):\n");
     let mut t = Table::new(&["mesh", "link Gbps", "uncompressed", "LEXI", "reduction"]);
@@ -59,8 +76,8 @@ fn main() -> anyhow::Result<()> {
                 link_gbps,
                 buf_depth: 4,
             };
-            let unc = run_once(&system, ncfg, &crs, CompressionMode::Uncompressed);
-            let lexi = run_once(&system, ncfg, &crs, CompressionMode::Lexi);
+            let unc = run_once(&system, &engine, ncfg, &crs, CompressionMode::Uncompressed);
+            let lexi = run_once(&system, &engine, ncfg, &crs, CompressionMode::Lexi);
             t.row(vec![
                 format!("{cols}x{rows}"),
                 format!("{link_gbps:.0}"),
@@ -71,5 +88,14 @@ fn main() -> anyhow::Result<()> {
         }
     }
     t.print();
+
+    // Cross-validation corner (ISSUE 5): the same transfers through the
+    // analytic engine vs the tagged cycle sim, uncongested.
+    println!("\nanalytic vs cycle (uncongested sizable transfers, target <15%):");
+    let transfers = lexi::models::traffic::decode_step(&cfg, &Corpus::wikitext2(), 0);
+    for tr in transfers.iter().filter(|t| t.bytes > 4096).take(4) {
+        let r = xval::replay_transfer(&engine, &crs, tr, CompressionMode::Lexi);
+        println!("  {}", r.row());
+    }
     Ok(())
 }

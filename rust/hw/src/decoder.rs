@@ -223,6 +223,15 @@ impl DecoderUnit {
         }
     }
 
+    /// Nominal decoder **cycles per symbol** per lane for `book` — the
+    /// reciprocal of [`DecoderUnit::symbols_per_cycle`]. This is the rate
+    /// a `lexi-noc` egress codec port (ISSUE 5) drains tagged flits at;
+    /// always > 0 (the front table's average fill is ≥ 1, a legacy unit
+    /// reads exactly 1.0).
+    pub fn cycles_per_symbol(&self, book: &CodeBook) -> f64 {
+        1.0 / self.symbols_per_cycle(book)
+    }
+
     /// Decode `count` exponents from `r` using `book`, with cycle-accurate
     /// stage accounting. Bit-exact with `lexi-core`'s canonical decoder.
     ///
@@ -818,6 +827,17 @@ mod tests {
             DecoderUnit::new(DecoderConfig::paper_default())
                 .unwrap()
                 .symbols_per_cycle(&book),
+            1.0
+        );
+        // The egress-port rate is the exact reciprocal (ISSUE 5): < 1
+        // cycle/symbol on paper-entropy books, exactly 1.0 legacy.
+        let cps = multi.cycles_per_symbol(&book);
+        assert!(cps > 0.0 && cps < 1.0, "multi cps {cps}");
+        assert!((cps * multi.symbols_per_cycle(&book) - 1.0).abs() < 1e-12);
+        assert_eq!(
+            DecoderUnit::new(DecoderConfig::paper_default())
+                .unwrap()
+                .cycles_per_symbol(&book),
             1.0
         );
     }

@@ -1,0 +1,287 @@
+//! Egress codec ports (ISSUE 5, paper §4.4).
+//!
+//! The paper places LEXI codecs "at the ingress and egress ports of
+//! network-on-chip routers", claiming the multi-lane LUT decoder sustains
+//! the maximum link bandwidth. This module is the cycle-level twin of that
+//! claim: every node's Local (ejection) port drains codec-tagged flits at
+//! the **measured decoder rate** instead of the codec-blind 1 flit/cycle.
+//!
+//! The model is deliberately small so `tools/logic_check.py` §[11] can
+//! mirror it line-for-line:
+//!
+//! * a node's decoder owns a fractional `busy_until` horizon (network
+//!   cycles, `f64` — the codec clock need not divide the link clock);
+//! * a flit may eject in cycle `now` iff the backlog is under one cycle
+//!   ahead ([`ready`]: `busy_until < now + 1 − ε`), otherwise the flit
+//!   stays in the local input buffer — no credit is returned upstream, so
+//!   a slow decoder backpressures into the network exactly like a full
+//!   buffer would;
+//! * an accepted flit advances the horizon by its decode cost
+//!   ([`accept`]: `busy_until = max(busy_until, now) + cost`), where the
+//!   cost is the flit's symbol share through the lanes plus — on the
+//!   *head* flit of a runtime-Huffman packet — the codebook-pipeline +
+//!   multi-symbol-LUT-fill startup.
+//!
+//! With a line-rate decoder (cost ≤ 1 cycle/flit) the horizon never runs
+//! ahead and ejection stays at 1 flit/cycle — the paper's operating
+//! point. An under-provisioned decoder (e.g. one lane) throttles ejection
+//! to one flit per `cost` cycles on average (fractional pacing: a
+//! 1.5-cycle cost ejects 2 flits every 3 cycles, not 1 per ⌈1.5⌉).
+
+use crate::packet::CodecTag;
+use lexi_core::codec::CodecKind;
+use lexi_core::huffman::CodeBook;
+use lexi_hw::decoder::DecoderUnit;
+
+/// Tolerance for the fractional-backlog comparison in [`ready`].
+pub const EGRESS_EPS: f64 = 1e-9;
+
+/// Nominal Huffman decoder occupancy at one lane (Fig 6's 4-stage
+/// average) — the fallback when no measured rate is installed. Matches
+/// `lexi-sim`'s `NOMINAL_CYCLES_PER_SYMBOL`.
+pub const NOMINAL_HUFFMAN_CPS: f64 = 1.16;
+
+/// Nominal BDI per-block decode cost per symbol (34 cycles / 32-symbol
+/// block). Matches `lexi-sim`'s `BDI_NOMINAL_CYCLES_PER_SYMBOL`.
+pub const NOMINAL_BDI_CPS: f64 = 1.0625;
+
+/// Nominal codebook-pipeline startup, ns (81-cycle worst case +
+/// sampling window at 1 GHz — a fixed wall-clock figure, like
+/// `Engine::codec_startup_ns`).
+pub const NOMINAL_CODEBOOK_STARTUP_NS: f64 = 170.0;
+
+/// Nominal multi-symbol LUT fill, in **codec cycles** (2048 entries at
+/// 64/cycle) — converted at the codec clock, like
+/// `Engine::lut_fill_cycles`.
+pub const NOMINAL_LUT_FILL_CYCLES: f64 = 32.0;
+
+/// Nominal runtime-Huffman startup at the paper's 1 GHz codec clock.
+/// Matches `Engine::huffman_startup_ns()` at the paper point; at other
+/// clocks use [`EgressCodecConfig::nominal`], which converts the LUT
+/// fill at `codec_ghz`.
+pub const NOMINAL_STARTUP_NS: f64 = NOMINAL_CODEBOOK_STARTUP_NS + NOMINAL_LUT_FILL_CYCLES;
+
+/// Egress decoder parameters for one network. Rates are **effective
+/// across all lanes** (codec cycles per symbol with every lane running),
+/// indexed by [`CodecKind::wire_tag`].
+#[derive(Clone, Copy, Debug)]
+pub struct EgressCodecConfig {
+    /// Parallel LUT decoder lanes at each receiver (reporting only; the
+    /// rates below already include lane parallelism).
+    pub lanes: usize,
+    /// Codec clock, GHz (converts codec cycles to ns).
+    pub codec_ghz: f64,
+    /// Effective decoder cycles per symbol per codec, all lanes
+    /// combined, indexed by `CodecKind::wire_tag()`. Raw must be 0.
+    pub cycles_per_symbol: [f64; 3],
+    /// One-time startup charged on the head flit of each runtime-Huffman
+    /// packet (codebook pipeline + multi-symbol LUT fill), ns.
+    pub startup_ns: f64,
+}
+
+impl EgressCodecConfig {
+    /// Nominal rates (Fig 6 Huffman average, BDI per-block model, free
+    /// Raw) split inverse-linearly across `lanes`. The startup mirrors
+    /// `Engine::huffman_startup_ns()`: a fixed-ns codebook pipeline
+    /// plus the LUT fill converted at `codec_ghz`.
+    pub fn nominal(lanes: usize, codec_ghz: f64) -> Self {
+        let l = lanes.max(1) as f64;
+        EgressCodecConfig {
+            lanes: lanes.max(1),
+            codec_ghz,
+            cycles_per_symbol: [NOMINAL_HUFFMAN_CPS / l, NOMINAL_BDI_CPS / l, 0.0],
+            startup_ns: NOMINAL_CODEBOOK_STARTUP_NS + NOMINAL_LUT_FILL_CYCLES / codec_ghz,
+        }
+    }
+
+    /// The paper operating point: 16 lanes at 1 GHz.
+    pub fn paper_default() -> Self {
+        Self::nominal(16, 1.0)
+    }
+
+    /// Rates measured on the `lexi-hw` multi-symbol LUT unit for `book`:
+    /// the Huffman lane rate is [`DecoderUnit::symbols_per_cycle`] (the
+    /// front table's average probe fill — > 1 symbol/lane/cycle on
+    /// paper-entropy books), split across `lanes`. BDI/Raw keep the
+    /// nominal model (no LUT pipeline to measure).
+    pub fn from_decoder(unit: &DecoderUnit, book: &CodeBook, lanes: usize, codec_ghz: f64) -> Self {
+        let mut cfg = Self::nominal(lanes, codec_ghz);
+        cfg.cycles_per_symbol[CodecKind::Huffman.wire_tag() as usize] =
+            unit.cycles_per_symbol(book) / lanes.max(1) as f64;
+        cfg
+    }
+
+    /// Install an externally measured effective rate (e.g. from
+    /// `lexi-sim`'s `CrTable::decode_cycles_per_symbol_for` at this
+    /// config's lane count) for one codec.
+    pub fn set_rate(&mut self, kind: CodecKind, cycles_per_symbol: f64) -> &mut Self {
+        self.cycles_per_symbol[kind.wire_tag() as usize] = cycles_per_symbol;
+        self
+    }
+
+    /// Decoder ns per symbol for `kind`, all lanes combined.
+    #[inline]
+    pub fn ns_per_symbol(&self, kind: CodecKind) -> f64 {
+        self.cycles_per_symbol[kind.wire_tag() as usize] / self.codec_ghz
+    }
+
+    /// Decode cost of one flit of a tagged packet, in **network cycles**:
+    /// the packet's symbols are spread uniformly over its flits (the
+    /// packer fills flits greedily, so per-flit symbol counts are within
+    /// one of each other), plus the startup on a runtime-Huffman head.
+    pub fn flit_cost_cycles(
+        &self,
+        tag: &CodecTag,
+        total_flits: u32,
+        is_head: bool,
+        cycle_ns: f64,
+    ) -> f64 {
+        let sym_share = tag.symbols as f64 / total_flits.max(1) as f64;
+        let mut cost_ns = sym_share * self.ns_per_symbol(tag.kind);
+        if is_head && tag.runtime_book && tag.kind == CodecKind::Huffman {
+            cost_ns += self.startup_ns;
+        }
+        cost_ns / cycle_ns
+    }
+}
+
+/// May a flit eject in cycle `now` given the decoder backlog horizon?
+/// (The backlog must be under one cycle ahead; `ε` absorbs float noise so
+/// an exactly line-rate decoder never spuriously stalls.)
+#[inline]
+pub fn ready(busy_until: f64, now: u64) -> bool {
+    busy_until < now as f64 + 1.0 - EGRESS_EPS
+}
+
+/// Advance the backlog horizon after accepting a flit of cost
+/// `cost_cycles` in cycle `now`.
+#[inline]
+pub fn accept(busy_until: f64, now: u64, cost_cycles: f64) -> f64 {
+    busy_until.max(now as f64) + cost_cycles
+}
+
+/// Per-node egress decoder state.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EgressPort {
+    /// Network cycle (fractional) at which the decoder's current backlog
+    /// is fully drained.
+    pub busy_until: f64,
+    /// Ejection attempts this port refused because the decoder was
+    /// backlogged (aggregate over all packets).
+    pub stall_cycles: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tag(kind: CodecKind, symbols: u64, runtime_book: bool) -> CodecTag {
+        CodecTag {
+            kind,
+            symbols,
+            runtime_book,
+        }
+    }
+
+    /// Replay the accept/stall rule on a saturated ejection port (a flit
+    /// always waiting) and return (completion_cycle, stalls).
+    fn drain(flits: u32, cost_body: f64, cost_head: f64) -> (u64, u64) {
+        let (mut busy, mut now, mut stalls, mut accepted) = (0.0f64, 0u64, 0u64, 0u32);
+        while accepted < flits {
+            if ready(busy, now) {
+                let c = if accepted == 0 { cost_head } else { cost_body };
+                busy = accept(busy, now, c);
+                accepted += 1;
+            } else {
+                stalls += 1;
+            }
+            now += 1;
+        }
+        (now.max(busy.ceil() as u64), stalls)
+    }
+
+    #[test]
+    fn line_rate_decoder_never_stalls() {
+        // cost ≤ 1 cycle/flit ⇒ ejection stays at 1 flit/cycle, exactly
+        // the paper's "sustains the maximum link bandwidth".
+        for cost in [0.0, 0.25, 0.9, 1.0] {
+            let (done, stalls) = drain(1000, cost, cost);
+            assert_eq!(stalls, 0, "cost {cost}");
+            assert_eq!(done, 1000, "cost {cost}");
+        }
+    }
+
+    #[test]
+    fn slow_decoder_throttles_fractionally() {
+        // cost 1.5 ⇒ 2 flits per 3 cycles, not 1 per ⌈1.5⌉ = 2.
+        let (done, stalls) = drain(1000, 1.5, 1.5);
+        assert!((done as f64 - 1500.0).abs() <= 2.0, "done {done}");
+        assert!(stalls > 0);
+        // cost 4 ⇒ 1 flit per 4 cycles.
+        let (done4, _) = drain(100, 4.0, 4.0);
+        assert!((done4 as f64 - 400.0).abs() <= 4.0, "done {done4}");
+    }
+
+    #[test]
+    fn startup_stalls_exactly_its_cycles() {
+        // Line-rate body cost, 158-cycle head startup: completion is
+        // flits + startup (the head's backlog must drain before the
+        // following flits eject).
+        let (done, stalls) = drain(100, 1.0, 1.0 + 158.0);
+        assert_eq!(done, 100 + 158);
+        assert_eq!(stalls, 158);
+    }
+
+    #[test]
+    fn flit_cost_spreads_symbols_and_charges_startup_on_head_only() {
+        let cfg = EgressCodecConfig::nominal(1, 1.0);
+        let cycle_ns = 1.28;
+        let t = tag(CodecKind::Huffman, 1000, true);
+        let body = cfg.flit_cost_cycles(&t, 100, false, cycle_ns);
+        let head = cfg.flit_cost_cycles(&t, 100, true, cycle_ns);
+        // 10 symbols/flit × 1.16 ns/sym ÷ 1.28 ns/cycle.
+        assert!((body - 10.0 * 1.16 / 1.28).abs() < 1e-9);
+        assert!((head - body - NOMINAL_STARTUP_NS / 1.28).abs() < 1e-9);
+        // Offline books (weights) and non-Huffman codecs skip startup.
+        let offline = tag(CodecKind::Huffman, 1000, false);
+        assert_eq!(
+            cfg.flit_cost_cycles(&offline, 100, true, cycle_ns),
+            cfg.flit_cost_cycles(&offline, 100, false, cycle_ns)
+        );
+        let bdi = tag(CodecKind::Bdi, 1000, true);
+        assert_eq!(
+            cfg.flit_cost_cycles(&bdi, 100, true, cycle_ns),
+            cfg.flit_cost_cycles(&bdi, 100, false, cycle_ns)
+        );
+        // Raw decodes free at any lane count.
+        let raw = tag(CodecKind::Raw, 1000, false);
+        assert_eq!(cfg.flit_cost_cycles(&raw, 100, false, cycle_ns), 0.0);
+    }
+
+    #[test]
+    fn paper_point_hides_decode_behind_the_wire() {
+        // 16 lanes at 1 GHz, paper flit/link: at wire ratio ~1.6 a
+        // 128-bit flit carries ~13 exponent symbols (0.1 symbols per
+        // coded wire bit); even at a generous 16 symbols/flit the
+        // per-flit cost stays ≤ 1 cycle — the decoder never throttles
+        // the link at the paper operating point.
+        let cfg = EgressCodecConfig::paper_default();
+        let t = tag(CodecKind::Huffman, 16, false); // generous: 16 syms/flit
+        let cost = cfg.flit_cost_cycles(&t, 1, false, 1.28);
+        assert!(cost <= 1.0, "paper point stalls the link: {cost}");
+    }
+
+    #[test]
+    fn measured_rates_install() {
+        let mut cfg = EgressCodecConfig::nominal(4, 2.0);
+        cfg.set_rate(CodecKind::Huffman, 0.08);
+        assert!((cfg.ns_per_symbol(CodecKind::Huffman) - 0.04).abs() < 1e-12);
+        assert_eq!(cfg.ns_per_symbol(CodecKind::Raw), 0.0);
+        // The LUT-fill share of the startup tracks the codec clock
+        // (mirrors Engine::huffman_startup_ns): 170 + 32/2 at 2 GHz.
+        assert!((cfg.startup_ns - (170.0 + 16.0)).abs() < 1e-12);
+        assert!(
+            (EgressCodecConfig::paper_default().startup_ns - NOMINAL_STARTUP_NS).abs() < 1e-12
+        );
+    }
+}

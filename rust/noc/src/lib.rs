@@ -12,16 +12,22 @@
 //!   per-packet latency and per-link utilization statistics.
 //! * [`traffic`] — synthetic patterns (uniform, transpose, hotspot) for
 //!   validation plus trace-driven injection for the chiplet system model.
+//! * [`egress`] — per-node egress codec ports (ISSUE 5): codec-tagged
+//!   packets drain through the measured multi-lane LUT decoder rate with
+//!   startup stalls and backpressure, instead of the codec-blind
+//!   1 flit/cycle ejection.
 //!
 //! Links are parameterized in Gbps; with the paper's 100 Gbps NoI links
 //! and 128-bit flits, one network cycle is 1.28 ns.
 
+pub mod egress;
 pub mod network;
 pub mod packet;
 pub mod router;
 pub mod topology;
 pub mod traffic;
 
+pub use egress::{EgressCodecConfig, EgressPort};
 pub use network::{Network, NetworkConfig, SimStats};
-pub use packet::{Flit, FlitKind, PacketSpec};
+pub use packet::{CodecTag, Flit, FlitKind, PacketRecord, PacketSpec};
 pub use topology::{Mesh, NodeId};

@@ -5,10 +5,21 @@
 //! interface (a multi-megabyte transfer does not materialize millions of
 //! flit structs up front), and `ready_at` stamping guarantees one hop per
 //! cycle regardless of router iteration order.
+//!
+//! **Egress codec ports (ISSUE 5):** a network built with
+//! [`Network::with_egress`] drains codec-tagged packets through a
+//! per-node [`EgressPort`] at the configured decoder rate instead of the
+//! unconditional 1 flit/cycle: a backlogged decoder refuses the ejection
+//! grant, the flit stays in the local input buffer, no credit returns
+//! upstream, and the stall backpressures into the mesh like any full
+//! buffer. Untagged packets (and networks without an egress config) keep
+//! the codec-blind ejection path bit-for-bit.
 
+use crate::egress::{self, EgressCodecConfig, EgressPort};
 use crate::packet::{Flit, FlitKind, PacketRecord, PacketSpec};
 use crate::router::Router;
 use crate::topology::{Mesh, NodeId, Port, NUM_PORTS};
+use lexi_core::error::{Error, Result};
 use std::collections::VecDeque;
 
 /// Network configuration.
@@ -50,15 +61,38 @@ struct Pending {
     emitted: u32,
 }
 
+/// Per-packet bookkeeping from activation to tail ejection.
+#[derive(Clone, Copy, Debug)]
+struct PacketMeta {
+    spec: PacketSpec,
+    total_flits: u32,
+    /// Cycle the head flit actually entered the network (`None` while
+    /// still queued at the NI) — the latency clock starts here, not at
+    /// the scheduled `spec.inject_at` (that gap is queueing delay).
+    head_inject: Option<u64>,
+    /// Ejection cycles spent blocked behind the egress decoder.
+    decode_stalls: u64,
+}
+
 /// Aggregate simulation statistics.
 #[derive(Clone, Debug, Default)]
 pub struct SimStats {
     pub delivered_packets: u64,
     pub delivered_flits: u64,
+    /// Exponent symbols carried by delivered codec-tagged packets.
+    pub delivered_symbols: u64,
     pub flit_hops: u64,
     pub cycles: u64,
     pub sum_latency: u64,
     pub max_latency: u64,
+    /// Σ per-packet source-NI queueing (scheduled → actual head inject).
+    pub sum_queueing: u64,
+    /// Ejection cycles refused by backlogged egress decoders.
+    pub decode_stall_cycles: u64,
+    /// Cycle by which every delivered packet — including its egress
+    /// decode tail — has completed. ≥ `cycles` when the decoder is still
+    /// draining after the last tail ejects.
+    pub completion_cycle: u64,
 }
 
 impl SimStats {
@@ -68,6 +102,15 @@ impl SimStats {
             0.0
         } else {
             self.sum_latency as f64 / self.delivered_packets as f64
+        }
+    }
+
+    /// Mean source-NI queueing delay in cycles.
+    pub fn avg_queueing(&self) -> f64 {
+        if self.delivered_packets == 0 {
+            0.0
+        } else {
+            self.sum_queueing as f64 / self.delivered_packets as f64
         }
     }
 
@@ -90,8 +133,12 @@ pub struct Network {
     /// Packets scheduled for the future, sorted descending by inject_at
     /// (pop from the back).
     schedule: Vec<PacketSpec>,
-    /// Per-packet bookkeeping (id → (spec, total)).
-    meta: std::collections::HashMap<u64, (PacketSpec, u32)>,
+    /// Per-packet bookkeeping (id → meta).
+    meta: std::collections::HashMap<u64, PacketMeta>,
+    /// Egress decoder model; `None` = codec-blind 1-flit/cycle ejection.
+    egress_cfg: Option<EgressCodecConfig>,
+    /// Per-node egress decoder state (parallel to `routers`).
+    egress: Vec<EgressPort>,
     /// Completion records.
     pub records: Vec<PacketRecord>,
     now: u64,
@@ -100,7 +147,7 @@ pub struct Network {
 }
 
 impl Network {
-    /// Build an idle network.
+    /// Build an idle network with codec-blind ejection.
     pub fn new(cfg: NetworkConfig) -> Self {
         let n = cfg.mesh.len();
         Network {
@@ -109,6 +156,8 @@ impl Network {
             ni_queues: vec![VecDeque::new(); n],
             schedule: Vec::new(),
             meta: std::collections::HashMap::new(),
+            egress_cfg: None,
+            egress: vec![EgressPort::default(); n],
             records: Vec::new(),
             now: 0,
             next_id: 0,
@@ -116,12 +165,58 @@ impl Network {
         }
     }
 
-    /// Schedule a set of packets (any order).
-    pub fn schedule_packets(&mut self, specs: &[PacketSpec]) {
+    /// Build a network whose Local ports drain codec-tagged packets
+    /// through the egress decoder model.
+    pub fn with_egress(cfg: NetworkConfig, egress: EgressCodecConfig) -> Self {
+        let mut net = Self::new(cfg);
+        net.egress_cfg = Some(egress);
+        net
+    }
+
+    /// The installed egress decoder config, if any.
+    pub fn egress_config(&self) -> Option<&EgressCodecConfig> {
+        self.egress_cfg.as_ref()
+    }
+
+    /// Per-node egress decoder state (read-only view for tests/tools).
+    pub fn egress_ports(&self) -> &[EgressPort] {
+        &self.egress
+    }
+
+    /// Schedule packets after validating their codec tags: a tag whose
+    /// symbol count exceeds the packet's wire bits (every coded symbol
+    /// costs at least one bit) or that rides a zero-size packet is
+    /// rejected up front — a bogus count must never reach the egress
+    /// cost model and mis-charge the decoder.
+    pub fn try_schedule_packets(&mut self, specs: &[PacketSpec]) -> Result<()> {
+        for (i, s) in specs.iter().enumerate() {
+            if let Some(tag) = s.codec {
+                if s.size_bits == 0 {
+                    return Err(Error::InvalidParameter(format!(
+                        "packet {i}: codec tag on a zero-size packet"
+                    )));
+                }
+                if tag.symbols > s.size_bits {
+                    return Err(Error::InvalidParameter(format!(
+                        "packet {i}: {} symbols cannot fit in {} wire bits \
+                         (≥ 1 coded bit per symbol)",
+                        tag.symbols, s.size_bits
+                    )));
+                }
+            }
+        }
         self.schedule.extend_from_slice(specs);
         // Descending by inject time so due packets pop O(1) from the back.
         self.schedule
             .sort_by_key(|s| std::cmp::Reverse(s.inject_at));
+        Ok(())
+    }
+
+    /// Schedule a set of packets (any order). Panics on invalid codec
+    /// tags; use [`Network::try_schedule_packets`] for untrusted specs.
+    pub fn schedule_packets(&mut self, specs: &[PacketSpec]) {
+        self.try_schedule_packets(specs)
+            .expect("valid packet specs");
     }
 
     /// Current cycle.
@@ -161,7 +256,15 @@ impl Network {
             let id = self.next_id;
             self.next_id += 1;
             let total = spec.flits(self.cfg.flit_bits);
-            self.meta.insert(id, (spec, total));
+            self.meta.insert(
+                id,
+                PacketMeta {
+                    spec,
+                    total_flits: total,
+                    head_inject: None,
+                    decode_stalls: 0,
+                },
+            );
             self.ni_queues[spec.src.0 as usize].push_back(Pending {
                 id,
                 spec,
@@ -182,6 +285,14 @@ impl Network {
                         (s, t) if s + 1 == t => FlitKind::Tail,
                         _ => FlitKind::Body,
                     };
+                    if seq == 0 {
+                        // The latency clock starts when the head actually
+                        // enters the network, not at the scheduled time.
+                        self.meta
+                            .get_mut(&p.id)
+                            .expect("activated packet has meta")
+                            .head_inject = Some(self.now);
+                    }
                     local_in.fifo.push_back(Flit {
                         packet_id: p.id,
                         kind,
@@ -189,6 +300,7 @@ impl Network {
                         dest: p.spec.dest,
                         seq,
                         ready_at: self.now + 1,
+                        codec: p.spec.codec,
                     });
                     p.emitted += 1;
                     if p.emitted == p.total_flits {
@@ -212,7 +324,37 @@ impl Network {
                 let Some(inp) = grants[out as usize] else { continue };
 
                 if out == Port::Local {
-                    // Ejection: always accepted, one flit/cycle.
+                    // Ejection: codec-blind packets drain 1 flit/cycle;
+                    // tagged packets must clear the egress decoder first.
+                    let hol = *self.routers[node].inputs[inp]
+                        .fifo
+                        .front()
+                        .expect("arbitrated input non-empty");
+                    let mut decode_done: Option<f64> = None;
+                    if let (Some(ecfg), Some(tag)) = (self.egress_cfg, hol.codec) {
+                        let port = &mut self.egress[node];
+                        if !egress::ready(port.busy_until, self.now) {
+                            // Decoder backlogged: the flit stays in the
+                            // local input buffer (no pop ⇒ no credit
+                            // upstream ⇒ backpressure into the mesh).
+                            port.stall_cycles += 1;
+                            self.stats.decode_stall_cycles += 1;
+                            self.meta
+                                .get_mut(&hol.packet_id)
+                                .expect("in-flight packet has meta")
+                                .decode_stalls += 1;
+                            continue;
+                        }
+                        let total = self.meta[&hol.packet_id].total_flits;
+                        let cost = ecfg.flit_cost_cycles(
+                            &tag,
+                            total,
+                            hol.is_head(),
+                            self.cfg.cycle_ns(),
+                        );
+                        port.busy_until = egress::accept(port.busy_until, self.now, cost);
+                        decode_done = Some(port.busy_until);
+                    }
                     let flit = self.routers[node].inputs[inp]
                         .fifo
                         .pop_front()
@@ -221,16 +363,32 @@ impl Network {
                     self.update_lock(node, out, inp, &flit);
                     self.stats.delivered_flits += 1;
                     if flit.is_tail() {
-                        let (spec, total) = self.meta.remove(&flit.packet_id).expect("meta");
+                        let m = self.meta.remove(&flit.packet_id).expect("meta");
+                        let inject_cycle =
+                            m.head_inject.expect("tail ejected before head injected");
+                        // A tagged packet completes when its decoder
+                        // finishes the tail flit's symbols, which can
+                        // trail the ejection itself.
+                        let eject_cycle = match decode_done {
+                            Some(busy) => (self.now + 1).max(busy.ceil() as u64),
+                            None => self.now + 1,
+                        };
                         let rec = PacketRecord {
-                            spec,
-                            inject_cycle: spec.inject_at,
-                            eject_cycle: self.now + 1,
-                            flits: total,
+                            spec: m.spec,
+                            inject_cycle,
+                            eject_cycle,
+                            flits: m.total_flits,
+                            decode_stall_cycles: m.decode_stalls,
                         };
                         self.stats.delivered_packets += 1;
                         self.stats.sum_latency += rec.latency();
                         self.stats.max_latency = self.stats.max_latency.max(rec.latency());
+                        self.stats.sum_queueing += rec.queueing_delay();
+                        if let Some(tag) = m.spec.codec {
+                            self.stats.delivered_symbols += tag.symbols;
+                        }
+                        self.stats.completion_cycle =
+                            self.stats.completion_cycle.max(eject_cycle);
                         self.records.push(rec);
                     }
                     continue;
@@ -318,6 +476,8 @@ impl Network {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::packet::CodecTag;
+    use lexi_core::codec::CodecKind;
 
     fn cfg_4x4() -> NetworkConfig {
         NetworkConfig {
@@ -332,12 +492,7 @@ mod tests {
     fn single_packet_minimal_latency() {
         let cfg = cfg_4x4();
         let mut net = Network::new(cfg);
-        let spec = PacketSpec {
-            src: NodeId(0),
-            dest: NodeId(3), // 3 hops east
-            size_bits: 128 * 4,
-            inject_at: 0,
-        };
+        let spec = PacketSpec::new(NodeId(0), NodeId(3), 128 * 4, 0); // 3 hops east
         net.schedule_packets(&[spec]);
         let stats = net.run_to_completion(1000);
         assert_eq!(stats.delivered_packets, 1);
@@ -351,17 +506,14 @@ mod tests {
             "latency {}",
             rec.latency()
         );
+        // No contention: the head injects the cycle it is scheduled.
+        assert_eq!(rec.queueing_delay(), 0);
     }
 
     #[test]
     fn self_send_delivers() {
         let mut net = Network::new(cfg_4x4());
-        net.schedule_packets(&[PacketSpec {
-            src: NodeId(5),
-            dest: NodeId(5),
-            size_bits: 64,
-            inject_at: 0,
-        }]);
+        net.schedule_packets(&[PacketSpec::new(NodeId(5), NodeId(5), 64, 0)]);
         let stats = net.run_to_completion(100);
         assert_eq!(stats.delivered_packets, 1);
     }
@@ -373,12 +525,12 @@ mod tests {
         for i in 0..16u16 {
             for j in 0..16u16 {
                 if i != j {
-                    specs.push(PacketSpec {
-                        src: NodeId(i),
-                        dest: NodeId(j),
-                        size_bits: 128 * 3,
-                        inject_at: (i as u64) * 2,
-                    });
+                    specs.push(PacketSpec::new(
+                        NodeId(i),
+                        NodeId(j),
+                        128 * 3,
+                        (i as u64) * 2,
+                    ));
                 }
             }
         }
@@ -397,12 +549,7 @@ mod tests {
         // packet's flits in order (seq strictly increasing per packet).
         let mut net = Network::new(cfg_4x4());
         let specs: Vec<PacketSpec> = (0..8u16)
-            .map(|i| PacketSpec {
-                src: NodeId(i),
-                dest: NodeId(15),
-                size_bits: 128 * 8,
-                inject_at: 0,
-            })
+            .map(|i| PacketSpec::new(NodeId(i), NodeId(15), 128 * 8, 0))
             .collect();
         net.schedule_packets(&specs);
         net.run_to_completion(10_000);
@@ -415,23 +562,13 @@ mod tests {
         // uncongested single-sender case.
         let solo = {
             let mut net = Network::new(cfg_4x4());
-            net.schedule_packets(&[PacketSpec {
-                src: NodeId(15),
-                dest: NodeId(0),
-                size_bits: 128 * 16,
-                inject_at: 0,
-            }]);
+            net.schedule_packets(&[PacketSpec::new(NodeId(15), NodeId(0), 128 * 16, 0)]);
             net.run_to_completion(10_000).avg_latency()
         };
         let hot = {
             let mut net = Network::new(cfg_4x4());
             let specs: Vec<PacketSpec> = (1..16u16)
-                .map(|i| PacketSpec {
-                    src: NodeId(i),
-                    dest: NodeId(0),
-                    size_bits: 128 * 16,
-                    inject_at: 0,
-                })
+                .map(|i| PacketSpec::new(NodeId(i), NodeId(0), 128 * 16, 0))
                 .collect();
             net.schedule_packets(&specs);
             net.run_to_completion(100_000).avg_latency()
@@ -445,12 +582,12 @@ mod tests {
         let mut net = Network::new(cfg_4x4());
         let mut specs = Vec::new();
         for k in 0..400u64 {
-            specs.push(PacketSpec {
-                src: NodeId((k * 7 % 16) as u16),
-                dest: NodeId((k * 11 % 16) as u16),
-                size_bits: 128 * 4,
-                inject_at: k / 8,
-            });
+            specs.push(PacketSpec::new(
+                NodeId((k * 7 % 16) as u16),
+                NodeId((k * 11 % 16) as u16),
+                128 * 4,
+                k / 8,
+            ));
         }
         let specs: Vec<_> = specs
             .into_iter()
@@ -469,5 +606,161 @@ mod tests {
     fn cycle_ns_matches_paper_link() {
         let cfg = NetworkConfig::paper_default();
         assert!((cfg.cycle_ns() - 1.28).abs() < 1e-9);
+    }
+
+    #[test]
+    fn queueing_delay_excluded_from_latency() {
+        // Regression (ISSUE 5 satellite): two packets from one source —
+        // the second's head cannot inject until the first's 8 flits have
+        // cleared the NI, and that wait must land in queueing_delay, not
+        // in latency. (Previously inject_cycle was stamped with the
+        // *scheduled* inject_at, silently folding NI queueing into
+        // network latency.)
+        let mut net = Network::new(cfg_4x4());
+        let a = PacketSpec::new(NodeId(0), NodeId(3), 128 * 8, 0);
+        let b = PacketSpec::new(NodeId(0), NodeId(3), 128 * 8, 0);
+        net.schedule_packets(&[a, b]);
+        let stats = net.run_to_completion(10_000);
+        assert_eq!(stats.delivered_packets, 2);
+        let first = net.records.iter().find(|r| r.queueing_delay() == 0).unwrap();
+        let second = net.records.iter().find(|r| r.queueing_delay() > 0).unwrap();
+        // Same route, same size, exclusive link ⇒ near-identical network
+        // latency for both once queueing is separated out.
+        assert!(
+            second.latency() <= first.latency() + 2,
+            "queueing leaked into latency: first {} vs second {}",
+            first.latency(),
+            second.latency()
+        );
+        // The second head waited for ~the first packet's serialization.
+        assert!(
+            (6..=10).contains(&second.queueing_delay()),
+            "queueing {}",
+            second.queueing_delay()
+        );
+        assert_eq!(
+            stats.sum_queueing,
+            net.records.iter().map(|r| r.queueing_delay()).sum::<u64>()
+        );
+    }
+
+    fn huff_tag(symbols: u64, runtime_book: bool) -> CodecTag {
+        CodecTag {
+            kind: CodecKind::Huffman,
+            symbols,
+            runtime_book,
+        }
+    }
+
+    #[test]
+    fn bogus_codec_tags_rejected() {
+        let mut net = Network::new(cfg_4x4());
+        // More symbols than wire bits: impossible (≥ 1 bit/symbol).
+        let bogus = PacketSpec::new(NodeId(0), NodeId(3), 128, 0).tagged(huff_tag(129, false));
+        assert!(net.try_schedule_packets(&[bogus]).is_err());
+        // Tag on a zero-size packet.
+        let empty = PacketSpec::new(NodeId(0), NodeId(3), 0, 0).tagged(huff_tag(1, false));
+        assert!(net.try_schedule_packets(&[empty]).is_err());
+        // Nothing was scheduled; the network stays drained.
+        assert!(net.drained());
+        // A valid tag passes.
+        let ok = PacketSpec::new(NodeId(0), NodeId(3), 128, 0).tagged(huff_tag(128, false));
+        assert!(net.try_schedule_packets(&[ok]).is_ok());
+    }
+
+    #[test]
+    fn line_rate_egress_matches_codec_blind_ejection() {
+        // Paper point (16 lanes): tagged stepping must deliver in the
+        // same cycle count as the codec-blind network (offline book ⇒
+        // no startup, decoder hidden behind the wire).
+        let spec = PacketSpec::new(NodeId(0), NodeId(15), 128 * 64, 0);
+        let blind = {
+            let mut net = Network::new(cfg_4x4());
+            net.schedule_packets(&[spec]);
+            net.run_to_completion(10_000)
+        };
+        let tagged = {
+            let mut net =
+                Network::with_egress(cfg_4x4(), EgressCodecConfig::paper_default());
+            net.schedule_packets(&[spec.tagged(huff_tag(64 * 8, false))]);
+            net.run_to_completion(10_000)
+        };
+        assert_eq!(blind.cycles, tagged.cycles);
+        assert_eq!(tagged.decode_stall_cycles, 0);
+        assert_eq!(tagged.delivered_symbols, 64 * 8);
+        assert_eq!(tagged.completion_cycle, blind.completion_cycle);
+    }
+
+    #[test]
+    fn starved_egress_stalls_the_link_and_backpressures() {
+        // One decoder lane on a symbol-heavy packet: ejection throttles,
+        // stall cycles accrue, and completion stretches to ~the decode
+        // makespan instead of the wire time.
+        let symbols = 64 * 16u64; // 16 symbols per flit
+        let spec =
+            PacketSpec::new(NodeId(0), NodeId(15), 128 * 64, 0).tagged(huff_tag(symbols, false));
+        let ecfg = EgressCodecConfig::nominal(1, 1.0); // 1.16 cyc/sym at 1 lane
+        let cycle_ns = cfg_4x4().cycle_ns();
+        let mut net = Network::with_egress(cfg_4x4(), ecfg);
+        net.schedule_packets(&[spec]);
+        let stats = net.run_to_completion(100_000);
+        assert_eq!(stats.delivered_packets, 1);
+        assert!(stats.decode_stall_cycles > 0, "no backpressure observed");
+        let rec = net.records[0];
+        assert_eq!(rec.decode_stall_cycles, stats.decode_stall_cycles);
+        // Decode-bound completion ≈ symbols × ns/sym ÷ cycle_ns.
+        let decode_cycles = symbols as f64 * ecfg.ns_per_symbol(CodecKind::Huffman) / cycle_ns;
+        let done = stats.completion_cycle as f64;
+        assert!(
+            done >= decode_cycles && done <= decode_cycles * 1.15 + 16.0,
+            "completion {done} vs decode bound {decode_cycles}"
+        );
+    }
+
+    #[test]
+    fn runtime_book_startup_charged_on_head_flits() {
+        // Identical packets, offline vs runtime book: the runtime one
+        // completes later by ~the startup and stalls while the codebook
+        // pipeline fills.
+        let base = PacketSpec::new(NodeId(0), NodeId(15), 128 * 64, 0);
+        let run = |runtime: bool| {
+            let mut net =
+                Network::with_egress(cfg_4x4(), EgressCodecConfig::paper_default());
+            net.schedule_packets(&[base.tagged(huff_tag(64 * 8, runtime))]);
+            net.run_to_completion(100_000)
+        };
+        let offline = run(false);
+        let runtime = run(true);
+        let cycle_ns = cfg_4x4().cycle_ns();
+        let startup_cycles =
+            (EgressCodecConfig::paper_default().startup_ns / cycle_ns).ceil() as u64;
+        let delta = runtime.completion_cycle - offline.completion_cycle;
+        assert!(
+            delta >= startup_cycles - 1 && delta <= startup_cycles + 2,
+            "startup delta {delta} vs expected {startup_cycles}"
+        );
+        assert!(runtime.decode_stall_cycles > 0);
+        assert_eq!(offline.decode_stall_cycles, 0);
+    }
+
+    #[test]
+    fn raw_tagged_packets_never_stall() {
+        let spec = PacketSpec::new(NodeId(1), NodeId(14), 128 * 32, 0).tagged(CodecTag {
+            kind: CodecKind::Raw,
+            symbols: 32 * 16,
+            runtime_book: false,
+        });
+        let mut net = Network::with_egress(cfg_4x4(), EgressCodecConfig::nominal(1, 1.0));
+        let stats = net.run_to_completion_after(&[spec]);
+        assert_eq!(stats.decode_stall_cycles, 0);
+        assert_eq!(stats.delivered_symbols, 32 * 16);
+    }
+
+    impl Network {
+        /// Test helper: schedule then run.
+        fn run_to_completion_after(&mut self, specs: &[PacketSpec]) -> SimStats {
+            self.schedule_packets(specs);
+            self.run_to_completion(1_000_000)
+        }
     }
 }

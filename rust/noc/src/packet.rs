@@ -3,8 +3,33 @@
 //! A message of `size_bits` becomes ⌈size/flit_bits⌉ flits framed
 //! head/body/tail (or a single-flit packet). Wormhole switching reserves a
 //! path per packet from head to tail.
+//!
+//! **Codec tags (ISSUE 5):** a packet may carry a [`CodecTag`] naming the
+//! exponent codec its payload travels under and how many exponent symbols
+//! the egress decoder must emit. Tagged flits drain through the per-node
+//! [`EgressCodec`](crate::egress) port at the measured decoder rate
+//! instead of the codec-blind 1 flit/cycle; untagged packets (and any
+//! network built without an egress config) keep the legacy behaviour.
 
 use crate::topology::NodeId;
+use lexi_core::codec::CodecKind;
+
+/// Per-packet codec metadata carried on the wire (head-flit header in the
+/// real format; a struct field in the simulator).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CodecTag {
+    /// Which exponent codec encoded the payload.
+    pub kind: CodecKind,
+    /// Exponent symbols the egress decoder emits for this packet. Must
+    /// not exceed `size_bits` (every coded symbol costs ≥ 1 wire bit);
+    /// violations are rejected at scheduling, not mis-charged.
+    pub symbols: u64,
+    /// The codebook ships with the data (runtime compression): the
+    /// egress decoder pays the codebook-pipeline + multi-symbol-LUT-fill
+    /// startup before draining. Only meaningful for Huffman; weights
+    /// (offline-compressed, LUTs stream in with the data) set it false.
+    pub runtime_book: bool,
+}
 
 /// What position a flit holds in its packet.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -27,6 +52,9 @@ pub struct Flit {
     pub seq: u32,
     /// Cycle at which this flit may next move (prevents multi-hop/cycle).
     pub ready_at: u64,
+    /// Codec tag inherited from the packet spec (`None` = codec-blind
+    /// raw payload, ejected at the legacy 1 flit/cycle).
+    pub codec: Option<CodecTag>,
 }
 
 impl Flit {
@@ -52,9 +80,30 @@ pub struct PacketSpec {
     pub size_bits: u64,
     /// Earliest injection cycle.
     pub inject_at: u64,
+    /// Codec tag (`None` = raw codec-blind packet).
+    pub codec: Option<CodecTag>,
 }
 
 impl PacketSpec {
+    /// An untagged (codec-blind) packet.
+    pub fn new(src: NodeId, dest: NodeId, size_bits: u64, inject_at: u64) -> Self {
+        PacketSpec {
+            src,
+            dest,
+            size_bits,
+            inject_at,
+            codec: None,
+        }
+    }
+
+    /// The same packet carrying a codec tag.
+    pub fn tagged(self, tag: CodecTag) -> Self {
+        PacketSpec {
+            codec: Some(tag),
+            ..self
+        }
+    }
+
     /// Number of flits for a given flit width.
     pub fn flits(&self, flit_bits: u32) -> u32 {
         (self.size_bits.div_ceil(flit_bits as u64)).max(1) as u32
@@ -65,15 +114,33 @@ impl PacketSpec {
 #[derive(Clone, Copy, Debug)]
 pub struct PacketRecord {
     pub spec: PacketSpec,
+    /// Cycle the head flit actually entered the network (NOT the
+    /// scheduled `spec.inject_at`: source-side NI queueing between the
+    /// two is reported separately by [`PacketRecord::queueing_delay`]).
     pub inject_cycle: u64,
+    /// Cycle after which the tail has fully left the network — for
+    /// codec-tagged packets this includes the egress decoder finishing
+    /// the tail flit's symbols.
     pub eject_cycle: u64,
     pub flits: u32,
+    /// Ejection cycles this packet's flits spent blocked behind its
+    /// egress decoder (startup + drain backpressure). 0 for untagged
+    /// packets and codec-blind networks.
+    pub decode_stall_cycles: u64,
 }
 
 impl PacketRecord {
-    /// End-to-end latency in cycles (inject of head → eject of tail).
+    /// End-to-end network latency in cycles (actual inject of head →
+    /// eject of tail). Source-side queueing is *excluded* — see
+    /// [`PacketRecord::queueing_delay`].
     pub fn latency(&self) -> u64 {
         self.eject_cycle - self.inject_cycle
+    }
+
+    /// Cycles the packet waited at its source NI between its scheduled
+    /// `inject_at` and the head flit actually entering the network.
+    pub fn queueing_delay(&self) -> u64 {
+        self.inject_cycle - self.spec.inject_at
     }
 }
 
@@ -83,16 +150,38 @@ mod tests {
 
     #[test]
     fn flit_count() {
-        let p = PacketSpec {
-            src: NodeId(0),
-            dest: NodeId(1),
-            size_bits: 129,
-            inject_at: 0,
-        };
+        let p = PacketSpec::new(NodeId(0), NodeId(1), 129, 0);
         assert_eq!(p.flits(128), 2);
         let q = PacketSpec { size_bits: 128, ..p };
         assert_eq!(q.flits(128), 1);
         let z = PacketSpec { size_bits: 0, ..p };
         assert_eq!(z.flits(128), 1);
+    }
+
+    #[test]
+    fn tagging_is_additive() {
+        let tag = CodecTag {
+            kind: CodecKind::Huffman,
+            symbols: 64,
+            runtime_book: true,
+        };
+        let p = PacketSpec::new(NodeId(0), NodeId(1), 4096, 7).tagged(tag);
+        assert_eq!(p.codec, Some(tag));
+        assert_eq!(p.size_bits, 4096);
+        assert_eq!(p.inject_at, 7);
+    }
+
+    #[test]
+    fn record_separates_queueing_from_latency() {
+        let spec = PacketSpec::new(NodeId(0), NodeId(1), 128, 10);
+        let rec = PacketRecord {
+            spec,
+            inject_cycle: 14, // head waited 4 cycles behind another packet
+            eject_cycle: 20,
+            flits: 1,
+            decode_stall_cycles: 0,
+        };
+        assert_eq!(rec.latency(), 6);
+        assert_eq!(rec.queueing_delay(), 4);
     }
 }

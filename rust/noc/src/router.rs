@@ -4,6 +4,11 @@
 //! head-of-line flit routes to it. A head flit locks the output to its
 //! input until the tail passes (wormhole). Forwarding requires a credit
 //! (free buffer slot) at the downstream input.
+//!
+//! Arbitration is **pure** (`&self`): the network may compute a grant
+//! and then decline to act on it — the egress codec port does exactly
+//! that when its decoder is backlogged (ISSUE 5) — and re-arbitrating
+//! the next cycle reproduces the same decision with no state drift.
 
 use crate::packet::Flit;
 use crate::topology::{Port, NUM_PORTS};
@@ -111,6 +116,7 @@ mod tests {
             dest: NodeId(1),
             seq: 0,
             ready_at: ready,
+            codec: None,
         }
     }
 
@@ -133,6 +139,29 @@ mod tests {
         let mut r = Router::new(4);
         r.inputs[0].fifo.push_back(flit(FlitKind::Body, 0));
         assert_eq!(r.arbitrate(Port::East, 0, |_| Port::East), None);
+    }
+
+    #[test]
+    fn declined_grant_replays_identically() {
+        // The egress port may refuse a Local grant (decoder backlogged);
+        // the arbiter must be side-effect-free so the same grant replays
+        // next cycle, wormhole lock and RR pointer untouched.
+        let mut r = Router::new(4);
+        r.inputs[2].fifo.push_back(flit(FlitKind::Head, 0));
+        r.outputs[Port::Local as usize].rr = 1;
+        let g1 = r.arbitrate_all(0, |_| Port::Local);
+        let g2 = r.arbitrate_all(0, |_| Port::Local);
+        assert_eq!(g1[Port::Local as usize], Some(2));
+        assert_eq!(g1, g2);
+        assert_eq!(r.outputs[Port::Local as usize].locked_to, None);
+        assert_eq!(r.outputs[Port::Local as usize].rr, 1);
+        // Mid-packet (lock held) the refusal is equally replayable.
+        r.outputs[Port::Local as usize].locked_to = Some(2);
+        r.inputs[2].fifo.clear();
+        r.inputs[2].fifo.push_back(flit(FlitKind::Body, 0));
+        let g3 = r.arbitrate_all(0, |_| Port::Local);
+        assert_eq!(g3[Port::Local as usize], Some(2));
+        assert_eq!(r.outputs[Port::Local as usize].locked_to, Some(2));
     }
 
     #[test]

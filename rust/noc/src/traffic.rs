@@ -1,8 +1,14 @@
 //! Traffic generation: synthetic patterns for validation and transfer
 //! segmentation for trace-driven runs.
+//!
+//! Codec-aware callers (ISSUE 5) use [`segment_transfer_tagged`] to
+//! produce [`CodecTag`]-carrying specs — the per-node egress decoder
+//! ports then drain them at the measured decoder rate — and
+//! [`tag_packets`] to tag synthetic patterns wholesale.
 
-use crate::packet::PacketSpec;
+use crate::packet::{CodecTag, PacketSpec};
 use crate::topology::{Mesh, NodeId};
+use lexi_core::codec::CodecKind;
 use lexi_core::prng::Rng;
 
 /// Maximum packet payload used when segmenting large transfers (bits).
@@ -10,7 +16,10 @@ use lexi_core::prng::Rng;
 /// overhead — typical for NoI DMA engines.
 pub const MAX_PACKET_BITS: u64 = 4096 * 8;
 
-/// Segment one logical transfer of `size_bits` into packet specs.
+/// Segment one logical transfer of `size_bits` into packet specs. An
+/// empty transfer produces **no packets** (regression, ISSUE 5: the old
+/// `size_bits.max(1)` fabricated a phantom 1-bit packet and broke bit
+/// conservation).
 pub fn segment_transfer(
     src: NodeId,
     dest: NodeId,
@@ -20,18 +29,86 @@ pub fn segment_transfer(
 ) -> Vec<PacketSpec> {
     assert!(max_packet_bits > 0);
     let mut out = Vec::new();
-    let mut remaining = size_bits.max(1);
+    let mut remaining = size_bits;
     while remaining > 0 {
         let take = remaining.min(max_packet_bits);
-        out.push(PacketSpec {
-            src,
-            dest,
-            size_bits: take,
-            inject_at,
-        });
+        out.push(PacketSpec::new(src, dest, take, inject_at));
         remaining -= take;
     }
     out
+}
+
+/// Segment one codec-coded transfer into **tagged** packet specs:
+/// `wire_bits` of coded payload carrying `tag.symbols` exponent symbols
+/// in total. Symbols are apportioned to packets in proportion to their
+/// wire bits (cumulative rounding — the per-packet counts sum exactly to
+/// `tag.symbols`), and the runtime-book startup flag is set on the
+/// *first* packet only: the codebook ships once per transfer, so only
+/// the leading flits pay the codebook-pipeline + LUT-fill stall.
+pub fn segment_transfer_tagged(
+    src: NodeId,
+    dest: NodeId,
+    wire_bits: u64,
+    inject_at: u64,
+    max_packet_bits: u64,
+    tag: CodecTag,
+) -> Vec<PacketSpec> {
+    let mut parts = segment_transfer(src, dest, wire_bits, inject_at, max_packet_bits);
+    let mut acc_bits = 0u64;
+    let mut assigned = 0u64;
+    for (i, p) in parts.iter_mut().enumerate() {
+        acc_bits += p.size_bits;
+        // Cumulative proportional share, exact at the last packet.
+        let want = (tag.symbols as u128 * acc_bits as u128 / wire_bits.max(1) as u128) as u64;
+        let symbols = want - assigned;
+        assigned = want;
+        *p = p.tagged(CodecTag {
+            kind: tag.kind,
+            symbols,
+            runtime_book: tag.runtime_book && i == 0,
+        });
+    }
+    parts
+}
+
+/// Total flits a transfer of `wire_bits` occupies once segmented into
+/// `max_packet_bits` packets of `flit_bits` flits — the **per-packet**
+/// flit quantization the cycle-level NoC actually pays (each packet
+/// rounds up to whole flits independently). The analytic engine's
+/// concurrent-link pricing uses this so its ceiling and the cycle sim
+/// agree (ISSUE 5 satellite).
+pub fn transfer_flits(wire_bits: u64, flit_bits: u32, max_packet_bits: u64) -> u64 {
+    assert!(max_packet_bits > 0);
+    if wire_bits == 0 {
+        return 0;
+    }
+    let fb = flit_bits as u64;
+    let full = wire_bits / max_packet_bits;
+    let rem = wire_bits % max_packet_bits;
+    full * max_packet_bits.div_ceil(fb) + if rem > 0 { rem.div_ceil(fb) } else { 0 }
+}
+
+/// Tag every spec in a synthetic pattern with `codec`: each packet is an
+/// independent message whose symbol count is its wire bits divided by
+/// the average **wire** bits per exponent symbol (≈ 10 at the paper
+/// point: `8 / CR ≈ 2.7` coded exponent bits plus 9 sign/mantissa
+/// passthrough bits per BF16 value), capped at one symbol per wire bit.
+pub fn tag_packets(
+    specs: &mut [PacketSpec],
+    codec: CodecKind,
+    coded_bits_per_symbol: f64,
+    runtime_book: bool,
+) {
+    assert!(coded_bits_per_symbol > 0.0);
+    for s in specs.iter_mut() {
+        let symbols =
+            ((s.size_bits as f64 / coded_bits_per_symbol) as u64).min(s.size_bits);
+        *s = s.tagged(CodecTag {
+            kind: codec,
+            symbols,
+            runtime_book,
+        });
+    }
 }
 
 /// Uniform-random traffic: `count` packets of `size_bits`, injected at a
@@ -52,12 +129,7 @@ pub fn uniform_random(
         while dest == src {
             dest = NodeId(rng.below(n) as u16);
         }
-        out.push(PacketSpec {
-            src,
-            dest,
-            size_bits,
-            inject_at: t as u64,
-        });
+        out.push(PacketSpec::new(src, dest, size_bits, t as u64));
         t += 1.0 / packets_per_cycle;
     }
     out
@@ -70,12 +142,7 @@ pub fn transpose(mesh: Mesh, size_bits: u64) -> Vec<PacketSpec> {
         .filter_map(|i| {
             let (x, y) = mesh.coords(NodeId(i));
             let dest = mesh.node(y, x);
-            (dest != NodeId(i)).then_some(PacketSpec {
-                src: NodeId(i),
-                dest,
-                size_bits,
-                inject_at: 0,
-            })
+            (dest != NodeId(i)).then_some(PacketSpec::new(NodeId(i), dest, size_bits, 0))
         })
         .collect()
 }
@@ -84,12 +151,7 @@ pub fn transpose(mesh: Mesh, size_bits: u64) -> Vec<PacketSpec> {
 pub fn hotspot(mesh: Mesh, sink: NodeId, size_bits: u64) -> Vec<PacketSpec> {
     (0..mesh.len() as u16)
         .filter(|&i| NodeId(i) != sink)
-        .map(|i| PacketSpec {
-            src: NodeId(i),
-            dest: sink,
-            size_bits,
-            inject_at: 0,
-        })
+        .map(|i| PacketSpec::new(NodeId(i), sink, size_bits, 0))
         .collect()
 }
 
@@ -101,14 +163,94 @@ mod tests {
 
     #[test]
     fn segmentation_conserves_bits() {
+        // Generator includes 0 (regression, ISSUE 5): an empty transfer
+        // must produce no packets, not a phantom 1-bit one.
         check("segment conserves bits", 100, |g| {
-            let size = g.u64(1..50_000_000);
+            let size = g.u64(0..50_000_000);
             let parts = segment_transfer(NodeId(0), NodeId(5), size, 7, MAX_PACKET_BITS);
             assert_eq!(parts.iter().map(|p| p.size_bits).sum::<u64>(), size);
+            if size == 0 {
+                assert!(parts.is_empty(), "zero-size transfer fabricated packets");
+            }
             assert!(parts
                 .iter()
-                .all(|p| p.size_bits <= MAX_PACKET_BITS && p.inject_at == 7));
+                .all(|p| p.size_bits > 0
+                    && p.size_bits <= MAX_PACKET_BITS
+                    && p.inject_at == 7));
         });
+    }
+
+    #[test]
+    fn empty_transfer_produces_no_packets() {
+        assert!(segment_transfer(NodeId(0), NodeId(5), 0, 0, MAX_PACKET_BITS).is_empty());
+        let tag = CodecTag {
+            kind: CodecKind::Huffman,
+            symbols: 0,
+            runtime_book: true,
+        };
+        assert!(
+            segment_transfer_tagged(NodeId(0), NodeId(5), 0, 0, MAX_PACKET_BITS, tag).is_empty()
+        );
+    }
+
+    #[test]
+    fn tagged_segmentation_conserves_bits_and_symbols() {
+        check("tagged segment conserves", 100, |g| {
+            let bits = g.u64(1..10_000_000);
+            let symbols = g.u64(0..bits.min(1 << 22) + 1);
+            let tag = CodecTag {
+                kind: CodecKind::Huffman,
+                symbols,
+                runtime_book: true,
+            };
+            let parts =
+                segment_transfer_tagged(NodeId(1), NodeId(9), bits, 3, MAX_PACKET_BITS, tag);
+            assert_eq!(parts.iter().map(|p| p.size_bits).sum::<u64>(), bits);
+            assert_eq!(
+                parts
+                    .iter()
+                    .map(|p| p.codec.expect("tagged").symbols)
+                    .sum::<u64>(),
+                symbols
+            );
+            // Every packet's tag is individually schedulable (symbols ≤
+            // wire bits) and startup rides the first packet only.
+            for (i, p) in parts.iter().enumerate() {
+                let t = p.codec.expect("tagged");
+                assert!(t.symbols <= p.size_bits, "packet {i} over-tagged");
+                assert_eq!(t.runtime_book, i == 0);
+                assert_eq!(t.kind, CodecKind::Huffman);
+            }
+        });
+    }
+
+    #[test]
+    fn transfer_flits_matches_segmented_specs() {
+        // The closed form must equal what the cycle sim actually pays.
+        check("transfer_flits == Σ spec.flits", 200, |g| {
+            let bits = g.u64(0..5_000_000);
+            let from_specs: u64 = segment_transfer(NodeId(0), NodeId(1), bits, 0, MAX_PACKET_BITS)
+                .iter()
+                .map(|s| s.flits(128) as u64)
+                .sum();
+            assert_eq!(transfer_flits(bits, 128, MAX_PACKET_BITS), from_specs);
+        });
+        assert_eq!(transfer_flits(0, 128, MAX_PACKET_BITS), 0);
+        // Per-packet quantization charges more than the fractional bits.
+        let bits = MAX_PACKET_BITS + 1;
+        assert_eq!(
+            transfer_flits(bits, 128, MAX_PACKET_BITS),
+            MAX_PACKET_BITS / 128 + 1
+        );
+    }
+
+    #[test]
+    fn tag_packets_caps_symbols() {
+        let mut specs = vec![PacketSpec::new(NodeId(0), NodeId(1), 100, 0)];
+        tag_packets(&mut specs, CodecKind::Bdi, 0.5, false);
+        let t = specs[0].codec.unwrap();
+        assert_eq!(t.symbols, 100, "symbols must cap at wire bits");
+        assert_eq!(t.kind, CodecKind::Bdi);
     }
 
     #[test]

@@ -64,7 +64,8 @@ impl EnergyReport {
 
 impl EnergyModel {
     /// Evaluate the energy of a full inference under `mode` on `system`
-    /// (hop counts come from the XY routes between resolved endpoints).
+    /// (hop counts come from the XY routes between resolved endpoints),
+    /// with the paper's all-Huffman codec policy.
     pub fn run(
         &self,
         system: &SimbaSystem,
@@ -73,11 +74,27 @@ impl EnergyModel {
         mode: CompressionMode,
         crs: &CrTable,
     ) -> EnergyReport {
+        self.run_with_policy(system, cfg, corpus, mode, crs, lexi_models::CodecPolicy::lexi_default())
+    }
+
+    /// Same, under an explicit per-kind codec policy (ISSUE 5 satellite:
+    /// wire bytes route through the `ExpCodec` registry like the
+    /// engine's, not the legacy Huffman-only path).
+    pub fn run_with_policy(
+        &self,
+        system: &SimbaSystem,
+        cfg: &ModelConfig,
+        corpus: &Corpus,
+        mode: CompressionMode,
+        crs: &CrTable,
+        policy: lexi_models::CodecPolicy,
+    ) -> EnergyReport {
         let transfers = traffic::full_inference(cfg, corpus);
         let mut link_pj = 0.0;
         let mut codec_pj = 0.0;
         for t in &transfers {
-            let wire_bits = crs.wire_bytes(t.bytes, t.kind, mode) as f64 * 8.0;
+            let codec = policy.codec_for(t.kind);
+            let wire_bits = crs.wire_bytes_for(codec, t.bytes, t.kind, mode) as f64 * 8.0;
             let hops = system.hops(t.src, t.dst, t.layer).max(1) as f64;
             link_pj += wire_bits * self.link_pj_per_bit * hops;
             if mode.compresses(t.kind) {

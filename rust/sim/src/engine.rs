@@ -3,7 +3,11 @@
 //! Full paper-scale workloads run through an analytic latency model (a
 //! cycle-accurate walk over ~10⁹ NoI cycles is not tractable); the model
 //! is cross-validated against the `lexi-noc` cycle simulator on small
-//! windows (see tests and `benches/perf_noc.rs`).
+//! windows by the [`crate::xval`] harness (ISSUE 5): the same transfer
+//! replays through [`Engine::transfer_ns`] and through a codec-tagged
+//! `Network` with egress decoder ports, with agreement pinned to 15% on
+//! uncongested windows for every mode/policy and divergence *reported*
+//! under congestion. `benches/perf_noc.rs` prints the same comparison.
 //!
 //! Per transfer: wire size under the compression mode (measured ratios),
 //! wormhole latency = serialization flits + XY hops, plus the one-time
@@ -43,6 +47,7 @@ use lexi_core::codec::CodecKind;
 use lexi_models::corpus::Corpus;
 use lexi_models::traffic::{self, Phase, TransferKind, TransferSpec};
 use lexi_models::{CodecPolicy, ModelConfig};
+use lexi_noc::traffic as noc_traffic;
 use std::collections::HashMap;
 
 /// Engine parameters.
@@ -121,6 +126,21 @@ impl Engine {
     /// streams at line rate.
     pub fn huffman_startup_ns(&self) -> f64 {
         self.codec_startup_ns + self.lut_fill_cycles / self.codec_ghz
+    }
+
+    /// Flits a transfer occupies on every link of its route under
+    /// `mode`: wire bytes segmented into `MAX_PACKET_BITS` NoC packets,
+    /// each rounded up to whole flits — exactly what the cycle-level
+    /// simulator ships (`lexi_noc::traffic::transfer_flits`).
+    pub fn transfer_wire_flits(
+        &self,
+        t: &TransferSpec,
+        mode: CompressionMode,
+        crs: &CrTable,
+    ) -> u64 {
+        let codec = self.codec_policy.codec_for(t.kind);
+        let wire_bits = crs.wire_bytes_for(codec, t.bytes, t.kind, mode) * 8;
+        noc_traffic::transfer_flits(wire_bits, self.flit_bits, noc_traffic::MAX_PACKET_BITS)
     }
 
     /// Receiver-side decode makespan for a compressed transfer of `kind`,
@@ -234,11 +254,16 @@ impl Engine {
             .iter()
             .map(|t| self.transfer_ns(t, mode, crs))
             .sum();
-        // Per-directed-link occupancy of one request's step (XY routes).
-        let mut link_bits: HashMap<(u16, u16), u64> = HashMap::new();
+        // Per-directed-link occupancy of one request's step (XY routes),
+        // in **flits**: each transfer is segmented into NoC packets and
+        // every packet rounds up to whole flits independently — the same
+        // quantization (head/tail framing included) the cycle simulator
+        // pays. (Regression, ISSUE 5: the old fractional
+        // `busiest_bits / flit_bits` pricing undercharged the link and
+        // let the concurrent ceiling drift from the cycle sim.)
+        let mut link_flits: HashMap<(u16, u16), u64> = HashMap::new();
         for t in &transfers {
-            let codec = self.codec_policy.codec_for(t.kind);
-            let wire_bits = crs.wire_bytes_for(codec, t.bytes, t.kind, mode) * 8;
+            let flits = self.transfer_wire_flits(t, mode, crs);
             let mut at = self.system.resolve(t.src, t.layer);
             let dst = self.system.resolve(t.dst, t.layer);
             while at != dst {
@@ -248,13 +273,12 @@ impl Engine {
                     .mesh
                     .neighbour(at, port)
                     .expect("XY stays in-mesh");
-                *link_bits.entry((at.0, next.0)).or_insert(0) += wire_bits;
+                *link_flits.entry((at.0, next.0)).or_insert(0) += flits;
                 at = next;
             }
         }
-        let busiest_bits = link_bits.values().copied().max().unwrap_or(0);
-        let bottleneck_ns =
-            busiest_bits as f64 * n_requests as f64 / self.flit_bits as f64 * self.cycle_ns();
+        let busiest_flits = link_flits.values().copied().max().unwrap_or(0);
+        let bottleneck_ns = busiest_flits as f64 * n_requests as f64 * self.cycle_ns();
         // Compute also serializes per chiplet across requests.
         let compute_ns = self
             .compute
@@ -585,6 +609,75 @@ mod tests {
             let b = explicit.run(&cfg, &corpus, mode, &crs);
             assert_eq!(a.comm_ns, b.comm_ns, "{mode:?}");
         }
+    }
+
+    #[test]
+    fn concurrent_ceiling_charges_packet_quantized_flits() {
+        // Regression (ISSUE 5 satellite): run_concurrent priced the
+        // busiest link as fractional `busiest_bits / flit_bits` while
+        // transfer_ns (and the cycle-level NoC) quantize per packet —
+        // the ceiling must charge whole flits per segmented packet.
+        use lexi_noc::NodeId;
+        use lexi_noc::traffic::MAX_PACKET_BITS;
+        let cfg = ModelConfig::qwen(ModelScale::Paper);
+        let (eng, crs) = setup(&cfg);
+        let corpus = Corpus::wikitext2();
+        let transfers = traffic::decode_step(&cfg, &corpus, 0);
+        // Transfer-by-transfer: the engine's flit pricing equals the
+        // cycle simulator's segmentation arithmetic exactly.
+        for t in &transfers {
+            for mode in CompressionMode::ALL {
+                let codec = eng.codec_policy.codec_for(t.kind);
+                let wire_bits = crs.wire_bytes_for(codec, t.bytes, t.kind, mode) * 8;
+                let want: u64 =
+                    segment_transfer(NodeId(0), NodeId(1), wire_bits, 0, MAX_PACKET_BITS)
+                        .iter()
+                        .map(|s| s.flits(eng.flit_bits) as u64)
+                        .sum();
+                assert_eq!(
+                    eng.transfer_wire_flits(t, mode, &crs),
+                    want,
+                    "{:?} {mode:?}",
+                    t.kind
+                );
+            }
+        }
+        // Link-level: replay the route walk with both pricings; the
+        // quantized ceiling is strictly higher (real transfers are not
+        // flit-multiples) and is what run_concurrent now reports.
+        let mode = CompressionMode::Lexi;
+        let mut link_bits: HashMap<(u16, u16), u64> = HashMap::new();
+        let mut link_flits: HashMap<(u16, u16), u64> = HashMap::new();
+        for t in &transfers {
+            let codec = eng.codec_policy.codec_for(t.kind);
+            let wire_bits = crs.wire_bytes_for(codec, t.bytes, t.kind, mode) * 8;
+            let flits = eng.transfer_wire_flits(t, mode, &crs);
+            let mut at = eng.system.resolve(t.src, t.layer);
+            let dst = eng.system.resolve(t.dst, t.layer);
+            while at != dst {
+                let port = eng.system.mesh.route_xy(at, dst);
+                let next = eng.system.mesh.neighbour(at, port).expect("in-mesh");
+                *link_bits.entry((at.0, next.0)).or_insert(0) += wire_bits;
+                *link_flits.entry((at.0, next.0)).or_insert(0) += flits;
+                at = next;
+            }
+        }
+        let n = 256usize;
+        let frac_ns = link_bits.values().copied().max().unwrap() as f64 * n as f64
+            / eng.flit_bits as f64
+            * eng.cycle_ns();
+        let quant_ns =
+            link_flits.values().copied().max().unwrap() as f64 * n as f64 * eng.cycle_ns();
+        assert!(
+            quant_ns > frac_ns,
+            "quantization should cost extra flits ({quant_ns} vs {frac_ns})"
+        );
+        let rep = eng.run_concurrent(&cfg, &corpus, mode, &crs, n);
+        assert!(
+            rep.shared_step_ns >= quant_ns - 1e-6,
+            "ceiling {} below the quantized link bound {quant_ns}",
+            rep.shared_step_ns
+        );
     }
 
     #[test]

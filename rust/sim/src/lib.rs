@@ -14,13 +14,19 @@
 //!   constant across modes, as the paper notes).
 //! * [`engine`] — the end-to-end analytic engine (full paper-scale
 //!   workloads) with a cycle-accurate NoC cross-check for small windows.
+//! * [`xval`] — the analytic ↔ cycle cross-validation harness (ISSUE 5):
+//!   replays the same transfers through `Engine::transfer_ns` and a
+//!   codec-tagged `lexi-noc` network with egress decoder ports, pinning
+//!   the agreement bands.
 
 pub mod compression;
 pub mod compute;
 pub mod energy;
 pub mod engine;
 pub mod simba;
+pub mod xval;
 
 pub use compression::{CompressionMode, CrTable};
 pub use engine::{E2eReport, Engine};
 pub use simba::SimbaSystem;
+pub use xval::XvalReport;

@@ -6,6 +6,7 @@
 //! lexi table2
 //! lexi hw
 //! lexi noc      [--pattern uniform|transpose|hotspot] [--mesh 6x6]
+//!               [--egress LANES] [--codec huffman|bdi|raw]
 //! lexi dse      [--what hitrate|codebook|decoder|codec] [--model jamba]
 //! ```
 
@@ -99,6 +100,7 @@ fn print_help() {
          \x20 table2   exponent CR comparison (RLE / BDI / LEXI) on weights\n\
          \x20 hw       Table 4: area/power breakdown (GF 22 nm + 16 nm scaling)\n\
          \x20 noc      --pattern uniform|transpose|hotspot — cycle-accurate NoI run\n\
+         \x20          (--egress LANES --codec huffman|bdi|raw: egress codec ports)\n\
          \x20 dse      --what hitrate|codebook|decoder|codec — design-space sweeps\n\
          \x20          (Figs 4-6; 'codec' prints the per-kind Huffman/BDI/Raw table)\n\
          \x20 energy   interconnect energy per inference (link vs codec)\n\
@@ -329,8 +331,14 @@ fn cmd_noc(flags: &Flags) -> Result<()> {
     let pattern = flags.get("pattern", "uniform");
     let size_bits = flags.get_usize("size-bits", 128 * 64)? as u64;
     let count = flags.get_usize("count", 500)?;
+    // --egress LANES routes ejection through the codec ports (ISSUE 5):
+    // packets are tagged with --codec (default huffman) and drained at
+    // the nominal decoder rate for that lane count.
+    let egress_lanes = flags.get_usize("egress", 0)?;
+    let codec = CodecKind::parse(flags.get("codec", "huffman"))
+        .map_err(|e| anyhow!("--codec: {e}"))?;
 
-    let specs = match pattern {
+    let mut specs = match pattern {
         "uniform" => {
             let mut rng = lexi_core::prng::Rng::new(1);
             lexi_noc::traffic::uniform_random(mesh, count, size_bits, 0.25, &mut rng)
@@ -339,9 +347,23 @@ fn cmd_noc(flags: &Flags) -> Result<()> {
         "hotspot" => lexi_noc::traffic::hotspot(mesh, NodeId(0), size_bits),
         other => bail!("unknown pattern '{other}'"),
     };
+    let mut net = if egress_lanes > 0 {
+        // ~10 wire bits per exponent symbol at the paper wire ratio
+        // (coded exponent + sign/mantissa passthrough per BF16 value).
+        lexi_noc::traffic::tag_packets(&mut specs, codec, 10.0, true);
+        Network::with_egress(
+            cfg,
+            lexi_noc::EgressCodecConfig::nominal(egress_lanes, 1.0),
+        )
+    } else {
+        Network::new(cfg)
+    };
     let n = specs.len();
-    let mut net = Network::new(cfg);
-    net.schedule_packets(&specs);
+    // User-controlled flags can produce invalid tagged specs (e.g.
+    // --size-bits 0): surface the validation error as a CLI error, not
+    // a panic.
+    net.try_schedule_packets(&specs)
+        .map_err(|e| anyhow!("invalid packet specs: {e}"))?;
     let stats = net.run_to_completion(50_000_000);
     println!(
         "pattern={pattern} mesh={mesh_s}: {n} packets, {} flits, {} cycles ({})",
@@ -350,11 +372,22 @@ fn cmd_noc(flags: &Flags) -> Result<()> {
         fmt_ns(stats.cycles as f64 * cfg.cycle_ns())
     );
     println!(
-        "avg latency {:.1} cycles, max {}, link util {:.1}%",
+        "avg latency {:.1} cycles (+{:.1} NI queueing), max {}, link util {:.1}%",
         stats.avg_latency(),
+        stats.avg_queueing(),
         stats.max_latency,
         stats.link_utilization(net.link_count()) * 100.0
     );
+    if egress_lanes > 0 {
+        println!(
+            "egress ({egress_lanes}-lane {}): {} symbols decoded, {} stall cycles, \
+             completion cycle {}",
+            codec.name(),
+            stats.delivered_symbols,
+            stats.decode_stall_cycles,
+            stats.completion_cycle
+        );
+    }
     Ok(())
 }
 

@@ -11,15 +11,16 @@ use lexi::core::huffman::{self, CodeBook};
 use lexi::core::proptest::check;
 use lexi::core::stats::Histogram;
 use lexi::core::Bf16;
+use lexi::core::codec::CodecKind;
 use lexi::hw::compressor::{Compressor, CompressorConfig};
-use lexi::hw::decoder::{DecoderConfig, DecoderUnit};
+use lexi::hw::decoder::{DecoderConfig, DecoderUnit, MultiLutSpec};
 use lexi::hw::tree_builder;
 use lexi::models::activations;
 use lexi::models::corpus::Corpus;
 use lexi::models::traffic::{self, TransferKind};
 use lexi::models::{ModelConfig, ModelScale};
-use lexi::noc::traffic::{segment_transfer, MAX_PACKET_BITS};
-use lexi::noc::{Network, NetworkConfig};
+use lexi::noc::traffic::{segment_transfer_tagged, MAX_PACKET_BITS};
+use lexi::noc::{CodecTag, EgressCodecConfig, Network, NetworkConfig, PacketSpec};
 use lexi::sim::compression::{CompressionMode, CrTable};
 use lexi::sim::engine::Engine;
 
@@ -67,7 +68,10 @@ fn hw_and_sw_codebooks_equal_cost() {
 }
 
 /// Field streams → flits → NoC → unpack: the payload a destination chiplet
-/// reassembles is bit-identical to what the source emitted.
+/// reassembles is bit-identical to what the source emitted — and, since
+/// ISSUE 5, the packets travel **codec-tagged** through the egress
+/// decoder port, whose delivered symbol count and stall cycles must match
+/// the `DecoderUnit` hardware model's predictions.
 #[test]
 fn flits_survive_the_network() {
     let mut rng = lexi::core::prng::Rng::new(9);
@@ -80,25 +84,123 @@ fn flits_survive_the_network() {
     let format = FlitFormat::new(128).unwrap();
     let transfer = flit::pack(&streams, &book, format).unwrap();
 
-    // Ship the same number of bits over the mesh and check delivery.
+    // Ship the same number of bits over the mesh, codec-tagged, through
+    // an egress port whose Huffman rate is the measured multi-symbol LUT
+    // unit for this very codebook.
     let ncfg = NetworkConfig::paper_default();
-    let specs = segment_transfer(
+    let unit = DecoderUnit::with_multi(DecoderConfig::paper_default(), MultiLutSpec::paper_default())
+        .unwrap();
+    let lanes = 16usize;
+    let ecfg = EgressCodecConfig::from_decoder(&unit, &book, lanes, 1.0);
+    let tag = CodecTag {
+        kind: CodecKind::Huffman,
+        symbols: values.len() as u64,
+        runtime_book: true,
+    };
+    let specs = segment_transfer_tagged(
         lexi::noc::NodeId(1),
         lexi::noc::NodeId(34),
         transfer.wire_bits(),
         0,
         MAX_PACKET_BITS,
+        tag,
     );
-    let mut net = Network::new(ncfg);
+    let mut net = Network::with_egress(ncfg, ecfg);
     net.schedule_packets(&specs);
     let stats = net.run_to_completion(10_000_000);
     assert_eq!(
         stats.delivered_flits as u64,
         specs.iter().map(|s| s.flits(ncfg.flit_bits) as u64).sum::<u64>()
     );
+    // Every tagged exponent symbol was accounted for at the egress port.
+    assert_eq!(stats.delivered_symbols, values.len() as u64);
+
+    // Decode-stall prediction from the hw model: at 16 lanes the
+    // measured LUT rate sustains line rate, so the only stalls are the
+    // runtime codebook startup on the first packet's head flits.
+    let cycle_ns = ncfg.cycle_ns();
+    let drain_cycles_per_flit = {
+        let total_flits: u64 =
+            specs.iter().map(|s| s.flits(ncfg.flit_bits) as u64).sum();
+        values.len() as f64 * unit.cycles_per_symbol(&book) / lanes as f64
+            / total_flits as f64
+            / cycle_ns
+    };
+    assert!(
+        drain_cycles_per_flit < 1.0,
+        "16 measured lanes must sustain line rate ({drain_cycles_per_flit})"
+    );
+    let startup_cycles = (ecfg.startup_ns / cycle_ns).ceil() as u64;
+    assert!(
+        stats.decode_stall_cycles >= startup_cycles.saturating_sub(2)
+            && stats.decode_stall_cycles <= startup_cycles + 2,
+        "stalls {} vs predicted startup {}",
+        stats.decode_stall_cycles,
+        startup_cycles
+    );
+
+    // A starved single-lane port is decode-bound: completion stretches
+    // to ~the DecoderUnit makespan for these symbols.
+    let mut net1 = Network::with_egress(ncfg, EgressCodecConfig::from_decoder(&unit, &book, 1, 1.0));
+    net1.schedule_packets(&specs);
+    let stats1 = net1.run_to_completion(10_000_000);
+    let predicted_decode =
+        values.len() as f64 * unit.cycles_per_symbol(&book) / cycle_ns;
+    assert!(
+        stats1.decode_stall_cycles > stats.decode_stall_cycles,
+        "1-lane egress must stall more than 16-lane"
+    );
+    assert!(
+        stats1.completion_cycle as f64 >= predicted_decode,
+        "completion {} below the hw decode bound {predicted_decode}",
+        stats1.completion_cycle
+    );
 
     // And the flit payload itself unpacks losslessly.
     assert_eq!(flit::unpack(&transfer).unwrap().join(), values);
+}
+
+/// Hostile codec tags are rejected at scheduling — never mis-charged to
+/// the egress decoder model.
+#[test]
+fn bogus_codec_tags_rejected_not_mischarged() {
+    let ncfg = NetworkConfig::paper_default();
+    let mut net = Network::with_egress(ncfg, EgressCodecConfig::paper_default());
+    // More symbols than wire bits: physically impossible (every coded
+    // symbol costs ≥ 1 bit on the wire).
+    let over = PacketSpec::new(lexi::noc::NodeId(0), lexi::noc::NodeId(7), 1024, 0).tagged(
+        CodecTag {
+            kind: CodecKind::Huffman,
+            symbols: 1025,
+            runtime_book: true,
+        },
+    );
+    assert!(net.try_schedule_packets(&[over]).is_err());
+    // Tag riding a zero-size packet.
+    let phantom = PacketSpec::new(lexi::noc::NodeId(0), lexi::noc::NodeId(7), 0, 0).tagged(
+        CodecTag {
+            kind: CodecKind::Raw,
+            symbols: 1,
+            runtime_book: false,
+        },
+    );
+    assert!(net.try_schedule_packets(&[phantom]).is_err());
+    // Nothing entered the network: no packets, no symbols, no stalls.
+    let stats = net.run_to_completion(10);
+    assert_eq!(stats.delivered_packets, 0);
+    assert_eq!(stats.delivered_symbols, 0);
+    assert_eq!(stats.decode_stall_cycles, 0);
+    // A maximal-but-legal tag still schedules.
+    let legal = PacketSpec::new(lexi::noc::NodeId(0), lexi::noc::NodeId(7), 1024, 0).tagged(
+        CodecTag {
+            kind: CodecKind::Huffman,
+            symbols: 1024,
+            runtime_book: true,
+        },
+    );
+    assert!(net.try_schedule_packets(&[legal]).is_ok());
+    let stats = net.run_to_completion(100_000);
+    assert_eq!(stats.delivered_symbols, 1024);
 }
 
 /// Corrupted flits are rejected, not mis-decoded: flip bits in a packed

@@ -21,6 +21,7 @@ Reference implementations are independent (string-of-bits codec), so a
 mirror bug and a reference bug can't cancel.
 """
 
+import math
 import random
 
 MASK64 = (1 << 64) - 1
@@ -1134,6 +1135,79 @@ def main():
     print(
         f"[10] multi-symbol LUT: {ok10} books x {probes} probes match brute force, decode loop lossless"
     )
+
+    # 11) Egress codec ports (PR 5): mirror of noc/src/egress.rs — the
+    #     ready/accept stall rule on a saturated ejection port.
+    #       ready(busy, now)  = busy < now + 1 - eps
+    #       accept(busy, now, cost) = max(busy, now) + cost
+    #     cost(flit) = symbols_per_flit * cps / ghz / cycle_ns
+    #                  (+ startup_ns / cycle_ns on a runtime-Huffman head)
+    EPS = 1e-9
+
+    def egress_replay(flits, cost_body, cost_head):
+        """Drain `flits` through the port; flit always waiting (the
+        saturated case — upstream buffers refill faster than a stalling
+        decoder drains). Returns (completion_cycle, stall_cycles)."""
+        busy, now, stalls, accepted = 0.0, 0, 0, 0
+        while accepted < flits:
+            if busy < now + 1 - EPS:  # ready()
+                cost = cost_head if accepted == 0 else cost_body
+                busy = max(busy, float(now)) + cost  # accept()
+                accepted += 1
+            else:
+                stalls += 1
+            now += 1
+        return max(now, math.ceil(busy - EPS)), stalls
+
+    for trial in range(400):
+        flits = rng.randrange(1, 2000)
+        syms_per_flit = rng.uniform(0.0, 40.0)
+        cps = rng.uniform(0.0, 2.0)       # effective cycles/symbol, all lanes
+        ghz = rng.choice((0.5, 1.0, 2.0))
+        cycle_ns = rng.choice((0.64, 1.28, 2.56))
+        startup_ns = rng.choice((0.0, 202.0))
+        cost = syms_per_flit * cps / ghz / cycle_ns
+        startup_cycles = startup_ns / cycle_ns
+        done, stalls = egress_replay(flits, cost, cost + startup_cycles)
+
+        decode_cycles = flits * cost + startup_cycles
+        if cost <= 1.0 and startup_ns == 0.0:
+            # Line rate: the decoder never throttles the link — the
+            # paper's egress claim. Zero stalls, 1 flit/cycle.
+            assert stalls == 0, f"line-rate port stalled ({cost})"
+            assert done == flits, (done, flits)
+        if cost > 1.0 + EPS:
+            # Decode-bound: completion tracks the decode makespan with
+            # fractional pacing (within one flit cost + rounding).
+            # Backpressure becomes *visible* (a refused cycle) only once
+            # the accumulated excess tops a whole cycle — the first
+            # stall lands at flit k ≈ 1/(cost−1), so a short packet with
+            # cost barely above 1 can drain stall-free. A lone flit
+            # never stalls (nothing behind it).
+            if (cost - 1.0) * (flits - 1) > 1.5:
+                assert stalls > 0, f"decode-bound port never stalled ({cost})"
+            assert decode_cycles - 1 <= done <= decode_cycles + cost + 2, (
+                done,
+                decode_cycles,
+                cost,
+            )
+        if startup_ns > 0.0 and flits > 1 and cost <= 1.0:
+            # Startup stalls the flits behind the head by ~its cycles.
+            base_done, base_stalls = egress_replay(flits, cost, cost)
+            assert base_stalls == 0
+            delta = done - base_done
+            assert abs(delta - startup_cycles) <= 2, (delta, startup_cycles)
+        # Completion never beats the link (1 flit/cycle floor) and the
+        # port conserves flits (accepted == flits by construction).
+        assert done >= flits
+    # Monotonicity: more symbols per flit can only stall more.
+    prev = None
+    for spf in (0.0, 4.0, 8.0, 16.0, 32.0):
+        done, _ = egress_replay(500, spf * 1.16 / 1.28, spf * 1.16 / 1.28)
+        assert prev is None or done >= prev, "completion not monotone in symbols"
+        prev = done
+    print("[11] egress codec port: ready/accept stall rule — line-rate free, "
+          "decode-bound == makespan, startup charged once: 400 cases OK")
 
     print("\nALL LOGIC CHECKS PASSED")
 

@@ -1,19 +1,25 @@
 #!/usr/bin/env python3
-"""Perf-regression gate for BENCH_perf_codec.json (ISSUE 2 satellite).
+"""Perf-regression gate for BENCH_*.json dumps (ISSUE 2 satellite).
 
 Usage: perf_gate.py FRESH BASELINE [--threshold 0.15]
+
+The gate is bench-agnostic: any JSON with a `rows` map of
+`name -> {"m_per_s": ...}` works. ci.sh runs it once per bench —
+`BENCH_perf_codec.json` (codec hot path) and, since ISSUE 5,
+`BENCH_perf_noc.json` (NoC stepping rate ± egress codec ports) — each
+diffed against its `git show HEAD:<file>` baseline.
 
 Compares the throughput rows of a freshly produced bench JSON against the
 committed baseline and fails (exit 1) if any shared row's `m_per_s`
 dropped by more than the threshold. Rows present in only one file are
 reported but never fail the gate: new benches (e.g. the `bdi encode` /
-`bdi decode` rows ISSUE 3 added) land against an older baseline without
-a baseline edit, and removed benches don't block CI. A new row starts
-gating on the first run after its JSON is committed as the baseline.
+`bdi decode` rows ISSUE 3 added, or the `noc * egress` rows from
+ISSUE 5) land against an older baseline without a baseline edit, and
+removed benches don't block CI. A new row starts gating on the first run
+after its JSON is committed as the baseline.
 
-ci.sh wires this up after `cargo bench --bench perf_codec`, diffing
-against `git show HEAD:BENCH_perf_codec.json`; set LEXI_SKIP_PERF_GATE=1
-(e.g. in toolchain-less or noisy-neighbour containers) to skip.
+Set LEXI_SKIP_PERF_GATE=1 (e.g. in toolchain-less or noisy-neighbour
+containers) to skip.
 """
 
 import argparse
