@@ -4,7 +4,9 @@
 //! loop; codec-tagged stepping through the egress decoder ports within
 //! 1.3× of codec-blind stepping (cycles/s); analytic engine within 15%
 //! of the cycle simulator on uncongested transfers (the `sim::xval`
-//! band).
+//! band); an attached-but-inert fault model (ISSUE 6) within 1.05× of
+//! the plain egress row (the zero-BER hot path pays one branch per
+//! step, nothing per flit).
 //!
 //! Emits `BENCH_perf_noc.json` (row → median ns, M cycles/s) so
 //! `tools/perf_gate.py` can diff runs against the committed baseline,
@@ -13,7 +15,7 @@
 use lexi::models::corpus::Corpus;
 use lexi::models::{ModelConfig, ModelScale};
 use lexi::noc::traffic::{self, MAX_PACKET_BITS};
-use lexi::noc::{EgressCodecConfig, Mesh, Network, NetworkConfig, PacketSpec};
+use lexi::noc::{EgressCodecConfig, FaultModel, Mesh, Network, NetworkConfig, PacketSpec};
 use lexi::sim::compression::{CompressionMode, CrTable};
 use lexi::sim::engine::Engine;
 use lexi::sim::xval;
@@ -32,6 +34,7 @@ fn run_pattern(
     cfg: NetworkConfig,
     specs: &[PacketSpec],
     egress: Option<EgressCodecConfig>,
+    fault: Option<FaultModel>,
     t: &mut Table,
     rows: &mut Vec<Row>,
 ) -> (f64, f64) {
@@ -42,6 +45,9 @@ fn run_pattern(
             Some(e) => Network::with_egress(cfg, e),
             None => Network::new(cfg),
         };
+        if let Some(f) = &fault {
+            net.set_fault_model(f.clone());
+        }
         net.schedule_packets(specs);
         let stats = net.run_to_completion(10_000_000);
         cycles = stats.cycles;
@@ -86,12 +92,27 @@ fn main() {
     traffic::tag_packets(&mut uniform_tagged, CodecKind::Huffman, 10.0, true);
     let ecfg = EgressCodecConfig::paper_default();
 
-    let (blind_u, hops_rate) = run_pattern("noc uniform", cfg, &uniform, None, &mut t, &mut rows);
+    let (blind_u, hops_rate) =
+        run_pattern("noc uniform", cfg, &uniform, None, None, &mut t, &mut rows);
     let (egress_u, _) = run_pattern(
         "noc uniform egress",
         cfg,
         &uniform_tagged,
         Some(ecfg),
+        None,
+        &mut t,
+        &mut rows,
+    );
+    // ISSUE 6: an attached-but-inert fault model (all rates zero) must
+    // keep the per-step overhead at one branch — pinned ≤1.05× the
+    // egress row below. Baseline-less new row: the gate only arms it
+    // once this JSON is committed.
+    let (fault_off_u, _) = run_pattern(
+        "noc uniform fault-off",
+        cfg,
+        &uniform_tagged,
+        Some(ecfg),
+        Some(FaultModel::new(0xFA17)),
         &mut t,
         &mut rows,
     );
@@ -100,12 +121,13 @@ fn main() {
     let hot = traffic::hotspot(cfg.mesh, lexi::noc::NodeId(14), 128 * 64);
     let mut hot_tagged = hot.clone();
     traffic::tag_packets(&mut hot_tagged, CodecKind::Huffman, 10.0, true);
-    let (blind_h, _) = run_pattern("noc hotspot", cfg, &hot, None, &mut t, &mut rows);
+    let (blind_h, _) = run_pattern("noc hotspot", cfg, &hot, None, None, &mut t, &mut rows);
     let (egress_h, _) = run_pattern(
         "noc hotspot egress",
         cfg,
         &hot_tagged,
         Some(ecfg),
+        None,
         &mut t,
         &mut rows,
     );
@@ -147,6 +169,15 @@ fn main() {
         }
     );
 
+    // Fault-model-off overhead target (ISSUE 6): the inert model's
+    // per-step branch must keep stepping within 1.05× of the plain
+    // egress row.
+    let slow_f = egress_u / fault_off_u;
+    println!(
+        "fault-model-off stepping overhead: {slow_f:.3}x vs egress (target <=1.05x) — {}",
+        if slow_f <= 1.05 { "PASS" } else { "BELOW TARGET" }
+    );
+
     // Cross-validation (sim::xval): analytic vs tagged cycle sim on
     // uncongested sizable transfers, every mode (target <15%).
     let tiny = ModelConfig::jamba(ModelScale::Tiny);
@@ -183,6 +214,7 @@ fn main() {
     json.push_str(&format!(
         "  \"egress_slowdown_uniform\": {slow_u:.3},\n  \"egress_slowdown_hotspot\": {slow_h:.3},\n"
     ));
+    json.push_str(&format!("  \"fault_off_overhead\": {slow_f:.3},\n"));
     json.push_str(&format!("  \"xval_worst_err\": {worst:.4},\n"));
     json.push_str("  \"rows\": {\n");
     for (i, r) in rows.iter().enumerate() {

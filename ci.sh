@@ -53,7 +53,10 @@ if [[ "${1:-}" != "--quick" ]]; then
 
     # NoC stepping bench (ISSUE 5): uniform/hotspot ± egress codec ports,
     # cycles/s rows + the ≤1.3× codec-tagged slowdown target, dumped to
-    # BENCH_perf_noc.json for the same gate.
+    # BENCH_perf_noc.json for the same gate. ISSUE 6 adds the
+    # "noc uniform fault-off" row (inert fault model, ≤1.05× target);
+    # per the PR 3 convention, rows present in only one file never fail
+    # the gate, so the new row lands against older baselines cleanly.
     echo "== perf_noc (release) =="
     rm -f BENCH_perf_noc.json
     cargo bench --bench perf_noc

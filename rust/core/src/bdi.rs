@@ -174,7 +174,18 @@ pub fn decode_blocks(r: &mut BitReader, out: &mut [u8]) -> Result<()> {
                     // Sign-extend.
                     let shift = 64 - width;
                     let d = ((raw << shift) as i64) >> shift;
-                    *slot = (base + d as i16) as u8;
+                    // The encoder never writes base+delta outside u8
+                    // (the base is the block midrange), so an
+                    // out-of-range value is corrupted or forged input —
+                    // ISSUE 6: error out instead of silently wrapping.
+                    let v = base + d as i16;
+                    if !(0..=255).contains(&v) {
+                        return Err(Error::Corrupt {
+                            block: done / BLOCK,
+                            lane: 0,
+                        });
+                    }
+                    *slot = v as u8;
                 }
             }
         }
@@ -390,6 +401,37 @@ mod tests {
             let n = if i < 3 { BLOCK as u64 } else { 5 };
             assert!((n + 1..=n + 2).contains(&c), "block {i} cost {c}");
         }
+    }
+
+    #[test]
+    fn out_of_range_delta_is_corrupt_not_wraparound() {
+        // ISSUE 6 audit: a forged delta block whose base+delta leaves
+        // the u8 range used to wrap around silently; it must now be a
+        // typed Corrupt error identifying the block.
+        let mut w = BitWriter::new();
+        w.put(5, TAG_BITS); // width index 5 → 5-bit deltas
+        w.put(255, 8); // base at the top of the range
+        w.put(0b01111, 5); // +15 → 270: unrepresentable
+        let bits = w.len_bits();
+        let bytes = w.into_bytes();
+        let mut r = BitReader::with_len(&bytes, bits);
+        let mut out = [0u8; 1];
+        assert_eq!(
+            decode_blocks(&mut r, &mut out).unwrap_err(),
+            Error::Corrupt { block: 0, lane: 0 }
+        );
+        // Negative overflow too: base 0, delta −16.
+        let mut w = BitWriter::new();
+        w.put(5, TAG_BITS);
+        w.put(0, 8);
+        w.put(0b10000, 5); // −16 → −16
+        let bits = w.len_bits();
+        let bytes = w.into_bytes();
+        let mut r = BitReader::with_len(&bytes, bits);
+        assert_eq!(
+            decode_blocks(&mut r, &mut out).unwrap_err(),
+            Error::Corrupt { block: 0, lane: 0 }
+        );
     }
 
     #[test]

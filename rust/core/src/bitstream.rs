@@ -4,6 +4,12 @@
 //! chosen because canonical Huffman decode proceeds by numeric comparison
 //! of left-aligned code prefixes — the same convention the multi-stage LUT
 //! decoder hardware uses (paper §4.4).
+//!
+//! Robustness (ISSUE 6 audit): `get`/`peek`/`skip` return typed
+//! [`Error::BitstreamExhausted`] on reads past the advertised length —
+//! the `debug_assert!`s below guard *internal* invariants (callers
+//! pre-checking `remaining()`), never wire-input validity, so corrupted
+//! input cannot abort a release build.
 
 use crate::error::{Error, Result};
 

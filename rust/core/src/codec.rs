@@ -27,6 +27,7 @@
 use crate::bdi;
 use crate::error::{Error, Result};
 use crate::huffman;
+use crate::integrity::crc16;
 
 /// Width of the on-wire codec tag (2 bits: 3 codecs + 1 reserved).
 pub const CODEC_TAG_BITS: u32 = 2;
@@ -120,6 +121,11 @@ pub struct CodedBlock {
     pub bits: usize,
     /// Number of exponents encoded.
     pub count: usize,
+    /// Optional integrity seal (ISSUE 6): CRC-16 of `bytes`, set by
+    /// [`sealed`](CodedBlock::sealed). `None` keeps pre-v3 blocks and
+    /// every byte-identity pin untouched; `Some` makes every registered
+    /// codec's decode verify before touching the payload.
+    pub crc: Option<u16>,
 }
 
 impl CodedBlock {
@@ -130,6 +136,25 @@ impl CodedBlock {
             return 1.0;
         }
         (self.count as f64 * 8.0) / self.bits as f64
+    }
+
+    /// Seal the block: stamp the CRC-16 of the payload bytes so decode
+    /// verifies integrity first. Idempotent on an unmodified block.
+    pub fn sealed(mut self) -> Self {
+        self.crc = Some(crc16(&self.bytes));
+        self
+    }
+
+    /// Verify the seal, if any. Unsealed blocks pass vacuously; a sealed
+    /// block whose payload no longer matches returns
+    /// [`Error::Corrupt`]`{block: 0, lane: 0}`.
+    pub fn verify(&self) -> Result<()> {
+        match self.crc {
+            Some(c) if crc16(&self.bytes) != c => {
+                Err(Error::Corrupt { block: 0, lane: 0 })
+            }
+            _ => Ok(()),
+        }
     }
 }
 
@@ -166,6 +191,9 @@ pub trait ExpCodec: Sync {
     }
 }
 
+/// Shared decode gate: kind dispatch check, then the integrity seal.
+/// Every registered codec's `decode` flows through here, so a sealed
+/// block is verified on all three paths before any payload bit is read.
 fn check_kind(codec: &dyn ExpCodec, block: &CodedBlock) -> Result<()> {
     if block.kind != codec.kind() {
         return Err(Error::InvalidParameter(format!(
@@ -174,7 +202,7 @@ fn check_kind(codec: &dyn ExpCodec, block: &CodedBlock) -> Result<()> {
             codec.kind().name()
         )));
     }
-    Ok(())
+    block.verify()
 }
 
 // --- Huffman (LEXI) --------------------------------------------------------
@@ -199,6 +227,7 @@ impl ExpCodec for HuffmanCodec {
             bytes: block.bytes,
             bits: block.bits,
             count: block.count,
+            crc: None,
         })
     }
 
@@ -235,6 +264,7 @@ impl ExpCodec for BdiCodec {
             bytes: block.bytes,
             bits: block.bits,
             count: block.count,
+            crc: None,
         })
     }
 
@@ -275,6 +305,7 @@ impl ExpCodec for RawCodec {
             bytes: exponents.to_vec(),
             bits: exponents.len() * 8,
             count: exponents.len(),
+            crc: None,
         })
     }
 
@@ -402,7 +433,32 @@ mod tests {
             bytes: vec![1, 2, 3],
             bits: 4096, // claims more bits than the buffer holds
             count: 512,
+            crc: None,
         };
         assert!(CodecKind::Raw.codec().decode(&block).is_err());
+    }
+
+    #[test]
+    fn sealed_blocks_roundtrip_and_catch_corruption() {
+        // ISSUE 6: every registered codec verifies the seal on decode.
+        let data = sample(11, 2048);
+        for kind in CodecKind::ALL {
+            let codec = kind.codec();
+            let sealed = codec.encode(&data).unwrap().sealed();
+            assert!(sealed.crc.is_some());
+            assert_eq!(codec.decode(&sealed).unwrap(), data, "{kind:?}");
+            // Any payload byte flip is caught before decoding starts.
+            let mut dirty = sealed.clone();
+            dirty.bytes[dirty.bytes.len() / 2] ^= 0x40;
+            assert_eq!(
+                codec.decode(&dirty).unwrap_err(),
+                Error::Corrupt { block: 0, lane: 0 },
+                "{kind:?}"
+            );
+            // Unsealed blocks keep today's behavior: no verification.
+            let plain = codec.encode(&data).unwrap();
+            assert!(plain.crc.is_none());
+            assert!(plain.verify().is_ok());
+        }
     }
 }

@@ -25,6 +25,12 @@ pub enum Error {
 
     /// A parameter is outside its supported range.
     InvalidParameter(String),
+
+    /// An integrity check (CRC-16) failed: the payload was corrupted in
+    /// transit. `block` indexes the coded block (0 for single-block
+    /// containers), `lane` the interleaved lane inside it (0 when the
+    /// format has no lanes, or when the *header* itself failed).
+    Corrupt { block: usize, lane: usize },
 }
 
 impl fmt::Display for Error {
@@ -43,6 +49,10 @@ impl fmt::Display for Error {
             Error::MalformedCodebook(msg) => write!(f, "malformed codebook header: {msg}"),
             Error::MalformedFlit(msg) => write!(f, "malformed flit: {msg}"),
             Error::InvalidParameter(msg) => write!(f, "invalid parameter: {msg}"),
+            Error::Corrupt { block, lane } => write!(
+                f,
+                "integrity check failed: block {block}, lane {lane} corrupted in transit"
+            ),
         }
     }
 }

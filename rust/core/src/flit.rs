@@ -345,10 +345,11 @@ pub fn unpack(transfer: &LayerTransfer) -> Result<FieldStreams> {
         debug_assert_eq!(out.signs.len(), base + k);
     }
     if out.len() != count {
-        return Err(Error::MalformedFlit(format!(
-            "expected {count} values, unpacked {}",
-            out.len()
-        )));
+        // The head flit's transfer count and the per-flit counts
+        // disagree: the transfer was corrupted in flight (ISSUE 6) —
+        // typed Corrupt, so callers can trigger retransmission instead
+        // of treating it as a programming error.
+        return Err(Error::Corrupt { block: 0, lane: 0 });
     }
     Ok(out)
 }
@@ -474,6 +475,36 @@ mod tests {
         // force the reserved pattern 0b11.
         t.flits[0].bytes[0] |= 0b1100_0000;
         assert!(unpack(&t).is_err());
+    }
+
+    #[test]
+    fn tampered_flit_counts_error_not_panic() {
+        // ISSUE 6 audit: disagreements between the head flit's transfer
+        // count and the per-flit counts must surface as a typed error
+        // (Corrupt when the streams decode but the totals mismatch),
+        // never a panic or a silently short output.
+        let vals = gaussian_values(600, 0.02, 21);
+        let streams = FieldStreams::split(&vals);
+        let format = FlitFormat::new(128).unwrap();
+        let t = pack_codec(&streams, CodecKind::Raw, None, format).unwrap();
+        // Flip the transfer count's least-significant bit. Raw head
+        // layout: 2-bit tag then count:32, so that is head bit 33 —
+        // byte 4, second-from-MSB. Every data flit still decodes, so
+        // the total/count mismatch is caught at the end as Corrupt.
+        let mut fewer = t.clone();
+        fewer.flits[0].bytes[4] ^= 1 << (7 - ((2 + 31) % 8));
+        assert_eq!(
+            unpack(&fewer).unwrap_err(),
+            Error::Corrupt { block: 0, lane: 0 }
+        );
+        // Zero out a data flit's per-flit count: totals can no longer
+        // match; must be a typed error.
+        let mut short = t.clone();
+        let last = short.flits.len() - 1;
+        for b in &mut short.flits[last].bytes {
+            *b = 0;
+        }
+        assert!(unpack(&short).is_err());
     }
 
     #[test]

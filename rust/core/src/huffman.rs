@@ -15,6 +15,14 @@
 //! * Codebooks are per-layer and piggybacked: a compact header (symbol,
 //!   length) list prefixes each compressed stream, enough for the receiver
 //!   to rebuild the identical canonical code.
+//!
+//! Robustness (ISSUE 6 audit): every decode routine in this module
+//! returns typed [`Error`] variants on malformed or corrupted input —
+//! truncated streams die as `BitstreamExhausted`, unknown codewords as
+//! `InvalidCodeword`, hostile count headers are bounded before any
+//! allocation. No decode path panics or silently truncates; CRC-based
+//! *detection* of in-transit corruption lives one layer up, in
+//! [`crate::integrity`] / the `LaneStream` v3 format.
 
 use crate::batch::BatchEncoder;
 use crate::bitstream::{BitReader, BitRefill, BitWriter};

@@ -1,0 +1,159 @@
+//! Stream integrity: CRC-16 for the codec wire formats (ISSUE 6).
+//!
+//! LEXI's contract is *lossless* exponent transport, but a Huffman stream
+//! has no redundancy of its own — a single flipped wire bit silently
+//! decodes into wrong exponents. This module adds the detection half of
+//! the fault-tolerance story: a 16-bit CRC carried in the version-bumped
+//! `LaneStream` v3 header (one per lane payload plus one over the header
+//! itself) and optionally sealed into a [`CodedBlock`](crate::codec).
+//!
+//! The polynomial is CRC-16/CCITT-FALSE (poly `0x1021`, init `0xFFFF`,
+//! no reflection, no final xor) — the classic NoC/link-layer choice
+//! (HDLC, Bluetooth, SD): cheap in hardware (a 16-bit LFSR), Hamming
+//! distance 4 up to ~32 Kbit payloads, so **every** 1-, 2- and 3-bit
+//! error inside a lane payload is detected. Residual escape probability
+//! for arbitrary multi-bit corruption is 2⁻¹⁶ ≈ 1.5 × 10⁻⁵ (pinned by a
+//! seeded trial in the tests and mirrored toolchain-less by
+//! `tools/logic_check.py` §[12]).
+//!
+//! The implementation is table-driven (256-entry, built in a `const fn`
+//! so the table is baked into rodata); the bitwise LFSR definition
+//! survives in the tests as the independent reference.
+
+/// CRC-16/CCITT-FALSE generator polynomial (x¹⁶+x¹²+x⁵+1).
+pub const CRC16_POLY: u16 = 0x1021;
+
+/// CRC-16/CCITT-FALSE initial register value.
+pub const CRC16_INIT: u16 = 0xFFFF;
+
+/// Byte-at-a-time lookup table, one entry per input byte value.
+const CRC16_TABLE: [u16; 256] = build_table();
+
+const fn build_table() -> [u16; 256] {
+    let mut table = [0u16; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        let mut crc = (b as u16) << 8;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 0x8000 != 0 {
+                (crc << 1) ^ CRC16_POLY
+            } else {
+                crc << 1
+            };
+            bit += 1;
+        }
+        table[b] = crc;
+        b += 1;
+    }
+    table
+}
+
+/// Fold `bytes` into a running CRC (streaming form; start from
+/// [`CRC16_INIT`]).
+#[inline]
+pub fn crc16_update(mut crc: u16, bytes: &[u8]) -> u16 {
+    for &b in bytes {
+        crc = (crc << 8) ^ CRC16_TABLE[((crc >> 8) ^ b as u16) as usize];
+    }
+    crc
+}
+
+/// CRC-16/CCITT-FALSE of `bytes` in one call.
+#[inline]
+pub fn crc16(bytes: &[u8]) -> u16 {
+    crc16_update(CRC16_INIT, bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Bit-at-a-time LFSR — the independent reference the table-driven
+    /// implementation is checked against.
+    fn crc16_bitwise(bytes: &[u8]) -> u16 {
+        let mut crc = CRC16_INIT;
+        for &b in bytes {
+            crc ^= (b as u16) << 8;
+            for _ in 0..8 {
+                crc = if crc & 0x8000 != 0 {
+                    (crc << 1) ^ CRC16_POLY
+                } else {
+                    crc << 1
+                };
+            }
+        }
+        crc
+    }
+
+    #[test]
+    fn known_check_value() {
+        // The canonical CRC-16/CCITT-FALSE check: crc("123456789") = 0x29B1.
+        assert_eq!(crc16(b"123456789"), 0x29B1);
+        assert_eq!(crc16(b""), CRC16_INIT);
+    }
+
+    #[test]
+    fn table_matches_bitwise_reference() {
+        let mut rng = crate::prng::Rng::new(0x1521_06);
+        for _ in 0..200 {
+            let n = rng.below(512) as usize;
+            let buf: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+            assert_eq!(crc16(&buf), crc16_bitwise(&buf));
+        }
+    }
+
+    #[test]
+    fn streaming_equals_one_shot() {
+        let buf: Vec<u8> = (0..257u32).map(|i| (i * 37) as u8).collect();
+        for split in [0usize, 1, 7, 128, buf.len()] {
+            let (a, b) = buf.split_at(split);
+            assert_eq!(crc16_update(crc16_update(CRC16_INIT, a), b), crc16(&buf));
+        }
+    }
+
+    #[test]
+    fn every_single_bit_flip_detected() {
+        // Hamming distance ≥ 2 at any length: exhaustive over a 64-byte
+        // buffer, every bit position.
+        let buf: Vec<u8> = (0..64u32).map(|i| (i * 151 + 3) as u8).collect();
+        let clean = crc16(&buf);
+        for byte in 0..buf.len() {
+            for bit in 0..8 {
+                let mut dirty = buf.clone();
+                dirty[byte] ^= 1 << bit;
+                assert_ne!(crc16(&dirty), clean, "flip at {byte}:{bit} escaped");
+            }
+        }
+    }
+
+    #[test]
+    fn multi_bit_escape_rate_is_two_to_minus_sixteen() {
+        // Random (≥ 4-bit) corruption escapes a 16-bit CRC with
+        // probability ≈ 2⁻¹⁶. Pin the seeded measurement so the residual
+        // risk documented in DESIGN.md stays honest: over 60 000 trials
+        // the expected escape count is ~0.9 — allow a few, require it
+        // stays rare.
+        let mut rng = crate::prng::Rng::new(0xE5C4_9A7E);
+        let buf: Vec<u8> = (0..96u32).map(|i| (i * 29 + 11) as u8).collect();
+        let clean = crc16(&buf);
+        let trials = 60_000u32;
+        let mut escapes = 0u32;
+        for _ in 0..trials {
+            let mut dirty = buf.clone();
+            for _ in 0..4 {
+                let pos = rng.below((dirty.len() * 8) as u64) as usize;
+                dirty[pos / 8] ^= 1 << (pos % 8);
+            }
+            // A flip set that cancels itself leaves the buffer clean —
+            // not an escape.
+            if dirty != buf && crc16(&dirty) == clean {
+                escapes += 1;
+            }
+        }
+        assert!(
+            escapes <= 6,
+            "multi-bit escape rate far above 2^-16: {escapes}/{trials}"
+        );
+    }
+}

@@ -23,6 +23,10 @@
 //! * [`batch`] — §Perf: the word-at-a-time batch codec engine (pair-fused
 //!   encode, refill-based block decode, N-lane interleaved streams) that
 //!   the scalar codecs above are the bit-exact oracle for.
+//! * [`integrity`] — CRC-16 (CCITT-FALSE) stream integrity for the
+//!   `LaneStream` v3 wire format and sealed [`codec::CodedBlock`]s
+//!   (ISSUE 6): corrupted payloads surface as
+//!   [`Error::Corrupt`](error::Error::Corrupt), never as wrong symbols.
 //! * [`lut`] — §Perf: the multi-symbol decode LUT
 //!   ([`MultiDecodeTable`](lut::MultiDecodeTable)): one direct-table
 //!   probe emits up to 4 exponents, with sentinel fallback to the
@@ -39,6 +43,7 @@ pub mod codec;
 pub mod error;
 pub mod flit;
 pub mod huffman;
+pub mod integrity;
 pub mod lut;
 pub mod prng;
 pub mod proptest;

@@ -45,6 +45,13 @@
 //! (property-pinned here and in `huffman`/`batch`).
 //!
 //! [`decode_from_window`]: crate::huffman::CanonicalDecoder
+//!
+//! Robustness (ISSUE 6 audit): the LUT is a pure accelerator — entries
+//! only fire on fully-decoded, in-window codeword runs; every partial,
+//! ESC-leading, or malformed pattern is the `n = 0` sentinel, which
+//! falls back to the scalar kernel and its typed [`Error`] handling. A
+//! corrupted stream therefore fails exactly where the scalar decoder
+//! fails; the LUT can neither panic nor fabricate symbols.
 
 use crate::huffman::{CanonicalDecoder, CodeBook};
 

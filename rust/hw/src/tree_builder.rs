@@ -294,6 +294,7 @@ mod tests {
             bytes: block.bytes,
             bits: block.bits,
             count: block.count,
+            crc: None,
         };
         assert_eq!(CodecKind::Huffman.codec().decode(&coded).unwrap(), data);
     }

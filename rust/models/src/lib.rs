@@ -23,7 +23,9 @@
 //! * [`traffic`] — per-phase logical transfers (weights, activations,
 //!   KV-cache, SSM-state) for prefill + autoregressive decode.
 //! * [`policy`] — per-traffic-class codec assignment ([`CodecPolicy`]):
-//!   which `lexi_core::codec::CodecKind` each kind travels under.
+//!   which `lexi_core::codec::CodecKind` each kind travels under; plus
+//!   graceful degradation (ISSUE 6): a [`DegradePolicy`]/`DegradeTracker`
+//!   pair that falls a repeatedly-undecodable class back to `Raw`.
 
 pub mod activations;
 pub mod config;
@@ -33,5 +35,5 @@ pub mod traffic;
 pub mod weights;
 
 pub use config::{BlockKind, ModelConfig, ModelScale};
-pub use policy::CodecPolicy;
+pub use policy::{CodecPolicy, DegradePolicy, DegradeTracker};
 pub use traffic::{Phase, TransferKind, TransferSpec};

@@ -119,6 +119,95 @@ impl Default for CodecPolicy {
     }
 }
 
+/// Graceful-degradation knob (ISSUE 6): when a traffic class keeps
+/// failing to decode (CRC NACKs that survive the NoC's retry budget),
+/// the engine stops compressing that class rather than stalling the
+/// pipeline on retransmissions — lossless first, fast second, but never
+/// wedged.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DegradePolicy {
+    /// Decode failures a single [`TransferKind`] may accumulate before
+    /// its codec falls back to [`CodecKind::Raw`].
+    pub failure_threshold: u32,
+}
+
+impl DegradePolicy {
+    /// Paper-point default: three strikes per traffic class.
+    pub fn paper_default() -> Self {
+        DegradePolicy { failure_threshold: 3 }
+    }
+}
+
+impl Default for DegradePolicy {
+    fn default() -> Self {
+        Self::paper_default()
+    }
+}
+
+/// Per-traffic-class decode-failure accounting that drives
+/// [`DegradePolicy`]. Indexed by [`TransferKind::ALL`] order.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DegradeTracker {
+    failures: [u32; 4],
+    degraded: [bool; 4],
+}
+
+#[inline]
+fn kind_index(kind: TransferKind) -> usize {
+    match kind {
+        TransferKind::Weights => 0,
+        TransferKind::Activation => 1,
+        TransferKind::KvCache => 2,
+        TransferKind::SsmState => 3,
+    }
+}
+
+impl DegradeTracker {
+    /// A tracker with no failures recorded.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one decode failure for `kind`. Once the count reaches
+    /// `policy.failure_threshold`, the class is marked degraded and its
+    /// entry in `codec_policy` is rewritten to `Raw` (idempotent — later
+    /// failures keep it Raw). Returns `true` iff this call flipped the
+    /// class.
+    pub fn record_failure(
+        &mut self,
+        kind: TransferKind,
+        policy: DegradePolicy,
+        codec_policy: &mut CodecPolicy,
+    ) -> bool {
+        let i = kind_index(kind);
+        self.failures[i] = self.failures[i].saturating_add(1);
+        if self.degraded[i] || self.failures[i] < policy.failure_threshold {
+            return false;
+        }
+        self.degraded[i] = true;
+        codec_policy.set(kind, CodecKind::Raw);
+        true
+    }
+
+    /// Decode failures recorded for `kind`.
+    pub fn failures(&self, kind: TransferKind) -> u32 {
+        self.failures[kind_index(kind)]
+    }
+
+    /// Has `kind` been degraded to `Raw`?
+    pub fn is_degraded(&self, kind: TransferKind) -> bool {
+        self.degraded[kind_index(kind)]
+    }
+
+    /// Every degraded traffic class, [`TransferKind::ALL`] order.
+    pub fn degraded_kinds(&self) -> Vec<TransferKind> {
+        TransferKind::ALL
+            .into_iter()
+            .filter(|&k| self.is_degraded(k))
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -160,5 +249,35 @@ mod tests {
         p.set(TransferKind::Weights, CodecKind::Raw);
         assert_eq!(p.codec_for(TransferKind::Weights), CodecKind::Raw);
         assert_eq!(p.describe(), "w=raw act=huffman kv=huffman ssm=huffman");
+    }
+
+    #[test]
+    fn degrade_flips_to_raw_at_threshold_only() {
+        let mut policy = CodecPolicy::lexi_default();
+        let mut tracker = DegradeTracker::new();
+        let dp = DegradePolicy::paper_default();
+        assert!(!tracker.record_failure(TransferKind::Activation, dp, &mut policy));
+        assert!(!tracker.record_failure(TransferKind::Activation, dp, &mut policy));
+        assert_eq!(policy.codec_for(TransferKind::Activation), CodecKind::Huffman);
+        assert!(!tracker.is_degraded(TransferKind::Activation));
+        // Third strike flips it — and only it.
+        assert!(tracker.record_failure(TransferKind::Activation, dp, &mut policy));
+        assert_eq!(policy.codec_for(TransferKind::Activation), CodecKind::Raw);
+        assert!(tracker.is_degraded(TransferKind::Activation));
+        assert_eq!(policy.codec_for(TransferKind::KvCache), CodecKind::Huffman);
+        assert_eq!(tracker.degraded_kinds(), vec![TransferKind::Activation]);
+        // Idempotent after the flip: more failures don't "re-flip".
+        assert!(!tracker.record_failure(TransferKind::Activation, dp, &mut policy));
+        assert_eq!(tracker.failures(TransferKind::Activation), 4);
+    }
+
+    #[test]
+    fn degrade_threshold_one_is_immediate() {
+        let mut policy = CodecPolicy::lexi_default();
+        let mut tracker = DegradeTracker::new();
+        let dp = DegradePolicy { failure_threshold: 1 };
+        assert!(tracker.record_failure(TransferKind::SsmState, dp, &mut policy));
+        assert_eq!(policy.codec_for(TransferKind::SsmState), CodecKind::Raw);
+        assert_eq!(policy.codec_for(TransferKind::Weights), CodecKind::Huffman);
     }
 }

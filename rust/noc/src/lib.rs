@@ -16,11 +16,17 @@
 //!   packets drain through the measured multi-lane LUT decoder rate with
 //!   startup stalls and backpressure, instead of the codec-blind
 //!   1 flit/cycle ejection.
+//! * [`fault`] — deterministic seeded link-fault injection (ISSUE 6):
+//!   BER-driven flit corruption, drops, and duplicates at link
+//!   traversal, with NACK-at-egress retransmission (bounded
+//!   [`fault::RETRY_BUDGET`], exponential backoff) handled by
+//!   [`network::Network`] and charged to packet latency.
 //!
 //! Links are parameterized in Gbps; with the paper's 100 Gbps NoI links
 //! and 128-bit flits, one network cycle is 1.28 ns.
 
 pub mod egress;
+pub mod fault;
 pub mod network;
 pub mod packet;
 pub mod router;
@@ -28,6 +34,7 @@ pub mod topology;
 pub mod traffic;
 
 pub use egress::{EgressCodecConfig, EgressPort};
+pub use fault::FaultModel;
 pub use network::{Network, NetworkConfig, SimStats};
 pub use packet::{CodecTag, Flit, FlitKind, PacketRecord, PacketSpec};
 pub use topology::{Mesh, NodeId};

@@ -14,8 +14,24 @@
 //! upstream, and the stall backpressures into the mesh like any full
 //! buffer. Untagged packets (and networks without an egress config) keep
 //! the codec-blind ejection path bit-for-bit.
+//!
+//! **Fault-injected links (ISSUE 6):** a network built with
+//! [`Network::with_faults`] (or [`Network::set_fault_model`]) passes
+//! every link traversal through a seeded [`FaultModel`]. A *dropped*
+//! flit stays at its FIFO head and retries next cycle (link-level ARQ —
+//! a wormhole body can never vanish mid-packet); a *corrupted* flit
+//! marks its packet dirty so the egress CRC check NACKs the tail, which
+//! schedules a retransmission after an exponential backoff (bounded by
+//! [`RETRY_BUDGET`], after which the loss is reported in
+//! [`SimStats::packets_dropped`]); a *duplicated* flit costs one extra
+//! cycle of downstream occupancy (the receiver squashes the copy by
+//! sequence number). Retransmission latency — backoff plus the repeat
+//! trip — is charged to the packet: its record keeps the *original*
+//! head-injection cycle. With no model attached (or all rates zero) the
+//! hot path pays one branch per step.
 
 use crate::egress::{self, EgressCodecConfig, EgressPort};
+use crate::fault::{retry_backoff, FaultModel, RETRY_BUDGET};
 use crate::packet::{Flit, FlitKind, PacketRecord, PacketSpec};
 use crate::router::Router;
 use crate::topology::{Mesh, NodeId, Port, NUM_PORTS};
@@ -72,10 +88,31 @@ struct PacketMeta {
     head_inject: Option<u64>,
     /// Ejection cycles spent blocked behind the egress decoder.
     decode_stalls: u64,
+    /// A link fault flipped payload bits in one of this packet's flits;
+    /// the egress CRC check will NACK the tail instead of recording
+    /// delivery.
+    corrupted: bool,
+    /// How many retransmissions preceded this attempt (0 = original).
+    attempt: u32,
+    /// Head-injection cycle of the *original* attempt, carried across
+    /// retransmissions so retry backoff + repeat trips land in latency.
+    first_inject: Option<u64>,
+}
+
+/// A NACKed packet awaiting its retransmission slot.
+#[derive(Clone, Copy, Debug)]
+struct RetryEntry {
+    spec: PacketSpec,
+    /// Cycle at which the retransmission re-enters the NI queue.
+    due: u64,
+    /// 1-based retransmission attempt this entry represents.
+    attempt: u32,
+    /// Original head-injection cycle (see [`PacketMeta::first_inject`]).
+    first_inject: u64,
 }
 
 /// Aggregate simulation statistics.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct SimStats {
     pub delivered_packets: u64,
     pub delivered_flits: u64,
@@ -93,6 +130,23 @@ pub struct SimStats {
     /// decode tail — has completed. ≥ `cycles` when the decoder is still
     /// draining after the last tail ejects.
     pub completion_cycle: u64,
+    /// Flits whose payload a link fault corrupted in transit (ISSUE 6).
+    pub flits_corrupted: u64,
+    /// Link traversals that ate the flit (retried next cycle at the
+    /// FIFO head — link-level ARQ).
+    pub flits_dropped: u64,
+    /// Link traversals that emitted a squashed duplicate (one extra
+    /// cycle of downstream occupancy).
+    pub flits_duplicated: u64,
+    /// Packet retransmissions scheduled after an egress-CRC NACK.
+    pub packet_retries: u64,
+    /// Packets abandoned after exhausting [`RETRY_BUDGET`]
+    /// retransmissions — reported, never silently lost.
+    pub packets_dropped: u64,
+    /// Per-node fault events on outbound links (corrupt + drop + dup),
+    /// indexed like the mesh. Sized at construction; empty only for a
+    /// default-constructed `SimStats`.
+    pub link_faults: Vec<u64>,
 }
 
 impl SimStats {
@@ -139,6 +193,10 @@ pub struct Network {
     egress_cfg: Option<EgressCodecConfig>,
     /// Per-node egress decoder state (parallel to `routers`).
     egress: Vec<EgressPort>,
+    /// Seeded link-fault injector; `None` = ideal lossless links.
+    fault: Option<FaultModel>,
+    /// NACKed packets waiting out their retransmission backoff.
+    retry_queue: Vec<RetryEntry>,
     /// Completion records.
     pub records: Vec<PacketRecord>,
     now: u64,
@@ -158,10 +216,15 @@ impl Network {
             meta: std::collections::HashMap::new(),
             egress_cfg: None,
             egress: vec![EgressPort::default(); n],
+            fault: None,
+            retry_queue: Vec::new(),
             records: Vec::new(),
             now: 0,
             next_id: 0,
-            stats: SimStats::default(),
+            stats: SimStats {
+                link_faults: vec![0; n],
+                ..SimStats::default()
+            },
         }
     }
 
@@ -171,6 +234,24 @@ impl Network {
         let mut net = Self::new(cfg);
         net.egress_cfg = Some(egress);
         net
+    }
+
+    /// Build a network whose links run through a seeded fault injector.
+    pub fn with_faults(cfg: NetworkConfig, fault: FaultModel) -> Self {
+        let mut net = Self::new(cfg);
+        net.fault = Some(fault);
+        net
+    }
+
+    /// Attach (or replace) the link fault model. Composes with
+    /// [`Network::with_egress`] — the CLI builds egress + faults.
+    pub fn set_fault_model(&mut self, fault: FaultModel) {
+        self.fault = Some(fault);
+    }
+
+    /// The installed fault model, if any.
+    pub fn fault_model(&self) -> Option<&FaultModel> {
+        self.fault.as_ref()
     }
 
     /// The installed egress decoder config, if any.
@@ -224,13 +305,15 @@ impl Network {
         self.now
     }
 
-    /// Are all queues, buffers and schedules empty?
+    /// Are all queues, buffers, schedules and retry backoffs empty?
     ///
     /// O(1): every activated packet holds a `meta` entry until its tail
-    /// ejects, so outstanding work ⇔ `schedule` or `meta` non-empty. The
-    /// exhaustive buffer walk survives as a debug assertion.
+    /// ejects, so outstanding work ⇔ `schedule`, `meta` or `retry_queue`
+    /// non-empty. The exhaustive buffer walk survives as a debug
+    /// assertion.
     pub fn drained(&self) -> bool {
-        let done = self.schedule.is_empty() && self.meta.is_empty();
+        let done =
+            self.schedule.is_empty() && self.meta.is_empty() && self.retry_queue.is_empty();
         debug_assert!(
             !done
                 || (self.ni_queues.iter().all(|q| q.is_empty())
@@ -246,6 +329,9 @@ impl Network {
     /// Advance one cycle.
     pub fn step(&mut self) {
         let mesh = self.cfg.mesh;
+        // One branch per step keeps the fault-off hot path at parity
+        // with a fault-less build (perf gate: ≤1.05× the egress row).
+        let faults_on = self.fault.as_ref().is_some_and(|f| f.enabled());
 
         // --- 1. activation of scheduled packets --------------------------
         while let Some(last) = self.schedule.last() {
@@ -263,6 +349,9 @@ impl Network {
                     total_flits: total,
                     head_inject: None,
                     decode_stalls: 0,
+                    corrupted: false,
+                    attempt: 0,
+                    first_inject: None,
                 },
             );
             self.ni_queues[spec.src.0 as usize].push_back(Pending {
@@ -271,6 +360,39 @@ impl Network {
                 total_flits: total,
                 emitted: 0,
             });
+        }
+
+        // --- 1b. retransmissions whose backoff has elapsed ----------------
+        if !self.retry_queue.is_empty() {
+            let mut i = 0;
+            while i < self.retry_queue.len() {
+                if self.retry_queue[i].due > self.now {
+                    i += 1;
+                    continue;
+                }
+                let e = self.retry_queue.swap_remove(i);
+                let id = self.next_id;
+                self.next_id += 1;
+                let total = e.spec.flits(self.cfg.flit_bits);
+                self.meta.insert(
+                    id,
+                    PacketMeta {
+                        spec: e.spec,
+                        total_flits: total,
+                        head_inject: None,
+                        decode_stalls: 0,
+                        corrupted: false,
+                        attempt: e.attempt,
+                        first_inject: Some(e.first_inject),
+                    },
+                );
+                self.ni_queues[e.spec.src.0 as usize].push_back(Pending {
+                    id,
+                    spec: e.spec,
+                    total_flits: total,
+                    emitted: 0,
+                });
+            }
         }
 
         // --- 2. injection: one flit per node per cycle --------------------
@@ -364,8 +486,33 @@ impl Network {
                     self.stats.delivered_flits += 1;
                     if flit.is_tail() {
                         let m = self.meta.remove(&flit.packet_id).expect("meta");
-                        let inject_cycle =
-                            m.head_inject.expect("tail ejected before head injected");
+                        // Latency spans the *original* head injection —
+                        // retransmission backoff and repeat trips are
+                        // charged to the packet, not hidden.
+                        let inject_cycle = m
+                            .first_inject
+                            .or(m.head_inject)
+                            .expect("tail ejected before head injected");
+                        if m.corrupted {
+                            // NACK: the egress CRC check failed (the
+                            // speculative decode cost stays charged).
+                            // Retransmit after an exponential backoff, or
+                            // report the loss once the budget is spent —
+                            // never hang, never silently deliver garbage.
+                            if m.attempt < RETRY_BUDGET {
+                                let next = m.attempt + 1;
+                                self.stats.packet_retries += 1;
+                                self.retry_queue.push(RetryEntry {
+                                    spec: m.spec,
+                                    due: self.now + 1 + retry_backoff(next),
+                                    attempt: next,
+                                    first_inject: inject_cycle,
+                                });
+                            } else {
+                                self.stats.packets_dropped += 1;
+                            }
+                            continue;
+                        }
                         // A tagged packet completes when its decoder
                         // finishes the tail flit's symbols, which can
                         // trail the ejection itself.
@@ -379,6 +526,7 @@ impl Network {
                             eject_cycle,
                             flits: m.total_flits,
                             decode_stall_cycles: m.decode_stalls,
+                            retries: m.attempt,
                         };
                         self.stats.delivered_packets += 1;
                         self.stats.sum_latency += rec.latency();
@@ -401,6 +549,14 @@ impl Network {
                 let Some(nb) = mesh.neighbour(at, out) else {
                     unreachable!("XY routing never exits the mesh");
                 };
+                if faults_on && self.fault.as_mut().expect("gated").drops() {
+                    // The link ate the flit: it stays at the FIFO head and
+                    // retries next cycle (link-level ARQ), so a wormhole
+                    // body can never vanish from the middle of a packet.
+                    self.stats.flits_dropped += 1;
+                    self.stats.link_faults[node] += 1;
+                    continue;
+                }
                 let mut flit = self.routers[node].inputs[inp]
                     .fifo
                     .pop_front()
@@ -411,6 +567,29 @@ impl Network {
                 self.routers[node].outputs[out as usize].forwarded += 1;
                 self.stats.flit_hops += 1;
                 flit.ready_at = self.now + 1;
+                if faults_on {
+                    let flit_bits = self.cfg.flit_bits;
+                    if self.fault.as_mut().expect("gated").corrupts(flit_bits) {
+                        // Payload bits flipped in flight. The per-lane CRC
+                        // (lexi-core::integrity) catches it at egress
+                        // decode; the tail ejection NACKs instead of
+                        // recording delivery.
+                        self.stats.flits_corrupted += 1;
+                        self.stats.link_faults[node] += 1;
+                        self.meta
+                            .get_mut(&flit.packet_id)
+                            .expect("in-flight packet has meta")
+                            .corrupted = true;
+                    }
+                    if self.fault.as_mut().expect("gated").duplicates() {
+                        // The receiver squashes the copy by sequence
+                        // number; the echo costs one extra cycle of
+                        // downstream occupancy.
+                        self.stats.flits_duplicated += 1;
+                        self.stats.link_faults[node] += 1;
+                        flit.ready_at = self.now + 2;
+                    }
+                }
                 self.routers[nb.0 as usize].inputs[out.opposite() as usize]
                     .fifo
                     .push_back(flit);
@@ -761,6 +940,167 @@ mod tests {
         fn run_to_completion_after(&mut self, specs: &[PacketSpec]) -> SimStats {
             self.schedule_packets(specs);
             self.run_to_completion(1_000_000)
+        }
+    }
+
+    /// Uniform all-to-all load, 16 flits per packet (240 packets).
+    fn uniform_16flit_specs() -> Vec<PacketSpec> {
+        let mut specs = Vec::new();
+        for i in 0..16u16 {
+            for j in 0..16u16 {
+                if i != j {
+                    specs.push(PacketSpec::new(
+                        NodeId(i),
+                        NodeId(j),
+                        128 * 16,
+                        (i as u64) * 2,
+                    ));
+                }
+            }
+        }
+        specs
+    }
+
+    #[test]
+    fn inert_fault_model_is_stat_identical_to_none() {
+        // A fault model attached at all-zero rates must not perturb the
+        // simulation in any observable way — this is the zero-BER pin
+        // that keeps `sim::xval` and the perf row honest.
+        let specs = uniform_16flit_specs();
+        let clean = {
+            let mut net = Network::new(cfg_4x4());
+            net.run_to_completion_after(&specs)
+        };
+        let inert = {
+            let mut net = Network::with_faults(cfg_4x4(), FaultModel::new(3));
+            net.run_to_completion_after(&specs)
+        };
+        assert_eq!(clean, inert);
+        assert_eq!(inert.flits_corrupted, 0);
+        assert_eq!(inert.packet_retries, 0);
+    }
+
+    #[test]
+    fn seeded_fault_runs_replay_identically() {
+        let run = || {
+            let mut net = Network::with_faults(
+                cfg_4x4(),
+                FaultModel::new(99).with_ber(1e-4).with_dup(0.01),
+            );
+            net.run_to_completion_after(&uniform_16flit_specs())
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn ber_run_delivers_every_packet_exactly_once_with_backoff_in_latency() {
+        // ISSUE 6 satellite: a BER-injected run must deliver all symbols
+        // exactly once (corrupted attempts are NACKed and retransmitted,
+        // never recorded), and each retried packet's latency must carry
+        // at least its retransmission backoffs.
+        let specs = uniform_16flit_specs();
+        let n = specs.len() as u64;
+        let clean = {
+            let mut net = Network::new(cfg_4x4());
+            net.run_to_completion_after(&specs)
+        };
+        let mut net = Network::with_faults(cfg_4x4(), FaultModel::new(11).with_ber(1e-5));
+        let stats = net.run_to_completion_after(&specs);
+        // At this seed/BER the budget is never exhausted: every packet
+        // is delivered, each exactly once.
+        assert_eq!(stats.delivered_packets + stats.packets_dropped, n);
+        assert_eq!(net.records.len() as u64, stats.delivered_packets);
+        assert!(stats.flits_corrupted > 0, "seeded BER run injected nothing");
+        assert!(stats.packet_retries > 0, "no retransmissions observed");
+        assert_eq!(
+            stats.link_faults.iter().sum::<u64>(),
+            stats.flits_corrupted + stats.flits_dropped + stats.flits_duplicated
+        );
+        // Retried packets pay backoff + repeat trip in *latency* (their
+        // records keep the original head-injection cycle).
+        let mut saw_retry = false;
+        for r in net.records.iter().filter(|r| r.retries > 0) {
+            saw_retry = true;
+            let backoffs: u64 = (1..=r.retries).map(retry_backoff).sum();
+            assert!(
+                r.latency() >= backoffs,
+                "retried packet latency {} below its backoff sum {backoffs}",
+                r.latency()
+            );
+        }
+        assert!(saw_retry || stats.packets_dropped > 0);
+        // Faults can only make the run slower in aggregate.
+        assert!(stats.sum_latency >= clean.sum_latency);
+    }
+
+    #[test]
+    fn lossy_links_retry_at_head_and_still_deliver() {
+        // Flit drops are link-level ARQ: the flit retries from the FIFO
+        // head, so delivery is lossless and in-order — just slower.
+        let spec = PacketSpec::new(NodeId(0), NodeId(15), 128 * 8, 0);
+        let clean = {
+            let mut net = Network::new(cfg_4x4());
+            net.run_to_completion_after(&[spec])
+        };
+        let mut net = Network::with_faults(cfg_4x4(), FaultModel::new(5).with_drop(0.3));
+        let stats = net.run_to_completion_after(&[spec]);
+        assert_eq!(stats.delivered_packets, 1);
+        assert!(stats.flits_dropped > 0, "seeded drop run dropped nothing");
+        assert_eq!(stats.packets_dropped, 0);
+        assert!(stats.sum_latency >= clean.sum_latency);
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_reports_drop_without_hanging() {
+        // BER = 1.0 corrupts every traversal: the packet is NACKed on
+        // all RETRY_BUDGET retransmissions and then reported dropped —
+        // run_to_completion drains instead of spinning forever.
+        let mut net = Network::with_faults(cfg_4x4(), FaultModel::new(1).with_ber(1.0));
+        net.schedule_packets(&[PacketSpec::new(NodeId(0), NodeId(3), 128 * 4, 0)]);
+        let stats = net.run_to_completion(10_000);
+        assert!(net.drained());
+        assert_eq!(stats.delivered_packets, 0);
+        assert_eq!(stats.packets_dropped, 1);
+        assert_eq!(stats.packet_retries, u64::from(RETRY_BUDGET));
+        assert!(net.records.is_empty());
+        // The exponential backoffs are cycle-accurate sim time.
+        let backoffs: u64 = (1..=RETRY_BUDGET).map(retry_backoff).sum();
+        assert!(
+            stats.cycles >= backoffs,
+            "cycles {} below backoff floor {backoffs}",
+            stats.cycles
+        );
+    }
+
+    #[test]
+    fn duplicated_flits_cost_occupancy_but_deliver_once() {
+        let specs = uniform_16flit_specs();
+        let n = specs.len() as u64;
+        let mut net = Network::with_faults(cfg_4x4(), FaultModel::new(21).with_dup(0.05));
+        let stats = net.run_to_completion_after(&specs);
+        assert_eq!(stats.delivered_packets, n);
+        assert!(stats.flits_duplicated > 0, "seeded dup run duplicated nothing");
+        // Duplicates never create packets or symbols.
+        assert_eq!(net.records.len() as u64, n);
+        assert_eq!(stats.packets_dropped, 0);
+    }
+
+    #[test]
+    fn faulty_egress_network_keeps_symbol_accounting_exact() {
+        // Corrupted attempts charge speculative decode work but never
+        // count delivered symbols; once the retry lands, symbols are
+        // counted exactly once.
+        let symbols = 64 * 8u64;
+        let spec =
+            PacketSpec::new(NodeId(0), NodeId(15), 128 * 64, 0).tagged(huff_tag(symbols, false));
+        let mut net = Network::with_egress(cfg_4x4(), EgressCodecConfig::paper_default());
+        net.set_fault_model(FaultModel::new(17).with_ber(2e-4));
+        let stats = net.run_to_completion_after(&[spec]);
+        assert_eq!(stats.delivered_packets + stats.packets_dropped, 1);
+        if stats.delivered_packets == 1 {
+            assert_eq!(stats.delivered_symbols, symbols);
+        } else {
+            assert_eq!(stats.delivered_symbols, 0);
         }
     }
 }

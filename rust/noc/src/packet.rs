@@ -127,6 +127,10 @@ pub struct PacketRecord {
     /// egress decoder (startup + drain backpressure). 0 for untagged
     /// packets and codec-blind networks.
     pub decode_stall_cycles: u64,
+    /// Retransmissions this packet needed before its CRC-clean delivery
+    /// (ISSUE 6). Each retry's backoff + repeat trip is inside
+    /// `eject_cycle − inject_cycle`, so latency never hides recovery.
+    pub retries: u32,
 }
 
 impl PacketRecord {
@@ -180,6 +184,7 @@ mod tests {
             eject_cycle: 20,
             flits: 1,
             decode_stall_cycles: 0,
+            retries: 0,
         };
         assert_eq!(rec.latency(), 6);
         assert_eq!(rec.queueing_delay(), 4);

@@ -46,7 +46,7 @@ use crate::simba::SimbaSystem;
 use lexi_core::codec::CodecKind;
 use lexi_models::corpus::Corpus;
 use lexi_models::traffic::{self, Phase, TransferKind, TransferSpec};
-use lexi_models::{CodecPolicy, ModelConfig};
+use lexi_models::{CodecPolicy, DegradePolicy, DegradeTracker, ModelConfig};
 use lexi_noc::traffic as noc_traffic;
 use std::collections::HashMap;
 
@@ -88,6 +88,12 @@ pub struct Engine {
     /// (ISSUE 3). The paper point is Huffman everywhere; swapping e.g.
     /// SSM state to BDI turns `run_modes` into a mixed-codec Table 3.
     pub codec_policy: CodecPolicy,
+    /// Graceful-degradation threshold (ISSUE 6): decode failures a
+    /// traffic class absorbs before [`Engine::record_decode_failures`]
+    /// rewrites its codec to Raw.
+    pub degrade: DegradePolicy,
+    /// Per-kind decode-failure accounting backing `degrade`.
+    degrade_tracker: DegradeTracker,
 }
 
 impl Engine {
@@ -104,6 +110,8 @@ impl Engine {
             decoder_lanes: 16,
             codec_ghz: 1.0,
             codec_policy: CodecPolicy::lexi_default(),
+            degrade: DegradePolicy::paper_default(),
+            degrade_tracker: DegradeTracker::new(),
         }
     }
 
@@ -113,6 +121,35 @@ impl Engine {
             codec_policy: policy,
             ..Self::paper_default()
         }
+    }
+
+    /// Report `n` decode failures for `kind` (CRC NACKs that survived
+    /// the NoC's retry budget, i.e. `SimStats::packets_dropped` on that
+    /// class). Once the [`DegradePolicy`] threshold is reached the
+    /// engine's [`CodecPolicy`] entry for the kind falls back to Raw —
+    /// losslessness is preserved by *not compressing* rather than by
+    /// stalling on retransmissions. Returns `true` iff this call
+    /// degraded the class.
+    pub fn record_decode_failures(&mut self, kind: TransferKind, n: u64) -> bool {
+        let mut flipped = false;
+        for _ in 0..n {
+            flipped |= self
+                .degrade_tracker
+                .record_failure(kind, self.degrade, &mut self.codec_policy);
+        }
+        flipped
+    }
+
+    /// Decode failures recorded against `kind` so far.
+    pub fn decode_failures(&self, kind: TransferKind) -> u32 {
+        self.degrade_tracker.failures(kind)
+    }
+
+    /// Traffic classes degraded to Raw so far ([`TransferKind::ALL`]
+    /// order) — the engine-stat surface for `lexi noc --ber` and
+    /// reports.
+    pub fn degraded_kinds(&self) -> Vec<TransferKind> {
+        self.degrade_tracker.degraded_kinds()
     }
 
     /// Duration of one flit on a link, ns.
@@ -609,6 +646,59 @@ mod tests {
             let b = explicit.run(&cfg, &corpus, mode, &crs);
             assert_eq!(a.comm_ns, b.comm_ns, "{mode:?}");
         }
+    }
+
+    #[test]
+    fn decode_failures_degrade_one_kind_to_raw_gracefully() {
+        // ISSUE 6: after the DegradePolicy threshold, the failing class
+        // stops being compressed (Raw), other classes keep their codec
+        // bit-for-bit, and an engine with no recorded failures is the
+        // untouched paper point.
+        let cfg = ModelConfig::qwen(ModelScale::Paper);
+        let (eng, crs) = setup(&cfg);
+        let mut faulty = eng.clone();
+        // Below the three-strike default: nothing changes.
+        assert!(!faulty.record_decode_failures(TransferKind::Activation, 2));
+        assert_eq!(faulty.codec_policy, eng.codec_policy);
+        assert!(faulty.degraded_kinds().is_empty());
+        // Third strike flips activations — and only activations.
+        assert!(faulty.record_decode_failures(TransferKind::Activation, 1));
+        assert_eq!(
+            faulty.codec_policy.codec_for(TransferKind::Activation),
+            CodecKind::Raw
+        );
+        assert_eq!(
+            faulty.codec_policy.codec_for(TransferKind::KvCache),
+            CodecKind::Huffman
+        );
+        assert_eq!(faulty.degraded_kinds(), vec![TransferKind::Activation]);
+        assert_eq!(faulty.decode_failures(TransferKind::Activation), 3);
+        // Degraded activations ship more wire flits (compression is
+        // off); untouched kinds price identically.
+        let corpus = Corpus::wikitext2();
+        for t in traffic::decode_step(&cfg, &corpus, 0) {
+            let a = eng.transfer_wire_flits(&t, CompressionMode::Lexi, &crs);
+            let b = faulty.transfer_wire_flits(&t, CompressionMode::Lexi, &crs);
+            if t.kind == TransferKind::Activation {
+                if t.bytes > 4096 {
+                    assert!(b > a, "{} bytes: raw {b} ≤ huffman {a} flits", t.bytes);
+                }
+            } else {
+                assert_eq!(a, b, "{:?} repriced by an activation degrade", t.kind);
+            }
+        }
+        // Degradation is graceful, not destructive: the run completes
+        // and only the activation share moves.
+        let base = eng.run(&cfg, &corpus, CompressionMode::Lexi, &crs);
+        let deg = faulty.run(&cfg, &corpus, CompressionMode::Lexi, &crs);
+        assert_eq!(
+            base.by_kind[&TransferKind::KvCache],
+            deg.by_kind[&TransferKind::KvCache]
+        );
+        assert_ne!(
+            base.by_kind[&TransferKind::Activation],
+            deg.by_kind[&TransferKind::Activation]
+        );
     }
 
     #[test]

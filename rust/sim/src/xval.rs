@@ -31,7 +31,7 @@ use crate::engine::Engine;
 use lexi_core::codec::CodecKind;
 use lexi_models::traffic::{TransferKind, TransferSpec};
 use lexi_noc::traffic::{segment_transfer, segment_transfer_tagged, MAX_PACKET_BITS};
-use lexi_noc::{CodecTag, EgressCodecConfig, Network, NetworkConfig, NodeId, PacketSpec};
+use lexi_noc::{CodecTag, EgressCodecConfig, FaultModel, Network, NetworkConfig, NodeId, PacketSpec};
 
 /// Maximum relative disagreement tolerated on uncongested
 /// single-transfer windows.
@@ -50,6 +50,11 @@ pub struct XvalReport {
     pub cycle_ns: f64,
     /// Egress decoder stall cycles observed in the cycle run.
     pub decode_stall_cycles: u64,
+    /// Packet retransmissions the cycle run needed (ISSUE 6) — 0 when
+    /// no fault model is attached or its rates are zero.
+    pub retries: u64,
+    /// Packets the cycle run abandoned after the retry budget.
+    pub dropped: u64,
     /// Replayed under deliberate contention: divergence is expected and
     /// reported, not bounded.
     pub congested: bool,
@@ -86,7 +91,11 @@ impl XvalReport {
             self.cycle_ns,
             self.rel_err() * 100.0,
             if self.congested { " [congested]" } else { "" }
-        )
+        ) + &if self.retries > 0 || self.dropped > 0 {
+            format!(" [retries {}, dropped {}]", self.retries, self.dropped)
+        } else {
+            String::new()
+        }
     }
 }
 
@@ -176,9 +185,27 @@ pub fn replay_transfer(
     t: &TransferSpec,
     mode: CompressionMode,
 ) -> XvalReport {
+    replay_transfer_with_faults(engine, crs, t, mode, None)
+}
+
+/// [`replay_transfer`] with an optional link fault model on the cycle
+/// side (ISSUE 6). The analytic estimate stays the fault-free price —
+/// retry/backoff inflation shows up as reported divergence, exactly
+/// like congestion does. `BER = 0` (or `None`) must reproduce
+/// [`replay_transfer`] numerically, which the tests pin.
+pub fn replay_transfer_with_faults(
+    engine: &Engine,
+    crs: &CrTable,
+    t: &TransferSpec,
+    mode: CompressionMode,
+    fault: Option<FaultModel>,
+) -> XvalReport {
     let analytic_ns = engine.transfer_ns(t, mode, crs);
     let ncfg = network_config_for(engine);
     let mut net = Network::with_egress(ncfg, egress_config_for(engine, crs, t.kind));
+    if let Some(f) = fault {
+        net.set_fault_model(f);
+    }
     net.schedule_packets(&tagged_specs(engine, crs, t, mode, 0));
     let stats = net.run_to_completion(100_000_000);
     XvalReport {
@@ -189,6 +216,8 @@ pub fn replay_transfer(
         analytic_ns,
         cycle_ns: stats.completion_cycle as f64 * ncfg.cycle_ns(),
         decode_stall_cycles: stats.decode_stall_cycles,
+        retries: stats.packet_retries,
+        dropped: stats.packets_dropped,
         congested: false,
     }
 }
@@ -236,6 +265,8 @@ pub fn replay_hotspot(
         analytic_ns: engine.transfer_ns(t, mode, crs),
         cycle_ns: stats.completion_cycle as f64 * ncfg.cycle_ns(),
         decode_stall_cycles: stats.decode_stall_cycles,
+        retries: stats.packet_retries,
+        dropped: stats.packets_dropped,
         congested: true,
     }
 }
@@ -406,5 +437,60 @@ mod tests {
         assert!(tagged.iter().all(|s| s.codec.is_some()));
         let syms: u64 = tagged.iter().map(|s| s.codec.unwrap().symbols).sum();
         assert_eq!(syms, (t.bytes / 2).max(1));
+    }
+
+    #[test]
+    fn zero_ber_fault_model_reproduces_the_fault_free_replay() {
+        // ISSUE 6 acceptance pin: attaching an inert fault model must
+        // keep every xval number bit-identical — BER = 0 is the same
+        // simulation, not a near miss.
+        let cfg = ModelConfig::jamba(ModelScale::Tiny);
+        let crs = CrTable::measure(&cfg, 42);
+        let engine = Engine::paper_default();
+        for t in windows(&cfg) {
+            for mode in CompressionMode::ALL {
+                let clean = replay_transfer(&engine, &crs, &t, mode);
+                let inert = replay_transfer_with_faults(
+                    &engine,
+                    &crs,
+                    &t,
+                    mode,
+                    Some(FaultModel::new(7)),
+                );
+                assert_eq!(clean.analytic_ns, inert.analytic_ns);
+                assert_eq!(clean.cycle_ns, inert.cycle_ns, "{}", clean.row());
+                assert_eq!(clean.decode_stall_cycles, inert.decode_stall_cycles);
+                assert_eq!(inert.retries, 0);
+                assert_eq!(inert.dropped, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn seeded_ber_replay_is_deterministic_and_never_faster() {
+        let cfg = ModelConfig::jamba(ModelScale::Tiny);
+        let crs = CrTable::measure(&cfg, 42);
+        let engine = Engine::paper_default();
+        let t = *windows(&cfg)
+            .iter()
+            .find(|t| t.kind == TransferKind::KvCache)
+            .expect("sizable KV-cache transfer");
+        let clean = replay_transfer(&engine, &crs, &t, CompressionMode::Lexi);
+        let run = || {
+            replay_transfer_with_faults(
+                &engine,
+                &crs,
+                &t,
+                CompressionMode::Lexi,
+                Some(FaultModel::new(13).with_ber(1e-5)),
+            )
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.cycle_ns, b.cycle_ns, "same seed diverged");
+        assert_eq!(a.retries, b.retries);
+        assert_eq!(a.dropped, b.dropped);
+        // Retry backoff and repeat trips can only stretch the window.
+        assert!(a.cycle_ns >= clean.cycle_ns, "{} < {}", a.cycle_ns, clean.cycle_ns);
     }
 }

@@ -7,6 +7,7 @@
 //! lexi hw
 //! lexi noc      [--pattern uniform|transpose|hotspot] [--mesh 6x6]
 //!               [--egress LANES] [--codec huffman|bdi|raw]
+//!               [--ber RATE] [--drop P] [--dup P] [--fault-seed N]
 //! lexi dse      [--what hitrate|codebook|decoder|codec] [--model jamba]
 //! ```
 
@@ -21,8 +22,8 @@ use lexi_hw::histogram_unit::{HistConfig, HistogramUnit};
 use lexi_models::corpus::Corpus;
 use lexi_models::traffic::TransferKind;
 use lexi_models::weights::WeightStream;
-use lexi_models::{CodecPolicy, ModelConfig, ModelScale};
-use lexi_noc::{Mesh, Network, NetworkConfig, NodeId};
+use lexi_models::{CodecPolicy, DegradePolicy, DegradeTracker, ModelConfig, ModelScale};
+use lexi_noc::{FaultModel, Mesh, Network, NetworkConfig, NodeId};
 use lexi_sim::compression::{CompressionMode, CrTable};
 use lexi_sim::engine::Engine;
 use std::collections::HashMap;
@@ -57,6 +58,14 @@ impl Flags {
 
     /// Numeric flag.
     pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
+        }
+    }
+
+    /// Float flag (e.g. `--ber 1e-6`).
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
         match self.map.get(key) {
             None => Ok(default),
             Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
@@ -100,7 +109,9 @@ fn print_help() {
          \x20 table2   exponent CR comparison (RLE / BDI / LEXI) on weights\n\
          \x20 hw       Table 4: area/power breakdown (GF 22 nm + 16 nm scaling)\n\
          \x20 noc      --pattern uniform|transpose|hotspot — cycle-accurate NoI run\n\
-         \x20          (--egress LANES --codec huffman|bdi|raw: egress codec ports)\n\
+         \x20          (--egress LANES --codec huffman|bdi|raw: egress codec ports;\n\
+         \x20          --ber RATE --drop P --dup P --fault-seed N: seeded link\n\
+         \x20          faults with CRC NACK + bounded retry and degradation report)\n\
          \x20 dse      --what hitrate|codebook|decoder|codec — design-space sweeps\n\
          \x20          (Figs 4-6; 'codec' prints the per-kind Huffman/BDI/Raw table)\n\
          \x20 energy   interconnect energy per inference (link vs codec)\n\
@@ -122,6 +133,20 @@ mod tests {
         assert_eq!(f.get("model", "x"), "jamba");
         assert_eq!(f.get_usize("decode", 0).unwrap(), 8);
         assert_eq!(f.get("missing", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn flags_parse_floats() {
+        let args: Vec<String> = ["--ber", "1e-6", "--drop", "0.25"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let f = Flags::parse(&args).unwrap();
+        assert_eq!(f.get_f64("ber", 0.0).unwrap(), 1e-6);
+        assert_eq!(f.get_f64("drop", 0.0).unwrap(), 0.25);
+        assert_eq!(f.get_f64("dup", 0.125).unwrap(), 0.125);
+        let bad: Vec<String> = vec!["--ber".into(), "lots".into()];
+        assert!(Flags::parse(&bad).unwrap().get_f64("ber", 0.0).is_err());
     }
 
     #[test]
@@ -337,6 +362,14 @@ fn cmd_noc(flags: &Flags) -> Result<()> {
     let egress_lanes = flags.get_usize("egress", 0)?;
     let codec = CodecKind::parse(flags.get("codec", "huffman"))
         .map_err(|e| anyhow!("--codec: {e}"))?;
+    // --ber/--drop/--dup attach the seeded link fault model (ISSUE 6):
+    // corrupted packets are NACKed by the egress CRC check and
+    // retransmitted with exponential backoff, bounded by the retry
+    // budget — losses are counted, never silent.
+    let ber = flags.get_f64("ber", 0.0)?;
+    let drop_p = flags.get_f64("drop", 0.0)?;
+    let dup_p = flags.get_f64("dup", 0.0)?;
+    let fault_seed = flags.get_usize("fault-seed", 0xFA17)? as u64;
 
     let mut specs = match pattern {
         "uniform" => {
@@ -358,6 +391,14 @@ fn cmd_noc(flags: &Flags) -> Result<()> {
     } else {
         Network::new(cfg)
     };
+    let fault = FaultModel::new(fault_seed)
+        .with_ber(ber)
+        .with_drop(drop_p)
+        .with_dup(dup_p);
+    let faults_on = fault.enabled();
+    if faults_on {
+        net.set_fault_model(fault);
+    }
     let n = specs.len();
     // User-controlled flags can produce invalid tagged specs (e.g.
     // --size-bits 0): surface the validation error as a CLI error, not
@@ -387,6 +428,47 @@ fn cmd_noc(flags: &Flags) -> Result<()> {
             stats.decode_stall_cycles,
             stats.completion_cycle
         );
+    }
+    if faults_on {
+        println!(
+            "faults (seed {fault_seed}, ber {ber:.1e}, drop {drop_p}, dup {dup_p}): \
+             {} corrupted / {} dropped / {} duplicated flits",
+            stats.flits_corrupted, stats.flits_dropped, stats.flits_duplicated
+        );
+        println!(
+            "recovery: {} packet retries, {} packets dropped after the \
+             {}-retry budget",
+            stats.packet_retries,
+            stats.packets_dropped,
+            lexi_noc::fault::RETRY_BUDGET
+        );
+        // Graceful degradation (ISSUE 6): every NACK is a decode
+        // failure against the class this traffic stands in for
+        // (activations — the runtime-compressed kind); at the
+        // DegradePolicy threshold the per-kind codec policy falls back
+        // to Raw rather than stalling on retransmissions forever.
+        let mut policy = CodecPolicy::lexi_default();
+        let mut tracker = DegradeTracker::new();
+        let dp = DegradePolicy::paper_default();
+        let before = policy.describe();
+        for _ in 0..(stats.packet_retries + stats.packets_dropped) {
+            tracker.record_failure(TransferKind::Activation, dp, &mut policy);
+        }
+        let degraded = tracker.degraded_kinds();
+        if degraded.is_empty() {
+            println!(
+                "degradation: none — policy stays [{before}] \
+                 ({} failures < threshold {})",
+                tracker.failures(TransferKind::Activation),
+                dp.failure_threshold
+            );
+        } else {
+            println!(
+                "degradation: {degraded:?} fell back to raw — policy \
+                 [{before}] -> [{}]",
+                policy.describe()
+            );
+        }
     }
     Ok(())
 }

@@ -12,10 +12,16 @@ in this container). Mirrors the Rust bit-for-bit:
   * BDI tag/base/delta bit layout     (PR 3: bdi.rs — mirror encode
     vs an independent string-of-bits reference, roundtrip, block-bits
     pricing, truncation + hostile-count-guard arithmetic)
-  * Multi-symbol decode LUT           (NEW PR 4: lut.rs — mirror of the
+  * Multi-symbol decode LUT           (PR 4: lut.rs — mirror of the
     MultiDecodeTable fill/packing rules vs brute-force enumeration of
     all 2^K probes through the string-of-bits reference codec, plus the
     multi-symbol block-decode loop vs the reference decode)
+  * Stream integrity + fault recovery (NEW PR 6 — CRC-16/CCITT-FALSE
+    table mirror of integrity.rs vs an independent bitwise LFSR with the
+    0x29B1 check-value pin; the v3 checksummed LaneStream wrapper of
+    batch.rs with exhaustive single-bit-flip detection and the 2⁻¹⁶
+    multi-bit escape bound; the retry_backoff/RETRY_BUDGET link-retry
+    accounting of noc/fault.rs + network.rs)
 
 Reference implementations are independent (string-of-bits codec), so a
 mirror bug and a reference bug can't cancel.
@@ -802,6 +808,139 @@ def bdi_gen_data(rng, n):
     return out
 
 
+# --------------------------------------------------------------------------
+# ISSUE 6 mirrors: CRC-16/CCITT-FALSE (core/integrity.rs), the v3
+# checksummed LaneStream wrapper (core/batch.rs), and the link
+# retry/backoff accounting (noc/fault.rs + noc/network.rs).
+
+CRC16_POLY = 0x1021
+CRC16_INIT = 0xFFFF
+CRC16_TABLE = []
+for _b in range(256):
+    _crc = _b << 8
+    for _ in range(8):
+        _crc = ((_crc << 1) ^ CRC16_POLY if _crc & 0x8000 else _crc << 1) & 0xFFFF
+    CRC16_TABLE.append(_crc)
+
+
+def crc16(data, crc=CRC16_INIT):
+    """Table-driven mirror of integrity.rs::crc16_update."""
+    for b in data:
+        crc = ((crc << 8) & 0xFFFF) ^ CRC16_TABLE[((crc >> 8) ^ b) & 0xFF]
+    return crc
+
+
+def crc16_bitwise(data):
+    """Independent bit-at-a-time LFSR reference (the CRC definition, not
+    a transcription of the table fill — a table bug can't cancel)."""
+    crc = CRC16_INIT
+    for b in data:
+        crc ^= b << 8
+        for _ in range(8):
+            crc = ((crc << 1) ^ CRC16_POLY if crc & 0x8000 else crc << 1) & 0xFFFF
+    return crc
+
+
+LANE_CRC_ESCAPE = 0x00
+
+
+def v3_wrap(wire, lanes, lane_bits, book_bits):
+    """Mirror of batch.rs's checksummed encode: wrap a v1/v2 wire into
+    the v3 layout — escape byte, the v1/v2 header verbatim, per-lane
+    payload CRCs (BE u16), a header CRC over everything emitted so far
+    (escape byte and lane-CRC table included), then the payloads."""
+    header_len = 5 + 4 * lanes
+    if book_bits:
+        header_len += 2 * lanes + sum((bb + 7) // 8 for bb in book_bits)
+    header, payloads = wire[:header_len], wire[header_len:]
+    out = bytearray([LANE_CRC_ESCAPE])
+    out += header
+    off = 0
+    for bits in lane_bits:
+        ln = (bits + 7) // 8
+        out += crc16(payloads[off : off + ln]).to_bytes(2, "big")
+        off += ln
+    out += crc16(out).to_bytes(2, "big")
+    out += payloads
+    return bytes(out)
+
+
+def v3_parse(bytes_):
+    """Mirror of from_bytes' v3 path + validated_lanes: the header CRC is
+    verified BEFORE any book-length bound check (a flipped header bit is
+    Corrupt, not a bogus length complaint), then the de-escaped body goes
+    through the ordinary v1/v2 parser, then each lane payload CRC."""
+    if len(bytes_) < 1 or bytes_[0] != LANE_CRC_ESCAPE:
+        raise ValueError("not v3")
+    if len(bytes_) < 6:
+        raise ValueError("short")
+    flags = bytes_[1]
+    lanes = flags & ~LANE_BOOKS_FLAG & 0xFF
+    if lanes == 0 or lanes > MAX_LANES:
+        raise ValueError("lanes")
+    header = 1 + 5 + 4 * lanes
+    if len(bytes_) < header:
+        raise ValueError("header trunc")
+    crc_at = header
+    if flags & LANE_BOOKS_FLAG:
+        table_end = header + 2 * lanes
+        if len(bytes_) < table_end:
+            raise ValueError("corrupt: book table trunc")
+        # Extent only — the 0 < bits <= MAX bound check waits until after
+        # the header CRC verify, exactly like the Rust.
+        blobs = sum(
+            (int.from_bytes(bytes_[header + 2 * l : header + 2 * l + 2], "big") + 7)
+            // 8
+            for l in range(lanes)
+        )
+        crc_at = table_end + blobs
+    crc_end = crc_at + 2 * lanes + 2
+    if len(bytes_) < crc_end:
+        raise ValueError("corrupt: CRC trailer trunc")
+    stored = int.from_bytes(bytes_[crc_at + 2 * lanes : crc_end], "big")
+    if crc16(bytes_[: crc_at + 2 * lanes]) != stored:
+        raise ValueError("corrupt: header CRC")
+    lane_crcs = [
+        int.from_bytes(bytes_[crc_at + 2 * l : crc_at + 2 * l + 2], "big")
+        for l in range(lanes)
+    ]
+    # De-escape: splice the CRC trailer out and hand the v1/v2 body to
+    # the existing parser (its bound checks are now safe to surface).
+    body = bytes_[1:crc_at] + bytes_[crc_end:]
+    st = parse_stream(body)
+    for (l, start, end, _, _) in st["views"]:
+        if crc16(body[start:end]) != lane_crcs[l]:
+            raise ValueError(f"corrupt: lane {l} payload CRC")
+    return st
+
+
+RETRY_BUDGET = 4
+
+
+def retry_backoff(attempt):
+    """Mirror of fault.rs::retry_backoff: min(8 · 2^(a−1), 256), 1-based."""
+    return min(8 << min(attempt - 1, 32), 256)
+
+
+def replay_link(corrupt_plan, trip):
+    """Cycle-accounting reference for network.rs's NACK-at-egress retry:
+    traversal k corrupts iff corrupt_plan[k]. A corrupted packet whose
+    attempt count is still under RETRY_BUDGET re-enters after
+    1 + backoff(next) cycles; at the budget it is a reported drop.
+    Returns (delivered, retries, drops, total_latency)."""
+    attempt = 0
+    latency = 0
+    for corrupted in corrupt_plan:
+        latency += trip
+        if not corrupted:
+            return True, attempt, 0, latency
+        if attempt >= RETRY_BUDGET:
+            return False, attempt, 1, latency
+        attempt += 1
+        latency += 1 + retry_backoff(attempt)
+    raise AssertionError("corrupt_plan exhausted without a terminal outcome")
+
+
 def main():
     rng = random.Random(20260729)
     cases = 0
@@ -1208,6 +1347,102 @@ def main():
         prev = done
     print("[11] egress codec port: ready/accept stall rule — line-rate free, "
           "decode-bound == makespan, startup charged once: 400 cases OK")
+
+    # 12) ISSUE 6 — stream integrity + fault-recovery arithmetic.
+    #
+    # 12a) CRC-16/CCITT-FALSE: the table-driven mirror vs the independent
+    #      bitwise LFSR, the canonical check value, streaming == one-shot.
+    assert crc16(b"123456789") == 0x29B1, "CRC-16/CCITT-FALSE check value"
+    assert crc16(b"") == CRC16_INIT
+    for _ in range(300):
+        buf = bytes(rng.randrange(256) for _ in range(rng.randrange(512)))
+        assert crc16(buf) == crc16_bitwise(buf), "table != bitwise LFSR"
+        cut = rng.randrange(len(buf) + 1)
+        assert crc16(buf[cut:], crc16(buf[:cut])) == crc16(buf), "streaming"
+    print("[12a] CRC-16/CCITT-FALSE mirror == bitwise LFSR, 0x29B1 check value OK")
+
+    # 12b) v3 checksummed wire format: wrap/parse roundtrip over v1- and
+    #      v2-shaped bodies; EVERY single-bit flip from the count field on
+    #      is detected (header CRC or a lane CRC — HD ≥ 2 at these
+    #      lengths); truncations reject; multi-bit escapes stay ~2⁻¹⁶.
+    ok12 = flips = 0
+    for trial in range(24):
+        lanes = rng.choice((1, 2, 4, 8))
+        n = rng.randrange(lanes, 400)
+        data = gen_data(rng, n, rng.random() < 0.3)
+        book = make_book(data)
+        if book is None:
+            continue
+        embed = rng.random() < 0.5
+        wire, lane_bits, book_bits = lane_encode(
+            data, lanes, [book] * lanes, embed
+        )
+        v3 = v3_wrap(wire, lanes, lane_bits, book_bits)
+        st = v3_parse(v3)
+        assert decode_lane_at_a_time(st, book) == data, "v3 roundtrip"
+        assert decode_lockstep(st, book) == data, "v3 lockstep roundtrip"
+        for keep in (0, 1, 5, len(v3) - 1):
+            try:
+                v3_parse(v3[:keep])
+                assert False, f"truncation to {keep} bytes parsed"
+            except ValueError:
+                pass
+        # Bits 0..16 (escape + flags) can reshape the parse geometry —
+        # the Rust property test pins those separately; from bit 16 on
+        # every flip must be caught by a CRC.
+        for pos in range(16, len(v3) * 8):
+            dirty = bytearray(v3)
+            dirty[pos // 8] ^= 1 << (pos % 8)
+            try:
+                v3_parse(bytes(dirty))
+                assert False, f"single-bit flip at bit {pos} escaped"
+            except ValueError:
+                flips += 1
+        ok12 += 1
+    buf = bytes((i * 29 + 11) & 0xFF for i in range(96))
+    clean = crc16(buf)
+    escapes, trials = 0, 30000
+    for _ in range(trials):
+        dirty = bytearray(buf)
+        for _ in range(4):
+            p = rng.randrange(len(buf) * 8)
+            dirty[p // 8] ^= 1 << (p % 8)
+        if bytes(dirty) != buf and crc16(dirty) == clean:
+            escapes += 1
+    assert escapes <= 5, f"multi-bit escape rate above 2^-16: {escapes}/{trials}"
+    print(f"[12b] v3 checksummed wire: {ok12} roundtrips, {flips} single-bit "
+          f"flips all detected, {escapes}/{trials} multi-bit escapes")
+
+    # 12c) Link retry/backoff accounting (fault.rs + network.rs): backoff
+    #      series and cap, the 120-cycle budget-exhaustion sum, delivered-
+    #      exactly-once-or-reported-drop, per-packet latency identity, and
+    #      latency monotone in the corruption count.
+    assert [retry_backoff(a) for a in range(1, 7)] == [8, 16, 32, 64, 128, 256]
+    assert retry_backoff(40) == 256  # cap holds, no shift overflow
+    assert sum(retry_backoff(a) for a in range(1, RETRY_BUDGET + 1)) == 120
+    for trial in range(200):
+        trip = rng.randrange(4, 64)
+        k = rng.randrange(0, RETRY_BUDGET + 2)  # corruptions before success
+        ok, retries, drops, lat = replay_link([True] * k + [False], trip)
+        if k <= RETRY_BUDGET:
+            assert ok and drops == 0 and retries == k
+            assert lat == sum(
+                1 + retry_backoff(a) for a in range(1, k + 1)
+            ) + (k + 1) * trip
+            assert lat >= trip, "faulty delivery beat the fault-free trip"
+        else:
+            assert not ok and drops == 1 and retries == RETRY_BUDGET
+            assert lat == 120 + RETRY_BUDGET + (RETRY_BUDGET + 1) * trip
+    lats = []
+    for k in range(RETRY_BUDGET + 1):
+        lats.append(replay_link([True] * k + [False], 10)[3])
+    assert lats == sorted(lats) and len(set(lats)) == len(lats), "not monotone"
+    # A budget-exhausted drop costs exactly as much sim time as the
+    # last successful delivery — the failing packet never takes a
+    # (RETRY_BUDGET+2)-th trip, it is reported at the budget boundary.
+    assert replay_link([True] * (RETRY_BUDGET + 1) + [False], 10)[3] == lats[-1]
+    print("[12c] retry/backoff accounting: budget=4, Σbackoff=120 cycles, "
+          "delivered-or-reported-drop, latency ≥ fault-free: 200 cases OK")
 
     print("\nALL LOGIC CHECKS PASSED")
 
