@@ -15,7 +15,9 @@
 use lexi::models::corpus::Corpus;
 use lexi::models::{ModelConfig, ModelScale};
 use lexi::noc::traffic::{self, MAX_PACKET_BITS};
-use lexi::noc::{EgressCodecConfig, FaultModel, Mesh, Network, NetworkConfig, PacketSpec};
+use lexi::noc::{
+    EgressCodecConfig, FaultModel, IngressCodecConfig, Mesh, Network, NetworkConfig, PacketSpec,
+};
 use lexi::sim::compression::{CompressionMode, CrTable};
 use lexi::sim::engine::Engine;
 use lexi::sim::xval;
@@ -29,11 +31,14 @@ struct Row {
 }
 
 /// Time one traffic pattern; returns (M cycles/s, M flit-hops/s).
+#[allow(clippy::too_many_arguments)]
 fn run_pattern(
     name: &'static str,
     cfg: NetworkConfig,
     specs: &[PacketSpec],
     egress: Option<EgressCodecConfig>,
+    ingress: Option<IngressCodecConfig>,
+    watchdog: Option<u64>,
     fault: Option<FaultModel>,
     t: &mut Table,
     rows: &mut Vec<Row>,
@@ -45,6 +50,12 @@ fn run_pattern(
             Some(e) => Network::with_egress(cfg, e),
             None => Network::new(cfg),
         };
+        if let Some(i) = ingress {
+            net.set_ingress_config(i);
+        }
+        if let Some(w) = watchdog {
+            net.set_watchdog(w);
+        }
         if let Some(f) = &fault {
             net.set_fault_model(f.clone());
         }
@@ -92,13 +103,16 @@ fn main() {
     traffic::tag_packets(&mut uniform_tagged, CodecKind::Huffman, 10.0, true);
     let ecfg = EgressCodecConfig::paper_default();
 
-    let (blind_u, hops_rate) =
-        run_pattern("noc uniform", cfg, &uniform, None, None, &mut t, &mut rows);
+    let (blind_u, hops_rate) = run_pattern(
+        "noc uniform", cfg, &uniform, None, None, None, None, &mut t, &mut rows,
+    );
     let (egress_u, _) = run_pattern(
         "noc uniform egress",
         cfg,
         &uniform_tagged,
         Some(ecfg),
+        None,
+        None,
         None,
         &mut t,
         &mut rows,
@@ -112,7 +126,36 @@ fn main() {
         cfg,
         &uniform_tagged,
         Some(ecfg),
+        None,
+        None,
         Some(FaultModel::new(0xFA17)),
+        &mut t,
+        &mut rows,
+    );
+    // ISSUE 7: full duplex codec ports — injection paced by the ingress
+    // encoder on top of the egress decoder drain.
+    let (ingress_u, _) = run_pattern(
+        "noc uniform ingress",
+        cfg,
+        &uniform_tagged,
+        Some(ecfg),
+        Some(IngressCodecConfig::paper_default()),
+        None,
+        None,
+        &mut t,
+        &mut rows,
+    );
+    // ISSUE 7: an aggressive watchdog window must not slow stepping —
+    // the per-cycle progress check is O(1) counters; the heavy credit
+    // audit runs only on fire. Pinned ≤1.05× the egress row below.
+    let (watchdog_u, _) = run_pattern(
+        "noc uniform watchdog-on",
+        cfg,
+        &uniform_tagged,
+        Some(ecfg),
+        None,
+        Some(1_000),
+        None,
         &mut t,
         &mut rows,
     );
@@ -121,12 +164,16 @@ fn main() {
     let hot = traffic::hotspot(cfg.mesh, lexi::noc::NodeId(14), 128 * 64);
     let mut hot_tagged = hot.clone();
     traffic::tag_packets(&mut hot_tagged, CodecKind::Huffman, 10.0, true);
-    let (blind_h, _) = run_pattern("noc hotspot", cfg, &hot, None, None, &mut t, &mut rows);
+    let (blind_h, _) = run_pattern(
+        "noc hotspot", cfg, &hot, None, None, None, None, &mut t, &mut rows,
+    );
     let (egress_h, _) = run_pattern(
         "noc hotspot egress",
         cfg,
         &hot_tagged,
         Some(ecfg),
+        None,
+        None,
         None,
         &mut t,
         &mut rows,
@@ -178,6 +225,24 @@ fn main() {
         if slow_f <= 1.05 { "PASS" } else { "BELOW TARGET" }
     );
 
+    // Ingress codec ports (ISSUE 7): duplex stepping stays near the
+    // egress-only rate — the encoder check is one branch plus a f64
+    // compare per injected flit. Reported; the gate bounds drift via
+    // the committed baseline row.
+    let slow_i = egress_u / ingress_u;
+    println!(
+        "ingress (duplex) stepping slowdown: {slow_i:.3}x vs egress (target <=1.30x) — {}",
+        if slow_i <= 1.3 { "PASS" } else { "BELOW TARGET" }
+    );
+
+    // Watchdog overhead target (ISSUE 7): progress tracking is O(1)
+    // per step, so an armed tight window must be free.
+    let slow_w = egress_u / watchdog_u;
+    println!(
+        "watchdog-on stepping overhead: {slow_w:.3}x vs egress (target <=1.05x) — {}",
+        if slow_w <= 1.05 { "PASS" } else { "BELOW TARGET" }
+    );
+
     // Cross-validation (sim::xval): analytic vs tagged cycle sim on
     // uncongested sizable transfers, every mode (target <15%).
     let tiny = ModelConfig::jamba(ModelScale::Tiny);
@@ -215,6 +280,8 @@ fn main() {
         "  \"egress_slowdown_uniform\": {slow_u:.3},\n  \"egress_slowdown_hotspot\": {slow_h:.3},\n"
     ));
     json.push_str(&format!("  \"fault_off_overhead\": {slow_f:.3},\n"));
+    json.push_str(&format!("  \"ingress_slowdown_uniform\": {slow_i:.3},\n"));
+    json.push_str(&format!("  \"watchdog_overhead\": {slow_w:.3},\n"));
     json.push_str(&format!("  \"xval_worst_err\": {worst:.4},\n"));
     json.push_str("  \"rows\": {\n");
     for (i, r) in rows.iter().enumerate() {

@@ -31,6 +31,18 @@ pub enum Error {
     /// containers), `lane` the interleaved lane inside it (0 when the
     /// format has no lanes, or when the *header* itself failed).
     Corrupt { block: usize, lane: usize },
+
+    /// An ingress codec port refused an injection: the node's bounded
+    /// NI queue is full because the encoder cannot keep up with the
+    /// offered load. `depth` is the queue occupancy at refusal (== the
+    /// configured bound). Back off and retry — nothing was enqueued.
+    IngressSaturated { node: u16, depth: usize },
+
+    /// No live route exists between two nodes (permanent link failures
+    /// have disconnected them). Unlike `IngressSaturated` this is not
+    /// transient: the packet can never be delivered until topology
+    /// changes.
+    Unreachable { src: u16, dest: u16 },
 }
 
 impl fmt::Display for Error {
@@ -52,6 +64,15 @@ impl fmt::Display for Error {
             Error::Corrupt { block, lane } => write!(
                 f,
                 "integrity check failed: block {block}, lane {lane} corrupted in transit"
+            ),
+            Error::IngressSaturated { node, depth } => write!(
+                f,
+                "ingress codec port saturated at node {node}: injection queue at \
+                 bound {depth}, encoder behind line rate"
+            ),
+            Error::Unreachable { src, dest } => write!(
+                f,
+                "no live route from node {src} to node {dest} (permanent link failures)"
             ),
         }
     }

@@ -65,6 +65,17 @@ impl EncoderUnit {
     pub fn throughput(&self) -> usize {
         self.lanes
     }
+
+    /// Effective encoder occupancy, codec cycles per symbol across all
+    /// lanes (the exact reciprocal of [`EncoderUnit::throughput`]: each
+    /// lane retires one single-cycle LUT lookup per cycle, so M lanes
+    /// sustain M symbols/cycle — there is no per-symbol stall term on
+    /// the encode side, unlike the decoder's probe-fill average). The
+    /// ingress codec ports (`lexi-noc::ingress`) and the analytic
+    /// engine's encode-occupancy charge both use this figure.
+    pub fn cycles_per_symbol(&self) -> f64 {
+        1.0 / self.lanes as f64
+    }
 }
 
 #[cfg(test)]
@@ -102,6 +113,22 @@ mod tests {
         let (_, r10) = EncoderUnit::new(10).encode(&data, &book);
         assert_eq!(r1.cycles, 1000);
         assert_eq!(r10.cycles, 100);
+    }
+
+    #[test]
+    fn cycles_per_symbol_is_reciprocal_throughput() {
+        // The occupancy figure must agree with the cycle-exact encode
+        // report on lane-aligned streams: n symbols × cps == cycles.
+        for lanes in [1usize, 4, 10, 16] {
+            let u = EncoderUnit::new(lanes);
+            assert!((u.cycles_per_symbol() - 1.0 / lanes as f64).abs() < 1e-12);
+            let n = lanes * 25;
+            let data = vec![127u8; n];
+            let hist = Histogram::from_bytes(&data);
+            let book = CodeBook::lexi_default(&hist).unwrap();
+            let (_, r) = u.encode(&data, &book);
+            assert_eq!(r.cycles as f64, n as f64 * u.cycles_per_symbol());
+        }
     }
 
     #[test]

@@ -23,7 +23,20 @@
 //! [`crate::network::Network`]; the detection half (CRC-16) in
 //! `lexi-core::integrity`.
 
+use crate::topology::NodeId;
 use lexi_core::prng::Rng;
+
+/// One scheduled permanent link kill: the bidirectional link between
+/// two adjacent nodes dies at the start of cycle `at` and never comes
+/// back (ISSUE 7). Recovery is the network's job: severed wormholes are
+/// truncated and NACK-retried, and routing switches to deadlock-safe
+/// up*/down* escape tables around the failure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LinkDown {
+    pub a: NodeId,
+    pub b: NodeId,
+    pub at: u64,
+}
 
 /// Maximum retransmissions per packet before the NoC reports it
 /// dropped. Four attempts at BER ≤ 1e-4 per flit puts the residual
@@ -44,6 +57,7 @@ pub struct FaultModel {
     ber: f64,
     drop_prob: f64,
     dup_prob: f64,
+    link_downs: Vec<LinkDown>,
     rng: Rng,
 }
 
@@ -56,6 +70,7 @@ impl FaultModel {
             ber: 0.0,
             drop_prob: 0.0,
             dup_prob: 0.0,
+            link_downs: Vec::new(),
             rng: Rng::new(seed),
         }
     }
@@ -78,6 +93,20 @@ impl FaultModel {
         self
     }
 
+    /// Schedule a permanent kill of the `a`↔`b` link at cycle `at`
+    /// (both directions; the pair must be mesh-adjacent — the network
+    /// validates on attach).
+    pub fn with_link_down(mut self, a: NodeId, b: NodeId, at: u64) -> Self {
+        self.link_downs.push(LinkDown { a, b, at });
+        self.link_downs.sort_by_key(|e| e.at);
+        self
+    }
+
+    /// Scheduled permanent link failures, ascending by cycle.
+    pub fn link_downs(&self) -> &[LinkDown] {
+        &self.link_downs
+    }
+
     /// The seed this model replays from.
     pub fn seed(&self) -> u64 {
         self.seed
@@ -88,9 +117,18 @@ impl FaultModel {
         self.ber
     }
 
-    /// True if any fault probability is non-zero. The network checks
-    /// this once per step, so an attached-but-inert model costs one
-    /// branch per cycle, not one per flit.
+    /// Configured per-traversal drop probability (the stall-cause
+    /// diagnosis reads this: `drop_prob == 1` is a dead link in
+    /// transient clothing).
+    pub fn drop_prob(&self) -> f64 {
+        self.drop_prob
+    }
+
+    /// True if any *transient* fault probability is non-zero. The
+    /// network checks this once per step, so an attached-but-inert
+    /// model costs one branch per cycle, not one per flit. (Permanent
+    /// link-downs are not gated on this: they apply on schedule even
+    /// from an otherwise-inert model.)
     pub fn enabled(&self) -> bool {
         self.ber > 0.0 || self.drop_prob > 0.0 || self.dup_prob > 0.0
     }
@@ -161,6 +199,19 @@ mod tests {
         let r256 = rate(256, 2);
         assert!((0.010..0.016).contains(&r128), "128-bit rate {r128}");
         assert!((1.7..2.3).contains(&(r256 / r128)), "width scaling {}", r256 / r128);
+    }
+
+    #[test]
+    fn link_downs_sort_by_cycle_and_leave_model_inert() {
+        let f = FaultModel::new(9)
+            .with_link_down(NodeId(3), NodeId(4), 500)
+            .with_link_down(NodeId(0), NodeId(1), 100);
+        assert_eq!(f.link_downs().len(), 2);
+        assert_eq!(f.link_downs()[0].at, 100);
+        assert_eq!(f.link_downs()[1].at, 500);
+        // Permanent failures alone don't arm the per-flit transient
+        // path (zero-overhead healthy stepping stays intact).
+        assert!(!f.enabled());
     }
 
     #[test]

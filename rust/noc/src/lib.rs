@@ -20,21 +20,41 @@
 //!   BER-driven flit corruption, drops, and duplicates at link
 //!   traversal, with NACK-at-egress retransmission (bounded
 //!   [`fault::RETRY_BUDGET`], exponential backoff) handled by
-//!   [`network::Network`] and charged to packet latency.
+//!   [`network::Network`] and charged to packet latency; plus scheduled
+//!   **permanent link failures** (ISSUE 7) recovered by wormhole
+//!   truncation + retry and escape rerouting.
+//! * [`ingress`] — per-node ingress codec ports (ISSUE 7): injection is
+//!   paced by the encoder occupancy model with compressor startup on
+//!   runtime-Huffman heads, and the NI queue is bounded — saturation is
+//!   a typed refusal, never silent queue growth.
+//! * [`reroute`] — deadlock-safe up*/down* escape routing tables used
+//!   when permanent link failures break XY; typed unreachability when a
+//!   destination is severed.
+//!
+//! A [`network::Network`] step loop can no longer hang (ISSUE 7): a
+//! watchdog detects zero-progress cycles, audits credit conservation,
+//! and terminates with a typed [`network::StallReport`].
 //!
 //! Links are parameterized in Gbps; with the paper's 100 Gbps NoI links
 //! and 128-bit flits, one network cycle is 1.28 ns.
 
 pub mod egress;
 pub mod fault;
+pub mod ingress;
 pub mod network;
 pub mod packet;
+pub mod reroute;
 pub mod router;
 pub mod topology;
 pub mod traffic;
 
 pub use egress::{EgressCodecConfig, EgressPort};
-pub use fault::FaultModel;
-pub use network::{Network, NetworkConfig, SimStats};
+pub use fault::{FaultModel, LinkDown};
+pub use ingress::{IngressCodecConfig, IngressPort};
+pub use network::{
+    CreditViolation, Network, NetworkConfig, SimStats, StallCause, StallReport, StuckPacket,
+    DEFAULT_WATCHDOG_CYCLES,
+};
 pub use packet::{CodecTag, Flit, FlitKind, PacketRecord, PacketSpec};
+pub use reroute::EscapeRoutes;
 pub use topology::{Mesh, NodeId};

@@ -29,14 +29,45 @@
 //! trip — is charged to the packet: its record keeps the *original*
 //! head-injection cycle. With no model attached (or all rates zero) the
 //! hot path pays one branch per step.
+//!
+//! **Ingress codec ports (ISSUE 7):** a network with an
+//! [`IngressCodecConfig`] paces injection through a per-node encoder
+//! occupancy model ([`IngressPort`]), charges the compressor startup on
+//! runtime-Huffman heads, and bounds every NI queue: scheduled arrivals
+//! beyond the bound are deferred (counted in
+//! [`SimStats::injections_refused`]) and the closed-loop
+//! [`Network::try_inject`] refuses with a typed
+//! `Error::IngressSaturated` — backpressure reaches the traffic
+//! generator instead of an unbounded queue.
+//!
+//! **Watchdog (ISSUE 7):** the step loop tracks global progress (any
+//! flit injected, forwarded, or ejected; any packet activated). If
+//! nothing moves for the watchdog window — and no scheduled arrival or
+//! retry backoff is still pending — [`Network::try_run_to_completion`]
+//! terminates with a typed [`StallReport`]: the stuck packets with
+//! their holding node/port, a per-link credit-conservation audit
+//! (Σ credits + buffered flits == `buf_depth`), and a suspected cause.
+//! No input can hang the simulator.
+//!
+//! **Permanent link failures (ISSUE 7):** [`FaultModel::with_link_down`]
+//! kills a link at a scheduled cycle. The severed wormhole is truncated
+//! (its buffered flits discarded with credits returned, the packet
+//! NACK-retried under the ISSUE 6 budget) and all routing switches to
+//! precomputed deadlock-safe up*/down* escape tables
+//! ([`crate::reroute`]). Packets whose destination is disconnected are
+//! reported in [`SimStats::packets_unreachable`] — delivered via
+//! reroute or typed-unreachable, never silently lost, never hung.
 
 use crate::egress::{self, EgressCodecConfig, EgressPort};
-use crate::fault::{retry_backoff, FaultModel, RETRY_BUDGET};
+use crate::fault::{retry_backoff, FaultModel, LinkDown, RETRY_BUDGET};
+use crate::ingress::{IngressCodecConfig, IngressPort};
 use crate::packet::{Flit, FlitKind, PacketRecord, PacketSpec};
+use crate::reroute::{EscapeRoutes, LinkState};
 use crate::router::Router;
 use crate::topology::{Mesh, NodeId, Port, NUM_PORTS};
 use lexi_core::error::{Error, Result};
 use std::collections::VecDeque;
+use std::fmt;
 
 /// Network configuration.
 #[derive(Clone, Copy, Debug)]
@@ -88,6 +119,8 @@ struct PacketMeta {
     head_inject: Option<u64>,
     /// Ejection cycles spent blocked behind the egress decoder.
     decode_stalls: u64,
+    /// Injection cycles spent blocked behind the ingress encoder.
+    encode_stalls: u64,
     /// A link fault flipped payload bits in one of this packet's flits;
     /// the egress CRC check will NACK the tail instead of recording
     /// delivery.
@@ -126,6 +159,13 @@ pub struct SimStats {
     pub sum_queueing: u64,
     /// Ejection cycles refused by backlogged egress decoders.
     pub decode_stall_cycles: u64,
+    /// Injection cycles refused by backlogged ingress encoders
+    /// (ISSUE 7): the NI had a flit ready but the encoder's `busy_until`
+    /// horizon was over a cycle ahead.
+    pub encode_stall_cycles: u64,
+    /// Injection attempts refused because the bounded NI queue was full
+    /// (scheduled-arrival deferrals + [`Network::try_inject`] refusals).
+    pub injections_refused: u64,
     /// Cycle by which every delivered packet — including its egress
     /// decode tail — has completed. ≥ `cycles` when the decoder is still
     /// draining after the last tail ejects.
@@ -143,6 +183,16 @@ pub struct SimStats {
     /// Packets abandoned after exhausting [`RETRY_BUDGET`]
     /// retransmissions — reported, never silently lost.
     pub packets_dropped: u64,
+    /// Permanent link failures applied so far (ISSUE 7).
+    pub links_down: u64,
+    /// Wormholes truncated by a permanent link failure: in-flight flits
+    /// discarded (credits returned), the packet NACK-retried under the
+    /// retry budget or reported dropped/unreachable.
+    pub packets_truncated: u64,
+    /// Packets abandoned because no live route to their destination
+    /// exists (component severed by link failures) — typed, never
+    /// silent; the specs are kept in [`Network::unreachable_packets`].
+    pub packets_unreachable: u64,
     /// Per-node fault events on outbound links (corrupt + drop + dup),
     /// indexed like the mesh. Sized at construction; empty only for a
     /// default-constructed `SimStats`.
@@ -178,6 +228,115 @@ impl SimStats {
     }
 }
 
+/// Default zero-progress window (in cycles) before the watchdog fires:
+/// comfortably beyond the longest legal quiet spell (the 256-cycle
+/// retry-backoff cap, codec-port startups, deep congestion waves) while
+/// still terminating a wedged run promptly.
+pub const DEFAULT_WATCHDOG_CYCLES: u64 = 10_000;
+
+/// One broken per-link credit invariant found by
+/// [`Network::audit_credits`]: the upstream output's credits plus the
+/// downstream input's buffered flits no longer sum to `buf_depth`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CreditViolation {
+    /// Upstream node of the directed link.
+    pub node: NodeId,
+    /// Output port (= link direction) at the upstream node.
+    pub out: Port,
+    /// Credits the upstream output currently holds.
+    pub credits: u32,
+    /// Flits buffered at the downstream input.
+    pub buffered: u32,
+    /// The configured `buf_depth` the two must sum to.
+    pub expected: u32,
+}
+
+/// A packet that was still live when the watchdog fired.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StuckPacket {
+    pub id: u64,
+    pub src: NodeId,
+    pub dest: NodeId,
+    /// Node holding the packet's foremost buffered flit (the source
+    /// when nothing is buffered yet — still queued at the NI).
+    pub node: NodeId,
+    /// Input port holding that flit (`Local` when NI-queued).
+    pub port: Port,
+    /// Approximate cycle of the flit's last movement (`ready_at` − 1).
+    pub since: u64,
+}
+
+/// The watchdog's suspected root cause, cheapest-to-check first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StallCause {
+    /// The credit audit found a link where credits + buffered flits no
+    /// longer sum to `buf_depth` — flow control itself is broken.
+    CreditLeak,
+    /// An ingress/egress codec port's busy horizon is still ahead of
+    /// sim time after a whole stall window: an effectively zero-rate
+    /// port is refusing every grant.
+    ZeroRatePort,
+    /// A permanent link failure is in effect, or the fault model drops
+    /// every traversal (`drop_prob == 1` — a dead link in transient
+    /// clothing).
+    DeadLink,
+    /// No port or credit anomaly found: suspect a routing/lock cycle.
+    RoutingCycle,
+    /// `max_cycles` elapsed while the network was still making
+    /// progress — an undersized horizon, not a wedge.
+    SlowProgress,
+}
+
+/// Typed verdict from the stall/deadlock watchdog (ISSUE 7): why the
+/// run terminated without draining, who was stuck where, and whether
+/// credit conservation still held. Returned by
+/// [`Network::try_run_to_completion`] instead of looping forever.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StallReport {
+    /// Cycle at which the watchdog fired.
+    pub cycle: u64,
+    /// Zero-progress cycles leading up to it.
+    pub stalled_for: u64,
+    pub cause: StallCause,
+    /// Live packets and where each one's foremost flit is held.
+    pub stuck_packets: Vec<StuckPacket>,
+    /// Credit-conservation violations (empty = credits intact).
+    pub credit_audit: Vec<CreditViolation>,
+}
+
+impl fmt::Display for StallReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "stall at cycle {}: no progress for {} cycles (suspected {:?}); \
+             {} stuck packet(s), {} credit violation(s)",
+            self.cycle,
+            self.stalled_for,
+            self.cause,
+            self.stuck_packets.len(),
+            self.credit_audit.len()
+        )?;
+        for p in self.stuck_packets.iter().take(8) {
+            writeln!(
+                f,
+                "  packet {} {}->{} held at node {} port {:?} since cycle {}",
+                p.id, p.src.0, p.dest.0, p.node.0, p.port, p.since
+            )?;
+        }
+        if self.stuck_packets.len() > 8 {
+            writeln!(f, "  ... {} more", self.stuck_packets.len() - 8)?;
+        }
+        for v in self.credit_audit.iter().take(4) {
+            writeln!(
+                f,
+                "  credit leak: node {} {:?}: credits {} + buffered {} != {}",
+                v.node.0, v.out, v.credits, v.buffered, v.expected
+            )?;
+        }
+        Ok(())
+    }
+}
+
 /// The simulator.
 pub struct Network {
     pub cfg: NetworkConfig,
@@ -197,6 +356,25 @@ pub struct Network {
     fault: Option<FaultModel>,
     /// NACKed packets waiting out their retransmission backoff.
     retry_queue: Vec<RetryEntry>,
+    /// Ingress encoder model; `None` = codec-blind unbounded-NI
+    /// injection (ISSUE 7).
+    ingress_cfg: Option<IngressCodecConfig>,
+    /// Per-node ingress encoder state (parallel to `routers`).
+    ingress: Vec<IngressPort>,
+    /// Scheduled permanent link failures not yet applied (ascending).
+    pending_link_downs: Vec<LinkDown>,
+    /// `down[node][port]` = that directed output is permanently dead.
+    down: LinkState,
+    /// Escape routing tables, installed at the first link failure; all
+    /// routing then follows the tables (one discipline at a time).
+    escape: Option<EscapeRoutes>,
+    /// Specs abandoned because their destination was severed.
+    unreachable: Vec<PacketSpec>,
+    /// Zero-progress window before the watchdog fires; `None` uses
+    /// [`DEFAULT_WATCHDOG_CYCLES`].
+    watchdog_cycles: Option<u64>,
+    /// Cycle of the last observed global progress.
+    last_progress: u64,
     /// Completion records.
     pub records: Vec<PacketRecord>,
     now: u64,
@@ -218,6 +396,14 @@ impl Network {
             egress: vec![EgressPort::default(); n],
             fault: None,
             retry_queue: Vec::new(),
+            ingress_cfg: None,
+            ingress: vec![IngressPort::default(); n],
+            pending_link_downs: Vec::new(),
+            down: vec![[false; NUM_PORTS]; n],
+            escape: None,
+            unreachable: Vec::new(),
+            watchdog_cycles: None,
+            last_progress: 0,
             records: Vec::new(),
             now: 0,
             next_id: 0,
@@ -243,10 +429,45 @@ impl Network {
         net
     }
 
+    /// Build a network that paces injection through the ingress encoder
+    /// model (ISSUE 7) — the encode-side mirror of
+    /// [`Network::with_egress`].
+    pub fn with_ingress(cfg: NetworkConfig, ingress: IngressCodecConfig) -> Self {
+        let mut net = Self::new(cfg);
+        net.ingress_cfg = Some(ingress);
+        net
+    }
+
+    /// Attach (or replace) the ingress encoder config. Composes with
+    /// egress + faults for full-duplex codec ports.
+    pub fn set_ingress_config(&mut self, ingress: IngressCodecConfig) {
+        self.ingress_cfg = Some(ingress);
+    }
+
     /// Attach (or replace) the link fault model. Composes with
     /// [`Network::with_egress`] — the CLI builds egress + faults.
+    /// Scheduled permanent link failures are ingested here; every pair
+    /// must be mesh-adjacent (programmer error otherwise — the CLI
+    /// validates untrusted input before building the model).
     pub fn set_fault_model(&mut self, fault: FaultModel) {
+        for e in fault.link_downs() {
+            assert!(
+                self.adjacent_port(e.a, e.b).is_some(),
+                "link-down pair {}-{} is not mesh-adjacent",
+                e.a.0,
+                e.b.0
+            );
+        }
+        self.pending_link_downs = fault.link_downs().to_vec();
         self.fault = Some(fault);
+    }
+
+    /// The output port of `a` that reaches `b`, if the two are adjacent.
+    fn adjacent_port(&self, a: NodeId, b: NodeId) -> Option<Port> {
+        Port::ALL[1..]
+            .iter()
+            .copied()
+            .find(|&p| self.cfg.mesh.neighbour(a, p) == Some(b))
     }
 
     /// The installed fault model, if any.
@@ -264,6 +485,27 @@ impl Network {
         &self.egress
     }
 
+    /// The installed ingress encoder config, if any.
+    pub fn ingress_config(&self) -> Option<&IngressCodecConfig> {
+        self.ingress_cfg.as_ref()
+    }
+
+    /// Per-node ingress encoder state (read-only view for tests/tools).
+    pub fn ingress_ports(&self) -> &[IngressPort] {
+        &self.ingress
+    }
+
+    /// Override the zero-progress watchdog window, in cycles.
+    pub fn set_watchdog(&mut self, cycles: u64) {
+        self.watchdog_cycles = Some(cycles.max(1));
+    }
+
+    /// Specs abandoned because their destination became unreachable
+    /// (typed counterpart of [`SimStats::packets_unreachable`]).
+    pub fn unreachable_packets(&self) -> &[PacketSpec] {
+        &self.unreachable
+    }
+
     /// Schedule packets after validating their codec tags: a tag whose
     /// symbol count exceeds the packet's wire bits (every coded symbol
     /// costs at least one bit) or that rides a zero-size packet is
@@ -271,20 +513,7 @@ impl Network {
     /// cost model and mis-charge the decoder.
     pub fn try_schedule_packets(&mut self, specs: &[PacketSpec]) -> Result<()> {
         for (i, s) in specs.iter().enumerate() {
-            if let Some(tag) = s.codec {
-                if s.size_bits == 0 {
-                    return Err(Error::InvalidParameter(format!(
-                        "packet {i}: codec tag on a zero-size packet"
-                    )));
-                }
-                if tag.symbols > s.size_bits {
-                    return Err(Error::InvalidParameter(format!(
-                        "packet {i}: {} symbols cannot fit in {} wire bits \
-                         (≥ 1 coded bit per symbol)",
-                        tag.symbols, s.size_bits
-                    )));
-                }
-            }
+            self.validate_spec(s, i)?;
         }
         self.schedule.extend_from_slice(specs);
         // Descending by inject time so due packets pop O(1) from the back.
@@ -293,11 +522,97 @@ impl Network {
         Ok(())
     }
 
+    /// Tag sanity plus, once any link has died, live-route existence —
+    /// a packet to a severed destination is refused up front rather
+    /// than admitted and purged later.
+    fn validate_spec(&self, s: &PacketSpec, i: usize) -> Result<()> {
+        if let Some(tag) = s.codec {
+            if s.size_bits == 0 {
+                return Err(Error::InvalidParameter(format!(
+                    "packet {i}: codec tag on a zero-size packet"
+                )));
+            }
+            if tag.symbols > s.size_bits {
+                return Err(Error::InvalidParameter(format!(
+                    "packet {i}: {} symbols cannot fit in {} wire bits \
+                     (≥ 1 coded bit per symbol)",
+                    tag.symbols, s.size_bits
+                )));
+            }
+        }
+        if let Some(esc) = &self.escape {
+            if !esc.reachable(s.src, s.dest) {
+                return Err(Error::Unreachable {
+                    src: s.src.0,
+                    dest: s.dest.0,
+                });
+            }
+        }
+        Ok(())
+    }
+
     /// Schedule a set of packets (any order). Panics on invalid codec
     /// tags; use [`Network::try_schedule_packets`] for untrusted specs.
     pub fn schedule_packets(&mut self, specs: &[PacketSpec]) {
         self.try_schedule_packets(specs)
             .expect("valid packet specs");
+    }
+
+    /// Closed-loop injection (ISSUE 7): admit one packet *now* if its
+    /// source NI has room, else refuse with a typed error so the
+    /// traffic generator feels the backpressure immediately. Refusals
+    /// are counted in [`SimStats::injections_refused`]; the caller
+    /// retries on a later cycle. Without an ingress config the NI is
+    /// unbounded and admission always succeeds.
+    pub fn try_inject(&mut self, spec: PacketSpec) -> Result<()> {
+        self.validate_spec(&spec, 0)?;
+        if let Some(icfg) = &self.ingress_cfg {
+            let depth = self.ni_queues[spec.src.0 as usize].len();
+            if depth >= icfg.max_queue {
+                self.stats.injections_refused += 1;
+                return Err(Error::IngressSaturated {
+                    node: spec.src.0,
+                    depth,
+                });
+            }
+        }
+        // Clamp the scheduled time to "now": closed-loop callers decide
+        // *when* by calling between steps, and a future stamp would
+        // underflow the queueing-delay clock.
+        let spec = PacketSpec {
+            inject_at: spec.inject_at.min(self.now),
+            ..spec
+        };
+        self.activate(spec, 0, None);
+        Ok(())
+    }
+
+    /// Materialize one packet at its source NI: meta entry + lazy-flit
+    /// pending record. Shared by scheduled activation, retransmission,
+    /// and closed-loop injection.
+    fn activate(&mut self, spec: PacketSpec, attempt: u32, first_inject: Option<u64>) {
+        let id = self.next_id;
+        self.next_id += 1;
+        let total = spec.flits(self.cfg.flit_bits);
+        self.meta.insert(
+            id,
+            PacketMeta {
+                spec,
+                total_flits: total,
+                head_inject: None,
+                decode_stalls: 0,
+                encode_stalls: 0,
+                corrupted: false,
+                attempt,
+                first_inject,
+            },
+        );
+        self.ni_queues[spec.src.0 as usize].push_back(Pending {
+            id,
+            spec,
+            total_flits: total,
+            emitted: 0,
+        });
     }
 
     /// Current cycle.
@@ -332,34 +647,49 @@ impl Network {
         // One branch per step keeps the fault-off hot path at parity
         // with a fault-less build (perf gate: ≤1.05× the egress row).
         let faults_on = self.fault.as_ref().is_some_and(|f| f.enabled());
+        // Watchdog progress observation (ISSUE 7): any flit movement,
+        // packet activation or injection this cycle counts as progress.
+        // Cheap counters only on the hot path — the heavy diagnosis
+        // runs once, at fire time.
+        let moved0 = self.stats.delivered_flits + self.stats.flit_hops;
+        let id0 = self.next_id;
+        let mut progressed = false;
+
+        // --- 0. scheduled permanent link failures (rare) ------------------
+        if !self.pending_link_downs.is_empty() {
+            while let Some(&e) = self.pending_link_downs.first() {
+                if e.at > self.now {
+                    break;
+                }
+                self.pending_link_downs.remove(0);
+                // Truncation/purge *is* forward motion for the watchdog.
+                progressed |= self.apply_link_down(e.a, e.b);
+            }
+        }
 
         // --- 1. activation of scheduled packets --------------------------
+        // With ingress codec ports the NI queue is bounded: due
+        // arrivals beyond the bound are deferred to later cycles
+        // (refusals counted) instead of growing an unbounded queue.
+        let mut deferred: Vec<PacketSpec> = Vec::new();
         while let Some(last) = self.schedule.last() {
             if last.inject_at > self.now {
                 break;
             }
             let spec = self.schedule.pop().expect("non-empty");
-            let id = self.next_id;
-            self.next_id += 1;
-            let total = spec.flits(self.cfg.flit_bits);
-            self.meta.insert(
-                id,
-                PacketMeta {
-                    spec,
-                    total_flits: total,
-                    head_inject: None,
-                    decode_stalls: 0,
-                    corrupted: false,
-                    attempt: 0,
-                    first_inject: None,
-                },
-            );
-            self.ni_queues[spec.src.0 as usize].push_back(Pending {
-                id,
-                spec,
-                total_flits: total,
-                emitted: 0,
-            });
+            if let Some(icfg) = &self.ingress_cfg {
+                if self.ni_queues[spec.src.0 as usize].len() >= icfg.max_queue {
+                    self.stats.injections_refused += 1;
+                    deferred.push(spec);
+                    continue;
+                }
+            }
+            self.activate(spec, 0, None);
+        }
+        if !deferred.is_empty() {
+            // Re-append at the back: deferred specs are already due, so
+            // they stay the schedule's minimum and pop first next cycle.
+            self.schedule.extend(deferred);
         }
 
         // --- 1b. retransmissions whose backoff has elapsed ----------------
@@ -371,35 +701,49 @@ impl Network {
                     continue;
                 }
                 let e = self.retry_queue.swap_remove(i);
-                let id = self.next_id;
-                self.next_id += 1;
-                let total = e.spec.flits(self.cfg.flit_bits);
-                self.meta.insert(
-                    id,
-                    PacketMeta {
-                        spec: e.spec,
-                        total_flits: total,
-                        head_inject: None,
-                        decode_stalls: 0,
-                        corrupted: false,
-                        attempt: e.attempt,
-                        first_inject: Some(e.first_inject),
-                    },
-                );
-                self.ni_queues[e.spec.src.0 as usize].push_back(Pending {
-                    id,
-                    spec: e.spec,
-                    total_flits: total,
-                    emitted: 0,
-                });
+                // Retries bypass the NI bound: their population is
+                // bounded by already-admitted packets, and stalling
+                // recovery would leak the bound into the retry budget.
+                self.activate(e.spec, e.attempt, Some(e.first_inject));
             }
         }
 
         // --- 2. injection: one flit per node per cycle --------------------
+        let cycle_ns = self.cfg.cycle_ns();
         for (node, q) in self.ni_queues.iter_mut().enumerate() {
             if let Some(p) = q.front_mut() {
-                let local_in = &mut self.routers[node].inputs[Port::Local as usize];
-                if (local_in.fifo.len() as u32) < self.cfg.buf_depth {
+                if (self.routers[node].inputs[Port::Local as usize].fifo.len() as u32)
+                    < self.cfg.buf_depth
+                {
+                    // Ingress codec port (ISSUE 7): a tagged flit must
+                    // clear the encoder before entering the network.
+                    let mut pace: Option<f64> = None;
+                    if let (Some(icfg), Some(tag)) = (self.ingress_cfg.as_ref(), p.spec.codec)
+                    {
+                        if !egress::ready(self.ingress[node].busy_until, self.now) {
+                            // Encoder backlogged: the packet stays at
+                            // the NI and the stall is counted, never
+                            // silently absorbed.
+                            self.ingress[node].stall_cycles += 1;
+                            self.stats.encode_stall_cycles += 1;
+                            self.meta
+                                .get_mut(&p.id)
+                                .expect("queued packet has meta")
+                                .encode_stalls += 1;
+                            continue;
+                        }
+                        // Startup (codebook build) is charged once, on
+                        // the head flit of the *first* attempt — a
+                        // retransmission replays the encoded stream.
+                        let charge_startup =
+                            p.emitted == 0 && self.meta[&p.id].attempt == 0;
+                        pace = Some(icfg.flit_cost_cycles(
+                            &tag,
+                            p.total_flits,
+                            charge_startup,
+                            cycle_ns,
+                        ));
+                    }
                     let seq = p.emitted;
                     let kind = match (seq, p.total_flits) {
                         (0, 1) => FlitKind::Single,
@@ -415,15 +759,22 @@ impl Network {
                             .expect("activated packet has meta")
                             .head_inject = Some(self.now);
                     }
-                    local_in.fifo.push_back(Flit {
-                        packet_id: p.id,
-                        kind,
-                        src: p.spec.src,
-                        dest: p.spec.dest,
-                        seq,
-                        ready_at: self.now + 1,
-                        codec: p.spec.codec,
-                    });
+                    self.routers[node].inputs[Port::Local as usize]
+                        .fifo
+                        .push_back(Flit {
+                            packet_id: p.id,
+                            kind,
+                            src: p.spec.src,
+                            dest: p.spec.dest,
+                            seq,
+                            ready_at: self.now + 1,
+                            codec: p.spec.codec,
+                        });
+                    if let Some(cost) = pace {
+                        self.ingress[node].busy_until =
+                            egress::accept(self.ingress[node].busy_until, self.now, cost);
+                    }
+                    progressed = true;
                     p.emitted += 1;
                     if p.emitted == p.total_flits {
                         q.pop_front();
@@ -440,8 +791,18 @@ impl Network {
                 continue;
             }
             let at = NodeId(node as u16);
-            let grants =
-                self.routers[node].arbitrate_all(self.now, |f| mesh.route_xy(at, f.dest));
+            // Healthy mesh: pure XY (deadlock-free, zero table cost).
+            // After any permanent link failure: every flit follows the
+            // up*/down* escape tables — one routing discipline at a
+            // time, or the two could form a cycle between them.
+            let grants = match self.escape.as_ref() {
+                None => self.routers[node]
+                    .arbitrate_all(self.now, |_, f| mesh.route_xy(at, f.dest)),
+                Some(esc) => self.routers[node].arbitrate_all(self.now, |inp, f| {
+                    esc.next_hop(at, inp, f.dest)
+                        .expect("unroutable flits are truncated at link-down time")
+                }),
+            };
             for &out in &Port::ALL {
                 let Some(inp) = grants[out as usize] else { continue };
 
@@ -526,6 +887,7 @@ impl Network {
                             eject_cycle,
                             flits: m.total_flits,
                             decode_stall_cycles: m.decode_stalls,
+                            encode_stall_cycles: m.encode_stalls,
                             retries: m.attempt,
                         };
                         self.stats.delivered_packets += 1;
@@ -547,7 +909,7 @@ impl Network {
                     continue;
                 }
                 let Some(nb) = mesh.neighbour(at, out) else {
-                    unreachable!("XY routing never exits the mesh");
+                    unreachable!("routing never exits the mesh");
                 };
                 if faults_on && self.fault.as_mut().expect("gated").drops() {
                     // The link ate the flit: it stays at the FIFO head and
@@ -598,21 +960,337 @@ impl Network {
 
         self.now += 1;
         self.stats.cycles = self.now;
+        if progressed
+            || self.stats.delivered_flits + self.stats.flit_hops != moved0
+            || self.next_id != id0
+        {
+            self.last_progress = self.now;
+        }
     }
 
     /// Run until every scheduled packet is delivered (or `max_cycles`).
-    /// Returns stats; panics if the network failed to drain in time.
+    /// Returns stats; panics with the [`StallReport`] if the network
+    /// wedges or fails to drain in time — use
+    /// [`Network::try_run_to_completion`] to handle stalls as values.
     pub fn run_to_completion(&mut self, max_cycles: u64) -> SimStats {
+        match self.try_run_to_completion(max_cycles) {
+            Ok(stats) => stats,
+            Err(report) => panic!("network failed to drain: {report}"),
+        }
+    }
+
+    /// Run until drained, the watchdog fires, or `max_cycles` elapse
+    /// (ISSUE 7). The watchdog fires when nothing has moved for the
+    /// watchdog window AND no scheduled arrival or retry backoff is
+    /// still pending (a future-due entry is guaranteed progress, not a
+    /// stall), so no input can make this loop forever. On fire — or on
+    /// timeout — the typed [`StallReport`] carries the stuck packets,
+    /// a credit-conservation audit, and a suspected cause.
+    pub fn try_run_to_completion(
+        &mut self,
+        max_cycles: u64,
+    ) -> std::result::Result<SimStats, StallReport> {
+        let window = self.watchdog_cycles.unwrap_or(DEFAULT_WATCHDOG_CYCLES);
         while !self.drained() {
-            assert!(
-                self.now < max_cycles,
-                "network failed to drain within {max_cycles} cycles \
-                 ({} packets outstanding)",
-                self.meta.len()
-            );
+            let stalled_for = self.now - self.last_progress;
+            if stalled_for >= window && !self.future_work_pending() {
+                return Err(self.diagnose(stalled_for, false));
+            }
+            if self.now >= max_cycles {
+                return Err(self.diagnose(stalled_for, true));
+            }
             self.step();
         }
-        self.stats.clone()
+        Ok(self.stats.clone())
+    }
+
+    /// A scheduled arrival or retry backoff strictly in the future is
+    /// guaranteed forward motion — the watchdog must not fire over a
+    /// quiet spell it can prove will end. Both horizons are bounded
+    /// (backoff caps at 256 cycles; the schedule is finite), so this
+    /// can never postpone a genuine-wedge verdict forever.
+    fn future_work_pending(&self) -> bool {
+        self.retry_queue.iter().any(|e| e.due > self.now)
+            || self
+                .schedule
+                .last()
+                .map_or(false, |s| s.inject_at > self.now)
+    }
+
+    /// Verify per-link credit conservation: for every directed link,
+    /// the upstream output's credits plus the downstream input's
+    /// buffered flits must equal `buf_depth`. Forwarding and credit
+    /// return are same-cycle, and wormhole truncation returns credits
+    /// for every discarded flit, so the invariant holds on *every*
+    /// cycle — including across dead links.
+    pub fn audit_credits(&self) -> Vec<CreditViolation> {
+        let mut violations = Vec::new();
+        for node in 0..self.routers.len() {
+            let at = NodeId(node as u16);
+            for &out in &Port::ALL[1..] {
+                let Some(nb) = self.cfg.mesh.neighbour(at, out) else {
+                    continue;
+                };
+                let credits = self.routers[node].outputs[out as usize].credits;
+                let buffered = self.routers[nb.0 as usize].inputs
+                    [out.opposite() as usize]
+                    .fifo
+                    .len() as u32;
+                if credits + buffered != self.cfg.buf_depth {
+                    violations.push(CreditViolation {
+                        node: at,
+                        out,
+                        credits,
+                        buffered,
+                        expected: self.cfg.buf_depth,
+                    });
+                }
+            }
+        }
+        violations
+    }
+
+    /// Build the fire-time [`StallReport`]: full credit audit, stuck
+    /// packets with their holding node/port, and a cause heuristic —
+    /// all deliberately off the hot path.
+    fn diagnose(&self, stalled_for: u64, timed_out: bool) -> StallReport {
+        let credit_audit = self.audit_credits();
+        // Locate each live packet's foremost buffered flit.
+        let mut loc: std::collections::HashMap<u64, (NodeId, Port, u32, u64)> =
+            std::collections::HashMap::new();
+        for (node, r) in self.routers.iter().enumerate() {
+            for (inp, buf) in r.inputs.iter().enumerate() {
+                for f in &buf.fifo {
+                    let here = (NodeId(node as u16), Port::ALL[inp], f.seq, f.ready_at);
+                    loc.entry(f.packet_id)
+                        .and_modify(|e| {
+                            if f.seq < e.2 {
+                                *e = here;
+                            }
+                        })
+                        .or_insert(here);
+                }
+            }
+        }
+        let mut stuck_packets: Vec<StuckPacket> = self
+            .meta
+            .iter()
+            .map(|(&id, m)| {
+                let (node, port, _, ready) = loc.get(&id).copied().unwrap_or((
+                    m.spec.src,
+                    Port::Local,
+                    0,
+                    m.head_inject.unwrap_or(m.spec.inject_at) + 1,
+                ));
+                StuckPacket {
+                    id,
+                    src: m.spec.src,
+                    dest: m.spec.dest,
+                    node,
+                    port,
+                    since: ready.saturating_sub(1),
+                }
+            })
+            .collect();
+        stuck_packets.sort_by_key(|s| s.id);
+        let window = self.watchdog_cycles.unwrap_or(DEFAULT_WATCHDOG_CYCLES);
+        let cause = if timed_out && stalled_for < window {
+            StallCause::SlowProgress
+        } else if !credit_audit.is_empty() {
+            StallCause::CreditLeak
+        } else if self.zero_rate_port_suspected() {
+            StallCause::ZeroRatePort
+        } else if self.stats.links_down > 0
+            || self.fault.as_ref().map_or(false, |f| f.drop_prob() >= 1.0)
+        {
+            StallCause::DeadLink
+        } else {
+            StallCause::RoutingCycle
+        };
+        StallReport {
+            cycle: self.now,
+            stalled_for,
+            cause,
+            stuck_packets,
+            credit_audit,
+        }
+    }
+
+    /// A codec port whose busy horizon is still ahead of `now` after an
+    /// entire zero-progress window never accepted during it: it is
+    /// refusing every grant at an effectively zero rate.
+    fn zero_rate_port_suspected(&self) -> bool {
+        let horizon = self.now as f64;
+        self.egress.iter().any(|p| p.busy_until > horizon)
+            || self.ingress.iter().any(|p| p.busy_until > horizon)
+    }
+
+    /// Kill the `a`↔`b` link immediately (both directions). Prefer
+    /// scheduling via [`FaultModel::with_link_down`]; this is the
+    /// validated immediate-mode entry tests and tools share.
+    pub fn down_link(&mut self, a: NodeId, b: NodeId) -> Result<()> {
+        if self.adjacent_port(a, b).is_none() {
+            return Err(Error::InvalidParameter(format!(
+                "link-down pair {}-{} is not mesh-adjacent",
+                a.0, b.0
+            )));
+        }
+        self.apply_link_down(a, b);
+        Ok(())
+    }
+
+    /// Apply one permanent link failure: mark both directions dead,
+    /// rebuild the escape tables, truncate severed/unroutable worms,
+    /// purge newly-unreachable packets. Returns true if anything
+    /// changed (truncation counts as watchdog progress). Idempotent.
+    fn apply_link_down(&mut self, a: NodeId, b: NodeId) -> bool {
+        let pab = self.adjacent_port(a, b).expect("validated adjacency");
+        let pba = pab.opposite();
+        if self.down[a.0 as usize][pab as usize] {
+            return false; // already dead
+        }
+        self.down[a.0 as usize][pab as usize] = true;
+        self.down[b.0 as usize][pba as usize] = true;
+        self.stats.links_down += 1;
+
+        // New escape tables over the survivor topology; all routing
+        // follows them from here on.
+        self.escape = Some(EscapeRoutes::compute(self.cfg.mesh, &self.down));
+
+        let (victims, purge, sched_gone, retry_gone) = {
+            let esc = self.escape.as_ref().expect("just installed");
+            // Victims: (1) worms locked through the dead directed
+            // links; (2) flits with no legal escape continuation
+            // (stranded down-phase, or destination severed); (3) worms
+            // whose locked output no longer matches the table hop —
+            // forwarding those would split the worm mid-body.
+            let mut victims: Vec<u64> = Vec::new();
+            for (u, pout) in [(a, pab), (b, pba)] {
+                if let Some(pid) =
+                    self.routers[u.0 as usize].outputs[pout as usize].locked_packet
+                {
+                    victims.push(pid);
+                }
+            }
+            for (node, r) in self.routers.iter().enumerate() {
+                let at = NodeId(node as u16);
+                for (inp, buf) in r.inputs.iter().enumerate() {
+                    for f in &buf.fifo {
+                        if esc.next_hop(at, inp, f.dest).is_none() {
+                            victims.push(f.packet_id);
+                        }
+                    }
+                }
+                for (out, o) in r.outputs.iter().enumerate() {
+                    let (Some(pid), Some(inp)) = (o.locked_packet, o.locked_to) else {
+                        continue;
+                    };
+                    let Some(m) = self.meta.get(&pid) else { continue };
+                    if esc.next_hop(at, inp, m.spec.dest) != Some(Port::ALL[out]) {
+                        victims.push(pid);
+                    }
+                }
+            }
+            victims.sort_unstable();
+            victims.dedup();
+
+            // Packets waiting at NIs or in the schedule/retry queue
+            // whose destination is now severed: typed unreachability.
+            let mut purge: Vec<u64> = Vec::new();
+            for q in &self.ni_queues {
+                for p in q {
+                    if !esc.reachable(p.spec.src, p.spec.dest) {
+                        purge.push(p.id);
+                    }
+                }
+            }
+            let sched = std::mem::take(&mut self.schedule);
+            let (sched_keep, sched_gone): (Vec<_>, Vec<_>) = sched
+                .into_iter()
+                .partition(|s| esc.reachable(s.src, s.dest));
+            self.schedule = sched_keep;
+            let retries = std::mem::take(&mut self.retry_queue);
+            let (retry_keep, retry_gone): (Vec<_>, Vec<_>) = retries
+                .into_iter()
+                .partition(|e| esc.reachable(e.spec.src, e.spec.dest));
+            self.retry_queue = retry_keep;
+            (victims, purge, sched_gone, retry_gone)
+        };
+
+        let progressed = !victims.is_empty()
+            || !purge.is_empty()
+            || !sched_gone.is_empty()
+            || !retry_gone.is_empty();
+        for s in sched_gone {
+            self.stats.packets_unreachable += 1;
+            self.unreachable.push(s);
+        }
+        for e in retry_gone {
+            self.stats.packets_unreachable += 1;
+            self.unreachable.push(e.spec);
+        }
+        for pid in victims.into_iter().chain(purge) {
+            self.truncate_packet(pid);
+        }
+        progressed
+    }
+
+    /// Drain every trace of packet `pid` from the network: buffered
+    /// flits are discarded with their credits returned (so per-link
+    /// conservation holds through the failure), wormhole locks are
+    /// released, and the NI remainder is dropped. The packet is then
+    /// NACK-retried under the retry budget — or reported
+    /// unreachable/dropped. Exactly the ISSUE 6 recovery path, entered
+    /// from a cut instead of a CRC failure.
+    fn truncate_packet(&mut self, pid: u64) {
+        let Some(m) = self.meta.remove(&pid) else {
+            return; // already truncated in this application
+        };
+        for node in 0..self.routers.len() {
+            let at = NodeId(node as u16);
+            for inp in 0..NUM_PORTS {
+                let removed = {
+                    let fifo = &mut self.routers[node].inputs[inp].fifo;
+                    let before = fifo.len();
+                    fifo.retain(|f| f.packet_id != pid);
+                    before - fifo.len()
+                };
+                for _ in 0..removed {
+                    self.credit_return(at, inp);
+                }
+            }
+            for o in self.routers[node].outputs.iter_mut() {
+                if o.locked_packet == Some(pid) {
+                    o.locked_to = None;
+                    o.locked_packet = None;
+                }
+            }
+        }
+        self.ni_queues[m.spec.src.0 as usize].retain(|p| p.id != pid);
+        if m.head_inject.is_some() {
+            // Only a packet with flits in flight was truly truncated; a
+            // purged never-injected packet is just unreachable.
+            self.stats.packets_truncated += 1;
+        }
+        let reachable = self
+            .escape
+            .as_ref()
+            .map_or(true, |e| e.reachable(m.spec.src, m.spec.dest));
+        if !reachable {
+            self.stats.packets_unreachable += 1;
+            self.unreachable.push(m.spec);
+        } else if m.attempt < RETRY_BUDGET {
+            let next = m.attempt + 1;
+            self.stats.packet_retries += 1;
+            self.retry_queue.push(RetryEntry {
+                spec: m.spec,
+                due: self.now + 1 + retry_backoff(next),
+                attempt: next,
+                first_inject: m.first_inject.or(m.head_inject).unwrap_or(self.now),
+            });
+        } else {
+            self.stats.packets_dropped += 1;
+        }
     }
 
     /// Stats so far.
@@ -645,9 +1323,11 @@ impl Network {
         let o = &mut self.routers[node].outputs[out as usize];
         if flit.is_tail() {
             o.locked_to = None;
+            o.locked_packet = None;
             o.rr = (inp + 1) % NUM_PORTS;
         } else {
             o.locked_to = Some(inp);
+            o.locked_packet = Some(flit.packet_id);
         }
     }
 }
@@ -1102,5 +1782,352 @@ mod tests {
         } else {
             assert_eq!(stats.delivered_symbols, 0);
         }
+    }
+
+    // ------------------------------------------------------------------
+    // ISSUE 7: ingress codec ports
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn ingress_line_rate_matches_codec_blind_injection() {
+        // Paper point (10 encode lanes): at ≤ ~12 symbols per flit the
+        // encoder stays strictly behind the wire, so paced injection is
+        // cycle-identical to the codec-blind network.
+        let spec = PacketSpec::new(NodeId(0), NodeId(15), 128 * 64, 0);
+        let blind = {
+            let mut net = Network::new(cfg_4x4());
+            net.run_to_completion_after(&[spec])
+        };
+        let paced = {
+            let mut net =
+                Network::with_ingress(cfg_4x4(), IngressCodecConfig::paper_default());
+            net.run_to_completion_after(&[spec.tagged(huff_tag(64 * 8, false))])
+        };
+        assert_eq!(blind.cycles, paced.cycles);
+        assert_eq!(blind.completion_cycle, paced.completion_cycle);
+        assert_eq!(paced.encode_stall_cycles, 0);
+        assert_eq!(paced.injections_refused, 0);
+    }
+
+    #[test]
+    fn starved_ingress_throttles_injection_and_counts_stalls() {
+        // One encode lane on a symbol-heavy packet: injection paces to
+        // the encoder rate, stall cycles accrue at the NI, and
+        // completion stretches to ~the encode makespan.
+        let symbols = 64 * 16u64; // 16 symbols per flit
+        let spec =
+            PacketSpec::new(NodeId(0), NodeId(15), 128 * 64, 0).tagged(huff_tag(symbols, false));
+        let icfg = IngressCodecConfig::nominal(1, 1.0); // 1 ns/symbol
+        let cycle_ns = cfg_4x4().cycle_ns();
+        let mut net = Network::with_ingress(cfg_4x4(), icfg);
+        let stats = net.run_to_completion_after(&[spec]);
+        assert_eq!(stats.delivered_packets, 1);
+        assert!(stats.encode_stall_cycles > 0, "no encode backpressure observed");
+        let rec = net.records[0];
+        assert_eq!(rec.encode_stall_cycles, stats.encode_stall_cycles);
+        // Encode-bound completion ≈ symbols × ns/sym ÷ cycle_ns (the
+        // tail leaves the encoder a flit-cost early, hence the slack).
+        let encode_cycles =
+            symbols as f64 * icfg.ns_per_symbol(CodecKind::Huffman) / cycle_ns;
+        let done = stats.completion_cycle as f64;
+        assert!(
+            done >= encode_cycles - 16.0 && done <= encode_cycles * 1.15 + 16.0,
+            "completion {done} vs encode bound {encode_cycles}"
+        );
+    }
+
+    #[test]
+    fn ingress_startup_charged_once_on_runtime_head() {
+        // Identical packets, offline vs runtime codebook: the runtime
+        // one completes later by ~the compressor startup, charged once
+        // on the head flit; followers stall at the NI while it drains.
+        let base = PacketSpec::new(NodeId(0), NodeId(15), 128 * 64, 0);
+        let run = |runtime: bool| {
+            let mut net =
+                Network::with_ingress(cfg_4x4(), IngressCodecConfig::paper_default());
+            net.run_to_completion_after(&[base.tagged(huff_tag(64 * 8, runtime))])
+        };
+        let offline = run(false);
+        let runtime = run(true);
+        let cycle_ns = cfg_4x4().cycle_ns();
+        let startup_cycles =
+            (IngressCodecConfig::paper_default().startup_ns / cycle_ns).ceil() as u64;
+        let delta = runtime.completion_cycle - offline.completion_cycle;
+        assert!(
+            delta >= startup_cycles - 1 && delta <= startup_cycles + 2,
+            "startup delta {delta} vs expected {startup_cycles}"
+        );
+        assert!(runtime.encode_stall_cycles > 0);
+        assert_eq!(offline.encode_stall_cycles, 0);
+    }
+
+    #[test]
+    fn bounded_ni_admission_defers_and_counts() {
+        // More same-source arrivals than the NI bound: the excess is
+        // deferred cycle by cycle (refusals counted), yet every packet
+        // is eventually delivered — bounded memory, no loss.
+        let icfg = IngressCodecConfig::nominal(1, 1.0);
+        assert_eq!(icfg.max_queue, crate::ingress::DEFAULT_MAX_QUEUE);
+        let specs: Vec<PacketSpec> = (0..12)
+            .map(|_| {
+                PacketSpec::new(NodeId(0), NodeId(15), 128 * 8, 0)
+                    .tagged(huff_tag(8 * 16, false))
+            })
+            .collect();
+        let mut net = Network::with_ingress(cfg_4x4(), icfg);
+        let stats = net.run_to_completion_after(&specs);
+        assert_eq!(stats.delivered_packets, 12);
+        assert!(stats.injections_refused > 0, "bound never engaged");
+    }
+
+    #[test]
+    fn try_inject_backpressures_with_typed_refusal() {
+        // Closed-loop generator: admission beyond the NI bound is a
+        // typed IngressSaturated refusal, and room reopens as the
+        // encoder drains — backpressure reaches the caller, not an
+        // unbounded queue.
+        let mut icfg = IngressCodecConfig::nominal(1, 1.0);
+        icfg.max_queue = 2;
+        let mut net = Network::with_ingress(cfg_4x4(), icfg);
+        let spec =
+            PacketSpec::new(NodeId(0), NodeId(15), 128 * 8, 0).tagged(huff_tag(8 * 16, false));
+        assert!(net.try_inject(spec).is_ok());
+        assert!(net.try_inject(spec).is_ok());
+        match net.try_inject(spec) {
+            Err(Error::IngressSaturated { node: 0, depth: 2 }) => {}
+            other => panic!("expected typed saturation, got {other:?}"),
+        }
+        assert_eq!(net.stats().injections_refused, 1);
+        // Drain enough for one packet to clear the NI, then retry.
+        for _ in 0..1500 {
+            net.step();
+            if net.try_inject(spec).is_ok() {
+                break;
+            }
+        }
+        let stats = net.run_to_completion(100_000);
+        assert_eq!(stats.delivered_packets, 3);
+    }
+
+    // ------------------------------------------------------------------
+    // ISSUE 7: stall/deadlock watchdog
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn zero_rate_egress_terminates_with_stall_report() {
+        // Regression: a decoder that never drains used to spin
+        // run_to_completion to the horizon. The watchdog must terminate
+        // promptly with a typed report naming the stuck packet and the
+        // zero-rate port as the suspected cause.
+        let mut ecfg = EgressCodecConfig::nominal(16, 1.0);
+        ecfg.set_rate(CodecKind::Huffman, 1e12);
+        let mut net = Network::with_egress(cfg_4x4(), ecfg);
+        net.set_watchdog(200);
+        net.schedule_packets(
+            &[PacketSpec::new(NodeId(0), NodeId(3), 128 * 8, 0).tagged(huff_tag(64, false))],
+        );
+        let report = net
+            .try_run_to_completion(1_000_000)
+            .expect_err("a wedged run must not drain");
+        assert_eq!(report.cause, StallCause::ZeroRatePort);
+        assert_eq!(report.stuck_packets.len(), 1);
+        assert_eq!(report.stuck_packets[0].dest, NodeId(3));
+        assert!(report.credit_audit.is_empty(), "credits must still conserve");
+        assert!(report.stalled_for >= 200);
+        assert!(net.now() < 10_000, "watchdog fired late: {}", net.now());
+        // The report renders human-readable.
+        let text = format!("{report}");
+        assert!(text.contains("ZeroRatePort"), "{text}");
+    }
+
+    #[test]
+    fn drop_every_flit_terminates_with_dead_link_verdict() {
+        // drop_prob = 1.0 is a dead link in transient clothing: no flit
+        // ever traverses, no NACK ever fires (nothing reaches egress),
+        // and pre-watchdog the step loop span forever.
+        let mut net = Network::with_faults(cfg_4x4(), FaultModel::new(4).with_drop(1.0));
+        net.set_watchdog(300);
+        net.schedule_packets(&[PacketSpec::new(NodeId(0), NodeId(3), 128 * 4, 0)]);
+        let report = net
+            .try_run_to_completion(1_000_000)
+            .expect_err("a dead link must trip the watchdog");
+        assert_eq!(report.cause, StallCause::DeadLink);
+        assert!(!report.stuck_packets.is_empty());
+        assert!(report.credit_audit.is_empty());
+    }
+
+    #[test]
+    fn watchdog_never_fires_on_healthy_sparse_traffic() {
+        // Arrival gaps far beyond the watchdog window: future-due
+        // schedule entries are provable progress, so a healthy mesh
+        // must complete — quiet spells are not stalls.
+        let mut net = Network::new(cfg_4x4());
+        net.set_watchdog(64);
+        let specs: Vec<PacketSpec> = (0..40u64)
+            .map(|k| {
+                PacketSpec::new(
+                    NodeId((k * 3 % 16) as u16),
+                    NodeId((k * 5 % 16) as u16),
+                    128 * 4,
+                    k * 200,
+                )
+            })
+            .filter(|s| s.src != s.dest)
+            .collect();
+        let n = specs.len() as u64;
+        net.schedule_packets(&specs);
+        let stats = net
+            .try_run_to_completion(100_000)
+            .expect("healthy mesh must never trip the watchdog");
+        assert_eq!(stats.delivered_packets, n);
+    }
+
+    #[test]
+    fn credit_conservation_soak_under_faults_and_link_downs() {
+        // Property soak (ISSUE 7 satellite): ≥ 10k cycles of seeded
+        // random traffic × transient faults × two mid-run permanent
+        // link failures — the per-link credit invariant must hold on
+        // *every* cycle, and packet accounting must stay exact.
+        let mut net = Network::new(cfg_4x4());
+        net.set_fault_model(
+            FaultModel::new(77)
+                .with_ber(1e-4)
+                .with_drop(0.02)
+                .with_dup(0.01)
+                .with_link_down(NodeId(5), NodeId(6), 3_000)
+                .with_link_down(NodeId(9), NodeId(10), 7_000),
+        );
+        let mut specs = Vec::new();
+        for k in 0..500u64 {
+            let (s, d) = ((k * 7 % 16) as u16, ((k * 11 + 3) % 16) as u16);
+            if s != d {
+                specs.push(PacketSpec::new(NodeId(s), NodeId(d), 128 * 8, k * 25));
+            }
+        }
+        let n = specs.len() as u64;
+        net.schedule_packets(&specs);
+        let mut cycles = 0u64;
+        while !net.drained() {
+            assert!(net.now() < 200_000, "soak failed to drain");
+            net.step();
+            cycles += 1;
+            let v = net.audit_credits();
+            assert!(
+                v.is_empty(),
+                "credit violation at cycle {}: {:?}",
+                net.now(),
+                v[0]
+            );
+        }
+        assert!(cycles >= 10_000, "soak too short: {cycles} cycles");
+        let stats = net.stats();
+        assert_eq!(stats.links_down, 2);
+        // A 4x4 mesh stays connected after these two cuts: every packet
+        // is delivered or (budget-exhausted) reported dropped.
+        assert_eq!(stats.packets_unreachable, 0);
+        assert_eq!(stats.delivered_packets + stats.packets_dropped, n);
+    }
+
+    // ------------------------------------------------------------------
+    // ISSUE 7: permanent link failures + adaptive recovery
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn link_down_truncates_worm_and_redelivers_via_reroute() {
+        // Kill the 1↔2 link while a 16-flit worm 0→3 is strung across
+        // it: the worm is truncated (credits returned), NACK-retried,
+        // and the retry is delivered over the escape route.
+        let mut net = Network::new(cfg_4x4());
+        net.set_fault_model(FaultModel::new(1).with_link_down(NodeId(1), NodeId(2), 6));
+        net.schedule_packets(&[PacketSpec::new(NodeId(0), NodeId(3), 128 * 16, 0)]);
+        let stats = net.run_to_completion(10_000);
+        assert_eq!(stats.delivered_packets, 1);
+        assert_eq!(stats.links_down, 1);
+        assert_eq!(stats.packets_truncated, 1);
+        assert!(stats.packet_retries >= 1);
+        assert_eq!(stats.packets_unreachable, 0);
+        let rec = net.records[0];
+        assert!(rec.retries >= 1, "delivery must be a logged retransmission");
+        assert!(net.audit_credits().is_empty());
+    }
+
+    #[test]
+    fn link_down_before_traffic_reroutes_without_truncation() {
+        // The link dies before injection: no worm to cut — the packet
+        // simply routes around the failure (longer than the 3-hop XY
+        // path the cut removed).
+        let mut net = Network::new(cfg_4x4());
+        net.set_fault_model(FaultModel::new(1).with_link_down(NodeId(1), NodeId(2), 0));
+        net.schedule_packets(&[PacketSpec::new(NodeId(0), NodeId(3), 128 * 16, 10)]);
+        let stats = net.run_to_completion(10_000);
+        assert_eq!(stats.delivered_packets, 1);
+        assert_eq!(stats.packets_truncated, 0);
+        assert_eq!(stats.packet_retries, 0);
+        assert!(
+            stats.flit_hops > 16 * 3,
+            "escape path must be longer than the severed XY path: {} hops",
+            stats.flit_hops
+        );
+    }
+
+    #[test]
+    fn severed_destination_is_typed_unreachable() {
+        // Cut both links of corner node 0 (3x3): packets bound there
+        // are reported unreachable — and the run still drains; packets
+        // between surviving nodes still deliver.
+        let cfg = NetworkConfig {
+            mesh: Mesh::new(3, 3),
+            flit_bits: 128,
+            link_gbps: 100.0,
+            buf_depth: 4,
+        };
+        let mut net = Network::new(cfg);
+        net.set_fault_model(
+            FaultModel::new(1)
+                .with_link_down(NodeId(0), NodeId(1), 0)
+                .with_link_down(NodeId(0), NodeId(3), 0),
+        );
+        net.schedule_packets(&[
+            PacketSpec::new(NodeId(8), NodeId(0), 128 * 4, 5),
+            PacketSpec::new(NodeId(8), NodeId(4), 128 * 4, 5),
+        ]);
+        let stats = net.run_to_completion(10_000);
+        assert!(net.drained());
+        assert_eq!(stats.delivered_packets, 1);
+        assert_eq!(stats.packets_unreachable, 1);
+        assert_eq!(net.unreachable_packets().len(), 1);
+        assert_eq!(net.unreachable_packets()[0].dest, NodeId(0));
+        // Scheduling into the severed island is now a typed refusal...
+        let err = net
+            .try_schedule_packets(&[PacketSpec::new(NodeId(8), NodeId(0), 128, 100)])
+            .expect_err("severed dest must be refused");
+        assert!(
+            matches!(err, Error::Unreachable { src: 8, dest: 0 }),
+            "{err:?}"
+        );
+        // ...and so is closed-loop injection.
+        assert!(matches!(
+            net.try_inject(PacketSpec::new(NodeId(3), NodeId(0), 128, 0)),
+            Err(Error::Unreachable { .. })
+        ));
+    }
+
+    #[test]
+    fn duplex_codec_ports_compose_with_exact_accounting() {
+        // Ingress AND egress ports starved (1 lane each): both stall
+        // kinds are counted, and symbol accounting stays exact.
+        let symbols = 64 * 16u64;
+        let spec = PacketSpec::new(NodeId(0), NodeId(15), 128 * 64, 0)
+            .tagged(huff_tag(symbols, true));
+        let mut net = Network::with_egress(cfg_4x4(), EgressCodecConfig::nominal(1, 1.0));
+        net.set_ingress_config(IngressCodecConfig::nominal(1, 1.0));
+        let stats = net.run_to_completion_after(&[spec]);
+        assert_eq!(stats.delivered_packets, 1);
+        assert!(stats.encode_stall_cycles > 0);
+        assert!(stats.decode_stall_cycles > 0);
+        assert_eq!(stats.delivered_symbols, symbols);
+        let rec = net.records[0];
+        assert_eq!(rec.encode_stall_cycles, stats.encode_stall_cycles);
+        assert_eq!(rec.decode_stall_cycles, stats.decode_stall_cycles);
     }
 }

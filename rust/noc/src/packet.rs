@@ -127,6 +127,13 @@ pub struct PacketRecord {
     /// egress decoder (startup + drain backpressure). 0 for untagged
     /// packets and codec-blind networks.
     pub decode_stall_cycles: u64,
+    /// Injection cycles this packet spent blocked behind its ingress
+    /// encoder (ISSUE 7: compressor startup + encode-rate
+    /// backpressure). 0 for untagged packets and networks without
+    /// ingress codec ports. These cycles land in `queueing_delay` (the
+    /// head hasn't entered the network yet) or inside `latency` for
+    /// mid-packet stalls.
+    pub encode_stall_cycles: u64,
     /// Retransmissions this packet needed before its CRC-clean delivery
     /// (ISSUE 6). Each retry's backoff + repeat trip is inside
     /// `eject_cycle − inject_cycle`, so latency never hides recovery.
@@ -184,6 +191,7 @@ mod tests {
             eject_cycle: 20,
             flits: 1,
             decode_stall_cycles: 0,
+            encode_stall_cycles: 0,
             retries: 0,
         };
         assert_eq!(rec.latency(), 6);

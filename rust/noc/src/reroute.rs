@@ -1,0 +1,333 @@
+//! Deadlock-safe escape routing around permanent link failures (ISSUE 7).
+//!
+//! Healthy meshes route dimension-ordered (XY): X moves then Y moves,
+//! never returning to X — the classic two-phase discipline whose channel
+//! dependency graph is acyclic. A dead link breaks XY (the one legal
+//! path may be severed), so the network switches **every** packet to the
+//! generalization of the same idea: **up*/down* routing** over the
+//! surviving link graph. A BFS spanning tree is rooted at the
+//! lowest-numbered node of each component; a directed link is *up* if it
+//! moves strictly rootward in `(level, id)` order, *down* otherwise. A
+//! legal path takes zero or more up links followed by zero or more down
+//! links — never down-then-up. Up-phase hops strictly decrease the rank
+//! and down-phase hops strictly increase it, so no cycle of channel
+//! waits can close: the discipline is deadlock-free on any connected
+//! subgraph, exactly like X-then-Y is on the full mesh.
+//!
+//! A flit's phase needs no per-packet state: it is implied by the port
+//! it arrived on (injected at the NI → still in the up phase; arrived
+//! over a down link → committed to the down phase). Next hops are
+//! precomputed per `(phase, node, dest)` by BFS over the phase-state
+//! graph, so the hot path stays a table lookup. Tables are rebuilt only
+//! when a link dies — never on the healthy fast path, which keeps pure
+//! XY untouched.
+
+use crate::topology::{Mesh, NodeId, Port, NUM_PORTS};
+
+/// Routing phase of an in-flight flit under up*/down* rules.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// May still take up links (or switch to down at any hop).
+    Up = 0,
+    /// Has taken a down link: down links only from here on.
+    Down = 1,
+}
+
+/// Per-node dead-output map: `down[node][port]` = that directed output
+/// is severed. Link kills are symmetric (both directions die together).
+pub type LinkState = Vec<[bool; NUM_PORTS]>;
+
+/// Precomputed up*/down* next-hop tables over the surviving links.
+#[derive(Clone, Debug)]
+pub struct EscapeRoutes {
+    mesh: Mesh,
+    n: usize,
+    /// Connected-component id per node (over live links).
+    comp: Vec<u32>,
+    /// Tree order: `level * n + id` from each component's BFS root
+    /// (lowest id). Lower rank = strictly rootward.
+    rank: Vec<u32>,
+    /// `next[(phase * n + at) * n + dest]` → output port, `None` when no
+    /// legal continuation exists from that state.
+    next: Vec<Option<Port>>,
+}
+
+impl EscapeRoutes {
+    /// Build tables for `mesh` with the given dead links.
+    pub fn compute(mesh: Mesh, down: &LinkState) -> Self {
+        let n = mesh.len();
+        debug_assert_eq!(down.len(), n);
+        let live = |u: usize, p: Port| -> Option<usize> {
+            if down[u][p as usize] {
+                return None;
+            }
+            mesh.neighbour(NodeId(u as u16), p).map(|v| v.0 as usize)
+        };
+
+        // BFS levels + components, roots at the lowest unvisited id.
+        let (mut comp, mut level) = (vec![u32::MAX; n], vec![0u32; n]);
+        let mut queue = std::collections::VecDeque::new();
+        let mut ncomp = 0u32;
+        for root in 0..n {
+            if comp[root] != u32::MAX {
+                continue;
+            }
+            comp[root] = ncomp;
+            queue.push_back(root);
+            while let Some(u) = queue.pop_front() {
+                for &p in &Port::ALL[1..] {
+                    if let Some(v) = live(u, p) {
+                        if comp[v] == u32::MAX {
+                            comp[v] = ncomp;
+                            level[v] = level[u] + 1;
+                            queue.push_back(v);
+                        }
+                    }
+                }
+            }
+            ncomp += 1;
+        }
+        let rank: Vec<u32> = (0..n).map(|u| level[u] * n as u32 + u as u32).collect();
+
+        // Per-dest backward BFS over (node, phase) states. Forward
+        // edges: up link keeps Up; down link enters/keeps Down.
+        let mut next: Vec<Option<Port>> = vec![None; 2 * n * n];
+        let mut dist = vec![u32::MAX; 2 * n];
+        for dest in 0..n {
+            dist.fill(u32::MAX);
+            dist[dest] = 0; // (dest, Up)
+            dist[n + dest] = 0; // (dest, Down)
+            queue.push_back(dest);
+            queue.push_back(n + dest);
+            while let Some(s) = queue.pop_front() {
+                let (v, down_phase) = (s % n, s >= n);
+                // Predecessor u sends to v over u's output p_out; from
+                // v's side the link is v's port q (symmetric liveness).
+                for &q in &Port::ALL[1..] {
+                    if let Some(u) = live(v, q) {
+                        let is_up = rank[v] < rank[u]; // u→v moves rootward
+                        let preds: &[usize] = if is_up {
+                            if down_phase {
+                                continue; // an up link only reaches Up states
+                            }
+                            &[0] // only (u, Up) may take an up link
+                        } else {
+                            if !down_phase {
+                                continue; // a down link always lands in Down
+                            }
+                            &[0, 1] // both phases may take a down link
+                        };
+                        for &ph in preds {
+                            let ps = ph * n + u;
+                            if dist[ps] == u32::MAX {
+                                dist[ps] = dist[s] + 1;
+                                queue.push_back(ps);
+                            }
+                        }
+                    }
+                }
+            }
+            // Greedy next hop per (node, phase): the live legal port
+            // whose target state is closest to dest (first port wins
+            // ties — deterministic).
+            for at in 0..n {
+                for ph in 0..2usize {
+                    let idx = (ph * n + at) * n + dest;
+                    if at == dest {
+                        next[idx] = Some(Port::Local);
+                        continue;
+                    }
+                    if dist[ph * n + at] == u32::MAX {
+                        continue;
+                    }
+                    let want = dist[ph * n + at] - 1;
+                    next[idx] = Port::ALL[1..].iter().copied().find(|&p| {
+                        live(at, p).is_some_and(|v| {
+                            let is_up = rank[v] < rank[at];
+                            if is_up && ph == 1 {
+                                return false;
+                            }
+                            let tgt = if is_up { v } else { n + v };
+                            dist[tgt] == want
+                        })
+                    });
+                    debug_assert!(next[idx].is_some(), "finite dist must yield a hop");
+                }
+            }
+        }
+        EscapeRoutes {
+            mesh,
+            n,
+            comp,
+            rank,
+            next,
+        }
+    }
+
+    /// Are `a` and `b` in the same live component?
+    pub fn reachable(&self, a: NodeId, b: NodeId) -> bool {
+        self.comp[a.0 as usize] == self.comp[b.0 as usize]
+    }
+
+    /// Phase implied by the input port a flit occupies at `at`: NI
+    /// injection is still up-phase; arrival over a down link commits to
+    /// the down phase.
+    pub fn phase_of(&self, at: NodeId, inp: usize) -> Phase {
+        if inp == Port::Local as usize {
+            return Phase::Up;
+        }
+        let from = self
+            .mesh
+            .neighbour(at, Port::ALL[inp])
+            .expect("buffered flit arrived over a real link");
+        if self.rank[at.0 as usize] < self.rank[from.0 as usize] {
+            Phase::Up // the hop here moved rootward
+        } else {
+            Phase::Down
+        }
+    }
+
+    /// Table next hop for a flit sitting in input `inp` of `at` bound
+    /// for `dest`; `None` when no legal continuation exists (severed
+    /// component or a down-phase flit stranded below its turn point —
+    /// the network truncates and retries such packets from the source).
+    pub fn next_hop(&self, at: NodeId, inp: usize, dest: NodeId) -> Option<Port> {
+        let ph = self.phase_of(at, inp) as usize;
+        self.next[(ph * self.n + at.0 as usize) * self.n + dest.0 as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn no_down(mesh: Mesh) -> LinkState {
+        vec![[false; NUM_PORTS]; mesh.len()]
+    }
+
+    fn cut(down: &mut LinkState, mesh: Mesh, a: NodeId, b: NodeId) {
+        for &p in &Port::ALL[1..] {
+            if mesh.neighbour(a, p) == Some(b) {
+                down[a.0 as usize][p as usize] = true;
+                down[b.0 as usize][p.opposite() as usize] = true;
+                return;
+            }
+        }
+        panic!("not adjacent");
+    }
+
+    /// Walk the tables from src to dest like the router would (phase
+    /// from the arrival port), asserting legality; returns hop count.
+    fn walk(r: &EscapeRoutes, mesh: Mesh, down: &LinkState, src: NodeId, dest: NodeId) -> u32 {
+        let (mut at, mut inp, mut hops) = (src, Port::Local as usize, 0u32);
+        let mut gone_down = false;
+        loop {
+            let p = r.next_hop(at, inp, dest).expect("route exists");
+            if p == Port::Local {
+                assert_eq!(at, dest);
+                return hops;
+            }
+            assert!(!down[at.0 as usize][p as usize], "routed over a dead link");
+            let nxt = mesh.neighbour(at, p).unwrap();
+            // Phase discipline: once a hop increases rank (down), no
+            // later hop may decrease it (up) — the deadlock-freedom
+            // invariant.
+            if r.rank[nxt.0 as usize] > r.rank[at.0 as usize] {
+                gone_down = true;
+            } else {
+                assert!(!gone_down, "down-then-up violates up*/down*");
+            }
+            inp = p.opposite() as usize;
+            at = nxt;
+            hops += 1;
+            assert!(hops <= 4 * mesh.len() as u32, "routing loop");
+        }
+    }
+
+    #[test]
+    fn healthy_mesh_routes_every_pair_monotonically() {
+        let mesh = Mesh::new(4, 4);
+        let down = no_down(mesh);
+        let r = EscapeRoutes::compute(mesh, &down);
+        for a in 0..16u16 {
+            for b in 0..16u16 {
+                assert!(r.reachable(NodeId(a), NodeId(b)));
+                let h = walk(&r, mesh, &down, NodeId(a), NodeId(b));
+                assert!(h >= mesh.hops(NodeId(a), NodeId(b)));
+            }
+        }
+    }
+
+    #[test]
+    fn cut_link_is_avoided_and_all_pairs_still_route() {
+        let mesh = Mesh::new(4, 4);
+        let mut down = no_down(mesh);
+        cut(&mut down, mesh, NodeId(5), NodeId(6));
+        cut(&mut down, mesh, NodeId(9), NodeId(10));
+        let r = EscapeRoutes::compute(mesh, &down);
+        for a in 0..16u16 {
+            for b in 0..16u16 {
+                assert!(r.reachable(NodeId(a), NodeId(b)));
+                walk(&r, mesh, &down, NodeId(a), NodeId(b));
+            }
+        }
+    }
+
+    #[test]
+    fn isolated_node_reports_unreachable() {
+        // Corner node 0 of a 3x3 has exactly two links; cut both.
+        let mesh = Mesh::new(3, 3);
+        let mut down = no_down(mesh);
+        cut(&mut down, mesh, NodeId(0), NodeId(1));
+        cut(&mut down, mesh, NodeId(0), NodeId(3));
+        let r = EscapeRoutes::compute(mesh, &down);
+        for b in 1..9u16 {
+            assert!(!r.reachable(NodeId(0), NodeId(b)));
+            assert_eq!(r.next_hop(NodeId(0), Port::Local as usize, NodeId(b)), None);
+        }
+        // The surviving 8-node component still fully routes.
+        for a in 1..9u16 {
+            for b in 1..9u16 {
+                assert!(r.reachable(NodeId(a), NodeId(b)));
+                walk(&r, mesh, &down, NodeId(a), NodeId(b));
+            }
+        }
+    }
+
+    #[test]
+    fn down_phase_flit_can_be_stranded() {
+        // A flit that already committed to the down phase may have no
+        // legal continuation toward a dest that needs an up hop — the
+        // caller must truncate-and-retry it. From the up phase the same
+        // (node, dest) pair routes fine.
+        let mesh = Mesh::new(3, 3);
+        let r = EscapeRoutes::compute(mesh, &no_down(mesh));
+        let mut stranded = 0;
+        for at in 0..9u16 {
+            for inp in 1..NUM_PORTS {
+                if mesh.neighbour(NodeId(at), Port::ALL[inp]).is_none() {
+                    continue;
+                }
+                for dest in 0..9u16 {
+                    if r.next_hop(NodeId(at), inp, NodeId(dest)).is_none() {
+                        assert_eq!(r.phase_of(NodeId(at), inp), Phase::Down);
+                        stranded += 1;
+                    }
+                }
+            }
+        }
+        assert!(stranded > 0, "expected some stranded down-phase states");
+    }
+
+    #[test]
+    fn phase_from_arrival_port() {
+        let mesh = Mesh::new(3, 3);
+        let r = EscapeRoutes::compute(mesh, &no_down(mesh));
+        // Node 4 (center): arriving from node 1 (its North port) moved
+        // away from root 0 → Down; NI injection is Up.
+        assert_eq!(r.phase_of(NodeId(4), Port::Local as usize), Phase::Up);
+        assert_eq!(r.phase_of(NodeId(4), Port::North as usize), Phase::Down);
+        // Node 1 arriving from 4 (via its South port) moved rootward → Up.
+        assert_eq!(r.phase_of(NodeId(1), Port::South as usize), Phase::Up);
+    }
+}

@@ -25,6 +25,9 @@ pub struct InputBuffer {
 pub struct OutputState {
     /// Input currently holding the wormhole lock.
     pub locked_to: Option<usize>,
+    /// Packet whose wormhole holds the lock (ISSUE 7: identifies the
+    /// severed worm when a permanent link failure cuts this output).
+    pub locked_packet: Option<u64>,
     /// Credits = free slots in the downstream input buffer.
     pub credits: u32,
     /// Round-robin pointer for fairness.
@@ -48,6 +51,7 @@ impl Router {
             inputs: Default::default(),
             outputs: std::array::from_fn(|_| OutputState {
                 locked_to: None,
+                locked_packet: None,
                 credits: buf_depth,
                 rr: 0,
                 forwarded: 0,
@@ -57,18 +61,21 @@ impl Router {
 
     /// Compute every output's grant in one pass (§Perf): each input's
     /// head-of-line flit is routed exactly once, then outputs consult the
-    /// request vector under wormhole rules.
+    /// request vector under wormhole rules. The route function also sees
+    /// the input port index (ISSUE 7): escape routing after a permanent
+    /// link failure derives the up*/down* phase from where a flit came
+    /// in, with no per-packet routing state.
     pub fn arbitrate_all(
         &self,
         now: u64,
-        route: impl Fn(&Flit) -> Port,
+        route: impl Fn(usize, &Flit) -> Port,
     ) -> [Option<usize>; NUM_PORTS] {
         // requests[inp] = (output the HoL flit wants, is_head).
         let mut requests: [Option<(Port, bool)>; NUM_PORTS] = [None; NUM_PORTS];
         for (inp, buf) in self.inputs.iter().enumerate() {
             if let Some(hol) = buf.fifo.front() {
                 if hol.ready_at <= now {
-                    requests[inp] = Some((route(hol), hol.is_head()));
+                    requests[inp] = Some((route(inp, hol), hol.is_head()));
                 }
             }
         }
@@ -96,7 +103,7 @@ impl Router {
         &self,
         out: Port,
         now: u64,
-        route: impl Fn(&Flit) -> Port,
+        route: impl Fn(usize, &Flit) -> Port,
     ) -> Option<usize> {
         self.arbitrate_all(now, route)[out as usize]
     }
@@ -124,21 +131,21 @@ mod tests {
     fn lock_holds_until_tail() {
         let mut r = Router::new(4);
         r.inputs[1].fifo.push_back(flit(FlitKind::Head, 0));
-        let pick = r.arbitrate(Port::East, 0, |_| Port::East);
+        let pick = r.arbitrate(Port::East, 0, |_, _| Port::East);
         assert_eq!(pick, Some(1));
         // Lock to input 1; a competing head on input 2 must not win.
         r.outputs[Port::East as usize].locked_to = Some(1);
         r.inputs[2].fifo.push_back(flit(FlitKind::Head, 0));
         r.inputs[1].fifo.clear();
         r.inputs[1].fifo.push_back(flit(FlitKind::Body, 0));
-        assert_eq!(r.arbitrate(Port::East, 0, |_| Port::East), Some(1));
+        assert_eq!(r.arbitrate(Port::East, 0, |_, _| Port::East), Some(1));
     }
 
     #[test]
     fn body_without_lock_cannot_start() {
         let mut r = Router::new(4);
         r.inputs[0].fifo.push_back(flit(FlitKind::Body, 0));
-        assert_eq!(r.arbitrate(Port::East, 0, |_| Port::East), None);
+        assert_eq!(r.arbitrate(Port::East, 0, |_, _| Port::East), None);
     }
 
     #[test]
@@ -149,8 +156,8 @@ mod tests {
         let mut r = Router::new(4);
         r.inputs[2].fifo.push_back(flit(FlitKind::Head, 0));
         r.outputs[Port::Local as usize].rr = 1;
-        let g1 = r.arbitrate_all(0, |_| Port::Local);
-        let g2 = r.arbitrate_all(0, |_| Port::Local);
+        let g1 = r.arbitrate_all(0, |_, _| Port::Local);
+        let g2 = r.arbitrate_all(0, |_, _| Port::Local);
         assert_eq!(g1[Port::Local as usize], Some(2));
         assert_eq!(g1, g2);
         assert_eq!(r.outputs[Port::Local as usize].locked_to, None);
@@ -159,7 +166,7 @@ mod tests {
         r.outputs[Port::Local as usize].locked_to = Some(2);
         r.inputs[2].fifo.clear();
         r.inputs[2].fifo.push_back(flit(FlitKind::Body, 0));
-        let g3 = r.arbitrate_all(0, |_| Port::Local);
+        let g3 = r.arbitrate_all(0, |_, _| Port::Local);
         assert_eq!(g3[Port::Local as usize], Some(2));
         assert_eq!(r.outputs[Port::Local as usize].locked_to, Some(2));
     }
@@ -168,7 +175,7 @@ mod tests {
     fn not_ready_flit_waits() {
         let mut r = Router::new(4);
         r.inputs[0].fifo.push_back(flit(FlitKind::Head, 5));
-        assert_eq!(r.arbitrate(Port::East, 0, |_| Port::East), None);
-        assert_eq!(r.arbitrate(Port::East, 5, |_| Port::East), Some(0));
+        assert_eq!(r.arbitrate(Port::East, 0, |_, _| Port::East), None);
+        assert_eq!(r.arbitrate(Port::East, 5, |_, _| Port::East), Some(0));
     }
 }

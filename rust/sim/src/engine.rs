@@ -82,6 +82,16 @@ pub struct Engine {
     /// the default operating point matches the paper's claim that decode
     /// never throttles the link.
     pub decoder_lanes: usize,
+    /// Parallel encode-LUT lanes at each sender (ISSUE 7 — the ingress
+    /// twin of `decoder_lanes`). Encoding streams *into* the wire the
+    /// way decode streams behind it, so a transfer pays only the excess
+    /// of the encode makespan over the wire time. Sixteen single-cycle
+    /// lanes (1/16 ns per symbol at 1 GHz) stay strictly under the wire
+    /// time at any wire ratio < 2.56 — and exponent-only coding of
+    /// 16-bit values caps the whole-transfer ratio below 2 — so the
+    /// default operating point charges zero encode excess and the
+    /// paper-point numbers are bit-identical to the pre-ingress engine.
+    pub encoder_lanes: usize,
     /// Codec clock, GHz (Fig 6 latencies assume 1 cycle ≈ 1 ns).
     pub codec_ghz: f64,
     /// Which codec each traffic class travels under when compressed
@@ -108,6 +118,7 @@ impl Engine {
             lut_fill_cycles: lexi_hw::decoder::MultiLutSpec::paper_default().fill_cycles()
                 as f64,
             decoder_lanes: 16,
+            encoder_lanes: 16,
             codec_ghz: 1.0,
             codec_policy: CodecPolicy::lexi_default(),
             degrade: DegradePolicy::paper_default(),
@@ -193,6 +204,21 @@ impl Engine {
             / self.codec_ghz
     }
 
+    /// Sender-side encode makespan for a compressed transfer of `kind`
+    /// (ISSUE 7): symbols through [`Engine::encoder_lanes`] single-cycle
+    /// encode-LUT lanes ([`lexi_hw::encoder::EncoderUnit`]) at the codec
+    /// clock. Raw never touches the encoder.
+    pub fn encode_makespan_ns(&self, t: &TransferSpec) -> f64 {
+        let codec = self.codec_policy.codec_for(t.kind);
+        if codec == CodecKind::Raw {
+            return 0.0;
+        }
+        let symbols = (t.bytes / 2).max(1);
+        let cps =
+            lexi_hw::encoder::EncoderUnit::new(self.encoder_lanes.max(1)).cycles_per_symbol();
+        symbols as f64 * cps / self.codec_ghz
+    }
+
     /// Latency of one transfer under `mode`, with the codec chosen per
     /// kind by [`Engine::codec_policy`].
     pub fn transfer_ns(&self, t: &TransferSpec, mode: CompressionMode, crs: &CrTable) -> f64 {
@@ -209,6 +235,16 @@ impl Engine {
             let decode_ns = self.decode_makespan_ns(t, crs);
             if decode_ns > wire_ns {
                 ns += decode_ns - wire_ns;
+            }
+            // Encode-side symmetry (ISSUE 7): the sender's encoder
+            // streams into the wire, so only *its* excess over the wire
+            // time is exposed too. Weights are compressed offline — no
+            // runtime encoder in the path.
+            if t.kind != TransferKind::Weights {
+                let encode_ns = self.encode_makespan_ns(t);
+                if encode_ns > wire_ns {
+                    ns += encode_ns - wire_ns;
+                }
             }
             // Runtime compression pays the codebook startup plus the
             // multi-symbol LUT fill (ISSUE 4); weights are compressed
@@ -513,6 +549,72 @@ mod tests {
             "1-lane transfer ({lexi_starved:.0} ns) shows no multi-symbol speedup \
              over the 1 cycle/symbol floor ({symbols:.0} ns)"
         );
+    }
+
+    #[test]
+    fn paper_point_encoder_is_invisible() {
+        // ISSUE 7 pin: at the default 16 encode lanes the encode
+        // makespan never exceeds the wire time (wire ratio < 2 <
+        // 2.56), so the paper-point latencies are bit-identical to an
+        // engine whose encoder is infinitely fast — the encode-side
+        // refactor must not move any pinned number.
+        let cfg = ModelConfig::qwen(ModelScale::Paper);
+        let (eng, crs) = setup(&cfg);
+        let mut free = eng.clone();
+        free.encoder_lanes = 1 << 20; // effectively zero-cost encode
+        let corpus = Corpus::wikitext2();
+        for t in traffic::decode_step(&cfg, &corpus, 0) {
+            for mode in CompressionMode::ALL {
+                assert_eq!(
+                    eng.transfer_ns(&t, mode, &crs),
+                    free.transfer_ns(&t, mode, &crs),
+                    "{:?} {mode:?}: encode excess charged at the paper point",
+                    t.kind
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn underprovisioned_encoder_throttles_compressed_transfers_only() {
+        // One encode lane (1 ns/symbol at 1 GHz) is far above the
+        // per-symbol wire time: compressed non-weight transfers become
+        // encode-bound; uncompressed transfers and offline-compressed
+        // weights never touch the runtime encoder.
+        let cfg = ModelConfig::qwen(ModelScale::Paper);
+        let (eng, crs) = setup(&cfg);
+        let mut starved = eng.clone();
+        starved.encoder_lanes = 1;
+        let corpus = Corpus::wikitext2();
+        let transfers = traffic::decode_step(&cfg, &corpus, 0);
+        let t = transfers
+            .iter()
+            .filter(|t| t.kind != TransferKind::Weights && t.bytes > 4096)
+            .max_by_key(|t| t.bytes)
+            .expect("a sizable non-weight transfer exists");
+
+        let unc_full = eng.transfer_ns(t, CompressionMode::Uncompressed, &crs);
+        let unc_starved = starved.transfer_ns(t, CompressionMode::Uncompressed, &crs);
+        assert_eq!(unc_full, unc_starved, "uncompressed path consulted the encoder");
+
+        let lexi_full = eng.transfer_ns(t, CompressionMode::Lexi, &crs);
+        let lexi_starved = starved.transfer_ns(t, CompressionMode::Lexi, &crs);
+        assert!(
+            lexi_starved > lexi_full * 2.0,
+            "1 lane ({lexi_starved:.0} ns) should be encode-bound vs 16 ({lexi_full:.0} ns)"
+        );
+        // The bound is the encode makespan itself: symbols × 1 ns.
+        let symbols = (t.bytes / 2) as f64;
+        assert!(lexi_starved >= symbols);
+
+        // Weights: compressed offline, encode-free at any lane count.
+        for w in transfers.iter().filter(|t| t.kind == TransferKind::Weights) {
+            assert_eq!(
+                eng.transfer_ns(w, CompressionMode::Lexi, &crs),
+                starved.transfer_ns(w, CompressionMode::Lexi, &crs),
+                "weights paid a runtime encode"
+            );
+        }
     }
 
     #[test]

@@ -31,7 +31,10 @@ use crate::engine::Engine;
 use lexi_core::codec::CodecKind;
 use lexi_models::traffic::{TransferKind, TransferSpec};
 use lexi_noc::traffic::{segment_transfer, segment_transfer_tagged, MAX_PACKET_BITS};
-use lexi_noc::{CodecTag, EgressCodecConfig, FaultModel, Network, NetworkConfig, NodeId, PacketSpec};
+use lexi_noc::{
+    CodecTag, EgressCodecConfig, FaultModel, IngressCodecConfig, Network, NetworkConfig, NodeId,
+    PacketSpec,
+};
 
 /// Maximum relative disagreement tolerated on uncongested
 /// single-transfer windows.
@@ -50,11 +53,21 @@ pub struct XvalReport {
     pub cycle_ns: f64,
     /// Egress decoder stall cycles observed in the cycle run.
     pub decode_stall_cycles: u64,
+    /// Ingress encoder stall cycles observed in the cycle run (ISSUE 7)
+    /// — 0 unless the replay attached ingress codec ports
+    /// ([`replay_transfer_duplex`]).
+    pub encode_stall_cycles: u64,
     /// Packet retransmissions the cycle run needed (ISSUE 6) — 0 when
     /// no fault model is attached or its rates are zero.
     pub retries: u64,
     /// Packets the cycle run abandoned after the retry budget.
     pub dropped: u64,
+    /// Wormholes severed mid-flight by a permanent link failure and
+    /// truncated for retry (ISSUE 7).
+    pub truncated: u64,
+    /// Packets whose destination was disconnected by permanent link
+    /// failures — typed loss, never a hang (ISSUE 7).
+    pub unreachable: u64,
     /// Replayed under deliberate contention: divergence is expected and
     /// reported, not bounded.
     pub congested: bool,
@@ -95,6 +108,13 @@ impl XvalReport {
             format!(" [retries {}, dropped {}]", self.retries, self.dropped)
         } else {
             String::new()
+        } + &if self.truncated > 0 || self.unreachable > 0 {
+            format!(
+                " [truncated {}, unreachable {}]",
+                self.truncated, self.unreachable
+            )
+        } else {
+            String::new()
         }
     }
 }
@@ -122,6 +142,34 @@ pub fn egress_config_for(engine: &Engine, crs: &CrTable, kind: TransferKind) -> 
         );
     }
     cfg
+}
+
+/// The ingress encoder config matching what
+/// [`Engine::encode_makespan_ns`] charges (ISSUE 7): the engine's
+/// encoder lane count at its codec clock, with the codebook-pipeline
+/// share of the runtime-Huffman startup
+/// ([`Engine::codec_startup_ns`]).
+pub fn ingress_config_for(engine: &Engine) -> IngressCodecConfig {
+    let mut cfg = IngressCodecConfig::nominal(engine.encoder_lanes, engine.codec_ghz);
+    cfg.startup_ns = engine.codec_startup_ns;
+    cfg
+}
+
+/// Matched ingress + egress configs for a **duplex** replay. The
+/// runtime-Huffman startup is split so the pair charges
+/// [`Engine::huffman_startup_ns`] exactly once per packet: the
+/// codebook-pipeline share at the encoder (head injection), the
+/// LUT-fill share at the decoder (head ejection) — the split the
+/// `lexi-noc` ingress tests pin.
+pub fn duplex_configs_for(
+    engine: &Engine,
+    crs: &CrTable,
+    kind: TransferKind,
+) -> (IngressCodecConfig, EgressCodecConfig) {
+    let icfg = ingress_config_for(engine);
+    let mut ecfg = egress_config_for(engine, crs, kind);
+    ecfg.startup_ns = (engine.huffman_startup_ns() - icfg.startup_ns).max(0.0);
+    (icfg, ecfg)
 }
 
 /// The [`CodecTag`] a transfer travels under through this engine's
@@ -216,8 +264,51 @@ pub fn replay_transfer_with_faults(
         analytic_ns,
         cycle_ns: stats.completion_cycle as f64 * ncfg.cycle_ns(),
         decode_stall_cycles: stats.decode_stall_cycles,
+        encode_stall_cycles: stats.encode_stall_cycles,
         retries: stats.packet_retries,
         dropped: stats.packets_dropped,
+        truncated: stats.packets_truncated,
+        unreachable: stats.packets_unreachable,
+        congested: false,
+    }
+}
+
+/// Replay one uncongested transfer with **both** codec ports attached
+/// (ISSUE 7): injection paced by the ingress encoder, ejection by the
+/// egress decoder, startup split across the two so it is charged once.
+/// The analytic side stays [`Engine::transfer_ns`], whose encode-side
+/// makespan coupling mirrors the same encoder model — so ingress-bound
+/// windows must cross-validate exactly like decode-bound ones do.
+pub fn replay_transfer_duplex(
+    engine: &Engine,
+    crs: &CrTable,
+    t: &TransferSpec,
+    mode: CompressionMode,
+    fault: Option<FaultModel>,
+) -> XvalReport {
+    let analytic_ns = engine.transfer_ns(t, mode, crs);
+    let ncfg = network_config_for(engine);
+    let (icfg, ecfg) = duplex_configs_for(engine, crs, t.kind);
+    let mut net = Network::with_egress(ncfg, ecfg);
+    net.set_ingress_config(icfg);
+    if let Some(f) = fault {
+        net.set_fault_model(f);
+    }
+    net.schedule_packets(&tagged_specs(engine, crs, t, mode, 0));
+    let stats = net.run_to_completion(100_000_000);
+    XvalReport {
+        mode,
+        kind: t.kind,
+        codec: engine.codec_policy.codec_for(t.kind),
+        bytes: t.bytes,
+        analytic_ns,
+        cycle_ns: stats.completion_cycle as f64 * ncfg.cycle_ns(),
+        decode_stall_cycles: stats.decode_stall_cycles,
+        encode_stall_cycles: stats.encode_stall_cycles,
+        retries: stats.packet_retries,
+        dropped: stats.packets_dropped,
+        truncated: stats.packets_truncated,
+        unreachable: stats.packets_unreachable,
         congested: false,
     }
 }
@@ -265,8 +356,11 @@ pub fn replay_hotspot(
         analytic_ns: engine.transfer_ns(t, mode, crs),
         cycle_ns: stats.completion_cycle as f64 * ncfg.cycle_ns(),
         decode_stall_cycles: stats.decode_stall_cycles,
+        encode_stall_cycles: stats.encode_stall_cycles,
         retries: stats.packet_retries,
         dropped: stats.packets_dropped,
+        truncated: stats.packets_truncated,
+        unreachable: stats.packets_unreachable,
         congested: true,
     }
 }
@@ -492,5 +586,186 @@ mod tests {
         assert_eq!(a.dropped, b.dropped);
         // Retry backoff and repeat trips can only stretch the window.
         assert!(a.cycle_ns >= clean.cycle_ns, "{} < {}", a.cycle_ns, clean.cycle_ns);
+    }
+
+    #[test]
+    fn duplex_replay_stays_in_band_and_charges_startup_once() {
+        // ISSUE 7: attaching the ingress encoder alongside the egress
+        // decoder must not break cross-validation. At the 16-lane paper
+        // point the encoder sits under line rate, and the startup split
+        // (codebook share at inject, LUT-fill share at eject) sums to
+        // the engine's single charge — so the duplex replay stays in
+        // band and lands near the egress-only replay. A double-charged
+        // startup would add ~133 cycles per packet and fail both pins.
+        let cfg = ModelConfig::jamba(ModelScale::Tiny);
+        let crs = CrTable::measure(&cfg, 42);
+        let engine = Engine::paper_default();
+        let ncfg = network_config_for(&engine);
+        let (icfg, ecfg) = duplex_configs_for(&engine, &crs, TransferKind::KvCache);
+        assert!(
+            (icfg.startup_ns + ecfg.startup_ns - engine.huffman_startup_ns()).abs() < 1e-9,
+            "startup split must sum to the engine's single charge"
+        );
+        for t in windows(&cfg) {
+            let solo = replay_transfer(&engine, &crs, &t, CompressionMode::Lexi);
+            let duplex =
+                replay_transfer_duplex(&engine, &crs, &t, CompressionMode::Lexi, None);
+            assert!(duplex.in_band(), "duplex out of band: {}", duplex.row());
+            let npkts = tagged_specs(&engine, &crs, &t, CompressionMode::Lexi, 0).len();
+            let tol = (64 * npkts.max(1)) as f64 * ncfg.cycle_ns();
+            assert!(
+                (duplex.cycle_ns - solo.cycle_ns).abs() <= tol,
+                "duplex replay drifted from egress-only by more than the \
+                 startup-relocation allowance: {} vs {} (tol {tol} ns)",
+                duplex.row(),
+                solo.row()
+            );
+        }
+    }
+
+    #[test]
+    fn inert_fault_duplex_replay_is_bit_identical() {
+        // The ISSUE 6 zero-BER pin extends to the duplex path: an inert
+        // fault model is the same simulation.
+        let cfg = ModelConfig::jamba(ModelScale::Tiny);
+        let crs = CrTable::measure(&cfg, 42);
+        let engine = Engine::paper_default();
+        let t = *windows(&cfg)
+            .iter()
+            .find(|t| t.kind == TransferKind::KvCache)
+            .expect("sizable KV-cache transfer");
+        let clean = replay_transfer_duplex(&engine, &crs, &t, CompressionMode::Lexi, None);
+        let inert = replay_transfer_duplex(
+            &engine,
+            &crs,
+            &t,
+            CompressionMode::Lexi,
+            Some(FaultModel::new(7)),
+        );
+        assert_eq!(clean.cycle_ns, inert.cycle_ns);
+        assert_eq!(clean.encode_stall_cycles, inert.encode_stall_cycles);
+        assert_eq!(clean.decode_stall_cycles, inert.decode_stall_cycles);
+        assert_eq!(inert.retries, 0);
+        assert_eq!(inert.truncated, 0);
+        assert_eq!(inert.unreachable, 0);
+    }
+
+    #[test]
+    fn ingress_bound_direction_agrees_between_models() {
+        // encoder_lanes = 1 (ISSUE 7 acceptance): both models must
+        // stretch a compressed transfer well past line rate — the
+        // ingress port visibly throttles injection in cycles, the
+        // engine via encode-makespan coupling — and the two
+        // encode-bound estimates still agree within the band.
+        let cfg = ModelConfig::jamba(ModelScale::Tiny);
+        let crs = CrTable::measure(&cfg, 42);
+        let t = *windows(&cfg)
+            .iter()
+            .find(|t| t.kind == TransferKind::KvCache)
+            .expect("sizable KV-cache transfer");
+
+        let full = Engine::paper_default();
+        let mut starved = Engine::paper_default();
+        starved.encoder_lanes = 1;
+
+        let r16 = replay_transfer_duplex(&full, &crs, &t, CompressionMode::Lexi, None);
+        let r1 = replay_transfer_duplex(&starved, &crs, &t, CompressionMode::Lexi, None);
+
+        // Same direction, both models: one lane is encode-bound.
+        assert!(
+            r1.analytic_ns > r16.analytic_ns * 1.5,
+            "analytic not encode-bound: {} vs {}",
+            r1.analytic_ns,
+            r16.analytic_ns
+        );
+        assert!(
+            r1.cycle_ns > r16.cycle_ns * 1.5,
+            "cycle sim not encode-bound: {} vs {}",
+            r1.cycle_ns,
+            r16.cycle_ns
+        );
+        // The throttle is visible in cycles, not just in the total.
+        assert!(
+            r1.encode_stall_cycles > r16.encode_stall_cycles,
+            "1-lane ingress did not stall more than 16-lane ({} vs {})",
+            r1.encode_stall_cycles,
+            r16.encode_stall_cycles
+        );
+        // And the encode-bound window still cross-validates.
+        assert!(r1.in_band(), "encode-bound replay out of band: {}", r1.row());
+        assert!(r16.in_band(), "line-rate replay out of band: {}", r16.row());
+    }
+
+    #[test]
+    fn link_down_mid_transfer_recovers_and_is_deterministic() {
+        // ISSUE 7: killing the transfer's first XY link mid-flight must
+        // truncate the severed wormhole, retry it, and deliver the whole
+        // window over the escape route — slower, deterministic, nothing
+        // dropped or hung.
+        let cfg = ModelConfig::jamba(ModelScale::Tiny);
+        let crs = CrTable::measure(&cfg, 42);
+        let engine = Engine::paper_default();
+        let t = *windows(&cfg)
+            .iter()
+            .find(|t| t.kind == TransferKind::KvCache)
+            .expect("sizable KV-cache transfer");
+        let src = engine.system.resolve(t.src, t.layer);
+        let dst = engine.system.resolve(t.dst, t.layer);
+        assert_ne!(src, dst, "KV window must cross the mesh");
+        let mesh = engine.system.mesh;
+        let hop = mesh
+            .neighbour(src, mesh.route_xy(src, dst))
+            .expect("first XY hop exists");
+
+        let clean = replay_transfer(&engine, &crs, &t, CompressionMode::Lexi);
+        let run = || {
+            replay_transfer_with_faults(
+                &engine,
+                &crs,
+                &t,
+                CompressionMode::Lexi,
+                Some(FaultModel::new(3).with_link_down(src, hop, 64)),
+            )
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.cycle_ns, b.cycle_ns, "same link-down schedule diverged");
+        assert_eq!(a.truncated, b.truncated);
+        assert_eq!(a.dropped, 0, "recovery must not exhaust the budget: {}", a.row());
+        assert_eq!(a.unreachable, 0, "mesh stays connected: {}", a.row());
+        assert!(
+            a.truncated >= 1 && a.retries >= 1,
+            "cycle-64 cut must sever an in-flight wormhole: {}",
+            a.row()
+        );
+        // The detour + retry can only stretch the window.
+        assert!(a.cycle_ns >= clean.cycle_ns, "{} < {}", a.cycle_ns, clean.cycle_ns);
+    }
+
+    #[test]
+    fn severed_destination_is_reported_unreachable_in_replay() {
+        // Cutting every link around the destination before injection:
+        // the replay terminates (never hangs) and reports every packet
+        // as typed-unreachable.
+        let cfg = ModelConfig::jamba(ModelScale::Tiny);
+        let crs = CrTable::measure(&cfg, 42);
+        let engine = Engine::paper_default();
+        let t = *windows(&cfg)
+            .iter()
+            .find(|t| t.kind == TransferKind::KvCache)
+            .expect("sizable KV-cache transfer");
+        let dst = engine.system.resolve(t.dst, t.layer);
+        let mesh = engine.system.mesh;
+        let mut fault = FaultModel::new(9);
+        for port in lexi_noc::topology::Port::ALL {
+            if let Some(nb) = mesh.neighbour(dst, port) {
+                fault = fault.with_link_down(dst, nb, 0);
+            }
+        }
+        let npkts = tagged_specs(&engine, &crs, &t, CompressionMode::Lexi, 0).len() as u64;
+        assert!(npkts > 0);
+        let r = replay_transfer_with_faults(&engine, &crs, &t, CompressionMode::Lexi, Some(fault));
+        assert_eq!(r.unreachable, npkts, "every packet typed-unreachable: {}", r.row());
+        assert_eq!(r.dropped, 0);
     }
 }

@@ -6,8 +6,9 @@
 //! lexi table2
 //! lexi hw
 //! lexi noc      [--pattern uniform|transpose|hotspot] [--mesh 6x6]
-//!               [--egress LANES] [--codec huffman|bdi|raw]
+//!               [--egress LANES] [--ingress LANES] [--codec huffman|bdi|raw]
 //!               [--ber RATE] [--drop P] [--dup P] [--fault-seed N]
+//!               [--link-down A-B[@CYCLE]] [--watchdog N]
 //! lexi dse      [--what hitrate|codebook|decoder|codec] [--model jamba]
 //! ```
 
@@ -110,8 +111,14 @@ fn print_help() {
          \x20 hw       Table 4: area/power breakdown (GF 22 nm + 16 nm scaling)\n\
          \x20 noc      --pattern uniform|transpose|hotspot — cycle-accurate NoI run\n\
          \x20          (--egress LANES --codec huffman|bdi|raw: egress codec ports;\n\
+         \x20          --ingress LANES: ingress encoder pacing with a bounded NI\n\
+         \x20          queue — saturation is counted backpressure, never growth;\n\
          \x20          --ber RATE --drop P --dup P --fault-seed N: seeded link\n\
-         \x20          faults with CRC NACK + bounded retry and degradation report)\n\
+         \x20          faults with CRC NACK + bounded retry and degradation report;\n\
+         \x20          --link-down A-B[@CYCLE]: permanent link failure — severed\n\
+         \x20          wormholes truncate + retry over escape routes, or report\n\
+         \x20          typed unreachability; --watchdog N: stall watchdog window\n\
+         \x20          in cycles — a hung run terminates with a stall report)\n\
          \x20 dse      --what hitrate|codebook|decoder|codec — design-space sweeps\n\
          \x20          (Figs 4-6; 'codec' prints the per-kind Huffman/BDI/Raw table)\n\
          \x20 energy   interconnect energy per inference (link vs codec)\n\
@@ -360,6 +367,9 @@ fn cmd_noc(flags: &Flags) -> Result<()> {
     // packets are tagged with --codec (default huffman) and drained at
     // the nominal decoder rate for that lane count.
     let egress_lanes = flags.get_usize("egress", 0)?;
+    // --ingress LANES paces injection through the encoder model with a
+    // bounded NI queue (ISSUE 7).
+    let ingress_lanes = flags.get_usize("ingress", 0)?;
     let codec = CodecKind::parse(flags.get("codec", "huffman"))
         .map_err(|e| anyhow!("--codec: {e}"))?;
     // --ber/--drop/--dup attach the seeded link fault model (ISSUE 6):
@@ -370,6 +380,37 @@ fn cmd_noc(flags: &Flags) -> Result<()> {
     let drop_p = flags.get_f64("drop", 0.0)?;
     let dup_p = flags.get_f64("dup", 0.0)?;
     let fault_seed = flags.get_usize("fault-seed", 0xFA17)? as u64;
+    // --watchdog N overrides the stall-watchdog window (ISSUE 7).
+    let watchdog = flags.get_usize("watchdog", 0)?;
+    // --link-down A-B[@CYCLE] schedules permanent link failures
+    // (ISSUE 7); comma-separated for several. Adjacency is validated
+    // here so a typo is a CLI error, not a simulator panic.
+    let link_down_s = flags.get("link-down", "");
+    let mut link_downs: Vec<(NodeId, NodeId, u64)> = Vec::new();
+    if !link_down_s.is_empty() {
+        for part in link_down_s.split(',') {
+            let (pair, at) = match part.split_once('@') {
+                Some((p, c)) => (
+                    p,
+                    c.parse::<u64>()
+                        .map_err(|e| anyhow!("--link-down '{part}': {e}"))?,
+                ),
+                None => (part, 0),
+            };
+            let (a, b) = pair
+                .split_once('-')
+                .and_then(|(a, b)| Some((a.parse::<u16>().ok()?, b.parse::<u16>().ok()?)))
+                .ok_or_else(|| anyhow!("bad --link-down '{part}' (want A-B or A-B@CYCLE)"))?;
+            let (na, nb) = (NodeId(a), NodeId(b));
+            let adjacent = lexi_noc::topology::Port::ALL
+                .iter()
+                .any(|&p| mesh.neighbour(na, p) == Some(nb));
+            if !adjacent {
+                bail!("--link-down {a}-{b}: not a link of the {mesh_s} mesh");
+            }
+            link_downs.push((na, nb, at));
+        }
+    }
 
     let mut specs = match pattern {
         "uniform" => {
@@ -380,10 +421,12 @@ fn cmd_noc(flags: &Flags) -> Result<()> {
         "hotspot" => lexi_noc::traffic::hotspot(mesh, NodeId(0), size_bits),
         other => bail!("unknown pattern '{other}'"),
     };
-    let mut net = if egress_lanes > 0 {
+    if egress_lanes > 0 || ingress_lanes > 0 {
         // ~10 wire bits per exponent symbol at the paper wire ratio
         // (coded exponent + sign/mantissa passthrough per BF16 value).
         lexi_noc::traffic::tag_packets(&mut specs, codec, 10.0, true);
+    }
+    let mut net = if egress_lanes > 0 {
         Network::with_egress(
             cfg,
             lexi_noc::EgressCodecConfig::nominal(egress_lanes, 1.0),
@@ -391,12 +434,21 @@ fn cmd_noc(flags: &Flags) -> Result<()> {
     } else {
         Network::new(cfg)
     };
-    let fault = FaultModel::new(fault_seed)
+    if ingress_lanes > 0 {
+        net.set_ingress_config(lexi_noc::IngressCodecConfig::nominal(ingress_lanes, 1.0));
+    }
+    if watchdog > 0 {
+        net.set_watchdog(watchdog as u64);
+    }
+    let mut fault = FaultModel::new(fault_seed)
         .with_ber(ber)
         .with_drop(drop_p)
         .with_dup(dup_p);
     let faults_on = fault.enabled();
-    if faults_on {
+    for &(a, b, at) in &link_downs {
+        fault = fault.with_link_down(a, b, at);
+    }
+    if faults_on || !link_downs.is_empty() {
         net.set_fault_model(fault);
     }
     let n = specs.len();
@@ -405,7 +457,15 @@ fn cmd_noc(flags: &Flags) -> Result<()> {
     // a panic.
     net.try_schedule_packets(&specs)
         .map_err(|e| anyhow!("invalid packet specs: {e}"))?;
-    let stats = net.run_to_completion(50_000_000);
+    // A stall (credit leak, dead route, zero-rate port) terminates with
+    // a typed report instead of hanging the CLI (ISSUE 7).
+    let stats = match net.try_run_to_completion(50_000_000) {
+        Ok(stats) => stats,
+        Err(report) => {
+            eprintln!("{report}");
+            bail!("simulation stalled after {} idle cycles", report.stalled_for);
+        }
+    };
     println!(
         "pattern={pattern} mesh={mesh_s}: {n} packets, {} flits, {} cycles ({})",
         stats.delivered_flits,
@@ -427,6 +487,25 @@ fn cmd_noc(flags: &Flags) -> Result<()> {
             stats.delivered_symbols,
             stats.decode_stall_cycles,
             stats.completion_cycle
+        );
+    }
+    if ingress_lanes > 0 {
+        println!(
+            "ingress ({ingress_lanes}-lane {}): {} encode stall cycles, \
+             {} injection deferrals at the bounded NI",
+            codec.name(),
+            stats.encode_stall_cycles,
+            stats.injections_refused
+        );
+    }
+    if !link_downs.is_empty() {
+        println!(
+            "link failures: {} applied — {} wormholes truncated, \
+             {} packets rerouted-or-retried, {} unreachable",
+            stats.links_down,
+            stats.packets_truncated,
+            stats.packet_retries,
+            stats.packets_unreachable
         );
     }
     if faults_on {

@@ -1444,6 +1444,137 @@ def main():
     print("[12c] retry/backoff accounting: budget=4, Σbackoff=120 cycles, "
           "delivered-or-reported-drop, latency ≥ fault-free: 200 cases OK")
 
+    # 13) ISSUE 7 — ingress codec ports, bounded-NI admission, and the
+    #     watchdog's credit-conservation audit.
+    #
+    # 13a) Ingress pacing mirrors noc/src/ingress.rs: the NI emits at
+    #      most one flit per cycle, each paced by the same ready/accept
+    #      rule as egress (§11); the compressor startup (the fixed
+    #      codebook-pipeline ns — no LUT-fill share, that half lives at
+    #      egress) lands once, on the head flit of a packet's first
+    #      attempt.
+    def ingress_replay(flits, cost_body, cost_head):
+        """Emit `flits` from an always-backlogged NI through the
+        encoder. Returns (cycle after the last emission, stall_cycles)."""
+        busy, now, stalls, emitted = 0.0, 0, 0, 0
+        while emitted < flits:
+            if busy < now + 1 - EPS:  # egress::ready (shared helper)
+                cost = cost_head if emitted == 0 else cost_body
+                busy = max(busy, float(now)) + cost  # egress::accept
+                emitted += 1
+            else:
+                stalls += 1
+            now += 1
+        return now, stalls
+
+    for trial in range(400):
+        flits = rng.randrange(1, 2000)
+        syms_per_flit = rng.uniform(0.0, 40.0)
+        lanes = rng.choice((1, 2, 4, 8, 10, 16))
+        ghz = rng.choice((0.5, 1.0, 2.0))
+        cycle_ns = rng.choice((0.64, 1.28, 2.56))
+        startup_ns = rng.choice((0.0, 170.0))
+        # EncoderUnit::cycles_per_symbol = 1/lanes (single-cycle lanes).
+        cost = syms_per_flit * (1.0 / lanes) / ghz / cycle_ns
+        startup_cycles = startup_ns / cycle_ns
+        done, stalls = ingress_replay(flits, cost, cost + startup_cycles)
+
+        if cost <= 1.0 and startup_ns == 0.0:
+            # Line rate: the encoder never throttles injection — the
+            # 16-lane paper point. Zero stalls, 1 flit/cycle.
+            assert stalls == 0, f"line-rate ingress stalled ({cost})"
+            assert done == flits, (done, flits)
+        if startup_ns > 0.0 and flits > 1 and cost <= 1.0:
+            # Startup delays the followers by ~its cycles, exactly once.
+            base_done, base_stalls = ingress_replay(flits, cost, cost)
+            assert base_stalls == 0 and base_done == flits
+            delta = done - base_done
+            assert abs(delta - startup_cycles) <= 2, (delta, startup_cycles)
+        if cost > 1.0 + EPS:
+            # Encode-bound: emission tracks the encode makespan with
+            # fractional pacing; the throttle becomes a visible refused
+            # cycle once the accumulated excess tops a whole cycle.
+            if (cost - 1.0) * (flits - 1) > 1.5:
+                assert stalls > 0, f"encode-bound ingress never stalled ({cost})"
+            if flits >= 2:
+                enc_last = (cost + startup_cycles) + (flits - 2) * cost
+                assert enc_last - 1 <= done <= enc_last + cost + 2, (
+                    done,
+                    enc_last,
+                    cost,
+                )
+        # Injection never beats the link (1 flit/cycle NI cap).
+        assert done >= flits
+    print("[13a] ingress codec port: ready/accept pacing — line-rate free, "
+          "startup once on the head, encode-bound == makespan: 400 cases OK")
+
+    # 13b) Bounded-NI admission (network.rs step phase 1): the queue
+    #      depth never exceeds max_queue, a due spec finding it full is
+    #      a counted deferral (never a drop, never unbounded growth),
+    #      and saturation occurs iff the offered burst tops the bound.
+    def ni_admit(num_packets, flits_each, max_queue):
+        """All packets due at cycle 0, drained at 1 flit/cycle.
+        Returns (refusals, max_depth, delivered)."""
+        pending, queue = num_packets, []
+        refusals = max_depth = delivered = 0
+        for _ in range(200000):
+            if pending == 0 and not queue:
+                return refusals, max_depth, delivered
+            for _ in range(pending):
+                if len(queue) < max_queue:
+                    queue.append(flits_each)
+                    pending -= 1
+                else:
+                    refusals += 1
+            max_depth = max(max_depth, len(queue))
+            if queue:
+                queue[0] -= 1
+                if queue[0] == 0:
+                    queue.pop(0)
+                    delivered += 1
+        raise AssertionError("bounded NI failed to drain")
+
+    for trial in range(150):
+        k = rng.randrange(1, 40)
+        f = rng.randrange(1, 20)
+        q = rng.randrange(1, 12)
+        refusals, max_depth, delivered = ni_admit(k, f, q)
+        assert delivered == k, "deferral lost a packet"
+        assert max_depth <= q, f"NI depth {max_depth} broke the bound {q}"
+        assert (refusals > 0) == (k > q), (refusals, k, q)
+    print("[13b] bounded-NI admission: depth <= max_queue, deferrals counted, "
+          "saturation iff burst > bound, nothing lost: 150 cases OK")
+
+    # 13c) Credit-conservation audit (network.rs::audit_credits): per
+    #      directed link, upstream credits + downstream buffered flits
+    #      == buf_depth — invariant under traversals, drains with
+    #      credit return, and mid-worm truncation (every discarded flit
+    #      returns its credit, which is why a dead link audits clean);
+    #      any single-sided mutation is exactly what the audit flags.
+    for trial in range(200):
+        depth = rng.randrange(1, 8)
+        credits, fifo = depth, 0
+        for op in range(200):
+            r = rng.random()
+            if r < 0.4 and credits > 0:
+                credits -= 1
+                fifo += 1  # flit crosses the link
+            elif r < 0.7 and fifo > 0:
+                fifo -= 1
+                credits += 1  # drain + credit return
+            elif fifo > 0:
+                cut = rng.randrange(1, fifo + 1)  # truncation returns
+                fifo -= cut
+                credits += cut  # one credit per discarded flit
+            assert credits + fifo == depth, "credit conservation broken"
+            assert 0 <= credits <= depth and 0 <= fifo <= depth
+        # A leak on either side is precisely what the audit formula
+        # catches — no false negatives at distance 1.
+        assert (credits - 1) + fifo != depth
+        assert credits + (fifo + 1) != depth
+    print("[13c] credit-conservation audit: credits + buffered == depth under "
+          "traversal/drain/truncation; unit leaks always flagged: 200 cases OK")
+
     print("\nALL LOGIC CHECKS PASSED")
 
 

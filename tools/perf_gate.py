@@ -18,6 +18,10 @@ ISSUE 5) land against an older baseline without a baseline edit, and
 removed benches don't block CI. A new row starts gating on the first run
 after its JSON is committed as the baseline.
 
+Beyond the row diff, known top-level overhead ratios are checked
+against absolute ceilings (`SCALAR_BOUNDS`); the gated ones — the
+ISSUE 7 watchdog overhead — fail the run even without a baseline.
+
 Set LEXI_SKIP_PERF_GATE=1 (e.g. in toolchain-less or noisy-neighbour
 containers) to skip.
 """
@@ -26,16 +30,50 @@ import argparse
 import json
 import sys
 
+# Absolute ceilings on top-level overhead ratios a bench JSON may
+# report. Unlike the row-vs-baseline diff these are unconditional:
+# (bound, gated). Gated bounds fail the run; ungated ones are targets
+# printed for the record (bench-noise-prone in shared containers).
+# `watchdog_overhead` is gated (ISSUE 7): the zero-progress watchdog's
+# per-cycle check is O(1) counters and must stay within 1.05x of
+# watchdog-default stepping.
+SCALAR_BOUNDS = {
+    "watchdog_overhead": (1.05, True),
+    "fault_off_overhead": (1.05, False),
+    "ingress_slowdown_uniform": (1.30, False),
+    "egress_slowdown_uniform": (1.30, False),
+    "egress_slowdown_hotspot": (1.30, False),
+    "xval_worst_err": (0.15, False),
+}
 
-def load_rows(path):
+
+def load_data(path):
     with open(path) as f:
-        data = json.load(f)
+        return json.load(f)
+
+
+def rows_of(data):
     rows = data.get("rows", {})
     return {
         name: row["m_per_s"]
         for name, row in rows.items()
         if isinstance(row, dict) and row.get("m_per_s", 0) > 0
     }
+
+
+def check_scalar_bounds(data):
+    """Return gated violations; print every bounded field present."""
+    violations = []
+    for name, (bound, gated) in sorted(SCALAR_BOUNDS.items()):
+        val = data.get(name)
+        if not isinstance(val, (int, float)):
+            continue
+        ok = val <= bound
+        marker = "" if ok else ("  << EXCEEDS BOUND" if gated else "  (above target)")
+        print(f"  {name:24s} {val:10.3f} (bound {bound}){marker}")
+        if gated and not ok:
+            violations.append((name, val, bound))
+    return violations
 
 
 def main():
@@ -51,7 +89,8 @@ def main():
     args = ap.parse_args()
 
     try:
-        fresh = load_rows(args.fresh)
+        fresh_data = load_data(args.fresh)
+        fresh = rows_of(fresh_data)
     except (OSError, json.JSONDecodeError) as e:
         # ci.sh deletes the stale file before the bench run, so an
         # unreadable fresh file means the bench failed to produce one —
@@ -59,13 +98,23 @@ def main():
         # stand in for a fresh run).
         print(f"perf_gate: FAIL (fresh bench output unreadable: {e})")
         return 1
+
+    # Absolute overhead bounds don't need a baseline — check them first.
+    bound_violations = check_scalar_bounds(fresh_data)
+
     try:
-        base = load_rows(args.baseline)
+        base = rows_of(load_data(args.baseline))
     except (OSError, json.JSONDecodeError) as e:
+        if bound_violations:
+            print(f"perf_gate: FAIL — scalar bound(s) exceeded: {bound_violations}")
+            return 1
         print(f"perf_gate: SKIP (unreadable baseline: {e})")
         return 0
 
     if not base:
+        if bound_violations:
+            print(f"perf_gate: FAIL — scalar bound(s) exceeded: {bound_violations}")
+            return 1
         print("perf_gate: SKIP (baseline has no throughput rows)")
         return 0
 
@@ -87,12 +136,15 @@ def main():
     for name in sorted(set(base) - set(fresh)):
         print(f"  {name:24s} (baseline row absent from fresh run)")
 
-    if regressions:
-        worst = max(regressions, key=lambda r: r[1])
-        print(
-            f"perf_gate: FAIL — {len(regressions)} row(s) dropped >"
-            f"{args.threshold:.0%} (worst: {worst[0]} {worst[1]:.1%})"
-        )
+    if regressions or bound_violations:
+        if regressions:
+            worst = max(regressions, key=lambda r: r[1])
+            print(
+                f"perf_gate: FAIL — {len(regressions)} row(s) dropped >"
+                f"{args.threshold:.0%} (worst: {worst[0]} {worst[1]:.1%})"
+            )
+        if bound_violations:
+            print(f"perf_gate: FAIL — scalar bound(s) exceeded: {bound_violations}")
         return 1
     print("perf_gate: PASS")
     return 0
