@@ -50,6 +50,14 @@ def _roundtrip_execute(hlo_text, args):
 
 
 def test_text_roundtrip_small_function():
+    # Known environment skew (ROADMAP §Parked): some jax installs pair a
+    # jaxlib that does not expose the private `jaxlib._jax` module
+    # `_roundtrip_execute` needs — skip on those rather than fail, like
+    # the artifact tests skip when artifacts are absent.
+    pytest.importorskip(
+        "jaxlib._jax", reason="jax/jaxlib skew: jaxlib._jax unavailable"
+    )
+
     def fn(x):
         w = jnp.arange(16.0, dtype=jnp.float32).reshape(4, 4)
         return (x @ w + 1.0,)

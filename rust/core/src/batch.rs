@@ -37,6 +37,8 @@ use crate::error::{Error, Result};
 use crate::huffman::{CanonicalDecoder, CodeBook, ESC_SYMBOL};
 use crate::integrity::crc16;
 use crate::lut::{self, MultiDecodeTable};
+use crate::pool;
+use crate::swar;
 
 /// Maximum supported lane count (8 matches the paper's decoder sweep;
 /// headroom beyond it costs nothing in the format). Must stay ≤ 127 so
@@ -265,7 +267,12 @@ impl LaneCodec {
     }
 
     /// Shared encode core: round-robin split, per-lane batch encode, then
-    /// header + optional book table + payload serialization.
+    /// header + optional book table + payload serialization. The per-lane
+    /// payload unit is [`lane_payload`], shared with [`encode_par`] so
+    /// the sequential and sharded paths stay byte-identical by
+    /// construction.
+    ///
+    /// [`encode_par`]: LaneCodec::encode_par
     fn encode_with(
         &self,
         exps: &[u8],
@@ -283,21 +290,26 @@ impl LaneCodec {
         );
         let mut payloads: Vec<Vec<u8>> = Vec::with_capacity(n);
         let mut lane_bits: Vec<u32> = Vec::with_capacity(n);
-        let mut scratch: Vec<u8> = Vec::with_capacity(exps.len().div_ceil(n));
         for l in 0..n {
-            scratch.clear();
-            scratch.extend(exps.iter().skip(l).step_by(n));
-            let mut w = BitWriter::new();
-            w.reserve_bits(scratch.len() as u64 * 2);
-            encs[l].encode_block(&scratch, &mut w);
-            assert!(
-                w.len_bits() <= u32::MAX as usize,
-                "lane payload exceeds the u32 bit-length header"
-            );
-            lane_bits.push(w.len_bits() as u32);
-            payloads.push(w.into_bytes());
+            let (payload, bits) = lane_payload(exps, n, l, encs[l]);
+            lane_bits.push(bits);
+            payloads.push(payload);
         }
+        self.assemble(exps.len(), payloads, lane_bits, books)
+    }
 
+    /// Serialize computed lane payloads into the wire format (header +
+    /// optional book table + v3 trailer + payloads). Single-threaded and
+    /// order-fixed, so every encode path producing identical payloads
+    /// produces identical bytes.
+    fn assemble(
+        &self,
+        count: usize,
+        payloads: Vec<Vec<u8>>,
+        lane_bits: Vec<u32>,
+        books: Option<&[CodeBook]>,
+    ) -> LaneStream {
+        let n = self.lanes;
         // Serialized per-lane book headers (v2 only).
         let mut book_bits: Vec<u16> = Vec::new();
         let mut book_blobs: Vec<Vec<u8>> = Vec::new();
@@ -320,7 +332,7 @@ impl LaneCodec {
             bytes.push(LANE_CRC_ESCAPE);
         }
         bytes.push(n as u8 | if books.is_some() { LANE_BOOKS_FLAG } else { 0 });
-        bytes.extend_from_slice(&(exps.len() as u32).to_be_bytes());
+        bytes.extend_from_slice(&(count as u32).to_be_bytes());
         for &b in &lane_bits {
             bytes.extend_from_slice(&b.to_be_bytes());
         }
@@ -349,7 +361,7 @@ impl LaneCodec {
         }
         LaneStream {
             lanes: n,
-            count: exps.len(),
+            count,
             lane_bits,
             book_bits,
             books: books.map(|b| b.to_vec()).unwrap_or_default(),
@@ -424,7 +436,7 @@ impl LaneCodec {
         } else {
             LaneDecoders::for_stream(stream, book)
         };
-        Self::decode_lockstep_with(stream, &decs)
+        Self::decode_lockstep_swar(stream, &decs)
     }
 
     /// [`decode_lockstep`] pinned to scalar (one-symbol-per-visit)
@@ -508,6 +520,206 @@ impl LaneCodec {
         }
         Ok(out)
     }
+
+    /// The grouped SWAR lockstep loop (ISSUE 8 tentpole) — what
+    /// [`decode_lockstep`] actually runs. Advances up to
+    /// [`swar::GROUP`] lanes per step in three phases:
+    ///
+    /// 1. **SWAR refill gate**: one packed byte-compare over the group's
+    ///    `navail` counters ([`LaneWindows::ensure_group`]) flags every
+    ///    lane below the 40-bit cadence; only those refill.
+    /// 2. **Grouped probes**: all the group's [`MultiDecodeTable`] loads
+    ///    are issued before any result is consumed ([`swar::gather`] on
+    ///    the shared-table path — a real AVX2 `vpgatherqq` under the
+    ///    `simd` feature), so the per-lane loads pipeline instead of
+    ///    alternating with the scatter/consume.
+    /// 3. **Apply in lane order**: each active lane drains its probe
+    ///    entry (or the scalar kernel on the `count = 0` sentinel, also
+    ///    covering decoders with no table at all), identical to one
+    ///    [`decode_lockstep_with`] visit.
+    ///
+    /// Bit-identical to [`decode_lockstep_with`] over the same `decs` —
+    /// outputs *and* typed error details (property-pinned below,
+    /// mirrored in `tools/logic_check.py` §[14]): lanes are
+    /// state-independent, so batching the probes of a pass cannot change
+    /// any lane's bit consumption, and applying in lane order preserves
+    /// the reference loop's round-major error ordering. Refilling an
+    /// already-finished lane's window (phase 1 gates on `navail`, not on
+    /// `want`) only loads bytes that are never consumed.
+    ///
+    /// [`decode_lockstep`]: LaneCodec::decode_lockstep
+    /// [`decode_lockstep_with`]: LaneCodec::decode_lockstep_with
+    /// [`LaneWindows::ensure_group`]: crate::bitstream::LaneWindows::ensure_group
+    pub fn decode_lockstep_swar(stream: &LaneStream, decs: &LaneDecoders) -> Result<Vec<u8>> {
+        let views = stream.validated_lanes()?;
+        let n = stream.lanes;
+        let dec_by_lane = decs.by_lane(n);
+        // Hoisted table pointers: per-lane Option, plus the raw entry
+        // slice when one shared table serves every lane (gather path).
+        let tables: Vec<Option<&MultiDecodeTable>> =
+            dec_by_lane.iter().map(|d| d.multi_table()).collect();
+        let shared_entries: Option<&[u64]> = decs
+            .shared()
+            .and_then(|d| d.multi_table())
+            .map(|t| t.entries());
+        let mut out = vec![0u8; stream.count];
+        let spans: Vec<(usize, usize)> = views
+            .iter()
+            .map(|v| (v.range.start * 8, v.range.start * 8 + v.bits as usize))
+            .collect();
+        let mut wins = LaneWindows::new(&stream.bytes, &spans);
+        let lane_syms: Vec<usize> = views.iter().map(|v| v.symbols).collect();
+        let mut done = vec![0usize; n];
+        let mut probes = [0u64; swar::GROUP];
+        let mut idx = [0usize; swar::GROUP];
+        let mut live = true;
+        while live {
+            live = false;
+            let mut l0 = 0;
+            while l0 < n {
+                let g = (n - l0).min(swar::GROUP);
+                // Phase 1: grouped refill gate (40-bit cadence: worst
+                // codeword + escape byte ≤ 39 bits, LUT probe ≤ LUT_BITS).
+                wins.ensure_group(l0, g, 40);
+                // Phase 2: issue every probe before consuming any. A zero
+                // entry is the `count = 0` sentinel, so lanes without a
+                // table fall through to the scalar kernel in phase 3.
+                if let Some(entries) = shared_entries {
+                    for j in 0..g {
+                        idx[j] = (wins.window(l0 + j) >> (64 - lut::LUT_BITS)) as usize;
+                    }
+                    swar::gather(entries, &idx, g, &mut probes);
+                } else {
+                    for j in 0..g {
+                        probes[j] = match tables[l0 + j] {
+                            Some(t) => t.entry(wins.window(l0 + j)),
+                            None => 0,
+                        };
+                    }
+                }
+                // Phase 3: apply in lane order — one reference visit per
+                // active lane, error ordering preserved.
+                for j in 0..g {
+                    let l = l0 + j;
+                    let want = lane_syms[l] - done[l];
+                    if want == 0 {
+                        continue;
+                    }
+                    live = true;
+                    let e = probes[j];
+                    let c = MultiDecodeTable::count(e) as usize;
+                    let used = MultiDecodeTable::consumed(e);
+                    if c != 0 && c <= want && used as usize <= wins.remaining(l) {
+                        for (k, &sym) in e.to_le_bytes()[..c].iter().enumerate() {
+                            out[l + (done[l] + k) * n] = sym;
+                        }
+                        wins.consume(l, used);
+                        done[l] += c;
+                        continue;
+                    }
+                    let (sym, used) = dec_by_lane[l].decode_from_window(
+                        wins.window(l),
+                        wins.remaining(l),
+                        wins.pos(l),
+                    )?;
+                    out[l + done[l] * n] = sym;
+                    wins.consume(l, used);
+                    done[l] += 1;
+                }
+                l0 += g;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Lane-parallel decode (ISSUE 8): each lane's independent bitstream
+    /// decodes on its own shard of the [`pool`] (block decoder +
+    /// the same [`lut::amortizes_fill`] table policy as
+    /// [`decode_lockstep`]), then symbols scatter back to round-robin
+    /// order on the caller's thread. Deterministic and thread-count
+    /// invariant: shard → thread assignment is static, outputs are
+    /// recombined in lane order, and the surfaced error is the **first
+    /// failing lane in lane index order** — exactly [`decode`]'s error
+    /// (property-pinned below). This is a wall-clock path for big
+    /// streams; the simulator's cycle model keeps measuring the
+    /// single-thread paths (DESIGN.md §SIMD & sharded parallelism).
+    ///
+    /// [`decode`]: LaneCodec::decode
+    /// [`decode_lockstep`]: LaneCodec::decode_lockstep
+    /// [`pool`]: crate::pool
+    pub fn decode_par(stream: &LaneStream, book: &CodeBook, threads: usize) -> Result<Vec<u8>> {
+        let views = stream.validated_lanes()?;
+        let n = stream.lanes;
+        let fills = stream.books.len().max(1);
+        let decs = if lut::amortizes_fill(stream.count / fills) {
+            LaneDecoders::for_stream_lut(stream, book)
+        } else {
+            LaneDecoders::for_stream(stream, book)
+        };
+        let dec_by_lane = decs.by_lane(n);
+        let lane_results = pool::run_sharded(n, threads, |l| {
+            let v = &views[l];
+            let mut r =
+                BitReader::with_len(&stream.bytes[v.range.clone()], v.bits as usize);
+            let mut lane_out = vec![0u8; v.symbols];
+            dec_by_lane[l]
+                .decode_block_into(&mut r, &mut lane_out)
+                .map(|()| lane_out)
+        });
+        let mut out = vec![0u8; stream.count];
+        for (l, res) in lane_results.into_iter().enumerate() {
+            // First error in lane order — the same lane `decode` trips on.
+            let lane_out = res?;
+            for (k, &sym) in lane_out.iter().enumerate() {
+                out[l + k * n] = sym;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Lane-parallel encode (ISSUE 8): the per-lane payloads (strided
+    /// gather + pair-fused [`BatchEncoder`]) are independent, so each
+    /// builds on its own [`pool`] shard; the header/payload assembly
+    /// runs on the caller's thread. Byte-identical to [`encode`] for
+    /// every thread count (property-pinned below): shard content is a
+    /// pure function of `(exps, book, lane)`, and assembly order is
+    /// fixed. Shared-book (v1) form only — the per-lane-book encode is
+    /// dominated by book construction, not payload bits.
+    ///
+    /// [`encode`]: LaneCodec::encode
+    /// [`pool`]: crate::pool
+    pub fn encode_par(&self, exps: &[u8], book: &CodeBook, threads: usize) -> LaneStream {
+        let enc = BatchEncoder::new(book);
+        assert!(
+            exps.len() <= u32::MAX as usize,
+            "lane stream supports at most u32::MAX symbols"
+        );
+        let lanes: Vec<(Vec<u8>, u32)> =
+            pool::run_sharded(self.lanes, threads, |l| lane_payload(exps, self.lanes, l, &enc));
+        let (payloads, lane_bits) = lanes.into_iter().unzip();
+        self.assemble(exps.len(), payloads, lane_bits, None)
+    }
+}
+
+/// One lane's payload: the round-robin substream (symbol `i` → lane
+/// `i mod n`) through the pair-fused batch encoder. Pure in
+/// `(exps, n, l, enc)` — the unit both the sequential assembly loop and
+/// the [`pool`]-sharded [`LaneCodec::encode_par`] run, so the two paths
+/// cannot drift.
+///
+/// [`pool`]: crate::pool
+fn lane_payload(exps: &[u8], n: usize, l: usize, enc: &BatchEncoder) -> (Vec<u8>, u32) {
+    let mut scratch: Vec<u8> = Vec::with_capacity(exps.len().div_ceil(n));
+    scratch.extend(exps.iter().skip(l).step_by(n));
+    let mut w = BitWriter::new();
+    w.reserve_bits(scratch.len() as u64 * 2);
+    enc.encode_block(&scratch, &mut w);
+    assert!(
+        w.len_bits() <= u32::MAX as usize,
+        "lane payload exceeds the u32 bit-length header"
+    );
+    let bits = w.len_bits() as u32;
+    (w.into_bytes(), bits)
 }
 
 /// Decoder tables for a stream: one per embedded book, or a single
@@ -546,6 +758,20 @@ impl LaneDecoders {
             stream.books.iter().map(|b| b.lut_decoder()).collect()
         };
         LaneDecoders { decs }
+    }
+
+    /// The single decoder serving *every* lane, when the tables are
+    /// shared (v1 shared-book streams) — `None` with per-lane books.
+    /// The grouped lockstep loop uses this to pick its gather path: one
+    /// shared [`MultiDecodeTable`] means all of a group's probes index
+    /// the same entry slice.
+    #[inline]
+    pub fn shared(&self) -> Option<&CanonicalDecoder> {
+        if self.decs.len() == 1 {
+            Some(&self.decs[0])
+        } else {
+            None
+        }
     }
 
     /// The decoder serving lane `l`.
@@ -1505,5 +1731,195 @@ mod tests {
         // And the public roundtrip still holds.
         let blk2 = compress_exponents(&data).unwrap();
         assert_eq!(decompress_exponents(&blk2).unwrap(), data);
+    }
+
+    /// Random stream in any wire version (v1 shared-book, v2 per-lane
+    /// books, v3 checksummed), for the ISSUE 8 equivalence tests.
+    fn any_version_stream(
+        g: &mut crate::proptest::Gen,
+        data: &[u8],
+        lanes: usize,
+        book: &CodeBook,
+    ) -> LaneStream {
+        let mut codec = LaneCodec::new(lanes).unwrap();
+        if g.bool(0.3) {
+            codec = codec.with_checksums();
+        }
+        if g.bool(0.4) {
+            let books: Vec<CodeBook> = (0..lanes).map(|_| book.clone()).collect();
+            codec.encode_per_lane(data, &books).unwrap()
+        } else {
+            codec.encode(data, book)
+        }
+    }
+
+    #[test]
+    fn prop_swar_lockstep_is_bit_identical_to_reference() {
+        // ISSUE 8 tentpole pin: the grouped SWAR loop must reproduce the
+        // reference per-lane visit loop exactly — same symbols over every
+        // lane count (partial groups, multiple groups), wire version, and
+        // decoder table choice (scalar kernels and per-lane multi-LUTs).
+        check("swar lockstep == reference lockstep", 60, |g| {
+            let n = g.usize(1..2500);
+            let data = match g.usize(0..3) {
+                0 => {
+                    let a = g.usize(1..32);
+                    g.skewed_bytes(n, a)
+                }
+                1 => {
+                    let a = g.usize(33..140);
+                    g.skewed_bytes(n, a)
+                }
+                _ => g.vec(n, |g| g.u8()),
+            };
+            let book = book_of(&data);
+            for lanes in [1usize, 2, 3, 7, 8, 11, 16] {
+                let stream = any_version_stream(g, &data, lanes, &book);
+                for lut_on in [false, true] {
+                    let decs = if lut_on {
+                        LaneDecoders::for_stream_lut(&stream, &book)
+                    } else {
+                        LaneDecoders::for_stream(&stream, &book)
+                    };
+                    let reference = LaneCodec::decode_lockstep_with(&stream, &decs).unwrap();
+                    let swar = LaneCodec::decode_lockstep_swar(&stream, &decs).unwrap();
+                    assert_eq!(reference, data, "reference lanes {lanes} lut {lut_on}");
+                    assert_eq!(swar, reference, "swar diverged lanes {lanes} lut {lut_on}");
+                }
+                // And the public dispatch (which now routes through the
+                // SWAR loop) still equals the lane-at-a-time decoder.
+                assert_eq!(
+                    LaneCodec::decode_lockstep(&stream, &book).unwrap(),
+                    LaneCodec::decode(&stream, &book).unwrap(),
+                    "dispatch lanes {lanes}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn prop_swar_lockstep_errors_identically_to_reference() {
+        // Truncated and corrupted streams: the SWAR loop must surface the
+        // *identical typed error* — same variant, same offsets, same lane
+        // — as the reference loop, across versions and table choices.
+        check("swar lockstep errors == reference errors", 60, |g| {
+            let n = g.usize(8..1500);
+            let a = g.usize(1..60);
+            let data = g.skewed_bytes(n, a);
+            let book = book_of(&data);
+            let lanes = [1usize, 2, 3, 7, 8, 16][g.usize(0..6)];
+            let mut stream = any_version_stream(g, &data, lanes, &book);
+            // Mutate: shrink a lane's advertised bits, or flip payload
+            // bytes (v3 catches the flip as Corrupt in validation; v1/v2
+            // mis-decode into a typed kernel error or succeed — every
+            // outcome must simply match the reference path's).
+            if g.bool(0.5) {
+                let l = g.usize(0..lanes);
+                if stream.lane_bits[l] == 0 {
+                    return;
+                }
+                let cut = g.usize(1..stream.lane_bits[l] as usize + 1) as u32;
+                stream.lane_bits[l] -= cut;
+            } else {
+                let payload_at = stream.header_bytes();
+                if payload_at >= stream.bytes.len() {
+                    return;
+                }
+                for _ in 0..g.usize(1..4) {
+                    let i = g.usize(payload_at..stream.bytes.len());
+                    stream.bytes[i] ^= g.u8() | 1;
+                }
+            }
+            for lut_on in [false, true] {
+                let decs = if lut_on {
+                    LaneDecoders::for_stream_lut(&stream, &book)
+                } else {
+                    LaneDecoders::for_stream(&stream, &book)
+                };
+                let reference = LaneCodec::decode_lockstep_with(&stream, &decs);
+                let swar = LaneCodec::decode_lockstep_swar(&stream, &decs);
+                assert_eq!(
+                    reference, swar,
+                    "result diverged (lanes {lanes}, lut {lut_on})"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn prop_parallel_codec_is_thread_count_invariant() {
+        // ISSUE 8 determinism contract: encode_par and decode_par produce
+        // byte-identical results for every thread count, and equal the
+        // sequential paths exactly.
+        check("encode_par/decode_par T-invariant", 30, |g| {
+            let n = g.usize(1..3000);
+            let data = if g.bool(0.7) {
+                let a = g.usize(1..40);
+                g.skewed_bytes(n, a)
+            } else {
+                g.vec(n, |g| g.u8())
+            };
+            let book = book_of(&data);
+            for lanes in [1usize, 3, 8] {
+                let codec = LaneCodec::new(lanes).unwrap();
+                let sequential = codec.encode(&data, &book);
+                for t in [1usize, 2, 8] {
+                    let par = codec.encode_par(&data, &book, t);
+                    assert_eq!(
+                        par.bytes, sequential.bytes,
+                        "encode_par bytes differ (lanes {lanes}, T={t})"
+                    );
+                    assert_eq!(par, sequential, "encode_par stream differs (T={t})");
+                    assert_eq!(
+                        LaneCodec::decode_par(&sequential, &book, t).unwrap(),
+                        data,
+                        "decode_par (lanes {lanes}, T={t})"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_decode_par_error_matches_lane_at_a_time() {
+        // decode_par's surfaced error is the first failing lane in lane
+        // index order — the exact error decode() reports — for truncated
+        // lanes and corrupted payloads, at every thread count.
+        check("decode_par errors == decode errors", 40, |g| {
+            let n = g.usize(8..1200);
+            let a = g.usize(1..60);
+            let data = g.skewed_bytes(n, a);
+            let book = book_of(&data);
+            let lanes = [1usize, 2, 4, 8][g.usize(0..4)];
+            let mut stream = any_version_stream(g, &data, lanes, &book);
+            if g.bool(0.5) {
+                let l = g.usize(0..lanes);
+                if stream.lane_bits[l] == 0 {
+                    return;
+                }
+                let cut = g.usize(1..stream.lane_bits[l] as usize + 1) as u32;
+                stream.lane_bits[l] -= cut;
+            } else {
+                let payload_at = stream.header_bytes();
+                if payload_at >= stream.bytes.len() {
+                    return;
+                }
+                let i = g.usize(payload_at..stream.bytes.len());
+                stream.bytes[i] ^= g.u8() | 1;
+            }
+            let sequential = LaneCodec::decode(&stream, &book);
+            for t in [1usize, 2, 8] {
+                let par = LaneCodec::decode_par(&stream, &book, t);
+                match (&sequential, &par) {
+                    (Ok(a), Ok(b)) => assert_eq!(a, b, "outputs diverged (T={t})"),
+                    (Err(ea), Err(eb)) => {
+                        assert_eq!(ea, eb, "error details diverged (T={t})")
+                    }
+                    _ => panic!(
+                        "ok/err divergence (T={t}): sequential {sequential:?} vs par {par:?}"
+                    ),
+                }
+            }
+        });
     }
 }

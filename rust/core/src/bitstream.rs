@@ -487,6 +487,27 @@ impl<'a> LaneWindows<'a> {
         }
     }
 
+    /// Grouped [`ensure`] over lanes `l0 .. l0 + g` (ISSUE 8): one SWAR
+    /// packed compare flags every lane of the group below the cadence
+    /// threshold, then only the flagged lanes refill. Exactly the lanes
+    /// `ensure` would refill do — `navail ≤ 64` and `bits < 128` keep
+    /// the byte-wise compare exact — so per-lane state after a grouped
+    /// ensure is bit-identical to `g` scalar ensures (property-pinned
+    /// below and mirrored in `tools/logic_check.py` §[14]).
+    ///
+    /// [`ensure`]: LaneWindows::ensure
+    #[inline]
+    pub fn ensure_group(&mut self, l0: usize, g: usize, bits: u32) {
+        debug_assert!(g >= 1 && g <= crate::swar::GROUP);
+        debug_assert!(l0 + g <= self.lanes());
+        debug_assert!(bits < 128, "SWAR compare threshold must stay below 128");
+        let packed = crate::swar::pack_bytes(&self.navail[l0..l0 + g]);
+        let mask = crate::swar::bytes_below(packed, bits as u8);
+        for j in crate::swar::FlaggedLanes(mask & crate::swar::group_mask(g)) {
+            self.refill(l0 + j);
+        }
+    }
+
     /// Top lane `l`'s window up to ≥ 57 valid bits, or to end-of-buffer.
     /// Same two-path load as [`BitRefill::refill`].
     #[inline]
@@ -692,6 +713,58 @@ mod tests {
                     assert_eq!(got, want, "lane {l} at bit {}", lw.pos(l));
                     lw.consume(l, take);
                     refs[l].consume(take);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_ensure_group_is_bit_identical_to_scalar_ensures() {
+        // ISSUE 8: the SWAR grouped refill gate must leave *exactly* the
+        // state g scalar `ensure` calls leave — same windows, same
+        // navail, same byte cursors — across random spans, group sizes,
+        // thresholds, and interleaved consumption.
+        check("ensure_group == per-lane ensure", 120, |g| {
+            let nbytes = g.usize(8..200);
+            let bytes = g.vec(nbytes, |g| g.u8());
+            let lanes = g.usize(1..9);
+            let total_bits = bytes.len() * 8;
+            let mut cuts: Vec<usize> = (0..lanes - 1)
+                .map(|_| g.usize(0..total_bits + 1))
+                .collect();
+            cuts.sort_unstable();
+            cuts.insert(0, 0);
+            cuts.push(total_bits);
+            let spans: Vec<(usize, usize)> =
+                cuts.windows(2).map(|w| (w[0], w[1])).collect();
+            let mut grouped = LaneWindows::new(&bytes, &spans);
+            let mut scalar = LaneWindows::new(&bytes, &spans);
+            for _ in 0..60 {
+                let l0 = g.usize(0..lanes);
+                let gsz = g.usize(1..(lanes - l0).min(crate::swar::GROUP) + 1);
+                let bits = g.usize(1..65) as u32;
+                grouped.ensure_group(l0, gsz, bits);
+                for l in l0..l0 + gsz {
+                    scalar.ensure(l, bits);
+                }
+                for l in 0..lanes {
+                    assert_eq!(grouped.window(l), scalar.window(l), "lane {l} window");
+                    assert_eq!(grouped.navail(l), scalar.navail(l), "lane {l} navail");
+                    assert_eq!(grouped.pos(l), scalar.pos(l), "lane {l} pos");
+                    assert_eq!(
+                        grouped.remaining(l),
+                        scalar.remaining(l),
+                        "lane {l} remaining"
+                    );
+                }
+                // Interleave consumption so later ensures see mixed
+                // navail levels, the shape the lockstep loop produces.
+                let l = g.usize(0..lanes);
+                let can = grouped.remaining(l).min(grouped.navail(l) as usize);
+                if can > 0 {
+                    let take = g.usize(1..can + 1) as u32;
+                    grouped.consume(l, take);
+                    scalar.consume(l, take);
                 }
             }
         });

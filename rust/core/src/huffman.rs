@@ -28,6 +28,7 @@ use crate::batch::BatchEncoder;
 use crate::bitstream::{BitReader, BitRefill, BitWriter};
 use crate::error::{Error, Result};
 use crate::lut::{self, MultiDecodeTable};
+use crate::pool;
 use crate::stats::Histogram;
 
 /// Default alphabet cap (paper §4.2.2: "the primary pipeline is designed
@@ -888,6 +889,92 @@ pub fn decompress_bits(bytes: &[u8], bits: usize) -> Result<Vec<u8>> {
     Ok(out)
 }
 
+/// Fixed shard size of the block-parallel codec (ISSUE 8), in symbols.
+/// The partition depends only on the input length — **never on the
+/// thread count** — which is what makes [`compress_exponents_par`]
+/// byte-identical for every `T`. 64 Ki symbols is large enough that the
+/// per-block codebook header (≤ ~120 bytes) costs < 0.2% of the
+/// payload, and small enough that realistic layer outputs split into
+/// many shards.
+pub const PAR_BLOCK_SYMBOLS: usize = 1 << 16;
+
+/// A block-parallel compressed stream: [`PAR_BLOCK_SYMBOLS`]-sized
+/// shards, each a self-contained [`EncodedExponents`] (own codebook
+/// header, so shards decode independently).
+#[derive(Clone, Debug)]
+pub struct ParEncoded {
+    /// Total exponents across all blocks.
+    pub count: usize,
+    /// The per-shard blocks, in input order.
+    pub blocks: Vec<EncodedExponents>,
+}
+
+impl ParEncoded {
+    /// Compression ratio vs raw 8-bit exponents (all headers included).
+    pub fn ratio(&self) -> f64 {
+        let bits: usize = self.blocks.iter().map(|b| b.bits).sum();
+        (self.count as f64 * 8.0) / bits.max(1) as f64
+    }
+}
+
+/// Block-parallel [`compress_exponents`] (ISSUE 8): the input splits
+/// into fixed [`PAR_BLOCK_SYMBOLS`] shards, each compressed (with its
+/// own per-block codebook) on the [`pool`]. Deterministic and
+/// thread-count invariant — the shard geometry is a pure function of
+/// `exponents.len()`, and a shard's bytes are a pure function of its
+/// slice. The surfaced error is the first failing block in input order.
+///
+/// This is a wall-clock path for bulk weight/KV streams; the
+/// simulator's calibration keeps using the single-thread codec
+/// (DESIGN.md §SIMD & sharded parallelism).
+pub fn compress_exponents_par(exponents: &[u8], threads: usize) -> Result<ParEncoded> {
+    if exponents.is_empty() {
+        return Ok(ParEncoded {
+            count: 0,
+            blocks: Vec::new(),
+        });
+    }
+    let shards = exponents.len().div_ceil(PAR_BLOCK_SYMBOLS);
+    let results = pool::run_sharded(shards, threads, |s| {
+        let lo = s * PAR_BLOCK_SYMBOLS;
+        let hi = (lo + PAR_BLOCK_SYMBOLS).min(exponents.len());
+        compress_exponents(&exponents[lo..hi])
+    });
+    let mut blocks = Vec::with_capacity(results.len());
+    for r in results {
+        // First error in block (= input) order.
+        blocks.push(r?);
+    }
+    Ok(ParEncoded {
+        count: exponents.len(),
+        blocks,
+    })
+}
+
+/// Block-parallel [`decompress_exponents`] (ISSUE 8): every shard
+/// decodes independently on the [`pool`]; outputs concatenate in block
+/// order on the caller's thread. Bit-identical to decompressing each
+/// block sequentially, for every thread count; the surfaced error is
+/// the first failing block in order, and a count mismatch between the
+/// header and the decoded blocks is rejected, never padded.
+pub fn decompress_exponents_par(enc: &ParEncoded, threads: usize) -> Result<Vec<u8>> {
+    let results = pool::run_sharded(enc.blocks.len(), threads, |s| {
+        decompress_exponents(&enc.blocks[s])
+    });
+    let mut out = Vec::with_capacity(enc.count);
+    for r in results {
+        out.extend_from_slice(&r?);
+    }
+    if out.len() != enc.count {
+        return Err(Error::InvalidParameter(format!(
+            "parallel stream header claims {} symbols but blocks decode to {}",
+            enc.count,
+            out.len()
+        )));
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -895,6 +982,81 @@ mod tests {
 
     fn book_of(bytes: &[u8]) -> CodeBook {
         CodeBook::lexi_default(&Histogram::from_bytes(bytes)).unwrap()
+    }
+
+    #[test]
+    fn prop_par_roundtrip_and_thread_invariance() {
+        // ISSUE 8: parallel compress/decompress round-trips, is
+        // byte-identical across thread counts, and each block equals the
+        // sequential compress_exponents of its own slice (the shard
+        // geometry is T-independent by construction).
+        check("par codec roundtrip + T-invariance", 12, |g| {
+            let n = g.usize(1..PAR_BLOCK_SYMBOLS * 3);
+            let data = if g.bool(0.7) {
+                let a = g.usize(1..40);
+                g.skewed_bytes(n, a)
+            } else {
+                g.vec(n, |g| g.u8())
+            };
+            let base = compress_exponents_par(&data, 1).unwrap();
+            assert_eq!(base.count, data.len());
+            assert_eq!(base.blocks.len(), data.len().div_ceil(PAR_BLOCK_SYMBOLS));
+            for (s, blk) in base.blocks.iter().enumerate() {
+                let lo = s * PAR_BLOCK_SYMBOLS;
+                let hi = (lo + PAR_BLOCK_SYMBOLS).min(data.len());
+                let seq = compress_exponents(&data[lo..hi]).unwrap();
+                assert_eq!(blk.bytes, seq.bytes, "block {s} bytes");
+                assert_eq!(blk.bits, seq.bits, "block {s} bits");
+            }
+            for t in [2usize, 8] {
+                let par = compress_exponents_par(&data, t).unwrap();
+                assert_eq!(par.blocks.len(), base.blocks.len(), "T={t}");
+                for (s, (a, b)) in par.blocks.iter().zip(&base.blocks).enumerate() {
+                    assert_eq!(a.bytes, b.bytes, "T={t} block {s}");
+                }
+            }
+            for t in [1usize, 2, 8] {
+                assert_eq!(
+                    decompress_exponents_par(&base, t).unwrap(),
+                    data,
+                    "decode T={t}"
+                );
+            }
+            assert!(base.ratio() > 0.0);
+        });
+    }
+
+    #[test]
+    fn par_empty_stream_roundtrips() {
+        let enc = compress_exponents_par(&[], 8).unwrap();
+        assert_eq!(enc.count, 0);
+        assert!(enc.blocks.is_empty());
+        assert_eq!(decompress_exponents_par(&enc, 8).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn par_corrupt_block_surfaces_first_in_order() {
+        // Corrupt block 1 of 3: the surfaced error is block 1's own
+        // sequential error, at every thread count — never block 2's, and
+        // never wrong symbols.
+        let data: Vec<u8> = (0..PAR_BLOCK_SYMBOLS * 2 + 17)
+            .map(|i| 120 + (i % 5) as u8)
+            .collect();
+        let mut enc = compress_exponents_par(&data, 4).unwrap();
+        assert_eq!(enc.blocks.len(), 3);
+        enc.blocks[1].bits = enc.blocks[1].bits.saturating_sub(9);
+        let want = decompress_exponents(&enc.blocks[1]).unwrap_err();
+        for t in [1usize, 2, 8] {
+            assert_eq!(
+                decompress_exponents_par(&enc, t).unwrap_err(),
+                want,
+                "T={t}"
+            );
+        }
+        // A forged count is rejected rather than padded or truncated.
+        let mut forged = compress_exponents_par(&data, 2).unwrap();
+        forged.count += 1;
+        assert!(decompress_exponents_par(&forged, 2).is_err());
     }
 
     #[test]

@@ -31,6 +31,15 @@
 //!   ([`MultiDecodeTable`](lut::MultiDecodeTable)): one direct-table
 //!   probe emits up to 4 exponents, with sentinel fallback to the
 //!   canonical kernel so output stays bit-identical.
+//! * [`swar`] — §Perf (ISSUE 8): SWAR primitives (packed byte-compare
+//!   refill gate, grouped table gather; optional AVX2 arm behind the
+//!   off-by-default `simd` feature) for the grouped lockstep decoder.
+//! * [`pool`] — §Perf (ISSUE 8): dependency-free sharded thread pool
+//!   (scoped spawn-per-shard, no work stealing) behind
+//!   [`huffman::compress_exponents_par`] /
+//!   [`huffman::decompress_exponents_par`] and the lane-parallel
+//!   [`batch::LaneCodec`] paths; results are deterministic and
+//!   thread-count invariant.
 //!
 //! The cycle-accurate hardware realization lives in `lexi-hw`; this crate is
 //! the bit-exact oracle it is tested against.
@@ -45,10 +54,12 @@ pub mod flit;
 pub mod huffman;
 pub mod integrity;
 pub mod lut;
+pub mod pool;
 pub mod prng;
 pub mod proptest;
 pub mod rle;
 pub mod stats;
+pub mod swar;
 
 pub use bf16::Bf16;
 pub use error::{Error, Result};

@@ -169,6 +169,15 @@ impl MultiDecodeTable {
         self.entries[probe]
     }
 
+    /// The raw probe-indexed entry table (ISSUE 8): the grouped lockstep
+    /// decoder's gather path (`swar::gather`, optionally a real AVX2
+    /// `vpgatherqq`) loads several lanes' entries from it in one step.
+    /// `entries()[p] == entry_at(p)` for every probe.
+    #[inline]
+    pub fn entries(&self) -> &[u64] {
+        &self.entries
+    }
+
     /// Symbols packed in `entry` (0 = sentinel, use the fallback kernel).
     #[inline]
     pub fn count(entry: u64) -> u32 {

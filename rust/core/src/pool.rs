@@ -1,0 +1,118 @@
+//! §Perf — dependency-free sharded thread pool (ISSUE 8).
+//!
+//! The parallel codec paths (`compress_exponents_par`, lane-parallel
+//! decode, the `lexi-hw` batch model) all reduce to the same shape: `S`
+//! independent shards, each a pure function of its index, results wanted
+//! in shard order. This module runs that shape on scoped threads with
+//! **no work stealing and no shared queues** — shard `s` is statically
+//! owned by thread `⌊s·T/S⌋`'s contiguous range, so the set of shards a
+//! thread runs (and therefore every byte each shard produces) is a pure
+//! function of `(S, T)`, never of scheduling.
+//!
+//! Determinism contract (DESIGN.md §SIMD & sharded parallelism): the
+//! returned `Vec` is in shard order and byte-identical for every thread
+//! count, because shard *content* never depends on which thread ran it —
+//! parallel callers must partition their input by fixed shard geometry
+//! (e.g. `huffman::PAR_BLOCK_SYMBOLS`), not by `T`. `threads == 1` (and
+//! any single-shard call) runs inline on the caller's thread with no
+//! spawn at all.
+//!
+//! Same zero-dependency philosophy as the local `anyhow` shim: the
+//! offline crate set has no `rayon`, and the codec doesn't need one —
+//! `std::thread::scope` + `split_at_mut` is the whole machine.
+
+/// Threads worth spawning on this machine (≥ 1; falls back to 1 where
+/// the OS won't say). Benches and CLI paths use this as their default
+/// `T`; library callers always pass `T` explicitly so results are
+/// reproducible across machines.
+pub fn max_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `f(0..shards)` across up to `threads` scoped threads and return
+/// the results **in shard order**. Thread `t` owns the contiguous shard
+/// range `⌊shards·t/T⌋ .. ⌊shards·(t+1)/T⌋` — no stealing, so outputs
+/// are independent of scheduling and of `threads` itself. A panicking
+/// shard propagates the panic to the caller (scoped join).
+pub fn run_sharded<T, F>(shards: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if shards == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(shards);
+    if threads == 1 {
+        return (0..shards).map(f).collect();
+    }
+    let mut slots: Vec<Option<T>> = (0..shards).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut rest = &mut slots[..];
+        let mut lo = 0usize;
+        for t in 0..threads {
+            let hi = shards * (t + 1) / threads;
+            let (chunk, tail) = rest.split_at_mut(hi - lo);
+            rest = tail;
+            let base = lo;
+            scope.spawn(move || {
+                for (i, slot) in chunk.iter_mut().enumerate() {
+                    *slot = Some(f(base + i));
+                }
+            });
+            lo = hi;
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.expect("every shard range was spawned"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::check;
+
+    #[test]
+    fn results_are_in_shard_order() {
+        for threads in [1usize, 2, 3, 8, 64] {
+            let got = run_sharded(13, threads, |s| s * s);
+            let want: Vec<usize> = (0..13).map(|s| s * s).collect();
+            assert_eq!(got, want, "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn zero_and_one_shard_edges() {
+        assert!(run_sharded(0, 8, |s| s).is_empty());
+        assert_eq!(run_sharded(1, 8, |s| s + 41), vec![41]);
+    }
+
+    #[test]
+    fn prop_thread_count_invariance() {
+        // The determinism contract: identical results for every T,
+        // including T > shards and T = 1 (inline path).
+        check("run_sharded is T-invariant", 50, |g| {
+            let shards = g.usize(1..40);
+            let salt = g.u64(0..1 << 40);
+            let run = |t: usize| {
+                run_sharded(shards, t, |s| {
+                    (s as u64).wrapping_mul(0x9e37_79b9).wrapping_add(salt)
+                })
+            };
+            let base = run(1);
+            for t in [2usize, 3, 8, 64] {
+                assert_eq!(run(t), base, "threads {t}");
+            }
+        });
+    }
+
+    #[test]
+    fn max_threads_is_positive() {
+        assert!(max_threads() >= 1);
+    }
+}

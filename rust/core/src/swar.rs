@@ -1,0 +1,232 @@
+//! §Perf — SWAR primitives for the grouped lockstep decoder (ISSUE 8).
+//!
+//! The lockstep lane loop in [`batch`] keeps one small counter per lane
+//! (`navail`, the valid-bit count of the lane's refill window, always
+//! ≤ 64). Deciding which of a group of [`GROUP`] lanes need a refill is
+//! a byte-wise unsigned compare — exactly the shape SWAR (SIMD Within A
+//! Register) handles in three ALU ops on a packed `u64`:
+//!
+//! ```text
+//! below(x, n) = !((x | 0x8080…80) - n·0x0101…01) & 0x8080…80
+//! ```
+//!
+//! The trick sets bit 7 of every byte whose value is `< n`. Pre-setting
+//! each byte's MSB makes every per-byte difference non-negative
+//! (`b + 128 - n ≥ 0` for `b ≥ 0`, `n ≤ 128`), so **no borrow ever
+//! crosses a byte boundary** and the compare is *exact* per byte
+//! whenever every packed byte and the threshold are `< 128`. (The
+//! textbook `(x - n·LSB) & !x & MSB` form is only an any-byte-below
+//! detector: a borrow out of a flagged byte falsely flags a neighbour
+//! equal to `n`.) Both operands here are far inside the valid range
+//! (`navail ≤ 64`, cadence threshold 40), and exactness is pinned
+//! exhaustively below and mirrored in `tools/logic_check.py` §[14].
+//!
+//! The second primitive is a grouped **gather**: the per-lane
+//! [`MultiDecodeTable`] probes of a lockstep pass have no data
+//! dependence on each other, so issuing all [`GROUP`] table loads before
+//! consuming any result lets them pipeline (software pipelining on every
+//! target). Behind the off-by-default `simd` feature the shared-table
+//! path upgrades to a real AVX2 `vpgatherqq` when the CPU has it; the
+//! SWAR/scalar path is the always-on fallback and the bit-exactness
+//! oracle.
+//!
+//! [`batch`]: crate::batch
+//! [`MultiDecodeTable`]: crate::lut::MultiDecodeTable
+
+/// Lanes advanced per grouped lockstep step: 8 byte-counters fill one
+/// `u64` exactly, and 8 matches the paper's decoder-sweep lane count.
+pub const GROUP: usize = 8;
+
+/// Per-byte LSB mask (the SWAR "1" broadcast).
+const LSB: u64 = 0x0101_0101_0101_0101;
+
+/// Per-byte MSB mask (the SWAR compare-result bit).
+const MSB: u64 = 0x8080_8080_8080_8080;
+
+/// Pack up to [`GROUP`] small counters into one `u64`, value `i` into
+/// byte `i`. Callers must keep every value `< 128` for the packed
+/// compare to be exact (`navail ≤ 64` always is); debug-asserted here.
+#[inline]
+pub fn pack_bytes(vals: &[u32]) -> u64 {
+    debug_assert!(vals.len() <= GROUP);
+    let mut packed = 0u64;
+    for (i, &v) in vals.iter().enumerate() {
+        debug_assert!(v < 128, "packed byte {v} would corrupt the SWAR compare");
+        packed |= (v as u64) << (8 * i);
+    }
+    packed
+}
+
+/// Byte-wise unsigned `< n` over a packed `u64`: bit 7 of byte `i` is
+/// set iff byte `i` of `packed` is below `n`. Exact for bytes and
+/// threshold `< 128`: the `| MSB` keeps every per-byte difference
+/// non-negative, so borrows never cross byte boundaries (module docs).
+#[inline]
+pub fn bytes_below(packed: u64, n: u8) -> u64 {
+    debug_assert!(n < 128);
+    !((packed | MSB).wrapping_sub((n as u64) * LSB)) & MSB
+}
+
+/// Restrict a [`bytes_below`] mask to the low `g` bytes — groups at the
+/// tail of an odd lane count pack fewer than [`GROUP`] counters, and the
+/// zero bytes above them would otherwise read as "below threshold".
+#[inline]
+pub fn group_mask(g: usize) -> u64 {
+    debug_assert!(g >= 1 && g <= GROUP);
+    if g == GROUP {
+        !0
+    } else {
+        (1u64 << (8 * g)) - 1
+    }
+}
+
+/// Iterator over the flagged byte indices of a [`bytes_below`]-style
+/// mask, lowest lane first.
+#[derive(Clone, Copy, Debug)]
+pub struct FlaggedLanes(pub u64);
+
+impl Iterator for FlaggedLanes {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        if self.0 == 0 {
+            return None;
+        }
+        let lane = (self.0.trailing_zeros() / 8) as usize;
+        // Clear the lowest set bit (each byte carries exactly one).
+        self.0 &= self.0 - 1;
+        Some(lane)
+    }
+}
+
+/// Grouped table gather: load `entries[idx[j]]` for `j < g` into
+/// `out[..g]`, issuing every load before any result is consumed — the
+/// scalar form of a vector gather, which is all the portable path needs
+/// for the loads to pipeline. With the `simd` feature on an AVX2 x86-64
+/// this becomes a real `vpgatherqq` pair (runtime-detected; the scalar
+/// loop remains the fallback and the bit-exactness oracle).
+#[inline]
+pub fn gather(entries: &[u64], idx: &[usize; GROUP], g: usize, out: &mut [u64; GROUP]) {
+    debug_assert!(g >= 1 && g <= GROUP);
+    debug_assert!(idx[..g].iter().all(|&i| i < entries.len()));
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if g == GROUP && avx2::available() {
+            // SAFETY: indices bounds-checked above; AVX2 presence checked.
+            unsafe { avx2::gather8(entries, idx, out) };
+            return;
+        }
+    }
+    for j in 0..g {
+        out[j] = entries[idx[j]];
+    }
+}
+
+/// AVX2 gather arm — compiled only under the off-by-default `simd`
+/// feature so the default build carries zero `unsafe` and zero
+/// target-specific code; dispatched at runtime via
+/// `is_x86_feature_detected!`, cached in a `OnceLock`.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    use super::GROUP;
+    use std::sync::OnceLock;
+
+    pub(super) fn available() -> bool {
+        static AVX2: OnceLock<bool> = OnceLock::new();
+        *AVX2.get_or_init(|| std::arch::is_x86_feature_detected!("avx2"))
+    }
+
+    /// # Safety
+    /// Caller guarantees AVX2 is available and `idx[j] < entries.len()`
+    /// for all `j < GROUP`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn gather8(entries: &[u64], idx: &[usize; GROUP], out: &mut [u64; GROUP]) {
+        use std::arch::x86_64::*;
+        let base = entries.as_ptr() as *const i64;
+        let lo = _mm256_set_epi64x(idx[3] as i64, idx[2] as i64, idx[1] as i64, idx[0] as i64);
+        let hi = _mm256_set_epi64x(idx[7] as i64, idx[6] as i64, idx[5] as i64, idx[4] as i64);
+        let a = _mm256_i64gather_epi64::<8>(base, lo);
+        let b = _mm256_i64gather_epi64::<8>(base, hi);
+        _mm256_storeu_si256(out.as_mut_ptr() as *mut __m256i, a);
+        _mm256_storeu_si256(out.as_mut_ptr().add(4) as *mut __m256i, b);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::check;
+
+    #[test]
+    fn bytes_below_is_exact_for_all_navail_values() {
+        // Exhaustive over the actual domain: every byte value a lane's
+        // `navail` can take (0..=64) against every cadence threshold the
+        // decoders use (1..128). One packed word per (value, position).
+        for n in 1..128u8 {
+            for v in 0..=64u32 {
+                for pos in 0..GROUP {
+                    let mut vals = [7u32; GROUP];
+                    vals[pos] = v;
+                    let packed = pack_bytes(&vals);
+                    let mask = bytes_below(packed, n);
+                    for (i, &vi) in vals.iter().enumerate() {
+                        let flagged = mask & (0x80 << (8 * i)) != 0;
+                        assert_eq!(
+                            flagged,
+                            vi < n as u32,
+                            "n={n} byte {i}={vi}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_bytes_below_matches_per_byte_compare() {
+        check("swar bytes_below == per-byte <", 300, |g| {
+            let len = g.usize(1..GROUP + 1);
+            let vals: Vec<u32> = (0..len).map(|_| g.usize(0..128) as u32).collect();
+            let n = g.usize(1..128) as u8;
+            let mask = bytes_below(pack_bytes(&vals), n) & group_mask(len);
+            let want: Vec<usize> = vals
+                .iter()
+                .enumerate()
+                .filter(|&(_, &v)| v < n as u32)
+                .map(|(i, _)| i)
+                .collect();
+            let got: Vec<usize> = FlaggedLanes(mask).collect();
+            assert_eq!(got, want, "vals {vals:?} n {n}");
+        });
+    }
+
+    #[test]
+    fn group_mask_covers_exactly_g_bytes() {
+        for g in 1..=GROUP {
+            let m = group_mask(g);
+            for byte in 0..GROUP {
+                let covered = m & (0xff << (8 * byte)) != 0;
+                assert_eq!(covered, byte < g, "g={g} byte {byte}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_gather_matches_indexing() {
+        check("gather == entries[idx]", 200, |g| {
+            let len = g.usize(1..5000);
+            let entries: Vec<u64> = (0..len).map(|_| g.u64(0..u64::MAX)).collect();
+            let mut idx = [0usize; GROUP];
+            for slot in idx.iter_mut() {
+                *slot = g.usize(0..len);
+            }
+            let n = g.usize(1..GROUP + 1);
+            let mut out = [0u64; GROUP];
+            gather(&entries, &idx, n, &mut out);
+            for j in 0..n {
+                assert_eq!(out[j], entries[idx[j]], "slot {j}");
+            }
+        });
+    }
+}

@@ -12,11 +12,12 @@
 //! in stage 1 at line rate. Multiple decode lanes take whole flits
 //! round-robin (flit-atomic packing makes them independent).
 
-use lexi_core::batch::{LaneDecoders, LaneStream};
+use lexi_core::batch::{LaneDecoders, LaneStream, LaneView};
 use lexi_core::bitstream::BitReader;
 use lexi_core::error::{Error, Result};
 use lexi_core::huffman::{CanonicalDecoder, CodeBook};
 use lexi_core::lut::{MultiDecodeTable, LUT_BITS, LUT_MAX_SYMS};
+use lexi_core::pool;
 
 /// A multi-stage decoder configuration.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -317,10 +318,56 @@ impl DecoderUnit {
         stream: &LaneStream,
         book: &CodeBook,
     ) -> Result<(Vec<u8>, LaneDecodeReport)> {
-        // Format validation is shared with `LaneCodec::decode`: one
-        // source of truth for lane bounds, so format changes cannot fix
-        // one consumer and miss the other. Config support and decoder
-        // tables are likewise checked/built once per book, not per lane.
+        let (views, decs) = self.lane_setup(stream, book)?;
+        let n = stream.lanes;
+        let dec_by_lane = decs.by_lane(n);
+        let results: Vec<LaneKernelResult> = (0..n)
+            .map(|l| self.decode_lane_kernel(dec_by_lane[l], stream, &views[l]))
+            .collect();
+        Self::combine_lane_results(stream, results)
+    }
+
+    /// Lane-parallel [`decode_lane_stream`] (ISSUE 8): each lane's
+    /// kernel replay runs on its own shard of the dependency-free
+    /// [`pool`] — lanes are independent bitstreams, so the per-lane
+    /// symbol/cost traces are identical to the sequential run, and the
+    /// round-major recombination happens on the caller's thread.
+    /// Deterministic and thread-count invariant: outputs, **every
+    /// report field** (per-lane cycles, makespan, lockstep cycles), and
+    /// the surfaced error all equal the sequential path's exactly
+    /// (property-pinned below). This parallelizes the *software* model
+    /// wall-clock only — the cycle numbers it reports are the same
+    /// single-unit hardware model, never divided by `threads`
+    /// (DESIGN.md §SIMD & sharded parallelism).
+    ///
+    /// [`decode_lane_stream`]: DecoderUnit::decode_lane_stream
+    /// [`pool`]: lexi_core::pool
+    pub fn decode_lane_stream_par(
+        &self,
+        stream: &LaneStream,
+        book: &CodeBook,
+        threads: usize,
+    ) -> Result<(Vec<u8>, LaneDecodeReport)> {
+        let (views, decs) = self.lane_setup(stream, book)?;
+        let n = stream.lanes;
+        let dec_by_lane = decs.by_lane(n);
+        let results: Vec<LaneKernelResult> = pool::run_sharded(n, threads, |l| {
+            self.decode_lane_kernel(dec_by_lane[l], stream, &views[l])
+        });
+        Self::combine_lane_results(stream, results)
+    }
+
+    /// Shared lane-path setup: format validation (one source of truth
+    /// with `LaneCodec::decode` — `validated_lanes`), config support for
+    /// every book in play, and decoder-table construction. Book
+    /// precedence + per-lane indexing live in lexi-core's
+    /// [`LaneDecoders`]; a multi unit asks for LUT-carrying decoders, so
+    /// the front tables inherit exactly the same precedence rule.
+    fn lane_setup(
+        &self,
+        stream: &LaneStream,
+        book: &CodeBook,
+    ) -> Result<(Vec<LaneView>, LaneDecoders)> {
         let views = stream.validated_lanes()?;
         if stream.books.is_empty() {
             self.cfg.supports(book)?;
@@ -329,79 +376,123 @@ impl DecoderUnit {
                 self.cfg.supports(b)?;
             }
         }
-        // Book precedence + per-lane indexing live in lexi-core's
-        // LaneDecoders, shared with both software decode paths — a
-        // multi unit asks for LUT-carrying decoders, so the front
-        // tables inherit exactly the same precedence rule.
         let decs = if self.multi.is_some() {
             LaneDecoders::for_stream_lut(stream, book)
         } else {
             LaneDecoders::for_stream(stream, book)
         };
+        Ok((views, decs))
+    }
+
+    /// Replay one lane to completion: decoded symbols (lane-local order)
+    /// plus the per-visit cycle cost trace. Visit `k` of a lane is
+    /// exactly round `k` of the round-major loop (every unfinished lane
+    /// is visited once per round), so the trace is all the recombiner
+    /// needs to rebuild round maxima. Errors carry the failing **visit
+    /// index** so the recombiner can reconstruct which failure the
+    /// round-major order surfaces first.
+    ///
+    /// Multi-symbol front tables (ISSUE 4), when the unit has them: a
+    /// probe that resolves a full-fit codeword group costs one cycle;
+    /// sentinel probes fall back to the staged walk and pay its latency.
+    /// With no front table every visit takes the fallback arm, which IS
+    /// the legacy one-symbol-per-round model.
+    fn decode_lane_kernel(
+        &self,
+        dec: &CanonicalDecoder,
+        stream: &LaneStream,
+        view: &LaneView,
+    ) -> LaneKernelResult {
+        let mut r = BitReader::with_len(&stream.bytes[view.range.clone()], view.bits as usize);
+        let mut lane_out = vec![0u8; view.symbols];
+        let mut costs: Vec<u64> = Vec::with_capacity(view.symbols);
+        let mut done = 0usize;
+        while done < view.symbols {
+            let want = view.symbols - done;
+            let grouped = dec.multi_table().and_then(|table| {
+                let e = table.entry_at(r.peek_zeroext(LUT_BITS) as usize);
+                let c = MultiDecodeTable::count(e) as usize;
+                let used = MultiDecodeTable::consumed(e);
+                (c != 0 && c <= want && used as usize <= r.remaining())
+                    .then_some((e, c, used))
+            });
+            let cost = match grouped {
+                Some((e, c, used)) => {
+                    for k in 0..c {
+                        lane_out[done + k] = MultiDecodeTable::symbol(e, k as u32);
+                    }
+                    r.skip(used).map_err(|e| (costs.len(), e))?;
+                    done += c;
+                    1 // one direct probe resolves the whole group
+                }
+                None => {
+                    let before = r.pos();
+                    let sym = dec.decode(&mut r).map_err(|e| (costs.len(), e))?;
+                    let consumed = (r.pos() - before) as u32;
+                    let stage = self
+                        .cfg
+                        .stage_of(consumed)
+                        .ok_or((costs.len(), Error::InvalidCodeword { offset: before }))?
+                        as u64;
+                    lane_out[done] = sym;
+                    done += 1;
+                    stage
+                }
+            };
+            costs.push(cost);
+        }
+        Ok((lane_out, costs))
+    }
+
+    /// Recombine per-lane kernel traces into the round-major report the
+    /// lockstep cycle model defines: `per_lane_cycles[l] = Σ costs[l]`,
+    /// `lockstep_cycles = Σ_k max_l costs[l][k]` (round `k`'s slowest
+    /// visit), `makespan = max_l per_lane_cycles[l]`. The surfaced error
+    /// is the failure with the smallest `(visit index, lane)` — the
+    /// first one the sequential round-major loop would have hit.
+    fn combine_lane_results(
+        stream: &LaneStream,
+        results: Vec<LaneKernelResult>,
+    ) -> Result<(Vec<u8>, LaneDecodeReport)> {
+        let mut first: Option<(usize, usize)> = None;
+        for (l, res) in results.iter().enumerate() {
+            if let Err((k, _)) = res {
+                // Strict `<` keeps the lowest lane on visit-index ties —
+                // lane order within a round.
+                if first.map_or(true, |(fk, _)| *k < fk) {
+                    first = Some((*k, l));
+                }
+            }
+        }
+        if let Some((_, fl)) = first {
+            for (l, res) in results.into_iter().enumerate() {
+                if l == fl {
+                    let (_, e) = res.expect_err("failing lane recorded above");
+                    return Err(e);
+                }
+            }
+            unreachable!("failing lane index out of range");
+        }
         let n = stream.lanes;
         let mut out = vec![0u8; stream.count];
-        let mut readers: Vec<BitReader> = views
-            .iter()
-            .map(|v| BitReader::with_len(&stream.bytes[v.range.clone()], v.bits as usize))
-            .collect();
-        let dec_by_lane = decs.by_lane(n);
         let mut per_lane_cycles = vec![0u64; n];
-        let mut lockstep_cycles = 0u64;
-        // Multi-symbol front tables (ISSUE 4), when the unit has them
-        // (riding on the LUT decoders `for_stream_lut` built above): a
-        // probe that resolves a full-fit codeword group costs one
-        // cycle; sentinel probes fall back to the staged walk and pay
-        // its latency. With no tables every visit takes the fallback
-        // arm, which IS the legacy one-symbol-per-round model: the
-        // visit sets, stage charges, round maxima, and output indices
-        // are identical, so one loop serves both cycle models.
-        let lane_syms: Vec<usize> = views.iter().map(|v| v.symbols).collect();
-        let mut done = vec![0usize; n];
-        let mut live = true;
-        while live {
-            live = false;
-            let mut round_max = 0u64;
-            for l in 0..n {
-                let want = lane_syms[l] - done[l];
-                if want == 0 {
-                    continue;
-                }
-                live = true;
-                let r = &mut readers[l];
-                let grouped = dec_by_lane[l].multi_table().and_then(|table| {
-                    let e = table.entry_at(r.peek_zeroext(LUT_BITS) as usize);
-                    let c = MultiDecodeTable::count(e) as usize;
-                    let used = MultiDecodeTable::consumed(e);
-                    (c != 0 && c <= want && used as usize <= r.remaining())
-                        .then_some((e, c, used))
-                });
-                let cost = match grouped {
-                    Some((e, c, used)) => {
-                        for k in 0..c {
-                            out[l + (done[l] + k) * n] =
-                                MultiDecodeTable::symbol(e, k as u32);
-                        }
-                        r.skip(used)?;
-                        done[l] += c;
-                        1 // one direct probe resolves the whole group
-                    }
-                    None => {
-                        let before = r.pos();
-                        let sym = dec_by_lane[l].decode(r)?;
-                        let consumed = (r.pos() - before) as u32;
-                        let stage = self
-                            .cfg
-                            .stage_of(consumed)
-                            .ok_or(Error::InvalidCodeword { offset: before })?
-                            as u64;
-                        out[l + done[l] * n] = sym;
-                        done[l] += 1;
-                        stage
-                    }
-                };
-                per_lane_cycles[l] += cost;
-                round_max = round_max.max(cost);
+        let mut traces: Vec<Vec<u64>> = Vec::with_capacity(n);
+        for (l, res) in results.into_iter().enumerate() {
+            let (lane_out, costs) = res.expect("no lane failed");
+            for (k, &sym) in lane_out.iter().enumerate() {
+                out[l + k * n] = sym;
             }
+            per_lane_cycles[l] = costs.iter().sum();
+            traces.push(costs);
+        }
+        let rounds = traces.iter().map(Vec::len).max().unwrap_or(0);
+        let mut lockstep_cycles = 0u64;
+        for k in 0..rounds {
+            let round_max = traces
+                .iter()
+                .filter_map(|t| t.get(k).copied())
+                .max()
+                .unwrap_or(0);
             lockstep_cycles += round_max;
         }
         let makespan = per_lane_cycles.iter().copied().max().unwrap_or(0);
@@ -417,8 +508,12 @@ impl DecoderUnit {
     }
 }
 
+/// One lane's kernel replay: `(lane-local symbols, per-visit costs)`, or
+/// the failing `(visit index, error)`.
+type LaneKernelResult = std::result::Result<(Vec<u8>, Vec<u64>), (usize, Error)>;
+
 /// Cycle report for one multi-lane decode.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct LaneDecodeReport {
     /// Total stage-latency cycles per lane.
     pub per_lane_cycles: Vec<u64>,
@@ -878,6 +973,111 @@ mod tests {
         assert_eq!(spec.fill_cycles(), 32);
         assert_eq!(spec.lut_bits(), LUT_BITS);
         assert_eq!(spec.max_symbols_per_cycle(), LUT_MAX_SYMS);
+    }
+
+    #[test]
+    fn parallel_lane_decode_is_thread_count_invariant() {
+        // ISSUE 8: `decode_lane_stream_par` must match the sequential
+        // path bit-for-bit — symbols AND every cycle-model report field
+        // — at every thread count, for both the legacy and multi units,
+        // across stream versions (plain / checksummed / per-lane books).
+        use lexi_core::batch::LaneCodec;
+        check("hw par lane decode == sequential", 30, |g| {
+            let n = g.usize(1..2500);
+            let data = if g.bool(0.7) {
+                let a = g.usize(1..36);
+                g.skewed_bytes(n, a)
+            } else {
+                g.vec(n, |g| g.u8())
+            };
+            let hist = Histogram::from_bytes(&data);
+            let book = CodeBook::lexi_default(&hist).unwrap();
+            let legacy = DecoderUnit::new(DecoderConfig::paper_default()).unwrap();
+            let multi = DecoderUnit::with_multi(
+                DecoderConfig::paper_default(),
+                MultiLutSpec::paper_default(),
+            )
+            .unwrap();
+            for lanes in [1usize, 3, 8] {
+                let mut codec = LaneCodec::new(lanes).unwrap();
+                if g.bool(0.3) {
+                    codec = codec.with_checksums();
+                }
+                let stream = if g.bool(0.3) {
+                    let books = vec![book.clone(); lanes];
+                    codec.encode_per_lane(&data, &books).unwrap()
+                } else {
+                    codec.encode(&data, &book)
+                };
+                for unit in [&legacy, &multi] {
+                    let (seq_out, seq_rep) = unit.decode_lane_stream(&stream, &book).unwrap();
+                    assert_eq!(seq_out, data, "lanes {lanes}");
+                    for threads in [1usize, 2, 8] {
+                        let (par_out, par_rep) = unit
+                            .decode_lane_stream_par(&stream, &book, threads)
+                            .unwrap();
+                        assert_eq!(par_out, seq_out, "lanes {lanes} threads {threads}");
+                        assert_eq!(
+                            par_rep, seq_rep,
+                            "report diverged: lanes {lanes} threads {threads}"
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn parallel_lane_decode_errors_match_sequential() {
+        // Corrupt/truncated streams must surface the SAME typed error as
+        // the sequential round-major loop — the recombiner's min
+        // (visit, lane) rule — at every thread count.
+        use lexi_core::batch::LaneCodec;
+        check("hw par lane decode error parity", 40, |g| {
+            let n = g.usize(8..1500);
+            let a = g.usize(1..36);
+            let data = g.skewed_bytes(n, a);
+            let hist = Histogram::from_bytes(&data);
+            let book = CodeBook::lexi_default(&hist).unwrap();
+            let lanes = [1usize, 2, 8][g.usize(0..3)];
+            let mut stream = LaneCodec::new(lanes).unwrap().encode(&data, &book);
+            // Truncate one lane's bit budget or flip a payload byte.
+            if g.bool(0.5) {
+                let l = g.usize(0..lanes);
+                let cut = 1 + g.usize(0..16) as u32;
+                stream.lane_bits[l] = stream.lane_bits[l].saturating_sub(cut);
+            } else if !stream.bytes.is_empty() {
+                let i = g.usize(0..stream.bytes.len());
+                stream.bytes[i] ^= 1 << g.usize(0..8);
+            }
+            let unit = if g.bool(0.5) {
+                DecoderUnit::new(DecoderConfig::paper_default()).unwrap()
+            } else {
+                DecoderUnit::with_multi(
+                    DecoderConfig::paper_default(),
+                    MultiLutSpec::paper_default(),
+                )
+                .unwrap()
+            };
+            let seq = unit.decode_lane_stream(&stream, &book);
+            for threads in [1usize, 2, 8] {
+                let par = unit.decode_lane_stream_par(&stream, &book, threads);
+                match (&seq, &par) {
+                    (Ok((so, sr)), Ok((po, pr))) => {
+                        assert_eq!(po, so, "threads {threads}");
+                        assert_eq!(pr, sr, "threads {threads}");
+                    }
+                    (Err(se), Err(pe)) => {
+                        assert_eq!(pe, se, "threads {threads}");
+                    }
+                    _ => panic!(
+                        "ok/err divergence at threads {threads}: seq ok={} par ok={}",
+                        seq.is_ok(),
+                        par.is_ok()
+                    ),
+                }
+            }
+        });
     }
 
     #[test]

@@ -121,6 +121,15 @@ impl CrTable {
     /// decoder makespan model per codec: the cycle-accurate multi-lane
     /// LUT unit (`lexi-hw`) for Huffman, the per-block cost model for
     /// BDI, zero for Raw — each at every [`CACHED_LANES`] count.
+    ///
+    /// Calibration is **single-thread by design** (ISSUE 8): the cached
+    /// makespans model one hardware decoder unit, so they come from the
+    /// sequential `decode_lane_stream` replay. The host-side parallel
+    /// paths (`decode_lane_stream_par`, `LaneCodec::decode_par`,
+    /// `compress_exponents_par`) only change software wall-clock —
+    /// their reports are defined to be identical to the sequential
+    /// ones — and are benched as separate `perf_codec` rows, never
+    /// substituted into this cycle model.
     pub fn measure(cfg: &ModelConfig, seed: u64) -> Self {
         let mut ratios = HashMap::new();
         let mut decode_cycles = HashMap::new();

@@ -1575,6 +1575,193 @@ def main():
     print("[13c] credit-conservation audit: credits + buffered == depth under "
           "traversal/drain/truncation; unit leaks always flagged: 200 cases OK")
 
+    # 14) SWAR grouped lockstep (PR 8): independent mirror of the packed
+    #     lane-state arithmetic in rust/core/src/swar.rs + the grouped
+    #     decode_lockstep_swar loop in batch.rs.
+    #
+    # 14a) The byte-wise unsigned-less-than trick
+    #      ~((x | 0x8080..) - n*0x0101..) & 0x8080.. flags byte i iff
+    #      byte i < n, EXACTLY, whenever all bytes and the threshold stay
+    #      below 128 (navail is 0..=64, the refill cadence is 40):
+    #      pre-setting each byte's MSB keeps every per-byte difference
+    #      non-negative, so no borrow crosses a byte boundary. (This
+    #      mirror caught the textbook (x-n*LSB)&~x&MSB form being only an
+    #      ANY-byte-below detector — a borrow out of a flagged byte
+    #      falsely flags a neighbour equal to n.) Exhaustive over every
+    #      (threshold, byte value, byte position), random filler in the
+    #      other bytes.
+    SWAR_LSB = 0x0101010101010101
+    SWAR_MSB = 0x8080808080808080
+
+    def swar_pack(vals):
+        p = 0
+        for i, v in enumerate(vals):
+            assert 0 <= v < 128
+            p |= v << (8 * i)
+        return p
+
+    def swar_bytes_below(packed, n):
+        return ~((packed | SWAR_MSB) - n * SWAR_LSB) & SWAR_MSB & MASK64
+
+    ok14a = 0
+    for thresh in range(1, 128):
+        for v in range(0, 65):
+            pos = rng.randrange(8)
+            filler = [rng.randrange(65) for _ in range(8)]
+            filler[pos] = v
+            mask = swar_bytes_below(swar_pack(filler), thresh)
+            for i, b in enumerate(filler):
+                got = bool(mask & (0x80 << (8 * i)))
+                assert got == (b < thresh), (
+                    f"SWAR compare wrong: byte {b} vs {thresh} -> {got}"
+                )
+            ok14a += 1
+    print(f"[14a] SWAR byte-compare exact for all (threshold, navail) pairs: {ok14a} packings OK")
+
+    # 14b) Grouped refill gate == per-lane scalar gate, full-state: drive
+    #      two LaneWindows over the same buffer, one gated by the SWAR
+    #      mask (ensure_group), one by per-lane `navail < bits`, with
+    #      random interleaved consumes. byte_pos/window/navail must stay
+    #      identical for EVERY lane — the mask refills exactly the lanes
+    #      the scalar gate would.
+    for trial in range(60):
+        nbytes = rng.randrange(24, 200)
+        buf = bytes(rng.randrange(256) for _ in range(nbytes))
+        lanes = rng.randrange(1, 12)
+        spans = []
+        off = 0
+        for _ in range(lanes):
+            ln = rng.randrange(0, (nbytes * 8 - off) // max(1, lanes) + 1)
+            spans.append((off, off + ln))
+            off += ln
+        a = LaneWindows(buf, spans)
+        b = LaneWindows(buf, spans)
+        for _ in range(80):
+            l0 = rng.randrange(lanes)
+            g = min(lanes - l0, rng.randrange(1, 9))
+            bits = rng.randrange(1, 65)
+            packed = swar_pack([a.navail[l0 + j] for j in range(g)])
+            mask = swar_bytes_below(packed, bits)
+            for j in range(g):
+                if mask & (0x80 << (8 * j)):
+                    a.refill(l0 + j)
+            for j in range(g):
+                if b.navail[l0 + j] < bits:
+                    b.refill(l0 + j)
+            l = rng.randrange(lanes)
+            take = min(a.navail[l], a.remaining(l))
+            if take:
+                t = rng.randrange(1, take + 1)
+                a.consume(l, t)
+                b.consume(l, t)
+            assert (a.byte_pos, a.window, a.navail) == (b.byte_pos, b.window, b.navail), (
+                "grouped refill diverged from scalar gate"
+            )
+    print("[14b] grouped SWAR refill gate == per-lane scalar gate (full lane state): 60 streams OK")
+
+    # 14c) Grouped lockstep replay (probe-all-then-apply phases, GROUP=8)
+    #      == the visit-at-a-time reference decode_lockstep: without a
+    #      LUT it must match the reference's output AND every lane's bit
+    #      position; with the multi-LUT (shared book) the grouped drain
+    #      must still emit the exact symbol stream.
+    def decode_lockstep_swar_mirror(stream, shared_book, entries):
+        decs = (
+            [Decoder(shared_book)]
+            if not stream["books"]
+            else [Decoder(b) for b in stream["books"]]
+        )
+        n = stream["lanes"]
+        dec_by_lane = [decs[0] if len(decs) == 1 else decs[l] for l in range(n)]
+        out = [0] * stream["count"]
+        spans = [
+            (start * 8, start * 8 + bits)
+            for (_, start, _, bits, _) in stream["views"]
+        ]
+        wins = LaneWindows(stream["bytes"], spans)
+        lane_syms = [symbols for (_, _, _, _, symbols) in stream["views"]]
+        done = [0] * n
+        live = True
+        while live:
+            live = False
+            l0 = 0
+            while l0 < n:
+                g = min(n - l0, 8)
+                # Phase 1: one packed compare gates the group's refills.
+                packed = swar_pack([wins.navail[l0 + j] for j in range(g)])
+                mask = swar_bytes_below(packed, 40)
+                for j in range(g):
+                    if mask & (0x80 << (8 * j)):
+                        wins.refill(l0 + j)
+                # Phase 2: all probes issued before any lane consumes.
+                probes = [
+                    entries[wins.window[l0 + j] >> (64 - LUT_BITS)]
+                    if entries is not None
+                    else 0
+                    for j in range(g)
+                ]
+                # Phase 3: apply in lane order (reference visit each).
+                for j in range(g):
+                    l = l0 + j
+                    want = lane_syms[l] - done[l]
+                    if want == 0:
+                        continue
+                    live = True
+                    e = probes[j]
+                    cnt = (e >> 32) & 0xF
+                    used = (e >> 40) & 0xFF
+                    if cnt and cnt <= want and used <= wins.remaining(l):
+                        for k in range(cnt):
+                            out[l + (done[l] + k) * n] = (e >> (8 * k)) & 0xFF
+                        wins.consume(l, used)
+                        done[l] += cnt
+                    else:
+                        sym, u = dec_by_lane[l].decode_from_window(
+                            wins.window[l], wins.remaining(l), wins.pos(l)
+                        )
+                        out[l + done[l] * n] = sym
+                        wins.consume(l, u)
+                        done[l] += 1
+                l0 += g
+        return out, [wins.pos(l) for l in range(n)]
+
+    ok14c = 0
+    for trial in range(120):
+        n = rng.randrange(1, 900)
+        data = gen_data(rng, n, rng.random() < 0.3)
+        book = make_book(data)
+        if book is None:
+            continue
+        lanes = rng.choice([1, 2, 3, 7, 8, 11, 16])
+        embed = rng.random() < 0.4
+        wire, _, _ = lane_encode(data, lanes, [book] * lanes, embed)
+        stream = parse_stream(wire)
+        ref = decode_lockstep(stream, book)
+        assert ref == data
+        # Reference bit positions: replay per lane with the block loop.
+        ref_pos = []
+        for (l, start, end, bits, symbols) in stream["views"]:
+            s = BitRefill(stream["bytes"][start:end], 0, bits)
+            dec = Decoder(book)
+            for _ in range(symbols):
+                if s.navail < 40:
+                    s.refill()
+                _, u = dec.decode_from_window(s.bitbuf, s.remaining(), s.pos())
+                s.consume(u)
+            ref_pos.append(start * 8 + s.pos())
+        # No LUT: grouped loop must track the scalar reference exactly.
+        out, pos = decode_lockstep_swar_mirror(stream, book, None)
+        assert out == ref, f"grouped (no LUT) output mismatch n={n} lanes={lanes}"
+        assert pos == ref_pos, f"grouped (no LUT) bit positions drifted n={n}"
+        # Shared multi-LUT: grouped drain still lossless.
+        entries, _ = mirror_multi_table(book)
+        out, _ = decode_lockstep_swar_mirror(stream, book, entries)
+        assert out == ref, f"grouped LUT output mismatch n={n} lanes={lanes}"
+        ok14c += 1
+    print(
+        f"[14c] grouped SWAR lockstep replay == reference (output + bit positions, "
+        f"with and without LUT): {ok14c} streams OK"
+    )
+
     print("\nALL LOGIC CHECKS PASSED")
 
 

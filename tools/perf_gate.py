@@ -13,14 +13,19 @@ Compares the throughput rows of a freshly produced bench JSON against the
 committed baseline and fails (exit 1) if any shared row's `m_per_s`
 dropped by more than the threshold. Rows present in only one file are
 reported but never fail the gate: new benches (e.g. the `bdi encode` /
-`bdi decode` rows ISSUE 3 added, or the `noc * egress` rows from
-ISSUE 5) land against an older baseline without a baseline edit, and
+`bdi decode` rows ISSUE 3 added, the `noc * egress` rows from ISSUE 5,
+or the `decode swar=8` / `decode par={1,2,8}` / `encode par=8` rows from
+ISSUE 8) land against an older baseline without a baseline edit, and
 removed benches don't block CI. A new row starts gating on the first run
 after its JSON is committed as the baseline.
 
 Beyond the row diff, known top-level overhead ratios are checked
 against absolute ceilings (`SCALAR_BOUNDS`); the gated ones — the
 ISSUE 7 watchdog overhead — fail the run even without a baseline.
+Speedup *floors* (`MIN_TARGETS`, ISSUE 8: SWAR ≥1.3x the per-lane LUT
+loop, 8-thread parallel ≥4x single-thread) are report-only by design —
+thread scaling depends on the container's core count and neighbours, so
+they are printed for the record and never fail the run.
 
 Set LEXI_SKIP_PERF_GATE=1 (e.g. in toolchain-less or noisy-neighbour
 containers) to skip.
@@ -44,6 +49,17 @@ SCALAR_BOUNDS = {
     "egress_slowdown_uniform": (1.30, False),
     "egress_slowdown_hotspot": (1.30, False),
     "xval_worst_err": (0.15, False),
+}
+
+# Report-only speedup FLOORS (value must be >= target, the mirror image
+# of SCALAR_BOUNDS). ISSUE 8: these depend on host core count and
+# container neighbours, so they never gate — the row-vs-baseline diff
+# above is the regression signal; these just keep the scaling trajectory
+# visible in CI logs.
+MIN_TARGETS = {
+    "swar_speedup_8": 1.3,
+    "decode_par_speedup_8": 4.0,
+    "encode_par_speedup_8": 4.0,
 }
 
 
@@ -76,6 +92,16 @@ def check_scalar_bounds(data):
     return violations
 
 
+def report_min_targets(data):
+    """Print report-only speedup floors; never contributes failures."""
+    for name, floor in sorted(MIN_TARGETS.items()):
+        val = data.get(name)
+        if not isinstance(val, (int, float)):
+            continue
+        marker = "" if val >= floor else "  (below target, report-only)"
+        print(f"  {name:24s} {val:10.3f} (floor {floor}){marker}")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("fresh", help="freshly generated BENCH_perf_codec.json")
@@ -101,6 +127,7 @@ def main():
 
     # Absolute overhead bounds don't need a baseline — check them first.
     bound_violations = check_scalar_bounds(fresh_data)
+    report_min_targets(fresh_data)
 
     try:
         base = rows_of(load_data(args.baseline))
