@@ -6,13 +6,19 @@
 //! 2. **Serving throughput** — multi-request decode sharing the NoI:
 //!    LEXI raises the link-saturation ceiling by ~the wire ratio, the
 //!    claim that matters for batched serving.
+//! 3. **Load–latency curve** (ISSUE 9) — the open-loop trace-driven
+//!    serving simulator swept across offered load: tail latency
+//!    (p50/p99/p999) and goodput with and without LEXI, under
+//!    deadline-aware admission. The wire-ratio win shows up as the
+//!    knee of the curve moving right.
 
 use lexi::models::corpus::Corpus;
 use lexi::models::ModelConfig;
 use lexi::sim::compression::{CompressionMode, CrTable};
 use lexi::sim::energy::EnergyModel;
 use lexi::sim::engine::Engine;
-use lexi_bench::Table;
+use lexi::sim::serving::{ServingConfig, ServingSim};
+use lexi_bench::{fmt_ns, Table};
 
 fn main() {
     let engine = Engine::paper_default();
@@ -63,4 +69,38 @@ fn main() {
     }
     ts.print();
     println!("(at saturation the gain approaches the measured wire ratio)");
+
+    // ---- 3. load-latency curve (ISSUE 9) -----------------------------------
+    println!("\nExtension 3 — serving load-latency curve (Poisson trace, mixed fleet):");
+    let mut tl = Table::new(&[
+        "load",
+        "mode",
+        "delivered",
+        "shed",
+        "p50",
+        "p99",
+        "p999",
+        "goodput/s",
+    ]);
+    for load in [0.3, 0.5, 0.7, 0.9, 1.1] {
+        for mode in [CompressionMode::Uncompressed, CompressionMode::Lexi] {
+            let mut sc = ServingConfig::paper_default();
+            sc.requests = 3000;
+            sc.load = load;
+            sc.mode = mode;
+            let s = ServingSim::new(sc).run();
+            tl.row(vec![
+                format!("{load:.1}"),
+                format!("{mode:?}"),
+                s.delivered.to_string(),
+                s.shed.to_string(),
+                fmt_ns(s.p50_ns as f64),
+                fmt_ns(s.p99_ns as f64),
+                fmt_ns(s.p999_ns as f64),
+                format!("{:.0}", s.goodput_rps),
+            ]);
+        }
+    }
+    tl.print();
+    println!("(goodput = on-time deliveries/s; sheds are typed admission refusals)");
 }

@@ -20,6 +20,7 @@ use lexi::noc::{
 };
 use lexi::sim::compression::{CompressionMode, CrTable};
 use lexi::sim::engine::Engine;
+use lexi::sim::serving::{ServingConfig, ServingSim};
 use lexi::sim::xval;
 use lexi_bench::{bench, Table};
 use lexi_core::codec::CodecKind;
@@ -201,6 +202,46 @@ fn main() {
         // compares ratios, so the unit just has to be consistent.
         m_per_s: an.throughput(1),
     });
+
+    // ISSUE 9: trace-driven serving throughput. The admission layer
+    // (deadline prediction, typed sheds, capped-backoff retries) must
+    // cost ≤1.05× the shed-off baseline at moderate load — the run is
+    // the same arrival trace either way, so the delta isolates the
+    // bookkeeping. `run()` resets all state, so one sim per row is
+    // benched repeatedly.
+    let serving_cfg = |load: f64, admission: bool| {
+        let mut c = ServingConfig::paper_default();
+        c.requests = 2000;
+        c.load = load;
+        c.admission = admission;
+        c
+    };
+    let mut serving_rows = Vec::new();
+    for (name, load, admission) in [
+        ("serving load=0.5", 0.5, true),
+        ("serving load=0.9", 0.9, true),
+        ("serving shed-off", 0.5, false),
+    ] {
+        let mut sim = ServingSim::new(serving_cfg(load, admission));
+        let mut delivered = 0u64;
+        let run = bench(name, 1, 5, || {
+            let s = sim.run();
+            delivered = s.delivered;
+            s.offered
+        });
+        t.row(vec![
+            format!("{name} ({delivered} delivered)"),
+            format!("{:?}", run.median()),
+            format!("{:.1} runs/s", run.throughput(1)),
+        ]);
+        serving_rows.push(run.median().as_nanos() as f64);
+        rows.push(Row {
+            name,
+            median_ns: run.median().as_nanos() as f64,
+            // runs/s, unscaled — same convention as "analytic e2e".
+            m_per_s: run.throughput(1),
+        });
+    }
     t.print();
 
     // Codec-tagged stepping target: ≤1.3× slowdown vs codec-blind.
@@ -243,6 +284,25 @@ fn main() {
         if slow_w <= 1.05 { "PASS" } else { "BELOW TARGET" }
     );
 
+    // Serving admission overhead (ISSUE 9): load-0.5 with admission on
+    // vs the shed-off baseline on the identical arrival trace.
+    let slow_s = serving_rows[0] / serving_rows[2];
+    println!(
+        "serving admission overhead: {slow_s:.3}x vs shed-off (target <=1.05x) — {}",
+        if slow_s <= 1.05 { "PASS" } else { "BELOW TARGET" }
+    );
+
+    // Serving goodput gain (ISSUE 9, report-only): on-time deliveries
+    // per second at load 0.9, LEXI wire format vs uncompressed — the
+    // serving-level restatement of the paper's latency win.
+    let goodput_at = |mode: CompressionMode| {
+        let mut c = serving_cfg(0.9, true);
+        c.mode = mode;
+        ServingSim::new(c).run().goodput_rps
+    };
+    let gain = goodput_at(CompressionMode::Lexi) / goodput_at(CompressionMode::Uncompressed);
+    println!("serving goodput gain at load 0.9 (LEXI vs uncompressed): {gain:.2}x (report-only)");
+
     // Cross-validation (sim::xval): analytic vs tagged cycle sim on
     // uncongested sizable transfers, every mode (target <15%).
     let tiny = ModelConfig::jamba(ModelScale::Tiny);
@@ -282,6 +342,8 @@ fn main() {
     json.push_str(&format!("  \"fault_off_overhead\": {slow_f:.3},\n"));
     json.push_str(&format!("  \"ingress_slowdown_uniform\": {slow_i:.3},\n"));
     json.push_str(&format!("  \"watchdog_overhead\": {slow_w:.3},\n"));
+    json.push_str(&format!("  \"serving_shed_off_overhead\": {slow_s:.3},\n"));
+    json.push_str(&format!("  \"serving_goodput_gain\": {gain:.3},\n"));
     json.push_str(&format!("  \"xval_worst_err\": {worst:.4},\n"));
     json.push_str("  \"rows\": {\n");
     for (i, r) in rows.iter().enumerate() {

@@ -1,0 +1,83 @@
+"""Deterministic stand-in for the slice of the hypothesis API that
+test_kernels.py uses (ISSUE 9 satellite): `@given` with keyword
+strategies, `@settings(max_examples=, deadline=)`, `st.integers`, and
+`st.sampled_from`.
+
+The real hypothesis is used when installed; this module only loads when
+the import fails, so property tests still *run* (seeded, fixed example
+count) instead of being skipped wholesale in hermetic containers. No
+shrinking, no example database — a failure reports the drawn kwargs in
+the assertion context and is exactly reproducible from the test name.
+"""
+
+import functools
+import random
+import zlib
+
+
+class _Strategy:
+    """A draw function over a `random.Random`."""
+
+    def __init__(self, draw):
+        self.draw = draw
+
+
+class st:
+    """Mirror of `hypothesis.strategies` for the two strategies used."""
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda r: r.choice(elements))
+
+
+def settings(max_examples=100, deadline=None, **_ignored):
+    """Record `max_examples` on the (already-@given-wrapped) test.
+
+    `deadline` and anything else hypothesis-specific is accepted and
+    ignored — this runner has no timing machinery.
+    """
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies_kwargs):
+    """Run the test once per example with kwargs drawn from the
+    strategies. The RNG is seeded from the test's name, so every run
+    (and every machine) sees the same example sequence.
+    """
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples", 20)
+            rng = random.Random(zlib.crc32(fn.__name__.encode()))
+            for i in range(n):
+                drawn = {
+                    name: s.draw(rng)
+                    for name, s in sorted(strategies_kwargs.items())
+                }
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__name__} failed on fallback example "
+                        f"{i + 1}/{n}: {drawn}"
+                    ) from e
+
+        # functools.wraps sets __wrapped__, which pytest follows when
+        # collecting the test's signature — it would then demand the
+        # strategy kwargs as fixtures. The wrapper must present its own
+        # (*args, **kwargs) signature, exactly like hypothesis does.
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

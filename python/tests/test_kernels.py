@@ -5,10 +5,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-# Collection must survive environments without hypothesis (ISSUE 7
-# satellite): skip the whole module instead of erroring at import.
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+# Property tests must survive environments without hypothesis (ISSUE 9
+# satellite): fall back to the vendored deterministic mini-runner so
+# they still execute (seeded, fixed example count) instead of skipping.
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
 
 from compile.kernels import attention as attn_k
 from compile.kernels import exp_hist, mamba_scan, ref

@@ -43,6 +43,17 @@ pub enum Error {
     /// transient: the packet can never be delivered until topology
     /// changes.
     Unreachable { src: u16, dest: u16 },
+
+    /// Deadline-aware admission control refused the request (ISSUE 9):
+    /// the serving node's bounded admission queue was at `depth`, or the
+    /// predicted sojourn already exceeded the request's `deadline_ns` —
+    /// a typed, counted load-shed, never an unbounded queue. Nothing
+    /// was enqueued; the client may retry under its own backoff budget.
+    Shed {
+        node: u16,
+        depth: usize,
+        deadline_ns: u64,
+    },
 }
 
 impl fmt::Display for Error {
@@ -73,6 +84,15 @@ impl fmt::Display for Error {
             Error::Unreachable { src, dest } => write!(
                 f,
                 "no live route from node {src} to node {dest} (permanent link failures)"
+            ),
+            Error::Shed {
+                node,
+                depth,
+                deadline_ns,
+            } => write!(
+                f,
+                "request shed at node {node}: admission queue depth {depth} cannot \
+                 meet the {deadline_ns} ns deadline"
             ),
         }
     }

@@ -26,6 +26,36 @@ pub enum Access {
     MissEvicted(u8, u32),
 }
 
+/// Aggregate pressure counters for one lane cache (ISSUE 9): how hard
+/// a shared cache is being worked by competing exponent streams. The
+/// serving simulator samples these under multi-tenant codebook churn.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PressureStats {
+    pub hits: u64,
+    pub misses: u64,
+    /// Misses that displaced a resident entry (capacity pressure), as
+    /// opposed to cold-start installs into a free slot.
+    pub evictions: u64,
+    /// Entries currently resident.
+    pub occupancy: usize,
+    /// Configured depth.
+    pub depth: usize,
+}
+
+impl PressureStats {
+    /// Evicting misses as a share of all accesses — 0.0 while the
+    /// working set fits, climbing toward the miss rate when every miss
+    /// displaces a live entry.
+    pub fn eviction_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.evictions as f64 / total as f64
+        }
+    }
+}
+
 /// A single lane's local frequency cache.
 #[derive(Clone, Debug)]
 pub struct LaneCache {
@@ -34,6 +64,8 @@ pub struct LaneCache {
     next_stamp: u64,
     pub hits: u64,
     pub misses: u64,
+    /// Misses that evicted a resident entry (subset of `misses`).
+    pub evictions: u64,
 }
 
 impl LaneCache {
@@ -46,6 +78,7 @@ impl LaneCache {
             next_stamp: 0,
             hits: 0,
             misses: 0,
+            evictions: 0,
         }
     }
 
@@ -81,7 +114,19 @@ impl LaneCache {
             count: 1,
             inserted_at: stamp,
         };
+        self.evictions += 1;
         Access::MissEvicted(victim.exponent, victim.count)
+    }
+
+    /// Snapshot the pressure counters (ISSUE 9).
+    pub fn pressure(&self) -> PressureStats {
+        PressureStats {
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            occupancy: self.entries.len(),
+            depth: self.depth,
+        }
     }
 
     /// Drain all resident entries (end of histogram phase): every entry
@@ -158,6 +203,33 @@ mod tests {
             }
             assert!(c.hit_rate() > 0.85, "hit rate {}", c.hit_rate());
         });
+    }
+
+    #[test]
+    fn pressure_counts_evicting_misses_separately() {
+        let mut c = LaneCache::new(2);
+        c.access(1); // cold install
+        c.access(2); // cold install
+        c.access(1); // hit
+        c.access(3); // evicting miss
+        c.access(3); // hit
+        let p = c.pressure();
+        assert_eq!(
+            p,
+            PressureStats {
+                hits: 2,
+                misses: 3,
+                evictions: 1,
+                occupancy: 2,
+                depth: 2,
+            }
+        );
+        assert!((p.eviction_rate() - 0.2).abs() < 1e-12);
+        assert!(p.evictions <= p.misses, "evictions are a subset of misses");
+        // Drain flushes entries but keeps lifetime counters.
+        c.drain();
+        assert_eq!(c.pressure().occupancy, 0);
+        assert_eq!(c.pressure().evictions, 1);
     }
 
     #[test]

@@ -25,7 +25,11 @@
 //! * [`policy`] — per-traffic-class codec assignment ([`CodecPolicy`]):
 //!   which `lexi_core::codec::CodecKind` each kind travels under; plus
 //!   graceful degradation (ISSUE 6): a [`DegradePolicy`]/`DegradeTracker`
-//!   pair that falls a repeatedly-undecodable class back to `Raw`.
+//!   pair that falls a repeatedly-undecodable class back to `Raw`; and
+//!   the two-threshold hysteresis controller (ISSUE 9):
+//!   [`HysteresisPolicy`]/[`DegradeController`] degrade on strikes *or*
+//!   sustained codec-port occupancy, recover via single-transfer
+//!   probes, and never flap inside the hysteresis window.
 
 pub mod activations;
 pub mod config;
@@ -35,5 +39,7 @@ pub mod traffic;
 pub mod weights;
 
 pub use config::{BlockKind, ModelConfig, ModelScale};
-pub use policy::{CodecPolicy, DegradePolicy, DegradeTracker};
+pub use policy::{
+    CodecPolicy, DegradeAction, DegradeController, DegradePolicy, DegradeTracker, HysteresisPolicy,
+};
 pub use traffic::{Phase, TransferKind, TransferSpec};

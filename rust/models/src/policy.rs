@@ -146,10 +146,17 @@ impl Default for DegradePolicy {
 
 /// Per-traffic-class decode-failure accounting that drives
 /// [`DegradePolicy`]. Indexed by [`TransferKind::ALL`] order.
+///
+/// Since ISSUE 9 degradation is reversible: the tracker remembers the
+/// codec a class ran before its fall to `Raw`, and
+/// [`DegradeTracker::recover`] restores it when a probe succeeds — the
+/// *when* of both transitions is decided by [`DegradeController`].
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct DegradeTracker {
     failures: [u32; 4],
     degraded: [bool; 4],
+    /// Codec each class ran before degradation (restore target).
+    prior: [Option<CodecKind>; 4],
 }
 
 #[inline]
@@ -185,7 +192,42 @@ impl DegradeTracker {
             return false;
         }
         self.degraded[i] = true;
+        self.prior[i] = Some(codec_policy.codec_for(kind));
         codec_policy.set(kind, CodecKind::Raw);
+        true
+    }
+
+    /// Degrade `kind` to `Raw` immediately, bypassing the strike count
+    /// (ISSUE 9: congestion-driven degradation — sustained codec-port
+    /// occupancy, not decode failures, tripped the
+    /// [`DegradeController`]). Remembers the displaced codec for
+    /// [`DegradeTracker::recover`]. Returns `true` iff this call
+    /// flipped the class (idempotent on an already-degraded one).
+    pub fn force_degrade(&mut self, kind: TransferKind, codec_policy: &mut CodecPolicy) -> bool {
+        let i = kind_index(kind);
+        if self.degraded[i] {
+            return false;
+        }
+        self.degraded[i] = true;
+        self.prior[i] = Some(codec_policy.codec_for(kind));
+        codec_policy.set(kind, CodecKind::Raw);
+        true
+    }
+
+    /// Un-degrade `kind` after a successful health probe (ISSUE 9):
+    /// restores the codec the class ran before degradation (Huffman if
+    /// unknown) and zeroes its strike count so stale failures cannot
+    /// instantly re-trip the threshold. Returns `true` iff the class
+    /// was degraded.
+    pub fn recover(&mut self, kind: TransferKind, codec_policy: &mut CodecPolicy) -> bool {
+        let i = kind_index(kind);
+        if !self.degraded[i] {
+            return false;
+        }
+        self.degraded[i] = false;
+        self.failures[i] = 0;
+        let restore = self.prior[i].take().unwrap_or(CodecKind::Huffman);
+        codec_policy.set(kind, restore);
         true
     }
 
@@ -205,6 +247,204 @@ impl DegradeTracker {
             .into_iter()
             .filter(|&k| self.is_degraded(k))
             .collect()
+    }
+}
+
+/// Two-threshold degradation/recovery policy (ISSUE 9). Extends the
+/// one-way [`DegradePolicy`] (strikes → Raw, forever) into a controller
+/// with hysteresis:
+///
+/// * **degrade** when a class accumulates `strike_threshold` decode
+///   failures *or* sustains codec-port occupancy ≥ `occupancy_high`
+///   for `sustain_windows` consecutive observation windows;
+/// * **probe** while degraded, once occupancy has sat ≤ `occupancy_low`
+///   (with zero strikes) for `probe_interval` consecutive windows — a
+///   single compressed transfer tests the waters;
+/// * **recover** when the probe succeeds — and never flap: any two
+///   transitions (in either direction) are at least
+///   `hysteresis_windows` observation windows apart.
+///
+/// The low/high gap is the hysteresis band: occupancy between the two
+/// thresholds neither degrades a healthy class nor probes a degraded
+/// one, so an oscillating signal straddling one threshold cannot make
+/// the policy oscillate with it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HysteresisPolicy {
+    /// Decode failures before a class degrades (matches
+    /// [`DegradePolicy::failure_threshold`]'s paper default).
+    pub strike_threshold: u32,
+    /// Occupancy at/above which a window counts as overloaded.
+    pub occupancy_high: f64,
+    /// Occupancy at/below which a degraded window counts as calm.
+    pub occupancy_low: f64,
+    /// Consecutive overloaded windows before degrading.
+    pub sustain_windows: u32,
+    /// Consecutive calm windows before a recovery probe is issued.
+    pub probe_interval: u32,
+    /// Minimum windows between any two transitions (flap guard).
+    pub hysteresis_windows: u32,
+}
+
+impl HysteresisPolicy {
+    /// Default operating point: three strikes, degrade above 85%
+    /// occupancy sustained for 3 windows, probe after 4 calm windows
+    /// below 60%, and at least 8 windows between transitions.
+    pub fn paper_default() -> Self {
+        HysteresisPolicy {
+            strike_threshold: DegradePolicy::paper_default().failure_threshold,
+            occupancy_high: 0.85,
+            occupancy_low: 0.60,
+            sustain_windows: 3,
+            probe_interval: 4,
+            hysteresis_windows: 8,
+        }
+    }
+}
+
+impl Default for HysteresisPolicy {
+    fn default() -> Self {
+        Self::paper_default()
+    }
+}
+
+/// What the [`DegradeController`] wants done after an observation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DegradeAction {
+    /// Steady state — nothing to do.
+    None,
+    /// Flip the class to `Raw` now (caller: `DegradeTracker::force_degrade`
+    /// or the strike path).
+    Degrade,
+    /// Run one compressed probe transfer and report the outcome via
+    /// [`DegradeController::on_probe_result`].
+    Probe,
+    /// Probe succeeded — restore the class (caller:
+    /// `DegradeTracker::recover`).
+    Recover,
+}
+
+/// Per-kind window state for the hysteresis controller.
+#[derive(Clone, Copy, Debug, Default)]
+struct KindWindowState {
+    degraded: bool,
+    /// Observation windows seen for this kind (the transition clock).
+    window_clock: u64,
+    /// Window index of the last transition, if any.
+    last_transition: Option<u64>,
+    /// Consecutive windows at/above `occupancy_high` (healthy side).
+    hot_windows: u32,
+    /// Decode failures accumulated while healthy.
+    strikes: u32,
+    /// Consecutive calm windows (degraded side).
+    calm_windows: u32,
+    degrades: u64,
+    recoveries: u64,
+    probes: u64,
+}
+
+/// The two-threshold hysteresis state machine (ISSUE 9). Pure control
+/// logic — it owns no [`CodecPolicy`]; callers apply emitted
+/// [`DegradeAction`]s through [`DegradeTracker`] (the `lexi-sim`
+/// `Engine` does exactly that), which keeps the machine independently
+/// testable and mirrors it 1:1 in `tools/logic_check.py` §[15].
+#[derive(Clone, Debug)]
+pub struct DegradeController {
+    policy: HysteresisPolicy,
+    state: [KindWindowState; 4],
+}
+
+impl DegradeController {
+    /// A controller with every class healthy.
+    pub fn new(policy: HysteresisPolicy) -> Self {
+        DegradeController {
+            policy,
+            state: [KindWindowState::default(); 4],
+        }
+    }
+
+    /// The configured thresholds.
+    pub fn policy(&self) -> HysteresisPolicy {
+        self.policy
+    }
+
+    /// Is the flap guard open for this kind (no transition within the
+    /// last `hysteresis_windows` windows)?
+    fn guard_open(&self, i: usize) -> bool {
+        let s = &self.state[i];
+        s.last_transition
+            .map_or(true, |t| s.window_clock - t >= u64::from(self.policy.hysteresis_windows))
+    }
+
+    /// Feed one observation window for `kind`: the codec-port occupancy
+    /// over the window (0..=1; callers clamp) and the decode failures
+    /// (post-retry-budget CRC losses) it saw. Returns the action due.
+    pub fn on_window(&mut self, kind: TransferKind, occupancy: f64, strikes: u32) -> DegradeAction {
+        let i = kind_index(kind);
+        self.state[i].window_clock += 1;
+        let guard_open = self.guard_open(i);
+        let p = self.policy;
+        let s = &mut self.state[i];
+        if !s.degraded {
+            s.strikes = s.strikes.saturating_add(strikes);
+            if occupancy >= p.occupancy_high {
+                s.hot_windows = s.hot_windows.saturating_add(1);
+            } else {
+                s.hot_windows = 0;
+            }
+            let tripped =
+                s.strikes >= p.strike_threshold || s.hot_windows >= p.sustain_windows;
+            if tripped && guard_open {
+                s.degraded = true;
+                s.last_transition = Some(s.window_clock);
+                s.degrades += 1;
+                s.hot_windows = 0;
+                s.strikes = 0;
+                s.calm_windows = 0;
+                return DegradeAction::Degrade;
+            }
+            DegradeAction::None
+        } else {
+            if strikes > 0 || occupancy > p.occupancy_low {
+                s.calm_windows = 0;
+                return DegradeAction::None;
+            }
+            s.calm_windows = s.calm_windows.saturating_add(1);
+            if s.calm_windows >= p.probe_interval && guard_open {
+                s.calm_windows = 0;
+                s.probes += 1;
+                return DegradeAction::Probe;
+            }
+            DegradeAction::None
+        }
+    }
+
+    /// Report the outcome of a probe this controller asked for. A
+    /// healthy probe recovers the class (the flap guard was already
+    /// checked when the probe was issued); a failed probe restarts the
+    /// calm-window count.
+    pub fn on_probe_result(&mut self, kind: TransferKind, healthy: bool) -> DegradeAction {
+        let s = &mut self.state[kind_index(kind)];
+        if !s.degraded || !healthy {
+            return DegradeAction::None;
+        }
+        s.degraded = false;
+        s.last_transition = Some(s.window_clock);
+        s.recoveries += 1;
+        s.hot_windows = 0;
+        s.strikes = 0;
+        s.calm_windows = 0;
+        DegradeAction::Recover
+    }
+
+    /// Is `kind` currently on the degraded side of the machine?
+    pub fn is_degraded(&self, kind: TransferKind) -> bool {
+        self.state[kind_index(kind)].degraded
+    }
+
+    /// Lifetime `(degrades, recoveries, probes)` for `kind`.
+    pub fn counts(&self, kind: TransferKind) -> (u64, u64, u64) {
+        let s = &self.state[kind_index(kind)];
+        (s.degrades, s.recoveries, s.probes)
     }
 }
 
@@ -279,5 +519,179 @@ mod tests {
         assert!(tracker.record_failure(TransferKind::SsmState, dp, &mut policy));
         assert_eq!(policy.codec_for(TransferKind::SsmState), CodecKind::Raw);
         assert_eq!(policy.codec_for(TransferKind::Weights), CodecKind::Huffman);
+    }
+
+    #[test]
+    fn recover_restores_the_displaced_codec_and_resets_strikes() {
+        // ISSUE 9: the round-trip is lossless on the policy itself — a
+        // BDI class that degrades comes back as BDI, not as Huffman.
+        let mut policy = CodecPolicy::bdi_state();
+        let mut tracker = DegradeTracker::new();
+        let dp = DegradePolicy::paper_default();
+        for _ in 0..3 {
+            tracker.record_failure(TransferKind::SsmState, dp, &mut policy);
+        }
+        assert_eq!(policy.codec_for(TransferKind::SsmState), CodecKind::Raw);
+        assert!(tracker.recover(TransferKind::SsmState, &mut policy));
+        assert_eq!(policy.codec_for(TransferKind::SsmState), CodecKind::Bdi);
+        assert!(!tracker.is_degraded(TransferKind::SsmState));
+        assert_eq!(tracker.failures(TransferKind::SsmState), 0);
+        // Idempotent: recovering a healthy class is a no-op.
+        assert!(!tracker.recover(TransferKind::SsmState, &mut policy));
+        // And the class can degrade again — fresh three strikes needed.
+        assert!(!tracker.record_failure(TransferKind::SsmState, dp, &mut policy));
+        assert!(!tracker.record_failure(TransferKind::SsmState, dp, &mut policy));
+        assert!(tracker.record_failure(TransferKind::SsmState, dp, &mut policy));
+    }
+
+    #[test]
+    fn force_degrade_bypasses_strikes_and_round_trips() {
+        let mut policy = CodecPolicy::lexi_default();
+        let mut tracker = DegradeTracker::new();
+        assert!(tracker.force_degrade(TransferKind::KvCache, &mut policy));
+        assert_eq!(policy.codec_for(TransferKind::KvCache), CodecKind::Raw);
+        assert_eq!(tracker.degraded_kinds(), vec![TransferKind::KvCache]);
+        assert!(!tracker.force_degrade(TransferKind::KvCache, &mut policy));
+        assert!(tracker.recover(TransferKind::KvCache, &mut policy));
+        assert_eq!(policy.codec_for(TransferKind::KvCache), CodecKind::Huffman);
+        assert!(tracker.degraded_kinds().is_empty());
+    }
+
+    /// Satellite-3 pin: the scripted window sequence and its expected
+    /// action trace are mirrored verbatim in `tools/logic_check.py`
+    /// §[15] — change one side only with the other.
+    #[test]
+    fn hysteresis_round_trip_scripted_trace() {
+        let p = HysteresisPolicy {
+            strike_threshold: 3,
+            occupancy_high: 0.85,
+            occupancy_low: 0.60,
+            sustain_windows: 3,
+            probe_interval: 2,
+            hysteresis_windows: 4,
+        };
+        let mut c = DegradeController::new(p);
+        let k = TransferKind::KvCache;
+        use DegradeAction::*;
+        // (occupancy, strikes) → expected action, window by window.
+        let script = [
+            (0.95, 0, None),    // hot 1
+            (0.50, 0, None),    // cooled — hot resets
+            (0.95, 0, None),    // hot 1
+            (0.95, 0, None),    // hot 2
+            (0.95, 0, Degrade), // hot 3 → degrade (window 5)
+            (0.95, 0, None),    // still hot: no probe while loaded
+            (0.50, 0, None),    // calm 1
+            (0.70, 0, None),    // between thresholds — calm resets
+            (0.50, 0, None),    // calm 1 (window 9 ≥ 5+4: guard open)
+            (0.50, 0, Probe),   // calm 2 → probe
+        ];
+        for (i, &(occ, strikes, want)) in script.iter().enumerate() {
+            assert_eq!(c.on_window(k, occ, strikes), want, "window {}", i + 1);
+        }
+        assert!(c.is_degraded(k));
+        assert_eq!(c.on_probe_result(k, true), Recover);
+        assert!(!c.is_degraded(k));
+        assert_eq!(c.counts(k), (1, 1, 1));
+        // Strike path degrades too — but the flap guard holds it until
+        // 4 windows after the recovery at window 10.
+        assert_eq!(c.on_window(k, 0.10, 3), None); // window 11: guard closed
+        assert_eq!(c.on_window(k, 0.10, 0), None);
+        assert_eq!(c.on_window(k, 0.10, 0), None);
+        assert_eq!(c.on_window(k, 0.10, 0), Degrade); // window 14: guard opens
+        assert_eq!(c.counts(k), (2, 1, 1));
+    }
+
+    #[test]
+    fn hysteresis_never_flaps_faster_than_the_window() {
+        // Worst-case oscillating health: occupancy alternates far above
+        // high and far below low every window, and every probe
+        // succeeds. Transitions must still be ≥ hysteresis_windows
+        // apart — the machine cannot track the oscillation.
+        let p = HysteresisPolicy {
+            strike_threshold: 3,
+            occupancy_high: 0.85,
+            occupancy_low: 0.60,
+            sustain_windows: 1,
+            probe_interval: 1,
+            hysteresis_windows: 6,
+        };
+        let mut c = DegradeController::new(p);
+        let k = TransferKind::Activation;
+        let mut transitions: Vec<u64> = Vec::new();
+        for w in 1..=200u64 {
+            let occ = if w % 2 == 0 { 0.99 } else { 0.01 };
+            match c.on_window(k, occ, 0) {
+                DegradeAction::Degrade => transitions.push(w),
+                DegradeAction::Probe => {
+                    if c.on_probe_result(k, true) == DegradeAction::Recover {
+                        transitions.push(w);
+                    }
+                }
+                _ => {}
+            }
+        }
+        assert!(
+            transitions.len() >= 4,
+            "oscillation produced too few transitions to check spacing: {transitions:?}"
+        );
+        for pair in transitions.windows(2) {
+            assert!(
+                pair[1] - pair[0] >= u64::from(p.hysteresis_windows),
+                "flapped faster than the hysteresis window: {transitions:?}"
+            );
+        }
+        let (d, r, _) = c.counts(k);
+        // 200 windows / 6-window guard bounds the total transition count.
+        assert!(d + r <= 200 / 6 + 1, "degrades {d} + recoveries {r}");
+    }
+
+    #[test]
+    fn hysteresis_band_blocks_mid_band_oscillation_entirely() {
+        // Occupancy bouncing *inside* the band (0.60, 0.85) must cause
+        // zero transitions in either direction.
+        let mut c = DegradeController::new(HysteresisPolicy::paper_default());
+        let k = TransferKind::KvCache;
+        for w in 0..100 {
+            let occ = if w % 2 == 0 { 0.85 - 1e-9 } else { 0.60 + 1e-9 };
+            assert_eq!(c.on_window(k, occ, 0), DegradeAction::None);
+        }
+        assert_eq!(c.counts(k), (0, 0, 0));
+        // Same from the degraded side.
+        let mut c = DegradeController::new(HysteresisPolicy::paper_default());
+        for _ in 0..3 {
+            c.on_window(k, 0.99, 0);
+        }
+        assert!(c.is_degraded(k));
+        for w in 0..100 {
+            let occ = if w % 2 == 0 { 0.84 } else { 0.61 };
+            assert_eq!(c.on_window(k, occ, 0), DegradeAction::None);
+        }
+        assert!(c.is_degraded(k), "mid-band occupancy must not probe");
+        assert_eq!(c.counts(k).2, 0);
+    }
+
+    #[test]
+    fn failed_probe_keeps_the_class_degraded_and_restarts_calm_count() {
+        let p = HysteresisPolicy {
+            probe_interval: 2,
+            hysteresis_windows: 1,
+            ..HysteresisPolicy::paper_default()
+        };
+        let mut c = DegradeController::new(p);
+        let k = TransferKind::Weights;
+        for _ in 0..3 {
+            c.on_window(k, 0.99, 0);
+        }
+        assert!(c.is_degraded(k));
+        assert_eq!(c.on_window(k, 0.1, 0), DegradeAction::None);
+        assert_eq!(c.on_window(k, 0.1, 0), DegradeAction::Probe);
+        assert_eq!(c.on_probe_result(k, false), DegradeAction::None);
+        assert!(c.is_degraded(k));
+        // The calm count restarted: two more calm windows to re-probe.
+        assert_eq!(c.on_window(k, 0.1, 0), DegradeAction::None);
+        assert_eq!(c.on_window(k, 0.1, 0), DegradeAction::Probe);
+        assert_eq!(c.on_probe_result(k, true), DegradeAction::Recover);
+        assert_eq!(c.counts(k), (1, 1, 2));
     }
 }

@@ -45,9 +45,60 @@ pub const RETRY_BUDGET: u32 = 4;
 
 /// Retransmission backoff in cycles before retry attempt `attempt`
 /// (1-based): exponential `8 · 2^(attempt−1)`, capped at 256 cycles so
-/// budget exhaustion is reached in bounded sim time.
+/// budget exhaustion is reached in bounded sim time. Equivalent to
+/// [`RetryConfig::paper_default`]`.backoff(attempt)` — the configurable
+/// form ISSUE 9 added; this free function is the fixed paper point.
 pub fn retry_backoff(attempt: u32) -> u64 {
-    (8u64 << attempt.saturating_sub(1).min(32)).min(256)
+    RetryConfig::paper_default().backoff(attempt)
+}
+
+/// Configurable NACK-retry policy (ISSUE 9 satellite): the budget and
+/// exponential-backoff shape that were hard-wired as [`RETRY_BUDGET`] /
+/// `8·2^(attempt−1)` capped at 256 since ISSUE 6. The default is
+/// bit-identical to the old constants (pinned by test); the CLI exposes
+/// `--retry-budget N --backoff-cap C`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryConfig {
+    /// Maximum retransmissions per packet before the loss is reported
+    /// as dropped (typed, never silent).
+    pub budget: u32,
+    /// Backoff before attempt 1, in cycles; doubles per attempt.
+    pub backoff_base: u64,
+    /// Backoff ceiling in cycles, so budget exhaustion stays bounded.
+    pub backoff_cap: u64,
+}
+
+impl RetryConfig {
+    /// The ISSUE 6 constants: budget 4, base 8, cap 256.
+    pub fn paper_default() -> Self {
+        RetryConfig {
+            budget: RETRY_BUDGET,
+            backoff_base: 8,
+            backoff_cap: 256,
+        }
+    }
+
+    /// Backoff in cycles before retry attempt `attempt` (1-based):
+    /// `base · 2^(attempt−1)`, saturating, capped at `backoff_cap`.
+    pub fn backoff(&self, attempt: u32) -> u64 {
+        let shift = attempt.saturating_sub(1).min(32);
+        self.backoff_base
+            .saturating_mul(1u64 << shift)
+            .min(self.backoff_cap)
+    }
+
+    /// Total backoff stall across a fully exhausted budget, in cycles —
+    /// the worst-case quiet spell the watchdog window must tolerate and
+    /// the deadline accounting charges a retried request.
+    pub fn max_total_backoff(&self) -> u64 {
+        (1..=self.budget).map(|a| self.backoff(a)).sum()
+    }
+}
+
+impl Default for RetryConfig {
+    fn default() -> Self {
+        Self::paper_default()
+    }
 }
 
 /// Seeded fault injector for NoC links.
@@ -58,6 +109,7 @@ pub struct FaultModel {
     drop_prob: f64,
     dup_prob: f64,
     link_downs: Vec<LinkDown>,
+    retry: RetryConfig,
     rng: Rng,
 }
 
@@ -71,6 +123,7 @@ impl FaultModel {
             drop_prob: 0.0,
             dup_prob: 0.0,
             link_downs: Vec::new(),
+            retry: RetryConfig::paper_default(),
             rng: Rng::new(seed),
         }
     }
@@ -100,6 +153,19 @@ impl FaultModel {
         self.link_downs.push(LinkDown { a, b, at });
         self.link_downs.sort_by_key(|e| e.at);
         self
+    }
+
+    /// Override the NACK-retry budget/backoff this model's network
+    /// should honour (ISSUE 9). The default is the ISSUE 6 paper point.
+    pub fn with_retry(mut self, retry: RetryConfig) -> Self {
+        self.retry = retry;
+        self
+    }
+
+    /// The retry policy packets under this model travel with. The
+    /// network copies it on [`set_fault_model`](crate::Network::set_fault_model).
+    pub fn retry(&self) -> RetryConfig {
+        self.retry
     }
 
     /// Scheduled permanent link failures, ascending by cycle.
@@ -211,6 +277,42 @@ mod tests {
         assert_eq!(f.link_downs()[1].at, 500);
         // Permanent failures alone don't arm the per-flit transient
         // path (zero-overhead healthy stepping stays intact).
+        assert!(!f.enabled());
+    }
+
+    #[test]
+    fn retry_config_default_is_bit_identical_to_the_issue6_constants() {
+        // ISSUE 9 satellite pin: making the budget/backoff configurable
+        // must not move the default by one cycle.
+        let cfg = RetryConfig::paper_default();
+        assert_eq!(cfg.budget, RETRY_BUDGET);
+        for attempt in (0..64).chain([u32::MAX - 1, u32::MAX]) {
+            assert_eq!(
+                cfg.backoff(attempt),
+                (8u64 << attempt.saturating_sub(1).min(32)).min(256),
+                "attempt {attempt}"
+            );
+            assert_eq!(cfg.backoff(attempt), retry_backoff(attempt));
+        }
+        assert_eq!(cfg.max_total_backoff(), 8 + 16 + 32 + 64);
+        assert_eq!(FaultModel::new(1).retry(), cfg);
+    }
+
+    #[test]
+    fn retry_config_override_shapes_budget_and_cap() {
+        let cfg = RetryConfig {
+            budget: 2,
+            backoff_base: 4,
+            backoff_cap: 10,
+        };
+        assert_eq!(cfg.backoff(1), 4);
+        assert_eq!(cfg.backoff(2), 8);
+        assert_eq!(cfg.backoff(3), 10); // capped
+        assert_eq!(cfg.backoff(u32::MAX), 10); // saturating, no overflow
+        assert_eq!(cfg.max_total_backoff(), 4 + 8);
+        let f = FaultModel::new(5).with_retry(cfg);
+        assert_eq!(f.retry(), cfg);
+        // Retry policy alone never arms the per-flit transient path.
         assert!(!f.enabled());
     }
 

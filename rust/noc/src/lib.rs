@@ -49,7 +49,7 @@ pub mod topology;
 pub mod traffic;
 
 pub use egress::{EgressCodecConfig, EgressPort};
-pub use fault::{FaultModel, LinkDown};
+pub use fault::{FaultModel, LinkDown, RetryConfig};
 pub use ingress::{IngressCodecConfig, IngressPort};
 pub use network::{
     CreditViolation, Network, NetworkConfig, SimStats, StallCause, StallReport, StuckPacket,

@@ -22,7 +22,9 @@
 //! a wormhole body can never vanish mid-packet); a *corrupted* flit
 //! marks its packet dirty so the egress CRC check NACKs the tail, which
 //! schedules a retransmission after an exponential backoff (bounded by
-//! [`RETRY_BUDGET`], after which the loss is reported in
+//! the [`RetryConfig`] budget — ISSUE 6's fixed
+//! [`RETRY_BUDGET`](crate::fault::RETRY_BUDGET) until ISSUE 9 made it
+//! configurable — after which the loss is reported in
 //! [`SimStats::packets_dropped`]); a *duplicated* flit costs one extra
 //! cycle of downstream occupancy (the receiver squashes the copy by
 //! sequence number). Retransmission latency — backoff plus the repeat
@@ -59,7 +61,7 @@
 //! reroute or typed-unreachable, never silently lost, never hung.
 
 use crate::egress::{self, EgressCodecConfig, EgressPort};
-use crate::fault::{retry_backoff, FaultModel, LinkDown, RETRY_BUDGET};
+use crate::fault::{FaultModel, LinkDown, RetryConfig};
 use crate::ingress::{IngressCodecConfig, IngressPort};
 use crate::packet::{Flit, FlitKind, PacketRecord, PacketSpec};
 use crate::reroute::{EscapeRoutes, LinkState};
@@ -180,8 +182,8 @@ pub struct SimStats {
     pub flits_duplicated: u64,
     /// Packet retransmissions scheduled after an egress-CRC NACK.
     pub packet_retries: u64,
-    /// Packets abandoned after exhausting [`RETRY_BUDGET`]
-    /// retransmissions — reported, never silently lost.
+    /// Packets abandoned after exhausting the [`RetryConfig`] budget
+    /// of retransmissions — reported, never silently lost.
     pub packets_dropped: u64,
     /// Permanent link failures applied so far (ISSUE 7).
     pub links_down: u64,
@@ -356,6 +358,10 @@ pub struct Network {
     fault: Option<FaultModel>,
     /// NACKed packets waiting out their retransmission backoff.
     retry_queue: Vec<RetryEntry>,
+    /// NACK-retry budget/backoff policy (ISSUE 9): defaults to the
+    /// ISSUE 6 paper point; [`Network::set_fault_model`] adopts the
+    /// attached model's policy, [`Network::set_retry_config`] overrides.
+    retry: RetryConfig,
     /// Ingress encoder model; `None` = codec-blind unbounded-NI
     /// injection (ISSUE 7).
     ingress_cfg: Option<IngressCodecConfig>,
@@ -396,6 +402,7 @@ impl Network {
             egress: vec![EgressPort::default(); n],
             fault: None,
             retry_queue: Vec::new(),
+            retry: RetryConfig::paper_default(),
             ingress_cfg: None,
             ingress: vec![IngressPort::default(); n],
             pending_link_downs: Vec::new(),
@@ -459,7 +466,20 @@ impl Network {
             );
         }
         self.pending_link_downs = fault.link_downs().to_vec();
+        self.retry = fault.retry();
         self.fault = Some(fault);
+    }
+
+    /// Override the NACK-retry budget/backoff policy directly (without
+    /// attaching a fault model). Retries also arise from permanent
+    /// link-down truncation, so the policy matters even fault-model-free.
+    pub fn set_retry_config(&mut self, retry: RetryConfig) {
+        self.retry = retry;
+    }
+
+    /// The active NACK-retry policy.
+    pub fn retry_config(&self) -> RetryConfig {
+        self.retry
     }
 
     /// The output port of `a` that reaches `b`, if the two are adjacent.
@@ -860,12 +880,12 @@ impl Network {
                             // Retransmit after an exponential backoff, or
                             // report the loss once the budget is spent —
                             // never hang, never silently deliver garbage.
-                            if m.attempt < RETRY_BUDGET {
+                            if m.attempt < self.retry.budget {
                                 let next = m.attempt + 1;
                                 self.stats.packet_retries += 1;
                                 self.retry_queue.push(RetryEntry {
                                     spec: m.spec,
-                                    due: self.now + 1 + retry_backoff(next),
+                                    due: self.now + 1 + self.retry.backoff(next),
                                     attempt: next,
                                     first_inject: inject_cycle,
                                 });
@@ -1279,12 +1299,12 @@ impl Network {
         if !reachable {
             self.stats.packets_unreachable += 1;
             self.unreachable.push(m.spec);
-        } else if m.attempt < RETRY_BUDGET {
+        } else if m.attempt < self.retry.budget {
             let next = m.attempt + 1;
             self.stats.packet_retries += 1;
             self.retry_queue.push(RetryEntry {
                 spec: m.spec,
-                due: self.now + 1 + retry_backoff(next),
+                due: self.now + 1 + self.retry.backoff(next),
                 attempt: next,
                 first_inject: m.first_inject.or(m.head_inject).unwrap_or(self.now),
             });
@@ -1335,6 +1355,7 @@ impl Network {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fault::{retry_backoff, RETRY_BUDGET};
     use crate::packet::CodecTag;
     use lexi_core::codec::CodecKind;
 
@@ -1750,6 +1771,47 @@ mod tests {
             "cycles {} below backoff floor {backoffs}",
             stats.cycles
         );
+    }
+
+    #[test]
+    fn retry_config_override_moves_the_drop_point_and_backoff_clock() {
+        // ISSUE 9 satellite: the budget/backoff are knobs now. A budget
+        // of 1 under BER=1.0 drops after a single retransmission; a
+        // larger base/cap stretches the deterministic backoff clock.
+        let run = |retry: RetryConfig| {
+            let mut net = Network::with_faults(
+                cfg_4x4(),
+                FaultModel::new(1).with_ber(1.0).with_retry(retry),
+            );
+            assert_eq!(net.retry_config(), retry);
+            net.schedule_packets(&[PacketSpec::new(NodeId(0), NodeId(3), 128 * 4, 0)]);
+            net.run_to_completion(10_000)
+        };
+        let tight = run(RetryConfig {
+            budget: 1,
+            ..RetryConfig::paper_default()
+        });
+        assert_eq!(tight.packets_dropped, 1);
+        assert_eq!(tight.packet_retries, 1);
+        let slow = run(RetryConfig {
+            backoff_base: 64,
+            backoff_cap: 4096,
+            ..RetryConfig::paper_default()
+        });
+        assert_eq!(slow.packet_retries, u64::from(RETRY_BUDGET));
+        let floor: u64 = (1..=RETRY_BUDGET)
+            .map(|a| (64u64 << (a - 1).min(32)).min(4096))
+            .sum();
+        assert!(
+            slow.cycles >= floor,
+            "cycles {} below stretched backoff floor {floor}",
+            slow.cycles
+        );
+        // And the default path is bit-identical to the pre-knob network.
+        let default_cfg = run(RetryConfig::paper_default());
+        let mut legacy = Network::with_faults(cfg_4x4(), FaultModel::new(1).with_ber(1.0));
+        legacy.schedule_packets(&[PacketSpec::new(NodeId(0), NodeId(3), 128 * 4, 0)]);
+        assert_eq!(default_cfg, legacy.run_to_completion(10_000));
     }
 
     #[test]

@@ -163,6 +163,24 @@ impl Engine {
         self.degrade_tracker.degraded_kinds()
     }
 
+    /// Degrade `kind` to Raw immediately (ISSUE 9): the congestion
+    /// controller — not a decode failure — decided the class must stop
+    /// paying codec startup. The displaced codec is remembered for
+    /// [`Engine::record_recovery`]. Returns `true` iff this call
+    /// flipped the class.
+    pub fn force_degrade(&mut self, kind: TransferKind) -> bool {
+        self.degrade_tracker
+            .force_degrade(kind, &mut self.codec_policy)
+    }
+
+    /// Restore a degraded class after a successful recovery probe
+    /// (ISSUE 9): the codec it ran before degradation comes back and
+    /// its strike count is zeroed. Returns `true` iff the class was
+    /// degraded.
+    pub fn record_recovery(&mut self, kind: TransferKind) -> bool {
+        self.degrade_tracker.recover(kind, &mut self.codec_policy)
+    }
+
     /// Duration of one flit on a link, ns.
     pub fn cycle_ns(&self) -> f64 {
         self.flit_bits as f64 / self.link_gbps
@@ -801,6 +819,45 @@ mod tests {
             base.by_kind[&TransferKind::Activation],
             deg.by_kind[&TransferKind::Activation]
         );
+    }
+
+    #[test]
+    fn forced_degrade_round_trip_restores_the_paper_point() {
+        // ISSUE 9: congestion-driven degrade + probe-driven recovery
+        // must be lossless on the engine — after the round trip every
+        // price equals the untouched paper point bit-for-bit.
+        let cfg = ModelConfig::jamba(ModelScale::Paper);
+        let (eng, crs) = setup(&cfg);
+        let corpus = Corpus::wikitext2();
+        let mut hot = eng.clone();
+        assert!(hot.force_degrade(TransferKind::KvCache));
+        assert!(!hot.force_degrade(TransferKind::KvCache), "idempotent");
+        assert_eq!(hot.degraded_kinds(), vec![TransferKind::KvCache]);
+        assert_eq!(
+            hot.codec_policy.codec_for(TransferKind::KvCache),
+            CodecKind::Raw
+        );
+        // Degraded KV is cheaper per small transfer (no Huffman
+        // startup): that is the congestion-relief mechanism the
+        // serving controller relies on.
+        let mut kv = traffic::decode_step(&cfg, &corpus, 0)
+            .into_iter()
+            .find(|t| t.kind == TransferKind::KvCache)
+            .expect("jamba decode step has a KV transfer");
+        kv.bytes = 2048;
+        assert!(
+            hot.transfer_ns(&kv, CompressionMode::Lexi, &crs)
+                < eng.transfer_ns(&kv, CompressionMode::Lexi, &crs),
+            "raw small KV should undercut huffman startup"
+        );
+        assert!(hot.record_recovery(TransferKind::KvCache));
+        assert!(!hot.record_recovery(TransferKind::KvCache), "idempotent");
+        assert!(hot.degraded_kinds().is_empty());
+        assert_eq!(hot.codec_policy, eng.codec_policy);
+        assert_eq!(hot.decode_failures(TransferKind::KvCache), 0);
+        let base = eng.run(&cfg, &corpus, CompressionMode::Lexi, &crs);
+        let back = hot.run(&cfg, &corpus, CompressionMode::Lexi, &crs);
+        assert_eq!(base.by_kind, back.by_kind);
     }
 
     #[test]

@@ -18,15 +18,24 @@
 //!   replays the same transfers through `Engine::transfer_ns` and a
 //!   codec-tagged `lexi-noc` network with egress decoder ports, pinning
 //!   the agreement bands.
+//! * [`serving`] — open-loop trace-driven multi-tenant serving (ISSUE 9):
+//!   seeded Poisson/bursty arrivals over a mixed fleet with
+//!   deadline-aware admission (typed load-shedding + capped-backoff
+//!   retries), hysteresis-controlled congestion degradation, and a
+//!   chaos soak over the fault-injected cycle-level network.
 
 pub mod compression;
 pub mod compute;
 pub mod energy;
 pub mod engine;
+pub mod serving;
 pub mod simba;
 pub mod xval;
 
 pub use compression::{CompressionMode, CrTable};
 pub use engine::{E2eReport, Engine};
+pub use serving::{
+    run_chaos, ChaosConfig, ChaosReport, ServingConfig, ServingSim, ServingStats, Surge, TraceKind,
+};
 pub use simba::SimbaSystem;
 pub use xval::XvalReport;

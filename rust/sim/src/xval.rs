@@ -172,6 +172,29 @@ pub fn duplex_configs_for(
     (icfg, ecfg)
 }
 
+/// A full-duplex network matched to this engine for serving-trace
+/// replays (ISSUE 9): ingress + egress codec ports split the
+/// runtime-Huffman startup the way [`duplex_configs_for`] pins, an
+/// optional fault model brings the ISSUE 6/7 machinery (BER, drops,
+/// dups, permanent link kills, NACK retry policy), and the default
+/// zero-progress watchdog stays armed. `lexi_sim::serving::run_chaos`
+/// closes its admission loop over this network's
+/// [`Network::try_inject`] backpressure.
+pub fn serving_network(
+    engine: &Engine,
+    crs: &CrTable,
+    kind: TransferKind,
+    fault: Option<FaultModel>,
+) -> Network {
+    let (icfg, ecfg) = duplex_configs_for(engine, crs, kind);
+    let mut net = Network::with_egress(network_config_for(engine), ecfg);
+    net.set_ingress_config(icfg);
+    if let Some(f) = fault {
+        net.set_fault_model(f);
+    }
+    net
+}
+
 /// The [`CodecTag`] a transfer travels under through this engine's
 /// policy, or `None` when `mode` leaves it uncompressed: one exponent
 /// symbol per BF16 value, runtime-book startup on non-weight Huffman.

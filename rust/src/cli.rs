@@ -10,6 +10,7 @@
 //!               [--ber RATE] [--drop P] [--dup P] [--fault-seed N]
 //!               [--link-down A-B[@CYCLE]] [--watchdog N]
 //! lexi dse      [--what hitrate|codebook|decoder|codec] [--model jamba]
+//! lexi serve    [--trace poisson|burst] [--load F] [--deadline NS] [--seed S]
 //! ```
 
 use crate::coordinator::Session;
@@ -24,9 +25,10 @@ use lexi_models::corpus::Corpus;
 use lexi_models::traffic::TransferKind;
 use lexi_models::weights::WeightStream;
 use lexi_models::{CodecPolicy, DegradePolicy, DegradeTracker, ModelConfig, ModelScale};
-use lexi_noc::{FaultModel, Mesh, Network, NetworkConfig, NodeId};
+use lexi_noc::{FaultModel, Mesh, Network, NetworkConfig, NodeId, RetryConfig};
 use lexi_sim::compression::{CompressionMode, CrTable};
 use lexi_sim::engine::Engine;
+use lexi_sim::serving::{ServingConfig, ServingSim, ServingStats, TraceKind};
 use std::collections::HashMap;
 
 /// Parsed flags: `--key value` pairs after the subcommand.
@@ -118,11 +120,18 @@ fn print_help() {
          \x20          --link-down A-B[@CYCLE]: permanent link failure — severed\n\
          \x20          wormholes truncate + retry over escape routes, or report\n\
          \x20          typed unreachability; --watchdog N: stall watchdog window\n\
-         \x20          in cycles — a hung run terminates with a stall report)\n\
+         \x20          in cycles — a hung run terminates with a stall report;\n\
+         \x20          --retry-budget N --backoff-cap C: NACK-recovery envelope,\n\
+         \x20          defaults pinned to the paper schedule)\n\
          \x20 dse      --what hitrate|codebook|decoder|codec — design-space sweeps\n\
          \x20          (Figs 4-6; 'codec' prints the per-kind Huffman/BDI/Raw table)\n\
          \x20 energy   interconnect energy per inference (link vs codec)\n\
-         \x20 serve    --requests N — concurrent-decode throughput ceiling"
+         \x20 serve    --requests N — concurrent-decode throughput ceiling, or\n\
+         \x20          --trace poisson|burst --load F --deadline NS --seed S:\n\
+         \x20          open-loop multi-tenant serving with deadline-aware\n\
+         \x20          admission, hysteresis degradation + probe recovery\n\
+         \x20          (--nodes N --queue-depth D --admission on|off\n\
+         \x20          --retry-budget N --backoff-cap C)"
     );
 }
 
@@ -380,6 +389,15 @@ fn cmd_noc(flags: &Flags) -> Result<()> {
     let drop_p = flags.get_f64("drop", 0.0)?;
     let dup_p = flags.get_f64("dup", 0.0)?;
     let fault_seed = flags.get_usize("fault-seed", 0xFA17)? as u64;
+    // --retry-budget/--backoff-cap tune the NACK-recovery envelope
+    // (ISSUE 9): defaults reproduce the pinned paper-default schedule
+    // bit-for-bit, so existing runs are unchanged.
+    let retry_default = RetryConfig::paper_default();
+    let retry = RetryConfig {
+        budget: flags.get_usize("retry-budget", retry_default.budget as usize)? as u32,
+        backoff_cap: flags.get_usize("backoff-cap", retry_default.backoff_cap as usize)? as u64,
+        ..retry_default
+    };
     // --watchdog N overrides the stall-watchdog window (ISSUE 7).
     let watchdog = flags.get_usize("watchdog", 0)?;
     // --link-down A-B[@CYCLE] schedules permanent link failures
@@ -443,7 +461,8 @@ fn cmd_noc(flags: &Flags) -> Result<()> {
     let mut fault = FaultModel::new(fault_seed)
         .with_ber(ber)
         .with_drop(drop_p)
-        .with_dup(dup_p);
+        .with_dup(dup_p)
+        .with_retry(retry);
     let faults_on = fault.enabled();
     for &(a, b, at) in &link_downs {
         fault = fault.with_link_down(a, b, at);
@@ -516,10 +535,11 @@ fn cmd_noc(flags: &Flags) -> Result<()> {
         );
         println!(
             "recovery: {} packet retries, {} packets dropped after the \
-             {}-retry budget",
+             {}-retry budget (backoff cap {} cycles)",
             stats.packet_retries,
             stats.packets_dropped,
-            lexi_noc::fault::RETRY_BUDGET
+            retry.budget,
+            retry.backoff_cap
         );
         // Graceful degradation (ISSUE 6): every NACK is a decode
         // failure against the class this traffic stands in for
@@ -733,9 +753,117 @@ fn cmd_energy(_flags: &Flags) -> Result<()> {
     Ok(())
 }
 
-// --- serve (extension) --------------------------------------------------------
+// --- serve (extension + ISSUE 9 trace-driven mode) ----------------------------
 
 fn cmd_serve(flags: &Flags) -> Result<()> {
+    // `--trace` selects the open-loop multi-tenant serving simulator
+    // (ISSUE 9); without it the legacy concurrent-decode ceiling sweep
+    // runs unchanged.
+    let trace_s = flags.get("trace", "");
+    if trace_s.is_empty() {
+        return cmd_serve_concurrent(flags);
+    }
+    let trace = TraceKind::parse(trace_s)
+        .ok_or_else(|| anyhow!("bad --trace '{trace_s}' (want poisson|burst)"))?;
+    let mut cfg = ServingConfig::paper_default();
+    cfg.trace = trace;
+    cfg.load = flags.get_f64("load", cfg.load)?;
+    cfg.requests = flags.get_usize("requests", cfg.requests)?;
+    cfg.deadline_ns = flags.get_usize("deadline", cfg.deadline_ns as usize)? as u64;
+    cfg.seed = flags.get_usize("seed", cfg.seed as usize)? as u64;
+    cfg.nodes = flags.get_usize("nodes", cfg.nodes)?;
+    cfg.queue_depth = flags.get_usize("queue-depth", cfg.queue_depth)?;
+    cfg.retry = RetryConfig {
+        budget: flags.get_usize("retry-budget", cfg.retry.budget as usize)? as u32,
+        backoff_cap: flags.get_usize("backoff-cap", cfg.retry.backoff_cap as usize)? as u64,
+        ..cfg.retry
+    };
+    cfg.admission = match flags.get("admission", "on") {
+        "on" => true,
+        "off" => false,
+        other => bail!("bad --admission '{other}' (want on|off)"),
+    };
+    if cfg.load <= 0.0 {
+        bail!("--load must be positive");
+    }
+
+    let mut t = Table::new(&[
+        "mode",
+        "delivered",
+        "shed (deadline)",
+        "late",
+        "p50",
+        "p99",
+        "p999",
+        "goodput/s",
+    ]);
+    let mut lexi_detail: Option<(ServingStats, String, u64)> = None;
+    for mode in [CompressionMode::Uncompressed, CompressionMode::Lexi] {
+        let mut mc = cfg.clone();
+        mc.mode = mode;
+        let mut sim = ServingSim::new(mc);
+        let stats = sim.run();
+        t.row(vec![
+            format!("{mode:?}"),
+            stats.delivered.to_string(),
+            format!("{} ({})", stats.shed, stats.shed_deadline),
+            stats.deadline_missed.to_string(),
+            fmt_ns(stats.p50_ns as f64),
+            fmt_ns(stats.p99_ns as f64),
+            fmt_ns(stats.p999_ns as f64),
+            format!("{:.0}", stats.goodput_rps),
+        ]);
+        if mode == CompressionMode::Lexi {
+            let degraded = sim.engine.degraded_kinds();
+            let state = if degraded.is_empty() {
+                "healthy".to_string()
+            } else {
+                format!("degraded {degraded:?}")
+            };
+            lexi_detail = Some((stats, state, sim.resolved_deadline_ns()));
+        }
+    }
+    let (s, final_state, deadline_ns) = lexi_detail.expect("LEXI run always executes");
+    println!(
+        "trace={trace_s} load={} requests={} seed={} nodes={} deadline={}",
+        cfg.load,
+        cfg.requests,
+        cfg.seed,
+        cfg.nodes,
+        fmt_ns(deadline_ns as f64)
+    );
+    t.print();
+    println!(
+        "resolution (LEXI): offered {} = delivered {} + shed {} \
+         (every request resolves exactly once: {})",
+        s.offered,
+        s.delivered,
+        s.shed,
+        s.consistent()
+    );
+    println!(
+        "admission: {} client retries consumed (budget {}, backoff cap {})",
+        s.retries, cfg.retry.budget, cfg.retry.backoff_cap
+    );
+    println!(
+        "controller: {} degrades / {} recoveries / {} probes; final codec state {}",
+        s.degrades, s.recoveries, s.probes, final_state
+    );
+    if !s.transitions.is_empty() {
+        println!("transitions (window, degraded?): {:?}", s.transitions);
+    }
+    let cache_total = (s.cache.hits + s.cache.misses).max(1);
+    println!(
+        "lane cache: {:.1}% hit, {} evictions ({:.1}% of accesses) under \
+         per-tenant codebook churn",
+        100.0 * s.cache.hits as f64 / cache_total as f64,
+        s.cache.evictions,
+        s.cache.eviction_rate() * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_serve_concurrent(flags: &Flags) -> Result<()> {
     let max_req = flags.get_usize("requests", 64)?;
     let engine = Engine::paper_default();
     let corpus = Corpus::wikitext2();

@@ -22,6 +22,14 @@ in this container). Mirrors the Rust bit-for-bit:
     batch.rs with exhaustive single-bit-flip detection and the 2⁻¹⁶
     multi-bit escape bound; the retry_backoff/RETRY_BUDGET link-retry
     accounting of noc/fault.rs + network.rs)
+  * Serving robustness                (PR 9 — sim/serving.rs arrival
+    traces: inverse-CDF Poisson + the MMPP-2 burst chain with its
+    per-arrival update order; the deadline-aware admission / bounded
+    queue / capped-backoff retry arithmetic with the resolution
+    identity and pathwise-monotone tails; and the two-threshold
+    hysteresis DegradeController of models/policy.rs, mirrored
+    transition-for-transition against the scripted trace the Rust
+    test pins verbatim)
 
 Reference implementations are independent (string-of-bits codec), so a
 mirror bug and a reference bug can't cancel.
@@ -1760,6 +1768,296 @@ def main():
     print(
         f"[14c] grouped SWAR lockstep replay == reference (output + bit positions, "
         f"with and without LUT): {ok14c} streams OK"
+    )
+
+    # ----------------------------------------------------------------------
+    # 15) Serving robustness mirrors (PR 9): sim/serving.rs arrival +
+    #     admission arithmetic and the models/policy.rs hysteresis
+    #     controller. These mirror the *arithmetic* (the Rust Rng
+    #     differs from Python's), so the checks are structural and
+    #     distributional, plus one scripted trace shared verbatim with
+    #     the Rust test `hysteresis_round_trip_scripted_trace`.
+
+    # 15a) Arrival traces. Poisson gaps are inverse-CDF exponentials
+    #      `-ln(1-u)·mean`. The MMPP-2 burst trace updates its state
+    #      per arrival (in_burst: stay iff u>=P_EXIT; enter iff
+    #      u<P_ENTER), giving a stationary per-arrival burst fraction
+    #      P_ENTER/(P_ENTER+P_EXIT); the calm gap is base·BMF with
+    #      burst gaps BURST_FACTOR× shorter, so the expected gap is
+    #      base·BMF·(1 - frac·(1-1/BURST_FACTOR)) — and the bursty
+    #      switching over-disperses interval counts vs Poisson.
+    BURST_FACTOR, P_ENTER, P_EXIT = 4.0, 0.05, 0.2
+    BMF = 1.0 + (BURST_FACTOR - 1.0) * (P_ENTER / (P_ENTER + P_EXIT))
+    arng = random.Random(0x5E41)
+    base_gap = 125.0
+    n_arr = 120_000
+    gaps_p = [-math.log(1.0 - arng.random()) * base_gap for _ in range(n_arr)]
+    mean_p = sum(gaps_p) / n_arr
+    assert abs(mean_p - base_gap) / base_gap < 0.02, mean_p
+    in_burst = False
+    burst_arrivals = 0
+    calm = base_gap * BMF
+    gaps_b = []
+    for _ in range(n_arr):
+        u_state = arng.random()
+        u_gap = arng.random()
+        in_burst = (u_state >= P_EXIT) if in_burst else (u_state < P_ENTER)
+        if in_burst:
+            burst_arrivals += 1
+        g = calm / BURST_FACTOR if in_burst else calm
+        gaps_b.append(-math.log(1.0 - u_gap) * g)
+    frac = burst_arrivals / n_arr
+    stat_frac = P_ENTER / (P_ENTER + P_EXIT)
+    assert abs(frac - stat_frac) < 0.015, frac
+    want_mean = calm * (1.0 - stat_frac * (1.0 - 1.0 / BURST_FACTOR))
+    mean_b = sum(gaps_b) / n_arr
+    assert abs(mean_b - want_mean) / want_mean < 0.03, (mean_b, want_mean)
+
+    def dispersion(gaps, window):
+        counts = []
+        t, nxt, c = 0.0, window, 0
+        for g in gaps:
+            t += g
+            while t >= nxt:
+                counts.append(c)
+                c, nxt = 0, nxt + window
+            c += 1
+        mean = sum(counts) / len(counts)
+        var = sum((x - mean) ** 2 for x in counts) / len(counts)
+        return var / mean
+
+    disp_p = dispersion(gaps_p, 20.0 * base_gap)
+    disp_b = dispersion(gaps_b, 20.0 * base_gap)
+    assert disp_p < 1.15, disp_p  # Poisson counts: var ≈ mean
+    assert disp_b > 1.3 and disp_b > disp_p, (disp_b, disp_p)
+    print(
+        f"[15a] arrival mirrors: Poisson mean gap {mean_p:.1f}≈{base_gap}, MMPP burst "
+        f"fraction {frac:.3f}≈{stat_frac}, dispersion {disp_b:.2f} > {disp_p:.2f} (Poisson)"
+    )
+
+    # 15b) Deadline-aware admission (serving.rs::try_admit + the client
+    #      retry loop). Mirror: per-node single-server FIFO with lazy
+    #      completion pops, completion = max(busy, at) + service;
+    #      predicted deadline misses are terminal (waiting never shrinks
+    #      an absolute backlog), only queue-full refusals earn the
+    #      capped-exponential retry budget (backoff(n) = min(8<<(n-1),
+    #      256) units).
+    def serve_mirror(reqs, nodes, queue_depth, deadline, admission, retry_budget):
+        queues = [[0.0, []] for _ in range(nodes)]  # [busy_until, completions]
+        now = 0.0
+        delivered = shed = shed_deadline = retries = 0
+        lat = []
+        max_resident = 0
+        for gap, node, service in reqs:
+            now += gap
+            at = now
+            attempt = 0
+            while True:
+                busy, comp = queues[node]
+                while comp and comp[0] <= at:
+                    comp.pop(0)
+                depth = len(comp)
+                completion = max(busy, at) + service
+                if admission:
+                    over = completion - now > deadline
+                    if over or depth >= queue_depth:
+                        if over or attempt >= retry_budget:
+                            shed += 1
+                            shed_deadline += 1 if over else 0
+                            break
+                        attempt += 1
+                        retries += 1
+                        at += float(min(8 << min(attempt - 1, 32), 256))
+                        continue
+                queues[node][0] = completion
+                comp.append(completion)
+                max_resident = max(max_resident, len(comp))
+                delivered += 1
+                lat.append(completion - now)
+                break
+        return delivered, shed, shed_deadline, retries, lat, max_resident
+
+    # Scripted: 1 node, service 100, arrivals every 10. Queue-full path
+    # (huge deadline, depth 2): req 3 retries twice (backoff 8 then 16
+    # units, neither frees the queue) and sheds queue-full.
+    script = [(10.0, 0, 100.0)] * 3
+    d, s, sd, r, lat, _ = serve_mirror(script, 1, 2, 1e18, True, 2)
+    assert (d, s, sd, r) == (2, 1, 0, 2), (d, s, sd, r)
+    # Deadline path (deadline 250): req 3's predicted sojourn is 280 —
+    # terminal, no retries consumed.
+    d, s, sd, r, lat, _ = serve_mirror(script, 1, 10, 250.0, True, 2)
+    assert (d, s, sd, r) == (2, 1, 1, 0), (d, s, sd, r)
+    assert lat == [100.0, 190.0], lat
+    # Admission off delivers everything, deadline blown.
+    d, s, sd, r, lat, _ = serve_mirror(script, 1, 10, 250.0, False, 2)
+    assert (d, s) == (3, 0) and lat[-1] == 280.0, (d, s, lat)
+
+    # Property (120 random configs): resolution identity
+    # delivered + shed == offered; resident queue never exceeds the
+    # bound; every admitted sojourn meets the deadline.
+    prng15 = random.Random(0x15B)
+    for _ in range(120):
+        nodes = prng15.randrange(1, 5)
+        depth = prng15.randrange(1, 6)
+        deadline = prng15.uniform(200.0, 2000.0)
+        budget = prng15.randrange(0, 4)
+        n = prng15.randrange(1, 300)
+        reqs = [
+            (
+                -math.log(1.0 - prng15.random()) * prng15.uniform(20.0, 200.0),
+                prng15.randrange(nodes),
+                prng15.uniform(50.0, 400.0),
+            )
+            for _ in range(n)
+        ]
+        d, s, sd, r, lat, resident = serve_mirror(reqs, nodes, depth, deadline, True, budget)
+        assert d + s == n, (d, s, n)
+        assert sd <= s and resident <= depth
+        assert all(x <= deadline + 1e-9 for x in lat)
+
+    # Pathwise monotonicity (the Lindley argument the Rust test
+    # `p99_is_monotone_in_load_and_identity_holds` leans on): identical
+    # draws, gaps scaled by 1/load, shed-free ⇒ every per-request
+    # sojourn (hence p50/p99) is non-decreasing in load.
+    draws = [
+        (prng15.random(), prng15.randrange(4), prng15.uniform(100.0, 300.0))
+        for _ in range(2000)
+    ]
+    prev = None
+    for load in (0.3, 0.6, 0.9, 1.2):
+        reqs = [
+            (-math.log(1.0 - u) * 200.0 / (4 * load), node, svc)
+            for (u, node, svc) in draws
+        ]
+        d, s, _, _, lat, _ = serve_mirror(reqs, 4, 10**9, 1e18, True, 0)
+        assert (d, s) == (len(draws), 0)
+        if prev is not None:
+            assert all(b >= a - 1e-6 for a, b in zip(prev, lat)), load
+        prev = lat
+    print(
+        "[15b] admission mirror: scripted retry/deadline sheds exact, 120 random "
+        "configs hold identity + bounded depth + deadline, sojourns pathwise "
+        "monotone in load"
+    )
+
+    # 15c) Two-threshold hysteresis controller (policy.rs
+    #      DegradeController), mirrored field-for-field.
+    class HystMirror:
+        def __init__(self, strikes, high, low, sustain, probe_interval, guard):
+            self.p = (strikes, high, low, sustain, probe_interval, guard)
+            self.degraded = False
+            self.clock = 0
+            self.last_transition = None
+            self.hot = 0
+            self.strikes = 0
+            self.calm = 0
+            self.counts = [0, 0, 0]  # degrades, recoveries, probes
+
+        def guard_open(self):
+            return self.last_transition is None or (
+                self.clock - self.last_transition >= self.p[5]
+            )
+
+        def on_window(self, occ, strikes):
+            thr, high, low, sustain, probe_interval, _ = self.p
+            self.clock += 1
+            guard = self.guard_open()
+            if not self.degraded:
+                self.strikes += strikes
+                self.hot = self.hot + 1 if occ >= high else 0
+                if (self.strikes >= thr or self.hot >= sustain) and guard:
+                    self.degraded = True
+                    self.last_transition = self.clock
+                    self.counts[0] += 1
+                    self.hot = self.strikes = self.calm = 0
+                    return "degrade"
+                return "none"
+            if strikes > 0 or occ > low:
+                self.calm = 0
+                return "none"
+            self.calm += 1
+            if self.calm >= probe_interval and guard:
+                self.calm = 0
+                self.counts[2] += 1
+                return "probe"
+            return "none"
+
+        def on_probe_result(self, healthy):
+            if not self.degraded or not healthy:
+                return "none"
+            self.degraded = False
+            self.last_transition = self.clock
+            self.counts[1] += 1
+            self.hot = self.strikes = self.calm = 0
+            return "recover"
+
+    # The scripted trace, verbatim from the Rust test
+    # `hysteresis_round_trip_scripted_trace` (policy 3/0.85/0.60/3/2/4).
+    c = HystMirror(3, 0.85, 0.60, 3, 2, 4)
+    script15 = [
+        (0.95, 0, "none"),     # hot 1
+        (0.50, 0, "none"),     # cooled — hot resets
+        (0.95, 0, "none"),     # hot 1
+        (0.95, 0, "none"),     # hot 2
+        (0.95, 0, "degrade"),  # hot 3 → degrade (window 5)
+        (0.95, 0, "none"),     # still hot: no probe while loaded
+        (0.50, 0, "none"),     # calm 1
+        (0.70, 0, "none"),     # between thresholds — calm resets
+        (0.50, 0, "none"),     # calm 1 (window 9 ≥ 5+4: guard open)
+        (0.50, 0, "probe"),    # calm 2 → probe
+    ]
+    for i, (occ, strikes, want) in enumerate(script15):
+        got = c.on_window(occ, strikes)
+        assert got == want, f"window {i + 1}: {got} != {want}"
+    assert c.degraded
+    assert c.on_probe_result(True) == "recover"
+    assert not c.degraded
+    assert c.counts == [1, 1, 1], c.counts
+    # Strike path, held by the flap guard until 4 windows past the
+    # recovery at window 10.
+    assert c.on_window(0.10, 3) == "none"   # window 11: guard closed
+    assert c.on_window(0.10, 0) == "none"
+    assert c.on_window(0.10, 0) == "none"
+    assert c.on_window(0.10, 0) == "degrade"  # window 14: guard opens
+    assert c.counts == [2, 1, 1], c.counts
+
+    # No-flap property: worst-case oscillating occupancy with every
+    # probe succeeding still spaces transitions ≥ hysteresis_windows
+    # apart (mirrors `hysteresis_never_flaps_faster_than_the_window`).
+    c = HystMirror(3, 0.85, 0.60, 1, 1, 6)
+    transitions = []
+    for w in range(1, 201):
+        occ = 0.99 if w % 2 == 0 else 0.01
+        act = c.on_window(occ, 0)
+        if act == "degrade":
+            transitions.append(w)
+        elif act == "probe" and c.on_probe_result(True) == "recover":
+            transitions.append(w)
+    assert len(transitions) >= 4, transitions
+    assert all(b - a >= 6 for a, b in zip(transitions, transitions[1:])), transitions
+    assert c.counts[0] + c.counts[1] <= 200 // 6 + 1, c.counts
+    # Randomized: arbitrary occupancy/strike/probe traces never violate
+    # the guard, and mid-band occupancy alone never transitions.
+    for _ in range(60):
+        guard = prng15.randrange(1, 10)
+        c = HystMirror(3, 0.85, 0.60, prng15.randrange(1, 4), prng15.randrange(1, 4), guard)
+        transitions = []
+        for w in range(1, 301):
+            occ = prng15.choice([0.0, 0.3, 0.7, 0.9, 1.0])
+            strikes = prng15.choice([0, 0, 0, 1, 3])
+            act = c.on_window(occ, strikes)
+            if act == "degrade":
+                transitions.append(w)
+            elif act == "probe" and c.on_probe_result(prng15.random() < 0.7) == "recover":
+                transitions.append(w)
+        assert all(b - a >= guard for a, b in zip(transitions, transitions[1:]))
+        mid = HystMirror(3, 0.85, 0.60, 1, 1, 1)
+        for w in range(50):
+            assert mid.on_window(prng15.uniform(0.601, 0.849), 0) == "none"
+    print(
+        "[15c] hysteresis mirror: scripted round trip (degrade@5, probe@10, "
+        "recover, strike-degrade@14) exact; no-flap spacing holds on oscillating "
+        "and 60 random traces; mid-band is inert"
     )
 
     print("\nALL LOGIC CHECKS PASSED")

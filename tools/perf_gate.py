@@ -21,7 +21,8 @@ after its JSON is committed as the baseline.
 
 Beyond the row diff, known top-level overhead ratios are checked
 against absolute ceilings (`SCALAR_BOUNDS`); the gated ones — the
-ISSUE 7 watchdog overhead — fail the run even without a baseline.
+ISSUE 7 watchdog overhead and the ISSUE 9 serving admission
+overhead — fail the run even without a baseline.
 Speedup *floors* (`MIN_TARGETS`, ISSUE 8: SWAR ≥1.3x the per-lane LUT
 loop, 8-thread parallel ≥4x single-thread) are report-only by design —
 thread scaling depends on the container's core count and neighbours, so
@@ -44,6 +45,10 @@ import sys
 # watchdog-default stepping.
 SCALAR_BOUNDS = {
     "watchdog_overhead": (1.05, True),
+    # ISSUE 9 (gated): deadline-aware admission bookkeeping must stay
+    # within 1.05x of the shed-off baseline on the identical trace —
+    # pure arithmetic per arrival, no allocation on the hot path.
+    "serving_shed_off_overhead": (1.05, True),
     "fault_off_overhead": (1.05, False),
     "ingress_slowdown_uniform": (1.30, False),
     "egress_slowdown_uniform": (1.30, False),
@@ -60,6 +65,10 @@ MIN_TARGETS = {
     "swar_speedup_8": 1.3,
     "decode_par_speedup_8": 4.0,
     "encode_par_speedup_8": 4.0,
+    # ISSUE 9 (report-only): on-time goodput at load 0.9, LEXI wire
+    # format vs uncompressed — should exceed 1.0 whenever the codec's
+    # wire-ratio win outruns its port-occupancy cost.
+    "serving_goodput_gain": 1.0,
 }
 
 
