@@ -16,7 +16,8 @@ use lexi::models::corpus::Corpus;
 use lexi::models::{ModelConfig, ModelScale};
 use lexi::noc::traffic::{self, MAX_PACKET_BITS};
 use lexi::noc::{
-    EgressCodecConfig, FaultModel, IngressCodecConfig, Mesh, Network, NetworkConfig, PacketSpec,
+    EgressCodecConfig, FaultModel, IngressCodecConfig, Mesh, MultiPackage, Network, NetworkConfig,
+    PacketSpec, Topo,
 };
 use lexi::sim::compression::{CompressionMode, CrTable};
 use lexi::sim::engine::Engine;
@@ -86,7 +87,8 @@ fn run_pattern(
 
 fn main() {
     let cfg = NetworkConfig {
-        mesh: Mesh::new(6, 6),
+        topo: Topo::Mesh(Mesh::new(6, 6)),
+        vcs: 1,
         flit_bits: 128,
         link_gbps: 100.0,
         buf_depth: 4,
@@ -99,7 +101,7 @@ fn main() {
     // symbol at the paper wire ratio) and drains through the codec
     // ports.
     let mut rng = lexi_core::prng::Rng::new(1);
-    let uniform = traffic::uniform_random(cfg.mesh, 2000, 128 * 32, 2.0, &mut rng);
+    let uniform = traffic::uniform_random(cfg.topo, 2000, 128 * 32, 2.0, &mut rng);
     let mut uniform_tagged = uniform.clone();
     traffic::tag_packets(&mut uniform_tagged, CodecKind::Huffman, 10.0, true);
     let ecfg = EgressCodecConfig::paper_default();
@@ -161,8 +163,56 @@ fn main() {
         &mut rows,
     );
 
+    // ISSUE 10: the VC router on the same uniform load. vcs=1 is the
+    // pinned stat-identical operating point (its rate is the honest
+    // baseline for the VC-overhead scalar); vcs=2/4 pay the per-lane
+    // request cache + flat round-robin arbitration, bounded by the
+    // vcs2_overhead gate below. Buffer depth scales with the lane count
+    // so every VC keeps ≥ 2 credits (line rate needs one in flight plus
+    // one returning).
+    let mut vc_rates = Vec::new();
+    for vcs in [1u8, 2, 4] {
+        let vcfg = NetworkConfig {
+            vcs,
+            buf_depth: cfg.buf_depth.max(2 * vcs as u32),
+            ..cfg
+        };
+        let name: &'static str = match vcs {
+            1 => "noc uniform vcs=1",
+            2 => "noc uniform vcs=2",
+            _ => "noc uniform vcs=4",
+        };
+        let (rate, _) = run_pattern(
+            name, vcfg, &uniform, None, None, None, None, &mut t, &mut rows,
+        );
+        vc_rates.push(rate);
+    }
+
+    // ISSUE 10: 2 stitched 6x6 packages, 2 VCs — uniform load over all
+    // 72 endpoints, so ~half the packets cross the gateway stitches and
+    // the escape fallback path stays hot. Report-only row.
+    let mp_topo = Topo::MultiPackage(MultiPackage::new(2, 6, 6));
+    let mp_cfg = NetworkConfig {
+        topo: mp_topo,
+        vcs: 2,
+        ..cfg
+    };
+    let mut mp_rng = lexi_core::prng::Rng::new(2);
+    let mp_uniform = traffic::uniform_random(mp_topo, 2000, 128 * 32, 2.0, &mut mp_rng);
+    run_pattern(
+        "noc multipackage uniform",
+        mp_cfg,
+        &mp_uniform,
+        None,
+        None,
+        None,
+        None,
+        &mut t,
+        &mut rows,
+    );
+
     // Hotspot (worst-case arbitration pressure + one shared egress port).
-    let hot = traffic::hotspot(cfg.mesh, lexi::noc::NodeId(14), 128 * 64);
+    let hot = traffic::hotspot(cfg.topo, lexi::noc::NodeId(14), 128 * 64);
     let mut hot_tagged = hot.clone();
     traffic::tag_packets(&mut hot_tagged, CodecKind::Huffman, 10.0, true);
     let (blind_h, _) = run_pattern(
@@ -284,6 +334,17 @@ fn main() {
         if slow_w <= 1.05 { "PASS" } else { "BELOW TARGET" }
     );
 
+    // VC router overhead (ISSUE 10): the 2-VC request cache + flat
+    // round-robin arbitration must stay within 1.10× of the vcs=1 rate
+    // on the same load (gated via vcs2_overhead); vcs=4 is report-only.
+    let slow_v2 = vc_rates[0] / vc_rates[1];
+    let slow_v4 = vc_rates[0] / vc_rates[2];
+    println!(
+        "vcs=2 stepping overhead: {slow_v2:.3}x vs vcs=1 (target <=1.10x) — {}; \
+         vcs=4: {slow_v4:.3}x (report-only)",
+        if slow_v2 <= 1.10 { "PASS" } else { "BELOW TARGET" }
+    );
+
     // Serving admission overhead (ISSUE 9): load-0.5 with admission on
     // vs the shed-off baseline on the identical arrival trace.
     let slow_s = serving_rows[0] / serving_rows[2];
@@ -342,6 +403,8 @@ fn main() {
     json.push_str(&format!("  \"fault_off_overhead\": {slow_f:.3},\n"));
     json.push_str(&format!("  \"ingress_slowdown_uniform\": {slow_i:.3},\n"));
     json.push_str(&format!("  \"watchdog_overhead\": {slow_w:.3},\n"));
+    json.push_str(&format!("  \"vcs2_overhead\": {slow_v2:.3},\n"));
+    json.push_str(&format!("  \"vcs4_overhead\": {slow_v4:.3},\n"));
     json.push_str(&format!("  \"serving_shed_off_overhead\": {slow_s:.3},\n"));
     json.push_str(&format!("  \"serving_goodput_gain\": {gain:.3},\n"));
     json.push_str(&format!("  \"xval_worst_err\": {worst:.4},\n"));

@@ -71,7 +71,8 @@ fn main() -> anyhow::Result<()> {
             let mesh = Mesh::new(cols, rows);
             let system = SimbaSystem::new(mesh, &mem);
             let ncfg = NetworkConfig {
-                mesh,
+                topo: lexi::noc::Topo::Mesh(mesh),
+                vcs: 1,
                 flit_bits: 128,
                 link_gbps,
                 buf_depth: 4,

@@ -1,0 +1,250 @@
+//! Input control: route computation + VC allocation per input VC
+//! (ISSUE 10, bsg_wormhole_router-style input side).
+//!
+//! For every head-of-line flit the input controller answers one
+//! question: *which (output port, output VC) does this flit want this
+//! cycle?* The answer feeds [`crate::output_control`]'s switch
+//! arbitration; nothing here mutates state, so a declined grant (no
+//! credit, backlogged egress decoder, faulted link) replays identically
+//! next cycle.
+//!
+//! Disciplines, in order:
+//!
+//! * **`vcs = 1` (legacy)** — exactly the pre-refactor router: XY (or
+//!   the topology's baseline route) while healthy, and the
+//!   all-or-nothing up*/down* switch once any permanent link failure
+//!   installed escape tables. Output VC is always 0.
+//! * **VC 0 of a multi-VC router** — the always-on escape channel:
+//!   up*/down* table hops with the phase implied by the arrival port.
+//!   Escape flits never leave VC 0 (conservative, keeps the escape
+//!   dependency graph closed).
+//! * **VCs ≥ 1 (adaptive)** — the topology's baseline route on the
+//!   same VC index; when that lane is held by another worm, out of
+//!   credits, or the link is dead, the head *falls back* to the escape
+//!   channel, entering it
+//!   fresh (up phase, like an NI injection — the flit has not used any
+//!   escape resource yet, so the up*/down* invariant is preserved).
+//!   Body/tail flits never re-route: they follow the lane their head
+//!   locked.
+
+use crate::packet::Flit;
+use crate::reroute::{EscapeRoutes, LinkState};
+use crate::topology::{Port, Topo, Topology, NUM_PORTS};
+use crate::vc::VcOutput;
+
+/// Borrowed routing context for one arbitration pass: everything
+/// [`RouteCtx::desired`] needs besides the router's own state.
+pub struct RouteCtx<'a> {
+    pub topo: Topo,
+    /// Escape tables: `None` only on a healthy single-VC mesh/cmesh
+    /// (pure XY, ISSUE 7 behaviour). Always present when `vcs > 1` or
+    /// the topology needs the escape channel for deadlock freedom.
+    pub escape: Option<&'a EscapeRoutes>,
+    /// Dead directed outputs per router.
+    pub down: &'a LinkState,
+    pub vcs: u8,
+}
+
+impl RouteCtx<'_> {
+    /// The `(output port, output VC)` the head-of-line flit of
+    /// `(inp, in_vc)` at router `at` requests this cycle, or `None`
+    /// when it cannot move (body without a lock — e.g. freshly
+    /// truncated — or an escape flit with no legal continuation, which
+    /// link-down handling truncates).
+    pub fn desired(
+        &self,
+        at: usize,
+        inp: usize,
+        in_vc: u8,
+        flit: &Flit,
+        outputs: &[VcOutput; NUM_PORTS],
+    ) -> Option<(Port, u8)> {
+        let dest = self.topo.router_of(flit.dest);
+        if self.vcs == 1 {
+            // Legacy single-VC disciplines, bit-for-bit (ISSUE 5/7).
+            let want = match self.escape {
+                None => self.topo.route_r(at, dest),
+                Some(esc) => esc
+                    .next_hop(at, inp, dest)
+                    .expect("unroutable flits are truncated at link-down time"),
+            };
+            return Some((want, 0));
+        }
+
+        if !flit.is_head() {
+            // Wormhole continuation: follow the lane the head locked
+            // from this (input port, input VC). `None` only transiently
+            // (the packet was just truncated under us).
+            for (out, o) in outputs.iter().enumerate() {
+                for (ovc, lane) in o.lanes.iter().enumerate() {
+                    if lane.locked_to == Some((inp, in_vc))
+                        && lane.locked_packet == Some(flit.packet_id)
+                    {
+                        return Some((Port::ALL[out], ovc as u8));
+                    }
+                }
+            }
+            return None;
+        }
+
+        let esc = self.escape.expect("escape tables installed when vcs > 1");
+        if in_vc == 0 {
+            // Escape channel: up*/down* hop, stay on VC 0.
+            return esc.next_hop(at, inp, dest).map(|p| (p, 0));
+        }
+
+        // Adaptive head: baseline route on its own VC index…
+        let want = self.topo.route_r(at, dest);
+        if want == Port::Local {
+            return Some((Port::Local, in_vc));
+        }
+        let lane = &outputs[want as usize].lanes[in_vc as usize];
+        // The head must not camp on a lane it cannot enter *now*: a
+        // held or credit-starved lane diverts to escape, otherwise a
+        // cycle of adaptive worms each waiting on credits held by the
+        // next worm's buffered bodies would deadlock with the escape
+        // channel sitting idle (Duato: blocked heads must always be
+        // able to reach the escape resource).
+        if !self.down[at][want as usize] && lane.locked_to.is_none() && lane.credits > 0 {
+            return Some((want, in_vc));
+        }
+        // …falling back to the escape channel when the lane is held or
+        // the link is dead. Entry is fresh (up phase, like an NI
+        // injection): the flit has consumed no escape resource yet.
+        esc.next_hop(at, Port::Local as usize, dest).map(|p| (p, 0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packet::FlitKind;
+    use crate::reroute::EscapeRoutes;
+    use crate::topology::{Mesh, NodeId};
+    use crate::vc::VcRouter;
+
+    fn flit(kind: FlitKind, dest: u16, vc: u8) -> Flit {
+        Flit {
+            packet_id: 7,
+            kind,
+            src: NodeId(0),
+            dest: NodeId(dest),
+            seq: 0,
+            vc,
+            ready_at: 0,
+            codec: None,
+        }
+    }
+
+    fn ctx_parts(vcs: u8) -> (Topo, LinkState, Option<EscapeRoutes>) {
+        let topo = Topo::Mesh(Mesh::new(3, 3));
+        let down: LinkState = vec![[false; NUM_PORTS]; topo.routers()];
+        let esc = (vcs > 1).then(|| EscapeRoutes::compute(topo, &down));
+        (topo, down, esc)
+    }
+
+    #[test]
+    fn vc1_routes_pure_xy_with_no_tables() {
+        let (topo, down, _) = ctx_parts(1);
+        let ctx = RouteCtx {
+            topo,
+            escape: None,
+            down: &down,
+            vcs: 1,
+        };
+        let r = VcRouter::new(4, 1);
+        // Node 0 → node 2: X first ⇒ East, VC 0.
+        let f = flit(FlitKind::Head, 2, 0);
+        assert_eq!(ctx.desired(0, 0, 0, &f, &r.outputs), Some((Port::East, 0)));
+        // Bodies route identically (deterministic XY) — the legacy
+        // arbiter re-routes every flit.
+        let b = flit(FlitKind::Body, 2, 0);
+        assert_eq!(ctx.desired(0, 0, 0, &b, &r.outputs), Some((Port::East, 0)));
+    }
+
+    #[test]
+    fn adaptive_head_falls_back_to_escape_when_lane_held() {
+        let (topo, down, esc) = ctx_parts(2);
+        let ctx = RouteCtx {
+            topo,
+            escape: esc.as_ref(),
+            down: &down,
+            vcs: 2,
+        };
+        let mut r = VcRouter::new(4, 2);
+        let f = flit(FlitKind::Head, 2, 1);
+        // Lane free: adaptive VC 1 keeps its index on the XY port.
+        assert_eq!(ctx.desired(0, 0, 1, &f, &r.outputs), Some((Port::East, 1)));
+        // Another worm holds (East, VC 1): fall back to escape VC 0.
+        r.outputs[Port::East as usize].lanes[1].locked_to = Some((2, 1));
+        r.outputs[Port::East as usize].lanes[1].locked_packet = Some(99);
+        let (p, v) = ctx.desired(0, 0, 1, &f, &r.outputs).unwrap();
+        assert_eq!(v, 0, "fallback enters the escape channel");
+        assert_eq!(
+            Some(p),
+            esc.as_ref().unwrap().next_hop(0, Port::Local as usize, 2)
+        );
+        // A free but credit-starved lane diverts too (deadlock
+        // freedom: blocked heads must reach the escape resource).
+        let mut starved = VcRouter::new(4, 2);
+        starved.outputs[Port::East as usize].lanes[1].credits = 0;
+        let (_, v) = ctx.desired(0, 0, 1, &f, &starved.outputs).unwrap();
+        assert_eq!(v, 0, "zero-credit lane must not be camped on");
+    }
+
+    #[test]
+    fn bodies_follow_their_lock_and_escape_stays_on_vc0() {
+        let (topo, down, esc) = ctx_parts(2);
+        let ctx = RouteCtx {
+            topo,
+            escape: esc.as_ref(),
+            down: &down,
+            vcs: 2,
+        };
+        let mut r = VcRouter::new(4, 2);
+        // Head locked (South, VC 0) from (North input, VC 1): the body
+        // follows it regardless of what XY would say.
+        r.outputs[Port::South as usize].lanes[0].locked_to = Some((Port::North as usize, 1));
+        r.outputs[Port::South as usize].lanes[0].locked_packet = Some(7);
+        let b = flit(FlitKind::Body, 2, 1);
+        assert_eq!(
+            ctx.desired(4, Port::North as usize, 1, &b, &r.outputs),
+            Some((Port::South, 0))
+        );
+        // A body with no lock anywhere cannot move.
+        let orphan = flit(FlitKind::Tail, 2, 0);
+        let clean = VcRouter::new(4, 2);
+        assert_eq!(ctx.desired(4, 0, 0, &orphan, &clean.outputs), None);
+        // Escape heads take table hops on VC 0.
+        let e = flit(FlitKind::Head, 8, 0);
+        let (p, v) = ctx
+            .desired(0, Port::Local as usize, 0, &e, &clean.outputs)
+            .unwrap();
+        assert_eq!(v, 0);
+        assert_eq!(
+            Some(p),
+            esc.as_ref().unwrap().next_hop(0, Port::Local as usize, 8)
+        );
+    }
+
+    #[test]
+    fn dead_link_diverts_adaptive_heads() {
+        let (topo, mut down, esc0) = ctx_parts(2);
+        // Kill 0→East (and the reverse) and rebuild tables.
+        down[0][Port::East as usize] = true;
+        down[1][Port::West as usize] = true;
+        let esc = EscapeRoutes::compute(topo, &down);
+        let _ = esc0;
+        let ctx = RouteCtx {
+            topo,
+            escape: Some(&esc),
+            down: &down,
+            vcs: 2,
+        };
+        let r = VcRouter::new(4, 2);
+        let f = flit(FlitKind::Head, 2, 1);
+        let (p, v) = ctx.desired(0, 0, 1, &f, &r.outputs).unwrap();
+        assert_eq!(v, 0, "dead baseline link forces the escape channel");
+        assert_ne!(p, Port::East);
+    }
+}

@@ -1,15 +1,27 @@
-//! # lexi-noc — cycle-level 2D-mesh network-on-interposer simulator
+//! # lexi-noc — cycle-level network-on-interposer simulator
 //!
 //! The paper models inter-chiplet transfers with a modified cycle-accurate
 //! HeteroGarnet (gem5). That simulator is not available offline, so this
 //! crate provides the same abstraction level from scratch:
 //!
-//! * [`topology`] — 2D mesh coordinates and dimension-ordered (XY) routing.
+//! * [`topology`] — the [`topology::Topology`] trait with flat 2D mesh,
+//!   concentrated mesh (several endpoints per router), and multi-package
+//!   stitched meshes (ISSUE 10), all under the `Copy` enum
+//!   [`topology::Topo`]; XY / gateway-directed baseline routing.
 //! * [`packet`] — packets and flits (head/body/tail framing).
-//! * [`router`] — 5-port wormhole routers with credit-based flow control
-//!   and round-robin output arbitration.
+//! * [`vc`] — per-virtual-channel router state (ISSUE 10): per-VC input
+//!   FIFOs and output lanes with the `buf_depth` credit budget
+//!   partitioned across VCs.
+//! * [`input_control`] — route computation + VC allocation: VC 0 is the
+//!   deadlock-free up*/down* escape channel, VCs ≥ 1 route adaptively
+//!   with escape fallback; `vcs = 1` reproduces the legacy router.
+//! * [`output_control`] — switch allocation (flat round-robin over
+//!   input port × input VC, iSLIP-lite one-grant-per-input) and
+//!   wormhole lock bookkeeping.
+//! * [`router`] — the legacy single-VC wormhole router, kept as the
+//!   executable reference the `vcs = 1` stat-identity test pins.
 //! * [`network`] — the cycle loop: inject → route/forward → eject, with
-//!   per-packet latency and per-link utilization statistics.
+//!   per-packet latency, per-link utilization, and per-VC statistics.
 //! * [`traffic`] — synthetic patterns (uniform, transpose, hotspot) for
 //!   validation plus trace-driven injection for the chiplet system model.
 //! * [`egress`] — per-node egress codec ports (ISSUE 5): codec-tagged
@@ -32,8 +44,10 @@
 //!   destination is severed.
 //!
 //! A [`network::Network`] step loop can no longer hang (ISSUE 7): a
-//! watchdog detects zero-progress cycles, audits credit conservation,
-//! and terminates with a typed [`network::StallReport`].
+//! watchdog detects zero-progress cycles, audits per-VC credit
+//! conservation, flags starved virtual channels
+//! ([`network::StallCause::VcStarvation`]), and terminates with a typed
+//! [`network::StallReport`].
 //!
 //! Links are parameterized in Gbps; with the paper's 100 Gbps NoI links
 //! and 128-bit flits, one network cycle is 1.28 ns.
@@ -41,20 +55,26 @@
 pub mod egress;
 pub mod fault;
 pub mod ingress;
+pub mod input_control;
 pub mod network;
+pub mod output_control;
 pub mod packet;
 pub mod reroute;
 pub mod router;
 pub mod topology;
 pub mod traffic;
+pub mod vc;
 
 pub use egress::{EgressCodecConfig, EgressPort};
 pub use fault::{FaultModel, LinkDown, RetryConfig};
 pub use ingress::{IngressCodecConfig, IngressPort};
+pub use input_control::RouteCtx;
 pub use network::{
     CreditViolation, Network, NetworkConfig, SimStats, StallCause, StallReport, StuckPacket,
-    DEFAULT_WATCHDOG_CYCLES,
+    VcUsage, DEFAULT_WATCHDOG_CYCLES,
 };
+pub use output_control::Grant;
 pub use packet::{CodecTag, Flit, FlitKind, PacketRecord, PacketSpec};
 pub use reroute::EscapeRoutes;
-pub use topology::{Mesh, NodeId};
+pub use topology::{CMesh, Mesh, MultiPackage, NodeId, Port, Topo, Topology};
+pub use vc::{credit_share, VcRouter, MAX_VCS};

@@ -1,97 +1,97 @@
-//! The assembled mesh network and its cycle loop.
+//! The assembled network and its cycle loop (ISSUE 10: the stepping
+//! scaffold over the VC-aware input/output control split).
 //!
-//! Injection → wormhole forwarding → ejection, with credit-based flow
-//! control and XY routing. Flits are generated lazily at the network
-//! interface (a multi-megabyte transfer does not materialize millions of
-//! flit structs up front), and `ready_at` stamping guarantees one hop per
-//! cycle regardless of router iteration order.
+//! The router logic that used to live in this monolith is now layered:
 //!
-//! **Egress codec ports (ISSUE 5):** a network built with
-//! [`Network::with_egress`] drains codec-tagged packets through a
-//! per-node [`EgressPort`] at the configured decoder rate instead of the
-//! unconditional 1 flit/cycle: a backlogged decoder refuses the ejection
-//! grant, the flit stays in the local input buffer, no credit returns
-//! upstream, and the stall backpressures into the mesh like any full
-//! buffer. Untagged packets (and networks without an egress config) keep
-//! the codec-blind ejection path bit-for-bit.
+//! * [`crate::vc`] — per-VC input FIFOs, output lanes (wormhole locks +
+//!   credit counters per VC), and the [`credit_share`] partition of each
+//!   link's `buf_depth` across VCs.
+//! * [`crate::input_control`] — route computation + VC allocation per
+//!   input VC: VC 0 is the always-on deadlock-free up*/down* escape
+//!   channel, VCs ≥ 1 route adaptively with escape fallback, and
+//!   `vcs = 1` reproduces the legacy XY / all-or-nothing-escape router.
+//! * [`crate::output_control`] — switch allocation (flat round-robin
+//!   over input-port × input-VC, one grant per physical output and per
+//!   physical input) and wormhole lock bookkeeping.
+//! * `watchdog` (a `#[path]` child module of this one, so it keeps
+//!   access to the private simulator state) — the stall/deadlock
+//!   diagnosis layer: [`VcUsage`] snapshots, the per-VC credit audit,
+//!   starvation detection, and [`StallReport`] assembly.
 //!
-//! **Fault-injected links (ISSUE 6):** a network built with
-//! [`Network::with_faults`] (or [`Network::set_fault_model`]) passes
-//! every link traversal through a seeded [`FaultModel`]. A *dropped*
-//! flit stays at its FIFO head and retries next cycle (link-level ARQ —
-//! a wormhole body can never vanish mid-packet); a *corrupted* flit
-//! marks its packet dirty so the egress CRC check NACKs the tail, which
-//! schedules a retransmission after an exponential backoff (bounded by
-//! the [`RetryConfig`] budget — ISSUE 6's fixed
-//! [`RETRY_BUDGET`](crate::fault::RETRY_BUDGET) until ISSUE 9 made it
-//! configurable — after which the loss is reported in
-//! [`SimStats::packets_dropped`]); a *duplicated* flit costs one extra
-//! cycle of downstream occupancy (the receiver squashes the copy by
-//! sequence number). Retransmission latency — backoff plus the repeat
-//! trip — is charged to the packet: its record keeps the *original*
-//! head-injection cycle. With no model attached (or all rates zero) the
-//! hot path pays one branch per step.
+//! `Network` composes those with everything this file always owned:
+//! injection → forwarding → ejection ordering, lazy flit emission at
+//! the NIs, egress/ingress codec ports (ISSUE 5/7), seeded link faults
+//! with NACK retransmission (ISSUE 6), permanent link failures with
+//! truncation + escape recovery (ISSUE 7), and the stall/deadlock
+//! watchdog — now with a per-VC credit audit and a
+//! [`StallCause::VcStarvation`] verdict.
 //!
-//! **Ingress codec ports (ISSUE 7):** a network with an
-//! [`IngressCodecConfig`] paces injection through a per-node encoder
-//! occupancy model ([`IngressPort`]), charges the compressor startup on
-//! runtime-Huffman heads, and bounds every NI queue: scheduled arrivals
-//! beyond the bound are deferred (counted in
-//! [`SimStats::injections_refused`]) and the closed-loop
-//! [`Network::try_inject`] refuses with a typed
-//! `Error::IngressSaturated` — backpressure reaches the traffic
-//! generator instead of an unbounded queue.
+//! **Topologies (ISSUE 10):** the network is built over a
+//! [`Topo`] — flat mesh, concentrated mesh (several endpoints per
+//! router), or multi-package stitched meshes (gateway-row links between
+//! packages). Multi-package routing is not XY-safe across the stitch,
+//! so those networks install the escape tables from construction even
+//! at `vcs = 1`.
 //!
-//! **Watchdog (ISSUE 7):** the step loop tracks global progress (any
-//! flit injected, forwarded, or ejected; any packet activated). If
-//! nothing moves for the watchdog window — and no scheduled arrival or
-//! retry backoff is still pending — [`Network::try_run_to_completion`]
-//! terminates with a typed [`StallReport`]: the stuck packets with
-//! their holding node/port, a per-link credit-conservation audit
-//! (Σ credits + buffered flits == `buf_depth`), and a suspected cause.
-//! No input can hang the simulator.
-//!
-//! **Permanent link failures (ISSUE 7):** [`FaultModel::with_link_down`]
-//! kills a link at a scheduled cycle. The severed wormhole is truncated
-//! (its buffered flits discarded with credits returned, the packet
-//! NACK-retried under the ISSUE 6 budget) and all routing switches to
-//! precomputed deadlock-safe up*/down* escape tables
-//! ([`crate::reroute`]). Packets whose destination is disconnected are
-//! reported in [`SimStats::packets_unreachable`] — delivered via
-//! reroute or typed-unreachable, never silently lost, never hung.
+//! **Stat identity:** with `vcs = 1` on a mesh, every discipline below
+//! collapses to the pre-refactor single-VC router field-for-field —
+//! grants regardless of credits (declined at traversal), the same
+//! round-robin order, the same fault-draw order — which the
+//! `vc1_equivalence` differential test pins against a reimplementation
+//! of the legacy step loop.
 
 use crate::egress::{self, EgressCodecConfig, EgressPort};
 use crate::fault::{FaultModel, LinkDown, RetryConfig};
 use crate::ingress::{IngressCodecConfig, IngressPort};
+use crate::input_control::RouteCtx;
+use crate::output_control::{self, Grant};
 use crate::packet::{Flit, FlitKind, PacketRecord, PacketSpec};
 use crate::reroute::{EscapeRoutes, LinkState};
-use crate::router::Router;
-use crate::topology::{Mesh, NodeId, Port, NUM_PORTS};
+use crate::topology::{Mesh, NodeId, Port, Topo, Topology, NUM_PORTS};
+use crate::vc::{credit_share, VcRouter, MAX_VCS};
 use lexi_core::error::{Error, Result};
 use std::collections::VecDeque;
-use std::fmt;
 
 /// Network configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct NetworkConfig {
-    pub mesh: Mesh,
+    /// Topology the routers are wired in (ISSUE 10).
+    pub topo: Topo,
+    /// Virtual channels per link (ISSUE 10). `1` is the legacy
+    /// single-VC router, stat-identical to the pre-VC implementation;
+    /// ≥ 2 adds the always-on VC 0 escape channel plus adaptive VCs.
+    pub vcs: u8,
     /// Flit width in bits (paper setup: 128-bit flits).
     pub flit_bits: u32,
     /// Raw link bandwidth in Gbps (paper: 100 Gbps NoI links).
     pub link_gbps: f64,
-    /// Input-buffer depth per router port, in flits.
+    /// Input-buffer depth per router port, in flits — partitioned
+    /// across VCs by [`credit_share`].
     pub buf_depth: u32,
 }
 
 impl NetworkConfig {
     /// The paper's NoI operating point on a 6×6 mesh.
     pub fn paper_default() -> Self {
+        Self::for_topo(Topo::Mesh(Mesh::simba_6x6()))
+    }
+
+    /// The paper operating point (128-bit flits, 100 Gbps links,
+    /// 4-deep buffers, single VC) on an arbitrary topology.
+    pub fn for_topo(topo: Topo) -> Self {
         NetworkConfig {
-            mesh: Mesh::simba_6x6(),
+            topo,
+            vcs: 1,
             flit_bits: 128,
             link_gbps: 100.0,
             buf_depth: 4,
         }
+    }
+
+    /// The same configuration with `vcs` virtual channels.
+    pub fn with_vcs(mut self, vcs: u8) -> Self {
+        self.vcs = vcs;
+        self
     }
 
     /// Wall-clock duration of one network cycle in ns (one flit per link
@@ -108,6 +108,9 @@ struct Pending {
     spec: PacketSpec,
     total_flits: u32,
     emitted: u32,
+    /// Injection VC (ISSUE 10): `spec.vc` clamped to the network, or
+    /// the default policy — VC 0 single-VC, adaptive spread otherwise.
+    vc: u8,
 }
 
 /// Per-packet bookkeeping from activation to tail ejection.
@@ -195,8 +198,8 @@ pub struct SimStats {
     /// exists (component severed by link failures) — typed, never
     /// silent; the specs are kept in [`Network::unreachable_packets`].
     pub packets_unreachable: u64,
-    /// Per-node fault events on outbound links (corrupt + drop + dup),
-    /// indexed like the mesh. Sized at construction; empty only for a
+    /// Per-router fault events on outbound links (corrupt + drop +
+    /// dup), indexed by router. Sized at construction; empty only for a
     /// default-constructed `SimStats`.
     pub link_faults: Vec<u64>,
 }
@@ -230,121 +233,27 @@ impl SimStats {
     }
 }
 
-/// Default zero-progress window (in cycles) before the watchdog fires:
-/// comfortably beyond the longest legal quiet spell (the 256-cycle
-/// retry-backoff cap, codec-port startups, deep congestion waves) while
-/// still terminating a wedged run promptly.
-pub const DEFAULT_WATCHDOG_CYCLES: u64 = 10_000;
-
-/// One broken per-link credit invariant found by
-/// [`Network::audit_credits`]: the upstream output's credits plus the
-/// downstream input's buffered flits no longer sum to `buf_depth`.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct CreditViolation {
-    /// Upstream node of the directed link.
-    pub node: NodeId,
-    /// Output port (= link direction) at the upstream node.
-    pub out: Port,
-    /// Credits the upstream output currently holds.
-    pub credits: u32,
-    /// Flits buffered at the downstream input.
-    pub buffered: u32,
-    /// The configured `buf_depth` the two must sum to.
-    pub expected: u32,
-}
-
-/// A packet that was still live when the watchdog fired.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct StuckPacket {
-    pub id: u64,
-    pub src: NodeId,
-    pub dest: NodeId,
-    /// Node holding the packet's foremost buffered flit (the source
-    /// when nothing is buffered yet — still queued at the NI).
-    pub node: NodeId,
-    /// Input port holding that flit (`Local` when NI-queued).
-    pub port: Port,
-    /// Approximate cycle of the flit's last movement (`ready_at` − 1).
-    pub since: u64,
-}
-
-/// The watchdog's suspected root cause, cheapest-to-check first.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum StallCause {
-    /// The credit audit found a link where credits + buffered flits no
-    /// longer sum to `buf_depth` — flow control itself is broken.
-    CreditLeak,
-    /// An ingress/egress codec port's busy horizon is still ahead of
-    /// sim time after a whole stall window: an effectively zero-rate
-    /// port is refusing every grant.
-    ZeroRatePort,
-    /// A permanent link failure is in effect, or the fault model drops
-    /// every traversal (`drop_prob == 1` — a dead link in transient
-    /// clothing).
-    DeadLink,
-    /// No port or credit anomaly found: suspect a routing/lock cycle.
-    RoutingCycle,
-    /// `max_cycles` elapsed while the network was still making
-    /// progress — an undersized horizon, not a wedge.
-    SlowProgress,
-}
-
-/// Typed verdict from the stall/deadlock watchdog (ISSUE 7): why the
-/// run terminated without draining, who was stuck where, and whether
-/// credit conservation still held. Returned by
-/// [`Network::try_run_to_completion`] instead of looping forever.
-#[derive(Clone, Debug, PartialEq)]
-pub struct StallReport {
-    /// Cycle at which the watchdog fired.
-    pub cycle: u64,
-    /// Zero-progress cycles leading up to it.
-    pub stalled_for: u64,
-    pub cause: StallCause,
-    /// Live packets and where each one's foremost flit is held.
-    pub stuck_packets: Vec<StuckPacket>,
-    /// Credit-conservation violations (empty = credits intact).
-    pub credit_audit: Vec<CreditViolation>,
-}
-
-impl fmt::Display for StallReport {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        writeln!(
-            f,
-            "stall at cycle {}: no progress for {} cycles (suspected {:?}); \
-             {} stuck packet(s), {} credit violation(s)",
-            self.cycle,
-            self.stalled_for,
-            self.cause,
-            self.stuck_packets.len(),
-            self.credit_audit.len()
-        )?;
-        for p in self.stuck_packets.iter().take(8) {
-            writeln!(
-                f,
-                "  packet {} {}->{} held at node {} port {:?} since cycle {}",
-                p.id, p.src.0, p.dest.0, p.node.0, p.port, p.since
-            )?;
-        }
-        if self.stuck_packets.len() > 8 {
-            writeln!(f, "  ... {} more", self.stuck_packets.len() - 8)?;
-        }
-        for v in self.credit_audit.iter().take(4) {
-            writeln!(
-                f,
-                "  credit leak: node {} {:?}: credits {} + buffered {} != {}",
-                v.node.0, v.out, v.credits, v.buffered, v.expected
-            )?;
-        }
-        Ok(())
-    }
-}
+// The watchdog/diagnosis layer and the unit tests are child modules in
+// sibling files (`#[path]`): they keep access to the private simulator
+// state above without bloating this scaffold back into a monolith.
+#[path = "watchdog.rs"]
+mod watchdog;
+pub use watchdog::{
+    CreditViolation, StallCause, StallReport, StuckPacket, VcUsage,
+    DEFAULT_WATCHDOG_CYCLES,
+};
 
 /// The simulator.
 pub struct Network {
     pub cfg: NetworkConfig,
-    routers: Vec<Router>,
-    /// Per-node: packets not yet fully injected, FIFO.
+    /// One VC router per topology *router* (≠ endpoint on concentrated
+    /// topologies).
+    routers: Vec<VcRouter>,
+    /// Per-endpoint: packets not yet fully injected, FIFO.
     ni_queues: Vec<VecDeque<Pending>>,
+    /// Per-router round-robin over its concentrated endpoints: which
+    /// NI gets the next injection slot (always 0 at concentration 1).
+    ni_rr: Vec<u8>,
     /// Packets scheduled for the future, sorted descending by inject_at
     /// (pop from the back).
     schedule: Vec<PacketSpec>,
@@ -352,7 +261,7 @@ pub struct Network {
     meta: std::collections::HashMap<u64, PacketMeta>,
     /// Egress decoder model; `None` = codec-blind 1-flit/cycle ejection.
     egress_cfg: Option<EgressCodecConfig>,
-    /// Per-node egress decoder state (parallel to `routers`).
+    /// Per-endpoint egress decoder state.
     egress: Vec<EgressPort>,
     /// Seeded link-fault injector; `None` = ideal lossless links.
     fault: Option<FaultModel>,
@@ -365,14 +274,16 @@ pub struct Network {
     /// Ingress encoder model; `None` = codec-blind unbounded-NI
     /// injection (ISSUE 7).
     ingress_cfg: Option<IngressCodecConfig>,
-    /// Per-node ingress encoder state (parallel to `routers`).
+    /// Per-endpoint ingress encoder state.
     ingress: Vec<IngressPort>,
     /// Scheduled permanent link failures not yet applied (ascending).
     pending_link_downs: Vec<LinkDown>,
-    /// `down[node][port]` = that directed output is permanently dead.
+    /// `down[router][port]` = that directed output is permanently dead.
     down: LinkState,
-    /// Escape routing tables, installed at the first link failure; all
-    /// routing then follows the tables (one discipline at a time).
+    /// Escape routing tables. Installed from construction when
+    /// `vcs > 1` (VC 0 escape channel) or the topology needs them for
+    /// baseline deadlock freedom (multi-package); on a single-VC mesh
+    /// they appear at the first link failure, exactly as before.
     escape: Option<EscapeRoutes>,
     /// Specs abandoned because their destination was severed.
     unreachable: Vec<PacketSpec>,
@@ -381,6 +292,15 @@ pub struct Network {
     watchdog_cycles: Option<u64>,
     /// Cycle of the last observed global progress.
     last_progress: u64,
+    /// Per-VC buffered-flit population (starvation watchdog, O(1) to
+    /// maintain on each flit movement).
+    vc_occ: Vec<u64>,
+    /// Per-VC cycle of last movement.
+    vc_progress: Vec<u64>,
+    /// Per-VC link traversals (CLI report).
+    vc_hops: Vec<u64>,
+    /// Per-VC ejected flits (CLI report).
+    vc_delivered: Vec<u64>,
     /// Completion records.
     pub records: Vec<PacketRecord>,
     now: u64,
@@ -391,31 +311,55 @@ pub struct Network {
 impl Network {
     /// Build an idle network with codec-blind ejection.
     pub fn new(cfg: NetworkConfig) -> Self {
-        let n = cfg.mesh.len();
+        assert!(
+            (1..=MAX_VCS).contains(&cfg.vcs),
+            "vcs must be in 1..={MAX_VCS}"
+        );
+        assert!(
+            cfg.buf_depth >= cfg.vcs as u32,
+            "buf_depth {} cannot give every one of {} VCs a credit",
+            cfg.buf_depth,
+            cfg.vcs
+        );
+        let nodes = cfg.topo.len();
+        let routers = cfg.topo.routers();
+        let down: LinkState = vec![[false; NUM_PORTS]; routers];
+        // Multi-VC networks route VC 0 on the escape tables from cycle
+        // 0; multi-package topologies additionally need them for
+        // baseline deadlock freedom even single-VC.
+        let escape = (cfg.vcs > 1 || cfg.topo.needs_escape())
+            .then(|| EscapeRoutes::compute(cfg.topo, &down));
         Network {
             cfg,
-            routers: (0..n).map(|_| Router::new(cfg.buf_depth)).collect(),
-            ni_queues: vec![VecDeque::new(); n],
+            routers: (0..routers)
+                .map(|_| VcRouter::new(cfg.buf_depth, cfg.vcs))
+                .collect(),
+            ni_queues: vec![VecDeque::new(); nodes],
+            ni_rr: vec![0; routers],
             schedule: Vec::new(),
             meta: std::collections::HashMap::new(),
             egress_cfg: None,
-            egress: vec![EgressPort::default(); n],
+            egress: vec![EgressPort::default(); nodes],
             fault: None,
             retry_queue: Vec::new(),
             retry: RetryConfig::paper_default(),
             ingress_cfg: None,
-            ingress: vec![IngressPort::default(); n],
+            ingress: vec![IngressPort::default(); nodes],
             pending_link_downs: Vec::new(),
-            down: vec![[false; NUM_PORTS]; n],
-            escape: None,
+            down,
+            escape,
             unreachable: Vec::new(),
             watchdog_cycles: None,
             last_progress: 0,
+            vc_occ: vec![0; cfg.vcs as usize],
+            vc_progress: vec![0; cfg.vcs as usize],
+            vc_hops: vec![0; cfg.vcs as usize],
+            vc_delivered: vec![0; cfg.vcs as usize],
             records: Vec::new(),
             now: 0,
             next_id: 0,
             stats: SimStats {
-                link_faults: vec![0; n],
+                link_faults: vec![0; routers],
                 ..SimStats::default()
             },
         }
@@ -454,13 +398,13 @@ impl Network {
     /// Attach (or replace) the link fault model. Composes with
     /// [`Network::with_egress`] — the CLI builds egress + faults.
     /// Scheduled permanent link failures are ingested here; every pair
-    /// must be mesh-adjacent (programmer error otherwise — the CLI
+    /// must be topology-adjacent (programmer error otherwise — the CLI
     /// validates untrusted input before building the model).
     pub fn set_fault_model(&mut self, fault: FaultModel) {
         for e in fault.link_downs() {
             assert!(
                 self.adjacent_port(e.a, e.b).is_some(),
-                "link-down pair {}-{} is not mesh-adjacent",
+                "link-down pair {}-{} is not adjacent in the topology",
                 e.a.0,
                 e.b.0
             );
@@ -482,12 +426,15 @@ impl Network {
         self.retry
     }
 
-    /// The output port of `a` that reaches `b`, if the two are adjacent.
+    /// The output port of `a`'s router that reaches `b`'s router, if
+    /// the two are adjacent (`None` for co-located endpoints of one
+    /// concentrated router — there is no link between them).
     fn adjacent_port(&self, a: NodeId, b: NodeId) -> Option<Port> {
+        let (ra, rb) = (self.cfg.topo.router_of(a), self.cfg.topo.router_of(b));
         Port::ALL[1..]
             .iter()
             .copied()
-            .find(|&p| self.cfg.mesh.neighbour(a, p) == Some(b))
+            .find(|&p| self.cfg.topo.neighbour_r(ra, p) == Some(rb))
     }
 
     /// The installed fault model, if any.
@@ -500,7 +447,7 @@ impl Network {
         self.egress_cfg.as_ref()
     }
 
-    /// Per-node egress decoder state (read-only view for tests/tools).
+    /// Per-endpoint egress decoder state (read-only view for tests/tools).
     pub fn egress_ports(&self) -> &[EgressPort] {
         &self.egress
     }
@@ -510,7 +457,7 @@ impl Network {
         self.ingress_cfg.as_ref()
     }
 
-    /// Per-node ingress encoder state (read-only view for tests/tools).
+    /// Per-endpoint ingress encoder state (read-only view for tests/tools).
     pub fn ingress_ports(&self) -> &[IngressPort] {
         &self.ingress
     }
@@ -542,9 +489,9 @@ impl Network {
         Ok(())
     }
 
-    /// Tag sanity plus, once any link has died, live-route existence —
-    /// a packet to a severed destination is refused up front rather
-    /// than admitted and purged later.
+    /// Tag sanity plus, once escape tables exist with dead links,
+    /// live-route existence — a packet to a severed destination is
+    /// refused up front rather than admitted and purged later.
     fn validate_spec(&self, s: &PacketSpec, i: usize) -> Result<()> {
         if let Some(tag) = s.codec {
             if s.size_bits == 0 {
@@ -607,6 +554,17 @@ impl Network {
         Ok(())
     }
 
+    /// Injection VC for a packet (ISSUE 10): the spec's pin clamped to
+    /// the network, else VC 0 single-VC, else an adaptive VC (≥ 1)
+    /// spread deterministically by packet id.
+    fn inject_vc(&self, spec: &PacketSpec, id: u64) -> u8 {
+        match spec.vc {
+            Some(v) => v.min(self.cfg.vcs - 1),
+            None if self.cfg.vcs == 1 => 0,
+            None => 1 + (id % (self.cfg.vcs as u64 - 1)) as u8,
+        }
+    }
+
     /// Materialize one packet at its source NI: meta entry + lazy-flit
     /// pending record. Shared by scheduled activation, retransmission,
     /// and closed-loop injection.
@@ -627,11 +585,13 @@ impl Network {
                 first_inject,
             },
         );
+        let vc = self.inject_vc(&spec, id);
         self.ni_queues[spec.src.0 as usize].push_back(Pending {
             id,
             spec,
             total_flits: total,
             emitted: 0,
+            vc,
         });
     }
 
@@ -652,10 +612,7 @@ impl Network {
         debug_assert!(
             !done
                 || (self.ni_queues.iter().all(|q| q.is_empty())
-                    && self
-                        .routers
-                        .iter()
-                        .all(|r| r.inputs.iter().all(|b| b.fifo.is_empty()))),
+                    && self.routers.iter().all(|r| r.is_idle())),
             "meta empty but flits still buffered"
         );
         done
@@ -663,7 +620,8 @@ impl Network {
 
     /// Advance one cycle.
     pub fn step(&mut self) {
-        let mesh = self.cfg.mesh;
+        let topo = self.cfg.topo;
+        let vcs = self.cfg.vcs;
         // One branch per step keeps the fault-off hot path at parity
         // with a fault-less build (perf gate: ≤1.05× the egress row).
         let faults_on = self.fault.as_ref().is_some_and(|f| f.enabled());
@@ -728,78 +686,109 @@ impl Network {
             }
         }
 
-        // --- 2. injection: one flit per node per cycle --------------------
+        // --- 2. injection: one flit per *router* per cycle ----------------
+        // Concentrated topologies share one Local port among `conc`
+        // endpoints: a per-router round-robin picks the serving NI at
+        // *packet* granularity — a partially-emitted worm must finish
+        // before another slot injects, because interleaving two worms
+        // in the shared Local FIFO head-of-line-deadlocks the second
+        // head behind the first worm's unreleased lock. At
+        // concentration 1 this is exactly the legacy per-node loop.
         let cycle_ns = self.cfg.cycle_ns();
-        for (node, q) in self.ni_queues.iter_mut().enumerate() {
-            if let Some(p) = q.front_mut() {
-                if (self.routers[node].inputs[Port::Local as usize].fifo.len() as u32)
-                    < self.cfg.buf_depth
-                {
-                    // Ingress codec port (ISSUE 7): a tagged flit must
-                    // clear the encoder before entering the network.
-                    let mut pace: Option<f64> = None;
-                    if let (Some(icfg), Some(tag)) = (self.ingress_cfg.as_ref(), p.spec.codec)
-                    {
-                        if !egress::ready(self.ingress[node].busy_until, self.now) {
-                            // Encoder backlogged: the packet stays at
-                            // the NI and the stall is counted, never
-                            // silently absorbed.
-                            self.ingress[node].stall_cycles += 1;
-                            self.stats.encode_stall_cycles += 1;
-                            self.meta
-                                .get_mut(&p.id)
-                                .expect("queued packet has meta")
-                                .encode_stalls += 1;
-                            continue;
-                        }
-                        // Startup (codebook build) is charged once, on
-                        // the head flit of the *first* attempt — a
-                        // retransmission replays the encoded stream.
-                        let charge_startup =
-                            p.emitted == 0 && self.meta[&p.id].attempt == 0;
-                        pace = Some(icfg.flit_cost_cycles(
-                            &tag,
-                            p.total_flits,
-                            charge_startup,
-                            cycle_ns,
-                        ));
+        let conc = topo.conc() as usize;
+        for r in 0..self.routers.len() {
+            let mut chosen = None;
+            for k in 0..conc {
+                let slot = (self.ni_rr[r] as usize + k) % conc;
+                let node = topo.node_at(r, slot as u8).0 as usize;
+                match self.ni_queues[node].front() {
+                    // A worm mid-emission owns the Local port outright.
+                    Some(p) if p.emitted > 0 => {
+                        chosen = Some((slot, node));
+                        break;
                     }
-                    let seq = p.emitted;
-                    let kind = match (seq, p.total_flits) {
-                        (0, 1) => FlitKind::Single,
-                        (0, _) => FlitKind::Head,
-                        (s, t) if s + 1 == t => FlitKind::Tail,
-                        _ => FlitKind::Body,
-                    };
-                    if seq == 0 {
-                        // The latency clock starts when the head actually
-                        // enters the network, not at the scheduled time.
-                        self.meta
-                            .get_mut(&p.id)
-                            .expect("activated packet has meta")
-                            .head_inject = Some(self.now);
-                    }
-                    self.routers[node].inputs[Port::Local as usize]
-                        .fifo
-                        .push_back(Flit {
-                            packet_id: p.id,
-                            kind,
-                            src: p.spec.src,
-                            dest: p.spec.dest,
-                            seq,
-                            ready_at: self.now + 1,
-                            codec: p.spec.codec,
-                        });
-                    if let Some(cost) = pace {
-                        self.ingress[node].busy_until =
-                            egress::accept(self.ingress[node].busy_until, self.now, cost);
-                    }
-                    progressed = true;
-                    p.emitted += 1;
-                    if p.emitted == p.total_flits {
-                        q.pop_front();
-                    }
+                    Some(_) if chosen.is_none() => chosen = Some((slot, node)),
+                    _ => {}
                 }
+            }
+            let Some((slot, node)) = chosen else { continue };
+            let q = &mut self.ni_queues[node];
+            let p = q.front_mut().expect("chosen NI non-empty");
+            // Room in the packet's VC FIFO at the router's Local port?
+            if (self.routers[r].inputs[Port::Local as usize].fifos[p.vc as usize].len()
+                as u32)
+                >= credit_share(self.cfg.buf_depth, vcs, p.vc)
+            {
+                continue;
+            }
+            // Ingress codec port (ISSUE 7): a tagged flit must clear
+            // the encoder before entering the network.
+            let mut pace: Option<f64> = None;
+            if let (Some(icfg), Some(tag)) = (self.ingress_cfg.as_ref(), p.spec.codec) {
+                if !egress::ready(self.ingress[node].busy_until, self.now) {
+                    // Encoder backlogged: the packet stays at the NI
+                    // and the stall is counted, never silently
+                    // absorbed.
+                    self.ingress[node].stall_cycles += 1;
+                    self.stats.encode_stall_cycles += 1;
+                    self.meta
+                        .get_mut(&p.id)
+                        .expect("queued packet has meta")
+                        .encode_stalls += 1;
+                    continue;
+                }
+                // Startup (codebook build) is charged once, on the
+                // head flit of the *first* attempt — a retransmission
+                // replays the encoded stream.
+                let charge_startup = p.emitted == 0 && self.meta[&p.id].attempt == 0;
+                pace = Some(icfg.flit_cost_cycles(
+                    &tag,
+                    p.total_flits,
+                    charge_startup,
+                    cycle_ns,
+                ));
+            }
+            let seq = p.emitted;
+            let kind = match (seq, p.total_flits) {
+                (0, 1) => FlitKind::Single,
+                (0, _) => FlitKind::Head,
+                (s, t) if s + 1 == t => FlitKind::Tail,
+                _ => FlitKind::Body,
+            };
+            if seq == 0 {
+                // The latency clock starts when the head actually
+                // enters the network, not at the scheduled time.
+                self.meta
+                    .get_mut(&p.id)
+                    .expect("activated packet has meta")
+                    .head_inject = Some(self.now);
+            }
+            let vc = p.vc;
+            self.routers[r].inputs[Port::Local as usize].fifos[vc as usize].push_back(
+                Flit {
+                    packet_id: p.id,
+                    kind,
+                    src: p.spec.src,
+                    dest: p.spec.dest,
+                    seq,
+                    vc,
+                    ready_at: self.now + 1,
+                    codec: p.spec.codec,
+                },
+            );
+            if let Some(cost) = pace {
+                self.ingress[node].busy_until =
+                    egress::accept(self.ingress[node].busy_until, self.now, cost);
+            }
+            progressed = true;
+            self.vc_occ[vc as usize] += 1;
+            self.vc_progress[vc as usize] = self.now;
+            p.emitted += 1;
+            if p.emitted == p.total_flits {
+                q.pop_front();
+                // Packet done: the round-robin hands the Local port to
+                // the next concentrated endpoint.
+                self.ni_rr[r] = ((slot + 1) % conc) as u8;
             }
         }
 
@@ -807,129 +796,40 @@ impl Network {
         for node in 0..self.routers.len() {
             // §Perf: idle routers (all input FIFOs empty) skip arbitration
             // entirely — a large win under sparse/hotspot traffic.
-            if self.routers[node].inputs.iter().all(|b| b.fifo.is_empty()) {
+            if self.routers[node].is_idle() {
                 continue;
             }
-            let at = NodeId(node as u16);
-            // Healthy mesh: pure XY (deadlock-free, zero table cost).
-            // After any permanent link failure: every flit follows the
-            // up*/down* escape tables — one routing discipline at a
-            // time, or the two could form a cycle between them.
-            let grants = match self.escape.as_ref() {
-                None => self.routers[node]
-                    .arbitrate_all(self.now, |_, f| mesh.route_xy(at, f.dest)),
-                Some(esc) => self.routers[node].arbitrate_all(self.now, |inp, f| {
-                    esc.next_hop(at, inp, f.dest)
-                        .expect("unroutable flits are truncated at link-down time")
-                }),
+            // Input control computes (output port, output VC) per input
+            // VC; output control allocates the switch. Both are pure, so
+            // a declined grant (no credit, backlogged decoder, faulted
+            // link) replays identically next cycle.
+            let grants = {
+                let ctx = RouteCtx {
+                    topo,
+                    escape: self.escape.as_ref(),
+                    down: &self.down,
+                    vcs,
+                };
+                output_control::arbitrate_all(&self.routers[node], self.now, |inp, invc, f, outs| {
+                    ctx.desired(node, inp, invc, f, outs)
+                })
             };
             for &out in &Port::ALL {
-                let Some(inp) = grants[out as usize] else { continue };
+                let Some(g) = grants[out as usize] else { continue };
 
                 if out == Port::Local {
-                    // Ejection: codec-blind packets drain 1 flit/cycle;
-                    // tagged packets must clear the egress decoder first.
-                    let hol = *self.routers[node].inputs[inp]
-                        .fifo
-                        .front()
-                        .expect("arbitrated input non-empty");
-                    let mut decode_done: Option<f64> = None;
-                    if let (Some(ecfg), Some(tag)) = (self.egress_cfg, hol.codec) {
-                        let port = &mut self.egress[node];
-                        if !egress::ready(port.busy_until, self.now) {
-                            // Decoder backlogged: the flit stays in the
-                            // local input buffer (no pop ⇒ no credit
-                            // upstream ⇒ backpressure into the mesh).
-                            port.stall_cycles += 1;
-                            self.stats.decode_stall_cycles += 1;
-                            self.meta
-                                .get_mut(&hol.packet_id)
-                                .expect("in-flight packet has meta")
-                                .decode_stalls += 1;
-                            continue;
-                        }
-                        let total = self.meta[&hol.packet_id].total_flits;
-                        let cost = ecfg.flit_cost_cycles(
-                            &tag,
-                            total,
-                            hol.is_head(),
-                            self.cfg.cycle_ns(),
-                        );
-                        port.busy_until = egress::accept(port.busy_until, self.now, cost);
-                        decode_done = Some(port.busy_until);
-                    }
-                    let flit = self.routers[node].inputs[inp]
-                        .fifo
-                        .pop_front()
-                        .expect("arbitrated input non-empty");
-                    self.credit_return(at, inp);
-                    self.update_lock(node, out, inp, &flit);
-                    self.stats.delivered_flits += 1;
-                    if flit.is_tail() {
-                        let m = self.meta.remove(&flit.packet_id).expect("meta");
-                        // Latency spans the *original* head injection —
-                        // retransmission backoff and repeat trips are
-                        // charged to the packet, not hidden.
-                        let inject_cycle = m
-                            .first_inject
-                            .or(m.head_inject)
-                            .expect("tail ejected before head injected");
-                        if m.corrupted {
-                            // NACK: the egress CRC check failed (the
-                            // speculative decode cost stays charged).
-                            // Retransmit after an exponential backoff, or
-                            // report the loss once the budget is spent —
-                            // never hang, never silently deliver garbage.
-                            if m.attempt < self.retry.budget {
-                                let next = m.attempt + 1;
-                                self.stats.packet_retries += 1;
-                                self.retry_queue.push(RetryEntry {
-                                    spec: m.spec,
-                                    due: self.now + 1 + self.retry.backoff(next),
-                                    attempt: next,
-                                    first_inject: inject_cycle,
-                                });
-                            } else {
-                                self.stats.packets_dropped += 1;
-                            }
-                            continue;
-                        }
-                        // A tagged packet completes when its decoder
-                        // finishes the tail flit's symbols, which can
-                        // trail the ejection itself.
-                        let eject_cycle = match decode_done {
-                            Some(busy) => (self.now + 1).max(busy.ceil() as u64),
-                            None => self.now + 1,
-                        };
-                        let rec = PacketRecord {
-                            spec: m.spec,
-                            inject_cycle,
-                            eject_cycle,
-                            flits: m.total_flits,
-                            decode_stall_cycles: m.decode_stalls,
-                            encode_stall_cycles: m.encode_stalls,
-                            retries: m.attempt,
-                        };
-                        self.stats.delivered_packets += 1;
-                        self.stats.sum_latency += rec.latency();
-                        self.stats.max_latency = self.stats.max_latency.max(rec.latency());
-                        self.stats.sum_queueing += rec.queueing_delay();
-                        if let Some(tag) = m.spec.codec {
-                            self.stats.delivered_symbols += tag.symbols;
-                        }
-                        self.stats.completion_cycle =
-                            self.stats.completion_cycle.max(eject_cycle);
-                        self.records.push(rec);
-                    }
+                    self.eject(node, g);
                     continue;
                 }
 
-                // Link traversal: need a credit downstream.
-                if self.routers[node].outputs[out as usize].credits == 0 {
+                // Link traversal: need a credit on the output lane.
+                if self.routers[node].outputs[out as usize].lanes[g.out_vc as usize].credits
+                    == 0
+                {
                     continue;
                 }
-                let Some(nb) = mesh.neighbour(at, out) else {
-                    unreachable!("routing never exits the mesh");
+                let Some(nb) = topo.neighbour_r(node, out) else {
+                    unreachable!("routing never exits the topology");
                 };
                 if faults_on && self.fault.as_mut().expect("gated").drops() {
                     // The link ate the flit: it stays at the FIFO head and
@@ -939,16 +839,29 @@ impl Network {
                     self.stats.link_faults[node] += 1;
                     continue;
                 }
-                let mut flit = self.routers[node].inputs[inp]
-                    .fifo
+                let mut flit = self.routers[node].inputs[g.inp].fifos[g.invc as usize]
                     .pop_front()
                     .expect("arbitrated input non-empty");
-                self.credit_return(at, inp);
-                self.update_lock(node, out, inp, &flit);
-                self.routers[node].outputs[out as usize].credits -= 1;
+                self.credit_return(node, g.inp, g.invc);
+                output_control::update_lock(
+                    &mut self.routers[node].outputs[out as usize],
+                    g.out_vc,
+                    g.inp,
+                    g.invc,
+                    &flit,
+                    vcs,
+                );
+                self.routers[node].outputs[out as usize].lanes[g.out_vc as usize].credits -=
+                    1;
                 self.routers[node].outputs[out as usize].forwarded += 1;
                 self.stats.flit_hops += 1;
+                self.vc_occ[g.invc as usize] -= 1;
+                self.vc_occ[g.out_vc as usize] += 1;
+                self.vc_hops[g.out_vc as usize] += 1;
+                self.vc_progress[g.invc as usize] = self.now;
+                self.vc_progress[g.out_vc as usize] = self.now;
                 flit.ready_at = self.now + 1;
+                flit.vc = g.out_vc;
                 if faults_on {
                     let flit_bits = self.cfg.flit_bits;
                     if self.fault.as_mut().expect("gated").corrupts(flit_bits) {
@@ -972,8 +885,7 @@ impl Network {
                         flit.ready_at = self.now + 2;
                     }
                 }
-                self.routers[nb.0 as usize].inputs[out.opposite() as usize]
-                    .fifo
+                self.routers[nb].inputs[out.opposite() as usize].fifos[g.out_vc as usize]
                     .push_back(flit);
             }
         }
@@ -985,6 +897,106 @@ impl Network {
             || self.next_id != id0
         {
             self.last_progress = self.now;
+        }
+    }
+
+    /// Ejection at `node`'s Local port under grant `g`: codec-blind
+    /// packets drain 1 flit/cycle; tagged packets must clear the egress
+    /// decoder of the *destination endpoint* first.
+    fn eject(&mut self, node: usize, g: Grant) {
+        let hol = *self.routers[node].inputs[g.inp].fifos[g.invc as usize]
+            .front()
+            .expect("arbitrated input non-empty");
+        let ep = hol.dest.0 as usize;
+        let mut decode_done: Option<f64> = None;
+        if let (Some(ecfg), Some(tag)) = (self.egress_cfg, hol.codec) {
+            let port = &mut self.egress[ep];
+            if !egress::ready(port.busy_until, self.now) {
+                // Decoder backlogged: the flit stays in the local input
+                // buffer (no pop ⇒ no credit upstream ⇒ backpressure
+                // into the mesh).
+                port.stall_cycles += 1;
+                self.stats.decode_stall_cycles += 1;
+                self.meta
+                    .get_mut(&hol.packet_id)
+                    .expect("in-flight packet has meta")
+                    .decode_stalls += 1;
+                return;
+            }
+            let total = self.meta[&hol.packet_id].total_flits;
+            let cost = ecfg.flit_cost_cycles(&tag, total, hol.is_head(), self.cfg.cycle_ns());
+            port.busy_until = egress::accept(port.busy_until, self.now, cost);
+            decode_done = Some(port.busy_until);
+        }
+        let flit = self.routers[node].inputs[g.inp].fifos[g.invc as usize]
+            .pop_front()
+            .expect("arbitrated input non-empty");
+        self.credit_return(node, g.inp, g.invc);
+        output_control::update_lock(
+            &mut self.routers[node].outputs[Port::Local as usize],
+            g.out_vc,
+            g.inp,
+            g.invc,
+            &flit,
+            self.cfg.vcs,
+        );
+        self.stats.delivered_flits += 1;
+        self.vc_occ[g.invc as usize] -= 1;
+        self.vc_delivered[g.invc as usize] += 1;
+        self.vc_progress[g.invc as usize] = self.now;
+        if flit.is_tail() {
+            let m = self.meta.remove(&flit.packet_id).expect("meta");
+            // Latency spans the *original* head injection —
+            // retransmission backoff and repeat trips are charged to
+            // the packet, not hidden.
+            let inject_cycle = m
+                .first_inject
+                .or(m.head_inject)
+                .expect("tail ejected before head injected");
+            if m.corrupted {
+                // NACK: the egress CRC check failed (the speculative
+                // decode cost stays charged). Retransmit after an
+                // exponential backoff, or report the loss once the
+                // budget is spent — never hang, never silently deliver
+                // garbage.
+                if m.attempt < self.retry.budget {
+                    let next = m.attempt + 1;
+                    self.stats.packet_retries += 1;
+                    self.retry_queue.push(RetryEntry {
+                        spec: m.spec,
+                        due: self.now + 1 + self.retry.backoff(next),
+                        attempt: next,
+                        first_inject: inject_cycle,
+                    });
+                } else {
+                    self.stats.packets_dropped += 1;
+                }
+                return;
+            }
+            // A tagged packet completes when its decoder finishes the
+            // tail flit's symbols, which can trail the ejection itself.
+            let eject_cycle = match decode_done {
+                Some(busy) => (self.now + 1).max(busy.ceil() as u64),
+                None => self.now + 1,
+            };
+            let rec = PacketRecord {
+                spec: m.spec,
+                inject_cycle,
+                eject_cycle,
+                flits: m.total_flits,
+                decode_stall_cycles: m.decode_stalls,
+                encode_stall_cycles: m.encode_stalls,
+                retries: m.attempt,
+            };
+            self.stats.delivered_packets += 1;
+            self.stats.sum_latency += rec.latency();
+            self.stats.max_latency = self.stats.max_latency.max(rec.latency());
+            self.stats.sum_queueing += rec.queueing_delay();
+            if let Some(tag) = m.spec.codec {
+                self.stats.delivered_symbols += tag.symbols;
+            }
+            self.stats.completion_cycle = self.stats.completion_cycle.max(eject_cycle);
+            self.records.push(rec);
         }
     }
 
@@ -1003,9 +1015,13 @@ impl Network {
     /// (ISSUE 7). The watchdog fires when nothing has moved for the
     /// watchdog window AND no scheduled arrival or retry backoff is
     /// still pending (a future-due entry is guaranteed progress, not a
-    /// stall), so no input can make this loop forever. On fire — or on
-    /// timeout — the typed [`StallReport`] carries the stuck packets,
-    /// a credit-conservation audit, and a suspected cause.
+    /// stall), so no input can make this loop forever. A multi-VC
+    /// network additionally fires when one VC's buffered flits have not
+    /// moved for a whole window while the rest of the network kept
+    /// progressing ([`StallCause::VcStarvation`] — invisible to the
+    /// global counter). On fire — or on timeout — the typed
+    /// [`StallReport`] carries the stuck packets, a per-VC
+    /// credit-conservation audit, and a suspected cause.
     pub fn try_run_to_completion(
         &mut self,
         max_cycles: u64,
@@ -1016,6 +1032,11 @@ impl Network {
             if stalled_for >= window && !self.future_work_pending() {
                 return Err(self.diagnose(stalled_for, false));
             }
+            if self.cfg.vcs > 1 {
+                if let Some(vc) = self.starving_vc(window) {
+                    return Err(self.build_report(stalled_for, StallCause::VcStarvation(vc)));
+                }
+            }
             if self.now >= max_cycles {
                 return Err(self.diagnose(stalled_for, true));
             }
@@ -1024,134 +1045,13 @@ impl Network {
         Ok(self.stats.clone())
     }
 
-    /// A scheduled arrival or retry backoff strictly in the future is
-    /// guaranteed forward motion — the watchdog must not fire over a
-    /// quiet spell it can prove will end. Both horizons are bounded
-    /// (backoff caps at 256 cycles; the schedule is finite), so this
-    /// can never postpone a genuine-wedge verdict forever.
-    fn future_work_pending(&self) -> bool {
-        self.retry_queue.iter().any(|e| e.due > self.now)
-            || self
-                .schedule
-                .last()
-                .map_or(false, |s| s.inject_at > self.now)
-    }
-
-    /// Verify per-link credit conservation: for every directed link,
-    /// the upstream output's credits plus the downstream input's
-    /// buffered flits must equal `buf_depth`. Forwarding and credit
-    /// return are same-cycle, and wormhole truncation returns credits
-    /// for every discarded flit, so the invariant holds on *every*
-    /// cycle — including across dead links.
-    pub fn audit_credits(&self) -> Vec<CreditViolation> {
-        let mut violations = Vec::new();
-        for node in 0..self.routers.len() {
-            let at = NodeId(node as u16);
-            for &out in &Port::ALL[1..] {
-                let Some(nb) = self.cfg.mesh.neighbour(at, out) else {
-                    continue;
-                };
-                let credits = self.routers[node].outputs[out as usize].credits;
-                let buffered = self.routers[nb.0 as usize].inputs
-                    [out.opposite() as usize]
-                    .fifo
-                    .len() as u32;
-                if credits + buffered != self.cfg.buf_depth {
-                    violations.push(CreditViolation {
-                        node: at,
-                        out,
-                        credits,
-                        buffered,
-                        expected: self.cfg.buf_depth,
-                    });
-                }
-            }
-        }
-        violations
-    }
-
-    /// Build the fire-time [`StallReport`]: full credit audit, stuck
-    /// packets with their holding node/port, and a cause heuristic —
-    /// all deliberately off the hot path.
-    fn diagnose(&self, stalled_for: u64, timed_out: bool) -> StallReport {
-        let credit_audit = self.audit_credits();
-        // Locate each live packet's foremost buffered flit.
-        let mut loc: std::collections::HashMap<u64, (NodeId, Port, u32, u64)> =
-            std::collections::HashMap::new();
-        for (node, r) in self.routers.iter().enumerate() {
-            for (inp, buf) in r.inputs.iter().enumerate() {
-                for f in &buf.fifo {
-                    let here = (NodeId(node as u16), Port::ALL[inp], f.seq, f.ready_at);
-                    loc.entry(f.packet_id)
-                        .and_modify(|e| {
-                            if f.seq < e.2 {
-                                *e = here;
-                            }
-                        })
-                        .or_insert(here);
-                }
-            }
-        }
-        let mut stuck_packets: Vec<StuckPacket> = self
-            .meta
-            .iter()
-            .map(|(&id, m)| {
-                let (node, port, _, ready) = loc.get(&id).copied().unwrap_or((
-                    m.spec.src,
-                    Port::Local,
-                    0,
-                    m.head_inject.unwrap_or(m.spec.inject_at) + 1,
-                ));
-                StuckPacket {
-                    id,
-                    src: m.spec.src,
-                    dest: m.spec.dest,
-                    node,
-                    port,
-                    since: ready.saturating_sub(1),
-                }
-            })
-            .collect();
-        stuck_packets.sort_by_key(|s| s.id);
-        let window = self.watchdog_cycles.unwrap_or(DEFAULT_WATCHDOG_CYCLES);
-        let cause = if timed_out && stalled_for < window {
-            StallCause::SlowProgress
-        } else if !credit_audit.is_empty() {
-            StallCause::CreditLeak
-        } else if self.zero_rate_port_suspected() {
-            StallCause::ZeroRatePort
-        } else if self.stats.links_down > 0
-            || self.fault.as_ref().map_or(false, |f| f.drop_prob() >= 1.0)
-        {
-            StallCause::DeadLink
-        } else {
-            StallCause::RoutingCycle
-        };
-        StallReport {
-            cycle: self.now,
-            stalled_for,
-            cause,
-            stuck_packets,
-            credit_audit,
-        }
-    }
-
-    /// A codec port whose busy horizon is still ahead of `now` after an
-    /// entire zero-progress window never accepted during it: it is
-    /// refusing every grant at an effectively zero rate.
-    fn zero_rate_port_suspected(&self) -> bool {
-        let horizon = self.now as f64;
-        self.egress.iter().any(|p| p.busy_until > horizon)
-            || self.ingress.iter().any(|p| p.busy_until > horizon)
-    }
-
     /// Kill the `a`↔`b` link immediately (both directions). Prefer
     /// scheduling via [`FaultModel::with_link_down`]; this is the
     /// validated immediate-mode entry tests and tools share.
     pub fn down_link(&mut self, a: NodeId, b: NodeId) -> Result<()> {
         if self.adjacent_port(a, b).is_none() {
             return Err(Error::InvalidParameter(format!(
-                "link-down pair {}-{} is not mesh-adjacent",
+                "link-down pair {}-{} is not adjacent in the topology",
                 a.0, b.0
             )));
         }
@@ -1164,50 +1064,72 @@ impl Network {
     /// purge newly-unreachable packets. Returns true if anything
     /// changed (truncation counts as watchdog progress). Idempotent.
     fn apply_link_down(&mut self, a: NodeId, b: NodeId) -> bool {
+        let topo = self.cfg.topo;
+        let vcs = self.cfg.vcs;
+        let (ra, rb) = (topo.router_of(a), topo.router_of(b));
         let pab = self.adjacent_port(a, b).expect("validated adjacency");
         let pba = pab.opposite();
-        if self.down[a.0 as usize][pab as usize] {
+        if self.down[ra][pab as usize] {
             return false; // already dead
         }
-        self.down[a.0 as usize][pab as usize] = true;
-        self.down[b.0 as usize][pba as usize] = true;
+        self.down[ra][pab as usize] = true;
+        self.down[rb][pba as usize] = true;
         self.stats.links_down += 1;
 
-        // New escape tables over the survivor topology; all routing
-        // follows them from here on.
-        self.escape = Some(EscapeRoutes::compute(self.cfg.mesh, &self.down));
+        // New escape tables over the survivor topology; VC 0 (and, on
+        // single-VC networks, everything) follows them from here on.
+        self.escape = Some(EscapeRoutes::compute(topo, &self.down));
 
         let (victims, purge, sched_gone, retry_gone) = {
             let esc = self.escape.as_ref().expect("just installed");
             // Victims: (1) worms locked through the dead directed
-            // links; (2) flits with no legal escape continuation
-            // (stranded down-phase, or destination severed); (3) worms
-            // whose locked output no longer matches the table hop —
-            // forwarding those would split the worm mid-body.
+            // links (any lane); (2) flits with no legal continuation —
+            // single-VC / escape-channel flits stranded down-phase or
+            // disconnected, adaptive flits only if their destination is
+            // disconnected (they may always re-enter the escape channel
+            // fresh); (3) escape-lane worms whose locked output no
+            // longer matches the rebuilt table hop — forwarding those
+            // would break the up*/down* order mid-worm. Adaptive-lane
+            // locks need no table check: their bodies follow the lock,
+            // and a dead locked output is already case (1).
             let mut victims: Vec<u64> = Vec::new();
-            for (u, pout) in [(a, pab), (b, pba)] {
-                if let Some(pid) =
-                    self.routers[u.0 as usize].outputs[pout as usize].locked_packet
-                {
-                    victims.push(pid);
+            for (u, pout) in [(ra, pab), (rb, pba)] {
+                for lane in &self.routers[u].outputs[pout as usize].lanes {
+                    if let Some(pid) = lane.locked_packet {
+                        victims.push(pid);
+                    }
                 }
             }
             for (node, r) in self.routers.iter().enumerate() {
-                let at = NodeId(node as u16);
                 for (inp, buf) in r.inputs.iter().enumerate() {
-                    for f in &buf.fifo {
-                        if esc.next_hop(at, inp, f.dest).is_none() {
-                            victims.push(f.packet_id);
+                    for fifo in &buf.fifos {
+                        for f in fifo {
+                            let dest_r = topo.router_of(f.dest);
+                            let doomed = if vcs == 1 || f.vc == 0 {
+                                esc.next_hop(node, inp, dest_r).is_none()
+                            } else {
+                                esc.next_hop(node, Port::Local as usize, dest_r).is_none()
+                            };
+                            if doomed {
+                                victims.push(f.packet_id);
+                            }
                         }
                     }
                 }
                 for (out, o) in r.outputs.iter().enumerate() {
-                    let (Some(pid), Some(inp)) = (o.locked_packet, o.locked_to) else {
-                        continue;
-                    };
-                    let Some(m) = self.meta.get(&pid) else { continue };
-                    if esc.next_hop(at, inp, m.spec.dest) != Some(Port::ALL[out]) {
-                        victims.push(pid);
+                    for (ovc, lane) in o.lanes.iter().enumerate() {
+                        if vcs > 1 && ovc != 0 {
+                            continue;
+                        }
+                        let (Some(pid), Some((linp, _))) = (lane.locked_packet, lane.locked_to)
+                        else {
+                            continue;
+                        };
+                        let Some(m) = self.meta.get(&pid) else { continue };
+                        let dest_r = topo.router_of(m.spec.dest);
+                        if esc.next_hop(node, linp, dest_r) != Some(Port::ALL[out]) {
+                            victims.push(pid);
+                        }
                     }
                 }
             }
@@ -1256,33 +1178,37 @@ impl Network {
     }
 
     /// Drain every trace of packet `pid` from the network: buffered
-    /// flits are discarded with their credits returned (so per-link
-    /// conservation holds through the failure), wormhole locks are
-    /// released, and the NI remainder is dropped. The packet is then
-    /// NACK-retried under the retry budget — or reported
-    /// unreachable/dropped. Exactly the ISSUE 6 recovery path, entered
-    /// from a cut instead of a CRC failure.
+    /// flits are discarded with their credits returned to the exact VC
+    /// lane (so per-VC conservation holds through the failure),
+    /// wormhole locks are released, and the NI remainder is dropped.
+    /// The packet is then NACK-retried under the retry budget — or
+    /// reported unreachable/dropped. Exactly the ISSUE 6 recovery path,
+    /// entered from a cut instead of a CRC failure.
     fn truncate_packet(&mut self, pid: u64) {
         let Some(m) = self.meta.remove(&pid) else {
             return; // already truncated in this application
         };
         for node in 0..self.routers.len() {
-            let at = NodeId(node as u16);
             for inp in 0..NUM_PORTS {
-                let removed = {
-                    let fifo = &mut self.routers[node].inputs[inp].fifo;
-                    let before = fifo.len();
-                    fifo.retain(|f| f.packet_id != pid);
-                    before - fifo.len()
-                };
-                for _ in 0..removed {
-                    self.credit_return(at, inp);
+                for vc in 0..self.cfg.vcs {
+                    let removed = {
+                        let fifo = &mut self.routers[node].inputs[inp].fifos[vc as usize];
+                        let before = fifo.len();
+                        fifo.retain(|f| f.packet_id != pid);
+                        before - fifo.len()
+                    };
+                    self.vc_occ[vc as usize] -= removed as u64;
+                    for _ in 0..removed {
+                        self.credit_return(node, inp, vc);
+                    }
                 }
             }
             for o in self.routers[node].outputs.iter_mut() {
-                if o.locked_packet == Some(pid) {
-                    o.locked_to = None;
-                    o.locked_packet = None;
+                for lane in o.lanes.iter_mut() {
+                    if lane.locked_packet == Some(pid) {
+                        lane.locked_to = None;
+                        lane.locked_packet = None;
+                    }
                 }
             }
         }
@@ -1318,878 +1244,46 @@ impl Network {
         &self.stats
     }
 
-    /// Total directed links in the mesh (for utilization).
+    /// Total directed links in the topology (for utilization).
     pub fn link_count(&self) -> u64 {
-        let (c, r) = (self.cfg.mesh.cols as u64, self.cfg.mesh.rows as u64);
-        2 * (r * (c - 1) + c * (r - 1))
+        self.cfg.topo.link_count()
     }
 
-    /// A flit left `inp` of router `at`: return one credit upstream.
-    fn credit_return(&mut self, at: NodeId, inp: usize) {
+    /// A flit left VC `vc` of input `inp` at router `at`: return one
+    /// credit to the matching upstream lane.
+    fn credit_return(&mut self, at: usize, inp: usize, vc: u8) {
         if inp == Port::Local as usize {
             return; // NI injection checks occupancy directly.
         }
         let in_port = Port::ALL[inp];
         // The upstream neighbour sits in the direction of the input port
         // and fed us through its opposite output.
-        if let Some(up) = self.cfg.mesh.neighbour(at, in_port) {
+        if let Some(up) = self.cfg.topo.neighbour_r(at, in_port) {
             let up_out = in_port.opposite() as usize;
-            self.routers[up.0 as usize].outputs[up_out].credits += 1;
+            self.routers[up].outputs[up_out].lanes[vc as usize].credits += 1;
         }
     }
 
-    /// Wormhole lock bookkeeping after forwarding `flit` inp→out.
-    fn update_lock(&mut self, node: usize, out: Port, inp: usize, flit: &Flit) {
-        let o = &mut self.routers[node].outputs[out as usize];
-        if flit.is_tail() {
-            o.locked_to = None;
-            o.locked_packet = None;
-            o.rr = (inp + 1) % NUM_PORTS;
-        } else {
-            o.locked_to = Some(inp);
-            o.locked_packet = Some(flit.packet_id);
+    /// Test-only: overwrite the `ready_at` of every buffered flit of
+    /// packet `pid` (wedges it without breaking credit accounting —
+    /// the starvation-watchdog regression uses this).
+    #[cfg(test)]
+    fn freeze_packet_for_test(&mut self, pid: u64, until: u64) -> usize {
+        let mut frozen = 0;
+        for r in &mut self.routers {
+            for buf in &mut r.inputs {
+                for fifo in &mut buf.fifos {
+                    for f in fifo.iter_mut().filter(|f| f.packet_id == pid) {
+                        f.ready_at = until;
+                        frozen += 1;
+                    }
+                }
+            }
         }
+        frozen
     }
 }
 
 #[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::fault::{retry_backoff, RETRY_BUDGET};
-    use crate::packet::CodecTag;
-    use lexi_core::codec::CodecKind;
-
-    fn cfg_4x4() -> NetworkConfig {
-        NetworkConfig {
-            mesh: Mesh::new(4, 4),
-            flit_bits: 128,
-            link_gbps: 100.0,
-            buf_depth: 4,
-        }
-    }
-
-    #[test]
-    fn single_packet_minimal_latency() {
-        let cfg = cfg_4x4();
-        let mut net = Network::new(cfg);
-        let spec = PacketSpec::new(NodeId(0), NodeId(3), 128 * 4, 0); // 3 hops east
-        net.schedule_packets(&[spec]);
-        let stats = net.run_to_completion(1000);
-        assert_eq!(stats.delivered_packets, 1);
-        let rec = net.records[0];
-        // Lower bound: injection (1) + hops (3) + serialization (3 more
-        // flits) + ejection; exact value depends on the pipeline model —
-        // assert a tight band, not an exact constant.
-        let lb = 3 + 4 - 1;
-        assert!(
-            (lb..lb + 8).contains(&rec.latency()),
-            "latency {}",
-            rec.latency()
-        );
-        // No contention: the head injects the cycle it is scheduled.
-        assert_eq!(rec.queueing_delay(), 0);
-    }
-
-    #[test]
-    fn self_send_delivers() {
-        let mut net = Network::new(cfg_4x4());
-        net.schedule_packets(&[PacketSpec::new(NodeId(5), NodeId(5), 64, 0)]);
-        let stats = net.run_to_completion(100);
-        assert_eq!(stats.delivered_packets, 1);
-    }
-
-    #[test]
-    fn all_packets_delivered_under_load() {
-        let mut net = Network::new(cfg_4x4());
-        let mut specs = Vec::new();
-        for i in 0..16u16 {
-            for j in 0..16u16 {
-                if i != j {
-                    specs.push(PacketSpec::new(
-                        NodeId(i),
-                        NodeId(j),
-                        128 * 3,
-                        (i as u64) * 2,
-                    ));
-                }
-            }
-        }
-        let n = specs.len() as u64;
-        let mut net2 = Network::new(cfg_4x4());
-        net2.schedule_packets(&specs);
-        let stats = net2.run_to_completion(100_000);
-        assert_eq!(stats.delivered_packets, n);
-        assert_eq!(stats.delivered_flits, n * 3);
-        let _ = &mut net;
-    }
-
-    #[test]
-    fn wormhole_packets_arrive_contiguously() {
-        // With wormhole switching + XY routing, a destination receives each
-        // packet's flits in order (seq strictly increasing per packet).
-        let mut net = Network::new(cfg_4x4());
-        let specs: Vec<PacketSpec> = (0..8u16)
-            .map(|i| PacketSpec::new(NodeId(i), NodeId(15), 128 * 8, 0))
-            .collect();
-        net.schedule_packets(&specs);
-        net.run_to_completion(10_000);
-        assert_eq!(net.records.len(), 8);
-    }
-
-    #[test]
-    fn congestion_raises_latency() {
-        // Hotspot: everyone sends to node 0 — latency must exceed the
-        // uncongested single-sender case.
-        let solo = {
-            let mut net = Network::new(cfg_4x4());
-            net.schedule_packets(&[PacketSpec::new(NodeId(15), NodeId(0), 128 * 16, 0)]);
-            net.run_to_completion(10_000).avg_latency()
-        };
-        let hot = {
-            let mut net = Network::new(cfg_4x4());
-            let specs: Vec<PacketSpec> = (1..16u16)
-                .map(|i| PacketSpec::new(NodeId(i), NodeId(0), 128 * 16, 0))
-                .collect();
-            net.schedule_packets(&specs);
-            net.run_to_completion(100_000).avg_latency()
-        };
-        assert!(hot > solo * 2.0, "solo {solo} hot {hot}");
-    }
-
-    #[test]
-    fn throughput_bounded_by_bisection() {
-        // Uniform random cannot exceed ~1 flit/cycle/link utilization.
-        let mut net = Network::new(cfg_4x4());
-        let mut specs = Vec::new();
-        for k in 0..400u64 {
-            specs.push(PacketSpec::new(
-                NodeId((k * 7 % 16) as u16),
-                NodeId((k * 11 % 16) as u16),
-                128 * 4,
-                k / 8,
-            ));
-        }
-        let specs: Vec<_> = specs
-            .into_iter()
-            .filter(|s| s.src != s.dest)
-            .collect();
-        let links = {
-            let n = Network::new(cfg_4x4());
-            n.link_count()
-        };
-        net.schedule_packets(&specs);
-        let stats = net.run_to_completion(1_000_000);
-        assert!(stats.link_utilization(links) <= 1.0);
-    }
-
-    #[test]
-    fn cycle_ns_matches_paper_link() {
-        let cfg = NetworkConfig::paper_default();
-        assert!((cfg.cycle_ns() - 1.28).abs() < 1e-9);
-    }
-
-    #[test]
-    fn queueing_delay_excluded_from_latency() {
-        // Regression (ISSUE 5 satellite): two packets from one source —
-        // the second's head cannot inject until the first's 8 flits have
-        // cleared the NI, and that wait must land in queueing_delay, not
-        // in latency. (Previously inject_cycle was stamped with the
-        // *scheduled* inject_at, silently folding NI queueing into
-        // network latency.)
-        let mut net = Network::new(cfg_4x4());
-        let a = PacketSpec::new(NodeId(0), NodeId(3), 128 * 8, 0);
-        let b = PacketSpec::new(NodeId(0), NodeId(3), 128 * 8, 0);
-        net.schedule_packets(&[a, b]);
-        let stats = net.run_to_completion(10_000);
-        assert_eq!(stats.delivered_packets, 2);
-        let first = net.records.iter().find(|r| r.queueing_delay() == 0).unwrap();
-        let second = net.records.iter().find(|r| r.queueing_delay() > 0).unwrap();
-        // Same route, same size, exclusive link ⇒ near-identical network
-        // latency for both once queueing is separated out.
-        assert!(
-            second.latency() <= first.latency() + 2,
-            "queueing leaked into latency: first {} vs second {}",
-            first.latency(),
-            second.latency()
-        );
-        // The second head waited for ~the first packet's serialization.
-        assert!(
-            (6..=10).contains(&second.queueing_delay()),
-            "queueing {}",
-            second.queueing_delay()
-        );
-        assert_eq!(
-            stats.sum_queueing,
-            net.records.iter().map(|r| r.queueing_delay()).sum::<u64>()
-        );
-    }
-
-    fn huff_tag(symbols: u64, runtime_book: bool) -> CodecTag {
-        CodecTag {
-            kind: CodecKind::Huffman,
-            symbols,
-            runtime_book,
-        }
-    }
-
-    #[test]
-    fn bogus_codec_tags_rejected() {
-        let mut net = Network::new(cfg_4x4());
-        // More symbols than wire bits: impossible (≥ 1 bit/symbol).
-        let bogus = PacketSpec::new(NodeId(0), NodeId(3), 128, 0).tagged(huff_tag(129, false));
-        assert!(net.try_schedule_packets(&[bogus]).is_err());
-        // Tag on a zero-size packet.
-        let empty = PacketSpec::new(NodeId(0), NodeId(3), 0, 0).tagged(huff_tag(1, false));
-        assert!(net.try_schedule_packets(&[empty]).is_err());
-        // Nothing was scheduled; the network stays drained.
-        assert!(net.drained());
-        // A valid tag passes.
-        let ok = PacketSpec::new(NodeId(0), NodeId(3), 128, 0).tagged(huff_tag(128, false));
-        assert!(net.try_schedule_packets(&[ok]).is_ok());
-    }
-
-    #[test]
-    fn line_rate_egress_matches_codec_blind_ejection() {
-        // Paper point (16 lanes): tagged stepping must deliver in the
-        // same cycle count as the codec-blind network (offline book ⇒
-        // no startup, decoder hidden behind the wire).
-        let spec = PacketSpec::new(NodeId(0), NodeId(15), 128 * 64, 0);
-        let blind = {
-            let mut net = Network::new(cfg_4x4());
-            net.schedule_packets(&[spec]);
-            net.run_to_completion(10_000)
-        };
-        let tagged = {
-            let mut net =
-                Network::with_egress(cfg_4x4(), EgressCodecConfig::paper_default());
-            net.schedule_packets(&[spec.tagged(huff_tag(64 * 8, false))]);
-            net.run_to_completion(10_000)
-        };
-        assert_eq!(blind.cycles, tagged.cycles);
-        assert_eq!(tagged.decode_stall_cycles, 0);
-        assert_eq!(tagged.delivered_symbols, 64 * 8);
-        assert_eq!(tagged.completion_cycle, blind.completion_cycle);
-    }
-
-    #[test]
-    fn starved_egress_stalls_the_link_and_backpressures() {
-        // One decoder lane on a symbol-heavy packet: ejection throttles,
-        // stall cycles accrue, and completion stretches to ~the decode
-        // makespan instead of the wire time.
-        let symbols = 64 * 16u64; // 16 symbols per flit
-        let spec =
-            PacketSpec::new(NodeId(0), NodeId(15), 128 * 64, 0).tagged(huff_tag(symbols, false));
-        let ecfg = EgressCodecConfig::nominal(1, 1.0); // 1.16 cyc/sym at 1 lane
-        let cycle_ns = cfg_4x4().cycle_ns();
-        let mut net = Network::with_egress(cfg_4x4(), ecfg);
-        net.schedule_packets(&[spec]);
-        let stats = net.run_to_completion(100_000);
-        assert_eq!(stats.delivered_packets, 1);
-        assert!(stats.decode_stall_cycles > 0, "no backpressure observed");
-        let rec = net.records[0];
-        assert_eq!(rec.decode_stall_cycles, stats.decode_stall_cycles);
-        // Decode-bound completion ≈ symbols × ns/sym ÷ cycle_ns.
-        let decode_cycles = symbols as f64 * ecfg.ns_per_symbol(CodecKind::Huffman) / cycle_ns;
-        let done = stats.completion_cycle as f64;
-        assert!(
-            done >= decode_cycles && done <= decode_cycles * 1.15 + 16.0,
-            "completion {done} vs decode bound {decode_cycles}"
-        );
-    }
-
-    #[test]
-    fn runtime_book_startup_charged_on_head_flits() {
-        // Identical packets, offline vs runtime book: the runtime one
-        // completes later by ~the startup and stalls while the codebook
-        // pipeline fills.
-        let base = PacketSpec::new(NodeId(0), NodeId(15), 128 * 64, 0);
-        let run = |runtime: bool| {
-            let mut net =
-                Network::with_egress(cfg_4x4(), EgressCodecConfig::paper_default());
-            net.schedule_packets(&[base.tagged(huff_tag(64 * 8, runtime))]);
-            net.run_to_completion(100_000)
-        };
-        let offline = run(false);
-        let runtime = run(true);
-        let cycle_ns = cfg_4x4().cycle_ns();
-        let startup_cycles =
-            (EgressCodecConfig::paper_default().startup_ns / cycle_ns).ceil() as u64;
-        let delta = runtime.completion_cycle - offline.completion_cycle;
-        assert!(
-            delta >= startup_cycles - 1 && delta <= startup_cycles + 2,
-            "startup delta {delta} vs expected {startup_cycles}"
-        );
-        assert!(runtime.decode_stall_cycles > 0);
-        assert_eq!(offline.decode_stall_cycles, 0);
-    }
-
-    #[test]
-    fn raw_tagged_packets_never_stall() {
-        let spec = PacketSpec::new(NodeId(1), NodeId(14), 128 * 32, 0).tagged(CodecTag {
-            kind: CodecKind::Raw,
-            symbols: 32 * 16,
-            runtime_book: false,
-        });
-        let mut net = Network::with_egress(cfg_4x4(), EgressCodecConfig::nominal(1, 1.0));
-        let stats = net.run_to_completion_after(&[spec]);
-        assert_eq!(stats.decode_stall_cycles, 0);
-        assert_eq!(stats.delivered_symbols, 32 * 16);
-    }
-
-    impl Network {
-        /// Test helper: schedule then run.
-        fn run_to_completion_after(&mut self, specs: &[PacketSpec]) -> SimStats {
-            self.schedule_packets(specs);
-            self.run_to_completion(1_000_000)
-        }
-    }
-
-    /// Uniform all-to-all load, 16 flits per packet (240 packets).
-    fn uniform_16flit_specs() -> Vec<PacketSpec> {
-        let mut specs = Vec::new();
-        for i in 0..16u16 {
-            for j in 0..16u16 {
-                if i != j {
-                    specs.push(PacketSpec::new(
-                        NodeId(i),
-                        NodeId(j),
-                        128 * 16,
-                        (i as u64) * 2,
-                    ));
-                }
-            }
-        }
-        specs
-    }
-
-    #[test]
-    fn inert_fault_model_is_stat_identical_to_none() {
-        // A fault model attached at all-zero rates must not perturb the
-        // simulation in any observable way — this is the zero-BER pin
-        // that keeps `sim::xval` and the perf row honest.
-        let specs = uniform_16flit_specs();
-        let clean = {
-            let mut net = Network::new(cfg_4x4());
-            net.run_to_completion_after(&specs)
-        };
-        let inert = {
-            let mut net = Network::with_faults(cfg_4x4(), FaultModel::new(3));
-            net.run_to_completion_after(&specs)
-        };
-        assert_eq!(clean, inert);
-        assert_eq!(inert.flits_corrupted, 0);
-        assert_eq!(inert.packet_retries, 0);
-    }
-
-    #[test]
-    fn seeded_fault_runs_replay_identically() {
-        let run = || {
-            let mut net = Network::with_faults(
-                cfg_4x4(),
-                FaultModel::new(99).with_ber(1e-4).with_dup(0.01),
-            );
-            net.run_to_completion_after(&uniform_16flit_specs())
-        };
-        assert_eq!(run(), run());
-    }
-
-    #[test]
-    fn ber_run_delivers_every_packet_exactly_once_with_backoff_in_latency() {
-        // ISSUE 6 satellite: a BER-injected run must deliver all symbols
-        // exactly once (corrupted attempts are NACKed and retransmitted,
-        // never recorded), and each retried packet's latency must carry
-        // at least its retransmission backoffs.
-        let specs = uniform_16flit_specs();
-        let n = specs.len() as u64;
-        let clean = {
-            let mut net = Network::new(cfg_4x4());
-            net.run_to_completion_after(&specs)
-        };
-        let mut net = Network::with_faults(cfg_4x4(), FaultModel::new(11).with_ber(1e-5));
-        let stats = net.run_to_completion_after(&specs);
-        // At this seed/BER the budget is never exhausted: every packet
-        // is delivered, each exactly once.
-        assert_eq!(stats.delivered_packets + stats.packets_dropped, n);
-        assert_eq!(net.records.len() as u64, stats.delivered_packets);
-        assert!(stats.flits_corrupted > 0, "seeded BER run injected nothing");
-        assert!(stats.packet_retries > 0, "no retransmissions observed");
-        assert_eq!(
-            stats.link_faults.iter().sum::<u64>(),
-            stats.flits_corrupted + stats.flits_dropped + stats.flits_duplicated
-        );
-        // Retried packets pay backoff + repeat trip in *latency* (their
-        // records keep the original head-injection cycle).
-        let mut saw_retry = false;
-        for r in net.records.iter().filter(|r| r.retries > 0) {
-            saw_retry = true;
-            let backoffs: u64 = (1..=r.retries).map(retry_backoff).sum();
-            assert!(
-                r.latency() >= backoffs,
-                "retried packet latency {} below its backoff sum {backoffs}",
-                r.latency()
-            );
-        }
-        assert!(saw_retry || stats.packets_dropped > 0);
-        // Faults can only make the run slower in aggregate.
-        assert!(stats.sum_latency >= clean.sum_latency);
-    }
-
-    #[test]
-    fn lossy_links_retry_at_head_and_still_deliver() {
-        // Flit drops are link-level ARQ: the flit retries from the FIFO
-        // head, so delivery is lossless and in-order — just slower.
-        let spec = PacketSpec::new(NodeId(0), NodeId(15), 128 * 8, 0);
-        let clean = {
-            let mut net = Network::new(cfg_4x4());
-            net.run_to_completion_after(&[spec])
-        };
-        let mut net = Network::with_faults(cfg_4x4(), FaultModel::new(5).with_drop(0.3));
-        let stats = net.run_to_completion_after(&[spec]);
-        assert_eq!(stats.delivered_packets, 1);
-        assert!(stats.flits_dropped > 0, "seeded drop run dropped nothing");
-        assert_eq!(stats.packets_dropped, 0);
-        assert!(stats.sum_latency >= clean.sum_latency);
-    }
-
-    #[test]
-    fn retry_budget_exhaustion_reports_drop_without_hanging() {
-        // BER = 1.0 corrupts every traversal: the packet is NACKed on
-        // all RETRY_BUDGET retransmissions and then reported dropped —
-        // run_to_completion drains instead of spinning forever.
-        let mut net = Network::with_faults(cfg_4x4(), FaultModel::new(1).with_ber(1.0));
-        net.schedule_packets(&[PacketSpec::new(NodeId(0), NodeId(3), 128 * 4, 0)]);
-        let stats = net.run_to_completion(10_000);
-        assert!(net.drained());
-        assert_eq!(stats.delivered_packets, 0);
-        assert_eq!(stats.packets_dropped, 1);
-        assert_eq!(stats.packet_retries, u64::from(RETRY_BUDGET));
-        assert!(net.records.is_empty());
-        // The exponential backoffs are cycle-accurate sim time.
-        let backoffs: u64 = (1..=RETRY_BUDGET).map(retry_backoff).sum();
-        assert!(
-            stats.cycles >= backoffs,
-            "cycles {} below backoff floor {backoffs}",
-            stats.cycles
-        );
-    }
-
-    #[test]
-    fn retry_config_override_moves_the_drop_point_and_backoff_clock() {
-        // ISSUE 9 satellite: the budget/backoff are knobs now. A budget
-        // of 1 under BER=1.0 drops after a single retransmission; a
-        // larger base/cap stretches the deterministic backoff clock.
-        let run = |retry: RetryConfig| {
-            let mut net = Network::with_faults(
-                cfg_4x4(),
-                FaultModel::new(1).with_ber(1.0).with_retry(retry),
-            );
-            assert_eq!(net.retry_config(), retry);
-            net.schedule_packets(&[PacketSpec::new(NodeId(0), NodeId(3), 128 * 4, 0)]);
-            net.run_to_completion(10_000)
-        };
-        let tight = run(RetryConfig {
-            budget: 1,
-            ..RetryConfig::paper_default()
-        });
-        assert_eq!(tight.packets_dropped, 1);
-        assert_eq!(tight.packet_retries, 1);
-        let slow = run(RetryConfig {
-            backoff_base: 64,
-            backoff_cap: 4096,
-            ..RetryConfig::paper_default()
-        });
-        assert_eq!(slow.packet_retries, u64::from(RETRY_BUDGET));
-        let floor: u64 = (1..=RETRY_BUDGET)
-            .map(|a| (64u64 << (a - 1).min(32)).min(4096))
-            .sum();
-        assert!(
-            slow.cycles >= floor,
-            "cycles {} below stretched backoff floor {floor}",
-            slow.cycles
-        );
-        // And the default path is bit-identical to the pre-knob network.
-        let default_cfg = run(RetryConfig::paper_default());
-        let mut legacy = Network::with_faults(cfg_4x4(), FaultModel::new(1).with_ber(1.0));
-        legacy.schedule_packets(&[PacketSpec::new(NodeId(0), NodeId(3), 128 * 4, 0)]);
-        assert_eq!(default_cfg, legacy.run_to_completion(10_000));
-    }
-
-    #[test]
-    fn duplicated_flits_cost_occupancy_but_deliver_once() {
-        let specs = uniform_16flit_specs();
-        let n = specs.len() as u64;
-        let mut net = Network::with_faults(cfg_4x4(), FaultModel::new(21).with_dup(0.05));
-        let stats = net.run_to_completion_after(&specs);
-        assert_eq!(stats.delivered_packets, n);
-        assert!(stats.flits_duplicated > 0, "seeded dup run duplicated nothing");
-        // Duplicates never create packets or symbols.
-        assert_eq!(net.records.len() as u64, n);
-        assert_eq!(stats.packets_dropped, 0);
-    }
-
-    #[test]
-    fn faulty_egress_network_keeps_symbol_accounting_exact() {
-        // Corrupted attempts charge speculative decode work but never
-        // count delivered symbols; once the retry lands, symbols are
-        // counted exactly once.
-        let symbols = 64 * 8u64;
-        let spec =
-            PacketSpec::new(NodeId(0), NodeId(15), 128 * 64, 0).tagged(huff_tag(symbols, false));
-        let mut net = Network::with_egress(cfg_4x4(), EgressCodecConfig::paper_default());
-        net.set_fault_model(FaultModel::new(17).with_ber(2e-4));
-        let stats = net.run_to_completion_after(&[spec]);
-        assert_eq!(stats.delivered_packets + stats.packets_dropped, 1);
-        if stats.delivered_packets == 1 {
-            assert_eq!(stats.delivered_symbols, symbols);
-        } else {
-            assert_eq!(stats.delivered_symbols, 0);
-        }
-    }
-
-    // ------------------------------------------------------------------
-    // ISSUE 7: ingress codec ports
-    // ------------------------------------------------------------------
-
-    #[test]
-    fn ingress_line_rate_matches_codec_blind_injection() {
-        // Paper point (10 encode lanes): at ≤ ~12 symbols per flit the
-        // encoder stays strictly behind the wire, so paced injection is
-        // cycle-identical to the codec-blind network.
-        let spec = PacketSpec::new(NodeId(0), NodeId(15), 128 * 64, 0);
-        let blind = {
-            let mut net = Network::new(cfg_4x4());
-            net.run_to_completion_after(&[spec])
-        };
-        let paced = {
-            let mut net =
-                Network::with_ingress(cfg_4x4(), IngressCodecConfig::paper_default());
-            net.run_to_completion_after(&[spec.tagged(huff_tag(64 * 8, false))])
-        };
-        assert_eq!(blind.cycles, paced.cycles);
-        assert_eq!(blind.completion_cycle, paced.completion_cycle);
-        assert_eq!(paced.encode_stall_cycles, 0);
-        assert_eq!(paced.injections_refused, 0);
-    }
-
-    #[test]
-    fn starved_ingress_throttles_injection_and_counts_stalls() {
-        // One encode lane on a symbol-heavy packet: injection paces to
-        // the encoder rate, stall cycles accrue at the NI, and
-        // completion stretches to ~the encode makespan.
-        let symbols = 64 * 16u64; // 16 symbols per flit
-        let spec =
-            PacketSpec::new(NodeId(0), NodeId(15), 128 * 64, 0).tagged(huff_tag(symbols, false));
-        let icfg = IngressCodecConfig::nominal(1, 1.0); // 1 ns/symbol
-        let cycle_ns = cfg_4x4().cycle_ns();
-        let mut net = Network::with_ingress(cfg_4x4(), icfg);
-        let stats = net.run_to_completion_after(&[spec]);
-        assert_eq!(stats.delivered_packets, 1);
-        assert!(stats.encode_stall_cycles > 0, "no encode backpressure observed");
-        let rec = net.records[0];
-        assert_eq!(rec.encode_stall_cycles, stats.encode_stall_cycles);
-        // Encode-bound completion ≈ symbols × ns/sym ÷ cycle_ns (the
-        // tail leaves the encoder a flit-cost early, hence the slack).
-        let encode_cycles =
-            symbols as f64 * icfg.ns_per_symbol(CodecKind::Huffman) / cycle_ns;
-        let done = stats.completion_cycle as f64;
-        assert!(
-            done >= encode_cycles - 16.0 && done <= encode_cycles * 1.15 + 16.0,
-            "completion {done} vs encode bound {encode_cycles}"
-        );
-    }
-
-    #[test]
-    fn ingress_startup_charged_once_on_runtime_head() {
-        // Identical packets, offline vs runtime codebook: the runtime
-        // one completes later by ~the compressor startup, charged once
-        // on the head flit; followers stall at the NI while it drains.
-        let base = PacketSpec::new(NodeId(0), NodeId(15), 128 * 64, 0);
-        let run = |runtime: bool| {
-            let mut net =
-                Network::with_ingress(cfg_4x4(), IngressCodecConfig::paper_default());
-            net.run_to_completion_after(&[base.tagged(huff_tag(64 * 8, runtime))])
-        };
-        let offline = run(false);
-        let runtime = run(true);
-        let cycle_ns = cfg_4x4().cycle_ns();
-        let startup_cycles =
-            (IngressCodecConfig::paper_default().startup_ns / cycle_ns).ceil() as u64;
-        let delta = runtime.completion_cycle - offline.completion_cycle;
-        assert!(
-            delta >= startup_cycles - 1 && delta <= startup_cycles + 2,
-            "startup delta {delta} vs expected {startup_cycles}"
-        );
-        assert!(runtime.encode_stall_cycles > 0);
-        assert_eq!(offline.encode_stall_cycles, 0);
-    }
-
-    #[test]
-    fn bounded_ni_admission_defers_and_counts() {
-        // More same-source arrivals than the NI bound: the excess is
-        // deferred cycle by cycle (refusals counted), yet every packet
-        // is eventually delivered — bounded memory, no loss.
-        let icfg = IngressCodecConfig::nominal(1, 1.0);
-        assert_eq!(icfg.max_queue, crate::ingress::DEFAULT_MAX_QUEUE);
-        let specs: Vec<PacketSpec> = (0..12)
-            .map(|_| {
-                PacketSpec::new(NodeId(0), NodeId(15), 128 * 8, 0)
-                    .tagged(huff_tag(8 * 16, false))
-            })
-            .collect();
-        let mut net = Network::with_ingress(cfg_4x4(), icfg);
-        let stats = net.run_to_completion_after(&specs);
-        assert_eq!(stats.delivered_packets, 12);
-        assert!(stats.injections_refused > 0, "bound never engaged");
-    }
-
-    #[test]
-    fn try_inject_backpressures_with_typed_refusal() {
-        // Closed-loop generator: admission beyond the NI bound is a
-        // typed IngressSaturated refusal, and room reopens as the
-        // encoder drains — backpressure reaches the caller, not an
-        // unbounded queue.
-        let mut icfg = IngressCodecConfig::nominal(1, 1.0);
-        icfg.max_queue = 2;
-        let mut net = Network::with_ingress(cfg_4x4(), icfg);
-        let spec =
-            PacketSpec::new(NodeId(0), NodeId(15), 128 * 8, 0).tagged(huff_tag(8 * 16, false));
-        assert!(net.try_inject(spec).is_ok());
-        assert!(net.try_inject(spec).is_ok());
-        match net.try_inject(spec) {
-            Err(Error::IngressSaturated { node: 0, depth: 2 }) => {}
-            other => panic!("expected typed saturation, got {other:?}"),
-        }
-        assert_eq!(net.stats().injections_refused, 1);
-        // Drain enough for one packet to clear the NI, then retry.
-        for _ in 0..1500 {
-            net.step();
-            if net.try_inject(spec).is_ok() {
-                break;
-            }
-        }
-        let stats = net.run_to_completion(100_000);
-        assert_eq!(stats.delivered_packets, 3);
-    }
-
-    // ------------------------------------------------------------------
-    // ISSUE 7: stall/deadlock watchdog
-    // ------------------------------------------------------------------
-
-    #[test]
-    fn zero_rate_egress_terminates_with_stall_report() {
-        // Regression: a decoder that never drains used to spin
-        // run_to_completion to the horizon. The watchdog must terminate
-        // promptly with a typed report naming the stuck packet and the
-        // zero-rate port as the suspected cause.
-        let mut ecfg = EgressCodecConfig::nominal(16, 1.0);
-        ecfg.set_rate(CodecKind::Huffman, 1e12);
-        let mut net = Network::with_egress(cfg_4x4(), ecfg);
-        net.set_watchdog(200);
-        net.schedule_packets(
-            &[PacketSpec::new(NodeId(0), NodeId(3), 128 * 8, 0).tagged(huff_tag(64, false))],
-        );
-        let report = net
-            .try_run_to_completion(1_000_000)
-            .expect_err("a wedged run must not drain");
-        assert_eq!(report.cause, StallCause::ZeroRatePort);
-        assert_eq!(report.stuck_packets.len(), 1);
-        assert_eq!(report.stuck_packets[0].dest, NodeId(3));
-        assert!(report.credit_audit.is_empty(), "credits must still conserve");
-        assert!(report.stalled_for >= 200);
-        assert!(net.now() < 10_000, "watchdog fired late: {}", net.now());
-        // The report renders human-readable.
-        let text = format!("{report}");
-        assert!(text.contains("ZeroRatePort"), "{text}");
-    }
-
-    #[test]
-    fn drop_every_flit_terminates_with_dead_link_verdict() {
-        // drop_prob = 1.0 is a dead link in transient clothing: no flit
-        // ever traverses, no NACK ever fires (nothing reaches egress),
-        // and pre-watchdog the step loop span forever.
-        let mut net = Network::with_faults(cfg_4x4(), FaultModel::new(4).with_drop(1.0));
-        net.set_watchdog(300);
-        net.schedule_packets(&[PacketSpec::new(NodeId(0), NodeId(3), 128 * 4, 0)]);
-        let report = net
-            .try_run_to_completion(1_000_000)
-            .expect_err("a dead link must trip the watchdog");
-        assert_eq!(report.cause, StallCause::DeadLink);
-        assert!(!report.stuck_packets.is_empty());
-        assert!(report.credit_audit.is_empty());
-    }
-
-    #[test]
-    fn watchdog_never_fires_on_healthy_sparse_traffic() {
-        // Arrival gaps far beyond the watchdog window: future-due
-        // schedule entries are provable progress, so a healthy mesh
-        // must complete — quiet spells are not stalls.
-        let mut net = Network::new(cfg_4x4());
-        net.set_watchdog(64);
-        let specs: Vec<PacketSpec> = (0..40u64)
-            .map(|k| {
-                PacketSpec::new(
-                    NodeId((k * 3 % 16) as u16),
-                    NodeId((k * 5 % 16) as u16),
-                    128 * 4,
-                    k * 200,
-                )
-            })
-            .filter(|s| s.src != s.dest)
-            .collect();
-        let n = specs.len() as u64;
-        net.schedule_packets(&specs);
-        let stats = net
-            .try_run_to_completion(100_000)
-            .expect("healthy mesh must never trip the watchdog");
-        assert_eq!(stats.delivered_packets, n);
-    }
-
-    #[test]
-    fn credit_conservation_soak_under_faults_and_link_downs() {
-        // Property soak (ISSUE 7 satellite): ≥ 10k cycles of seeded
-        // random traffic × transient faults × two mid-run permanent
-        // link failures — the per-link credit invariant must hold on
-        // *every* cycle, and packet accounting must stay exact.
-        let mut net = Network::new(cfg_4x4());
-        net.set_fault_model(
-            FaultModel::new(77)
-                .with_ber(1e-4)
-                .with_drop(0.02)
-                .with_dup(0.01)
-                .with_link_down(NodeId(5), NodeId(6), 3_000)
-                .with_link_down(NodeId(9), NodeId(10), 7_000),
-        );
-        let mut specs = Vec::new();
-        for k in 0..500u64 {
-            let (s, d) = ((k * 7 % 16) as u16, ((k * 11 + 3) % 16) as u16);
-            if s != d {
-                specs.push(PacketSpec::new(NodeId(s), NodeId(d), 128 * 8, k * 25));
-            }
-        }
-        let n = specs.len() as u64;
-        net.schedule_packets(&specs);
-        let mut cycles = 0u64;
-        while !net.drained() {
-            assert!(net.now() < 200_000, "soak failed to drain");
-            net.step();
-            cycles += 1;
-            let v = net.audit_credits();
-            assert!(
-                v.is_empty(),
-                "credit violation at cycle {}: {:?}",
-                net.now(),
-                v[0]
-            );
-        }
-        assert!(cycles >= 10_000, "soak too short: {cycles} cycles");
-        let stats = net.stats();
-        assert_eq!(stats.links_down, 2);
-        // A 4x4 mesh stays connected after these two cuts: every packet
-        // is delivered or (budget-exhausted) reported dropped.
-        assert_eq!(stats.packets_unreachable, 0);
-        assert_eq!(stats.delivered_packets + stats.packets_dropped, n);
-    }
-
-    // ------------------------------------------------------------------
-    // ISSUE 7: permanent link failures + adaptive recovery
-    // ------------------------------------------------------------------
-
-    #[test]
-    fn link_down_truncates_worm_and_redelivers_via_reroute() {
-        // Kill the 1↔2 link while a 16-flit worm 0→3 is strung across
-        // it: the worm is truncated (credits returned), NACK-retried,
-        // and the retry is delivered over the escape route.
-        let mut net = Network::new(cfg_4x4());
-        net.set_fault_model(FaultModel::new(1).with_link_down(NodeId(1), NodeId(2), 6));
-        net.schedule_packets(&[PacketSpec::new(NodeId(0), NodeId(3), 128 * 16, 0)]);
-        let stats = net.run_to_completion(10_000);
-        assert_eq!(stats.delivered_packets, 1);
-        assert_eq!(stats.links_down, 1);
-        assert_eq!(stats.packets_truncated, 1);
-        assert!(stats.packet_retries >= 1);
-        assert_eq!(stats.packets_unreachable, 0);
-        let rec = net.records[0];
-        assert!(rec.retries >= 1, "delivery must be a logged retransmission");
-        assert!(net.audit_credits().is_empty());
-    }
-
-    #[test]
-    fn link_down_before_traffic_reroutes_without_truncation() {
-        // The link dies before injection: no worm to cut — the packet
-        // simply routes around the failure (longer than the 3-hop XY
-        // path the cut removed).
-        let mut net = Network::new(cfg_4x4());
-        net.set_fault_model(FaultModel::new(1).with_link_down(NodeId(1), NodeId(2), 0));
-        net.schedule_packets(&[PacketSpec::new(NodeId(0), NodeId(3), 128 * 16, 10)]);
-        let stats = net.run_to_completion(10_000);
-        assert_eq!(stats.delivered_packets, 1);
-        assert_eq!(stats.packets_truncated, 0);
-        assert_eq!(stats.packet_retries, 0);
-        assert!(
-            stats.flit_hops > 16 * 3,
-            "escape path must be longer than the severed XY path: {} hops",
-            stats.flit_hops
-        );
-    }
-
-    #[test]
-    fn severed_destination_is_typed_unreachable() {
-        // Cut both links of corner node 0 (3x3): packets bound there
-        // are reported unreachable — and the run still drains; packets
-        // between surviving nodes still deliver.
-        let cfg = NetworkConfig {
-            mesh: Mesh::new(3, 3),
-            flit_bits: 128,
-            link_gbps: 100.0,
-            buf_depth: 4,
-        };
-        let mut net = Network::new(cfg);
-        net.set_fault_model(
-            FaultModel::new(1)
-                .with_link_down(NodeId(0), NodeId(1), 0)
-                .with_link_down(NodeId(0), NodeId(3), 0),
-        );
-        net.schedule_packets(&[
-            PacketSpec::new(NodeId(8), NodeId(0), 128 * 4, 5),
-            PacketSpec::new(NodeId(8), NodeId(4), 128 * 4, 5),
-        ]);
-        let stats = net.run_to_completion(10_000);
-        assert!(net.drained());
-        assert_eq!(stats.delivered_packets, 1);
-        assert_eq!(stats.packets_unreachable, 1);
-        assert_eq!(net.unreachable_packets().len(), 1);
-        assert_eq!(net.unreachable_packets()[0].dest, NodeId(0));
-        // Scheduling into the severed island is now a typed refusal...
-        let err = net
-            .try_schedule_packets(&[PacketSpec::new(NodeId(8), NodeId(0), 128, 100)])
-            .expect_err("severed dest must be refused");
-        assert!(
-            matches!(err, Error::Unreachable { src: 8, dest: 0 }),
-            "{err:?}"
-        );
-        // ...and so is closed-loop injection.
-        assert!(matches!(
-            net.try_inject(PacketSpec::new(NodeId(3), NodeId(0), 128, 0)),
-            Err(Error::Unreachable { .. })
-        ));
-    }
-
-    #[test]
-    fn duplex_codec_ports_compose_with_exact_accounting() {
-        // Ingress AND egress ports starved (1 lane each): both stall
-        // kinds are counted, and symbol accounting stays exact.
-        let symbols = 64 * 16u64;
-        let spec = PacketSpec::new(NodeId(0), NodeId(15), 128 * 64, 0)
-            .tagged(huff_tag(symbols, true));
-        let mut net = Network::with_egress(cfg_4x4(), EgressCodecConfig::nominal(1, 1.0));
-        net.set_ingress_config(IngressCodecConfig::nominal(1, 1.0));
-        let stats = net.run_to_completion_after(&[spec]);
-        assert_eq!(stats.delivered_packets, 1);
-        assert!(stats.encode_stall_cycles > 0);
-        assert!(stats.decode_stall_cycles > 0);
-        assert_eq!(stats.delivered_symbols, symbols);
-        let rec = net.records[0];
-        assert_eq!(rec.encode_stall_cycles, stats.encode_stall_cycles);
-        assert_eq!(rec.decode_stall_cycles, stats.decode_stall_cycles);
-    }
-}
+#[path = "network_tests.rs"]
+mod tests;

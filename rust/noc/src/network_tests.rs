@@ -1,0 +1,403 @@
+use super::*;
+use crate::topology::{CMesh, MultiPackage};
+
+fn cfg_4x4() -> NetworkConfig {
+    NetworkConfig::for_topo(Topo::Mesh(Mesh::new(4, 4)))
+}
+
+fn run_after(mut net: Network, specs: &[PacketSpec]) -> (SimStats, Network) {
+    net.schedule_packets(specs);
+    let stats = net.run_to_completion(1_000_000);
+    (stats, net)
+}
+
+#[test]
+fn single_packet_minimal_latency() {
+    let mut net = Network::new(cfg_4x4());
+    let spec = PacketSpec::new(NodeId(0), NodeId(3), 128 * 4, 0); // 3 hops east
+    net.schedule_packets(&[spec]);
+    let stats = net.run_to_completion(1000);
+    assert_eq!(stats.delivered_packets, 1);
+    let rec = net.records[0];
+    // Lower bound: injection (1) + hops (3) + serialization (3 more
+    // flits) + ejection; exact value depends on the pipeline model —
+    // assert a tight band, not an exact constant.
+    let lb = 3 + 4 - 1;
+    assert!(
+        (lb..lb + 8).contains(&rec.latency()),
+        "latency {}",
+        rec.latency()
+    );
+    // No contention: the head injects the cycle it is scheduled.
+    assert_eq!(rec.queueing_delay(), 0);
+}
+
+#[test]
+fn self_send_delivers() {
+    let mut net = Network::new(cfg_4x4());
+    net.schedule_packets(&[PacketSpec::new(NodeId(5), NodeId(5), 64, 0)]);
+    let stats = net.run_to_completion(100);
+    assert_eq!(stats.delivered_packets, 1);
+}
+
+#[test]
+fn all_packets_delivered_under_load() {
+    let mut specs = Vec::new();
+    for i in 0..16u16 {
+        for j in 0..16u16 {
+            if i != j {
+                specs.push(PacketSpec::new(NodeId(i), NodeId(j), 128 * 3, (i as u64) * 2));
+            }
+        }
+    }
+    let n = specs.len() as u64;
+    let (stats, _) = run_after(Network::new(cfg_4x4()), &specs);
+    assert_eq!(stats.delivered_packets, n);
+    assert_eq!(stats.delivered_flits, n * 3);
+}
+
+#[test]
+fn congestion_raises_latency() {
+    // Hotspot: everyone sends to node 0 — latency must exceed the
+    // uncongested single-sender case.
+    let (solo, _) = run_after(
+        Network::new(cfg_4x4()),
+        &[PacketSpec::new(NodeId(15), NodeId(0), 128 * 16, 0)],
+    );
+    let specs: Vec<PacketSpec> = (1..16u16)
+        .map(|i| PacketSpec::new(NodeId(i), NodeId(0), 128 * 16, 0))
+        .collect();
+    let (hot, _) = run_after(Network::new(cfg_4x4()), &specs);
+    assert!(hot.avg_latency() > solo.avg_latency() * 2.0);
+}
+
+#[test]
+fn cycle_ns_matches_paper_link() {
+    let cfg = NetworkConfig::paper_default();
+    assert!((cfg.cycle_ns() - 1.28).abs() < 1e-9);
+}
+
+#[test]
+fn queueing_delay_excluded_from_latency() {
+    // Regression (ISSUE 5 satellite): two packets from one source —
+    // the second's head cannot inject until the first's 8 flits have
+    // cleared the NI, and that wait must land in queueing_delay, not
+    // in latency.
+    let a = PacketSpec::new(NodeId(0), NodeId(3), 128 * 8, 0);
+    let (stats, net) = run_after(Network::new(cfg_4x4()), &[a, a]);
+    assert_eq!(stats.delivered_packets, 2);
+    let first = net.records.iter().find(|r| r.queueing_delay() == 0).unwrap();
+    let second = net.records.iter().find(|r| r.queueing_delay() > 0).unwrap();
+    assert!(
+        second.latency() <= first.latency() + 2,
+        "queueing leaked into latency: first {} vs second {}",
+        first.latency(),
+        second.latency()
+    );
+    assert!(
+        (6..=10).contains(&second.queueing_delay()),
+        "queueing {}",
+        second.queueing_delay()
+    );
+    assert_eq!(
+        stats.sum_queueing,
+        net.records.iter().map(|r| r.queueing_delay()).sum::<u64>()
+    );
+}
+
+// ------------------------------------------------------------------
+// ISSUE 10: virtual channels
+// ------------------------------------------------------------------
+
+fn uniform_specs() -> Vec<PacketSpec> {
+    let mut specs = Vec::new();
+    for k in 0..300u64 {
+        let (s, d) = ((k * 7 % 16) as u16, ((k * 11 + 3) % 16) as u16);
+        if s != d {
+            specs.push(PacketSpec::new(NodeId(s), NodeId(d), 128 * 6, k / 2));
+        }
+    }
+    specs
+}
+
+#[test]
+fn multi_vc_delivers_all_with_clean_per_vc_audit() {
+    for vcs in [2u8, 4] {
+        let specs = uniform_specs();
+        let n = specs.len() as u64;
+        let mut net = Network::new(cfg_4x4().with_vcs(vcs));
+        net.schedule_packets(&specs);
+        while !net.drained() {
+            assert!(net.now() < 200_000, "vcs={vcs} failed to drain");
+            net.step();
+            let v = net.audit_credits();
+            assert!(v.is_empty(), "vcs={vcs} violation at {}: {:?}", net.now(), v[0]);
+        }
+        let stats = net.stats();
+        assert_eq!(stats.delivered_packets, n, "vcs={vcs}");
+        // Per-VC accounting covers every hop and delivery.
+        let usage = net.vc_usage();
+        assert_eq!(usage.len(), vcs as usize);
+        assert_eq!(
+            usage.iter().map(|u| u.flit_hops).sum::<u64>(),
+            stats.flit_hops
+        );
+        assert_eq!(
+            usage.iter().map(|u| u.delivered_flits).sum::<u64>(),
+            stats.delivered_flits
+        );
+        assert_eq!(usage.iter().map(|u| u.buffered).sum::<u64>(), 0);
+        // The adaptive spread used more than one VC.
+        assert!(
+            usage[1..].iter().filter(|u| u.delivered_flits > 0).count() >= 1,
+            "adaptive VCs unused"
+        );
+    }
+}
+
+#[test]
+fn pinned_vc_traffic_stays_on_its_channel() {
+    // A single uncontended worm pinned to VC 1 never needs the
+    // escape fallback: all hops and deliveries land on VC 1.
+    let spec = PacketSpec::new(NodeId(0), NodeId(15), 128 * 8, 0).on_vc(1);
+    let (stats, net) = run_after(Network::new(cfg_4x4().with_vcs(2)), &[spec]);
+    assert_eq!(stats.delivered_packets, 1);
+    let usage = net.vc_usage();
+    assert_eq!(usage[0].flit_hops, 0, "escape channel must stay idle");
+    assert_eq!(usage[0].delivered_flits, 0);
+    assert_eq!(usage[1].flit_hops, stats.flit_hops);
+    assert_eq!(usage[1].delivered_flits, stats.delivered_flits);
+    // An out-of-range pin clamps instead of panicking.
+    let clamped = PacketSpec::new(NodeId(0), NodeId(3), 128, 0).on_vc(9);
+    let (stats2, _) = run_after(Network::new(cfg_4x4().with_vcs(2)), &[clamped]);
+    assert_eq!(stats2.delivered_packets, 1);
+}
+
+#[test]
+fn vc1_config_keeps_whole_link_credit_audit() {
+    // The per-VC audit at vcs=1 is exactly the ISSUE 7 whole-link
+    // audit: one lane holding all buf_depth credits.
+    let mut net = Network::new(cfg_4x4());
+    net.schedule_packets(&uniform_specs());
+    for _ in 0..500 {
+        net.step();
+        assert!(net.audit_credits().is_empty());
+    }
+}
+
+#[test]
+fn per_vc_audit_pinpoints_a_leaked_lane() {
+    let mut net = Network::new(cfg_4x4().with_vcs(2));
+    // Steal one credit from VC 1 of node 0's East output.
+    net.routers[0].outputs[Port::East as usize].lanes[1].credits -= 1;
+    let v = net.audit_credits();
+    assert_eq!(v.len(), 1);
+    assert_eq!(v[0].node, NodeId(0));
+    assert_eq!(v[0].out, Port::East);
+    assert_eq!(v[0].vc, 1);
+    assert_eq!(v[0].credits + 1, v[0].buffered + v[0].expected);
+    let text = format!(
+        "{}",
+        StallReport {
+            cycle: 0,
+            stalled_for: 0,
+            cause: StallCause::CreditLeak,
+            stuck_packets: vec![],
+            credit_audit: v,
+        }
+    );
+    assert!(text.contains("vc 1"), "{text}");
+}
+
+#[test]
+fn vc_starvation_watchdog_fires_on_a_frozen_channel() {
+    // Regression (ISSUE 10 satellite): wedge VC 0 (a frozen flit
+    // that never becomes ready) while VC 1 keeps a long stream
+    // flowing. Global progress never stops, so only the per-VC
+    // watchdog can see the starvation — it must fire with the
+    // typed verdict and an intact credit audit.
+    let mut net = Network::new(cfg_4x4().with_vcs(2));
+    net.set_watchdog(100);
+    net.schedule_packets(&[PacketSpec::new(NodeId(5), NodeId(6), 128, 0).on_vc(0)]);
+    // Let the flit enter node 5's Local FIFO, then freeze it.
+    net.step();
+    assert_eq!(net.freeze_packet_for_test(0, u64::MAX), 1);
+    // A stream on VC 1, long enough to outlast the window.
+    let stream: Vec<PacketSpec> = (0..400u64)
+        .map(|k| PacketSpec::new(NodeId(0), NodeId(3), 128 * 2, k).on_vc(1))
+        .collect();
+    net.schedule_packets(&stream);
+    let report = net
+        .try_run_to_completion(1_000_000)
+        .expect_err("a starved VC must trip the watchdog");
+    assert_eq!(report.cause, StallCause::VcStarvation(0));
+    assert!(report.credit_audit.is_empty(), "credits must still conserve");
+    assert_eq!(report.stalled_for, 0, "the network as a whole kept moving");
+    assert!(
+        report.stuck_packets.iter().any(|p| p.id == 0),
+        "the frozen packet must be reported"
+    );
+    let text = format!("{report}");
+    assert!(text.contains("VcStarvation"), "{text}");
+}
+
+#[test]
+fn deadlock_freedom_soak_with_adaptive_vcs_and_midrun_cut() {
+    // Hotspot pressure on 2 and 4 VCs with a mid-run permanent link
+    // failure: the escape channel must keep the run live — watchdog
+    // silent, every packet delivered or typed-accounted.
+    for vcs in [2u8, 4] {
+        let mut net = Network::new(cfg_4x4().with_vcs(vcs));
+        net.set_fault_model(FaultModel::new(7).with_link_down(NodeId(5), NodeId(6), 800));
+        let mut specs: Vec<PacketSpec> = (1..16u16)
+            .map(|i| PacketSpec::new(NodeId(i), NodeId(0), 128 * 16, 0))
+            .collect();
+        specs.extend((0..100u64).map(|k| {
+            PacketSpec::new(
+                NodeId((k % 16) as u16),
+                NodeId(((k * 5 + 1) % 16) as u16),
+                128 * 4,
+                k * 3,
+            )
+        }));
+        let specs: Vec<_> = specs.into_iter().filter(|s| s.src != s.dest).collect();
+        let n = specs.len() as u64;
+        net.schedule_packets(&specs);
+        let stats = net
+            .try_run_to_completion(500_000)
+            .unwrap_or_else(|r| panic!("vcs={vcs} wedged: {r}"));
+        assert_eq!(
+            stats.delivered_packets + stats.packets_dropped + stats.packets_unreachable,
+            n,
+            "vcs={vcs}"
+        );
+        assert_eq!(stats.links_down, 1);
+    }
+}
+
+// ------------------------------------------------------------------
+// ISSUE 10: hierarchical topologies
+// ------------------------------------------------------------------
+
+#[test]
+fn cmesh_delivers_between_concentrated_endpoints() {
+    // 2×2 routers × 4 endpoints each = 16 endpoints. Same-router
+    // pairs eject without ever crossing a link.
+    let topo = Topo::CMesh(CMesh::new(2, 2, 4));
+    let mut specs = Vec::new();
+    for i in 0..16u16 {
+        for j in 0..16u16 {
+            if i != j {
+                specs.push(PacketSpec::new(NodeId(i), NodeId(j), 128 * 2, (i as u64) * 3));
+            }
+        }
+    }
+    let n = specs.len() as u64;
+    let (stats, net) = run_after(Network::new(NetworkConfig::for_topo(topo)), &specs);
+    assert_eq!(stats.delivered_packets, n);
+    assert!(net.audit_credits().is_empty());
+    // Co-located endpoints (same router) share a Local port: a
+    // packet between them costs zero link hops.
+    let (same_router, _) = run_after(
+        Network::new(NetworkConfig::for_topo(topo)),
+        &[PacketSpec::new(NodeId(0), NodeId(3), 128 * 4, 0)],
+    );
+    assert_eq!(same_router.flit_hops, 0);
+    assert_eq!(same_router.delivered_flits, 4);
+}
+
+#[test]
+fn concentrated_injection_shares_the_local_port_fairly() {
+    // All 4 endpoints of router 0 inject simultaneously: one flit
+    // per router per cycle, so the NI round-robin must interleave
+    // them instead of letting endpoint 0 drain first.
+    let topo = Topo::CMesh(CMesh::new(2, 2, 4));
+    let specs: Vec<PacketSpec> = (0..4u16)
+        .map(|i| PacketSpec::new(NodeId(i), NodeId(12), 128 * 4, 0))
+        .collect();
+    let (stats, net) = run_after(Network::new(NetworkConfig::for_topo(topo)), &specs);
+    assert_eq!(stats.delivered_packets, 4);
+    let qmax = net.records.iter().map(|r| r.queueing_delay()).max().unwrap();
+    let qmin = net.records.iter().map(|r| r.queueing_delay()).min().unwrap();
+    assert!(qmin == 0, "someone injects on cycle one");
+    assert!(
+        qmax >= 3,
+        "sharing one Local port must queue the others: max {qmax}"
+    );
+}
+
+#[test]
+fn multipackage_delivers_across_the_stitch() {
+    // Two 4×4 packages: cross-package traffic must transit gateway
+    // rows; the escape tables are installed from construction (XY
+    // is not stitch-safe), and the per-VC audit stays clean.
+    let topo = Topo::MultiPackage(MultiPackage::new(2, 4, 4));
+    let mut net = Network::new(NetworkConfig::for_topo(topo));
+    let specs: Vec<PacketSpec> = (0..16u16)
+        .map(|i| PacketSpec::new(NodeId(i), NodeId(16 + ((i * 7) % 16)), 128 * 4, i as u64))
+        .collect();
+    net.schedule_packets(&specs);
+    while !net.drained() {
+        assert!(net.now() < 100_000, "multipackage failed to drain");
+        net.step();
+        let v = net.audit_credits();
+        assert!(v.is_empty(), "violation at {}: {:?}", net.now(), v[0]);
+    }
+    assert_eq!(net.stats().delivered_packets, 16);
+    assert!(net.stats().flit_hops >= 16 * 4, "cross-package paths are long");
+}
+
+#[test]
+fn multipackage_survives_a_gateway_cut_with_vcs() {
+    // Kill one of the two row-0↔row-0 stitch links mid-run on a
+    // 2-package network with 2 VCs: traffic re-routes over the
+    // surviving gateway row, nothing is unreachable.
+    let topo = Topo::MultiPackage(MultiPackage::new(2, 4, 4));
+    let mp = match topo {
+        Topo::MultiPackage(mp) => mp,
+        _ => unreachable!(),
+    };
+    // Row-0 gateway boundary: (pkg 0, x=3, y=0) ↔ (pkg 1, x=0, y=0).
+    let a = NodeId(mp.join(0, 3, 0) as u16);
+    let b = NodeId(mp.join(1, 0, 0) as u16);
+    let mut net = Network::new(NetworkConfig::for_topo(topo).with_vcs(2));
+    net.set_fault_model(FaultModel::new(3).with_link_down(a, b, 60));
+    let specs: Vec<PacketSpec> = (0..16u16)
+        .map(|i| PacketSpec::new(NodeId(i), NodeId(16 + i), 128 * 8, (i as u64) * 2))
+        .collect();
+    net.schedule_packets(&specs);
+    let stats = net
+        .try_run_to_completion(200_000)
+        .unwrap_or_else(|r| panic!("gateway cut wedged the network: {r}"));
+    assert_eq!(stats.links_down, 1);
+    assert_eq!(stats.packets_unreachable, 0);
+    assert_eq!(
+        stats.delivered_packets + stats.packets_dropped,
+        16,
+        "every packet delivered or typed-dropped"
+    );
+    assert!(net.audit_credits().is_empty());
+}
+
+#[test]
+fn bogus_codec_tags_rejected() {
+    use crate::packet::CodecTag;
+    use lexi_core::codec::CodecKind;
+    let tag = |symbols| CodecTag {
+        kind: CodecKind::Huffman,
+        symbols,
+        runtime_book: false,
+    };
+    let mut net = Network::new(cfg_4x4());
+    // More symbols than wire bits: impossible (≥ 1 bit/symbol).
+    let bogus = PacketSpec::new(NodeId(0), NodeId(3), 128, 0).tagged(tag(129));
+    assert!(net.try_schedule_packets(&[bogus]).is_err());
+    // Tag on a zero-size packet.
+    let empty = PacketSpec::new(NodeId(0), NodeId(3), 0, 0).tagged(tag(1));
+    assert!(net.try_schedule_packets(&[empty]).is_err());
+    // Nothing was scheduled; the network stays drained.
+    assert!(net.drained());
+    // A valid tag passes.
+    let ok = PacketSpec::new(NodeId(0), NodeId(3), 128, 0).tagged(tag(128));
+    assert!(net.try_schedule_packets(&[ok]).is_ok());
+}

@@ -50,6 +50,11 @@ pub struct Flit {
     pub dest: NodeId,
     /// Sequence inside the packet (0 = head).
     pub seq: u32,
+    /// Virtual channel the flit currently occupies (ISSUE 10): the
+    /// index of the per-VC input FIFO it sits in. VC 0 is the
+    /// deadlock-free up*/down* escape channel; VCs ≥ 1 route
+    /// adaptively. Single-VC networks keep every flit on VC 0.
+    pub vc: u8,
     /// Cycle at which this flit may next move (prevents multi-hop/cycle).
     pub ready_at: u64,
     /// Codec tag inherited from the packet spec (`None` = codec-blind
@@ -82,6 +87,12 @@ pub struct PacketSpec {
     pub inject_at: u64,
     /// Codec tag (`None` = raw codec-blind packet).
     pub codec: Option<CodecTag>,
+    /// Pin the injection virtual channel (ISSUE 10, clamped to the
+    /// network's `vcs − 1`). `None` picks the default policy: VC 0 on
+    /// single-VC networks, an adaptive VC (≥ 1) spread by packet id
+    /// otherwise. Tests and tools use the pin to place traffic on a
+    /// specific channel.
+    pub vc: Option<u8>,
 }
 
 impl PacketSpec {
@@ -93,6 +104,7 @@ impl PacketSpec {
             size_bits,
             inject_at,
             codec: None,
+            vc: None,
         }
     }
 
@@ -100,6 +112,14 @@ impl PacketSpec {
     pub fn tagged(self, tag: CodecTag) -> Self {
         PacketSpec {
             codec: Some(tag),
+            ..self
+        }
+    }
+
+    /// The same packet pinned to injection VC `vc`.
+    pub fn on_vc(self, vc: u8) -> Self {
+        PacketSpec {
+            vc: Some(vc),
             ..self
         }
     }

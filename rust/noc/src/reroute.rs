@@ -22,7 +22,7 @@
 //! when a link dies — never on the healthy fast path, which keeps pure
 //! XY untouched.
 
-use crate::topology::{Mesh, NodeId, Port, NUM_PORTS};
+use crate::topology::{NodeId, Port, Topo, Topology, NUM_PORTS};
 
 /// Routing phase of an in-flight flit under up*/down* rules.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -38,9 +38,17 @@ pub enum Phase {
 pub type LinkState = Vec<[bool; NUM_PORTS]>;
 
 /// Precomputed up*/down* next-hop tables over the surviving links.
+///
+/// Since ISSUE 10 the tables are computed over any [`Topo`]'s router
+/// graph (flat mesh, concentrated mesh, stitched multi-package) and
+/// indexed by *router* id. They serve two masters: the all-or-nothing
+/// reroute switch after a permanent link failure on single-VC
+/// networks (ISSUE 7 behaviour, unchanged), and the always-on escape
+/// channel VC 0 of a multi-VC router, which adaptive heads fall back
+/// to when their preferred lane is held.
 #[derive(Clone, Debug)]
 pub struct EscapeRoutes {
-    mesh: Mesh,
+    topo: Topo,
     n: usize,
     /// Connected-component id per node (over live links).
     comp: Vec<u32>,
@@ -53,15 +61,15 @@ pub struct EscapeRoutes {
 }
 
 impl EscapeRoutes {
-    /// Build tables for `mesh` with the given dead links.
-    pub fn compute(mesh: Mesh, down: &LinkState) -> Self {
-        let n = mesh.len();
+    /// Build tables for `topo`'s router graph with the given dead links.
+    pub fn compute(topo: Topo, down: &LinkState) -> Self {
+        let n = topo.routers();
         debug_assert_eq!(down.len(), n);
         let live = |u: usize, p: Port| -> Option<usize> {
             if down[u][p as usize] {
                 return None;
             }
-            mesh.neighbour(NodeId(u as u16), p).map(|v| v.0 as usize)
+            topo.neighbour_r(u, p)
         };
 
         // BFS levels + components, roots at the lowest unvisited id.
@@ -156,7 +164,7 @@ impl EscapeRoutes {
             }
         }
         EscapeRoutes {
-            mesh,
+            topo,
             n,
             comp,
             rank,
@@ -164,52 +172,73 @@ impl EscapeRoutes {
         }
     }
 
-    /// Are `a` and `b` in the same live component?
+    /// Are endpoints `a` and `b` on routers of the same live component?
     pub fn reachable(&self, a: NodeId, b: NodeId) -> bool {
-        self.comp[a.0 as usize] == self.comp[b.0 as usize]
+        self.comp[self.topo.router_of(a)] == self.comp[self.topo.router_of(b)]
     }
 
     /// Phase implied by the input port a flit occupies at `at`: NI
     /// injection is still up-phase; arrival over a down link commits to
     /// the down phase.
-    pub fn phase_of(&self, at: NodeId, inp: usize) -> Phase {
+    pub fn phase_of(&self, at: usize, inp: usize) -> Phase {
         if inp == Port::Local as usize {
             return Phase::Up;
         }
         let from = self
-            .mesh
-            .neighbour(at, Port::ALL[inp])
+            .topo
+            .neighbour_r(at, Port::ALL[inp])
             .expect("buffered flit arrived over a real link");
-        if self.rank[at.0 as usize] < self.rank[from.0 as usize] {
+        if self.rank[at] < self.rank[from] {
             Phase::Up // the hop here moved rootward
         } else {
             Phase::Down
         }
     }
 
-    /// Table next hop for a flit sitting in input `inp` of `at` bound
-    /// for `dest`; `None` when no legal continuation exists (severed
-    /// component or a down-phase flit stranded below its turn point —
-    /// the network truncates and retries such packets from the source).
-    pub fn next_hop(&self, at: NodeId, inp: usize, dest: NodeId) -> Option<Port> {
+    /// Table next hop for a flit sitting in input `inp` of router `at`
+    /// bound for router `dest`; `None` when no legal continuation
+    /// exists (severed component or a down-phase flit stranded below
+    /// its turn point — the network truncates and retries such packets
+    /// from the source).
+    pub fn next_hop(&self, at: usize, inp: usize, dest: usize) -> Option<Port> {
         let ph = self.phase_of(at, inp) as usize;
-        self.next[(ph * self.n + at.0 as usize) * self.n + dest.0 as usize]
+        self.next[(ph * self.n + at) * self.n + dest]
+    }
+
+    /// Hop count of the table path `src → dest` entered fresh (NI
+    /// injection, up phase); `None` when unreachable. This is the exact
+    /// distance a packet travels when *all* routing follows the tables
+    /// — the analytic side of `sim::xval` charges it for topologies
+    /// that route on escape tables from construction.
+    pub fn path_hops(&self, src: usize, dest: usize) -> Option<u32> {
+        let (mut at, mut inp, mut hops) = (src, Port::Local as usize, 0u32);
+        loop {
+            let p = self.next_hop(at, inp, dest)?;
+            if p == Port::Local {
+                return Some(hops);
+            }
+            at = self.topo.neighbour_r(at, p).expect("table hop is live");
+            inp = p.opposite() as usize;
+            hops += 1;
+            debug_assert!(hops as usize <= 4 * self.n, "table walk loop");
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::topology::{Mesh, MultiPackage};
 
-    fn no_down(mesh: Mesh) -> LinkState {
-        vec![[false; NUM_PORTS]; mesh.len()]
+    fn no_down<T: Topology>(t: &T) -> LinkState {
+        vec![[false; NUM_PORTS]; t.routers()]
     }
 
-    fn cut(down: &mut LinkState, mesh: Mesh, a: NodeId, b: NodeId) {
+    fn cut(down: &mut LinkState, topo: Topo, a: usize, b: usize) {
         for &p in &Port::ALL[1..] {
-            if mesh.neighbour(a, p) == Some(b) {
-                down[a.0 as usize][p as usize] = true;
-                down[b.0 as usize][p.opposite() as usize] = true;
+            if topo.neighbour_r(a, p) == Some(b) {
+                down[a][p as usize] = true;
+                down[b][p.opposite() as usize] = true;
                 return;
             }
         }
@@ -218,7 +247,7 @@ mod tests {
 
     /// Walk the tables from src to dest like the router would (phase
     /// from the arrival port), asserting legality; returns hop count.
-    fn walk(r: &EscapeRoutes, mesh: Mesh, down: &LinkState, src: NodeId, dest: NodeId) -> u32 {
+    fn walk(r: &EscapeRoutes, topo: Topo, down: &LinkState, src: usize, dest: usize) -> u32 {
         let (mut at, mut inp, mut hops) = (src, Port::Local as usize, 0u32);
         let mut gone_down = false;
         loop {
@@ -227,12 +256,12 @@ mod tests {
                 assert_eq!(at, dest);
                 return hops;
             }
-            assert!(!down[at.0 as usize][p as usize], "routed over a dead link");
-            let nxt = mesh.neighbour(at, p).unwrap();
+            assert!(!down[at][p as usize], "routed over a dead link");
+            let nxt = topo.neighbour_r(at, p).unwrap();
             // Phase discipline: once a hop increases rank (down), no
             // later hop may decrease it (up) — the deadlock-freedom
             // invariant.
-            if r.rank[nxt.0 as usize] > r.rank[at.0 as usize] {
+            if r.rank[nxt] > r.rank[at] {
                 gone_down = true;
             } else {
                 assert!(!gone_down, "down-then-up violates up*/down*");
@@ -240,35 +269,37 @@ mod tests {
             inp = p.opposite() as usize;
             at = nxt;
             hops += 1;
-            assert!(hops <= 4 * mesh.len() as u32, "routing loop");
+            assert!(hops as usize <= 4 * topo.routers(), "routing loop");
         }
     }
 
     #[test]
     fn healthy_mesh_routes_every_pair_monotonically() {
         let mesh = Mesh::new(4, 4);
-        let down = no_down(mesh);
-        let r = EscapeRoutes::compute(mesh, &down);
-        for a in 0..16u16 {
-            for b in 0..16u16 {
-                assert!(r.reachable(NodeId(a), NodeId(b)));
-                let h = walk(&r, mesh, &down, NodeId(a), NodeId(b));
-                assert!(h >= mesh.hops(NodeId(a), NodeId(b)));
+        let topo = Topo::Mesh(mesh);
+        let down = no_down(&topo);
+        let r = EscapeRoutes::compute(topo, &down);
+        for a in 0..16 {
+            for b in 0..16 {
+                assert!(r.reachable(NodeId(a as u16), NodeId(b as u16)));
+                let h = walk(&r, topo, &down, a, b);
+                assert!(h >= mesh.hops(NodeId(a as u16), NodeId(b as u16)));
+                assert_eq!(r.path_hops(a, b), Some(h));
             }
         }
     }
 
     #[test]
     fn cut_link_is_avoided_and_all_pairs_still_route() {
-        let mesh = Mesh::new(4, 4);
-        let mut down = no_down(mesh);
-        cut(&mut down, mesh, NodeId(5), NodeId(6));
-        cut(&mut down, mesh, NodeId(9), NodeId(10));
-        let r = EscapeRoutes::compute(mesh, &down);
-        for a in 0..16u16 {
-            for b in 0..16u16 {
-                assert!(r.reachable(NodeId(a), NodeId(b)));
-                walk(&r, mesh, &down, NodeId(a), NodeId(b));
+        let topo = Topo::Mesh(Mesh::new(4, 4));
+        let mut down = no_down(&topo);
+        cut(&mut down, topo, 5, 6);
+        cut(&mut down, topo, 9, 10);
+        let r = EscapeRoutes::compute(topo, &down);
+        for a in 0..16 {
+            for b in 0..16 {
+                assert!(r.reachable(NodeId(a as u16), NodeId(b as u16)));
+                walk(&r, topo, &down, a, b);
             }
         }
     }
@@ -276,20 +307,21 @@ mod tests {
     #[test]
     fn isolated_node_reports_unreachable() {
         // Corner node 0 of a 3x3 has exactly two links; cut both.
-        let mesh = Mesh::new(3, 3);
-        let mut down = no_down(mesh);
-        cut(&mut down, mesh, NodeId(0), NodeId(1));
-        cut(&mut down, mesh, NodeId(0), NodeId(3));
-        let r = EscapeRoutes::compute(mesh, &down);
-        for b in 1..9u16 {
-            assert!(!r.reachable(NodeId(0), NodeId(b)));
-            assert_eq!(r.next_hop(NodeId(0), Port::Local as usize, NodeId(b)), None);
+        let topo = Topo::Mesh(Mesh::new(3, 3));
+        let mut down = no_down(&topo);
+        cut(&mut down, topo, 0, 1);
+        cut(&mut down, topo, 0, 3);
+        let r = EscapeRoutes::compute(topo, &down);
+        for b in 1..9 {
+            assert!(!r.reachable(NodeId(0), NodeId(b as u16)));
+            assert_eq!(r.next_hop(0, Port::Local as usize, b), None);
+            assert_eq!(r.path_hops(0, b), None);
         }
         // The surviving 8-node component still fully routes.
-        for a in 1..9u16 {
-            for b in 1..9u16 {
-                assert!(r.reachable(NodeId(a), NodeId(b)));
-                walk(&r, mesh, &down, NodeId(a), NodeId(b));
+        for a in 1..9 {
+            for b in 1..9 {
+                assert!(r.reachable(NodeId(a as u16), NodeId(b as u16)));
+                walk(&r, topo, &down, a, b);
             }
         }
     }
@@ -300,17 +332,17 @@ mod tests {
         // legal continuation toward a dest that needs an up hop — the
         // caller must truncate-and-retry it. From the up phase the same
         // (node, dest) pair routes fine.
-        let mesh = Mesh::new(3, 3);
-        let r = EscapeRoutes::compute(mesh, &no_down(mesh));
+        let topo = Topo::Mesh(Mesh::new(3, 3));
+        let r = EscapeRoutes::compute(topo, &no_down(&topo));
         let mut stranded = 0;
-        for at in 0..9u16 {
+        for at in 0..9 {
             for inp in 1..NUM_PORTS {
-                if mesh.neighbour(NodeId(at), Port::ALL[inp]).is_none() {
+                if topo.neighbour_r(at, Port::ALL[inp]).is_none() {
                     continue;
                 }
-                for dest in 0..9u16 {
-                    if r.next_hop(NodeId(at), inp, NodeId(dest)).is_none() {
-                        assert_eq!(r.phase_of(NodeId(at), inp), Phase::Down);
+                for dest in 0..9 {
+                    if r.next_hop(at, inp, dest).is_none() {
+                        assert_eq!(r.phase_of(at, inp), Phase::Down);
                         stranded += 1;
                     }
                 }
@@ -321,13 +353,45 @@ mod tests {
 
     #[test]
     fn phase_from_arrival_port() {
-        let mesh = Mesh::new(3, 3);
-        let r = EscapeRoutes::compute(mesh, &no_down(mesh));
+        let topo = Topo::Mesh(Mesh::new(3, 3));
+        let r = EscapeRoutes::compute(topo, &no_down(&topo));
         // Node 4 (center): arriving from node 1 (its North port) moved
         // away from root 0 → Down; NI injection is Up.
-        assert_eq!(r.phase_of(NodeId(4), Port::Local as usize), Phase::Up);
-        assert_eq!(r.phase_of(NodeId(4), Port::North as usize), Phase::Down);
+        assert_eq!(r.phase_of(4, Port::Local as usize), Phase::Up);
+        assert_eq!(r.phase_of(4, Port::North as usize), Phase::Down);
         // Node 1 arriving from 4 (via its South port) moved rootward → Up.
-        assert_eq!(r.phase_of(NodeId(1), Port::South as usize), Phase::Up);
+        assert_eq!(r.phase_of(1, Port::South as usize), Phase::Up);
+    }
+
+    #[test]
+    fn multipackage_tables_route_across_the_stitch() {
+        // Escape tables over a 2-package 4x4 stitch: every router pair
+        // routes legally through the few gateway links, healthy and
+        // with one gateway severed.
+        let mp = MultiPackage::new(2, 4, 4);
+        let topo = Topo::MultiPackage(mp);
+        let down = no_down(&topo);
+        let r = EscapeRoutes::compute(topo, &down);
+        for a in 0..topo.routers() {
+            for b in 0..topo.routers() {
+                assert!(r.reachable(NodeId(a as u16), NodeId(b as u16)));
+                walk(&r, topo, &down, a, b);
+            }
+        }
+        // Kill the row-0 gateway: the row-2 gateway keeps both
+        // packages connected.
+        let mut cutd = no_down(&topo);
+        cut(&mut cutd, topo, mp.join(0, 3, 0), mp.join(1, 0, 0));
+        let r2 = EscapeRoutes::compute(topo, &cutd);
+        for a in 0..topo.routers() {
+            for b in 0..topo.routers() {
+                assert!(r2.reachable(NodeId(a as u16), NodeId(b as u16)));
+                walk(&r2, topo, &cutd, a, b);
+            }
+        }
+        // Cross-package table paths are at least as long as the walk
+        // to the nearest gateway.
+        let h = r.path_hops(mp.join(0, 1, 3), mp.join(1, 1, 3)).unwrap();
+        assert!(h >= 4, "must detour through a gateway row: {h}");
     }
 }

@@ -1,4 +1,11 @@
-//! A 5-port wormhole router with credit-based flow control.
+//! A 5-port wormhole router with credit-based flow control — the
+//! **legacy single-VC reference** (pre-ISSUE-10).
+//!
+//! The live network now steps [`crate::vc::VcRouter`] through the
+//! [`crate::input_control`] / [`crate::output_control`] split; this
+//! module is kept as the executable specification the `vcs = 1`
+//! stat-identity property test (`tests/vc1_equivalence.rs`) replays
+//! against, and as the simplest statement of the arbitration rules.
 //!
 //! Per output port, a round-robin arbiter picks among input ports whose
 //! head-of-line flit routes to it. A head flit locks the output to its
@@ -122,6 +129,7 @@ mod tests {
             src: NodeId(0),
             dest: NodeId(1),
             seq: 0,
+            vc: 0,
             ready_at: ready,
             codec: None,
         }

@@ -1,4 +1,16 @@
-//! 2D mesh topology and dimension-ordered routing.
+//! Topologies: the flat 2D mesh, a concentrated mesh, and stitched
+//! multi-package arrays — plus the [`Topology`] trait the router-level
+//! code is written against (ISSUE 10).
+//!
+//! The network distinguishes **routers** (switching elements holding
+//! input buffers and output credits) from **endpoint nodes** (NIs that
+//! inject and eject packets). On the flat mesh they coincide one-to-one;
+//! a concentrated mesh hangs `conc` endpoints off each router's shared
+//! Local port (bsg_wormhole_concentrator-style); a multi-package
+//! topology stitches `packages` identical meshes through a few
+//! boundary links on designated gateway rows (bsg_mesh_stitch-style) —
+//! the inter-chiplet links whose codec ports carry the traffic the
+//! paper targets.
 
 /// A node index in a 2D mesh (row-major).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -112,6 +124,376 @@ impl Mesh {
     }
 }
 
+/// Router-graph + endpoint contract every topology satisfies (ISSUE 10).
+///
+/// Contract:
+/// * routers are indexed `0..routers()`, endpoints `0..len()`;
+/// * `router_of` / `node_at` form a bijection between endpoints and
+///   `(router, slot < conc())` pairs;
+/// * `neighbour_r` is symmetric: `neighbour_r(a, p) == Some(b)` ⇔
+///   `neighbour_r(b, p.opposite()) == Some(a)` (links are bidirected);
+/// * `route_r` is deterministic, returns `Local` iff `at == dest`, and
+///   every step stays on a live `neighbour_r` edge. It is the *baseline*
+///   discipline only — deadlock freedom is the escape channel's job
+///   ([`crate::reroute`]), not the route function's, except on the flat
+///   mesh where XY is deadlock-free by itself.
+pub trait Topology {
+    /// Number of routers (switching elements).
+    fn routers(&self) -> usize;
+    /// Number of endpoint nodes (NIs).
+    fn len(&self) -> usize;
+    /// Endpoints per router (concentration factor).
+    fn conc(&self) -> u8 {
+        1
+    }
+    /// Router an endpoint hangs off.
+    fn router_of(&self, n: NodeId) -> usize;
+    /// Endpoint in `slot` (< `conc()`) of a router.
+    fn node_at(&self, router: usize, slot: u8) -> NodeId;
+    /// Neighbour router through `port`, if the link exists.
+    fn neighbour_r(&self, at: usize, port: Port) -> Option<usize>;
+    /// Deterministic baseline next hop between routers (`Local` when
+    /// `at == dest`).
+    fn route_r(&self, at: usize, dest: usize) -> Port;
+    /// Total *directed* links (for utilization denominators).
+    fn link_count(&self) -> u64;
+    /// Hop distance between two endpoints' routers along `route_r`.
+    fn hops(&self, a: NodeId, b: NodeId) -> u32 {
+        let (mut at, dest) = (self.router_of(a), self.router_of(b));
+        let mut hops = 0u32;
+        while at != dest {
+            let p = self.route_r(at, dest);
+            at = self.neighbour_r(at, p).expect("route_r stays on live links");
+            hops += 1;
+            debug_assert!(hops as usize <= 4 * self.routers(), "routing loop");
+        }
+        hops
+    }
+}
+
+impl Topology for Mesh {
+    fn routers(&self) -> usize {
+        self.len()
+    }
+    fn len(&self) -> usize {
+        Mesh::len(self)
+    }
+    fn router_of(&self, n: NodeId) -> usize {
+        n.0 as usize
+    }
+    fn node_at(&self, router: usize, slot: u8) -> NodeId {
+        debug_assert_eq!(slot, 0);
+        NodeId(router as u16)
+    }
+    fn neighbour_r(&self, at: usize, port: Port) -> Option<usize> {
+        self.neighbour(NodeId(at as u16), port).map(|n| n.0 as usize)
+    }
+    fn route_r(&self, at: usize, dest: usize) -> Port {
+        self.route_xy(NodeId(at as u16), NodeId(dest as u16))
+    }
+    fn link_count(&self) -> u64 {
+        let (c, r) = (self.cols as u64, self.rows as u64);
+        2 * (r * (c - 1) + c * (r - 1))
+    }
+    fn hops(&self, a: NodeId, b: NodeId) -> u32 {
+        Mesh::hops(self, a, b)
+    }
+}
+
+/// A concentrated mesh: a `cols × rows` router grid with `conc`
+/// endpoints per router sharing its Local port
+/// (bsg_wormhole_concentrator-style). Endpoint `n` is slot `n % conc`
+/// of router `n / conc`; injection round-robins among a router's NIs
+/// (one flit per router-cycle through the shared port).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CMesh {
+    pub cols: u16,
+    pub rows: u16,
+    pub conc: u8,
+}
+
+impl CMesh {
+    /// Construct; panics on degenerate sizes.
+    pub fn new(cols: u16, rows: u16, conc: u8) -> Self {
+        assert!(cols >= 1 && rows >= 1, "cmesh must be at least 1x1");
+        assert!(conc >= 1, "concentration factor must be >= 1");
+        CMesh { cols, rows, conc }
+    }
+
+    fn grid(&self) -> Mesh {
+        Mesh {
+            cols: self.cols,
+            rows: self.rows,
+        }
+    }
+}
+
+impl Topology for CMesh {
+    fn routers(&self) -> usize {
+        self.cols as usize * self.rows as usize
+    }
+    fn len(&self) -> usize {
+        self.routers() * self.conc as usize
+    }
+    fn conc(&self) -> u8 {
+        self.conc
+    }
+    fn router_of(&self, n: NodeId) -> usize {
+        n.0 as usize / self.conc as usize
+    }
+    fn node_at(&self, router: usize, slot: u8) -> NodeId {
+        debug_assert!(slot < self.conc);
+        NodeId((router * self.conc as usize + slot as usize) as u16)
+    }
+    fn neighbour_r(&self, at: usize, port: Port) -> Option<usize> {
+        self.grid().neighbour_r(at, port)
+    }
+    fn route_r(&self, at: usize, dest: usize) -> Port {
+        self.grid().route_r(at, dest)
+    }
+    fn link_count(&self) -> u64 {
+        Topology::link_count(&self.grid())
+    }
+}
+
+/// `packages` identical `cols × rows` meshes laid out west-to-east and
+/// stitched through inter-package links on *gateway rows* only
+/// (bsg_mesh_stitch-style): the east edge of package `k` connects to
+/// the west edge of package `k+1` on rows 0 and `rows/2` — a few wide
+/// boundary links, not a full edge, which is exactly where the paper's
+/// inter-chiplet codec ports sit.
+///
+/// Baseline routing ([`Topology::route_r`]) goes XY within a package
+/// and gateway-directed across packages; it is *not* deadlock-free on
+/// its own (crossing traffic can cycle through the shared gateways), so
+/// the network permanently installs up*/down* escape tables for this
+/// topology — VC 0 (or all traffic at `vcs = 1`) follows them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MultiPackage {
+    pub packages: u8,
+    pub cols: u16,
+    pub rows: u16,
+}
+
+impl MultiPackage {
+    /// Construct; panics on degenerate sizes.
+    pub fn new(packages: u8, cols: u16, rows: u16) -> Self {
+        assert!(packages >= 1, "need at least one package");
+        assert!(cols >= 1 && rows >= 1, "package mesh must be at least 1x1");
+        MultiPackage {
+            packages,
+            cols,
+            rows,
+        }
+    }
+
+    /// Routers per package.
+    pub fn package_size(&self) -> usize {
+        self.cols as usize * self.rows as usize
+    }
+
+    /// Is `row` a gateway row (carries an inter-package link)?
+    pub fn is_gateway(&self, row: u16) -> bool {
+        row == 0 || row == self.rows / 2
+    }
+
+    /// Number of gateway rows (1 when the two coincide on a 1-row mesh).
+    pub fn gateway_rows(&self) -> u64 {
+        if self.rows / 2 == 0 {
+            1
+        } else {
+            2
+        }
+    }
+
+    /// (package, x, y) of a router index.
+    pub fn split(&self, r: usize) -> (usize, u16, u16) {
+        let ps = self.package_size();
+        let local = (r % ps) as u16;
+        (r / ps, local % self.cols, local / self.cols)
+    }
+
+    /// Router index at (package, x, y).
+    pub fn join(&self, pkg: usize, x: u16, y: u16) -> usize {
+        debug_assert!(x < self.cols && y < self.rows);
+        pkg * self.package_size() + (y * self.cols + x) as usize
+    }
+
+    fn grid(&self) -> Mesh {
+        Mesh {
+            cols: self.cols,
+            rows: self.rows,
+        }
+    }
+}
+
+impl Topology for MultiPackage {
+    fn routers(&self) -> usize {
+        self.packages as usize * self.package_size()
+    }
+    fn len(&self) -> usize {
+        self.routers()
+    }
+    fn router_of(&self, n: NodeId) -> usize {
+        n.0 as usize
+    }
+    fn node_at(&self, router: usize, slot: u8) -> NodeId {
+        debug_assert_eq!(slot, 0);
+        NodeId(router as u16)
+    }
+    fn neighbour_r(&self, at: usize, port: Port) -> Option<usize> {
+        let (pkg, x, y) = self.split(at);
+        // Inter-package boundary links exist only on gateway rows.
+        match port {
+            Port::East if x + 1 == self.cols => (self.is_gateway(y)
+                && pkg + 1 < self.packages as usize)
+                .then(|| self.join(pkg + 1, 0, y)),
+            Port::West if x == 0 => {
+                (self.is_gateway(y) && pkg > 0).then(|| self.join(pkg - 1, self.cols - 1, y))
+            }
+            _ => self
+                .grid()
+                .neighbour_r((y * self.cols + x) as usize, port)
+                .map(|local| pkg * self.package_size() + local),
+        }
+    }
+    fn route_r(&self, at: usize, dest: usize) -> Port {
+        let (apkg, ax, ay) = self.split(at);
+        let (dpkg, dx, dy) = self.split(dest);
+        if apkg == dpkg {
+            return self
+                .grid()
+                .route_xy(self.grid().node(ax, ay), self.grid().node(dx, dy));
+        }
+        // Cross-package: reach the nearest gateway row, ride it to the
+        // boundary column, cross, repeat.
+        if !self.is_gateway(ay) {
+            let g = if ay.abs_diff(0) <= ay.abs_diff(self.rows / 2) {
+                0
+            } else {
+                self.rows / 2
+            };
+            return if g < ay { Port::North } else { Port::South };
+        }
+        if dpkg > apkg {
+            Port::East
+        } else {
+            Port::West
+        }
+    }
+    fn link_count(&self) -> u64 {
+        let per_pkg = Topology::link_count(&self.grid());
+        per_pkg * self.packages as u64 + 2 * self.gateway_rows() * (self.packages as u64 - 1)
+    }
+}
+
+/// The topology a [`crate::network::Network`] is built over: a closed
+/// enum (rather than a trait object) so [`crate::network::NetworkConfig`]
+/// stays `Copy` and the router hot path stays monomorphic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topo {
+    Mesh(Mesh),
+    CMesh(CMesh),
+    MultiPackage(MultiPackage),
+}
+
+impl Topo {
+    /// The paper's 6×6 flat mesh.
+    pub fn simba_6x6() -> Self {
+        Topo::Mesh(Mesh::simba_6x6())
+    }
+
+    /// CLI/report name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Topo::Mesh(_) => "mesh",
+            Topo::CMesh(_) => "cmesh",
+            Topo::MultiPackage(_) => "multipackage",
+        }
+    }
+
+    /// The flat mesh, when this is one (legacy callers).
+    pub fn as_mesh(&self) -> Option<Mesh> {
+        match self {
+            Topo::Mesh(m) => Some(*m),
+            _ => None,
+        }
+    }
+
+    /// Does the baseline `route_r` discipline need the escape channel
+    /// to be deadlock-free? XY on a flat/concentrated mesh is safe by
+    /// itself; gateway-directed multi-package routing is not.
+    pub fn needs_escape(&self) -> bool {
+        matches!(self, Topo::MultiPackage(_))
+    }
+}
+
+impl Topology for Topo {
+    fn routers(&self) -> usize {
+        match self {
+            Topo::Mesh(t) => t.routers(),
+            Topo::CMesh(t) => t.routers(),
+            Topo::MultiPackage(t) => t.routers(),
+        }
+    }
+    fn len(&self) -> usize {
+        match self {
+            Topo::Mesh(t) => Topology::len(t),
+            Topo::CMesh(t) => Topology::len(t),
+            Topo::MultiPackage(t) => Topology::len(t),
+        }
+    }
+    fn conc(&self) -> u8 {
+        match self {
+            Topo::Mesh(t) => t.conc(),
+            Topo::CMesh(t) => t.conc(),
+            Topo::MultiPackage(t) => t.conc(),
+        }
+    }
+    fn router_of(&self, n: NodeId) -> usize {
+        match self {
+            Topo::Mesh(t) => t.router_of(n),
+            Topo::CMesh(t) => t.router_of(n),
+            Topo::MultiPackage(t) => t.router_of(n),
+        }
+    }
+    fn node_at(&self, router: usize, slot: u8) -> NodeId {
+        match self {
+            Topo::Mesh(t) => t.node_at(router, slot),
+            Topo::CMesh(t) => t.node_at(router, slot),
+            Topo::MultiPackage(t) => t.node_at(router, slot),
+        }
+    }
+    fn neighbour_r(&self, at: usize, port: Port) -> Option<usize> {
+        match self {
+            Topo::Mesh(t) => t.neighbour_r(at, port),
+            Topo::CMesh(t) => t.neighbour_r(at, port),
+            Topo::MultiPackage(t) => t.neighbour_r(at, port),
+        }
+    }
+    fn route_r(&self, at: usize, dest: usize) -> Port {
+        match self {
+            Topo::Mesh(t) => t.route_r(at, dest),
+            Topo::CMesh(t) => t.route_r(at, dest),
+            Topo::MultiPackage(t) => t.route_r(at, dest),
+        }
+    }
+    fn link_count(&self) -> u64 {
+        match self {
+            Topo::Mesh(t) => Topology::link_count(t),
+            Topo::CMesh(t) => Topology::link_count(t),
+            Topo::MultiPackage(t) => Topology::link_count(t),
+        }
+    }
+    fn hops(&self, a: NodeId, b: NodeId) -> u32 {
+        match self {
+            Topo::Mesh(t) => Topology::hops(t, a, b),
+            Topo::CMesh(t) => t.hops(a, b),
+            Topo::MultiPackage(t) => t.hops(a, b),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -162,5 +544,129 @@ mod tests {
         assert_eq!(m.route_xy(m.node(0, 0), m.node(2, 2)), Port::East);
         // From (2,0) to (2,2): X aligned → South.
         assert_eq!(m.route_xy(m.node(2, 0), m.node(2, 2)), Port::South);
+    }
+
+    /// Shared contract checks: neighbour symmetry, endpoint↔(router,
+    /// slot) bijection, and `route_r` reaching every destination.
+    fn check_contract<T: Topology>(t: &T) {
+        for r in 0..t.routers() {
+            for &p in &Port::ALL[1..] {
+                if let Some(nb) = t.neighbour_r(r, p) {
+                    assert_eq!(
+                        t.neighbour_r(nb, p.opposite()),
+                        Some(r),
+                        "asymmetric link {r} {p:?}"
+                    );
+                }
+            }
+            for slot in 0..t.conc() {
+                let n = t.node_at(r, slot);
+                assert_eq!(t.router_of(n), r);
+            }
+        }
+        for n in 0..t.len() as u16 {
+            let r = t.router_of(NodeId(n));
+            assert!(r < t.routers());
+        }
+        for a in 0..t.routers() {
+            for b in 0..t.routers() {
+                let (mut at, mut steps) = (a, 0u32);
+                while at != b {
+                    let p = t.route_r(at, b);
+                    assert_ne!(p, Port::Local, "route_r stalled before dest");
+                    at = t.neighbour_r(at, p).expect("route over a live link");
+                    steps += 1;
+                    assert!(steps as usize <= 4 * t.routers(), "routing loop");
+                }
+                assert_eq!(t.route_r(b, b), Port::Local);
+            }
+        }
+        // Directed links counted by enumeration must match link_count().
+        let mut links = 0u64;
+        for r in 0..t.routers() {
+            for &p in &Port::ALL[1..] {
+                if t.neighbour_r(r, p).is_some() {
+                    links += 1;
+                }
+            }
+        }
+        assert_eq!(links, t.link_count());
+    }
+
+    #[test]
+    fn mesh_satisfies_topology_contract() {
+        check_contract(&Mesh::new(4, 3));
+        check_contract(&Mesh::new(1, 5));
+    }
+
+    #[test]
+    fn cmesh_concentrates_endpoints() {
+        let c = CMesh::new(3, 3, 4);
+        check_contract(&c);
+        assert_eq!(Topology::len(&c), 36);
+        assert_eq!(c.routers(), 9);
+        // 4 endpoints per router, slots round-trip.
+        assert_eq!(c.router_of(NodeId(0)), 0);
+        assert_eq!(c.router_of(NodeId(3)), 0);
+        assert_eq!(c.router_of(NodeId(4)), 1);
+        assert_eq!(c.node_at(2, 1), NodeId(9));
+        // Router-grid links only: same count as the bare 3x3 mesh.
+        assert_eq!(Topology::link_count(&c), Topology::link_count(&Mesh::new(3, 3)));
+        // Endpoints on the same router are 0 hops apart.
+        assert_eq!(c.hops(NodeId(0), NodeId(3)), 0);
+    }
+
+    #[test]
+    fn multipackage_stitches_on_gateway_rows_only() {
+        let mp = MultiPackage::new(2, 4, 4);
+        check_contract(&mp);
+        assert_eq!(mp.routers(), 32);
+        // Gateway rows of a 4-row package: 0 and 2.
+        assert!(mp.is_gateway(0) && mp.is_gateway(2));
+        assert!(!mp.is_gateway(1) && !mp.is_gateway(3));
+        // East edge of package 0, gateway row → west edge of package 1.
+        let gw = mp.join(0, 3, 2);
+        assert_eq!(mp.neighbour_r(gw, Port::East), Some(mp.join(1, 0, 2)));
+        // Non-gateway row: no boundary link.
+        assert_eq!(mp.neighbour_r(mp.join(0, 3, 1), Port::East), None);
+        // Link count: two 4x4 meshes + 2 gateway rows × 2 directions.
+        assert_eq!(
+            Topology::link_count(&mp),
+            2 * Topology::link_count(&Mesh::new(4, 4)) + 4
+        );
+    }
+
+    #[test]
+    fn multipackage_route_crosses_via_gateways() {
+        let mp = MultiPackage::new(3, 4, 4);
+        // From a non-gateway row the route first seeks the nearest
+        // gateway row, then rides East through each boundary.
+        let src = mp.join(0, 1, 3); // row 3 → nearest gateway is row 2
+        assert_eq!(mp.route_r(src, mp.join(2, 1, 1)), Port::North);
+        let on_gw = mp.join(0, 3, 0);
+        assert_eq!(mp.route_r(on_gw, mp.join(1, 0, 0)), Port::East);
+        // Westbound symmetric.
+        assert_eq!(mp.route_r(mp.join(2, 0, 0), mp.join(0, 0, 0)), Port::West);
+        // Hop count via the walk matches the route discipline end to
+        // end: 1 North to the gateway row, 2 East + cross, 3 East +
+        // cross, then 2 hops inside the last package.
+        assert_eq!(mp.hops(NodeId(src as u16), NodeId(mp.join(2, 1, 1) as u16)), 10);
+    }
+
+    #[test]
+    fn topo_enum_dispatches() {
+        let t = Topo::simba_6x6();
+        assert_eq!(t.name(), "mesh");
+        assert_eq!(Topology::len(&t), 36);
+        assert!(!t.needs_escape());
+        assert_eq!(t.as_mesh(), Some(Mesh::simba_6x6()));
+        let mp = Topo::MultiPackage(MultiPackage::new(2, 6, 6));
+        assert_eq!(mp.name(), "multipackage");
+        assert!(mp.needs_escape());
+        assert_eq!(mp.as_mesh(), None);
+        assert_eq!(Topology::len(&mp), 72);
+        let cm = Topo::CMesh(CMesh::new(3, 3, 2));
+        assert_eq!(cm.name(), "cmesh");
+        assert_eq!(cm.conc(), 2);
     }
 }

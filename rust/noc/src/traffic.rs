@@ -7,7 +7,7 @@
 //! [`tag_packets`] to tag synthetic patterns wholesale.
 
 use crate::packet::{CodecTag, PacketSpec};
-use crate::topology::{Mesh, NodeId};
+use crate::topology::{Mesh, NodeId, Topo, Topology};
 use lexi_core::codec::CodecKind;
 use lexi_core::prng::Rng;
 
@@ -112,15 +112,17 @@ pub fn tag_packets(
 }
 
 /// Uniform-random traffic: `count` packets of `size_bits`, injected at a
-/// given rate (packets per cycle across the whole mesh).
+/// given rate (packets per cycle across the whole topology). Endpoints
+/// are drawn over [`Topology::len`], so concentrated and multi-package
+/// topologies (ISSUE 10) get uniform load per *endpoint*.
 pub fn uniform_random(
-    mesh: Mesh,
+    topo: Topo,
     count: usize,
     size_bits: u64,
     packets_per_cycle: f64,
     rng: &mut Rng,
 ) -> Vec<PacketSpec> {
-    let n = mesh.len() as u64;
+    let n = topo.len() as u64;
     let mut out = Vec::with_capacity(count);
     let mut t = 0.0f64;
     for _ in 0..count {
@@ -147,9 +149,9 @@ pub fn transpose(mesh: Mesh, size_bits: u64) -> Vec<PacketSpec> {
         .collect()
 }
 
-/// Hotspot: all nodes send to one sink.
-pub fn hotspot(mesh: Mesh, sink: NodeId, size_bits: u64) -> Vec<PacketSpec> {
-    (0..mesh.len() as u16)
+/// Hotspot: all endpoints send to one sink.
+pub fn hotspot(topo: Topo, sink: NodeId, size_bits: u64) -> Vec<PacketSpec> {
+    (0..topo.len() as u16)
         .filter(|&i| NodeId(i) != sink)
         .map(|i| PacketSpec::new(NodeId(i), sink, size_bits, 0))
         .collect()
@@ -257,12 +259,7 @@ mod tests {
     fn transpose_delivers_everywhere() {
         let mesh = Mesh::new(4, 4);
         let specs = transpose(mesh, 128 * 4);
-        let mut net = Network::new(NetworkConfig {
-            mesh,
-            flit_bits: 128,
-            link_gbps: 100.0,
-            buf_depth: 4,
-        });
+        let mut net = Network::new(NetworkConfig::for_topo(Topo::Mesh(mesh)));
         let n = specs.len() as u64;
         net.schedule_packets(&specs);
         let stats = net.run_to_completion(100_000);
@@ -272,15 +269,10 @@ mod tests {
     #[test]
     fn prop_random_traffic_all_delivered() {
         check("uniform random delivered", 10, |g| {
-            let mesh = Mesh::new(4, 4);
+            let topo = Topo::Mesh(Mesh::new(4, 4));
             let count = g.usize(1..120);
-            let specs = uniform_random(mesh, count, 128 * 2, 0.5, g.rng());
-            let mut net = Network::new(NetworkConfig {
-                mesh,
-                flit_bits: 128,
-                link_gbps: 100.0,
-                buf_depth: 4,
-            });
+            let specs = uniform_random(topo, count, 128 * 2, 0.5, g.rng());
+            let mut net = Network::new(NetworkConfig::for_topo(topo));
             net.schedule_packets(&specs);
             let stats = net.run_to_completion(1_000_000);
             assert_eq!(stats.delivered_packets, count as u64);

@@ -1,0 +1,172 @@
+//! Per-virtual-channel router state: input FIFOs, output lanes, and
+//! credit partitioning (ISSUE 10).
+//!
+//! A [`VcRouter`] generalizes the single-VC [`crate::router::Router`]
+//! (kept as the legacy reference): each input port holds `vcs` FIFOs,
+//! and each output port holds `vcs` *lanes* — per-VC wormhole locks and
+//! per-VC credit counters toward the downstream input — plus one
+//! flattened round-robin pointer over `(input port × input VC)` shared
+//! by the whole output. The link-level buffer budget is unchanged: the
+//! `buf_depth` flit slots of each input port are **partitioned** across
+//! VCs by [`credit_share`], so per directed link
+//! Σ over VCs of (lane credits + downstream FIFO occupancy) ==
+//! `buf_depth` — the per-VC refinement of the ISSUE 7 audit invariant.
+//!
+//! With `vcs = 1` every structure collapses to the legacy router
+//! field-for-field: one FIFO per input, one lane per output holding all
+//! `buf_depth` credits, and a round-robin pointer over `NUM_PORTS`
+//! flat indices — which is how the network pins single-VC runs
+//! stat-identical to the pre-refactor implementation.
+
+use crate::packet::Flit;
+use crate::topology::NUM_PORTS;
+use std::collections::VecDeque;
+
+/// Hard upper bound on VCs per link: lets the switch allocator keep its
+/// per-cycle request vector on the stack (no hot-path allocation).
+pub const MAX_VCS: u8 = 8;
+
+/// Credits VC `v` starts with: `buf_depth` split as evenly as the
+/// integer division allows, remainder to the lower VCs — so the escape
+/// channel (VC 0) never gets the short end, and `vcs = 1` keeps the
+/// whole depth on its only lane.
+pub fn credit_share(buf_depth: u32, vcs: u8, v: u8) -> u32 {
+    debug_assert!(v < vcs);
+    buf_depth / vcs as u32 + u32::from((v as u32) < buf_depth % vcs as u32)
+}
+
+/// One output lane: the wormhole lock + credit counter of a single VC
+/// on a directed link.
+#[derive(Clone, Debug)]
+pub struct VcLane {
+    /// `(input port, input VC)` currently holding this lane's wormhole
+    /// lock.
+    pub locked_to: Option<(usize, u8)>,
+    /// Packet whose wormhole holds the lock (identifies the severed
+    /// worm when a permanent link failure cuts this output).
+    pub locked_packet: Option<u64>,
+    /// Credits = free slots of this VC's FIFO at the downstream input.
+    pub credits: u32,
+}
+
+/// Per-output state: `vcs` lanes plus the shared switch arbiter state.
+#[derive(Clone, Debug)]
+pub struct VcOutput {
+    pub lanes: Vec<VcLane>,
+    /// Round-robin pointer over flattened `(input port × input VC)`
+    /// indices (`flat = inp * vcs + in_vc`); advanced only when a tail
+    /// releases the output, exactly like the legacy per-port pointer.
+    pub rr: usize,
+    /// Flits forwarded through this output (utilization stat).
+    pub forwarded: u64,
+}
+
+/// One input port: `vcs` FIFOs sharing the port's `buf_depth` slots.
+#[derive(Clone, Debug)]
+pub struct VcInput {
+    pub fifos: Vec<VecDeque<Flit>>,
+}
+
+impl VcInput {
+    /// Flits buffered across all VCs of this port.
+    pub fn buffered(&self) -> usize {
+        self.fifos.iter().map(|f| f.len()).sum()
+    }
+
+    /// No flit buffered on any VC?
+    pub fn is_empty(&self) -> bool {
+        self.fifos.iter().all(|f| f.is_empty())
+    }
+}
+
+/// A VC-aware 5-port wormhole router: the state the
+/// [`crate::input_control`] / [`crate::output_control`] split operates
+/// on.
+#[derive(Clone, Debug)]
+pub struct VcRouter {
+    pub inputs: [VcInput; NUM_PORTS],
+    pub outputs: [VcOutput; NUM_PORTS],
+}
+
+impl VcRouter {
+    /// New router with `vcs` virtual channels; each output lane starts
+    /// with its [`credit_share`] of the downstream `buf_depth`.
+    pub fn new(buf_depth: u32, vcs: u8) -> Self {
+        assert!(vcs >= 1, "need at least one virtual channel");
+        assert!(vcs <= MAX_VCS, "at most {MAX_VCS} virtual channels");
+        VcRouter {
+            inputs: std::array::from_fn(|_| VcInput {
+                fifos: vec![VecDeque::new(); vcs as usize],
+            }),
+            outputs: std::array::from_fn(|_| VcOutput {
+                lanes: (0..vcs)
+                    .map(|v| VcLane {
+                        locked_to: None,
+                        locked_packet: None,
+                        credits: credit_share(buf_depth, vcs, v),
+                    })
+                    .collect(),
+                rr: 0,
+                forwarded: 0,
+            }),
+        }
+    }
+
+    /// Number of VCs this router was built with.
+    pub fn vcs(&self) -> u8 {
+        self.inputs[0].fifos.len() as u8
+    }
+
+    /// All input FIFOs empty (router may skip arbitration)?
+    pub fn is_idle(&self) -> bool {
+        self.inputs.iter().all(|b| b.is_empty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn credit_share_partitions_exactly() {
+        for buf_depth in 1..=8u32 {
+            for vcs in 1..=4u8 {
+                let total: u32 = (0..vcs).map(|v| credit_share(buf_depth, vcs, v)).sum();
+                assert_eq!(total, buf_depth, "depth {buf_depth} vcs {vcs}");
+                // Remainder goes to the lower VCs: shares are
+                // non-increasing in v and differ by at most one.
+                for v in 1..vcs {
+                    let (hi, lo) = (
+                        credit_share(buf_depth, vcs, v - 1),
+                        credit_share(buf_depth, vcs, v),
+                    );
+                    assert!(hi >= lo && hi - lo <= 1);
+                }
+            }
+        }
+        // vcs = 1 keeps the whole depth on the only lane.
+        assert_eq!(credit_share(4, 1, 0), 4);
+        // The paper point: depth 4 over 2 VCs = 2 + 2; over 4 VCs = 1 each.
+        assert_eq!(credit_share(4, 2, 0), 2);
+        assert_eq!(credit_share(4, 2, 1), 2);
+        assert_eq!(credit_share(4, 4, 3), 1);
+        // Odd split favours the escape channel.
+        assert_eq!(credit_share(5, 2, 0), 3);
+        assert_eq!(credit_share(5, 2, 1), 2);
+    }
+
+    #[test]
+    fn vc1_router_collapses_to_legacy_shape() {
+        let r = VcRouter::new(4, 1);
+        assert_eq!(r.vcs(), 1);
+        for inp in &r.inputs {
+            assert_eq!(inp.fifos.len(), 1);
+        }
+        for out in &r.outputs {
+            assert_eq!(out.lanes.len(), 1);
+            assert_eq!(out.lanes[0].credits, 4);
+            assert_eq!(out.rr, 0);
+        }
+        assert!(r.is_idle());
+    }
+}

@@ -1,0 +1,319 @@
+//! Stall/deadlock watchdog & per-VC observability (ISSUE 7/10): the
+//! diagnosis layer of [`Network`] — per-VC usage snapshots
+//! ([`VcUsage`]), the per-VC credit-conservation audit, starvation
+//! detection, and the typed [`StallReport`] assembled when a run fails
+//! to drain. Split out of the `network.rs` monolith as a *child*
+//! module of [`crate::network`] (via `#[path]`), so it reads the
+//! simulator's internals without widening their visibility — none of
+//! this is on the hot path except the O(vcs) starvation probe and the
+//! O(1) progress counters the step loop maintains.
+
+use super::Network;
+use crate::topology::{NodeId, Port, Topology};
+use crate::vc::credit_share;
+use std::fmt;
+
+/// Per-VC activity snapshot (ISSUE 10): the CLI's per-VC report lines
+/// and the starvation watchdog read these.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct VcUsage {
+    pub vc: u8,
+    /// Flits ejected on this VC.
+    pub delivered_flits: u64,
+    /// Link traversals charged to this VC's credit lanes.
+    pub flit_hops: u64,
+    /// Flits currently buffered network-wide on this VC.
+    pub buffered: u64,
+    /// Cycle of this VC's last movement (inject, hop, or eject).
+    pub last_progress: u64,
+}
+
+/// Default zero-progress window (in cycles) before the watchdog fires:
+/// comfortably beyond the longest legal quiet spell (the 256-cycle
+/// retry-backoff cap, codec-port startups, deep congestion waves) while
+/// still terminating a wedged run promptly.
+pub const DEFAULT_WATCHDOG_CYCLES: u64 = 10_000;
+
+/// One broken per-VC credit invariant found by
+/// [`Network::audit_credits`]: the upstream lane's credits plus the
+/// downstream FIFO's buffered flits no longer sum to that VC's
+/// [`credit_share`] of `buf_depth`. (Summed over a link's VCs the
+/// shares give back the ISSUE 7 whole-link invariant.)
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CreditViolation {
+    /// Upstream router of the directed link (endpoint id of the
+    /// router's slot-0 node on concentrated topologies).
+    pub node: NodeId,
+    /// Output port (= link direction) at the upstream router.
+    pub out: Port,
+    /// Virtual channel whose lane broke the invariant (ISSUE 10).
+    pub vc: u8,
+    /// Credits the upstream lane currently holds.
+    pub credits: u32,
+    /// Flits buffered in the downstream VC FIFO.
+    pub buffered: u32,
+    /// The [`credit_share`] the two must sum to.
+    pub expected: u32,
+}
+
+/// A packet that was still live when the watchdog fired.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StuckPacket {
+    pub id: u64,
+    pub src: NodeId,
+    pub dest: NodeId,
+    /// Router holding the packet's foremost buffered flit (the source
+    /// when nothing is buffered yet — still queued at the NI).
+    pub node: NodeId,
+    /// Input port holding that flit (`Local` when NI-queued).
+    pub port: Port,
+    /// Approximate cycle of the flit's last movement (`ready_at` − 1).
+    pub since: u64,
+}
+
+/// The watchdog's suspected root cause, cheapest-to-check first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StallCause {
+    /// The credit audit found a lane where credits + buffered flits no
+    /// longer sum to its share of `buf_depth` — flow control itself is
+    /// broken.
+    CreditLeak,
+    /// An ingress/egress codec port's busy horizon is still ahead of
+    /// sim time after a whole stall window: an effectively zero-rate
+    /// port is refusing every grant.
+    ZeroRatePort,
+    /// A permanent link failure is in effect, or the fault model drops
+    /// every traversal (`drop_prob == 1` — a dead link in transient
+    /// clothing).
+    DeadLink,
+    /// No port or credit anomaly found: suspect a routing/lock cycle.
+    RoutingCycle,
+    /// `max_cycles` elapsed while the network was still making
+    /// progress — an undersized horizon, not a wedge.
+    SlowProgress,
+    /// ISSUE 10: the named VC holds buffered flits that have not moved
+    /// for a whole watchdog window while *other* VCs kept progressing —
+    /// per-class starvation the global progress counter cannot see.
+    VcStarvation(u8),
+}
+
+/// Typed verdict from the stall/deadlock watchdog (ISSUE 7): why the
+/// run terminated without draining, who was stuck where, and whether
+/// credit conservation still held. Returned by
+/// [`Network::try_run_to_completion`] instead of looping forever.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StallReport {
+    /// Cycle at which the watchdog fired.
+    pub cycle: u64,
+    /// Zero-progress cycles leading up to it (0 for a
+    /// [`StallCause::VcStarvation`] verdict — the network as a whole
+    /// was still moving).
+    pub stalled_for: u64,
+    pub cause: StallCause,
+    /// Live packets and where each one's foremost flit is held.
+    pub stuck_packets: Vec<StuckPacket>,
+    /// Per-VC credit-conservation violations (empty = credits intact).
+    pub credit_audit: Vec<CreditViolation>,
+}
+
+impl fmt::Display for StallReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "stall at cycle {}: no progress for {} cycles (suspected {:?}); \
+             {} stuck packet(s), {} credit violation(s)",
+            self.cycle,
+            self.stalled_for,
+            self.cause,
+            self.stuck_packets.len(),
+            self.credit_audit.len()
+        )?;
+        for p in self.stuck_packets.iter().take(8) {
+            writeln!(
+                f,
+                "  packet {} {}->{} held at node {} port {:?} since cycle {}",
+                p.id, p.src.0, p.dest.0, p.node.0, p.port, p.since
+            )?;
+        }
+        if self.stuck_packets.len() > 8 {
+            writeln!(f, "  ... {} more", self.stuck_packets.len() - 8)?;
+        }
+        for v in self.credit_audit.iter().take(4) {
+            writeln!(
+                f,
+                "  credit leak: node {} {:?} vc {}: credits {} + buffered {} != {}",
+                v.node.0, v.out, v.vc, v.credits, v.buffered, v.expected
+            )?;
+        }
+        Ok(())
+    }
+}
+
+impl Network {
+    /// Per-VC activity snapshot (ISSUE 10): one entry per VC.
+    pub fn vc_usage(&self) -> Vec<VcUsage> {
+        (0..self.cfg.vcs)
+            .map(|v| VcUsage {
+                vc: v,
+                delivered_flits: self.vc_delivered[v as usize],
+                flit_hops: self.vc_hops[v as usize],
+                buffered: self.vc_occ[v as usize],
+                last_progress: self.vc_progress[v as usize],
+            })
+            .collect()
+    }
+
+    /// A VC with buffered flits none of which moved for ≥ `window`
+    /// cycles (O(vcs) — counters maintained incrementally on the hot
+    /// path).
+    pub(super) fn starving_vc(&self, window: u64) -> Option<u8> {
+        (0..self.cfg.vcs).find(|&v| {
+            self.vc_occ[v as usize] > 0
+                && self.now - self.vc_progress[v as usize] >= window
+        })
+    }
+
+    /// A scheduled arrival or retry backoff strictly in the future is
+    /// guaranteed forward motion — the watchdog must not fire over a
+    /// quiet spell it can prove will end. Both horizons are bounded
+    /// (backoff caps at 256 cycles; the schedule is finite), so this
+    /// can never postpone a genuine-wedge verdict forever.
+    pub(super) fn future_work_pending(&self) -> bool {
+        self.retry_queue.iter().any(|e| e.due > self.now)
+            || self
+                .schedule
+                .last()
+                .map_or(false, |s| s.inject_at > self.now)
+    }
+
+    /// Verify per-VC credit conservation (ISSUE 10): for every directed
+    /// link and every VC, the upstream lane's credits plus the
+    /// downstream VC FIFO's occupancy must equal that VC's
+    /// [`credit_share`] of `buf_depth`. Forwarding and credit return
+    /// are same-cycle, and wormhole truncation returns credits to the
+    /// exact lane of every discarded flit, so the invariant holds on
+    /// *every* cycle — including across dead links. Σ over a link's VCs
+    /// recovers the ISSUE 7 whole-link invariant.
+    pub fn audit_credits(&self) -> Vec<CreditViolation> {
+        let mut violations = Vec::new();
+        for node in 0..self.routers.len() {
+            for &out in &Port::ALL[1..] {
+                let Some(nb) = self.cfg.topo.neighbour_r(node, out) else {
+                    continue;
+                };
+                for vc in 0..self.cfg.vcs {
+                    let credits =
+                        self.routers[node].outputs[out as usize].lanes[vc as usize].credits;
+                    let buffered = self.routers[nb].inputs[out.opposite() as usize].fifos
+                        [vc as usize]
+                        .len() as u32;
+                    let expected = credit_share(self.cfg.buf_depth, self.cfg.vcs, vc);
+                    if credits + buffered != expected {
+                        violations.push(CreditViolation {
+                            node: NodeId(node as u16),
+                            out,
+                            vc,
+                            credits,
+                            buffered,
+                            expected,
+                        });
+                    }
+                }
+            }
+        }
+        violations
+    }
+
+    /// Fire-time diagnosis: pick the cause heuristically
+    /// (cheapest-to-check first), then build the full report.
+    pub(super) fn diagnose(&self, stalled_for: u64, timed_out: bool) -> StallReport {
+        let credit_audit = self.audit_credits();
+        let window = self.watchdog_cycles.unwrap_or(DEFAULT_WATCHDOG_CYCLES);
+        let cause = if timed_out && stalled_for < window {
+            StallCause::SlowProgress
+        } else if !credit_audit.is_empty() {
+            StallCause::CreditLeak
+        } else if self.zero_rate_port_suspected() {
+            StallCause::ZeroRatePort
+        } else if self.stats.links_down > 0
+            || self.fault.as_ref().map_or(false, |f| f.drop_prob() >= 1.0)
+        {
+            StallCause::DeadLink
+        } else {
+            StallCause::RoutingCycle
+        };
+        self.build_report_with_audit(stalled_for, cause, credit_audit)
+    }
+
+    /// Build a [`StallReport`] with a predetermined cause (the
+    /// starvation watchdog knows its verdict already).
+    pub(super) fn build_report(&self, stalled_for: u64, cause: StallCause) -> StallReport {
+        let audit = self.audit_credits();
+        self.build_report_with_audit(stalled_for, cause, audit)
+    }
+
+    /// Locate each live packet's foremost buffered flit and assemble
+    /// the report — all deliberately off the hot path.
+    fn build_report_with_audit(
+        &self,
+        stalled_for: u64,
+        cause: StallCause,
+        credit_audit: Vec<CreditViolation>,
+    ) -> StallReport {
+        let mut loc: std::collections::HashMap<u64, (NodeId, Port, u32, u64)> =
+            std::collections::HashMap::new();
+        for (node, r) in self.routers.iter().enumerate() {
+            for (inp, buf) in r.inputs.iter().enumerate() {
+                for fifo in &buf.fifos {
+                    for f in fifo {
+                        let here = (NodeId(node as u16), Port::ALL[inp], f.seq, f.ready_at);
+                        loc.entry(f.packet_id)
+                            .and_modify(|e| {
+                                if f.seq < e.2 {
+                                    *e = here;
+                                }
+                            })
+                            .or_insert(here);
+                    }
+                }
+            }
+        }
+        let mut stuck_packets: Vec<StuckPacket> = self
+            .meta
+            .iter()
+            .map(|(&id, m)| {
+                let (node, port, _, ready) = loc.get(&id).copied().unwrap_or((
+                    m.spec.src,
+                    Port::Local,
+                    0,
+                    m.head_inject.unwrap_or(m.spec.inject_at) + 1,
+                ));
+                StuckPacket {
+                    id,
+                    src: m.spec.src,
+                    dest: m.spec.dest,
+                    node,
+                    port,
+                    since: ready.saturating_sub(1),
+                }
+            })
+            .collect();
+        stuck_packets.sort_by_key(|s| s.id);
+        StallReport {
+            cycle: self.now,
+            stalled_for,
+            cause,
+            stuck_packets,
+            credit_audit,
+        }
+    }
+
+    /// A codec port whose busy horizon is still ahead of `now` after an
+    /// entire zero-progress window never accepted during it: it is
+    /// refusing every grant at an effectively zero rate.
+    fn zero_rate_port_suspected(&self) -> bool {
+        let horizon = self.now as f64;
+        self.egress.iter().any(|p| p.busy_until > horizon)
+            || self.ingress.iter().any(|p| p.busy_until > horizon)
+    }
+}

@@ -1,0 +1,684 @@
+//! Behaviour pins for the codec ports, fault handling, watchdog, and
+//! permanent-link-failure recovery (ISSUEs 5–7, 9), carried over from
+//! the pre-ISSUE-10 in-module suite **with their original expectations
+//! intact**: the VC-aware router refactor must reproduce every one of
+//! these observable outcomes at `vcs = 1`.
+
+use lexi_core::codec::CodecKind;
+use lexi_core::error::Error;
+use lexi_noc::fault::{retry_backoff, RETRY_BUDGET};
+use lexi_noc::{
+    CodecTag, EgressCodecConfig, FaultModel, IngressCodecConfig, Mesh, Network, NetworkConfig,
+    NodeId, PacketSpec, RetryConfig, SimStats, StallCause, Topo,
+};
+
+fn cfg_4x4() -> NetworkConfig {
+    NetworkConfig::for_topo(Topo::Mesh(Mesh::new(4, 4)))
+}
+
+fn huff_tag(symbols: u64, runtime_book: bool) -> CodecTag {
+    CodecTag {
+        kind: CodecKind::Huffman,
+        symbols,
+        runtime_book,
+    }
+}
+
+/// Schedule then run (the old in-module `run_to_completion_after`).
+fn run_after(net: &mut Network, specs: &[PacketSpec]) -> SimStats {
+    net.schedule_packets(specs);
+    net.run_to_completion(1_000_000)
+}
+
+/// Uniform all-to-all load, 16 flits per packet (240 packets).
+fn uniform_16flit_specs() -> Vec<PacketSpec> {
+    let mut specs = Vec::new();
+    for i in 0..16u16 {
+        for j in 0..16u16 {
+            if i != j {
+                specs.push(PacketSpec::new(NodeId(i), NodeId(j), 128 * 16, (i as u64) * 2));
+            }
+        }
+    }
+    specs
+}
+
+#[test]
+fn wormhole_packets_arrive_contiguously() {
+    // With wormhole switching + XY routing, a destination receives each
+    // packet's flits in order (seq strictly increasing per packet).
+    let mut net = Network::new(cfg_4x4());
+    let specs: Vec<PacketSpec> = (0..8u16)
+        .map(|i| PacketSpec::new(NodeId(i), NodeId(15), 128 * 8, 0))
+        .collect();
+    net.schedule_packets(&specs);
+    net.run_to_completion(10_000);
+    assert_eq!(net.records.len(), 8);
+}
+
+#[test]
+fn throughput_bounded_by_bisection() {
+    // Uniform random cannot exceed ~1 flit/cycle/link utilization.
+    let mut net = Network::new(cfg_4x4());
+    let mut specs = Vec::new();
+    for k in 0..400u64 {
+        specs.push(PacketSpec::new(
+            NodeId((k * 7 % 16) as u16),
+            NodeId((k * 11 % 16) as u16),
+            128 * 4,
+            k / 8,
+        ));
+    }
+    let specs: Vec<_> = specs.into_iter().filter(|s| s.src != s.dest).collect();
+    let links = net.link_count();
+    net.schedule_packets(&specs);
+    let stats = net.run_to_completion(1_000_000);
+    assert!(stats.link_utilization(links) <= 1.0);
+}
+
+// ----------------------------------------------------------------------
+// ISSUE 5: egress codec ports
+// ----------------------------------------------------------------------
+
+#[test]
+fn line_rate_egress_matches_codec_blind_ejection() {
+    // Paper point (16 lanes): tagged stepping must deliver in the
+    // same cycle count as the codec-blind network (offline book ⇒
+    // no startup, decoder hidden behind the wire).
+    let spec = PacketSpec::new(NodeId(0), NodeId(15), 128 * 64, 0);
+    let blind = {
+        let mut net = Network::new(cfg_4x4());
+        net.schedule_packets(&[spec]);
+        net.run_to_completion(10_000)
+    };
+    let tagged = {
+        let mut net = Network::with_egress(cfg_4x4(), EgressCodecConfig::paper_default());
+        net.schedule_packets(&[spec.tagged(huff_tag(64 * 8, false))]);
+        net.run_to_completion(10_000)
+    };
+    assert_eq!(blind.cycles, tagged.cycles);
+    assert_eq!(tagged.decode_stall_cycles, 0);
+    assert_eq!(tagged.delivered_symbols, 64 * 8);
+    assert_eq!(tagged.completion_cycle, blind.completion_cycle);
+}
+
+#[test]
+fn starved_egress_stalls_the_link_and_backpressures() {
+    // One decoder lane on a symbol-heavy packet: ejection throttles,
+    // stall cycles accrue, and completion stretches to ~the decode
+    // makespan instead of the wire time.
+    let symbols = 64 * 16u64; // 16 symbols per flit
+    let spec =
+        PacketSpec::new(NodeId(0), NodeId(15), 128 * 64, 0).tagged(huff_tag(symbols, false));
+    let ecfg = EgressCodecConfig::nominal(1, 1.0); // 1.16 cyc/sym at 1 lane
+    let cycle_ns = cfg_4x4().cycle_ns();
+    let mut net = Network::with_egress(cfg_4x4(), ecfg);
+    net.schedule_packets(&[spec]);
+    let stats = net.run_to_completion(100_000);
+    assert_eq!(stats.delivered_packets, 1);
+    assert!(stats.decode_stall_cycles > 0, "no backpressure observed");
+    let rec = net.records[0];
+    assert_eq!(rec.decode_stall_cycles, stats.decode_stall_cycles);
+    // Decode-bound completion ≈ symbols × ns/sym ÷ cycle_ns.
+    let decode_cycles = symbols as f64 * ecfg.ns_per_symbol(CodecKind::Huffman) / cycle_ns;
+    let done = stats.completion_cycle as f64;
+    assert!(
+        done >= decode_cycles && done <= decode_cycles * 1.15 + 16.0,
+        "completion {done} vs decode bound {decode_cycles}"
+    );
+}
+
+#[test]
+fn runtime_book_startup_charged_on_head_flits() {
+    // Identical packets, offline vs runtime book: the runtime one
+    // completes later by ~the startup and stalls while the codebook
+    // pipeline fills.
+    let base = PacketSpec::new(NodeId(0), NodeId(15), 128 * 64, 0);
+    let run = |runtime: bool| {
+        let mut net = Network::with_egress(cfg_4x4(), EgressCodecConfig::paper_default());
+        net.schedule_packets(&[base.tagged(huff_tag(64 * 8, runtime))]);
+        net.run_to_completion(100_000)
+    };
+    let offline = run(false);
+    let runtime = run(true);
+    let cycle_ns = cfg_4x4().cycle_ns();
+    let startup_cycles =
+        (EgressCodecConfig::paper_default().startup_ns / cycle_ns).ceil() as u64;
+    let delta = runtime.completion_cycle - offline.completion_cycle;
+    assert!(
+        delta >= startup_cycles - 1 && delta <= startup_cycles + 2,
+        "startup delta {delta} vs expected {startup_cycles}"
+    );
+    assert!(runtime.decode_stall_cycles > 0);
+    assert_eq!(offline.decode_stall_cycles, 0);
+}
+
+#[test]
+fn raw_tagged_packets_never_stall() {
+    let spec = PacketSpec::new(NodeId(1), NodeId(14), 128 * 32, 0).tagged(CodecTag {
+        kind: CodecKind::Raw,
+        symbols: 32 * 16,
+        runtime_book: false,
+    });
+    let mut net = Network::with_egress(cfg_4x4(), EgressCodecConfig::nominal(1, 1.0));
+    let stats = run_after(&mut net, &[spec]);
+    assert_eq!(stats.decode_stall_cycles, 0);
+    assert_eq!(stats.delivered_symbols, 32 * 16);
+}
+
+// ----------------------------------------------------------------------
+// ISSUE 6: link faults + NACK retransmission
+// ----------------------------------------------------------------------
+
+#[test]
+fn inert_fault_model_is_stat_identical_to_none() {
+    // A fault model attached at all-zero rates must not perturb the
+    // simulation in any observable way — this is the zero-BER pin
+    // that keeps `sim::xval` and the perf row honest.
+    let specs = uniform_16flit_specs();
+    let clean = {
+        let mut net = Network::new(cfg_4x4());
+        run_after(&mut net, &specs)
+    };
+    let inert = {
+        let mut net = Network::with_faults(cfg_4x4(), FaultModel::new(3));
+        run_after(&mut net, &specs)
+    };
+    assert_eq!(clean, inert);
+    assert_eq!(inert.flits_corrupted, 0);
+    assert_eq!(inert.packet_retries, 0);
+}
+
+#[test]
+fn seeded_fault_runs_replay_identically() {
+    let run = || {
+        let mut net =
+            Network::with_faults(cfg_4x4(), FaultModel::new(99).with_ber(1e-4).with_dup(0.01));
+        run_after(&mut net, &uniform_16flit_specs())
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn ber_run_delivers_every_packet_exactly_once_with_backoff_in_latency() {
+    // ISSUE 6 satellite: a BER-injected run must deliver all symbols
+    // exactly once (corrupted attempts are NACKed and retransmitted,
+    // never recorded), and each retried packet's latency must carry
+    // at least its retransmission backoffs.
+    let specs = uniform_16flit_specs();
+    let n = specs.len() as u64;
+    let clean = {
+        let mut net = Network::new(cfg_4x4());
+        run_after(&mut net, &specs)
+    };
+    let mut net = Network::with_faults(cfg_4x4(), FaultModel::new(11).with_ber(1e-5));
+    let stats = run_after(&mut net, &specs);
+    // At this seed/BER the budget is never exhausted: every packet
+    // is delivered, each exactly once.
+    assert_eq!(stats.delivered_packets + stats.packets_dropped, n);
+    assert_eq!(net.records.len() as u64, stats.delivered_packets);
+    assert!(stats.flits_corrupted > 0, "seeded BER run injected nothing");
+    assert!(stats.packet_retries > 0, "no retransmissions observed");
+    assert_eq!(
+        stats.link_faults.iter().sum::<u64>(),
+        stats.flits_corrupted + stats.flits_dropped + stats.flits_duplicated
+    );
+    // Retried packets pay backoff + repeat trip in *latency* (their
+    // records keep the original head-injection cycle).
+    let mut saw_retry = false;
+    for r in net.records.iter().filter(|r| r.retries > 0) {
+        saw_retry = true;
+        let backoffs: u64 = (1..=r.retries).map(retry_backoff).sum();
+        assert!(
+            r.latency() >= backoffs,
+            "retried packet latency {} below its backoff sum {backoffs}",
+            r.latency()
+        );
+    }
+    assert!(saw_retry || stats.packets_dropped > 0);
+    // Faults can only make the run slower in aggregate.
+    assert!(stats.sum_latency >= clean.sum_latency);
+}
+
+#[test]
+fn lossy_links_retry_at_head_and_still_deliver() {
+    // Flit drops are link-level ARQ: the flit retries from the FIFO
+    // head, so delivery is lossless and in-order — just slower.
+    let spec = PacketSpec::new(NodeId(0), NodeId(15), 128 * 8, 0);
+    let clean = {
+        let mut net = Network::new(cfg_4x4());
+        run_after(&mut net, &[spec])
+    };
+    let mut net = Network::with_faults(cfg_4x4(), FaultModel::new(5).with_drop(0.3));
+    let stats = run_after(&mut net, &[spec]);
+    assert_eq!(stats.delivered_packets, 1);
+    assert!(stats.flits_dropped > 0, "seeded drop run dropped nothing");
+    assert_eq!(stats.packets_dropped, 0);
+    assert!(stats.sum_latency >= clean.sum_latency);
+}
+
+#[test]
+fn retry_budget_exhaustion_reports_drop_without_hanging() {
+    // BER = 1.0 corrupts every traversal: the packet is NACKed on
+    // all RETRY_BUDGET retransmissions and then reported dropped —
+    // run_to_completion drains instead of spinning forever.
+    let mut net = Network::with_faults(cfg_4x4(), FaultModel::new(1).with_ber(1.0));
+    net.schedule_packets(&[PacketSpec::new(NodeId(0), NodeId(3), 128 * 4, 0)]);
+    let stats = net.run_to_completion(10_000);
+    assert!(net.drained());
+    assert_eq!(stats.delivered_packets, 0);
+    assert_eq!(stats.packets_dropped, 1);
+    assert_eq!(stats.packet_retries, u64::from(RETRY_BUDGET));
+    assert!(net.records.is_empty());
+    // The exponential backoffs are cycle-accurate sim time.
+    let backoffs: u64 = (1..=RETRY_BUDGET).map(retry_backoff).sum();
+    assert!(
+        stats.cycles >= backoffs,
+        "cycles {} below backoff floor {backoffs}",
+        stats.cycles
+    );
+}
+
+#[test]
+fn retry_config_override_moves_the_drop_point_and_backoff_clock() {
+    // ISSUE 9 satellite: the budget/backoff are knobs now. A budget
+    // of 1 under BER=1.0 drops after a single retransmission; a
+    // larger base/cap stretches the deterministic backoff clock.
+    let run = |retry: RetryConfig| {
+        let mut net =
+            Network::with_faults(cfg_4x4(), FaultModel::new(1).with_ber(1.0).with_retry(retry));
+        assert_eq!(net.retry_config(), retry);
+        net.schedule_packets(&[PacketSpec::new(NodeId(0), NodeId(3), 128 * 4, 0)]);
+        net.run_to_completion(10_000)
+    };
+    let tight = run(RetryConfig {
+        budget: 1,
+        ..RetryConfig::paper_default()
+    });
+    assert_eq!(tight.packets_dropped, 1);
+    assert_eq!(tight.packet_retries, 1);
+    let slow = run(RetryConfig {
+        backoff_base: 64,
+        backoff_cap: 4096,
+        ..RetryConfig::paper_default()
+    });
+    assert_eq!(slow.packet_retries, u64::from(RETRY_BUDGET));
+    let floor: u64 = (1..=RETRY_BUDGET)
+        .map(|a| (64u64 << (a - 1).min(32)).min(4096))
+        .sum();
+    assert!(
+        slow.cycles >= floor,
+        "cycles {} below stretched backoff floor {floor}",
+        slow.cycles
+    );
+    // And the default path is bit-identical to the pre-knob network.
+    let default_cfg = run(RetryConfig::paper_default());
+    let mut legacy = Network::with_faults(cfg_4x4(), FaultModel::new(1).with_ber(1.0));
+    legacy.schedule_packets(&[PacketSpec::new(NodeId(0), NodeId(3), 128 * 4, 0)]);
+    assert_eq!(default_cfg, legacy.run_to_completion(10_000));
+}
+
+#[test]
+fn duplicated_flits_cost_occupancy_but_deliver_once() {
+    let specs = uniform_16flit_specs();
+    let n = specs.len() as u64;
+    let mut net = Network::with_faults(cfg_4x4(), FaultModel::new(21).with_dup(0.05));
+    let stats = run_after(&mut net, &specs);
+    assert_eq!(stats.delivered_packets, n);
+    assert!(stats.flits_duplicated > 0, "seeded dup run duplicated nothing");
+    // Duplicates never create packets or symbols.
+    assert_eq!(net.records.len() as u64, n);
+    assert_eq!(stats.packets_dropped, 0);
+}
+
+#[test]
+fn faulty_egress_network_keeps_symbol_accounting_exact() {
+    // Corrupted attempts charge speculative decode work but never
+    // count delivered symbols; once the retry lands, symbols are
+    // counted exactly once.
+    let symbols = 64 * 8u64;
+    let spec =
+        PacketSpec::new(NodeId(0), NodeId(15), 128 * 64, 0).tagged(huff_tag(symbols, false));
+    let mut net = Network::with_egress(cfg_4x4(), EgressCodecConfig::paper_default());
+    net.set_fault_model(FaultModel::new(17).with_ber(2e-4));
+    let stats = run_after(&mut net, &[spec]);
+    assert_eq!(stats.delivered_packets + stats.packets_dropped, 1);
+    if stats.delivered_packets == 1 {
+        assert_eq!(stats.delivered_symbols, symbols);
+    } else {
+        assert_eq!(stats.delivered_symbols, 0);
+    }
+}
+
+// ----------------------------------------------------------------------
+// ISSUE 7: ingress codec ports
+// ----------------------------------------------------------------------
+
+#[test]
+fn ingress_line_rate_matches_codec_blind_injection() {
+    // Paper point (10 encode lanes): at ≤ ~12 symbols per flit the
+    // encoder stays strictly behind the wire, so paced injection is
+    // cycle-identical to the codec-blind network.
+    let spec = PacketSpec::new(NodeId(0), NodeId(15), 128 * 64, 0);
+    let blind = {
+        let mut net = Network::new(cfg_4x4());
+        run_after(&mut net, &[spec])
+    };
+    let paced = {
+        let mut net = Network::with_ingress(cfg_4x4(), IngressCodecConfig::paper_default());
+        run_after(&mut net, &[spec.tagged(huff_tag(64 * 8, false))])
+    };
+    assert_eq!(blind.cycles, paced.cycles);
+    assert_eq!(blind.completion_cycle, paced.completion_cycle);
+    assert_eq!(paced.encode_stall_cycles, 0);
+    assert_eq!(paced.injections_refused, 0);
+}
+
+#[test]
+fn starved_ingress_throttles_injection_and_counts_stalls() {
+    // One encode lane on a symbol-heavy packet: injection paces to
+    // the encoder rate, stall cycles accrue at the NI, and
+    // completion stretches to ~the encode makespan.
+    let symbols = 64 * 16u64; // 16 symbols per flit
+    let spec =
+        PacketSpec::new(NodeId(0), NodeId(15), 128 * 64, 0).tagged(huff_tag(symbols, false));
+    let icfg = IngressCodecConfig::nominal(1, 1.0); // 1 ns/symbol
+    let cycle_ns = cfg_4x4().cycle_ns();
+    let mut net = Network::with_ingress(cfg_4x4(), icfg);
+    let stats = run_after(&mut net, &[spec]);
+    assert_eq!(stats.delivered_packets, 1);
+    assert!(stats.encode_stall_cycles > 0, "no encode backpressure observed");
+    let rec = net.records[0];
+    assert_eq!(rec.encode_stall_cycles, stats.encode_stall_cycles);
+    // Encode-bound completion ≈ symbols × ns/sym ÷ cycle_ns (the
+    // tail leaves the encoder a flit-cost early, hence the slack).
+    let encode_cycles = symbols as f64 * icfg.ns_per_symbol(CodecKind::Huffman) / cycle_ns;
+    let done = stats.completion_cycle as f64;
+    assert!(
+        done >= encode_cycles - 16.0 && done <= encode_cycles * 1.15 + 16.0,
+        "completion {done} vs encode bound {encode_cycles}"
+    );
+}
+
+#[test]
+fn ingress_startup_charged_once_on_runtime_head() {
+    // Identical packets, offline vs runtime codebook: the runtime
+    // one completes later by ~the compressor startup, charged once
+    // on the head flit; followers stall at the NI while it drains.
+    let base = PacketSpec::new(NodeId(0), NodeId(15), 128 * 64, 0);
+    let run = |runtime: bool| {
+        let mut net = Network::with_ingress(cfg_4x4(), IngressCodecConfig::paper_default());
+        run_after(&mut net, &[base.tagged(huff_tag(64 * 8, runtime))])
+    };
+    let offline = run(false);
+    let runtime = run(true);
+    let cycle_ns = cfg_4x4().cycle_ns();
+    let startup_cycles =
+        (IngressCodecConfig::paper_default().startup_ns / cycle_ns).ceil() as u64;
+    let delta = runtime.completion_cycle - offline.completion_cycle;
+    assert!(
+        delta >= startup_cycles - 1 && delta <= startup_cycles + 2,
+        "startup delta {delta} vs expected {startup_cycles}"
+    );
+    assert!(runtime.encode_stall_cycles > 0);
+    assert_eq!(offline.encode_stall_cycles, 0);
+}
+
+#[test]
+fn bounded_ni_admission_defers_and_counts() {
+    // More same-source arrivals than the NI bound: the excess is
+    // deferred cycle by cycle (refusals counted), yet every packet
+    // is eventually delivered — bounded memory, no loss.
+    let icfg = IngressCodecConfig::nominal(1, 1.0);
+    assert_eq!(icfg.max_queue, lexi_noc::ingress::DEFAULT_MAX_QUEUE);
+    let specs: Vec<PacketSpec> = (0..12)
+        .map(|_| {
+            PacketSpec::new(NodeId(0), NodeId(15), 128 * 8, 0).tagged(huff_tag(8 * 16, false))
+        })
+        .collect();
+    let mut net = Network::with_ingress(cfg_4x4(), icfg);
+    let stats = run_after(&mut net, &specs);
+    assert_eq!(stats.delivered_packets, 12);
+    assert!(stats.injections_refused > 0, "bound never engaged");
+}
+
+#[test]
+fn try_inject_backpressures_with_typed_refusal() {
+    // Closed-loop generator: admission beyond the NI bound is a
+    // typed IngressSaturated refusal, and room reopens as the
+    // encoder drains — backpressure reaches the caller, not an
+    // unbounded queue.
+    let mut icfg = IngressCodecConfig::nominal(1, 1.0);
+    icfg.max_queue = 2;
+    let mut net = Network::with_ingress(cfg_4x4(), icfg);
+    let spec = PacketSpec::new(NodeId(0), NodeId(15), 128 * 8, 0).tagged(huff_tag(8 * 16, false));
+    assert!(net.try_inject(spec).is_ok());
+    assert!(net.try_inject(spec).is_ok());
+    match net.try_inject(spec) {
+        Err(Error::IngressSaturated { node: 0, depth: 2 }) => {}
+        other => panic!("expected typed saturation, got {other:?}"),
+    }
+    assert_eq!(net.stats().injections_refused, 1);
+    // Drain enough for one packet to clear the NI, then retry.
+    for _ in 0..1500 {
+        net.step();
+        if net.try_inject(spec).is_ok() {
+            break;
+        }
+    }
+    let stats = net.run_to_completion(100_000);
+    assert_eq!(stats.delivered_packets, 3);
+}
+
+// ----------------------------------------------------------------------
+// ISSUE 7: stall/deadlock watchdog
+// ----------------------------------------------------------------------
+
+#[test]
+fn zero_rate_egress_terminates_with_stall_report() {
+    // Regression: a decoder that never drains used to spin
+    // run_to_completion to the horizon. The watchdog must terminate
+    // promptly with a typed report naming the stuck packet and the
+    // zero-rate port as the suspected cause.
+    let mut ecfg = EgressCodecConfig::nominal(16, 1.0);
+    ecfg.set_rate(CodecKind::Huffman, 1e12);
+    let mut net = Network::with_egress(cfg_4x4(), ecfg);
+    net.set_watchdog(200);
+    net.schedule_packets(&[PacketSpec::new(NodeId(0), NodeId(3), 128 * 8, 0)
+        .tagged(huff_tag(64, false))]);
+    let report = net
+        .try_run_to_completion(1_000_000)
+        .expect_err("a wedged run must not drain");
+    assert_eq!(report.cause, StallCause::ZeroRatePort);
+    assert_eq!(report.stuck_packets.len(), 1);
+    assert_eq!(report.stuck_packets[0].dest, NodeId(3));
+    assert!(report.credit_audit.is_empty(), "credits must still conserve");
+    assert!(report.stalled_for >= 200);
+    assert!(net.now() < 10_000, "watchdog fired late: {}", net.now());
+    // The report renders human-readable.
+    let text = format!("{report}");
+    assert!(text.contains("ZeroRatePort"), "{text}");
+}
+
+#[test]
+fn drop_every_flit_terminates_with_dead_link_verdict() {
+    // drop_prob = 1.0 is a dead link in transient clothing: no flit
+    // ever traverses, no NACK ever fires (nothing reaches egress),
+    // and pre-watchdog the step loop span forever.
+    let mut net = Network::with_faults(cfg_4x4(), FaultModel::new(4).with_drop(1.0));
+    net.set_watchdog(300);
+    net.schedule_packets(&[PacketSpec::new(NodeId(0), NodeId(3), 128 * 4, 0)]);
+    let report = net
+        .try_run_to_completion(1_000_000)
+        .expect_err("a dead link must trip the watchdog");
+    assert_eq!(report.cause, StallCause::DeadLink);
+    assert!(!report.stuck_packets.is_empty());
+    assert!(report.credit_audit.is_empty());
+}
+
+#[test]
+fn watchdog_never_fires_on_healthy_sparse_traffic() {
+    // Arrival gaps far beyond the watchdog window: future-due
+    // schedule entries are provable progress, so a healthy mesh
+    // must complete — quiet spells are not stalls.
+    let mut net = Network::new(cfg_4x4());
+    net.set_watchdog(64);
+    let specs: Vec<PacketSpec> = (0..40u64)
+        .map(|k| {
+            PacketSpec::new(
+                NodeId((k * 3 % 16) as u16),
+                NodeId((k * 5 % 16) as u16),
+                128 * 4,
+                k * 200,
+            )
+        })
+        .filter(|s| s.src != s.dest)
+        .collect();
+    let n = specs.len() as u64;
+    net.schedule_packets(&specs);
+    let stats = net
+        .try_run_to_completion(100_000)
+        .expect("healthy mesh must never trip the watchdog");
+    assert_eq!(stats.delivered_packets, n);
+}
+
+#[test]
+fn credit_conservation_soak_under_faults_and_link_downs() {
+    // Property soak (ISSUE 7 satellite): ≥ 10k cycles of seeded
+    // random traffic × transient faults × two mid-run permanent
+    // link failures — the per-link credit invariant must hold on
+    // *every* cycle, and packet accounting must stay exact.
+    let mut net = Network::new(cfg_4x4());
+    net.set_fault_model(
+        FaultModel::new(77)
+            .with_ber(1e-4)
+            .with_drop(0.02)
+            .with_dup(0.01)
+            .with_link_down(NodeId(5), NodeId(6), 3_000)
+            .with_link_down(NodeId(9), NodeId(10), 7_000),
+    );
+    let mut specs = Vec::new();
+    for k in 0..500u64 {
+        let (s, d) = ((k * 7 % 16) as u16, ((k * 11 + 3) % 16) as u16);
+        if s != d {
+            specs.push(PacketSpec::new(NodeId(s), NodeId(d), 128 * 8, k * 25));
+        }
+    }
+    let n = specs.len() as u64;
+    net.schedule_packets(&specs);
+    let mut cycles = 0u64;
+    while !net.drained() {
+        assert!(net.now() < 200_000, "soak failed to drain");
+        net.step();
+        cycles += 1;
+        let v = net.audit_credits();
+        assert!(
+            v.is_empty(),
+            "credit violation at cycle {}: {:?}",
+            net.now(),
+            v[0]
+        );
+    }
+    assert!(cycles >= 10_000, "soak too short: {cycles} cycles");
+    let stats = net.stats();
+    assert_eq!(stats.links_down, 2);
+    // A 4x4 mesh stays connected after these two cuts: every packet
+    // is delivered or (budget-exhausted) reported dropped.
+    assert_eq!(stats.packets_unreachable, 0);
+    assert_eq!(stats.delivered_packets + stats.packets_dropped, n);
+}
+
+// ----------------------------------------------------------------------
+// ISSUE 7: permanent link failures + adaptive recovery
+// ----------------------------------------------------------------------
+
+#[test]
+fn link_down_truncates_worm_and_redelivers_via_reroute() {
+    // Kill the 1↔2 link while a 16-flit worm 0→3 is strung across
+    // it: the worm is truncated (credits returned), NACK-retried,
+    // and the retry is delivered over the escape route.
+    let mut net = Network::new(cfg_4x4());
+    net.set_fault_model(FaultModel::new(1).with_link_down(NodeId(1), NodeId(2), 6));
+    net.schedule_packets(&[PacketSpec::new(NodeId(0), NodeId(3), 128 * 16, 0)]);
+    let stats = net.run_to_completion(10_000);
+    assert_eq!(stats.delivered_packets, 1);
+    assert_eq!(stats.links_down, 1);
+    assert_eq!(stats.packets_truncated, 1);
+    assert!(stats.packet_retries >= 1);
+    assert_eq!(stats.packets_unreachable, 0);
+    let rec = net.records[0];
+    assert!(rec.retries >= 1, "delivery must be a logged retransmission");
+    assert!(net.audit_credits().is_empty());
+}
+
+#[test]
+fn link_down_before_traffic_reroutes_without_truncation() {
+    // The link dies before injection: no worm to cut — the packet
+    // simply routes around the failure (longer than the 3-hop XY
+    // path the cut removed).
+    let mut net = Network::new(cfg_4x4());
+    net.set_fault_model(FaultModel::new(1).with_link_down(NodeId(1), NodeId(2), 0));
+    net.schedule_packets(&[PacketSpec::new(NodeId(0), NodeId(3), 128 * 16, 10)]);
+    let stats = net.run_to_completion(10_000);
+    assert_eq!(stats.delivered_packets, 1);
+    assert_eq!(stats.packets_truncated, 0);
+    assert_eq!(stats.packet_retries, 0);
+    assert!(
+        stats.flit_hops > 16 * 3,
+        "escape path must be longer than the severed XY path: {} hops",
+        stats.flit_hops
+    );
+}
+
+#[test]
+fn severed_destination_is_typed_unreachable() {
+    // Cut both links of corner node 0 (3x3): packets bound there
+    // are reported unreachable — and the run still drains; packets
+    // between surviving nodes still deliver.
+    let cfg = NetworkConfig::for_topo(Topo::Mesh(Mesh::new(3, 3)));
+    let mut net = Network::new(cfg);
+    net.set_fault_model(
+        FaultModel::new(1)
+            .with_link_down(NodeId(0), NodeId(1), 0)
+            .with_link_down(NodeId(0), NodeId(3), 0),
+    );
+    net.schedule_packets(&[
+        PacketSpec::new(NodeId(8), NodeId(0), 128 * 4, 5),
+        PacketSpec::new(NodeId(8), NodeId(4), 128 * 4, 5),
+    ]);
+    let stats = net.run_to_completion(10_000);
+    assert!(net.drained());
+    assert_eq!(stats.delivered_packets, 1);
+    assert_eq!(stats.packets_unreachable, 1);
+    assert_eq!(net.unreachable_packets().len(), 1);
+    assert_eq!(net.unreachable_packets()[0].dest, NodeId(0));
+    // Scheduling into the severed island is now a typed refusal...
+    let err = net
+        .try_schedule_packets(&[PacketSpec::new(NodeId(8), NodeId(0), 128, 100)])
+        .expect_err("severed dest must be refused");
+    assert!(matches!(err, Error::Unreachable { src: 8, dest: 0 }), "{err:?}");
+    // ...and so is closed-loop injection.
+    assert!(matches!(
+        net.try_inject(PacketSpec::new(NodeId(3), NodeId(0), 128, 0)),
+        Err(Error::Unreachable { .. })
+    ));
+}
+
+#[test]
+fn duplex_codec_ports_compose_with_exact_accounting() {
+    // Ingress AND egress ports starved (1 lane each): both stall
+    // kinds are counted, and symbol accounting stays exact.
+    let symbols = 64 * 16u64;
+    let spec =
+        PacketSpec::new(NodeId(0), NodeId(15), 128 * 64, 0).tagged(huff_tag(symbols, true));
+    let mut net = Network::with_egress(cfg_4x4(), EgressCodecConfig::nominal(1, 1.0));
+    net.set_ingress_config(IngressCodecConfig::nominal(1, 1.0));
+    let stats = run_after(&mut net, &[spec]);
+    assert_eq!(stats.delivered_packets, 1);
+    assert!(stats.encode_stall_cycles > 0);
+    assert!(stats.decode_stall_cycles > 0);
+    assert_eq!(stats.delivered_symbols, symbols);
+    let rec = net.records[0];
+    assert_eq!(rec.encode_stall_cycles, stats.encode_stall_cycles);
+    assert_eq!(rec.decode_stall_cycles, stats.decode_stall_cycles);
+}

@@ -60,7 +60,9 @@ use lexi_models::activations;
 use lexi_models::corpus::Corpus;
 use lexi_models::traffic::{self, Endpoint, Phase, TransferKind, TransferSpec};
 use lexi_models::{DegradeAction, DegradeController, HysteresisPolicy, ModelConfig, ModelScale};
-use lexi_noc::{FaultModel, Network, PacketSpec, RetryConfig, SimStats, StallReport};
+use lexi_noc::{
+    FaultModel, Network, NodeId, PacketSpec, RetryConfig, SimStats, StallReport, VcUsage,
+};
 use std::collections::VecDeque;
 
 /// Arrival process shape.
@@ -643,6 +645,14 @@ pub struct ChaosConfig {
     /// and the NACK-retry policy, all in one seeded model.
     pub fault: FaultModel,
     pub max_cycles: u64,
+    /// Stitched packages of the engine's mesh (ISSUE 10); 1 = the flat
+    /// mesh the PR 9 soak ran on. At > 1 each request additionally
+    /// draws a destination package, so K/V streams cross the
+    /// gateway-row boundary links (the legacy draw order is untouched
+    /// at 1 — seeded PR 9 traces replay bit-identically).
+    pub packages: u8,
+    /// Virtual channels per link; 1 = the PR 9 single-lane router.
+    pub vcs: u8,
 }
 
 /// What the chaos soak resolved, plus the cycle-level evidence.
@@ -651,8 +661,12 @@ pub struct ChaosReport {
     pub serving: ServingStats,
     pub noc: SimStats,
     /// Credit-conservation violations found by the post-drain audit
-    /// (the invariant is 0).
+    /// (the invariant is 0 — at `vcs > 1` the audit checks every VC
+    /// lane independently).
     pub credit_violations: usize,
+    /// Per-VC activity after the drain (ISSUE 10): one entry per VC,
+    /// all `buffered` fields 0 once the run completed.
+    pub vc_usage: Vec<VcUsage>,
 }
 
 /// Drive seeded Poisson K/V-transfer arrivals through the cycle-level
@@ -666,23 +680,37 @@ pub fn run_chaos(
     crs: &CrTable,
     cfg: &ChaosConfig,
 ) -> Result<ChaosReport, StallReport> {
-    let mut net: Network =
-        xval::serving_network(engine, crs, TransferKind::KvCache, Some(cfg.fault.clone()));
+    let packages = cfg.packages.max(1);
+    let mut net: Network = xval::serving_network_on(
+        engine,
+        crs,
+        TransferKind::KvCache,
+        Some(cfg.fault.clone()),
+        packages,
+        cfg.vcs.max(1),
+    );
     let retry = net.retry_config();
     let mode = CompressionMode::Lexi;
     let t = kv_probe_spec();
 
     // Pre-draw the whole arrival trace (gap, src memory node, dst
-    // compute node) so the RNG stream is fixed up front.
+    // compute node — plus a destination package when stitched) so the
+    // RNG stream is fixed up front. The package draw happens only at
+    // `packages > 1`, so flat-mesh traces keep the PR 9 draw order.
     let mut rng = Rng::new(cfg.seed);
     let mem = &engine.system.memory_nodes;
     let compute = &engine.system.compute_nodes;
+    let pkg_stride = engine.system.mesh.len() as u16;
     let mut arrivals: Vec<(u64, PacketSpec)> = Vec::with_capacity(cfg.requests);
     let mut now_f = 0.0f64;
     for _ in 0..cfg.requests {
         let u = rng.uniform();
         let src = mem[rng.below(mem.len() as u64) as usize];
-        let dst = compute[rng.below(compute.len() as u64) as usize];
+        let mut dst = compute[rng.below(compute.len() as u64) as usize];
+        if packages > 1 {
+            let pkg = rng.below(packages as u64) as u16;
+            dst = NodeId(dst.0 + pkg * pkg_stride);
+        }
         now_f += -(1.0 - u).ln() * cfg.mean_gap_cycles;
         let specs = xval::tagged_specs_between(engine, crs, &t, mode, src, dst, 0);
         assert_eq!(specs.len(), 1, "2048-byte K/V transfer is one packet");
@@ -758,6 +786,7 @@ pub fn run_chaos(
     }
     let noc = net.try_run_to_completion(cfg.max_cycles)?;
     let credit_violations = net.audit_credits().len();
+    let vc_usage = net.vc_usage();
 
     stats.delivered = noc.delivered_packets;
     stats.dropped = noc.packets_dropped;
@@ -787,6 +816,7 @@ pub fn run_chaos(
         serving: stats,
         noc,
         credit_violations,
+        vc_usage,
     })
 }
 
@@ -1022,6 +1052,8 @@ mod tests {
                 deadline_ns: 40_000,
                 fault,
                 max_cycles: 5_000_000,
+                packages: 1,
+                vcs: 1,
             };
             let rep = run_chaos(&engine, &crs, &chaos).unwrap_or_else(|stall| {
                 panic!("seed {seed}: watchdog fired: {stall}");
@@ -1040,5 +1072,64 @@ mod tests {
             let again = run_chaos(&engine, &crs, &chaos).expect("replay");
             assert_eq!(again, rep, "seed {seed} replay drifted");
         }
+    }
+
+    #[test]
+    fn chaos_soak_on_stitched_multipackage_with_vcs() {
+        // The PR 9 soak re-run on the ISSUE 10 fabric: 2 stitched
+        // packages of the engine's 6×6 mesh, 2 VCs (payload on the
+        // adaptive lane, VC 0 the up*/down* escape), BER + drops + dups
+        // + one permanent link kill per package. Invariants: the
+        // watchdog (including the per-VC starvation check) stays
+        // silent, the per-VC credit audit is clean, every request
+        // resolves exactly once, cross-package traffic actually flows,
+        // and the whole storm replays bit-identically.
+        let cfg_model = ModelConfig::qwen(ModelScale::Tiny);
+        let engine = Engine::paper_default();
+        let crs = CrTable::measure(&cfg_model, 0xC4A05);
+        // 43↔49: an interior North-South link of package 1 ((1,1)–(1,2)
+        // at stride 36); 7↔8 the same PR 9 kill inside package 0.
+        let fault = FaultModel::new(5)
+            .with_ber(2e-6)
+            .with_drop(0.002)
+            .with_dup(0.002)
+            .with_link_down(NodeId(7), NodeId(8), 400)
+            .with_link_down(NodeId(43), NodeId(49), 900);
+        let chaos = ChaosConfig {
+            seed: 5,
+            requests: 150,
+            mean_gap_cycles: 40.0,
+            deadline_ns: 60_000,
+            fault,
+            max_cycles: 8_000_000,
+            packages: 2,
+            vcs: 2,
+        };
+        let rep = run_chaos(&engine, &crs, &chaos).unwrap_or_else(|stall| {
+            panic!("multipackage watchdog fired: {stall}");
+        });
+        assert_eq!(rep.credit_violations, 0, "per-VC credit audit");
+        let s = &rep.serving;
+        assert!(s.consistent(), "resolution identity: {s:?}");
+        assert_eq!(s.offered, 150);
+        assert!(s.delivered > 0, "delivered nothing");
+        assert_eq!(rep.noc.links_down, 2);
+        assert!(
+            rep.noc.flits_corrupted + rep.noc.flits_dropped + rep.noc.flits_duplicated > 0,
+            "faults never fired"
+        );
+        // Per-VC evidence: the adaptive lane (VC 1) carried the payload
+        // — unpinned packets never inject on the escape lane — and both
+        // lanes drained to zero occupancy (anything left buffered after
+        // completion would be a leak the credit audit might miss).
+        assert_eq!(rep.vc_usage.len(), 2);
+        assert!(rep.vc_usage.iter().all(|u| u.buffered == 0), "{:?}", rep.vc_usage);
+        assert!(
+            rep.vc_usage[1].delivered_flits > 0,
+            "adaptive VC sat idle: {:?}",
+            rep.vc_usage
+        );
+        let again = run_chaos(&engine, &crs, &chaos).expect("replay");
+        assert_eq!(again, rep, "multipackage replay drifted");
     }
 }

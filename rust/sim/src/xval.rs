@@ -32,8 +32,8 @@ use lexi_core::codec::CodecKind;
 use lexi_models::traffic::{TransferKind, TransferSpec};
 use lexi_noc::traffic::{segment_transfer, segment_transfer_tagged, MAX_PACKET_BITS};
 use lexi_noc::{
-    CodecTag, EgressCodecConfig, FaultModel, IngressCodecConfig, Network, NetworkConfig, NodeId,
-    PacketSpec,
+    CodecTag, EgressCodecConfig, FaultModel, IngressCodecConfig, MultiPackage, Network,
+    NetworkConfig, NodeId, PacketSpec, Topo, Topology,
 };
 
 /// Maximum relative disagreement tolerated on uncongested
@@ -119,14 +119,29 @@ impl XvalReport {
     }
 }
 
-/// The cycle-sim twin of an engine's link parameters.
+/// The cycle-sim twin of an engine's link parameters (single-VC flat
+/// mesh — the pre-ISSUE-10 operating point, bit-for-bit).
 pub fn network_config_for(engine: &Engine) -> NetworkConfig {
     NetworkConfig {
-        mesh: engine.system.mesh,
+        topo: Topo::Mesh(engine.system.mesh),
+        vcs: 1,
         flit_bits: engine.flit_bits,
         link_gbps: engine.link_gbps,
         buf_depth: 4,
     }
+}
+
+/// [`network_config_for`] with `vcs` virtual channels (ISSUE 10). The
+/// buffer budget scales with the channel count so every VC lane keeps
+/// ≥ 2 credits: sustaining one flit per cycle needs one credit in
+/// flight plus one returning, so a 1-credit lane would halve the link
+/// rate and put even an uncongested replay out of band — a flow-control
+/// artefact, not a modelling disagreement. At `vcs = 1` this is exactly
+/// [`network_config_for`].
+pub fn vc_network_config_for(engine: &Engine, vcs: u8) -> NetworkConfig {
+    let mut cfg = network_config_for(engine).with_vcs(vcs);
+    cfg.buf_depth = cfg.buf_depth.max(2 * vcs as u32);
+    cfg
 }
 
 /// The egress decoder config matching what [`Engine::transfer_ns`]
@@ -186,8 +201,30 @@ pub fn serving_network(
     kind: TransferKind,
     fault: Option<FaultModel>,
 ) -> Network {
+    serving_network_on(engine, crs, kind, fault, 1, 1)
+}
+
+/// [`serving_network`] generalized over the ISSUE 10 axes: `vcs`
+/// virtual channels and, at `packages > 1`, a stitched multi-package
+/// array of the engine's mesh (endpoints `0..mesh.len()` stay package
+/// 0, so engine-resolved sources remain valid and cross-package
+/// destinations are the caller's projection). At `(1, 1)` this is
+/// exactly [`serving_network`], bit for bit.
+pub fn serving_network_on(
+    engine: &Engine,
+    crs: &CrTable,
+    kind: TransferKind,
+    fault: Option<FaultModel>,
+    packages: u8,
+    vcs: u8,
+) -> Network {
     let (icfg, ecfg) = duplex_configs_for(engine, crs, kind);
-    let mut net = Network::with_egress(network_config_for(engine), ecfg);
+    let mut ncfg = vc_network_config_for(engine, vcs);
+    if packages > 1 {
+        let mesh = engine.system.mesh;
+        ncfg.topo = Topo::MultiPackage(MultiPackage::new(packages, mesh.cols, mesh.rows));
+    }
+    let mut net = Network::with_egress(ncfg, ecfg);
     net.set_ingress_config(icfg);
     if let Some(f) = fault {
         net.set_fault_model(f);
@@ -278,6 +315,97 @@ pub fn replay_transfer_with_faults(
         net.set_fault_model(f);
     }
     net.schedule_packets(&tagged_specs(engine, crs, t, mode, 0));
+    let stats = net.run_to_completion(100_000_000);
+    XvalReport {
+        mode,
+        kind: t.kind,
+        codec: engine.codec_policy.codec_for(t.kind),
+        bytes: t.bytes,
+        analytic_ns,
+        cycle_ns: stats.completion_cycle as f64 * ncfg.cycle_ns(),
+        decode_stall_cycles: stats.decode_stall_cycles,
+        encode_stall_cycles: stats.encode_stall_cycles,
+        retries: stats.packet_retries,
+        dropped: stats.packets_dropped,
+        truncated: stats.packets_truncated,
+        unreachable: stats.packets_unreachable,
+        congested: false,
+    }
+}
+
+/// [`replay_transfer`] on the **virtual-channel router** (ISSUE 10):
+/// the same transfer, the same egress decoder ports, but the cycle side
+/// runs [`vc_network_config_for`] with `vcs` channels — packets spread
+/// across the adaptive VCs (VC 0 stays the escape lane) and the
+/// round-robin output arbiter interleaves the lanes on each physical
+/// link. The analytic estimate is untouched, so the report checks that
+/// VC multiplexing is latency-neutral on an uncongested window: the
+/// link still moves one flit per cycle regardless of how many lanes
+/// share it. At `vcs = 1` this is numerically [`replay_transfer`].
+pub fn replay_transfer_vc(
+    engine: &Engine,
+    crs: &CrTable,
+    t: &TransferSpec,
+    mode: CompressionMode,
+    vcs: u8,
+) -> XvalReport {
+    let analytic_ns = engine.transfer_ns(t, mode, crs);
+    let ncfg = vc_network_config_for(engine, vcs);
+    let mut net = Network::with_egress(ncfg, egress_config_for(engine, crs, t.kind));
+    net.schedule_packets(&tagged_specs(engine, crs, t, mode, 0));
+    let stats = net.run_to_completion(100_000_000);
+    XvalReport {
+        mode,
+        kind: t.kind,
+        codec: engine.codec_policy.codec_for(t.kind),
+        bytes: t.bytes,
+        analytic_ns,
+        cycle_ns: stats.completion_cycle as f64 * ncfg.cycle_ns(),
+        decode_stall_cycles: stats.decode_stall_cycles,
+        encode_stall_cycles: stats.encode_stall_cycles,
+        retries: stats.packet_retries,
+        dropped: stats.packets_dropped,
+        truncated: stats.packets_truncated,
+        unreachable: stats.packets_unreachable,
+        congested: false,
+    }
+}
+
+/// Replay one uncongested transfer across a **2-package stitched
+/// topology** (ISSUE 10): `packages` copies of the engine's mesh joined
+/// by gateway-row boundary links, with the source in package 0 and the
+/// destination projected into the last package so the worm crosses
+/// every stitch. The analytic side is [`Engine::transfer_ns`] (which
+/// prices the flat-mesh pair) plus one router cycle per *extra* hop of
+/// the stitched path over the flat-mesh path — hop pipeline depth is
+/// the only term the engine's mesh-resident model misses, and on a
+/// transfer of hundreds of flits it is a sub-percent correction. Runs
+/// at `vcs ≥ 2` so payload rides the adaptive channels over the
+/// gateway-directed baseline route ([`Topology::route_r`]) while VC 0
+/// keeps the up*/down* escape lane open underneath.
+pub fn replay_transfer_multipackage(
+    engine: &Engine,
+    crs: &CrTable,
+    t: &TransferSpec,
+    mode: CompressionMode,
+    packages: u8,
+    vcs: u8,
+) -> XvalReport {
+    assert!(packages >= 2, "a stitched replay needs at least 2 packages");
+    assert!(vcs >= 2, "payload must ride adaptive VCs above the escape lane");
+    let mesh = engine.system.mesh;
+    let topo = Topo::MultiPackage(MultiPackage::new(packages, mesh.cols, mesh.rows));
+    let mut ncfg = vc_network_config_for(engine, vcs);
+    ncfg.topo = topo;
+    let src = engine.system.resolve(t.src, t.layer);
+    let dst0 = engine.system.resolve(t.dst, t.layer);
+    // Project the destination into the far package (same in-package
+    // coordinates), forcing the worm across every boundary stitch.
+    let dst = NodeId(dst0.0 + (packages as u16 - 1) * mesh.len() as u16);
+    let extra_hops = topo.hops(src, dst).saturating_sub(mesh.hops(src, dst0));
+    let analytic_ns = engine.transfer_ns(t, mode, crs) + extra_hops as f64 * ncfg.cycle_ns();
+    let mut net = Network::with_egress(ncfg, egress_config_for(engine, crs, t.kind));
+    net.schedule_packets(&tagged_specs_between(engine, crs, t, mode, src, dst, 0));
     let stats = net.run_to_completion(100_000_000);
     XvalReport {
         mode,
@@ -790,5 +918,66 @@ mod tests {
         let r = replay_transfer_with_faults(&engine, &crs, &t, CompressionMode::Lexi, Some(fault));
         assert_eq!(r.unreachable, npkts, "every packet typed-unreachable: {}", r.row());
         assert_eq!(r.dropped, 0);
+    }
+
+    #[test]
+    fn vc_replay_stays_in_band_and_vc1_reproduces_the_flat_replay() {
+        // ISSUE 10 acceptance: the VC router cross-validates. At vcs = 1
+        // the config is bit-identical to the flat replay, so every
+        // report field must match exactly; at vcs ∈ {2, 4} the payload
+        // spreads over the adaptive lanes and the physical link still
+        // moves one flit per cycle, so the same uncongested windows stay
+        // inside the 15% band.
+        let cfg = ModelConfig::jamba(ModelScale::Tiny);
+        let crs = CrTable::measure(&cfg, 42);
+        let engine = Engine::paper_default();
+        for t in windows(&cfg) {
+            let flat = replay_transfer(&engine, &crs, &t, CompressionMode::Lexi);
+            let one = replay_transfer_vc(&engine, &crs, &t, CompressionMode::Lexi, 1);
+            assert_eq!(one.cycle_ns, flat.cycle_ns, "vcs=1 diverged: {}", one.row());
+            assert_eq!(one.analytic_ns, flat.analytic_ns);
+            assert_eq!(one.decode_stall_cycles, flat.decode_stall_cycles);
+            for vcs in [2u8, 4] {
+                let r = replay_transfer_vc(&engine, &crs, &t, CompressionMode::Lexi, vcs);
+                assert!(r.in_band(), "vcs={vcs} out of band: {}", r.row());
+                assert_eq!(r.dropped, 0);
+                assert_eq!(r.unreachable, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn multipackage_replay_crosses_the_stitch_in_band_and_deterministically() {
+        // ISSUE 10 acceptance: a 2-package stitched replay — source in
+        // package 0, destination projected into package 1 so the worm
+        // rides a gateway-row boundary link — still agrees with the
+        // analytic estimate (flat-mesh price + per-extra-hop pipeline
+        // correction) within the band, delivers everything, and is
+        // bit-deterministic run to run.
+        let cfg = ModelConfig::jamba(ModelScale::Tiny);
+        let crs = CrTable::measure(&cfg, 42);
+        let engine = Engine::paper_default();
+        let t = *windows(&cfg)
+            .iter()
+            .find(|t| t.kind == TransferKind::KvCache)
+            .expect("sizable KV-cache transfer");
+        let run = || replay_transfer_multipackage(&engine, &crs, &t, CompressionMode::Lexi, 2, 2);
+        let a = run();
+        let b = run();
+        assert_eq!(a.cycle_ns, b.cycle_ns, "stitched replay diverged run to run");
+        assert_eq!(a.decode_stall_cycles, b.decode_stall_cycles);
+        assert!(a.in_band(), "stitched replay out of band: {}", a.row());
+        assert_eq!(a.dropped, 0, "{}", a.row());
+        assert_eq!(a.unreachable, 0, "destination must be stitch-reachable: {}", a.row());
+        assert_eq!(a.retries, 0, "no fault model attached: {}", a.row());
+        // The stitched window cannot beat the flat-mesh one: the path
+        // only gets longer.
+        let flat = replay_transfer(&engine, &crs, &t, CompressionMode::Lexi);
+        assert!(
+            a.cycle_ns >= flat.cycle_ns,
+            "stitched {} ns beat flat {} ns",
+            a.cycle_ns,
+            flat.cycle_ns
+        );
     }
 }

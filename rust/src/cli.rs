@@ -6,6 +6,8 @@
 //! lexi table2
 //! lexi hw
 //! lexi noc      [--pattern uniform|transpose|hotspot] [--mesh 6x6]
+//!               [--topology mesh|cmesh|multipackage] [--packages P] [--conc C]
+//!               [--vcs N]
 //!               [--egress LANES] [--ingress LANES] [--codec huffman|bdi|raw]
 //!               [--ber RATE] [--drop P] [--dup P] [--fault-seed N]
 //!               [--link-down A-B[@CYCLE]] [--watchdog N]
@@ -25,7 +27,10 @@ use lexi_models::corpus::Corpus;
 use lexi_models::traffic::TransferKind;
 use lexi_models::weights::WeightStream;
 use lexi_models::{CodecPolicy, DegradePolicy, DegradeTracker, ModelConfig, ModelScale};
-use lexi_noc::{FaultModel, Mesh, Network, NetworkConfig, NodeId, RetryConfig};
+use lexi_noc::{
+    CMesh, FaultModel, Mesh, MultiPackage, Network, NetworkConfig, NodeId, RetryConfig, Topo,
+    Topology,
+};
 use lexi_sim::compression::{CompressionMode, CrTable};
 use lexi_sim::engine::Engine;
 use lexi_sim::serving::{ServingConfig, ServingSim, ServingStats, TraceKind};
@@ -112,7 +117,13 @@ fn print_help() {
          \x20 table2   exponent CR comparison (RLE / BDI / LEXI) on weights\n\
          \x20 hw       Table 4: area/power breakdown (GF 22 nm + 16 nm scaling)\n\
          \x20 noc      --pattern uniform|transpose|hotspot — cycle-accurate NoI run\n\
-         \x20          (--egress LANES --codec huffman|bdi|raw: egress codec ports;\n\
+         \x20          (--topology mesh|cmesh|multipackage --packages P --conc C:\n\
+         \x20          router graph — flat mesh, concentrated mesh with C endpoints\n\
+         \x20          per router, or P stitched packages joined on gateway rows;\n\
+         \x20          --vcs N: virtual-channel router — VC 0 is the deadlock-free\n\
+         \x20          escape lane, VCs >= 1 route adaptively, with per-VC report\n\
+         \x20          lines and credit audit;\n\
+         \x20          --egress LANES --codec huffman|bdi|raw: egress codec ports;\n\
          \x20          --ingress LANES: ingress encoder pacing with a bounded NI\n\
          \x20          queue — saturation is counted backpressure, never growth;\n\
          \x20          --ber RATE --drop P --dup P --fault-seed N: seeded link\n\
@@ -179,6 +190,63 @@ mod tests {
     fn unknown_command_errors() {
         assert!(run(vec!["frobnicate".into()]).is_err());
         assert!(run(vec!["help".into()]).is_ok());
+    }
+
+    fn run_noc(args: &[&str]) -> Result<()> {
+        let mut v = vec!["noc".to_string()];
+        v.extend(args.iter().map(|s| s.to_string()));
+        run(v)
+    }
+
+    #[test]
+    fn noc_topology_and_vc_flags_are_validated() {
+        // Every bad combination is a typed CLI error before the
+        // simulator is even built (ISSUE 10 satellite).
+        assert!(run_noc(&["--topology", "ring"]).is_err());
+        assert!(run_noc(&["--vcs", "0"]).is_err());
+        assert!(run_noc(&["--vcs", "99"]).is_err());
+        assert!(run_noc(&["--topology", "multipackage", "--packages", "1"]).is_err());
+        assert!(run_noc(&["--topology", "cmesh", "--conc", "0"]).is_err());
+        assert!(run_noc(&["--topology", "cmesh", "--pattern", "transpose"]).is_err());
+        // Non-adjacent pair on the flat 6x6 mesh (0 and 7 are diagonal).
+        assert!(run_noc(&["--link-down", "0-7"]).is_err());
+        // 36 exists only once a second package is stitched on.
+        assert!(run_noc(&["--link-down", "5-36"]).is_err());
+        // A non-gateway boundary pair is not a link even when stitched:
+        // row 1 of a 6-row package carries no inter-package stitch.
+        assert!(run_noc(&[
+            "--topology",
+            "multipackage",
+            "--link-down",
+            "11-42"
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn noc_runs_stitched_multipackage_with_vcs_and_gateway_kill() {
+        // End-to-end: 2 stitched 6x6 packages, 2 VCs, one gateway
+        // stitch (5↔36, row 0) killed mid-run — the other gateway row
+        // keeps the array connected, so the run completes and prints
+        // the per-VC report lines.
+        assert!(run_noc(&[
+            "--topology",
+            "multipackage",
+            "--packages",
+            "2",
+            "--vcs",
+            "2",
+            "--count",
+            "80",
+            "--link-down",
+            "5-36@200"
+        ])
+        .is_ok());
+    }
+
+    #[test]
+    fn noc_runs_concentrated_mesh() {
+        assert!(run_noc(&["--topology", "cmesh", "--conc", "2", "--count", "40"]).is_ok());
     }
 }
 
@@ -365,10 +433,42 @@ fn cmd_noc(flags: &Flags) -> Result<()> {
         .and_then(|(a, b)| Some((a.parse().ok()?, b.parse().ok()?)))
         .ok_or_else(|| anyhow!("bad --mesh '{mesh_s}' (want CxR)"))?;
     let mesh = Mesh::new(cols, rows);
-    let cfg = NetworkConfig {
-        mesh,
+    // --topology picks the router graph the CxR grid becomes (ISSUE 10):
+    // the flat mesh, a concentrated mesh with --conc endpoints per
+    // router, or --packages stitched copies joined on gateway rows.
+    let topo_s = flags.get("topology", "mesh");
+    let packages = flags.get_usize("packages", 2)?;
+    let conc = flags.get_usize("conc", 2)?;
+    let topo = match topo_s {
+        "mesh" => Topo::Mesh(mesh),
+        "cmesh" => {
+            if !(1..=255).contains(&conc) {
+                bail!("--conc {conc}: want 1..=255");
+            }
+            Topo::CMesh(CMesh::new(cols, rows, conc as u8))
+        }
+        "multipackage" => {
+            if !(2..=255).contains(&packages) {
+                bail!("--packages {packages}: a stitched array wants 2..=255");
+            }
+            Topo::MultiPackage(MultiPackage::new(packages as u8, cols, rows))
+        }
+        other => bail!("unknown --topology '{other}' (want mesh|cmesh|multipackage)"),
+    };
+    // --vcs N runs the virtual-channel router (ISSUE 10): VC 0 is the
+    // deadlock-free escape lane, VCs ≥ 1 route adaptively. The buffer
+    // budget grows with the lane count so every VC keeps ≥ 2 credits
+    // (line rate needs one credit in flight plus one returning).
+    let vcs = flags.get_usize("vcs", 1)?;
+    if !(1..=lexi_noc::MAX_VCS as usize).contains(&vcs) {
+        bail!("--vcs {vcs}: want 1..={}", lexi_noc::MAX_VCS);
+    }
+    let mut cfg = NetworkConfig {
+        topo,
+        vcs: vcs as u8,
         ..NetworkConfig::paper_default()
     };
+    cfg.buf_depth = cfg.buf_depth.max(2 * vcs as u32);
     let pattern = flags.get("pattern", "uniform");
     let size_bits = flags.get_usize("size-bits", 128 * 64)? as u64;
     let count = flags.get_usize("count", 500)?;
@@ -401,8 +501,10 @@ fn cmd_noc(flags: &Flags) -> Result<()> {
     // --watchdog N overrides the stall-watchdog window (ISSUE 7).
     let watchdog = flags.get_usize("watchdog", 0)?;
     // --link-down A-B[@CYCLE] schedules permanent link failures
-    // (ISSUE 7); comma-separated for several. Adjacency is validated
-    // here so a typo is a CLI error, not a simulator panic.
+    // (ISSUE 7); comma-separated for several. Endpoint range and
+    // adjacency are validated against the chosen *topology* (gateway
+    // stitches included) so a typo is a CLI error, not a simulator
+    // panic.
     let link_down_s = flags.get("link-down", "");
     let mut link_downs: Vec<(NodeId, NodeId, u64)> = Vec::new();
     if !link_down_s.is_empty() {
@@ -419,12 +521,21 @@ fn cmd_noc(flags: &Flags) -> Result<()> {
                 .split_once('-')
                 .and_then(|(a, b)| Some((a.parse::<u16>().ok()?, b.parse::<u16>().ok()?)))
                 .ok_or_else(|| anyhow!("bad --link-down '{part}' (want A-B or A-B@CYCLE)"))?;
+            if a as usize >= topo.len() || b as usize >= topo.len() {
+                bail!(
+                    "--link-down {a}-{b}: node out of range for the {} endpoints of \
+                     this {topo_s} topology",
+                    topo.len()
+                );
+            }
             let (na, nb) = (NodeId(a), NodeId(b));
-            let adjacent = lexi_noc::topology::Port::ALL
-                .iter()
-                .any(|&p| mesh.neighbour(na, p) == Some(nb));
+            let (ra, rb) = (topo.router_of(na), topo.router_of(nb));
+            let adjacent = ra != rb
+                && lexi_noc::topology::Port::ALL
+                    .iter()
+                    .any(|&p| topo.neighbour_r(ra, p) == Some(rb));
             if !adjacent {
-                bail!("--link-down {a}-{b}: not a link of the {mesh_s} mesh");
+                bail!("--link-down {a}-{b}: not a link of the {mesh_s} {topo_s} topology");
             }
             link_downs.push((na, nb, at));
         }
@@ -433,10 +544,15 @@ fn cmd_noc(flags: &Flags) -> Result<()> {
     let mut specs = match pattern {
         "uniform" => {
             let mut rng = lexi_core::prng::Rng::new(1);
-            lexi_noc::traffic::uniform_random(mesh, count, size_bits, 0.25, &mut rng)
+            lexi_noc::traffic::uniform_random(topo, count, size_bits, 0.25, &mut rng)
         }
-        "transpose" => lexi_noc::traffic::transpose(mesh, size_bits),
-        "hotspot" => lexi_noc::traffic::hotspot(mesh, NodeId(0), size_bits),
+        "transpose" => {
+            if topo.as_mesh().is_none() {
+                bail!("--pattern transpose is defined on --topology mesh only");
+            }
+            lexi_noc::traffic::transpose(mesh, size_bits)
+        }
+        "hotspot" => lexi_noc::traffic::hotspot(topo, NodeId(0), size_bits),
         other => bail!("unknown pattern '{other}'"),
     };
     if egress_lanes > 0 || ingress_lanes > 0 {
@@ -485,8 +601,13 @@ fn cmd_noc(flags: &Flags) -> Result<()> {
             bail!("simulation stalled after {} idle cycles", report.stalled_for);
         }
     };
+    let topo_desc = match topo {
+        Topo::Mesh(_) => format!("mesh={mesh_s}"),
+        Topo::CMesh(c) => format!("cmesh={mesh_s}x{}", c.conc),
+        Topo::MultiPackage(mp) => format!("multipackage={}x{mesh_s}", mp.packages),
+    };
     println!(
-        "pattern={pattern} mesh={mesh_s}: {n} packets, {} flits, {} cycles ({})",
+        "pattern={pattern} {topo_desc} vcs={vcs}: {n} packets, {} flits, {} cycles ({})",
         stats.delivered_flits,
         stats.cycles,
         fmt_ns(stats.cycles as f64 * cfg.cycle_ns())
@@ -498,6 +619,26 @@ fn cmd_noc(flags: &Flags) -> Result<()> {
         stats.max_latency,
         stats.link_utilization(net.link_count()) * 100.0
     );
+    if vcs > 1 {
+        // Per-VC report (ISSUE 10): how the escape lane (VC 0) and the
+        // adaptive lanes split the work, plus the post-drain credit
+        // audit restricted to each lane.
+        let audit = net.audit_credits();
+        for u in net.vc_usage() {
+            let lane_violations = audit.iter().filter(|v| v.vc == u.vc).count();
+            println!(
+                "vc {} ({}): {} flits ejected, {} hops, {} buffered, \
+                 last progress cycle {}, credit violations {}",
+                u.vc,
+                if u.vc == 0 { "escape" } else { "adaptive" },
+                u.delivered_flits,
+                u.flit_hops,
+                u.buffered,
+                u.last_progress,
+                lane_violations
+            );
+        }
+    }
     if egress_lanes > 0 {
         println!(
             "egress ({egress_lanes}-lane {}): {} symbols decoded, {} stall cycles, \

@@ -30,6 +30,13 @@ in this container). Mirrors the Rust bit-for-bit:
     hysteresis DegradeController of models/policy.rs, mirrored
     transition-for-transition against the scripted trace the Rust
     test pins verbatim)
+  * Virtual-channel switch allocation (PR 10 — noc/src/vc.rs
+    credit_share partitioning, the output_control.rs flat round-robin
+    arbiter + wormhole lock/pointer update mirrored state-for-state
+    against the scripted 2-VC contention trace the Rust test
+    `scripted_two_vc_contention_trace` pins verbatim, the vcs=1
+    collapse to the legacy per-port pointer, and the per-VC
+    refinement of the credit-conservation audit)
 
 Reference implementations are independent (string-of-bits codec), so a
 mirror bug and a reference bug can't cancel.
@@ -2059,6 +2066,245 @@ def main():
         "recover, strike-degrade@14) exact; no-flap spacing holds on oscillating "
         "and 60 random traces; mid-band is inert"
     )
+
+    # ----------------------------------------------------------------------
+    # 16) Virtual-channel switch allocation mirrors (PR 10): noc/src/vc.rs
+    #     credit_share + the output_control.rs flat round-robin arbiter
+    #     and wormhole lock/pointer update, mirrored state-for-state.
+    NOC_PORTS = 5  # Local, North, South, East, West (topology.rs order)
+
+    # 16a) credit_share: buf_depth split across VC lanes, remainder to
+    #      the lower VCs (the escape channel never gets the short end),
+    #      vcs = 1 keeps the whole depth — exhaustive over the small
+    #      grid vc.rs tests, including the paper points.
+    def vc_credit_share(buf_depth, vcs, v):
+        return buf_depth // vcs + (1 if v < buf_depth % vcs else 0)
+
+    for depth in range(1, 17):
+        for vcs in range(1, 9):
+            shares = [vc_credit_share(depth, vcs, v) for v in range(vcs)]
+            assert sum(shares) == depth, (depth, vcs)
+            assert shares == sorted(shares, reverse=True)
+            assert shares[0] - shares[-1] <= 1
+    assert vc_credit_share(4, 1, 0) == 4
+    assert [vc_credit_share(4, 2, v) for v in range(2)] == [2, 2]
+    assert [vc_credit_share(4, 4, v) for v in range(4)] == [1, 1, 1, 1]
+    assert [vc_credit_share(5, 2, v) for v in range(2)] == [3, 2]
+    print("[16a] credit_share: exact partition, remainder to low VCs, "
+          "vcs=1 keeps full depth: 16x8 grid OK")
+
+    # 16b) The flat round-robin switch allocator + lock update. Flits
+    #      are dicts {pid, kind, ready_at}; kind H/B/T/S with
+    #      is_head = H|S, is_tail = T|S. State mirrors VcRouter:
+    #      fifos[inp][vc], lanes[out][vc] = [locked_to, locked_pid,
+    #      credits], rr[out] over flat = inp*vcs + invc.
+    def vc_router(buf_depth, vcs):
+        return {
+            "vcs": vcs,
+            "fifos": [[[] for _ in range(vcs)] for _ in range(NOC_PORTS)],
+            "lanes": [
+                [[None, None, vc_credit_share(buf_depth, vcs, v)]
+                 for v in range(vcs)]
+                for _ in range(NOC_PORTS)
+            ],
+            "rr": [0] * NOC_PORTS,
+            "forwarded": 0,
+        }
+
+    def vc_arbitrate(r, now, desired):
+        vcs = r["vcs"]
+        flat_len = NOC_PORTS * vcs
+        requests = [None] * flat_len
+        for inp in range(NOC_PORTS):
+            for invc in range(vcs):
+                fifo = r["fifos"][inp][invc]
+                if not fifo or fifo[0]["ready_at"] > now:
+                    continue
+                d = desired(inp, invc, fifo[0])
+                if d is not None:
+                    want, ovc = d
+                    requests[inp * vcs + invc] = (
+                        want, ovc, fifo[0]["kind"] in "HS", fifo[0]["pid"]
+                    )
+        grants = [None] * NOC_PORTS
+        input_taken = [False] * NOC_PORTS
+        for out in range(NOC_PORTS):  # Port::ALL order == index order
+            start = r["rr"][out]
+            for step in range(flat_len):
+                flat = (start + step) % flat_len
+                inp, invc = flat // vcs, flat % vcs
+                if input_taken[inp] or requests[flat] is None:
+                    continue
+                want, ovc, is_head, pid = requests[flat]
+                if want != out:
+                    continue
+                lane = r["lanes"][out][ovc]
+                eligible = (
+                    lane[0] == (inp, invc) and lane[1] == pid
+                ) if lane[0] is not None else is_head
+                if not eligible:
+                    continue
+                grants[out] = (inp, invc, ovc)
+                input_taken[inp] = True
+                break
+        return grants
+
+    def vc_update_lock(r, out, out_vc, inp, invc, flit):
+        vcs = r["vcs"]
+        lane = r["lanes"][out][out_vc]
+        if flit["kind"] in "TS":
+            lane[0] = lane[1] = None
+            r["rr"][out] = (inp * vcs + invc + 1) % (NOC_PORTS * vcs)
+        else:
+            lane[0] = (inp, invc)
+            lane[1] = flit["pid"]
+
+    # The scripted 2-VC contention trace, verbatim from the Rust test
+    # `scripted_two_vc_contention_trace` (output_control.rs): one
+    # router, vcs = 2, buf_depth = 4 (2 credits per East lane). North
+    # VC0 carries a Single (packet 1); North VC1 and West VC1 each a
+    # 3-flit worm (packets 2, 3). Scripted credit returns on East VC1:
+    # +1 @ cycle 4, +1 @ 6, +2 @ 8. Everything routes East on its own
+    # VC index; traversal declines a zero-credit grant untouched.
+    N, E, W = 1, 3, 4
+    r = vc_router(4, 2)
+    r["fifos"][N][0].append({"pid": 1, "kind": "S", "ready_at": 0})
+    for kind in "HBT":
+        r["fifos"][N][1].append({"pid": 2, "kind": kind, "ready_at": 0})
+        r["fifos"][W][1].append({"pid": 3, "kind": kind, "ready_at": 0})
+    script16 = [
+        # (cycle, credit return, granted (inp, invc), traversed,
+        #  East vc0/vc1 credits after, East rr after)
+        (0, 0, (N, 0), True, 1, 2, 3),
+        (1, 0, (N, 1), True, 1, 1, 3),
+        (2, 0, (N, 1), True, 1, 0, 3),
+        (3, 0, (N, 1), False, 1, 0, 3),
+        (4, 1, (N, 1), True, 1, 0, 4),
+        (5, 0, (W, 1), False, 1, 0, 4),
+        (6, 1, (W, 1), True, 1, 0, 4),
+        (7, 0, (W, 1), False, 1, 0, 4),
+        (8, 2, (W, 1), True, 1, 1, 4),
+        (9, 0, (W, 1), True, 1, 0, 0),
+    ]
+    forwarded = 0
+    for cyc, ret, want_grant, traversed, c0, c1, rr_after in script16:
+        r["lanes"][E][1][2] += ret
+        g = vc_arbitrate(r, cyc, lambda inp, invc, f: (E, invc))[E]
+        assert g is not None and g[:2] == want_grant, (cyc, g)
+        assert g[2] == g[1], "scripted routing keeps the VC index"
+        if r["lanes"][E][g[2]][2] == 0:
+            assert not traversed, f"cycle {cyc}: should have been declined"
+        else:
+            assert traversed, f"cycle {cyc}: should have traversed"
+            f = r["fifos"][g[0]][g[1]].pop(0)
+            r["lanes"][E][g[2]][2] -= 1
+            forwarded += 1
+            vc_update_lock(r, E, g[2], g[0], g[1], f)
+        assert r["lanes"][E][0][2] == c0, f"cycle {cyc}: vc0 credits"
+        assert r["lanes"][E][1][2] == c1, f"cycle {cyc}: vc1 credits"
+        assert r["rr"][E] == rr_after, f"cycle {cyc}: rr"
+    assert forwarded == 7, "1 single + two 3-flit worms"
+    assert all(not f for port in r["fifos"] for f in port)
+    assert r["lanes"][E][1][0] is None
+    print("[16b] flat rr arbiter mirror: scripted 2-VC contention trace "
+          "(grants, declines, credits, rr) matches the Rust pin, 7 flits")
+
+    # 16c) vcs = 1 collapse: the tail pointer update reduces to the
+    #      legacy (inp + 1) % NUM_PORTS, and on random request/lock
+    #      states the flat arbiter picks the same winners as an
+    #      independently written legacy per-port round-robin.
+    r1 = vc_router(4, 1)
+    tail = {"pid": 9, "kind": "T", "ready_at": 0}
+    for inp in range(NOC_PORTS):
+        vc_update_lock(r1, E, 0, inp, 0, tail)
+        assert r1["rr"][E] == (inp + 1) % NOC_PORTS
+    body = {"pid": 9, "kind": "B", "ready_at": 0}
+    vc_update_lock(r1, E, 0, 2, 0, body)
+    assert r1["rr"][E] == 0 and r1["lanes"][E][0][0] == (2, 0)
+
+    def legacy_arbitrate(requests, locks, rr):
+        """Independent vcs=1 reference: requests[inp] = (want, is_head,
+        pid) | None; locks[out] = (holder_inp, pid) | None."""
+        grants = [None] * NOC_PORTS
+        taken = [False] * NOC_PORTS
+        for out in range(NOC_PORTS):
+            for step in range(NOC_PORTS):
+                inp = (rr[out] + step) % NOC_PORTS
+                if taken[inp] or requests[inp] is None:
+                    continue
+                want, is_head, pid = requests[inp]
+                if want != out:
+                    continue
+                if locks[out] is not None:
+                    if locks[out] != (inp, pid):
+                        continue
+                elif not is_head:
+                    continue
+                grants[out] = inp
+                taken[inp] = True
+                break
+        return grants
+
+    for trial in range(200):
+        r1 = vc_router(4, 1)
+        requests = [None] * NOC_PORTS
+        locks = [None] * NOC_PORTS
+        for inp in range(NOC_PORTS):
+            if rng.random() < 0.7:
+                kind = rng.choice("HBTS")
+                pid = rng.randrange(1, 5)
+                r1["fifos"][inp][0].append(
+                    {"pid": pid, "kind": kind, "ready_at": 0}
+                )
+                requests[inp] = (rng.randrange(NOC_PORTS), kind in "HS", pid)
+        for out in range(NOC_PORTS):
+            r1["rr"][out] = rng.randrange(NOC_PORTS)
+            if rng.random() < 0.4:
+                holder = (rng.randrange(NOC_PORTS), rng.randrange(1, 5))
+                r1["lanes"][out][0][0] = (holder[0], 0)
+                r1["lanes"][out][0][1] = holder[1]
+                locks[out] = holder
+        want = {i: requests[i][0] for i in range(NOC_PORTS) if requests[i]}
+        got = vc_arbitrate(
+            r1, 0, lambda inp, invc, f: (want[inp], 0) if inp in want else None
+        )
+        ref = legacy_arbitrate(requests, locks, [r1["rr"][o] for o in range(NOC_PORTS)])
+        assert [g[0] if g else None for g in got] == ref, (trial, got, ref)
+
+    # 16d) Per-VC refinement of the §13c credit-conservation audit: on a
+    #      directed link each lane v independently holds
+    #      credits_v + buffered_v == credit_share(depth, vcs, v) under
+    #      traversal / drain / mid-worm truncation, so the per-link sum
+    #      is depth and a unit leak on any single lane is flagged.
+    for trial in range(200):
+        depth = rng.randrange(1, 12)
+        vcs = rng.randrange(1, 9)
+        credits = [vc_credit_share(depth, vcs, v) for v in range(vcs)]
+        fifo = [0] * vcs
+        for op in range(200):
+            v = rng.randrange(vcs)
+            act = rng.random()
+            if act < 0.4 and credits[v] > 0:
+                credits[v] -= 1
+                fifo[v] += 1  # flit crosses the link on lane v
+            elif act < 0.7 and fifo[v] > 0:
+                fifo[v] -= 1
+                credits[v] += 1  # drain + credit return
+            elif fifo[v] > 0:
+                cut = rng.randrange(1, fifo[v] + 1)  # truncation returns
+                fifo[v] -= cut
+                credits[v] += cut
+            for u in range(vcs):
+                assert credits[u] + fifo[u] == vc_credit_share(depth, vcs, u)
+            assert sum(credits) + sum(fifo) == depth
+        leak = rng.randrange(vcs)
+        assert (credits[leak] - 1) + fifo[leak] != vc_credit_share(depth, vcs, leak)
+        assert credits[leak] + (fifo[leak] + 1) != vc_credit_share(depth, vcs, leak)
+    print("[16c] vcs=1 collapse: tail pointer == legacy (inp+1)%5, flat "
+          "arbiter == independent legacy arbiter on 200 random states")
+    print("[16d] per-VC credit audit: lane credits + buffered == "
+          "credit_share under traversal/drain/truncation, unit leaks "
+          "flagged: 200 links OK")
 
     print("\nALL LOGIC CHECKS PASSED")
 

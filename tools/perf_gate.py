@@ -50,6 +50,11 @@ SCALAR_BOUNDS = {
     # pure arithmetic per arrival, no allocation on the hot path.
     "serving_shed_off_overhead": (1.05, True),
     "fault_off_overhead": (1.05, False),
+    # ISSUE 10 (gated): the 2-VC router's request cache + flat
+    # round-robin arbitration must stay within 1.10x of vcs=1 stepping
+    # on the same uniform load; vcs=4 is report-only below.
+    "vcs2_overhead": (1.10, True),
+    "vcs4_overhead": (1.30, False),
     "ingress_slowdown_uniform": (1.30, False),
     "egress_slowdown_uniform": (1.30, False),
     "egress_slowdown_hotspot": (1.30, False),
